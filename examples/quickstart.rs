@@ -1,0 +1,78 @@
+//! Quickstart: generate a hardware-friendly clash-free sparse pattern for
+//! the paper's Table-I network, inspect its storage/compute savings, and
+//! run inference through the AOT PJRT artifact.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use pds::hw::storage::StorageComparison;
+use pds::runtime::{Engine, Value};
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The paper's Table-I configuration: N_net = (800, 100, 10) at
+    //    d_out = (20, 10), i.e. rho_net = 21%.
+    let netc = NetConfig::new(vec![800, 100, 10]);
+    let dout = DoutConfig(vec![20, 10]);
+    netc.validate_dout(&dout).map_err(|e| anyhow::anyhow!(e))?;
+
+    // 2. A clash-free pre-defined sparse pattern (streams on the paper's
+    //    architecture with zero memory contention).
+    let mut rng = Rng::new(7);
+    let pattern = generate(Method::ClashFree, &netc, &dout, Some(&[160, 10]), &mut rng);
+    println!(
+        "pattern: rho_net = {:.1}%, edges per junction = {:?}",
+        pattern.rho_net() * 100.0,
+        pattern.junctions.iter().map(|j| j.n_edges()).collect::<Vec<_>>()
+    );
+    for (i, j) in pattern.junctions.iter().enumerate() {
+        j.audit().map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "  junction {}: structured={}, disconnected neurons = {}",
+            i + 1,
+            j.is_structured(),
+            j.disconnected_left() + j.disconnected_right()
+        );
+    }
+
+    // 3. What the hardware saves (Table I).
+    let cmp = StorageComparison::new(&netc, &dout);
+    println!(
+        "storage: FC {} words -> sparse {} words ({:.1}X); compute {:.1}X fewer MACs",
+        cmp.fc.total(),
+        cmp.sparse.total(),
+        cmp.memory_reduction(),
+        cmp.compute_reduction()
+    );
+
+    // 4. Inference through the compiled PJRT artifact (mnist_fc2 config
+    //    has exactly this shape). Masked-dense path with the pattern's mask.
+    let engine = Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+    let prog = engine.load("mnist_fc2", "forward")?;
+    let batch = engine.manifest.configs["mnist_fc2"].batch;
+    let mut inputs: Vec<Value> = Vec::new();
+    for (i, p) in pattern.junctions.iter().enumerate() {
+        let (nl, nr) = (netc.layers[i], netc.layers[i + 1]);
+        let std = (2.0 / nl as f32).sqrt();
+        let mask = p.mask();
+        let w: Vec<f32> = mask.iter().map(|&m| rng.normal() * std * m).collect();
+        inputs.push(Value::F32(w, vec![nr, nl]));
+        inputs.push(Value::F32(vec![0.1; nr], vec![nr]));
+    }
+    for p in &pattern.junctions {
+        inputs.push(Value::F32(p.mask(), vec![p.shape.n_right, p.shape.n_left]));
+    }
+    let x: Vec<f32> = (0..batch * 800).map(|_| rng.normal()).collect();
+    inputs.push(Value::F32(x, vec![batch, 800]));
+    let t0 = std::time::Instant::now();
+    let out = prog.run(&inputs)?;
+    println!(
+        "PJRT forward ({}): batch {} in {:?}, logits[0][..4] = {:?}",
+        engine.platform(),
+        batch,
+        t0.elapsed(),
+        &out[0].as_f32()?[..4]
+    );
+    Ok(())
+}

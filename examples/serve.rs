@@ -1,0 +1,78 @@
+//! Inference-service example: dynamic batching over the fixed-batch
+//! compiled forward artifact, with latency/throughput reporting — the
+//! software analogue of feeding the junction pipeline one input per
+//! junction cycle.
+//!
+//!     make artifacts && cargo run --release --example serve
+
+use std::time::{Duration, Instant};
+
+use pds::coordinator::{InferenceServer, ServerConfig};
+use pds::runtime::Manifest;
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let config = "mnist_fc2";
+    let probe = Manifest::probe(dir, config)?;
+    let netc = NetConfig::new(probe.layers.clone());
+    let mut rng = Rng::new(5);
+    let pattern = generate(
+        Method::ClashFree,
+        &netc,
+        &DoutConfig(vec![20, 10]),
+        None,
+        &mut rng,
+    );
+
+    for wait_ms in [1u64, 5, 20] {
+        let server = InferenceServer::start(
+            dir,
+            config,
+            &pattern,
+            None,
+            ServerConfig {
+                max_wait: Duration::from_millis(wait_ms),
+            },
+        )?;
+        let n_clients = 8usize;
+        let per_client = 100usize;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let client = server.client();
+            let features = probe.layers[0];
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(900 + c as u64);
+                let mut lats = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..features).map(|_| rng.normal()).collect();
+                    lats.push(client.classify(x).unwrap().latency);
+                }
+                lats
+            }));
+        }
+        let mut lats: Vec<Duration> = Vec::new();
+        for h in handles {
+            lats.extend(h.join().unwrap());
+        }
+        let wall = t0.elapsed();
+        lats.sort();
+        let batches = server.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "max_wait {wait_ms:>2}ms: {:>6.0} req/s | p50 {:>9.2?} p95 {:>9.2?} p99 {:>9.2?} | {} batches (occupancy {:.1}/{})",
+            lats.len() as f64 / wall.as_secs_f64(),
+            lats[lats.len() / 2],
+            lats[lats.len() * 95 / 100],
+            lats[lats.len() * 99 / 100],
+            batches,
+            lats.len() as f64 / batches.max(1) as f64,
+            probe.batch
+        );
+        server.shutdown()?;
+    }
+    println!("\n(larger max_wait -> fuller batches -> higher throughput, higher latency)");
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT compile path: lower the L2 graphs once to HLO *text* artifacts.
+
+HLO text (not HloModuleProto.serialize) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Emits, per named config:
+  artifacts/<name>_train.hlo.txt     flat_train_step
+  artifacts/<name>_forward.hlo.txt   flat_forward
+plus artifacts/<name>_gather<d..>_forward.hlo.txt for configs with a
+canonical structured d_out (compacted-weight inference path), and a
+single artifacts/manifest.json describing every input/output literal so
+the Rust runtime can marshal positionally without guessing.
+
+Python runs exactly once (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# name -> (layer sizes, batch, canonical gather d_out or None)
+#
+# The layer sizes mirror the paper's N_net configurations (Sec. IV-A);
+# batch sizes are scaled to the synthetic surrogate workloads. `tiny` is a
+# fast path for tests.
+CONFIGS = {
+    "tiny": {"layers": (32, 16, 8), "batch": 16, "gather_dout": (4, 4)},
+    "mnist_fc2": {"layers": (800, 100, 10), "batch": 256, "gather_dout": (20, 10)},
+    "mnist_l4": {"layers": (800, 100, 100, 100, 10), "batch": 256, "gather_dout": None},
+    "reuters": {"layers": (2000, 50, 50), "batch": 256, "gather_dout": (10, 10)},
+    "timit": {"layers": (39, 390, 39), "batch": 256, "gather_dout": (90, 9)},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def train_signature(layers, batch):
+    """Input/output literal order for flat_train_step (must match model.py)."""
+    n_junctions = len(layers) - 1
+    inputs = []
+    for group in ("w", "m_opt", "v_opt"):
+        for i in range(1, len(layers)):
+            inputs.append(_spec(f"{group}{i}", (layers[i], layers[i - 1])))
+            inputs.append(_spec(f"{group}{i}_bias", (layers[i],)))
+    for i in range(1, len(layers)):
+        inputs.append(_spec(f"mask{i}", (layers[i], layers[i - 1])))
+    inputs.append(_spec("x", (batch, layers[0])))
+    inputs.append(_spec("y", (batch,), "i32"))
+    inputs.append(_spec("t", ()))
+    inputs.append(_spec("lr", ()))
+    inputs.append(_spec("l2", ()))
+    outputs = inputs[: 6 * n_junctions] + [_spec("t", ()), _spec("loss", ()), _spec("correct", ())]
+    return inputs, outputs
+
+
+def forward_signature(layers, batch):
+    inputs = []
+    for i in range(1, len(layers)):
+        inputs.append(_spec(f"w{i}", (layers[i], layers[i - 1])))
+        inputs.append(_spec(f"b{i}", (layers[i],)))
+    for i in range(1, len(layers)):
+        inputs.append(_spec(f"mask{i}", (layers[i], layers[i - 1])))
+    inputs.append(_spec("x", (batch, layers[0])))
+    return inputs, [_spec("logits", (batch, layers[-1]))]
+
+
+def gather_signature(layers, batch, dout):
+    """d_in_i = N_{i-1} * d_out_i / N_i (Sec. II-A)."""
+    d_in = [layers[i - 1] * dout[i - 1] // layers[i] for i in range(1, len(layers))]
+    inputs = []
+    for i in range(1, len(layers)):
+        inputs.append(_spec(f"wc{i}", (layers[i], d_in[i - 1])))
+    for i in range(1, len(layers)):
+        inputs.append(_spec(f"idx{i}", (layers[i], d_in[i - 1]), "i32"))
+    for i in range(1, len(layers)):
+        inputs.append(_spec(f"b{i}", (layers[i],)))
+    inputs.append(_spec("x", (batch, layers[0])))
+    return inputs, [_spec("logits", (batch, layers[-1]))]
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _shape_structs(specs):
+    return [jax.ShapeDtypeStruct(tuple(s["shape"]), _DTYPES[s["dtype"]]) for s in specs]
+
+
+def lower_entry(fn, in_specs):
+    return jax.jit(fn).lower(*_shape_structs(in_specs))
+
+
+def build_config(name, cfg, outdir):
+    layers, batch = cfg["layers"], cfg["batch"]
+    n_junctions = len(layers) - 1
+    entry = {"layers": list(layers), "batch": batch, "programs": {}}
+
+    jobs = [
+        ("train", functools.partial(model.flat_train_step, n_junctions), train_signature(layers, batch)),
+        ("forward", functools.partial(model.flat_forward, n_junctions), forward_signature(layers, batch)),
+    ]
+    if cfg.get("gather_dout"):
+        dout = cfg["gather_dout"]
+        tag = "gather_forward"
+        jobs.append(
+            (tag, functools.partial(model.flat_gather_forward, n_junctions), gather_signature(layers, batch, dout))
+        )
+        entry["gather_dout"] = list(dout)
+
+    for tag, fn, (in_specs, out_specs) in jobs:
+        fname = f"{name}_{tag}.hlo.txt"
+        text = to_hlo_text(lower_entry(fn, in_specs))
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entry["programs"][tag] = {"file": fname, "inputs": in_specs, "outputs": out_specs}
+        print(f"  {fname}: {len(text)} chars, {len(in_specs)} in / {len(out_specs)} out")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=list(CONFIGS))
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {"configs": {}}
+    for name in args.configs:
+        print(f"lowering config {name} {CONFIGS[name]['layers']}")
+        manifest["configs"][name] = build_config(name, CONFIGS[name], args.outdir)
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(args.outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Structured-sparse gather kernel: the paper's edge-based inference path.
+
+Stores only the |W_i| = Nr * d_in connected weights in compacted form
+(Fig. 4's weight memory: edges numbered sequentially by right neuron →
+row j of wc/idx holds right neuron j's d_in in-edges). The activation
+reads a[:, idx[j, f]] are the *interleaved-order* accesses of Sec. III-B;
+on the FPGA the clash-free seed-vector pattern guarantees one read per
+bank per cycle, here the same reads become a VMEM gather over the
+resident activation tile.
+
+z_i (edges processed per cycle) maps to the tile_r * d_in edge block a
+single grid step consumes; the d_out sweeps over the left activations
+map to the batch grid dimension re-reading the same activation block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .junction import pick_tile
+
+
+def _gather_ff_kernel(a_ref, wc_ref, idx_ref, b_ref, o_ref):
+    """o[tb, tr] = einsum(a[tb, Nl] gathered by idx[tr, d_in], wc[tr, d_in]) + b."""
+    gathered = jnp.take(a_ref[...], idx_ref[...], axis=1)  # [tb, tr, d_in]
+    o_ref[...] = (
+        jnp.einsum("bjf,jf->bj", gathered, wc_ref[...].astype(a_ref.dtype))
+        + b_ref[...].astype(a_ref.dtype)[None, :]
+    )
+
+
+def gather_ff(a, wc, idx, b, *, tile_b=128, tile_r=128):
+    """Eq. (2a) over compacted weights: h[n,j] = sum_f wc[j,f]*a[n,idx[j,f]] + b[j]."""
+    bsz, nl = a.shape
+    nr, d_in = wc.shape
+    tb, tr = pick_tile(bsz, tile_b), pick_tile(nr, tile_r)
+    grid = (bsz // tb, nr // tr)
+    return pl.pallas_call(
+        _gather_ff_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, nl), lambda i, j: (i, 0)),
+            pl.BlockSpec((tr, d_in), lambda i, j: (j, 0)),
+            pl.BlockSpec((tr, d_in), lambda i, j: (j, 0)),
+            pl.BlockSpec((tr,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tb, tr), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nr), a.dtype),
+        interpret=True,
+    )(a, wc, idx, b)
+
+
+def _gather_up_kernel(a_ref, d_ref, idx_ref, o_ref):
+    """dwc[tr, d_in] = einsum(delta[B, tr], a[B, Nl] gathered by idx)."""
+    gathered = jnp.take(a_ref[...], idx_ref[...], axis=1)  # [B, tr, d_in]
+    o_ref[...] = jnp.einsum("bj,bjf->jf", d_ref[...], gathered)
+
+
+def gather_up(a, delta, idx, *, tile_r=128):
+    """Eq. (4b) over compacted weights: dwc[j,f] = sum_b delta[b,j]*a[b,idx[j,f]].
+
+    Full batch per grid step (UP consumes every input's contribution to a
+    weight before moving on — the weight bank is written once per junction
+    cycle, Fig. 3).
+    """
+    bsz, nl = a.shape
+    nr, d_in = idx.shape
+    tr = pick_tile(nr, tile_r)
+    grid = (nr // tr,)
+    return pl.pallas_call(
+        _gather_up_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, nl), lambda j: (0, 0)),
+            pl.BlockSpec((bsz, tr), lambda j: (0, j)),
+            pl.BlockSpec((tr, d_in), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, d_in), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, d_in), delta.dtype),
+        interpret=True,
+    )(a, delta, idx)

@@ -1,0 +1,156 @@
+"""Pallas kernels for the paper's three per-junction hardware operations.
+
+The FPGA architecture (Sec. III) streams z_i edges per clock out of banked
+BRAM with clash-free interleaved addressing. The TPU-shaped analogue
+(DESIGN.md §Hardware-Adaptation) blocks each junction into
+(tile_b × tile_r × tile_l) VMEM tiles — the BlockSpec index maps play the
+role the seed-vector address generators played on FPGA — and realizes the
+z-parallel MAC array as MXU matmuls over the masked weight tile.
+
+All three operations (FF / BP / UP) share the single weight bank, exactly
+as in Fig. 3: the same (w, mask) tiles feed all three kernels.
+
+Kernels run with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret lowering produces portable HLO that the Rust
+runtime executes. Tile choices still follow MXU-friendly shapes where the
+layer dimensions allow (multiples of 128/8).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pallas grids execute as XLA while-loops after interpret lowering (and as a
+# python loop while tracing), so tiles are chosen as the largest "nice"
+# divisor to keep grids shallow. 128 first: MXU lane width.
+_TILE_PREF = (128, 100, 64, 50, 39, 32, 25, 16, 13, 10, 8, 5, 4, 3, 2, 1)
+
+
+def pick_tile(n: int, cap: int = 128) -> int:
+    """Largest preferred divisor of n, capped; falls back to n itself."""
+    if n <= cap:
+        return n
+    for t in _TILE_PREF:
+        if t <= cap and n % t == 0:
+            return t
+    return n
+
+
+def _matmul_ff_kernel(a_ref, w_ref, m_ref, o_ref):
+    """o[tb, tr] += a[tb, tl] @ (w*m)[tr, tl]^T, accumulated over grid dim 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    masked = (w_ref[...] * m_ref[...]).astype(a_ref.dtype)
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        masked,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def junction_ff(a, w, mask, b, *, tile_b=128, tile_r=128, tile_l=128):
+    """Eq. (2a) as a blocked Pallas matmul: h = a @ (w*mask)^T + b."""
+    bsz, nl = a.shape
+    nr = w.shape[0]
+    tb, tr, tl = pick_tile(bsz, tile_b), pick_tile(nr, tile_r), pick_tile(nl, tile_l)
+    grid = (bsz // tb, nr // tr, nl // tl)
+    h = pl.pallas_call(
+        _matmul_ff_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tl), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tr, tl), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tr, tl), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tb, tr), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nr), a.dtype),
+        interpret=True,
+    )(a, w, mask)
+    return h + b
+
+
+def _matmul_bp_kernel(d_ref, w_ref, m_ref, o_ref):
+    """o[tb, tl] += d[tb, tr] @ (w*m)[tr, tl], accumulated over grid dim 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    masked = (w_ref[...] * m_ref[...]).astype(d_ref.dtype)
+    o_ref[...] += jax.lax.dot_general(
+        d_ref[...],
+        masked,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def junction_bp(delta, w, mask, *, tile_b=128, tile_r=128, tile_l=128):
+    """Eq. (3b) pre-activation part as a blocked Pallas matmul: delta @ (w*mask)."""
+    bsz, nr = delta.shape
+    nl = w.shape[1]
+    tb, tr, tl = pick_tile(bsz, tile_b), pick_tile(nr, tile_r), pick_tile(nl, tile_l)
+    grid = (bsz // tb, nl // tl, nr // tr)
+    return pl.pallas_call(
+        _matmul_bp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tr), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tr, tl), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tr, tl), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tb, tl), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nl), delta.dtype),
+        interpret=True,
+    )(delta, w, mask)
+
+
+def _matmul_up_kernel(d_ref, a_ref, m_ref, o_ref, *, nsteps):
+    """o[tr, tl] += d[tb, tr]^T @ a[tb, tl]; masked once fully accumulated.
+
+    The mask multiply on the final accumulation step enforces eq. (4b):
+    excluded edges receive *no* update ever, so they stay exactly zero —
+    the pre-defined pattern is fixed through training.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        d_ref[...],
+        a_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _apply_mask():
+        o_ref[...] *= m_ref[...].astype(o_ref.dtype)
+
+
+def junction_up(a, delta, mask, *, tile_b=128, tile_r=128, tile_l=128):
+    """Eq. (4b) gradients: dW = (delta^T @ a) * mask and db = sum_b delta."""
+    bsz, nr = delta.shape
+    nl = a.shape[1]
+    tb, tr, tl = pick_tile(bsz, tile_b), pick_tile(nr, tile_r), pick_tile(nl, tile_l)
+    grid = (nr // tr, nl // tl, bsz // tb)
+    dw = pl.pallas_call(
+        functools.partial(_matmul_up_kernel, nsteps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tr), lambda i, j, k: (k, i)),
+            pl.BlockSpec((tb, tl), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tr, tl), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, tl), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nr, nl), delta.dtype),
+        interpret=True,
+    )(delta, a, mask)
+    return dw, delta.sum(axis=0)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Shape conventions (paper notation, Sec. II-A):
+  a     [B, Nl]      left-layer activations (layer i-1)
+  w     [Nr, Nl]     junction weights, W[j, k] = edge (right j <- left k)
+  mask  [Nr, Nl]     0/1 pre-defined sparsity pattern (fixed before training)
+  b     [Nr]         right-layer biases
+  delta [B, Nr]      error signal at the right layer (eq. 3)
+  wc    [Nr, d_in]   compacted weights, row j = the d_in weights into right
+                     neuron j (the paper's weight-memory layout, Fig. 4)
+  idx   [Nr, d_in]   left-neuron index of each compacted weight
+"""
+
+import jax.numpy as jnp
+
+
+def junction_ff(a, w, mask, b):
+    """Feedforward (eq. 2a): h = a @ (w*mask)^T + b."""
+    return a @ (w * mask).T + b
+
+
+def junction_bp(delta, w, mask):
+    """Backprop (eq. 3b, pre-activation part): da = delta @ (w*mask)."""
+    return delta @ (w * mask)
+
+
+def junction_up(a, delta, mask):
+    """Update gradients (eq. 4b): dW = (delta^T @ a) * mask, db = sum delta."""
+    return (delta.T @ a) * mask, delta.sum(axis=0)
+
+
+def gather_ff(a, wc, idx, b):
+    """Structured-sparse feedforward over compacted weights (eq. 2a).
+
+    h[n, j] = sum_f wc[j, f] * a[n, idx[j, f]] + b[j]
+
+    This is the true edge-based data layout: storage and MACs are
+    proportional to |W_i| = Nr * d_in, not Nr * Nl.
+    """
+    gathered = jnp.take(a, idx, axis=1)  # [B, Nr, d_in]
+    return jnp.einsum("bjf,jf->bj", gathered, wc) + b
+
+
+def gather_bp(delta, wc, idx, n_left):
+    """Structured-sparse backprop: scatter-add transpose of gather_ff."""
+    # contrib[b, j, f] = delta[b, j] * wc[j, f] accumulated at column idx[j, f]
+    contrib = delta[:, :, None] * wc[None, :, :]  # [B, Nr, d_in]
+    flat_idx = idx.reshape(-1)  # [Nr*d_in]
+    flat = contrib.reshape(contrib.shape[0], -1)  # [B, Nr*d_in]
+    out = jnp.zeros((contrib.shape[0], n_left), dtype=delta.dtype)
+    return out.at[:, flat_idx].add(flat)
+
+
+def gather_up(a, delta, idx):
+    """Structured-sparse update: dwc[j, f] = sum_b delta[b, j] * a[b, idx[j, f]]."""
+    gathered = jnp.take(a, idx, axis=1)  # [B, Nr, d_in]
+    return jnp.einsum("bj,bjf->jf", delta, gathered)

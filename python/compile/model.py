@@ -1,0 +1,158 @@
+"""L2: the paper's sparse MLP forward/backward as a JAX compute graph.
+
+Equations (2)-(4) of the paper, with every junction's FF / BP / UP routed
+through the Pallas kernels via jax.custom_vjp — autodiff never opens the
+kernels, so the lowered HLO contains exactly the three hardware operations
+per junction, sharing one weight buffer, as in Fig. 3.
+
+The pre-defined sparsity contract: masks are inputs held fixed; masked
+FF plus the mask-multiplied UP gradient guarantee excluded weights remain
+identically zero through training (they start zero and receive zero
+update), so training complexity scales with |W_i| on hardware that skips
+the zeros (the Rust hw/ simulator and the gather kernels), and the
+dense-masked form here stays numerically identical to it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gather as gather_kernels
+from .kernels import junction as junction_kernels
+
+
+@jax.custom_vjp
+def masked_linear(a, w, b, mask):
+    """h = a @ (w*mask)^T + b with FF/BP/UP each a Pallas kernel."""
+    return junction_kernels.junction_ff(a, w, mask, b)
+
+
+def _masked_linear_fwd(a, w, b, mask):
+    return junction_kernels.junction_ff(a, w, mask, b), (a, w, mask)
+
+
+def _masked_linear_bwd(res, g):
+    a, w, mask = res
+    da = junction_kernels.junction_bp(g, w, mask)  # eq. (3b) inner sum
+    dw, db = junction_kernels.junction_up(a, g, mask)  # eq. (4b)
+    return da, dw, db, jnp.zeros_like(mask)
+
+
+masked_linear.defvjp(_masked_linear_fwd, _masked_linear_bwd)
+
+
+def init_params(layers, key, bias_init=0.1):
+    """He initialization [45] for weights; constant bias (paper Sec. IV-A)."""
+    params = []
+    for i in range(1, len(layers)):
+        key, sub = jax.random.split(key)
+        std = jnp.sqrt(2.0 / layers[i - 1])
+        w = jax.random.normal(sub, (layers[i], layers[i - 1]), jnp.float32) * std
+        b = jnp.full((layers[i],), bias_init, jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def forward(params, masks, x):
+    """Eq. (2): ReLU hidden layers, linear (pre-softmax) output layer."""
+    a = x
+    n_junctions = len(params)
+    for i, ((w, b), mask) in enumerate(zip(params, masks)):
+        h = masked_linear(a, w, b, mask)
+        a = h if i == n_junctions - 1 else jax.nn.relu(h)
+    return a
+
+
+def gather_forward(wcs, idxs, biases, x):
+    """Inference over compacted structured-sparse storage (gather kernel)."""
+    a = x
+    n_junctions = len(wcs)
+    for i, (wc, idx, b) in enumerate(zip(wcs, idxs, biases)):
+        h = gather_kernels.gather_ff(a, wc, idx, b)
+        a = h if i == n_junctions - 1 else jax.nn.relu(h)
+    return a
+
+
+def loss_and_metrics(params, masks, x, y, l2):
+    """Softmax cross-entropy + L2 penalty on the *connected* weights only."""
+    logits = forward(params, masks, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    penalty = sum(jnp.sum((w * m) ** 2) for (w, _), m in zip(params, masks))
+    correct = (jnp.argmax(logits, axis=-1) == y).sum().astype(jnp.float32)
+    return ce + l2 * penalty, (ce, correct)
+
+
+def adam_step(p, g, m, v, t, lr, beta1=0.9, beta2=0.999, eps=1e-8, decay=1e-5):
+    """Adam [46] with the paper's lr decay (Sec. IV-A: decay = 1e-5)."""
+    lr_t = lr / (1.0 + decay * (t - 1.0))
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m / (1.0 - beta1**t)
+    vhat = v / (1.0 - beta2**t)
+    return p - lr_t * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def train_step(params, opt_m, opt_v, masks, x, y, t, lr, l2):
+    """One minibatch step. Returns (params', m', v', t+1, ce_loss, correct).
+
+    Masks enter the gradient twice: through masked_linear's custom VJP
+    (dW pre-masked by the UP kernel) and through the L2 penalty (also
+    masked), so the Adam state of excluded edges stays exactly zero.
+    """
+    grad_fn = jax.value_and_grad(loss_and_metrics, has_aux=True)
+    (_, (ce, correct)), grads = grad_fn(params, masks, x, y, l2)
+    new_params, new_m, new_v = [], [], []
+    for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(params, grads, opt_m, opt_v):
+        w2, mw2, vw2 = adam_step(w, gw, mw, vw, t, lr)
+        b2, mb2, vb2 = adam_step(b, gb, mb, vb, t, lr)
+        new_params.append((w2, b2))
+        new_m.append((mw2, mb2))
+        new_v.append((vw2, vb2))
+    return new_params, new_m, new_v, t + 1.0, ce, correct
+
+
+# ---------------------------------------------------------------------------
+# Flat-signature wrappers: the AOT boundary. The Rust runtime passes/receives
+# positional f32/i32 literals; order is defined here and recorded in the
+# manifest by aot.py (inputs: L x (w, b), 4L opt state, L masks, x, y, t,
+# lr, l2 — outputs: the updated counterparts + scalars).
+# ---------------------------------------------------------------------------
+
+
+def _unflatten(args, n_junctions):
+    pairs = lambda off: [(args[off + 2 * i], args[off + 2 * i + 1]) for i in range(n_junctions)]
+    params = pairs(0)
+    opt_m = pairs(2 * n_junctions)
+    opt_v = pairs(4 * n_junctions)
+    off = 6 * n_junctions
+    masks = list(args[off : off + n_junctions])
+    x, y, t, lr, l2 = args[off + n_junctions : off + n_junctions + 5]
+    return params, opt_m, opt_v, masks, x, y, t, lr, l2
+
+
+def flat_train_step(n_junctions, *args):
+    params, opt_m, opt_v, masks, x, y, t, lr, l2 = _unflatten(args, n_junctions)
+    new_params, new_m, new_v, t2, ce, correct = train_step(
+        params, opt_m, opt_v, masks, x, y, t, lr, l2
+    )
+    out = []
+    for group in (new_params, new_m, new_v):
+        for w, b in group:
+            out.extend((w, b))
+    out.extend((t2, ce, correct))
+    return tuple(out)
+
+
+def flat_forward(n_junctions, *args):
+    params = [(args[2 * i], args[2 * i + 1]) for i in range(n_junctions)]
+    masks = list(args[2 * n_junctions : 3 * n_junctions])
+    x = args[3 * n_junctions]
+    return (forward(params, masks, x),)
+
+
+def flat_gather_forward(n_junctions, *args):
+    wcs = args[0:n_junctions]
+    idxs = args[n_junctions : 2 * n_junctions]
+    biases = args[2 * n_junctions : 3 * n_junctions]
+    x = args[3 * n_junctions]
+    return (gather_forward(wcs, idxs, biases, x),)

@@ -1,0 +1,104 @@
+"""AOT boundary tests: signatures match the flat wrappers, HLO text parses,
+and the manifest the Rust runtime consumes is faithful."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+TINY = aot.CONFIGS["tiny"]
+
+
+def test_train_signature_counts():
+    for name, cfg in aot.CONFIGS.items():
+        layers, batch = cfg["layers"], cfg["batch"]
+        nj = len(layers) - 1
+        ins, outs = aot.train_signature(layers, batch)
+        assert len(ins) == 6 * nj + nj + 5
+        assert len(outs) == 6 * nj + 3
+        assert ins[-5]["name"] == "x" and ins[-5]["shape"] == [batch, layers[0]]
+        assert ins[-4]["dtype"] == "i32"
+
+
+def test_forward_signature_counts():
+    layers, batch = TINY["layers"], TINY["batch"]
+    ins, outs = aot.forward_signature(layers, batch)
+    assert len(ins) == 3 * (len(layers) - 1) + 1
+    assert outs[0]["shape"] == [batch, layers[-1]]
+
+
+def test_gather_signature_din_math():
+    # d_in_i = N_{i-1} d_out_i / N_i  (Sec. II-A)
+    ins, _ = aot.gather_signature((800, 100, 10), 256, (20, 10))
+    wc1 = next(s for s in ins if s["name"] == "wc1")
+    wc2 = next(s for s in ins if s["name"] == "wc2")
+    assert wc1["shape"] == [100, 160]
+    assert wc2["shape"] == [10, 100]
+
+
+def test_lowered_train_step_runs_and_matches_eager():
+    """Execute the lowered (AOT) tiny train step via jax and compare to eager."""
+    layers, batch = TINY["layers"], TINY["batch"]
+    nj = len(layers) - 1
+    ins, _ = aot.train_signature(layers, batch)
+    import functools
+
+    fn = functools.partial(model.flat_train_step, nj)
+    lowered = aot.lower_entry(fn, ins)
+    compiled = lowered.compile()
+    rng = np.random.default_rng(0)
+    args = []
+    for spec in ins:
+        shape, dtype = tuple(spec["shape"]), spec["dtype"]
+        if dtype == "i32":
+            args.append(jnp.asarray(rng.integers(0, layers[-1], shape), jnp.int32))
+        elif spec["name"] == "t":
+            args.append(jnp.float32(1.0))
+        elif spec["name"] == "lr":
+            args.append(jnp.float32(1e-3))
+        elif spec["name"] == "l2":
+            args.append(jnp.float32(0.0))
+        elif spec["name"].startswith("mask"):
+            args.append(jnp.asarray(rng.random(shape) < 0.5, jnp.float32))
+        else:
+            args.append(jnp.asarray(rng.standard_normal(shape), jnp.float32))
+    got = compiled(*args)
+    want = fn(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+def test_hlo_text_mentions_entry_and_params():
+    layers, batch = TINY["layers"], TINY["batch"]
+    ins, _ = aot.forward_signature(layers, batch)
+    import functools
+
+    text = aot.to_hlo_text(aot.lower_entry(functools.partial(model.flat_forward, len(layers) - 1), ins))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistent_with_files():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["configs"], "empty manifest"
+    for name, entry in manifest["configs"].items():
+        layers = entry["layers"]
+        for tag, prog in entry["programs"].items():
+            path = os.path.join(root, prog["file"])
+            assert os.path.exists(path), f"missing {path}"
+            with open(path) as f:
+                head = f.read(64)
+            assert "HloModule" in head
+            if tag == "train":
+                assert len(prog["inputs"]) == 7 * (len(layers) - 1) + 5

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+ref.py. This is the core correctness signal for the compute hot path that
+the Rust runtime executes via the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gather, junction, ref
+
+DIMS = st.sampled_from([1, 2, 3, 4, 5, 8, 13, 16, 24, 32, 39, 64, 100])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+def make(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def make_mask(rng, shape, density):
+    # guarantee at least one connected edge so the junction is non-trivial
+    m = (rng.random(shape) < density).astype(np.float32)
+    m.flat[rng.integers(0, m.size)] = 1.0
+    return jnp.asarray(m)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, nl=DIMS, nr=DIMS, dtype=DTYPES, density=st.floats(0.05, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_junction_ff_matches_ref(b, nl, nr, dtype, density, seed):
+    rng = np.random.default_rng(seed)
+    a, w = make(rng, (b, nl), dtype), make(rng, (nr, nl), dtype)
+    mask, bias = make_mask(rng, (nr, nl), density).astype(dtype), make(rng, (nr,), dtype)
+    got = junction.junction_ff(a, w, mask, bias)
+    want = ref.junction_ff(a, w, mask, bias)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, nl=DIMS, nr=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+def test_junction_bp_matches_ref(b, nl, nr, dtype, seed):
+    rng = np.random.default_rng(seed)
+    d, w = make(rng, (b, nr), dtype), make(rng, (nr, nl), dtype)
+    mask = make_mask(rng, (nr, nl), 0.4).astype(dtype)
+    got = junction.junction_bp(d, w, mask)
+    want = ref.junction_bp(d, w, mask)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, nl=DIMS, nr=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+def test_junction_up_matches_ref(b, nl, nr, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a, d = make(rng, (b, nl), dtype), make(rng, (b, nr), dtype)
+    mask = make_mask(rng, (nr, nl), 0.4).astype(dtype)
+    dw, db = junction.junction_up(a, d, mask)
+    dw_ref, db_ref = ref.junction_up(a, d, mask)
+    np.testing.assert_allclose(np.asarray(dw, np.float32), np.asarray(dw_ref, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(db, np.float32), np.asarray(db_ref, np.float32), **tol(dtype))
+
+
+def test_up_kernel_zeroes_excluded_edges():
+    """Eq. (4b) hardware contract: excluded edges get *exactly* zero update."""
+    rng = np.random.default_rng(7)
+    a, d = make(rng, (16, 32), jnp.float32), make(rng, (16, 24), jnp.float32)
+    mask = make_mask(rng, (24, 32), 0.3)
+    dw, _ = junction.junction_up(a, d, mask)
+    assert float(jnp.abs(dw * (1.0 - mask)).max()) == 0.0
+
+
+@st.composite
+def gather_case(draw):
+    nl = draw(st.sampled_from([8, 13, 16, 32, 64, 100]))
+    d_in = draw(st.integers(1, nl))
+    nr = draw(st.sampled_from([1, 2, 4, 8, 10, 24, 39]))
+    b = draw(st.sampled_from([1, 2, 8, 16, 32]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return nl, d_in, nr, b, seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=gather_case(), dtype=DTYPES)
+def test_gather_ff_matches_ref(case, dtype):
+    nl, d_in, nr, b, seed = case
+    rng = np.random.default_rng(seed)
+    a, wc = make(rng, (b, nl), dtype), make(rng, (nr, d_in), dtype)
+    bias = make(rng, (nr,), dtype)
+    idx = jnp.asarray(
+        np.stack([rng.choice(nl, d_in, replace=False) for _ in range(nr)]), jnp.int32
+    )
+    got = gather.gather_ff(a, wc, idx, bias)
+    want = ref.gather_ff(a, wc, idx, bias)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=gather_case())
+def test_gather_up_matches_ref(case):
+    nl, d_in, nr, b, seed = case
+    rng = np.random.default_rng(seed)
+    a, d = make(rng, (b, nl), jnp.float32), make(rng, (b, nr), jnp.float32)
+    idx = jnp.asarray(
+        np.stack([rng.choice(nl, d_in, replace=False) for _ in range(nr)]), jnp.int32
+    )
+    got = gather.gather_up(a, d, idx)
+    want = ref.gather_up(a, d, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_gather_equals_masked_dense():
+    """Compacted-weight FF == masked-dense FF when wc/idx encode the mask."""
+    rng = np.random.default_rng(3)
+    nl, nr, d_in, b = 32, 16, 8, 8
+    idx_np = np.stack([rng.choice(nl, d_in, replace=False) for _ in range(nr)])
+    wc = rng.standard_normal((nr, d_in)).astype(np.float32)
+    w = np.zeros((nr, nl), np.float32)
+    mask = np.zeros((nr, nl), np.float32)
+    for j in range(nr):
+        w[j, idx_np[j]] = wc[j]
+        mask[j, idx_np[j]] = 1.0
+    a = rng.standard_normal((b, nl)).astype(np.float32)
+    bias = rng.standard_normal(nr).astype(np.float32)
+    dense = junction.junction_ff(jnp.asarray(a), jnp.asarray(w), jnp.asarray(mask), jnp.asarray(bias))
+    compact = gather.gather_ff(jnp.asarray(a), jnp.asarray(wc), jnp.asarray(idx_np, jnp.int32), jnp.asarray(bias))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(compact), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,cap,expect_divides", [(800, 128, True), (256, 128, True), (39, 128, False), (2000, 128, True)])
+def test_pick_tile_divides(n, cap, expect_divides):
+    t = junction.pick_tile(n, cap)
+    assert n % t == 0
+    if expect_divides:
+        assert t <= cap

@@ -1,0 +1,169 @@
+"""L2 correctness: SparseMLP custom-VJP grads vs jax autodiff of the oracle,
+mask fixedness through training, Adam step math, flat AOT wrappers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref as kref
+
+
+def ref_forward(params, masks, x):
+    a = x
+    for i, ((w, b), m) in enumerate(zip(params, masks)):
+        h = kref.junction_ff(a, w, m, b)
+        a = h if i == len(params) - 1 else jax.nn.relu(h)
+    return a
+
+
+def ref_loss(params, masks, x, y, l2):
+    logits = ref_forward(params, masks, x)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    return ce + l2 * sum(jnp.sum((w * m) ** 2) for (w, _), m in zip(params, masks))
+
+
+def setup(layers, batch, seed, density=0.5):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(layers, jax.random.PRNGKey(seed))
+    masks = [
+        jnp.asarray((rng.random((layers[i + 1], layers[i])) < density), jnp.float32)
+        for i in range(len(layers) - 1)
+    ]
+    x = jnp.asarray(rng.standard_normal((batch, layers[0])), jnp.float32)
+    y = jnp.asarray(rng.integers(0, layers[-1], batch), jnp.int32)
+    return params, masks, x, y
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    layers=st.sampled_from([(8, 6, 4), (12, 10, 6), (16, 8, 8, 4), (10, 10, 10, 10, 5)]),
+    batch=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 1000),
+    l2=st.sampled_from([0.0, 1e-3, 1e-2]),
+)
+def test_grads_match_autodiff_of_oracle(layers, batch, seed, l2):
+    params, masks, x, y = setup(layers, batch, seed)
+    g1 = jax.grad(lambda p: model.loss_and_metrics(p, masks, x, y, l2)[0])(params)
+    g2 = jax.grad(lambda p: ref_loss(p, masks, x, y, l2))(params)
+    for (gw1, gb1), (gw2, gb2) in zip(g1, g2):
+        np.testing.assert_allclose(gw1, gw2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gb1, gb2, rtol=1e-4, atol=1e-5)
+
+
+def test_forward_matches_oracle():
+    params, masks, x, _ = setup((20, 16, 10), 8, 0)
+    np.testing.assert_allclose(
+        model.forward(params, masks, x), ref_forward(params, masks, x), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_excluded_weights_stay_zero_over_many_steps():
+    """The pre-defined sparsity contract (Sec. II): pattern fixed through training."""
+    layers = (12, 10, 6)
+    params, masks, x, y = setup(layers, 8, 1, density=0.3)
+    params = [(w * m, b) for (w, b), m in zip(params, masks)]
+    zeros = lambda: [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    m_st, v_st, t = zeros(), zeros(), 1.0
+    for _ in range(5):
+        params, m_st, v_st, t, _, _ = model.train_step(params, m_st, v_st, masks, x, y, t, 1e-2, 1e-3)
+    for (w, _), m in zip(params, masks):
+        assert float(jnp.abs(w * (1 - m)).max()) == 0.0
+    for (mw, _), (vw, _), m in zip(m_st, v_st, masks):
+        assert float(jnp.abs(mw * (1 - m)).max()) == 0.0
+        assert float(jnp.abs(vw * (1 - m)).max()) == 0.0
+
+
+def test_train_step_reduces_loss():
+    layers = (16, 32, 4)
+    params, masks, x, y = setup(layers, 32, 2, density=1.0)
+    zeros = lambda: [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    m_st, v_st, t = zeros(), zeros(), 1.0
+    first = None
+    for _ in range(30):
+        params, m_st, v_st, t, ce, _ = model.train_step(params, m_st, v_st, masks, x, y, t, 1e-2, 0.0)
+        first = first if first is not None else float(ce)
+    assert float(ce) < first
+
+
+def test_adam_step_matches_reference_formula():
+    p = jnp.asarray([1.0, -2.0, 0.5])
+    g = jnp.asarray([0.1, 0.2, -0.3])
+    m = jnp.asarray([0.01, 0.0, 0.02])
+    v = jnp.asarray([0.001, 0.0, 0.002])
+    t = 3.0
+    p2, m2, v2 = model.adam_step(p, g, m, v, t, lr=1e-2, decay=0.0)
+    m_ref = 0.9 * np.asarray(m) + 0.1 * np.asarray(g)
+    v_ref = 0.999 * np.asarray(v) + 0.001 * np.asarray(g) ** 2
+    mhat = m_ref / (1 - 0.9**3)
+    vhat = v_ref / (1 - 0.999**3)
+    p_ref = np.asarray(p) - 1e-2 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(p2, p_ref, rtol=1e-6)
+    np.testing.assert_allclose(m2, m_ref, rtol=1e-6)
+    np.testing.assert_allclose(v2, v_ref, rtol=1e-6)
+
+
+def test_flat_train_step_roundtrip():
+    """Flat AOT wrapper computes the same update as the structured API."""
+    layers = (12, 10, 6)
+    nj = len(layers) - 1
+    params, masks, x, y = setup(layers, 8, 4, density=0.4)
+    params = [(w * m, b) for (w, b), m in zip(params, masks)]
+    zeros = lambda: [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    m_st, v_st = zeros(), zeros()
+    flat_args = []
+    for group in (params, m_st, v_st):
+        for w, b in group:
+            flat_args.extend((w, b))
+    flat_args.extend(masks)
+    flat_args.extend((x, y, jnp.float32(1.0), jnp.float32(1e-3), jnp.float32(0.0)))
+    out = model.flat_train_step(nj, *flat_args)
+    assert len(out) == 6 * nj + 3
+    sp, sm, sv, st_, ce, corr = model.train_step(params, m_st, v_st, masks, x, y, 1.0, 1e-3, 0.0)
+    np.testing.assert_allclose(out[0], sp[0][0], rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(out[2 * nj - 1], sp[-1][1], rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(float(out[-2]), float(ce), rtol=1e-4)
+    assert float(out[-3]) == 2.0  # t advanced
+    assert float(out[-1]) == float(corr)
+
+
+def test_flat_forward_matches_forward():
+    layers = (12, 10, 6)
+    nj = len(layers) - 1
+    params, masks, x, _ = setup(layers, 8, 5)
+    flat_args = []
+    for w, b in params:
+        flat_args.extend((w, b))
+    flat_args.extend(masks)
+    flat_args.append(x)
+    (logits,) = model.flat_forward(nj, *flat_args)
+    np.testing.assert_allclose(logits, model.forward(params, masks, x), rtol=1e-6)
+
+
+def test_gather_forward_matches_masked_forward():
+    """Compacted inference path == masked-dense path for an encoded pattern."""
+    rng = np.random.default_rng(9)
+    layers = (16, 8, 4)
+    douts = (4, 2)
+    params = model.init_params(layers, jax.random.PRNGKey(9))
+    wcs, idxs, biases, masks, dense = [], [], [], [], []
+    for i, (w, b) in enumerate(params):
+        nr, nl = w.shape
+        d_in = nl * douts[i] // nr
+        idx = np.stack([rng.choice(nl, d_in, replace=False) for _ in range(nr)])
+        wc = np.asarray(w)[np.arange(nr)[:, None], idx]
+        m = np.zeros((nr, nl), np.float32)
+        for j in range(nr):
+            m[j, idx[j]] = 1.0
+        wcs.append(jnp.asarray(wc))
+        idxs.append(jnp.asarray(idx, jnp.int32))
+        biases.append(b)
+        masks.append(jnp.asarray(m))
+        dense.append((w, b))
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    got = model.gather_forward(wcs, idxs, biases, x)
+    want = model.forward(dense, masks, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,60 @@
+//! Hardware-simulator throughput: edges simulated per second for
+//! FF/BP/UP on the Table-I junction, plus the modeled FPGA throughput
+//! (inputs/s at 100 MHz) this corresponds to — the bench behind the
+//! Sec. III-A pipeline accounting.
+
+use pds::hw::junction::{Act, JunctionUnit};
+use pds::hw::pipeline::{speedup, throughput_inputs_per_sec};
+use pds::hw::zconfig;
+use pds::sparsity::clash_free::{schedule, Flavor};
+use pds::sparsity::config::{DoutConfig, JunctionShape, NetConfig};
+use pds::util::bench::bench_auto;
+use pds::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let shape = JunctionShape { n_left: 800, n_right: 100 };
+    let (d_out, z) = (20usize, 200usize);
+    let d_in = shape.n_left * d_out / shape.n_right;
+    let n_edges = (shape.n_right * d_in) as f64;
+    let mut rng = Rng::new(1);
+    let sched = schedule(800, z, d_out, Flavor::Type1 { dither: false }, &mut rng);
+    let z_next = JunctionUnit::required_z_next(shape.n_right * d_in, z, d_in);
+    let mut unit = JunctionUnit::new(shape, d_in, sched, z_next);
+    let dense: Vec<f32> = (0..100 * 800).map(|_| rng.normal()).collect();
+    unit.load_weights_dense(&dense);
+    let a: Vec<f32> = (0..800).map(|_| rng.normal()).collect();
+    let bias = vec![0.1f32; 100];
+    let dr: Vec<f32> = (0..100).map(|_| rng.normal()).collect();
+    let adot = vec![1.0f32; 800];
+
+    println!("== cycle-accurate simulator throughput (Table-I junction, 16k edges) ==");
+    bench_auto("hw FF (800x100 @ z=200)", Duration::from_millis(500), || {
+        std::hint::black_box(unit.feedforward(&a, &bias, Act::Relu).unwrap());
+    })
+    .report_throughput("edges", n_edges);
+    bench_auto("hw BP", Duration::from_millis(500), || {
+        std::hint::black_box(unit.backprop(&dr, &adot).unwrap());
+    })
+    .report_throughput("edges", n_edges);
+    let mut b2 = bias.clone();
+    bench_auto("hw UP", Duration::from_millis(500), || {
+        std::hint::black_box(unit.update(&a, &dr, &mut b2, 1e-4).unwrap());
+    })
+    .report_throughput("edges", n_edges);
+
+    println!("\n== modeled FPGA operating points (Sec. III-A) ==");
+    let netc = NetConfig::new(vec![800, 100, 10]);
+    let dout_cfg = DoutConfig(vec![20, 10]);
+    for z0 in [40usize, 160, 320] {
+        if let Ok(cfg) = zconfig::derive(&netc, &dout_cfg, z0) {
+            println!(
+                "z_net {:?}: C = {} cycles -> {:.0} inputs/s @ 100 MHz (speedup over sequential ~{:.1}X)",
+                cfg.z,
+                cfg.junction_cycle,
+                throughput_inputs_per_sec(100e6, cfg.junction_cycle, 2),
+                speedup(2, 100_000)
+            );
+        }
+    }
+}

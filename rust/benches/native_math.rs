@@ -1,0 +1,69 @@
+//! Native trainer kernels: masked-dense vs compacted-CSR step cost at the
+//! paper's densities — the software realization of the "complexity
+//! proportional to |W|" claim (Sec. II-B). This is the bench behind the
+//! Table-II sweep wall-time and the §Perf hot-path iteration.
+
+use pds::data::Spec;
+use pds::nn::dense::DenseNet;
+use pds::nn::sparse::SparseNet;
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::bench::bench_auto;
+use pds::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let layers = vec![800usize, 100, 10];
+    let netc = NetConfig::new(layers.clone());
+    let batch = 64usize;
+    let mut rng = Rng::new(1);
+    let spec = Spec::mnist_like();
+    let ds = spec.generate(batch, &mut rng);
+    let idx: Vec<usize> = (0..batch).collect();
+    let (x, y) = ds.gather(&idx);
+
+    println!("== native step cost vs density (N_net = (800,100,10), batch 64) ==");
+    let dnet = DenseNet::init_he(&layers, 0.1, &mut rng);
+    let fc_edges = 81_000f64;
+    let r = bench_auto("dense FC fwd+bwd step", Duration::from_millis(800), || {
+        std::hint::black_box(dnet.step(&x, &y, batch, 1e-4, None));
+    });
+    r.report_throughput("edges", fc_edges);
+    let fc_time = r.median;
+
+    for (d1, d2) in [(50usize, 10usize), (20, 10), (5, 10), (1, 10)] {
+        let dout = DoutConfig(vec![d1, d2]);
+        if netc.validate_dout(&dout).is_err() {
+            continue;
+        }
+        let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+        let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+        let edges = snet.n_edges() as f64;
+        let rho = netc.rho_net(&dout);
+        let r = bench_auto(
+            &format!("sparse step rho={:.1}%", rho * 100.0),
+            Duration::from_millis(800),
+            || {
+                std::hint::black_box(snet.step(&x, &y, batch, 1e-4));
+            },
+        );
+        r.report_throughput("edges", edges);
+        println!(
+            "    -> speedup over FC dense: {:.2}X (ideal 1/rho = {:.1}X)",
+            fc_time.as_secs_f64() / r.median.as_secs_f64(),
+            1.0 / rho
+        );
+    }
+
+    println!("\n== raw matmul kernels ==");
+    let (m, k, n) = (64usize, 800usize, 100usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+    let mut out = vec![0f32; m * n];
+    let flops = (2 * m * k * n) as f64;
+    bench_auto("matmul_nt 64x800x100", Duration::from_millis(800), || {
+        pds::nn::matrix::matmul_nt(&a, &b, m, k, n, &mut out);
+        std::hint::black_box(&out);
+    })
+    .report_throughput("flop", flops);
+}

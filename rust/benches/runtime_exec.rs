@@ -1,0 +1,72 @@
+//! PJRT runtime benches: end-to-end train-step and forward latency of the
+//! AOT artifacts from the Rust hot path (the L3 dispatch overhead target
+//! in DESIGN.md §Perf), across artifact configs.
+//!
+//! Skips with a notice when artifacts are not built.
+
+use pds::data::Spec;
+use pds::runtime::Engine;
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::bench::bench_auto;
+use pds::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let Ok(engine) = Engine::new(dir) else {
+        eprintln!("runtime_exec: artifacts not built, skipping (run `make artifacts`)");
+        return;
+    };
+    println!("== PJRT end-to-end step latency ({}) ==", engine.platform());
+
+    for config in ["tiny", "mnist_fc2", "timit"] {
+        let Some(entry) = engine.manifest.configs.get(config) else {
+            continue;
+        };
+        let layers = entry.layers.clone();
+        let batch = entry.batch;
+        let netc = NetConfig::new(layers.clone());
+        let dout = DoutConfig(
+            (0..netc.n_junctions())
+                .map(|i| netc.junction(i).dout_for_density(0.25))
+                .collect(),
+        );
+        let mut rng = Rng::new(1);
+        let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+        let mut session =
+            pds::coordinator::TrainSession::new(&engine, config, &pattern, 1e-3, 1e-4, 2).unwrap();
+        let spec = Spec {
+            name: "bench",
+            features: layers[0],
+            classes: *layers.last().unwrap(),
+            latent_dim: (layers[0] / 4).clamp(4, 64),
+            shaping: pds::data::Shaping::Continuous,
+            separation: 2.5,
+            noise: 0.5,
+        };
+        let mut drng = Rng::new(3);
+        let ds = spec.generate(batch, &mut drng);
+        let idx: Vec<usize> = (0..batch).collect();
+        let (x, y) = ds.gather(&idx);
+
+        let edges = pattern.junctions.iter().map(|j| j.n_edges()).sum::<usize>() as f64;
+        bench_auto(
+            &format!("{config} train step (batch {batch})"),
+            Duration::from_secs(1),
+            || {
+                std::hint::black_box(session.step(&x, &y).unwrap());
+            },
+        )
+        .report_throughput("samples", batch as f64);
+        bench_auto(
+            &format!("{config} forward (batch {batch})"),
+            Duration::from_secs(1),
+            || {
+                std::hint::black_box(session.logits(&x).unwrap());
+            },
+        )
+        .report_throughput("samples", batch as f64);
+        let _ = edges;
+    }
+}

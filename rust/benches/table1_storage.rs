@@ -1,0 +1,40 @@
+//! Bench + regeneration of Table I: storage model evaluation cost and the
+//! FC-vs-sparse reduction factors across the paper's configurations.
+
+use pds::hw::storage::{training_storage, StorageComparison};
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::util::bench::bench_auto;
+use std::time::Duration;
+
+fn main() {
+    println!("== Table I regeneration ==");
+    let cases = [
+        (vec![800usize, 100, 10], vec![20usize, 10]),
+        (vec![800, 100, 100, 100, 10], vec![20, 20, 20, 10]),
+        (vec![2000, 50, 50], vec![10, 10]),
+        (vec![39, 390, 39], vec![90, 9]),
+        (vec![4000, 500, 100], vec![100, 100]),
+    ];
+    for (layers, dout) in &cases {
+        let netc = NetConfig::new(layers.clone());
+        let d = DoutConfig(dout.clone());
+        let cmp = StorageComparison::new(&netc, &d);
+        println!(
+            "{:<28} rho {:>5.1}%  FC {:>8} w | sparse {:>8} w | mem {:.1}X compute {:.1}X",
+            format!("{layers:?}"),
+            netc.rho_net(&d) * 100.0,
+            cmp.fc.total(),
+            cmp.sparse.total(),
+            cmp.memory_reduction(),
+            cmp.compute_reduction()
+        );
+    }
+
+    println!("\n== model evaluation cost ==");
+    let netc = NetConfig::new(vec![800, 100, 100, 100, 10]);
+    let dout = DoutConfig(vec![20, 20, 20, 10]);
+    bench_auto("training_storage (L=4)", Duration::from_millis(300), || {
+        std::hint::black_box(training_storage(&netc, &dout));
+    })
+    .report();
+}

@@ -1,0 +1,56 @@
+//! Bench + regeneration of Table III: pattern-space counting and the cost
+//! of *generating* clash-free patterns of each type (the hardware's
+//! address-generation workload, amortized at configuration time).
+
+use pds::sparsity::clash_free::{address_storage_cost, generate, pattern_space, Flavor};
+use pds::sparsity::config::JunctionShape;
+use pds::util::bench::bench_auto;
+use pds::util::rng::Rng;
+use std::time::Duration;
+
+const FLAVORS: [Flavor; 6] = [
+    Flavor::Type1 { dither: false },
+    Flavor::Type1 { dither: true },
+    Flavor::Type2 { dither: false },
+    Flavor::Type2 { dither: true },
+    Flavor::Type3 { dither: false },
+    Flavor::Type3 { dither: true },
+];
+
+fn main() {
+    println!("== Table III regeneration (12, 12, d_out 2, d_in 2, z 4) ==");
+    let toy = JunctionShape { n_left: 12, n_right: 12 };
+    for f in FLAVORS {
+        let s = pattern_space(toy, 2, 4, f);
+        println!(
+            "{:<24} |S_Mi| = {:<12} addr storage = {:>3} words",
+            f.name(),
+            s.exact
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| format!("1e{:.1}", s.log10)),
+            address_storage_cost(toy, 2, 4, f)
+        );
+    }
+
+    println!("\n== pattern generation throughput (800x100, d_out 20, z 200) ==");
+    let big = JunctionShape { n_left: 800, n_right: 100 };
+    for f in FLAVORS {
+        let mut rng = Rng::new(1);
+        let edges = 16_000f64;
+        bench_auto(&format!("generate {}", f.name()), Duration::from_millis(400), || {
+            std::hint::black_box(generate(big, 20, 200, f, &mut rng));
+        })
+        .report_throughput("edges", edges);
+    }
+
+    println!("\n== structured / random generation for comparison ==");
+    let mut rng = Rng::new(2);
+    bench_auto("generate structured", Duration::from_millis(400), || {
+        std::hint::black_box(pds::sparsity::structured::generate(big, 20, &mut rng));
+    })
+    .report_throughput("edges", 16_000.0);
+    bench_auto("generate random", Duration::from_millis(400), || {
+        std::hint::black_box(pds::sparsity::random::generate(big, 16_000, &mut rng));
+    })
+    .report_throughput("edges", 16_000.0);
+}

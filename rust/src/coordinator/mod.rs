@@ -1,0 +1,16 @@
+//! L3 coordinator: the training orchestrator and the inference service,
+//! both running entirely over the AOT PJRT artifacts (no Python on any
+//! path here).
+//!
+//! The paper's system contribution is the sparsity-aware accelerator, so
+//! L3 is the surrounding machine: session/state management for training
+//! (parameters, Adam state and masks live host-side between steps), and a
+//! batched inference server whose dynamic batcher feeds the fixed-batch
+//! compiled executable — the software analogue of feeding the junction
+//! pipeline one input per junction cycle.
+
+pub mod server;
+pub mod trainer;
+
+pub use server::{InferenceServer, ServerConfig, ServerStats};
+pub use trainer::{TrainSession, TrainStepOut};

@@ -1,0 +1,242 @@
+//! Batched inference service: request router + dynamic batcher over the
+//! fixed-batch `forward` artifact.
+//!
+//! A worker thread owns the compiled executable and the (sparse) model
+//! parameters. Clients submit single feature vectors; the batcher
+//! collects up to the artifact's compiled batch size or until
+//! `max_wait` elapses, pads the tail with zero rows, executes once, and
+//! fans the argmax results back out. This mirrors the hardware pipeline's
+//! rhythm: a full junction cycle is paid per batch regardless of
+//! occupancy, so latency = queueing + one fixed execution.
+//!
+//! Implemented on std threads + channels (tokio is unavailable in the
+//! offline build; the request path is compute-bound, not I/O-bound).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Manifest, Value};
+use crate::sparsity::pattern::NetPattern;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Flush a partial batch after this long (the latency/throughput knob).
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A classification response.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub class: usize,
+    /// Time from submit to response.
+    pub latency: Duration,
+    /// How full the batch that served this request was.
+    pub batch_occupancy: usize,
+}
+
+struct Request {
+    features: Vec<f32>,
+    submitted: Instant,
+    reply: Sender<Prediction>,
+}
+
+/// Shared counters.
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_rows: AtomicU64,
+}
+
+/// Handle for submitting requests; cloneable across client threads.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+    features: usize,
+}
+
+impl Client {
+    /// Submit one feature vector; blocks until the prediction returns.
+    pub fn classify(&self, features: Vec<f32>) -> Result<Prediction> {
+        assert_eq!(features.len(), self.features, "feature dim mismatch");
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            features,
+            submitted: Instant::now(),
+            reply: reply_tx,
+        };
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(reply_rx.recv()?)
+    }
+}
+
+pub struct InferenceServer {
+    client_tx: Sender<Request>,
+    worker: Option<JoinHandle<Result<()>>>,
+    pub stats: Arc<ServerStats>,
+    features: usize,
+}
+
+impl InferenceServer {
+    /// Spawn the worker: it builds its own PJRT engine (executables are
+    /// not `Send` — the xla crate wraps thread-affine raw handles), loads
+    /// the `forward` program of `config`, and serves with He-initialized
+    /// (or externally trained) parameters for `pattern`.
+    pub fn start(
+        artifacts_dir: impl Into<PathBuf>,
+        config: &str,
+        pattern: &NetPattern,
+        params: Option<Vec<Value>>,
+        cfg: ServerConfig,
+    ) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.into();
+        let config = config.to_string();
+        // read the manifest up front (host-side, cheap) for shape info
+        let probe = Manifest::probe(&artifacts_dir, &config)?;
+        let layers = probe.layers;
+        let batch = probe.batch;
+        let classes = *layers.last().unwrap();
+        let features = layers[0];
+
+        let params = match params {
+            Some(p) => p,
+            None => {
+                let mut rng = Rng::new(0xD15EA5E);
+                let mut p = Vec::new();
+                for i in 1..layers.len() {
+                    let (nl, nr) = (layers[i - 1], layers[i]);
+                    let std = (2.0 / nl as f32).sqrt();
+                    let mask = pattern.junctions[i - 1].mask();
+                    let w: Vec<f32> = mask.iter().map(|&m| rng.normal() * std * m).collect();
+                    p.push(Value::F32(w, vec![nr, nl]));
+                    p.push(Value::F32(vec![0.1; nr], vec![nr]));
+                }
+                p
+            }
+        };
+        let masks: Vec<Value> = pattern
+            .junctions
+            .iter()
+            .map(|p| Value::F32(p.mask(), vec![p.shape.n_right, p.shape.n_left]))
+            .collect();
+
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(ServerStats::default());
+        let worker_stats = Arc::clone(&stats);
+        let worker = std::thread::spawn(move || -> Result<()> {
+            // PJRT objects live and die on this thread
+            let engine = match Engine::new(&artifacts_dir) {
+                Ok(e) => e,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let _ = ready_tx.send(Err(e));
+                    anyhow::bail!("{msg}");
+                }
+            };
+            let prog = match engine.load(&config, "forward") {
+                Ok(p) => p,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let _ = ready_tx.send(Err(e));
+                    anyhow::bail!("{msg}");
+                }
+            };
+            let _ = ready_tx.send(Ok(()));
+            let mut pending: Vec<Request> = Vec::with_capacity(batch);
+            loop {
+                // block for the first request of a batch
+                match rx.recv() {
+                    Err(_) => return Ok(()), // all clients dropped
+                    Ok(req) => pending.push(req),
+                }
+                let deadline = Instant::now() + cfg.max_wait;
+                while pending.len() < batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(req) => pending.push(req),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                // assemble the padded batch
+                let occupancy = pending.len();
+                let mut x = vec![0f32; batch * features];
+                for (i, req) in pending.iter().enumerate() {
+                    x[i * features..(i + 1) * features].copy_from_slice(&req.features);
+                }
+                let mut inputs: Vec<Value> = Vec::new();
+                inputs.extend(params.iter().cloned());
+                inputs.extend(masks.iter().cloned());
+                inputs.push(Value::F32(x, vec![batch, features]));
+                let out = prog.run(&inputs)?;
+                let logits = out[0].as_f32()?;
+                worker_stats.requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+                worker_stats.batches.fetch_add(1, Ordering::Relaxed);
+                worker_stats
+                    .padded_rows
+                    .fetch_add((batch - occupancy) as u64, Ordering::Relaxed);
+                for (i, req) in pending.drain(..).enumerate() {
+                    let row = &logits[i * classes..(i + 1) * classes];
+                    let mut best = 0usize;
+                    for (c, &v) in row.iter().enumerate() {
+                        if v > row[best] {
+                            best = c;
+                        }
+                    }
+                    let _ = req.reply.send(Prediction {
+                        class: best,
+                        latency: req.submitted.elapsed(),
+                        batch_occupancy: occupancy,
+                    });
+                }
+            }
+        });
+        // propagate load/compile failures synchronously
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        Ok(InferenceServer {
+            client_tx: tx,
+            worker: Some(worker),
+            stats,
+            features,
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.client_tx.clone(),
+            features: self.features,
+        }
+    }
+
+    /// Stop the worker (drops the submit channel, then joins).
+    pub fn shutdown(mut self) -> Result<()> {
+        drop(self.client_tx);
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}

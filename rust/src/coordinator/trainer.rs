@@ -1,0 +1,229 @@
+//! Training session over the AOT `train` artifact.
+//!
+//! Host state (weights, biases, Adam moments, masks, step counter) is
+//! initialized in Rust, fed to the compiled train-step positionally per
+//! the manifest, and replaced by the returned updated tensors — the
+//! classic leader/state-manager loop, with the whole fwd/bwd/update fused
+//! into a single PJRT execution.
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, Program, Value};
+use crate::sparsity::pattern::NetPattern;
+use crate::util::rng::Rng;
+
+/// Per-step outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStepOut {
+    pub loss: f32,
+    pub correct: usize,
+}
+
+/// Training state bound to one artifact config.
+pub struct TrainSession {
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    train_prog: Program,
+    forward_prog: Program,
+    /// Interleaved per junction: w, b (then Adam m/v in the same layout).
+    params: Vec<Value>,
+    opt_m: Vec<Value>,
+    opt_v: Vec<Value>,
+    masks: Vec<Value>,
+    t: f32,
+    pub lr: f32,
+    pub l2: f32,
+}
+
+impl TrainSession {
+    /// He-initialize parameters and bind masks from a pattern (pass an
+    /// all-ones pattern mask for FC training).
+    pub fn new(
+        engine: &Engine,
+        config: &str,
+        pattern: &NetPattern,
+        lr: f32,
+        l2: f32,
+        seed: u64,
+    ) -> Result<Self> {
+        let entry = engine
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow::anyhow!("no config {config}"))?;
+        let layers = entry.layers.clone();
+        let batch = entry.batch;
+        if pattern.junctions.len() != layers.len() - 1 {
+            bail!("pattern has {} junctions, net has {}", pattern.junctions.len(), layers.len() - 1);
+        }
+        for (i, p) in pattern.junctions.iter().enumerate() {
+            if p.shape.n_left != layers[i] || p.shape.n_right != layers[i + 1] {
+                bail!("pattern junction {i} shape mismatch");
+            }
+        }
+        let train_prog = engine.load(config, "train")?;
+        let forward_prog = engine.load(config, "forward")?;
+
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        let mut opt_m = Vec::new();
+        let mut opt_v = Vec::new();
+        let mut masks = Vec::new();
+        for i in 1..layers.len() {
+            let (nl, nr) = (layers[i - 1], layers[i]);
+            let std = (2.0 / nl as f32).sqrt();
+            let mask = pattern.junctions[i - 1].mask();
+            // He init, pre-masked so excluded edges start (and stay) zero
+            let w: Vec<f32> = (0..nr * nl)
+                .zip(&mask)
+                .map(|(_, &m)| rng.normal() * std * m)
+                .collect();
+            params.push(Value::F32(w, vec![nr, nl]));
+            params.push(Value::F32(vec![0.1; nr], vec![nr]));
+            opt_m.push(Value::F32(vec![0.0; nr * nl], vec![nr, nl]));
+            opt_m.push(Value::F32(vec![0.0; nr], vec![nr]));
+            opt_v.push(Value::F32(vec![0.0; nr * nl], vec![nr, nl]));
+            opt_v.push(Value::F32(vec![0.0; nr], vec![nr]));
+            masks.push(Value::F32(mask, vec![nr, nl]));
+        }
+        Ok(TrainSession {
+            layers,
+            batch,
+            train_prog,
+            forward_prog,
+            params,
+            opt_m,
+            opt_v,
+            masks,
+            t: 1.0,
+            lr,
+            l2,
+        })
+    }
+
+    pub fn step_count(&self) -> usize {
+        (self.t - 1.0) as usize
+    }
+
+    /// One fused train step on a full minibatch (x: [batch, N_0], y:
+    /// [batch]).
+    pub fn step(&mut self, x: &[f32], y: &[i32]) -> Result<TrainStepOut> {
+        let n0 = self.layers[0];
+        if x.len() != self.batch * n0 || y.len() != self.batch {
+            bail!("batch shape mismatch: artifact is compiled for batch {}", self.batch);
+        }
+        let mut inputs: Vec<Value> = Vec::with_capacity(self.train_prog.spec.inputs.len());
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.opt_m.iter().cloned());
+        inputs.extend(self.opt_v.iter().cloned());
+        inputs.extend(self.masks.iter().cloned());
+        inputs.push(Value::F32(x.to_vec(), vec![self.batch, n0]));
+        inputs.push(Value::I32(y.to_vec(), vec![self.batch]));
+        inputs.push(Value::scalar_f32(self.t));
+        inputs.push(Value::scalar_f32(self.lr));
+        inputs.push(Value::scalar_f32(self.l2));
+
+        let mut out = self.train_prog.run(&inputs)?;
+        // outputs: 2L params, 2L m, 2L v, t, loss, correct
+        let l2n = self.params.len();
+        let correct = out.pop().unwrap().scalar()? as usize;
+        let loss = out.pop().unwrap().scalar()?;
+        let t = out.pop().unwrap().scalar()?;
+        let mut it = out.into_iter();
+        self.params = it.by_ref().take(l2n).collect();
+        self.opt_m = it.by_ref().take(l2n).collect();
+        self.opt_v = it.by_ref().take(l2n).collect();
+        self.t = t;
+        Ok(TrainStepOut { loss, correct })
+    }
+
+    /// Run one epoch over a dataset (drops the final partial batch, like
+    /// the fixed-batch hardware pipeline would).
+    pub fn epoch(&mut self, ds: &Dataset, rng: &mut Rng) -> Result<(f32, f64)> {
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        rng.shuffle(&mut order);
+        let mut loss_sum = 0f64;
+        let mut correct = 0usize;
+        let mut batches = 0usize;
+        for chunk in order.chunks(self.batch) {
+            if chunk.len() < self.batch {
+                break;
+            }
+            let (x, y) = ds.gather(chunk);
+            let out = self.step(&x, &y)?;
+            loss_sum += out.loss as f64;
+            correct += out.correct;
+            batches += 1;
+        }
+        if batches == 0 {
+            bail!("dataset smaller than one batch");
+        }
+        Ok((
+            (loss_sum / batches as f64) as f32,
+            correct as f64 / (batches * self.batch) as f64,
+        ))
+    }
+
+    /// Logits for one batch through the forward artifact.
+    pub fn logits(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let n0 = self.layers[0];
+        let mut inputs: Vec<Value> = Vec::with_capacity(self.forward_prog.spec.inputs.len());
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.masks.iter().cloned());
+        inputs.push(Value::F32(x.to_vec(), vec![self.batch, n0]));
+        let out = self.forward_prog.run(&inputs)?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Test accuracy over a dataset (full batches only).
+    pub fn evaluate(&self, ds: &Dataset) -> Result<f64> {
+        let classes = *self.layers.last().unwrap();
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut i = 0;
+        while i + self.batch <= ds.n {
+            let idx: Vec<usize> = (i..i + self.batch).collect();
+            let (x, y) = ds.gather(&idx);
+            let logits = self.logits(&x)?;
+            for (bi, &label) in y.iter().enumerate() {
+                let row = &logits[bi * classes..(bi + 1) * classes];
+                let mut best = 0usize;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = c;
+                    }
+                }
+                if best == label as usize {
+                    correct += 1;
+                }
+            }
+            seen += self.batch;
+            i += self.batch;
+        }
+        if seen == 0 {
+            bail!("dataset smaller than one batch");
+        }
+        Ok(correct as f64 / seen as f64)
+    }
+
+    /// Copy of a parameter tensor (junction i weight when `bias=false`).
+    pub fn param(&self, junction: usize, bias: bool) -> &Value {
+        &self.params[2 * junction + bias as usize]
+    }
+
+    /// Verify the pre-defined sparsity contract: every excluded weight is
+    /// exactly zero in the current parameters.
+    pub fn check_mask_invariant(&self) -> Result<()> {
+        for (i, mask) in self.masks.iter().enumerate() {
+            let w = self.params[2 * i].as_f32()?;
+            let m = mask.as_f32()?;
+            for (idx, (wv, mv)) in w.iter().zip(m).enumerate() {
+                if *mv == 0.0 && *wv != 0.0 {
+                    bail!("junction {i} weight {idx} excluded but nonzero ({wv})");
+                }
+            }
+        }
+        Ok(())
+    }
+}

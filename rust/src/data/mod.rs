@@ -1,0 +1,408 @@
+//! Synthetic surrogate datasets (DESIGN.md §Substitutions).
+//!
+//! The paper's Sec. IV trends are driven by *feature redundancy*: inputs
+//! are generated from a low-dimensional class-conditional latent embedded
+//! into a higher-dimensional feature space. The redundancy knob is the
+//! `features / latent_dim` ratio — MNIST-784 is highly redundant, its
+//! PCA-200 variant less so, TIMIT-13 least. Per-dataset shaping mimics
+//! each corpus' feature statistics (pixel-like, log(1+count) token-like,
+//! MFCC-like, CNN-feature-like).
+
+use crate::util::rng::Rng;
+
+/// A labelled dataset: row-major features `[n, features]`, integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub features: usize,
+    pub classes: usize,
+}
+
+/// Train/validation/test split.
+#[derive(Clone, Debug)]
+pub struct Splits {
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+/// Feature shaping applied on top of the latent projection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shaping {
+    /// Pixel-like: values clipped to [0, 1], many exactly-zero entries.
+    Pixels,
+    /// Token-count-like: log(1 + count) of non-negative quantized counts.
+    LogCounts,
+    /// Continuous cepstral-like: zero-mean standardized features.
+    Continuous,
+    /// CNN-feature-like: ReLU of a (deep or shallow) random feature net.
+    CnnFeatures { deep: bool },
+}
+
+/// Generator specification. `latent_dim` relative to `features` sets the
+/// redundancy (`features >> latent_dim` = high redundancy).
+#[derive(Clone, Debug)]
+pub struct Spec {
+    pub name: &'static str,
+    pub features: usize,
+    pub classes: usize,
+    pub latent_dim: usize,
+    pub shaping: Shaping,
+    /// Class-center separation relative to within-class noise; larger is
+    /// an easier problem.
+    pub separation: f32,
+    /// Per-feature observation noise.
+    pub noise: f32,
+}
+
+impl Spec {
+    /// MNIST surrogate: 784 pixel-like features (padded to 800 with
+    /// always-zero features like the paper's footnote 8), 10 classes.
+    pub fn mnist_like() -> Spec {
+        Spec {
+            name: "mnist-like",
+            features: 800,
+            classes: 10,
+            latent_dim: 24,
+            shaping: Shaping::Pixels,
+            separation: 0.7,
+            noise: 0.5,
+        }
+    }
+
+    /// The reduced-redundancy MNIST variant of Sec. IV-C (PCA to 200).
+    pub fn mnist_like_pca200() -> Spec {
+        Spec {
+            name: "mnist-like-pca200",
+            features: 200,
+            classes: 10,
+            latent_dim: 24,
+            shaping: Shaping::Continuous,
+            separation: 0.7,
+            noise: 0.5,
+        }
+    }
+
+    /// Reuters RCV1 surrogate: 2000 log(1+count) token features, 50 topics.
+    pub fn reuters_like() -> Spec {
+        Spec {
+            name: "reuters-like",
+            features: 2000,
+            classes: 50,
+            latent_dim: 64,
+            shaping: Shaping::LogCounts,
+            separation: 2.5,
+            noise: 0.5,
+        }
+    }
+
+    /// Reduced-redundancy Reuters (400 most frequent tokens, Sec. IV-C).
+    pub fn reuters_like_400() -> Spec {
+        Spec {
+            name: "reuters-like-400",
+            features: 400,
+            classes: 50,
+            latent_dim: 64,
+            shaping: Shaping::LogCounts,
+            separation: 2.5,
+            noise: 0.5,
+        }
+    }
+
+    /// TIMIT surrogate: `mfcc` cepstral features (13 / 39 / 117 in
+    /// Sec. IV-C), 39 phoneme classes. Latent dim fixed at 12 so 13
+    /// MFCCs carry almost no redundancy while 117 carry plenty.
+    pub fn timit_like(mfcc: usize) -> Spec {
+        Spec {
+            name: "timit-like",
+            features: mfcc,
+            classes: 39,
+            latent_dim: 12,
+            shaping: Shaping::Continuous,
+            separation: 1.6,
+            noise: 0.8,
+        }
+    }
+
+    /// CIFAR-100 MLP-head surrogate: 4000 CNN features, 100 classes;
+    /// `deep` mirrors the 6-conv-layer front end, `!deep` the single-layer
+    /// reduced-redundancy variant of Sec. IV-C.
+    pub fn cifar_features_like(deep: bool) -> Spec {
+        Spec {
+            name: if deep { "cifar-like" } else { "cifar-like-shallow" },
+            features: 4000,
+            classes: 100,
+            latent_dim: if deep { 96 } else { 48 },
+            shaping: Shaping::CnnFeatures { deep },
+            separation: if deep { 2.8 } else { 1.8 },
+            noise: if deep { 0.4 } else { 0.9 },
+        }
+    }
+
+    /// Redundancy ratio features / latent_dim (Sec. IV-C knob).
+    pub fn redundancy(&self) -> f64 {
+        self.features as f64 / self.latent_dim as f64
+    }
+
+    /// Generate `n` samples.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Dataset {
+        let r = self.latent_dim;
+        let d = self.features;
+        // fixed class centers and projection for this generator draw
+        let centers: Vec<f32> = (0..self.classes * r)
+            .map(|_| rng.normal() * self.separation)
+            .collect();
+        let proj: Vec<f32> = (0..d * r)
+            .map(|_| rng.normal() / (r as f32).sqrt())
+            .collect();
+        // second mixing stage for the deep CNN-feature shaping
+        let hidden_dim = 64usize;
+        let proj2: Vec<f32> = match self.shaping {
+            Shaping::CnnFeatures { deep: true } => (0..d * hidden_dim)
+                .map(|_| rng.normal() / (hidden_dim as f32).sqrt())
+                .collect(),
+            _ => Vec::new(),
+        };
+
+        let mut x = vec![0f32; n * d];
+        let mut y = vec![0i32; n];
+        let mut latent = vec![0f32; r];
+        for i in 0..n {
+            let c = rng.below(self.classes);
+            y[i] = c as i32;
+            for (j, l) in latent.iter_mut().enumerate() {
+                *l = centers[c * r + j] + rng.normal();
+            }
+            let row = &mut x[i * d..(i + 1) * d];
+            for (f, out) in row.iter_mut().enumerate() {
+                let mut v = 0f32;
+                for (j, l) in latent.iter().enumerate() {
+                    v += proj[f * r + j] * l;
+                }
+                *out = v + rng.normal() * self.noise;
+            }
+            self.shape_row(row, &proj2, hidden_dim);
+        }
+        Dataset {
+            x,
+            y,
+            n,
+            features: d,
+            classes: self.classes,
+        }
+    }
+
+    fn shape_row(&self, row: &mut [f32], proj2: &[f32], hidden_dim: usize) {
+        match self.shaping {
+            Shaping::Pixels => {
+                for v in row.iter_mut() {
+                    // shift so a large fraction of pixels clamp to exactly
+                    // zero, like handwritten-digit rasters
+                    *v = (*v - 0.3).clamp(0.0, 3.0) / 3.0;
+                }
+            }
+            Shaping::LogCounts => {
+                for v in row.iter_mut() {
+                    let count = (v.max(0.0) * 2.0).floor();
+                    *v = (1.0 + count).ln();
+                }
+            }
+            Shaping::Continuous => {}
+            Shaping::CnnFeatures { deep } => {
+                if deep && !proj2.is_empty() {
+                    // extra nonlinear mixing = richer, more redundant
+                    // features (the deep CNN "eases the burden of the MLP")
+                    let hidden: Vec<f32> =
+                        row.iter().take(hidden_dim).map(|v| v.max(0.0)).collect();
+                    for (f, v) in row.iter_mut().enumerate() {
+                        let mut acc = *v;
+                        for (j, h) in hidden.iter().enumerate() {
+                            acc += proj2[f * hidden_dim + j] * h;
+                        }
+                        *v = acc.max(0.0);
+                    }
+                } else {
+                    for v in row.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Generate standard train/val/test splits from one generator draw
+    /// (fixed centers/projection), so all splits share the distribution.
+    pub fn splits(&self, n_train: usize, n_val: usize, n_test: usize, seed: u64) -> Splits {
+        let mut rng = Rng::new(seed);
+        let all = self.generate(n_train + n_val + n_test, &mut rng);
+        let slice = |lo: usize, hi: usize| Dataset {
+            x: all.x[lo * self.features..hi * self.features].to_vec(),
+            y: all.y[lo..hi].to_vec(),
+            n: hi - lo,
+            features: self.features,
+            classes: self.classes,
+        };
+        Splits {
+            train: slice(0, n_train),
+            val: slice(n_train, n_train + n_val),
+            test: slice(n_train + n_val, n_train + n_val + n_test),
+        }
+    }
+}
+
+impl Dataset {
+    /// Row i as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.features..(i + 1) * self.features]
+    }
+
+    /// Per-feature variance (the §V-A attention signal).
+    pub fn feature_variances(&self) -> Vec<f32> {
+        let mut mean = vec![0f64; self.features];
+        for i in 0..self.n {
+            for (f, m) in mean.iter_mut().enumerate() {
+                *m += self.x[i * self.features + f] as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= self.n as f64;
+        }
+        let mut var = vec![0f64; self.features];
+        for i in 0..self.n {
+            for (f, v) in var.iter_mut().enumerate() {
+                let d = self.x[i * self.features + f] as f64 - mean[f];
+                *v += d * d;
+            }
+        }
+        var.iter().map(|v| (*v / self.n as f64) as f32).collect()
+    }
+
+    /// Minibatch (x, y) gather for the given sample indices.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.features);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let mut rng = Rng::new(0);
+        let ds = Spec::mnist_like().generate(64, &mut rng);
+        assert_eq!(ds.x.len(), 64 * 800);
+        assert_eq!(ds.y.len(), 64);
+        assert!(ds.y.iter().all(|&c| (0..10).contains(&c)));
+    }
+
+    #[test]
+    fn pixel_shaping_in_unit_range_with_zeros() {
+        let mut rng = Rng::new(1);
+        let ds = Spec::mnist_like().generate(32, &mut rng);
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let zeros = ds.x.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros as f64 > ds.x.len() as f64 * 0.2, "{zeros} zeros");
+    }
+
+    #[test]
+    fn log_counts_nonnegative() {
+        let mut rng = Rng::new(2);
+        let ds = Spec::reuters_like_400().generate(16, &mut rng);
+        assert!(ds.x.iter().all(|&v| v >= 0.0));
+        // log(1+x) of integer counts: exp(v)-1 should be integral
+        for &v in ds.x.iter().take(100) {
+            let c = (v.exp() - 1.0).round();
+            assert!((v - (1.0 + c).ln()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_in_latent_space() {
+        // nearest-class-center classification on raw features should beat
+        // chance by a wide margin (sanity: the problem is learnable)
+        let mut rng = Rng::new(3);
+        let spec = Spec::timit_like(39);
+        let ds = spec.generate(800, &mut rng);
+        let mut proto = vec![0f32; spec.classes * spec.features];
+        let mut count = vec![0f32; spec.classes];
+        for i in 0..ds.n {
+            let c = ds.y[i] as usize;
+            count[c] += 1.0;
+            for f in 0..spec.features {
+                proto[c * spec.features + f] += ds.row(i)[f];
+            }
+        }
+        for c in 0..spec.classes {
+            for f in 0..spec.features {
+                proto[c * spec.features + f] /= count[c].max(1.0);
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.n {
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..spec.classes {
+                let d: f32 = ds
+                    .row(i)
+                    .iter()
+                    .zip(&proto[c * spec.features..(c + 1) * spec.features])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n as f64;
+        assert!(acc > 0.30, "nearest-prototype acc {acc} (chance = 0.026)");
+    }
+
+    #[test]
+    fn splits_are_disjoint_same_distribution() {
+        let s = Spec::mnist_like_pca200().splits(100, 20, 30, 7);
+        assert_eq!(s.train.n, 100);
+        assert_eq!(s.val.n, 20);
+        assert_eq!(s.test.n, 30);
+        assert_ne!(s.train.x[..200], s.test.x[..200]);
+    }
+
+    #[test]
+    fn redundancy_ordering_matches_paper_variants() {
+        assert!(Spec::mnist_like().redundancy() > Spec::mnist_like_pca200().redundancy());
+        assert!(Spec::reuters_like().redundancy() > Spec::reuters_like_400().redundancy());
+        assert!(Spec::timit_like(117).redundancy() > Spec::timit_like(39).redundancy());
+        assert!(Spec::timit_like(39).redundancy() > Spec::timit_like(13).redundancy());
+    }
+
+    #[test]
+    fn feature_variances_and_gather() {
+        let mut rng = Rng::new(4);
+        let ds = Spec::timit_like(13).generate(50, &mut rng);
+        let v = ds.feature_variances();
+        assert_eq!(v.len(), 13);
+        assert!(v.iter().all(|&x| x > 0.0));
+        let (bx, by) = ds.gather(&[0, 49, 7]);
+        assert_eq!(bx.len(), 3 * 13);
+        assert_eq!(by, vec![ds.y[0], ds.y[49], ds.y[7]]);
+        assert_eq!(&bx[13..26], ds.row(49));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Spec::mnist_like().splits(10, 5, 5, 42);
+        let b = Spec::mnist_like().splits(10, 5, 5, 42);
+        assert_eq!(a.train.x, b.train.x);
+        assert_eq!(a.test.y, b.test.y);
+    }
+}

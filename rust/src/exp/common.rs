@@ -1,0 +1,275 @@
+//! Shared experiment machinery: training-run scales, the approach
+//! selector (Table II methods + §V baselines + FC reference), and the
+//! accuracy-with-CI runner all figures are built from.
+
+use crate::data::{Spec, Splits};
+use crate::nn::dense::DenseNet;
+use crate::nn::sparse::SparseNet;
+use crate::nn::trainer::{self, l2_for_density, Network, TrainConfig};
+use crate::sparsity::attention;
+use crate::sparsity::config::{DoutConfig, NetConfig};
+use crate::sparsity::{generate, Method};
+use crate::util::rng::Rng;
+use crate::util::{ci90, mean};
+
+/// Workload scale knobs (the paper: full corpora, 50 epochs, >= 5 runs;
+/// here: synthetic surrogates at a single-core budget).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+    pub batch: usize,
+    pub repeats: usize,
+}
+
+impl Scale {
+    pub fn standard() -> Scale {
+        Scale {
+            n_train: 1000,
+            n_test: 400,
+            epochs: 8,
+            batch: 64,
+            repeats: 3,
+        }
+    }
+
+    /// CI-friendly: tiny but still signal-bearing.
+    pub fn quick() -> Scale {
+        Scale {
+            n_train: 250,
+            n_test: 120,
+            epochs: 4,
+            batch: 32,
+            repeats: 2,
+        }
+    }
+
+    /// Heavier feature spaces (the CIFAR-like 4000-dim head) get fewer
+    /// samples/epochs to stay within budget.
+    pub fn for_spec(&self, spec: &Spec) -> Scale {
+        if spec.features >= 4000 {
+            Scale {
+                n_train: self.n_train / 2,
+                n_test: self.n_test / 2,
+                epochs: (self.epochs / 2).max(2),
+                ..*self
+            }
+        } else {
+            *self
+        }
+    }
+}
+
+/// The sparsity approaches compared across the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Approach {
+    /// Hardware-compatible clash-free pre-defined patterns (Sec. III-C).
+    ClashFree,
+    /// Structured pre-defined (fixed degrees, random placement).
+    Structured,
+    /// Unconstrained random pre-defined.
+    Random,
+    /// §V-A attention (feature-variance weighted input out-degrees).
+    Attention,
+    /// §V-B learning structured sparsity (L1 during FC training + prune).
+    Lss,
+    /// Fully-connected reference.
+    Fc,
+}
+
+impl Approach {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Approach::ClashFree => "clash-free",
+            Approach::Structured => "structured",
+            Approach::Random => "random",
+            Approach::Attention => "attention",
+            Approach::Lss => "LSS",
+            Approach::Fc => "FC",
+        }
+    }
+}
+
+/// One training run; returns final test accuracy.
+pub fn accuracy_run(
+    spec: &Spec,
+    layers: &[usize],
+    dout: Option<&DoutConfig>,
+    approach: Approach,
+    scale: &Scale,
+    seed: u64,
+) -> f64 {
+    let scale = scale.for_spec(spec);
+    let splits = spec.splits(scale.n_train, 0, scale.n_test, seed ^ 0xDA7A);
+    run_on_splits(&splits, layers, dout, approach, &scale, seed)
+}
+
+/// Same, over pre-generated splits (reused across approaches so methods
+/// are compared on identical data).
+pub fn run_on_splits(
+    splits: &Splits,
+    layers: &[usize],
+    dout: Option<&DoutConfig>,
+    approach: Approach,
+    scale: &Scale,
+    seed: u64,
+) -> f64 {
+    let netc = NetConfig::new(layers.to_vec());
+    let mut rng = Rng::new(seed);
+    let rho = dout.map(|d| netc.rho_net(d)).unwrap_or(1.0);
+    let cfg = TrainConfig {
+        epochs: scale.epochs,
+        batch: scale.batch,
+        l2: l2_for_density(1e-4, rho),
+        seed,
+        ..Default::default()
+    };
+    match approach {
+        Approach::Fc => {
+            let mut net = Network::Dense(DenseNet::init_he(layers, 0.1, &mut rng));
+            trainer::train(&mut net, &splits.train, &splits.test, &cfg).final_test_acc()
+        }
+        Approach::ClashFree | Approach::Structured | Approach::Random => {
+            let method = match approach {
+                Approach::ClashFree => Method::ClashFree,
+                Approach::Structured => Method::Structured,
+                _ => Method::Random,
+            };
+            let dout = dout.expect("sparse approach needs d_out");
+            let pattern = generate(method, &netc, dout, None, &mut rng);
+            let mut net = Network::Sparse(SparseNet::init_he(&pattern, 0.1, &mut rng));
+            trainer::train(&mut net, &splits.train, &splits.test, &cfg).final_test_acc()
+        }
+        Approach::Attention => {
+            let dout = dout.expect("attention needs d_out");
+            let variances = splits.train.feature_variances();
+            let pattern = attention::generate_net(&netc, dout, &variances, &mut rng);
+            let mut net = Network::Sparse(SparseNet::init_he(&pattern, 0.1, &mut rng));
+            trainer::train(&mut net, &splits.train, &splits.test, &cfg).final_test_acc()
+        }
+        Approach::Lss => {
+            // §V-B: FC training with an L1 sparsity promoter, magnitude
+            // pruning to the target per-junction densities, brief masked
+            // fine-tune. Training complexity is FC-like by construction.
+            let dout = dout.expect("LSS needs target densities");
+            let rho_j = netc.rho_per_junction(dout);
+            let gammas: Vec<f32> = rho_j.iter().map(|&r| 2e-4 * (1.0 - r as f32)).collect();
+            let mut dnet = DenseNet::init_he(layers, 0.1, &mut rng);
+            let mut net = Network::Dense(dnet.clone());
+            let lss_cfg = TrainConfig {
+                l1: Some(gammas),
+                ..cfg.clone()
+            };
+            trainer::train(&mut net, &splits.train, &splits.test, &lss_cfg);
+            if let Network::Dense(n) = net {
+                dnet = n;
+            }
+            dnet.prune_to_density(&rho_j);
+            let mut net = Network::Dense(dnet);
+            let ft_cfg = TrainConfig {
+                epochs: (scale.epochs / 2).max(2),
+                ..cfg
+            };
+            trainer::train(&mut net, &splits.train, &splits.test, &ft_cfg).final_test_acc()
+        }
+    }
+}
+
+/// Repeat a run over seeds; returns (mean, 90% CI half-width) in percent.
+pub fn repeated(
+    spec: &Spec,
+    layers: &[usize],
+    dout: Option<&DoutConfig>,
+    approach: Approach,
+    scale: &Scale,
+) -> (f32, f32) {
+    let accs: Vec<f32> = (0..scale.repeats)
+        .map(|r| accuracy_run(spec, layers, dout, approach, scale, 1000 + 7 * r as u64) as f32 * 100.0)
+        .collect();
+    (mean(&accs), ci90(&accs))
+}
+
+/// The admissible out-degree config nearest a target overall density, with
+/// junction densities scaled uniformly (used by the rho_net sweeps).
+pub fn dout_for_rho_net(netc: &NetConfig, rho: f64) -> DoutConfig {
+    DoutConfig(
+        (0..netc.n_junctions())
+            .map(|i| netc.junction(i).dout_for_density(rho))
+            .collect(),
+    )
+}
+
+/// Format "mean ± ci" like the paper's tables.
+pub fn fmt_acc(mean: f32, ci: f32) -> String {
+    format!("{mean:.1} ± {ci:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> Spec {
+        Spec {
+            name: "toy",
+            features: 24,
+            classes: 4,
+            latent_dim: 8,
+            shaping: crate::data::Shaping::Continuous,
+            separation: 3.0,
+            noise: 0.4,
+        }
+    }
+
+    #[test]
+    fn all_approaches_produce_learnable_runs() {
+        let spec = toy_spec();
+        let scale = Scale {
+            n_train: 400,
+            n_test: 120,
+            epochs: 10,
+            batch: 32,
+            repeats: 1,
+        };
+        let layers = [24usize, 16, 4];
+        let dout = DoutConfig(vec![8, 2]);
+        for approach in [
+            Approach::Fc,
+            Approach::ClashFree,
+            Approach::Structured,
+            Approach::Random,
+            Approach::Attention,
+            Approach::Lss,
+        ] {
+            let acc = accuracy_run(&spec, &layers, Some(&dout), approach, &scale, 3);
+            assert!(
+                acc > 0.45,
+                "{} acc {acc} barely above chance (0.25)",
+                approach.name()
+            );
+        }
+    }
+
+    #[test]
+    fn dout_for_rho_net_tracks_target() {
+        let netc = NetConfig::new(vec![800, 100, 10]);
+        let d = dout_for_rho_net(&netc, 0.2);
+        let got = netc.rho_net(&d);
+        assert!((got - 0.2).abs() < 0.07, "rho {got}");
+    }
+
+    #[test]
+    fn repeated_reports_ci() {
+        let spec = toy_spec();
+        let scale = Scale {
+            n_train: 150,
+            n_test: 60,
+            epochs: 3,
+            batch: 32,
+            repeats: 2,
+        };
+        let (m, ci) = repeated(&spec, &[24, 12, 4], None, Approach::Fc, &scale);
+        assert!(m > 25.0 && m <= 100.0);
+        assert!(ci >= 0.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Fig. 1: weight histograms per junction of trained FC nets on the
+//! MNIST surrogate (a-b: L=2, d-g: L=4), plus test accuracy vs rho_net
+//! (c, h). The motivating observation: earlier junctions end training with
+//! many near-zero weights, so they tolerate aggressive pre-defined
+//! sparsification.
+
+use super::common::{accuracy_run, dout_for_rho_net, fmt_acc, repeated, Approach, Scale};
+use crate::data::Spec;
+use crate::nn::dense::DenseNet;
+use crate::nn::trainer::{self, Network, TrainConfig};
+use crate::sparsity::config::NetConfig;
+use crate::util::rng::Rng;
+
+/// ASCII histogram of weight values.
+fn histogram(w: &[f32], bins: usize) -> String {
+    let lo = w.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let width = (hi - lo).max(1e-9) / bins as f32;
+    let mut counts = vec![0usize; bins];
+    for &v in w {
+        let b = (((v - lo) / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let maxc = *counts.iter().max().unwrap();
+    let mut out = String::new();
+    for (b, &c) in counts.iter().enumerate() {
+        let bar = "#".repeat((c * 40 / maxc.max(1)).max(usize::from(c > 0)));
+        out.push_str(&format!(
+            "  [{:+.3},{:+.3}) {:>6}  {}\n",
+            lo + b as f32 * width,
+            lo + (b + 1) as f32 * width,
+            c,
+            bar
+        ));
+    }
+    out
+}
+
+/// Fraction of weights within +-eps of zero — Fig. 1's "many weights are
+/// near zero after training" signal.
+pub fn near_zero_fraction(w: &[f32], eps: f32) -> f64 {
+    w.iter().filter(|v| v.abs() < eps).count() as f64 / w.len() as f64
+}
+
+fn train_fc(layers: &[usize], scale: &Scale, seed: u64) -> DenseNet {
+    let spec = Spec::mnist_like();
+    let splits = spec.splits(scale.n_train, 0, scale.n_test, seed);
+    let mut rng = Rng::new(seed);
+    let mut net = Network::Dense(DenseNet::init_he(layers, 0.1, &mut rng));
+    let cfg = TrainConfig {
+        epochs: scale.epochs,
+        batch: scale.batch,
+        seed,
+        ..Default::default()
+    };
+    trainer::train(&mut net, &splits.train, &splits.test, &cfg);
+    match net {
+        Network::Dense(n) => n,
+        _ => unreachable!(),
+    }
+}
+
+pub fn run(scale: &Scale) {
+    for layers in [vec![800usize, 100, 10], vec![800, 100, 100, 100, 10]] {
+        println!("\nFig. 1 weight histograms — FC N_net = {layers:?} (mnist-like)");
+        let net = train_fc(&layers, scale, 42);
+        for (i, w) in net.w.iter().enumerate() {
+            let nz = near_zero_fraction(w, 0.02);
+            println!(
+                "junction {} ({}x{}): {:.0}% of weights within ±0.02 of zero",
+                i + 1,
+                layers[i + 1],
+                layers[i],
+                nz * 100.0
+            );
+            println!("{}", histogram(w, 12));
+        }
+    }
+
+    println!("Fig. 1(c): accuracy vs rho_net for N_net = (800, 100, 10), sparsifying junction 1 first");
+    println!("{:>8}  {:>12}", "rho_net", "test acc %");
+    let netc = NetConfig::new(vec![800, 100, 10]);
+    let spec = Spec::mnist_like();
+    for rho in [1.0, 0.5, 0.21, 0.11, 0.05] {
+        let (dout, approach) = if rho >= 1.0 {
+            (None, Approach::Fc)
+        } else {
+            (Some(dout_for_rho_net(&netc, rho)), Approach::ClashFree)
+        };
+        let (m, ci) = repeated(&spec, &netc.layers, dout.as_ref(), approach, scale);
+        println!("{:>7.0}%  {:>12}", netc.rho_net(&dout.clone().unwrap_or(netc.fc_dout())) * 100.0, fmt_acc(m, ci));
+    }
+    // single quick L=4 reference point
+    let acc4 = accuracy_run(
+        &spec,
+        &[800, 100, 100, 100, 10],
+        None,
+        Approach::Fc,
+        scale,
+        7,
+    );
+    println!("Fig. 1(h) FC reference, L=4: {:.1}%", acc4 * 100.0);
+}

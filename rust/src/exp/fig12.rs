@@ -1,0 +1,52 @@
+//! Fig. 12: clash-free pre-defined sparsity vs the §V baselines —
+//! attention-based preprocessed sparsity and LSS (learning structured
+//! sparsity during FC training + magnitude pruning).
+
+use super::common::{dout_for_rho_net, fmt_acc, run_on_splits, Approach, Scale};
+use crate::data::Spec;
+use crate::sparsity::config::NetConfig;
+use crate::util::{ci90, mean};
+
+pub fn run(scale: &Scale) {
+    let cases: Vec<(Spec, Vec<usize>)> = vec![
+        (Spec::mnist_like(), vec![800, 100, 10]),
+        (Spec::reuters_like(), vec![2000, 50, 50]),
+        (Spec::timit_like(39), vec![39, 390, 39]),
+    ];
+    let rhos = [0.5, 0.2, 0.05];
+    for (spec, layers) in cases {
+        let netc = NetConfig::new(layers.clone());
+        println!("\nFig. 12 — {} N_net = {layers:?}", spec.name);
+        println!(
+            "{:>9} {:>14} {:>14} {:>14}",
+            "rho_net%", "clash-free", "attention", "LSS"
+        );
+        for &rho in &rhos {
+            let dout = dout_for_rho_net(&netc, rho);
+            if netc.validate_dout(&dout).is_err() {
+                continue;
+            }
+            let mut cells = Vec::new();
+            for approach in [Approach::ClashFree, Approach::Attention, Approach::Lss] {
+                let sc = scale.for_spec(&spec);
+                let accs: Vec<f32> = (0..sc.repeats)
+                    .map(|r| {
+                        let splits = spec.splits(sc.n_train, 0, sc.n_test, 15000 + r as u64);
+                        run_on_splits(&splits, &layers, Some(&dout), approach, &sc, 53 * (r as u64 + 1))
+                            as f32
+                            * 100.0
+                    })
+                    .collect();
+                cells.push(fmt_acc(mean(&accs), ci90(&accs)));
+            }
+            println!(
+                "{:>9.1} {:>14} {:>14} {:>14}",
+                netc.rho_net(&dout) * 100.0,
+                cells[0],
+                cells[1],
+                cells[2]
+            );
+        }
+    }
+    println!("\n(paper: LSS best — least constrained — but clash-free within ~2% at rho_net = 20%)");
+}

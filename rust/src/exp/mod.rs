@@ -1,0 +1,55 @@
+//! Experiment harnesses: one per table/figure in the paper's evaluation
+//! (see the DESIGN.md experiment index). Each prints the same rows/series
+//! the paper reports; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! Scale note: the paper trained 50 epochs on the full corpora over >= 5
+//! repeats; this harness runs the synthetic surrogates at a single-core
+//! budget (see [`common::Scale`]) — absolute accuracies differ, the
+//! *shape* (who wins, by what factor, where crossovers fall) is the
+//! reproduction target.
+
+pub mod common;
+pub mod fig1;
+pub mod fig12;
+pub mod size;
+pub mod sweeps;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use common::Scale;
+
+/// Run an experiment by id ("fig1", "table2", ... or "all").
+pub fn run(id: &str, scale: &Scale) -> Result<(), String> {
+    let all: &[(&str, fn(&Scale))] = &[
+        ("fig1", fig1::run),
+        ("table1", table1::run),
+        ("table2", table2::run),
+        ("fig6", sweeps::run_fig6),
+        ("fig7", sweeps::run_fig7),
+        ("fig8", sweeps::run_fig8),
+        ("fig9", size::run_fig9),
+        ("fig10", size::run_fig10),
+        ("fig11", size::run_fig11),
+        ("fig12", fig12::run),
+        ("table3", table3::run),
+        ("pipeline", table1::run_pipeline),
+    ];
+    if id == "all" {
+        for (name, f) in all {
+            println!("\n================ {name} ================");
+            f(scale);
+        }
+        return Ok(());
+    }
+    match all.iter().find(|(name, _)| *name == id) {
+        Some((_, f)) => {
+            f(scale);
+            Ok(())
+        }
+        None => Err(format!(
+            "unknown experiment '{id}'; known: {} or 'all'",
+            all.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+        )),
+    }
+}

@@ -1,0 +1,177 @@
+//! Figs. 9-11: 'large and sparse' vs 'small and dense' at matched
+//! trainable-parameter budgets.
+
+use super::common::{fmt_acc, run_on_splits, Approach, Scale};
+use crate::data::Spec;
+use crate::sparsity::config::{DoutConfig, NetConfig};
+use crate::util::{ci90, mean};
+
+/// Find the admissible d_out config whose parameter count best matches
+/// `budget`, scaling all junctions except the final one (kept FC for the
+/// MNIST experiments, per Fig. 9's caption).
+fn dout_for_budget(netc: &NetConfig, budget: usize, final_fc: bool) -> Option<DoutConfig> {
+    let l = netc.n_junctions();
+    let mut best: Option<(usize, DoutConfig)> = None;
+    // scan multiples of each junction's min d_out jointly by a density knob
+    for k in 1..=100 {
+        let rho = k as f64 / 100.0;
+        let dout = DoutConfig(
+            (0..l)
+                .map(|i| {
+                    if final_fc && i == l - 1 {
+                        netc.layers[i + 1]
+                    } else {
+                        netc.junction(i).dout_for_density(rho)
+                    }
+                })
+                .collect(),
+        );
+        if netc.validate_dout(&dout).is_err() {
+            continue;
+        }
+        let params = netc.trainable_params(&dout);
+        let gap = params.abs_diff(budget);
+        if best.as_ref().map(|(g, _)| gap < *g).unwrap_or(true) {
+            best = Some((gap, dout));
+        }
+    }
+    best.map(|(_, d)| d)
+}
+
+fn acc(spec: &Spec, layers: &[usize], dout: Option<&DoutConfig>, scale: &Scale) -> (f32, f32) {
+    let sc = scale.for_spec(spec);
+    let accs: Vec<f32> = (0..sc.repeats)
+        .map(|r| {
+            let splits = spec.splits(sc.n_train, 0, sc.n_test, 12000 + r as u64);
+            let approach = if dout.is_some() {
+                Approach::Structured
+            } else {
+                Approach::Fc
+            };
+            run_on_splits(&splits, layers, dout, approach, &sc, 17 * (r as u64 + 1)) as f32 * 100.0
+        })
+        .collect();
+    (mean(&accs), ci90(&accs))
+}
+
+fn run_budget_table(
+    title: &str,
+    spec: &Spec,
+    hidden_sizes: &[usize],
+    make_layers: impl Fn(usize) -> Vec<usize>,
+    budget: usize,
+    final_fc: bool,
+    scale: &Scale,
+) {
+    println!("\n{title} — equal trainable-parameter budget ≈ {budget}");
+    println!(
+        "{:>22} {:>10} {:>9} {:>14}",
+        "N_net", "params", "rho_net%", "acc"
+    );
+    for &x in hidden_sizes {
+        let layers = make_layers(x);
+        let netc = NetConfig::new(layers.clone());
+        let fc_params = netc.trainable_params(&netc.fc_dout());
+        let (dout, params, rho) = if fc_params <= budget {
+            // small net: run FC (densest point on its curve)
+            (None, fc_params, 1.0)
+        } else {
+            match dout_for_budget(&netc, budget, final_fc) {
+                Some(d) => {
+                    let p = netc.trainable_params(&d);
+                    let r = netc.rho_net(&d);
+                    (Some(d), p, r)
+                }
+                None => continue,
+            }
+        };
+        let (m, ci) = acc(spec, &layers, dout.as_ref(), scale);
+        println!(
+            "{:>22} {:>10} {:>9.1} {:>14}",
+            format!("{layers:?}"),
+            params,
+            rho * 100.0,
+            fmt_acc(m, ci)
+        );
+    }
+    println!("(paper: larger-and-sparser wins until a junction falls below its critical density)");
+}
+
+/// Fig. 9: MNIST, one and three hidden layers.
+pub fn run_fig9(scale: &Scale) {
+    let spec = Spec::mnist_like();
+    run_budget_table(
+        "Fig. 9(a) mnist-like, N_net = (800, x, 10)",
+        &spec,
+        &[14, 28, 56, 112],
+        |x| vec![800, x, 10],
+        11_500,
+        true,
+        scale,
+    );
+    run_budget_table(
+        "Fig. 9(b) mnist-like, N_net = (800, x, x, x, 10)",
+        &spec,
+        &[14, 28, 56, 112],
+        |x| vec![800, x, x, x, 10],
+        11_500,
+        true,
+        scale,
+    );
+}
+
+/// Fig. 10: Reuters, N_net = (2000, x, 50).
+pub fn run_fig10(scale: &Scale) {
+    let spec = Spec::reuters_like();
+    run_budget_table(
+        "Fig. 10 reuters-like, N_net = (2000, x, 50)",
+        &spec,
+        &[10, 20, 50, 100],
+        |x| vec![2000, x, 50],
+        25_000,
+        false,
+        scale,
+    );
+}
+
+/// Fig. 11: TIMIT 4-hidden-layer and the CIFAR MLP head.
+pub fn run_fig11(scale: &Scale) {
+    let timit = Spec::timit_like(39);
+    run_budget_table(
+        "Fig. 11(a) timit-like, N_net = (39, x, x, x, x, 39)",
+        &timit,
+        &[50, 100, 200, 390],
+        |x| vec![39, x, x, x, x, 39],
+        30_000,
+        false,
+        scale,
+    );
+    let cifar = Spec::cifar_features_like(true);
+    run_budget_table(
+        "Fig. 11(b) cifar-like MLP head, N_net = (4000, x, 100)",
+        &cifar,
+        &[50, 125, 250, 500],
+        |x| vec![4000, x, 100],
+        60_000,
+        false,
+        scale,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_matching_is_close() {
+        let netc = NetConfig::new(vec![800, 112, 112, 112, 10]);
+        let d = dout_for_budget(&netc, 11_500, true).unwrap();
+        let p = netc.trainable_params(&d);
+        assert!(
+            (p as f64 - 11_500.0).abs() / 11_500.0 < 0.35,
+            "params {p} far from budget"
+        );
+        // final junction kept FC
+        assert_eq!(*d.0.last().unwrap(), 10);
+    }
+}

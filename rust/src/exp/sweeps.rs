@@ -1,0 +1,129 @@
+//! Density sweeps: Fig. 6 (dataset redundancy), Fig. 7 (junction-density
+//! allocation on redundant datasets), Fig. 8 (the trend reversal on
+//! low-redundancy TIMIT variants and Reuters-400).
+
+use super::common::{dout_for_rho_net, fmt_acc, run_on_splits, Approach, Scale};
+use crate::data::Spec;
+use crate::sparsity::config::{DoutConfig, NetConfig};
+use crate::util::{ci90, mean};
+
+fn sweep_row(
+    spec: &Spec,
+    layers: &[usize],
+    dout: Option<&DoutConfig>,
+    scale: &Scale,
+) -> (f32, f32) {
+    let sc = scale.for_spec(spec);
+    let accs: Vec<f32> = (0..sc.repeats)
+        .map(|r| {
+            let splits = spec.splits(sc.n_train, 0, sc.n_test, 9000 + r as u64);
+            let approach = if dout.is_some() {
+                Approach::ClashFree
+            } else {
+                Approach::Fc
+            };
+            run_on_splits(&splits, layers, dout, approach, &sc, 31 * (r as u64 + 1)) as f32 * 100.0
+        })
+        .collect();
+    (mean(&accs), ci90(&accs))
+}
+
+/// Fig. 6: accuracy vs rho_net for original vs redundancy-modified specs.
+pub fn run_fig6(scale: &Scale) {
+    let pairs: Vec<(Vec<usize>, Vec<Spec>)> = vec![
+        (vec![800, 100, 10], vec![Spec::mnist_like()]),
+        (vec![200, 100, 10], vec![Spec::mnist_like_pca200()]),
+        (vec![2000, 50, 50], vec![Spec::reuters_like()]),
+        (vec![400, 50, 50], vec![Spec::reuters_like_400()]),
+        (vec![39, 390, 39], vec![Spec::timit_like(39)]),
+        (vec![13, 390, 39], vec![Spec::timit_like(13)]),
+        (vec![117, 390, 39], vec![Spec::timit_like(117)]),
+    ];
+    println!("Fig. 6 — accuracy vs rho_net, original vs reduced/increased redundancy");
+    let rhos = [1.0, 0.5, 0.2, 0.1, 0.05];
+    for (layers, specs) in pairs {
+        for spec in specs {
+            let netc = NetConfig::new(layers.clone());
+            print!(
+                "{:<22} (redund {:>5.1}):",
+                spec.name,
+                spec.redundancy()
+            );
+            for &rho in &rhos {
+                let dout = (rho < 1.0).then(|| dout_for_rho_net(&netc, rho));
+                let (m, _) = sweep_row(&spec, &layers, dout.as_ref(), scale);
+                print!("  rho{:>3.0}%={m:>5.1}", rho * 100.0);
+            }
+            println!();
+        }
+    }
+    println!("(paper: less redundant variants degrade more sharply as rho_net falls)");
+}
+
+/// Fig. 7: fixed rho_2 curves — reducing rho_net via junction 1 only.
+pub fn run_fig7(scale: &Scale) {
+    let cases: Vec<(Spec, Vec<usize>)> = vec![
+        (Spec::mnist_like(), vec![800, 100, 10]),
+        (Spec::reuters_like(), vec![2000, 50, 50]),
+    ];
+    println!("Fig. 7 — junction density allocation (rho_2 fixed per curve, rho_1 varies)");
+    for (spec, layers) in cases {
+        let netc = NetConfig::new(layers.clone());
+        let n2 = *layers.last().unwrap();
+        println!("\n{} N_net = {layers:?}", spec.name);
+        println!("{:>8} {:>8} {:>9} {:>14}", "rho_1%", "rho_2%", "rho_net%", "acc");
+        for rho2 in [1.0, 0.5, 0.1] {
+            let d2 = netc.junction(1).dout_for_density(rho2).max(netc.junction(1).min_dout());
+            for rho1 in [0.5, 0.1, 0.02] {
+                let d1 = netc.junction(0).dout_for_density(rho1);
+                let dout = DoutConfig(vec![d1, d2]);
+                if netc.validate_dout(&dout).is_err() {
+                    continue;
+                }
+                let (m, ci) = sweep_row(&spec, &layers, Some(&dout), scale);
+                println!(
+                    "{:>8.1} {:>8.1} {:>9.1} {:>14}",
+                    100.0 * d1 as f64 / layers[1] as f64,
+                    100.0 * d2 as f64 / n2 as f64,
+                    netc.rho_net(&dout) * 100.0,
+                    fmt_acc(m, ci)
+                );
+            }
+        }
+        println!("(paper: at equal rho_net, higher rho_2 wins on redundant datasets)");
+    }
+}
+
+/// Fig. 8: TIMIT feature-size variants + Reuters-400 — where the
+/// junction-density trend reverses.
+pub fn run_fig8(scale: &Scale) {
+    println!("Fig. 8 — low-redundancy variants: junction-1 density matters more");
+    for (spec, layers) in [
+        (Spec::timit_like(13), vec![13usize, 390, 39]),
+        (Spec::timit_like(39), vec![39, 390, 39]),
+        (Spec::timit_like(117), vec![117, 390, 39]),
+        (Spec::reuters_like_400(), vec![400, 50, 50]),
+    ] {
+        let netc = NetConfig::new(layers.clone());
+        println!("\n{} ({} features) N_net = {layers:?}", spec.name, layers[0]);
+        println!("{:>8} {:>8} {:>9} {:>14}", "rho_1%", "rho_2%", "rho_net%", "acc");
+        // complementary allocations at matched rho_net
+        for (rho1, rho2) in [(0.5, 0.05), (0.05, 0.5), (0.25, 0.25)] {
+            let d1 = netc.junction(0).dout_for_density(rho1);
+            let d2 = netc.junction(1).dout_for_density(rho2);
+            let dout = DoutConfig(vec![d1, d2]);
+            if netc.validate_dout(&dout).is_err() {
+                continue;
+            }
+            let (m, ci) = sweep_row(&spec, &layers, Some(&dout), scale);
+            println!(
+                "{:>8.1} {:>8.1} {:>9.1} {:>14}",
+                100.0 * d1 as f64 / layers[1] as f64,
+                100.0 * d2 as f64 / layers[2] as f64,
+                netc.rho_net(&dout) * 100.0,
+                fmt_acc(m, ci)
+            );
+        }
+    }
+    println!("(paper: with few input features, starving junction 1 hurts more than starving junction 2 — the Fig. 7 trend reverses)");
+}

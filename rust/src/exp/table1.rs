@@ -1,0 +1,75 @@
+//! Table I: hardware storage cost, FC vs sparse, for
+//! N_net = (800, 100, 10), d_out = (20, 10) — plus the Sec. III-A
+//! pipeline accounting harness (`pds exp pipeline`).
+
+use super::common::Scale;
+use crate::hw::pipeline::{speedup, throughput_inputs_per_sec, Pipeline};
+use crate::hw::storage::{training_storage, StorageComparison, StorageCost};
+use crate::hw::zconfig;
+use crate::sparsity::config::{DoutConfig, NetConfig};
+
+pub fn run(_scale: &Scale) {
+    let net = NetConfig::new(vec![800, 100, 10]);
+    let dout = DoutConfig(vec![20, 10]);
+    let fc = training_storage(&net, &net.fc_dout());
+    let sp = training_storage(&net, &dout);
+    println!("Table I — storage (words), N_net = (800,100,10), sparse d_out = (20,10), rho_net = {:.0}%",
+        net.rho_net(&dout) * 100.0);
+    println!("{:<12} {:>12} {:>14}", "parameter", "count (FC)", "count (sparse)");
+    let rows: [(&str, fn(&StorageCost) -> usize); 5] = [
+        ("a", |c| c.activations),
+        ("a-dot", |c| c.act_derivatives),
+        ("delta", |c| c.deltas),
+        ("b", |c| c.biases),
+        ("W", |c| c.weights),
+    ];
+    for (name, get) in rows {
+        println!("{:<12} {:>12} {:>14}", name, get(&fc), get(&sp));
+    }
+    println!("{:<12} {:>12} {:>14}", "TOTAL", fc.total(), sp.total());
+    let cmp = StorageComparison::new(&net, &dout);
+    println!(
+        "memory reduction {:.1}X (paper: 3.9X), compute reduction {:.1}X (paper: 4.8X)",
+        cmp.memory_reduction(),
+        cmp.compute_reduction()
+    );
+    println!(
+        "inference-only storage: {} words",
+        StorageCost::inference_only(&net, &dout).total()
+    );
+}
+
+pub fn run_pipeline(_scale: &Scale) {
+    println!("Sec. III-A junction pipelining / operational parallelism");
+    for l in [2usize, 4] {
+        let p = Pipeline::new(l);
+        p.audit(200).unwrap();
+        println!(
+            "L={l}: steady-state ops/junction-cycle = {} (≈3L), FF latency {} jc, train latency {} jc, speedup@1e5 inputs = {:.2}",
+            p.steady_state_ops(),
+            p.ff_latency(),
+            p.train_latency(),
+            speedup(l, 100_000)
+        );
+        for i in 1..=l {
+            println!(
+                "  junction {i}: weight staleness (FF vs BP) = {} updates; a-queue banks = {}",
+                p.staleness(i),
+                p.queue_banks(i)
+            );
+        }
+    }
+    // the initial FPGA implementation's operating point [40]
+    let net = NetConfig::new(vec![800, 100, 10]);
+    let dout = DoutConfig(vec![20, 10]);
+    let cfg = zconfig::validate(&net, &dout, &[160, 10]).unwrap();
+    println!(
+        "\n[40]-style operating point: z_net = {:?}, junction cycle C = {} cycles (+2 flush)",
+        cfg.z, cfg.junction_cycle
+    );
+    println!(
+        "throughput at 100 MHz: {:.0} inputs/s (training), idle fraction {:.1}%",
+        throughput_inputs_per_sec(100e6, cfg.junction_cycle, 2),
+        cfg.idle_fraction() * 100.0
+    );
+}

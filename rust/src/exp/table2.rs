@@ -1,0 +1,163 @@
+//! Table II: clash-free vs structured vs random pre-defined sparsity
+//! across the four dataset surrogates and density ladders, with the
+//! paper's z_net hardware configurations validated for every clash-free
+//! row. Also reports disconnected-neuron counts for the random method at
+//! low density (the Sec. IV-B blue-value failure mode).
+
+use super::common::{fmt_acc, run_on_splits, Approach, Scale};
+use crate::data::Spec;
+use crate::sparsity::config::{DoutConfig, NetConfig};
+use crate::sparsity::{generate, Method};
+use crate::util::rng::Rng;
+use crate::util::{ci90, mean};
+
+struct Block {
+    spec: Spec,
+    layers: Vec<usize>,
+    /// (d_out rows, z_net) — z_net from the paper's Table II.
+    rows: Vec<(Vec<usize>, Vec<usize>)>,
+}
+
+fn blocks(full: bool) -> Vec<Block> {
+    let mut out = vec![
+        Block {
+            spec: Spec::mnist_like(),
+            layers: vec![800, 100, 100, 100, 10],
+            rows: if full {
+                vec![
+                    (vec![80, 80, 80, 10], vec![200, 25, 25, 4]),
+                    (vec![40, 40, 40, 10], vec![200, 25, 25, 5]),
+                    (vec![20, 20, 20, 10], vec![200, 25, 25, 10]),
+                    (vec![10, 10, 10, 10], vec![200, 25, 25, 25]),
+                    (vec![2, 5, 5, 10], vec![80, 25, 25, 50]),
+                ]
+            } else {
+                vec![
+                    (vec![40, 40, 40, 10], vec![200, 25, 25, 5]),
+                    (vec![10, 10, 10, 10], vec![200, 25, 25, 25]),
+                ]
+            },
+        },
+        Block {
+            spec: Spec::reuters_like(),
+            layers: vec![2000, 50, 50],
+            rows: if full {
+                vec![
+                    (vec![25, 25], vec![1000, 25]),
+                    (vec![10, 10], vec![400, 10]),
+                    (vec![5, 5], vec![200, 5]),
+                    (vec![2, 2], vec![80, 2]),
+                    (vec![1, 1], vec![40, 1]),
+                ]
+            } else {
+                vec![(vec![10, 10], vec![400, 10]), (vec![1, 1], vec![40, 1])]
+            },
+        },
+        Block {
+            spec: Spec::timit_like(39),
+            layers: vec![39, 390, 39],
+            rows: if full {
+                vec![
+                    (vec![270, 27], vec![13, 13]),
+                    (vec![90, 9], vec![13, 13]),
+                    (vec![30, 3], vec![13, 13]),
+                ]
+            } else {
+                vec![(vec![90, 9], vec![13, 13])]
+            },
+        },
+    ];
+    if full {
+        out.push(Block {
+            spec: Spec::cifar_features_like(true),
+            layers: vec![4000, 500, 100],
+            rows: vec![
+                (vec![100, 100], vec![2000, 250]),
+                (vec![12, 12], vec![400, 50]),
+                (vec![2, 2], vec![80, 10]),
+            ],
+        });
+    }
+    out
+}
+
+pub fn run(scale: &Scale) {
+    run_with(scale, scale.repeats > 2)
+}
+
+pub fn run_with(scale: &Scale, full: bool) {
+    for block in blocks(full) {
+        let netc = NetConfig::new(block.layers.clone());
+        println!(
+            "\nTable II — {}: N_net = {:?}",
+            block.spec.name, block.layers
+        );
+        println!(
+            "{:<20} {:>8} {:>18} {:>14} {:>14} {:>14} {:>10}",
+            "d_out", "rho%", "z_net(junction C)", "clash-free", "structured", "random", "disc.n"
+        );
+        // FC reference row
+        let sc = scale.for_spec(&block.spec);
+        let fc_accs: Vec<f32> = (0..sc.repeats.min(2))
+            .map(|r| {
+                let splits = block.spec.splits(sc.n_train, 0, sc.n_test, 5000 + r as u64);
+                run_on_splits(&splits, &block.layers, None, Approach::Fc, &sc, 50 + r as u64) as f32
+                    * 100.0
+            })
+            .collect();
+        println!(
+            "{:<20} {:>8} {:>18} {:>14}",
+            "FC",
+            "100",
+            "-",
+            fmt_acc(mean(&fc_accs), ci90(&fc_accs))
+        );
+
+        for (dout_v, znet) in &block.rows {
+            let dout = DoutConfig(dout_v.clone());
+            netc.validate_dout(&dout).expect("paper row must be admissible");
+            // validate the paper's hardware z_net for this row
+            let zcfg = crate::hw::zconfig::validate(&netc, &dout, znet)
+                .unwrap_or_else(|e| panic!("paper z_net {znet:?} invalid: {e}"));
+            let rho = netc.rho_net(&dout) * 100.0;
+
+            let mut cells: Vec<String> = Vec::new();
+            let mut disconnected = 0usize;
+            for approach in [Approach::ClashFree, Approach::Structured, Approach::Random] {
+                let accs: Vec<f32> = (0..sc.repeats)
+                    .map(|r| {
+                        let splits =
+                            block.spec.splits(sc.n_train, 0, sc.n_test, 5000 + r as u64);
+                        run_on_splits(
+                            &splits,
+                            &block.layers,
+                            Some(&dout),
+                            approach,
+                            &sc,
+                            100 + 13 * r as u64,
+                        ) as f32
+                            * 100.0
+                    })
+                    .collect();
+                cells.push(fmt_acc(mean(&accs), ci90(&accs)));
+                if approach == Approach::Random {
+                    let mut rng = Rng::new(77);
+                    let p = generate(Method::Random, &netc, &dout, None, &mut rng);
+                    disconnected = p.disconnected_neurons();
+                }
+            }
+            println!(
+                "{:<20} {:>8.1} {:>13?}({:>3}) {:>14} {:>14} {:>14} {:>10}",
+                DoutConfig(dout_v.clone()).show(),
+                rho,
+                znet,
+                zcfg.junction_cycle,
+                cells[0],
+                cells[1],
+                cells[2],
+                disconnected
+            );
+        }
+    }
+    println!("\n(paper: clash-free ≈ structured ≈ random at moderate density; random degrades at the lowest densities via disconnected neurons)");
+}

@@ -1,0 +1,62 @@
+//! Table III / Appendix C: count of clash-free left-memory access patterns
+//! |S_Mi| and the address-generation storage cost for types 1-3, with and
+//! without memory dithering, on the paper's (12, 12, 2, 2, 4) junction.
+
+use super::common::Scale;
+use crate::sparsity::clash_free::{address_storage_cost, pattern_space, Flavor};
+use crate::sparsity::config::JunctionShape;
+
+fn fmt_count(log10: f64, exact: Option<u128>) -> String {
+    match exact {
+        Some(v) if v < 10_000 => format!("{v}"),
+        Some(v) if v < 1_000_000 => format!("{:.0}k", v as f64 / 1e3),
+        Some(v) if v < 1_000_000_000 => format!("{:.2}M", v as f64 / 1e6),
+        _ => format!("1e{log10:.1}"),
+    }
+}
+
+pub fn run(_scale: &Scale) {
+    println!("Table III — clash-free pattern spaces, junction (N_l, N_r, d_out, d_in, z) = (12, 12, 2, 2, 4)");
+    println!(
+        "{:<8} {:>8} {:>12} {:>24}",
+        "type", "dither", "|S_Mi|", "addr storage (words)"
+    );
+    let shape = JunctionShape { n_left: 12, n_right: 12 };
+    let flavors = [
+        Flavor::Type1 { dither: false },
+        Flavor::Type1 { dither: true },
+        Flavor::Type2 { dither: false },
+        Flavor::Type2 { dither: true },
+        Flavor::Type3 { dither: false },
+        Flavor::Type3 { dither: true },
+    ];
+    for f in flavors {
+        let space = pattern_space(shape, 2, 4, f);
+        let (t, d) = match f {
+            Flavor::Type1 { dither } => (1, dither),
+            Flavor::Type2 { dither } => (2, dither),
+            Flavor::Type3 { dither } => (3, dither),
+        };
+        println!(
+            "{:<8} {:>8} {:>12} {:>24}",
+            t,
+            if d { "yes" } else { "no" },
+            fmt_count(space.log10, space.exact),
+            address_storage_cost(shape, 2, 4, f)
+        );
+    }
+
+    // a production-sized junction for perspective (Table II MNIST row)
+    println!("\nSame accounting for the MNIST junction (800, 100, d_out=20, d_in=160, z=200):");
+    let big = JunctionShape { n_left: 800, n_right: 100 };
+    for f in [Flavor::Type1 { dither: false }, Flavor::Type3 { dither: true }] {
+        let space = pattern_space(big, 20, 200, f);
+        println!(
+            "  {:<16} |S_Mi| ~ 1e{:.0}, storage {} words{}",
+            format!("{f:?}"),
+            space.log10,
+            address_storage_cost(big, 20, 200, f),
+            if space.is_exact_formula { "" } else { " (upper bound)" }
+        );
+    }
+}

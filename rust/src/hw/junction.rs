@@ -1,0 +1,518 @@
+//! Numeric, cycle-accurate execution of one junction's FF / BP / UP
+//! (Sec. III-B, Fig. 3/4) against banked memories.
+//!
+//! Layout contract (Fig. 4):
+//! - weights: edge `e` (numbered sequentially by right neuron) lives in
+//!   weight memory `e % z` at address `e / z`; read in natural order, one
+//!   row (z edges) per cycle; the bank is simple dual-ported so UP can
+//!   write back while the shared read feeds all three operations,
+//! - left activations / a-dot / left deltas: neuron `n` at memory `n % z`
+//!   address `n / z`, accessed in *interleaved* order via the clash-free
+//!   [`AccessSchedule`],
+//! - right-side parameters: neuron `j` at memory `j % z_next`; at most
+//!   `ceil(z / d_in)` right neurons are touched per cycle (Sec. III-B),
+//!   which `z_next` must cover (eq. 9).
+
+use crate::hw::memory::{Bank, Clash, Port};
+use crate::sparsity::clash_free::AccessSchedule;
+use crate::sparsity::config::JunctionShape;
+use crate::sparsity::pattern::Pattern;
+use crate::util::ceil_div;
+
+/// Activation applied by the FF logic as right neurons complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Linear,
+}
+
+impl Act {
+    pub fn apply(&self, h: f32) -> f32 {
+        match self {
+            Act::Relu => h.max(0.0),
+            Act::Linear => h,
+        }
+    }
+
+    pub fn derivative(&self, h: f32) -> f32 {
+        match self {
+            Act::Relu => {
+                if h > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Linear => 1.0,
+        }
+    }
+}
+
+/// Cycle/access statistics for one operation pass.
+#[derive(Clone, Debug, Default)]
+pub struct OpStats {
+    pub cycles: usize,
+    pub weight_reads: usize,
+    pub weight_writes: usize,
+    pub left_reads: usize,
+    pub right_accesses: usize,
+    pub max_rights_per_cycle: usize,
+}
+
+/// FF outputs: pre-activations, activations and their derivatives
+/// (eq. 2a-2c), plus the pass statistics.
+#[derive(Clone, Debug)]
+pub struct FfOut {
+    pub h: Vec<f32>,
+    pub a: Vec<f32>,
+    pub adot: Vec<f32>,
+    pub stats: OpStats,
+}
+
+/// One junction's processing unit: `z` edge processors, the weight bank,
+/// and the clash-free left access schedule.
+pub struct JunctionUnit {
+    pub shape: JunctionShape,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub z: usize,
+    pub z_next: usize,
+    pub junction_cycle: usize,
+    sched: AccessSchedule,
+    weights: Bank,
+}
+
+impl JunctionUnit {
+    /// Exact number of distinct right neurons any single cycle touches:
+    /// `ceil(z/d_in)` when the d_in-edge groups align with cycle
+    /// boundaries (z | d_in or d_in | z), one more when a group straddles
+    /// a boundary (footnote 5 / Appendix B: practical designs pick
+    /// integral ratios precisely to avoid this extra port).
+    pub fn required_z_next(n_edges: usize, z: usize, d_in: usize) -> usize {
+        let mut max_rights = 1;
+        for t in 0..n_edges / z {
+            let first = (t * z) / d_in;
+            let last = ((t + 1) * z - 1) / d_in;
+            max_rights = max_rights.max(last - first + 1);
+        }
+        max_rights
+    }
+
+    /// Build from a clash-free access schedule. `z_next` is the right
+    /// bank's parallelism (z of the next junction, or any value >=
+    /// [`Self::required_z_next`] for the output layer).
+    pub fn new(shape: JunctionShape, d_in: usize, sched: AccessSchedule, z_next: usize) -> Self {
+        let n_edges = shape.n_right * d_in;
+        let z = sched.z;
+        assert_eq!(n_edges % z, 0, "z must divide |W|");
+        let junction_cycle = n_edges / z;
+        assert_eq!(sched.cycles.len(), junction_cycle, "schedule covers one junction cycle");
+        let d_out = n_edges / shape.n_left;
+        let need = Self::required_z_next(n_edges, z, d_in);
+        assert!(
+            z_next >= need,
+            "z_next {z_next} violates the right-bank bound {need} (eq. 9)"
+        );
+        let weights = Bank::new("W", z, junction_cycle, Port::SimpleDual);
+        Self {
+            shape,
+            d_in,
+            d_out,
+            z,
+            z_next,
+            junction_cycle,
+            sched,
+            weights,
+        }
+    }
+
+    /// The connection pattern this unit implements.
+    pub fn pattern(&self) -> Pattern {
+        let mut in_edges: Vec<Vec<u32>> = vec![Vec::with_capacity(self.d_in); self.shape.n_right];
+        for t in 0..self.junction_cycle {
+            for m in 0..self.z {
+                let e = t * self.z + m;
+                in_edges[e / self.d_in].push(self.sched.neuron(t, m) as u32);
+            }
+        }
+        Pattern { shape: self.shape, in_edges }
+    }
+
+    /// Load weights from a dense row-major [n_right, n_left] matrix
+    /// (host DMA; untimed).
+    pub fn load_weights_dense(&mut self, dense: &[f32]) {
+        assert_eq!(dense.len(), self.shape.n_right * self.shape.n_left);
+        let mut flat = vec![0f32; self.shape.n_right * self.d_in];
+        for t in 0..self.junction_cycle {
+            for m in 0..self.z {
+                let e = t * self.z + m;
+                let j = e / self.d_in;
+                let k = self.sched.neuron(t, m);
+                flat[e] = dense[j * self.shape.n_left + k];
+            }
+        }
+        self.load_weights_edge_order(&flat);
+    }
+
+    /// Load weights already in edge order (the compacted Fig. 4 layout).
+    pub fn load_weights_edge_order(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.shape.n_right * self.d_in);
+        self.weights.load(flat);
+    }
+
+    /// Dump weights to dense row-major [n_right, n_left] (untimed).
+    pub fn dump_weights_dense(&self) -> Vec<f32> {
+        let flat = self.weights.dump(self.shape.n_right * self.d_in);
+        let mut dense = vec![0f32; self.shape.n_right * self.shape.n_left];
+        for t in 0..self.junction_cycle {
+            for m in 0..self.z {
+                let e = t * self.z + m;
+                let j = e / self.d_in;
+                let k = self.sched.neuron(t, m);
+                dense[j * self.shape.n_left + k] = flat[e];
+            }
+        }
+        dense
+    }
+
+    /// Feedforward (eq. 2): one junction cycle, `z` edges per clock.
+    pub fn feedforward(&mut self, a_prev: &[f32], bias: &[f32], act: Act) -> Result<FfOut, Clash> {
+        assert_eq!(a_prev.len(), self.shape.n_left);
+        assert_eq!(bias.len(), self.shape.n_right);
+        let mut left = Bank::new("a", self.z, self.sched.depth, Port::Single);
+        left.load(a_prev);
+        let mut right = Bank::new("a'", self.z_next, ceil_div(self.shape.n_right, self.z_next), Port::Single);
+
+        let mut acc = vec![0f32; self.shape.n_right];
+        let mut cnt = vec![0usize; self.shape.n_right];
+        let mut h = vec![0f32; self.shape.n_right];
+        let mut adot = vec![0f32; self.shape.n_right];
+        let mut stats = OpStats::default();
+
+        for t in 0..self.junction_cycle {
+            let mut completed: Vec<usize> = Vec::new();
+            for m in 0..self.z {
+                let e = t * self.z + m;
+                let j = e / self.d_in;
+                let (wm, wa) = (e % self.z, e / self.z);
+                let w = self.weights.read(wm, wa)?;
+                let (lm, la) = self.sched.cycles[t][m];
+                let a = left.read(lm, la)?;
+                acc[j] += w * a;
+                cnt[j] += 1;
+                if cnt[j] == self.d_in {
+                    completed.push(j);
+                }
+            }
+            // completed right neurons: apply bias + activation, write bank
+            for &j in &completed {
+                let hv = acc[j] + bias[j];
+                h[j] = hv;
+                adot[j] = act.derivative(hv);
+                right.write_entity(j, act.apply(hv))?;
+            }
+            stats.max_rights_per_cycle = stats.max_rights_per_cycle.max(completed.len());
+            self.weights.tick();
+            left.tick();
+            right.tick();
+            stats.cycles += 1;
+        }
+        debug_assert!(cnt.iter().all(|&c| c == self.d_in));
+        stats.weight_reads = self.junction_cycle * self.z;
+        stats.left_reads = self.junction_cycle * self.z;
+        stats.right_accesses = self.shape.n_right;
+        let a_out = right.dump(self.shape.n_right);
+        Ok(FfOut { h, a: a_out, adot, stats })
+    }
+
+    /// Backprop (eq. 3b): compute delta for the *left* layer from the right
+    /// layer's delta, folding the a-dot multiply into the final sweep.
+    pub fn backprop(
+        &mut self,
+        delta_right: &[f32],
+        adot_left: &[f32],
+    ) -> Result<(Vec<f32>, OpStats), Clash> {
+        assert_eq!(delta_right.len(), self.shape.n_right);
+        assert_eq!(adot_left.len(), self.shape.n_left);
+        // left delta partials: dual-ported (footnote 4) for read-modify-write
+        let mut dleft = Bank::new("d", self.z, self.sched.depth, Port::SimpleDual);
+        dleft.load(&vec![0f32; self.shape.n_left]);
+        let mut adot_bank = Bank::new("adot", self.z, self.sched.depth, Port::Single);
+        adot_bank.load(adot_left);
+        let mut dright = Bank::new("d'", self.z_next, ceil_div(self.shape.n_right, self.z_next), Port::SimpleDual);
+        dright.load(delta_right);
+        let mut stats = OpStats::default();
+
+        // read-modify-write accumulators kept in registers per lane; the
+        // delta bank is written once per (neuron, sweep) — model the
+        // accumulate in host f32 and count one read + one write per access,
+        // which is what the dual-ported delta memories provide.
+        let mut partial = vec![0f32; self.shape.n_left];
+        for t in 0..self.junction_cycle {
+            let sweep = t / self.sched.depth;
+            let last_sweep = sweep == self.d_out - 1;
+            // distinct right neurons whose delta feeds this cycle (a single
+            // read per memory, broadcast to the lanes that need it)
+            let mut rights: Vec<usize> = (0..self.z)
+                .map(|m| (t * self.z + m) / self.d_in)
+                .collect();
+            rights.dedup();
+            stats.max_rights_per_cycle = stats.max_rights_per_cycle.max(rights.len());
+            let mut dvals = std::collections::BTreeMap::new();
+            for &j in &rights {
+                dvals.insert(j, dright.read_entity(j)?);
+                stats.right_accesses += 1;
+            }
+            for m in 0..self.z {
+                let e = t * self.z + m;
+                let j = e / self.d_in;
+                let (wm, wa) = (e % self.z, e / self.z);
+                let w = self.weights.read(wm, wa)?;
+                let (lm, la) = self.sched.cycles[t][m];
+                let k = la * self.z + lm;
+                // dual-port RMW: one read + one write on the delta memory
+                let prev = if sweep == 0 {
+                    0.0
+                } else {
+                    let stored = dleft.read(lm, la)?;
+                    debug_assert!((stored - partial[k]).abs() < 1e-6);
+                    partial[k]
+                };
+                let mut next = prev + w * dvals[&j];
+                if last_sweep {
+                    // fold eq. (3b)'s a-dot product into the final write
+                    let ad = adot_bank.read(lm, la)?;
+                    next *= ad;
+                }
+                partial[k] = next;
+                dleft.write(lm, la, next)?;
+            }
+            self.weights.tick();
+            dleft.tick();
+            adot_bank.tick();
+            dright.tick();
+            stats.cycles += 1;
+        }
+        stats.weight_reads = self.junction_cycle * self.z;
+        stats.left_reads = self.junction_cycle * self.z;
+        let out = dleft.dump(self.shape.n_left);
+        Ok((out, stats))
+    }
+
+    /// Update (eq. 4): stochastic gradient step on weights (in the weight
+    /// bank, via its write port) and biases, using the *queued* left
+    /// activations of the input being updated.
+    pub fn update(
+        &mut self,
+        a_prev_old: &[f32],
+        delta_right: &[f32],
+        bias: &mut [f32],
+        lr: f32,
+    ) -> Result<OpStats, Clash> {
+        assert_eq!(a_prev_old.len(), self.shape.n_left);
+        assert_eq!(delta_right.len(), self.shape.n_right);
+        let mut left = Bank::new("a_q", self.z, self.sched.depth, Port::Single);
+        left.load(a_prev_old);
+        let mut dright = Bank::new("d'", self.z_next, ceil_div(self.shape.n_right, self.z_next), Port::SimpleDual);
+        dright.load(delta_right);
+        let mut stats = OpStats::default();
+        let mut cnt = vec![0usize; self.shape.n_right];
+
+        for t in 0..self.junction_cycle {
+            let mut rights: Vec<usize> = (0..self.z)
+                .map(|m| (t * self.z + m) / self.d_in)
+                .collect();
+            rights.dedup();
+            stats.max_rights_per_cycle = stats.max_rights_per_cycle.max(rights.len());
+            let mut dvals = std::collections::BTreeMap::new();
+            for &j in &rights {
+                dvals.insert(j, dright.read_entity(j)?);
+                stats.right_accesses += 1;
+            }
+            for m in 0..self.z {
+                let e = t * self.z + m;
+                let j = e / self.d_in;
+                let (wm, wa) = (e % self.z, e / self.z);
+                let w = self.weights.read(wm, wa)?;
+                let (lm, la) = self.sched.cycles[t][m];
+                let a = left.read(lm, la)?;
+                // eq. (4b): dual-port write-back in the same cycle
+                self.weights.write(wm, wa, w - lr * dvals[&j] * a)?;
+                cnt[j] += 1;
+                if cnt[j] == self.d_in {
+                    // eq. (4a), once per right neuron as it completes
+                    bias[j] -= lr * dvals[&j];
+                }
+            }
+            self.weights.tick();
+            left.tick();
+            dright.tick();
+            stats.cycles += 1;
+        }
+        stats.weight_reads = self.junction_cycle * self.z;
+        stats.weight_writes = self.junction_cycle * self.z;
+        stats.left_reads = self.junction_cycle * self.z;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::clash_free::{schedule, Flavor};
+    use crate::util::rng::Rng;
+
+    fn reference_ff(p: &Pattern, w: &[f32], a: &[f32], bias: &[f32]) -> Vec<f32> {
+        let nl = p.shape.n_left;
+        (0..p.shape.n_right)
+            .map(|j| {
+                p.in_edges[j]
+                    .iter()
+                    .map(|&k| w[j * nl + k as usize] * a[k as usize])
+                    .sum::<f32>()
+                    + bias[j]
+            })
+            .collect()
+    }
+
+    fn setup(nl: usize, nr: usize, d_out: usize, z: usize, seed: u64) -> (JunctionUnit, Vec<f32>) {
+        let shape = JunctionShape { n_left: nl, n_right: nr };
+        let d_in = nl * d_out / nr;
+        let mut rng = Rng::new(seed);
+        let sched = schedule(nl, z, d_out, Flavor::Type1 { dither: false }, &mut rng);
+        let z_next = JunctionUnit::required_z_next(nr * d_in, z, d_in);
+        let mut unit = JunctionUnit::new(shape, d_in, sched, z_next);
+        let dense: Vec<f32> = (0..nr * nl).map(|_| rng.normal()).collect();
+        unit.load_weights_dense(&dense);
+        (unit, dense)
+    }
+
+    #[test]
+    fn ff_matches_reference_and_counts_cycles() {
+        for (nl, nr, dout, z) in [(12, 8, 2, 4), (800, 100, 20, 200), (40, 10, 2, 8)] {
+            let (mut unit, dense) = setup(nl, nr, dout, z, 1);
+            let mut rng = Rng::new(2);
+            let a: Vec<f32> = (0..nl).map(|_| rng.normal()).collect();
+            let bias: Vec<f32> = (0..nr).map(|_| rng.normal()).collect();
+            let out = unit.feedforward(&a, &bias, Act::Relu).unwrap();
+            let pattern = unit.pattern();
+            pattern.audit().unwrap();
+            // masked dense weights equal what the unit dumped
+            let masked: Vec<f32> = {
+                let m = pattern.mask();
+                dense.iter().zip(&m).map(|(w, mm)| w * mm).collect()
+            };
+            let want_h = reference_ff(&pattern, &masked, &a, &bias);
+            for (g, w) in out.h.iter().zip(&want_h) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w} at ({nl},{nr},{dout},{z})");
+            }
+            for (j, (av, hv)) in out.a.iter().zip(&out.h).enumerate() {
+                assert_eq!(*av, hv.max(0.0), "act mismatch at {j}");
+                assert_eq!(out.adot[j], if *hv > 0.0 { 1.0 } else { 0.0 });
+            }
+            assert_eq!(out.stats.cycles, nl * dout / z);
+            assert!(out.stats.max_rights_per_cycle <= unit.z_next);
+        }
+    }
+
+    #[test]
+    fn bp_matches_reference() {
+        let (mut unit, dense) = setup(24, 12, 3, 8, 3);
+        let pattern = unit.pattern();
+        let mask = pattern.mask();
+        let mut rng = Rng::new(4);
+        let dr: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let adot: Vec<f32> = (0..24).map(|_| if rng.uniform() > 0.5 { 1.0 } else { 0.0 }).collect();
+        let (dl, stats) = unit.backprop(&dr, &adot).unwrap();
+        // reference: dl[k] = adot[k] * sum_j mask[j,k] w[j,k] dr[j]
+        for k in 0..24 {
+            let want: f32 = (0..12)
+                .map(|j| mask[j * 24 + k] * dense[j * 24 + k] * dr[j])
+                .sum::<f32>()
+                * adot[k];
+            assert!((dl[k] - want).abs() < 1e-4, "k={k}: {} vs {want}", dl[k]);
+        }
+        assert_eq!(stats.cycles, unit.junction_cycle);
+    }
+
+    #[test]
+    fn up_matches_reference_sgd() {
+        let (mut unit, dense) = setup(24, 12, 3, 8, 5);
+        let pattern = unit.pattern();
+        let mask = pattern.mask();
+        let mut rng = Rng::new(6);
+        let a_old: Vec<f32> = (0..24).map(|_| rng.normal()).collect();
+        let dr: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let mut bias: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let bias0 = bias.clone();
+        let lr = 0.05;
+        unit.update(&a_old, &dr, &mut bias, lr).unwrap();
+        let got = unit.dump_weights_dense();
+        for j in 0..12 {
+            for k in 0..24 {
+                let idx = j * 24 + k;
+                let want = if mask[idx] == 1.0 {
+                    dense[idx] - lr * dr[j] * a_old[k]
+                } else {
+                    0.0
+                };
+                assert!((got[idx] - want).abs() < 1e-5, "({j},{k}): {} vs {want}", got[idx]);
+            }
+            assert!((bias[j] - (bias0[j] - lr * dr[j])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn excluded_edges_never_touched() {
+        // hardware stores only connected edges: dump of a sparse unit has
+        // zeros exactly off-pattern
+        let (mut unit, _) = setup(40, 10, 2, 8, 7);
+        let pattern = unit.pattern();
+        let mask = pattern.mask();
+        let mut rng = Rng::new(8);
+        for _ in 0..3 {
+            let a: Vec<f32> = (0..40).map(|_| rng.normal()).collect();
+            let dr: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+            let mut bias = vec![0f32; 10];
+            unit.update(&a, &dr, &mut bias, 0.1).unwrap();
+        }
+        let w = unit.dump_weights_dense();
+        for (idx, (wv, mv)) in w.iter().zip(&mask).enumerate() {
+            if *mv == 0.0 {
+                assert_eq!(*wv, 0.0, "excluded edge {idx} modified");
+            }
+        }
+    }
+
+    #[test]
+    fn fc_junction_flexibility() {
+        // Sec. III-E: same junction FC with the same z takes d_in/z-fold
+        // longer; with bigger z, the same junction cycle.
+        let shape = JunctionShape { n_left: 12, n_right: 8 };
+        let mut rng = Rng::new(9);
+        let sched_small = schedule(12, 4, 8, Flavor::Type1 { dither: false }, &mut rng);
+        let unit_small = JunctionUnit::new(shape, 12, sched_small, 1);
+        assert_eq!(unit_small.junction_cycle, 24);
+        let mut rng2 = Rng::new(10);
+        let sched_big = schedule(12, 4, 2, Flavor::Type1 { dither: false }, &mut rng2);
+        let unit_sparse = JunctionUnit::new(shape, 3, sched_big, 2);
+        assert_eq!(unit_sparse.junction_cycle, 6);
+    }
+
+    #[test]
+    fn weight_roundtrip_dense() {
+        let (mut unit, dense) = setup(12, 8, 2, 4, 11);
+        let mask = unit.pattern().mask();
+        let got = unit.dump_weights_dense();
+        for i in 0..dense.len() {
+            let want = dense[i] * mask[i];
+            assert!((got[i] - want).abs() < 1e-6);
+        }
+        // edge-order load roundtrip
+        let flat: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        unit.load_weights_edge_order(&flat);
+        let dense2 = unit.dump_weights_dense();
+        let flat2 = unit.pattern().compact_weights(&dense2);
+        assert_eq!(flat, flat2);
+    }
+}

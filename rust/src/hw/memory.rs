@@ -1,0 +1,255 @@
+//! Memory and bank models with clash detection.
+//!
+//! Footnote 6 of the paper defines clashes: for single-ported memories any
+//! two operations in a cycle clash; for simple dual-ported memories (one
+//! read port + one write port) a read and a write may share a cycle but
+//! two reads or two writes clash.
+
+/// Port discipline of a memory (footnote 4: weight and delta memories are
+/// simple dual-ported; a and a-dot memories are single-ported).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Port {
+    Single,
+    SimpleDual,
+}
+
+/// One memory (a BRAM column in Fig. 2b / Fig. 4).
+#[derive(Clone, Debug)]
+pub struct Memory {
+    pub port: Port,
+    data: Vec<f32>,
+    reads_this_cycle: usize,
+    writes_this_cycle: usize,
+}
+
+/// Error raised when an access pattern violates the port discipline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Clash {
+    pub memory: usize,
+    pub cycle: usize,
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for Clash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "clash on memory {} at cycle {}: {}", self.memory, self.cycle, self.what)
+    }
+}
+
+impl Memory {
+    pub fn new(depth: usize, port: Port) -> Self {
+        Self {
+            port,
+            data: vec![0.0; depth],
+            reads_this_cycle: 0,
+            writes_this_cycle: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.data.len()
+    }
+
+    fn check_read(&self) -> Result<(), &'static str> {
+        match self.port {
+            Port::Single if self.reads_this_cycle + self.writes_this_cycle >= 1 => {
+                Err("second access to single-ported memory")
+            }
+            Port::SimpleDual if self.reads_this_cycle >= 1 => {
+                Err("second read on dual-ported memory")
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn check_write(&self) -> Result<(), &'static str> {
+        match self.port {
+            Port::Single if self.reads_this_cycle + self.writes_this_cycle >= 1 => {
+                Err("second access to single-ported memory")
+            }
+            Port::SimpleDual if self.writes_this_cycle >= 1 => {
+                Err("second write on dual-ported memory")
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// A bank of `z` memories accessed in parallel each cycle (Fig. 2b).
+/// Tracks the cycle counter and enforces clash-freedom on every access.
+#[derive(Clone, Debug)]
+pub struct Bank {
+    pub name: &'static str,
+    mems: Vec<Memory>,
+    cycle: usize,
+    pub total_reads: usize,
+    pub total_writes: usize,
+    pub max_accesses_in_cycle: usize,
+    accesses_this_cycle: usize,
+}
+
+impl Bank {
+    pub fn new(name: &'static str, z: usize, depth: usize, port: Port) -> Self {
+        Self {
+            name,
+            mems: (0..z).map(|_| Memory::new(depth, port)).collect(),
+            cycle: 0,
+            total_reads: 0,
+            total_writes: 0,
+            max_accesses_in_cycle: 0,
+            accesses_this_cycle: 0,
+        }
+    }
+
+    pub fn z(&self) -> usize {
+        self.mems.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.mems[0].depth()
+    }
+
+    pub fn cycle(&self) -> usize {
+        self.cycle
+    }
+
+    /// Advance to the next clock cycle (resets per-cycle access tracking).
+    pub fn tick(&mut self) {
+        self.max_accesses_in_cycle = self.max_accesses_in_cycle.max(self.accesses_this_cycle);
+        self.accesses_this_cycle = 0;
+        for m in &mut self.mems {
+            m.reads_this_cycle = 0;
+            m.writes_this_cycle = 0;
+        }
+        self.cycle += 1;
+    }
+
+    pub fn read(&mut self, mem: usize, addr: usize) -> Result<f32, Clash> {
+        let m = &mut self.mems[mem];
+        m.check_read().map_err(|what| Clash {
+            memory: mem,
+            cycle: self.cycle,
+            what,
+        })?;
+        m.reads_this_cycle += 1;
+        self.total_reads += 1;
+        self.accesses_this_cycle += 1;
+        Ok(m.data[addr])
+    }
+
+    pub fn write(&mut self, mem: usize, addr: usize, v: f32) -> Result<(), Clash> {
+        let m = &mut self.mems[mem];
+        m.check_write().map_err(|what| Clash {
+            memory: mem,
+            cycle: self.cycle,
+            what,
+        })?;
+        m.writes_this_cycle += 1;
+        m.data[addr] = v;
+        self.total_writes += 1;
+        self.accesses_this_cycle += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Neuron-indexed helpers: value for entity `n` lives in memory `n % z`
+    // at address `n / z` (the Fig. 4 layout, used for both neurons and
+    // sequentially-numbered edges).
+    // ------------------------------------------------------------------
+
+    pub fn location_of(&self, n: usize) -> (usize, usize) {
+        (n % self.z(), n / self.z())
+    }
+
+    pub fn read_entity(&mut self, n: usize) -> Result<f32, Clash> {
+        let (m, a) = self.location_of(n);
+        self.read(m, a)
+    }
+
+    pub fn write_entity(&mut self, n: usize, v: f32) -> Result<(), Clash> {
+        let (m, a) = self.location_of(n);
+        self.write(m, a, v)
+    }
+
+    /// Bulk-load contents outside of timed simulation (e.g. DMA from host).
+    pub fn load(&mut self, values: &[f32]) {
+        assert!(values.len() <= self.z() * self.depth());
+        for (n, &v) in values.iter().enumerate() {
+            let (m, a) = self.location_of(n);
+            self.mems[m].data[a] = v;
+        }
+    }
+
+    /// Dump contents (entity-ordered) outside of timed simulation.
+    pub fn dump(&self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let (m, a) = self.location_of(i);
+                self.mems[m].data[a]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_port_clash_rules() {
+        let mut b = Bank::new("a", 2, 4, Port::Single);
+        assert!(b.read(0, 0).is_ok());
+        assert!(b.read(0, 1).is_err(), "two reads clash");
+        assert!(b.read(1, 0).is_ok(), "other memory fine");
+        b.tick();
+        assert!(b.write(0, 0, 1.0).is_ok());
+        assert!(b.read(0, 0).is_err(), "read after write clashes on single port");
+    }
+
+    #[test]
+    fn dual_port_allows_read_plus_write() {
+        let mut b = Bank::new("w", 1, 4, Port::SimpleDual);
+        assert!(b.read(0, 0).is_ok());
+        assert!(b.write(0, 1, 2.0).is_ok(), "1R+1W legal on simple dual port");
+        assert!(b.read(0, 2).is_err(), "second read clashes");
+        assert!(b.write(0, 3, 1.0).is_err(), "second write clashes");
+        b.tick();
+        assert_eq!(b.read(0, 1).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn entity_layout_matches_fig4() {
+        // neuron n -> memory n % z, address n / z; Fig. 2b: with z=4,
+        // address row 1 of memory 0 holds neuron 4.
+        let mut b = Bank::new("a", 4, 3, Port::Single);
+        b.load(&(0..12).map(|x| x as f32).collect::<Vec<_>>());
+        assert_eq!(b.location_of(4), (0, 1));
+        assert_eq!(b.read_entity(4).unwrap(), 4.0);
+        b.tick();
+        assert_eq!(b.read_entity(11).unwrap(), 11.0);
+        assert_eq!(b.location_of(11), (3, 2));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut b = Bank::new("w", 2, 2, Port::SimpleDual);
+        b.read(0, 0).unwrap();
+        b.read(1, 0).unwrap();
+        b.write(0, 1, 1.0).unwrap();
+        b.tick();
+        b.read(0, 1).unwrap();
+        b.tick();
+        assert_eq!(b.total_reads, 3);
+        assert_eq!(b.total_writes, 1);
+        assert_eq!(b.cycle(), 2);
+        assert_eq!(b.max_accesses_in_cycle, 3);
+    }
+
+    #[test]
+    fn dump_roundtrip() {
+        let mut b = Bank::new("a", 3, 4, Port::Single);
+        let vals: Vec<f32> = (0..10).map(|x| x as f32 * 0.5).collect();
+        b.load(&vals);
+        assert_eq!(b.dump(10), vals);
+    }
+}

@@ -1,0 +1,19 @@
+//! Cycle-accurate simulator of the paper's edge-based hardware
+//! architecture (Sec. III) — the substitution for the authors' FPGA
+//! implementation [40] (see DESIGN.md §Substitutions).
+//!
+//! - [`memory`]: single/dual-port memories and banks with per-cycle clash
+//!   detection (footnote 6's definition of a clash),
+//! - [`zconfig`]: degree-of-parallelism selection, the `C_i = |W_i|/z_i = C`
+//!   balance rule and the eq. (9) stall-freedom constraint,
+//! - [`junction`]: numeric FF / BP / UP execution of one junction against
+//!   the banked memories, replaying the clash-free access schedule,
+//! - [`pipeline`]: L-stage junction pipelining + FF/BP/UP operational
+//!   parallelism (Fig. 2c), throughput/latency/staleness accounting,
+//! - [`storage`]: the Table-I storage cost model.
+
+pub mod junction;
+pub mod memory;
+pub mod pipeline;
+pub mod storage;
+pub mod zconfig;

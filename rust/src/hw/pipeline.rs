@@ -1,0 +1,272 @@
+//! Junction pipelining + operational parallelism (Sec. III-A, Fig. 2c).
+//!
+//! At junction-cycle granularity, input `n` flows through the schedule
+//!   FF_i(n)  at tau = n + i                      (i = 1..L)
+//!   BP_i(n)  at tau = n + 2L - i + 1             (i = 2..L; BP_1 does not
+//!                                                 exist, footnote 3)
+//!   UP_i(n)  at tau = n + 2L - i + 1             (i = 1..L)
+//! which reproduces the Fig. 2c timeline (for L = 2: at the tau where
+//! junction 1 runs FF(n+2), junction 2 runs FF(n+1), BP(n) and UP(n), and
+//! junction 1 runs UP(n-1)).
+//!
+//! The scheduler also derives the *weight staleness* of Sec. III-D: FF_i
+//! reads weights 2(L-i)+1 updates older than the ones BP_i reads for the
+//! same input — which is exactly the activation queue depth of Table I.
+
+use std::collections::BTreeMap;
+
+/// One operation slot in the pipeline timetable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Op {
+    Ff,
+    Bp,
+    Up,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Ff => "FF",
+            Op::Bp => "BP",
+            Op::Up => "UP",
+        }
+    }
+}
+
+/// The pipeline schedule for an L-junction network.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    pub l: usize,
+}
+
+/// Everything scheduled in one junction cycle: (junction i in 1..=L, op,
+/// input index). Negative input indices (warmup) are omitted.
+pub type Slot = (usize, Op, i64);
+
+impl Pipeline {
+    pub fn new(l: usize) -> Self {
+        assert!(l >= 1);
+        Pipeline { l }
+    }
+
+    /// tau at which FF_i(n) runs.
+    pub fn ff_time(&self, i: usize, n: i64) -> i64 {
+        n + i as i64
+    }
+
+    /// tau at which BP_i(n) runs (i >= 2).
+    pub fn bp_time(&self, i: usize, n: i64) -> i64 {
+        n + 2 * self.l as i64 - i as i64 + 1
+    }
+
+    /// tau at which UP_i(n) runs.
+    pub fn up_time(&self, i: usize, n: i64) -> i64 {
+        n + 2 * self.l as i64 - i as i64 + 1
+    }
+
+    /// All operations scheduled in junction cycle `tau` for inputs >= 0.
+    pub fn slots_at(&self, tau: i64) -> Vec<Slot> {
+        let mut out = Vec::new();
+        for i in 1..=self.l {
+            let n_ff = tau - i as i64;
+            if n_ff >= 0 {
+                out.push((i, Op::Ff, n_ff));
+            }
+            let n_bpup = tau - (2 * self.l as i64 - i as i64 + 1);
+            if n_bpup >= 0 {
+                if i >= 2 {
+                    out.push((i, Op::Bp, n_bpup));
+                }
+                out.push((i, Op::Up, n_bpup));
+            }
+        }
+        out
+    }
+
+    /// Steady-state operations per junction cycle: 3L - 1 (no BP_1) once
+    /// the pipe is full; the combined speedup over one-op-at-a-time
+    /// processing is ~3L (Sec. III-A).
+    pub fn steady_state_ops(&self) -> usize {
+        3 * self.l - 1
+    }
+
+    /// FF latency of one input in junction cycles (input to logits).
+    pub fn ff_latency(&self) -> usize {
+        self.l
+    }
+
+    /// Full train latency: UP_1(n) is the last op of input n.
+    pub fn train_latency(&self) -> usize {
+        2 * self.l
+    }
+
+    /// Weight-version staleness at junction i: number of UP_i steps between
+    /// the weights FF_i(n) reads and the ones BP_i(n) reads (Sec. III-D).
+    pub fn staleness(&self, i: usize) -> usize {
+        2 * (self.l - i) + 1
+    }
+
+    /// Left-activation queue depth at junction i: a_{i-1}(m) is written at
+    /// tau = m+i-1 (layer i-1's FF, or the input load for i=1) and last
+    /// read by UP_i(m) at tau = m+2L-i+1, so 2(L-i)+3 banks are live —
+    /// the paper's layer-indexed 2(L-j)+1 with j = i-1 (Table I: 5 banks
+    /// for a_0 and 3 for a_1 when L = 2).
+    pub fn queue_banks(&self, i: usize) -> usize {
+        (self.up_time(i, 0) - (self.ff_time(i, 0) - 1)) as usize + 1
+    }
+
+    /// Simulate `taus` junction cycles, tracking per-junction weight
+    /// versions, and *measure* the staleness to validate the closed form.
+    pub fn measured_staleness(&self, i: usize, taus: i64) -> Option<usize> {
+        // weight version at junction i just before tau = number of UP_i
+        // with up_time < tau, i.e. #[n >= 0 : n + 2L - i + 1 < tau]
+        let version_before = |tau: i64| -> i64 {
+            let bound = tau - (2 * self.l as i64 - i as i64 + 1);
+            bound.max(0)
+        };
+        let mut result = None;
+        let warmup = (2 * (self.l - i) + 1) as i64; // clamp-free region
+        for n in warmup..taus {
+            if self.bp_time(i, n) >= taus {
+                break;
+            }
+            let ff_v = version_before(self.ff_time(i, n));
+            let bp_v = version_before(self.bp_time(i, n));
+            let s = (bp_v - ff_v) as usize;
+            if let Some(prev) = result {
+                assert_eq!(prev, s, "staleness not constant in steady state");
+            }
+            result = Some(s);
+        }
+        result
+    }
+
+    /// Validate the structural resource claims of Sec. III-A against the
+    /// schedule itself (used by property tests):
+    /// - every junction runs at most one FF, one BP and one UP per tau,
+    /// - FF and UP of a junction never process the same input at one tau,
+    /// - the a-queue depth needed at junction i (distance between FF_i(n)
+    ///   reading a_{i-1}(n) and UP_i(n) re-reading it) is 2(L-i)+1.
+    pub fn audit(&self, taus: i64) -> Result<(), String> {
+        for tau in 0..taus {
+            let slots = self.slots_at(tau);
+            let mut per_junction: BTreeMap<(usize, Op), i64> = BTreeMap::new();
+            for (i, op, n) in &slots {
+                if per_junction.insert((*i, *op), *n).is_some() {
+                    return Err(format!("junction {i} runs two {op:?} at tau {tau}"));
+                }
+            }
+            for i in 1..=self.l {
+                if let (Some(ff), Some(up)) =
+                    (per_junction.get(&(i, Op::Ff)), per_junction.get(&(i, Op::Up)))
+                {
+                    if ff == up {
+                        return Err(format!("junction {i} FF and UP same input at tau {tau}"));
+                    }
+                }
+            }
+        }
+        for i in 1..=self.l {
+            // Table I consistency: queue depth = 2(L-(i-1))+1
+            if self.queue_banks(i) != 2 * (self.l - (i - 1)) + 1 {
+                return Err(format!("queue depth mismatch at junction {i}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Throughput model: inputs/second for a clock frequency and junction
+/// cycle (plus per-junction pipeline flush overhead c, footnote 2).
+pub fn throughput_inputs_per_sec(clock_hz: f64, junction_cycle: usize, flush: usize) -> f64 {
+    clock_hz / (junction_cycle + flush) as f64
+}
+
+/// Cycle count for processing `n_inputs` through training: pipeline depth
+/// 2L junction cycles of latency plus one junction cycle per input.
+pub fn training_cycles(l: usize, junction_cycle: usize, flush: usize, n_inputs: usize) -> usize {
+    (2 * l + n_inputs) * (junction_cycle + flush)
+}
+
+/// Speedup of the pipelined/parallel schedule over sequential processing
+/// (one op, one junction, one input at a time): asymptotically 3L - 1/…
+/// ~= 3L (Sec. III-A).
+pub fn speedup(l: usize, n_inputs: usize) -> f64 {
+    // sequential: every input does L FF + (L-1) BP + L UP junction cycles
+    let seq = n_inputs * (3 * l - 1);
+    let pipe = 2 * l + n_inputs;
+    seq as f64 / pipe as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2c_timeline_for_l2() {
+        // Paper's worked example (Sec. III-A): while input n+3 loads,
+        // junction 1: FF(n+2), junction 2: FF(n+1), BP(n), UP(n),
+        // junction 1: UP(n-1).
+        let p = Pipeline::new(2);
+        let tau = p.ff_time(1, 3); // junction 1 processing FF for input 3 = n+2 with n=1
+        let slots = p.slots_at(tau);
+        let n = 1i64; // so n+2 = 3
+        assert!(slots.contains(&(1, Op::Ff, n + 2)));
+        assert!(slots.contains(&(2, Op::Ff, n + 1)));
+        assert!(slots.contains(&(2, Op::Bp, n)));
+        assert!(slots.contains(&(2, Op::Up, n)));
+        assert!(slots.contains(&(1, Op::Up, n - 1)));
+        assert_eq!(slots.len(), 5); // = 3L - 1
+    }
+
+    #[test]
+    fn steady_state_op_count() {
+        for l in 1..6 {
+            let p = Pipeline::new(l);
+            let tau = (3 * l + 5) as i64;
+            assert_eq!(p.slots_at(tau).len(), p.steady_state_ops());
+        }
+    }
+
+    #[test]
+    fn staleness_matches_closed_form_and_queue_depths() {
+        for l in 1..6 {
+            let p = Pipeline::new(l);
+            for i in 1..=l {
+                assert_eq!(p.measured_staleness(i, 200), Some(p.staleness(i)));
+            }
+            p.audit(100).unwrap();
+        }
+    }
+
+    #[test]
+    fn l2_queue_depth_matches_paper() {
+        // Sec. III-A: 2L+1 = 5 banks for a_0, 2(L-1)+1 = 3 for a_1
+        let p = Pipeline::new(2);
+        assert_eq!(p.queue_banks(1), 5);
+        assert_eq!(p.queue_banks(2), 3);
+        assert_eq!(p.staleness(1), 3);
+        assert_eq!(p.staleness(2), 1);
+        // L=4 (Table I second config): a_0 needs 2L+1 = 9 banks
+        assert_eq!(Pipeline::new(4).queue_banks(1), 9);
+    }
+
+    #[test]
+    fn speedup_approaches_3l() {
+        for l in [1usize, 2, 4] {
+            let s = speedup(l, 100_000);
+            assert!((s - (3 * l - 1) as f64).abs() < 0.1, "l={l}: {s}");
+        }
+    }
+
+    #[test]
+    fn latency_and_throughput() {
+        let p = Pipeline::new(4);
+        assert_eq!(p.ff_latency(), 4);
+        assert_eq!(p.train_latency(), 8);
+        // initial FPGA implementation [40]: C = 32+2 flush; at 100 MHz
+        let tput = throughput_inputs_per_sec(100e6, 32, 2);
+        assert!((tput - 100e6 / 34.0).abs() < 1.0);
+        assert_eq!(training_cycles(2, 32, 2, 10), (4 + 10) * 34);
+    }
+}

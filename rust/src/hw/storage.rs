@@ -1,0 +1,145 @@
+//! Table-I storage cost model (Sec. III-A).
+//!
+//! Junction pipelining needs queued banks for layer parameters:
+//! - `a`   (activations):   2(L-i)+1 banks of N_i words, i = 0..L-1,
+//! - `a'`  (derivatives):   2(L-i)+1 banks of N_i words, i = 1..L-1,
+//! - `d`   (deltas):        2 banks of N_i words, i = 1..L,
+//! - `b`   (biases):        N_i words, i = 1..L,
+//! - `W`   (weights):       N_i * d_in_i words, i = 1..L (the only banks
+//!                          whose size shrinks with pre-defined sparsity).
+
+use crate::sparsity::config::{DoutConfig, NetConfig};
+
+/// Word counts per parameter type for a network + out-degree config.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StorageCost {
+    pub activations: usize,
+    pub act_derivatives: usize,
+    pub deltas: usize,
+    pub biases: usize,
+    pub weights: usize,
+}
+
+impl StorageCost {
+    pub fn total(&self) -> usize {
+        self.activations + self.act_derivatives + self.deltas + self.biases + self.weights
+    }
+
+    /// Inference-only variant: BP/UP logic removed (Sec. III intro), so no
+    /// delta banks, no a-dot banks, and single (unqueued) activation banks.
+    pub fn inference_only(net: &NetConfig, dout: &DoutConfig) -> StorageCost {
+        let din = net.din(dout);
+        StorageCost {
+            activations: net.layers[..net.layers.len() - 1].iter().sum(),
+            act_derivatives: 0,
+            deltas: 0,
+            biases: net.layers[1..].iter().sum(),
+            weights: din.iter().zip(&net.layers[1..]).map(|(d, n)| d * n).sum(),
+        }
+    }
+}
+
+/// Training-mode storage (the Table-I expressions).
+pub fn training_storage(net: &NetConfig, dout: &DoutConfig) -> StorageCost {
+    let l = net.n_junctions();
+    let din = net.din(dout);
+    let activations = (0..l).map(|i| (2 * (l - i) + 1) * net.layers[i]).sum();
+    let act_derivatives = (1..l).map(|i| (2 * (l - i) + 1) * net.layers[i]).sum();
+    let deltas = 2 * net.layers[1..].iter().sum::<usize>();
+    let biases = net.layers[1..].iter().sum::<usize>();
+    let weights = din.iter().zip(&net.layers[1..]).map(|(d, n)| d * n).sum();
+    StorageCost {
+        activations,
+        act_derivatives,
+        deltas,
+        biases,
+        weights,
+    }
+}
+
+/// The Table-I comparison row: FC vs a sparse out-degree config.
+pub struct StorageComparison {
+    pub fc: StorageCost,
+    pub sparse: StorageCost,
+}
+
+impl StorageComparison {
+    pub fn new(net: &NetConfig, dout: &DoutConfig) -> Self {
+        StorageComparison {
+            fc: training_storage(net, &net.fc_dout()),
+            sparse: training_storage(net, dout),
+        }
+    }
+
+    /// Memory reduction factor (paper: 3.9X for the Table-I config).
+    pub fn memory_reduction(&self) -> f64 {
+        self.fc.total() as f64 / self.sparse.total() as f64
+    }
+
+    /// Computational reduction factor — MLP compute is proportional to the
+    /// number of weights (paper: 4.8X for the Table-I config).
+    pub fn compute_reduction(&self) -> f64 {
+        self.fc.weights as f64 / self.sparse.weights as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_fc_column() {
+        // N_net = (800, 100, 10), FC
+        let net = NetConfig::new(vec![800, 100, 10]);
+        let c = training_storage(&net, &net.fc_dout());
+        assert_eq!(c.activations, 4300); // 5*800 + 3*100
+        assert_eq!(c.act_derivatives, 300); // 3*100
+        assert_eq!(c.deltas, 220);
+        assert_eq!(c.biases, 110);
+        assert_eq!(c.weights, 81_000);
+        assert_eq!(c.total(), 85_930);
+    }
+
+    #[test]
+    fn table1_sparse_column() {
+        // d_out = (20, 10) -> rho_net = 21%
+        let net = NetConfig::new(vec![800, 100, 10]);
+        let c = training_storage(&net, &DoutConfig(vec![20, 10]));
+        assert_eq!(c.activations, 4300);
+        assert_eq!(c.act_derivatives, 300);
+        assert_eq!(c.deltas, 220);
+        assert_eq!(c.biases, 110);
+        assert_eq!(c.weights, 17_000);
+        assert_eq!(c.total(), 21_930);
+    }
+
+    #[test]
+    fn table1_reduction_factors() {
+        let net = NetConfig::new(vec![800, 100, 10]);
+        let cmp = StorageComparison::new(&net, &DoutConfig(vec![20, 10]));
+        assert!((cmp.memory_reduction() - 3.9).abs() < 0.05, "{}", cmp.memory_reduction());
+        assert!((cmp.compute_reduction() - 81.0 / 17.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn four_junction_queue_depths() {
+        // L=4: a banks for layer 0 need 2L+1 = 9 copies
+        let net = NetConfig::new(vec![800, 100, 100, 100, 10]);
+        let c = training_storage(&net, &net.fc_dout());
+        assert_eq!(c.activations, 9 * 800 + 7 * 100 + 5 * 100 + 3 * 100);
+        assert_eq!(c.act_derivatives, 7 * 100 + 5 * 100 + 3 * 100);
+        assert_eq!(c.deltas, 2 * 310);
+    }
+
+    #[test]
+    fn inference_only_drops_training_banks() {
+        let net = NetConfig::new(vec![800, 100, 10]);
+        let dout = DoutConfig(vec![20, 10]);
+        let inf = StorageCost::inference_only(&net, &dout);
+        assert_eq!(inf.act_derivatives, 0);
+        assert_eq!(inf.deltas, 0);
+        assert_eq!(inf.activations, 900);
+        assert_eq!(inf.weights, 17_000);
+        assert!(inf.total() < training_storage(&net, &dout).total());
+    }
+}

@@ -1,0 +1,18 @@
+//! # predef-sparse
+//!
+//! Reproduction of Dey et al., "Pre-Defined Sparse Neural Networks with
+//! Hardware Acceleration" (IEEE JETCAS 2019): pre-defined sparse MLPs with
+//! clash-free hardware-friendly connection patterns, a cycle-accurate
+//! simulator of the paper's edge-based FPGA architecture, and a Rust
+//! coordinator executing AOT-compiled JAX/Pallas artifacts via PJRT.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+pub mod sparsity;
+pub mod hw;
+pub mod data;
+pub mod nn;
+pub mod runtime;
+pub mod coordinator;
+pub mod exp;
+pub mod util;

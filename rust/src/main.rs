@@ -1,0 +1,369 @@
+//! `pds` — pre-defined sparse neural networks with hardware acceleration.
+//!
+//! Subcommands:
+//!   info                       list AOT artifacts and configs
+//!   patterns  [opts]           generate + audit a connection pattern
+//!   storage   [opts]           Table-I storage model for a config
+//!   simulate  [opts]           cycle-accurate junction FF/BP/UP run
+//!   train     [opts]           train via the AOT PJRT artifacts
+//!   serve     [opts]           batched inference service demo
+//!   exp <id>  [--quick]        paper experiment harnesses (see DESIGN.md)
+//!
+//! (CLI parsing is hand-rolled: clap is unavailable in the offline build.)
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use pds::data::Spec;
+use pds::exp::common::Scale;
+use pds::hw::junction::{Act, JunctionUnit};
+use pds::runtime::Engine;
+use pds::sparsity::clash_free;
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::rng::Rng;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parse `--key value` options + positionals.
+fn parse_opts(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut opts = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, opts)
+}
+
+fn parse_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("{e}")))
+        .collect()
+}
+
+fn artifacts_dir(opts: &BTreeMap<String, String>) -> String {
+    opts.get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let (pos, opts) = parse_opts(&args[1..]);
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => print_help(),
+        "info" => cmd_info(&opts)?,
+        "patterns" => cmd_patterns(&opts)?,
+        "storage" => cmd_storage(&opts)?,
+        "simulate" => cmd_simulate(&opts)?,
+        "train" => cmd_train(&opts)?,
+        "serve" => cmd_serve(&opts)?,
+        "exp" => {
+            let id = pos.first().map(String::as_str).unwrap_or("all");
+            let scale = if opts.contains_key("quick") {
+                Scale::quick()
+            } else {
+                Scale::standard()
+            };
+            pds::exp::run(id, &scale).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `pds help`)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "pds — Pre-Defined Sparse Neural Networks with Hardware Acceleration\n\
+         \n\
+         usage: pds <command> [--options]\n\
+         \n\
+         commands:\n\
+           info                              list artifact configs\n\
+           patterns  --layers 800,100,10 --dout 20,10 [--method clash-free|structured|random] [--z 200,10]\n\
+           storage   --layers 800,100,10 --dout 20,10\n\
+           simulate  --left 800 --right 100 --dout 20 --z 200\n\
+           train     --config tiny [--dout 8,4] [--epochs 5] [--lr 1e-3] [--fc]\n\
+           serve     --config tiny [--requests 200] [--wait-ms 2]\n\
+           exp <fig1|table1|table2|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table3|pipeline|all> [--quick]\n\
+         \n\
+         global: --artifacts <dir> (default: ./artifacts)"
+    );
+}
+
+fn cmd_info(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir(opts))?;
+    println!("PJRT platform: {}", engine.platform());
+    for (name, cfg) in &engine.manifest.configs {
+        println!(
+            "config {:<12} layers {:?} batch {}",
+            name, cfg.layers, cfg.batch
+        );
+        for (tag, p) in &cfg.programs {
+            println!(
+                "  {:<16} {} ({} inputs, {} outputs)",
+                tag,
+                p.file,
+                p.inputs.len(),
+                p.outputs.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_patterns(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let layers = parse_list(opts.get("layers").map(String::as_str).unwrap_or("800,100,10"))?;
+    let dout = DoutConfig(parse_list(opts.get("dout").map(String::as_str).unwrap_or("20,10"))?);
+    let method = Method::parse(opts.get("method").map(String::as_str).unwrap_or("clash-free"))
+        .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+    let znet = opts.get("z").map(|s| parse_list(s)).transpose()?;
+    let seed: u64 = opts.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let netc = NetConfig::new(layers);
+    netc.validate_dout(&dout).map_err(|e| anyhow::anyhow!(e))?;
+    let mut rng = Rng::new(seed);
+    let p = generate(method, &netc, &dout, znet.as_deref(), &mut rng);
+    println!(
+        "method {} rho_net {:.1}% edges {:?}",
+        method.name(),
+        p.rho_net() * 100.0,
+        p.junctions.iter().map(|j| j.n_edges()).collect::<Vec<_>>()
+    );
+    for (i, j) in p.junctions.iter().enumerate() {
+        j.audit().map_err(|e| anyhow::anyhow!("junction {i}: {e}"))?;
+        println!(
+            "junction {}: {}x{} density {:.1}% structured={} disconnected L/R = {}/{}",
+            i + 1,
+            j.shape.n_left,
+            j.shape.n_right,
+            j.density() * 100.0,
+            j.is_structured(),
+            j.disconnected_left(),
+            j.disconnected_right()
+        );
+    }
+    if let Some(z) = &znet {
+        let cfg = pds::hw::zconfig::validate(&netc, &dout, z).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "z_net {:?}: junction cycle C = {} ({}), idle {:.1}%",
+            cfg.z,
+            cfg.junction_cycle,
+            if cfg.balanced { "balanced" } else { "max" },
+            cfg.idle_fraction() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_storage(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let layers = parse_list(opts.get("layers").map(String::as_str).unwrap_or("800,100,10"))?;
+    let dout = DoutConfig(parse_list(opts.get("dout").map(String::as_str).unwrap_or("20,10"))?);
+    let netc = NetConfig::new(layers);
+    netc.validate_dout(&dout).map_err(|e| anyhow::anyhow!(e))?;
+    let cmp = pds::hw::storage::StorageComparison::new(&netc, &dout);
+    println!(
+        "FC total {} words; sparse total {} words; memory reduction {:.1}X; compute reduction {:.1}X",
+        cmp.fc.total(),
+        cmp.sparse.total(),
+        cmp.memory_reduction(),
+        cmp.compute_reduction()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let get = |k: &str, d: usize| -> anyhow::Result<usize> {
+        Ok(opts.get(k).map(|s| s.parse()).transpose()?.unwrap_or(d))
+    };
+    let (nl, nr, dout, z) = (get("left", 800)?, get("right", 100)?, get("dout", 20)?, get("z", 200)?);
+    let shape = pds::sparsity::config::JunctionShape { n_left: nl, n_right: nr };
+    anyhow::ensure!(nl * dout % nr == 0, "d_in not integral");
+    let d_in = nl * dout / nr;
+    let mut rng = Rng::new(1);
+    let sched = clash_free::schedule(nl, z, dout, clash_free::Flavor::Type1 { dither: false }, &mut rng);
+    sched.verify_clash_free().map_err(|e| anyhow::anyhow!(e))?;
+    let z_next = JunctionUnit::required_z_next(nr * d_in, z, d_in);
+    let mut unit = JunctionUnit::new(shape, d_in, sched, z_next);
+    let dense: Vec<f32> = (0..nr * nl).map(|_| rng.normal()).collect();
+    unit.load_weights_dense(&dense);
+    let a: Vec<f32> = (0..nl).map(|_| rng.normal()).collect();
+    let bias = vec![0.1f32; nr];
+    let t0 = std::time::Instant::now();
+    let ff = unit.feedforward(&a, &bias, Act::Relu).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dt = t0.elapsed();
+    println!(
+        "junction ({nl} x {nr}), d_out {dout}, d_in {d_in}, z {z}: junction cycle C = {} cycles",
+        unit.junction_cycle
+    );
+    println!(
+        "FF pass: {} cycles, {} weight reads, max {} right neurons/cycle (bound {}), wall {dt:?}",
+        ff.stats.cycles,
+        ff.stats.weight_reads,
+        ff.stats.max_rights_per_cycle,
+        pds::util::ceil_div(z, d_in)
+    );
+    let dr: Vec<f32> = (0..nr).map(|_| rng.normal()).collect();
+    let (_, bp) = unit.backprop(&dr, &vec![1.0; nl]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut b2 = bias.clone();
+    let up = unit.update(&a, &dr, &mut b2, 0.01).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("BP pass: {} cycles; UP pass: {} cycles (all clash-free)", bp.cycles, up.cycles);
+    Ok(())
+}
+
+fn cmd_train(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let config = opts.get("config").cloned().unwrap_or_else(|| "tiny".into());
+    let epochs: usize = opts.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(5);
+    let lr: f32 = opts.get("lr").map(|s| s.parse()).transpose()?.unwrap_or(1e-3);
+    let seed: u64 = opts.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let engine = Engine::new(artifacts_dir(opts))?;
+    let entry = engine
+        .manifest
+        .configs
+        .get(&config)
+        .ok_or_else(|| anyhow::anyhow!("no config {config}"))?;
+    let layers = entry.layers.clone();
+    let netc = NetConfig::new(layers.clone());
+    let dout = if opts.contains_key("fc") {
+        netc.fc_dout()
+    } else {
+        DoutConfig(match opts.get("dout") {
+            Some(s) => parse_list(s)?,
+            None => entry
+                .gather_dout
+                .clone()
+                .unwrap_or_else(|| netc.fc_dout().0.clone()),
+        })
+    };
+    netc.validate_dout(&dout).map_err(|e| anyhow::anyhow!(e))?;
+    let mut rng = Rng::new(seed);
+    let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+    println!(
+        "training config {config} {layers:?} rho_net {:.1}% on PJRT ({})",
+        pattern.rho_net() * 100.0,
+        engine.platform()
+    );
+    let mut session = pds::coordinator::TrainSession::new(&engine, &config, &pattern, lr, 1e-4, seed)?;
+    let spec = spec_for_features(layers[0], *layers.last().unwrap());
+    let splits = spec.splits(entry.batch * 8, 0, entry.batch * 3, seed ^ 99);
+    for e in 0..epochs {
+        let (loss, acc) = session.epoch(&splits.train, &mut rng)?;
+        let test = session.evaluate(&splits.test)?;
+        println!("epoch {e:>3}: train loss {loss:.4} acc {:.1}% | test acc {:.1}%", acc * 100.0, test * 100.0);
+    }
+    session.check_mask_invariant()?;
+    println!("mask invariant holds: excluded edges exactly zero after training");
+    Ok(())
+}
+
+/// Pick a surrogate whose feature/class dims match an artifact config.
+fn spec_for_features(features: usize, classes: usize) -> Spec {
+    let mut spec = match features {
+        800 => Spec::mnist_like(),
+        2000 => Spec::reuters_like(),
+        39 => Spec::timit_like(39),
+        4000 => Spec::cifar_features_like(true),
+        _ => Spec {
+            name: "generic",
+            features,
+            classes,
+            latent_dim: (features / 3).clamp(4, 64),
+            shaping: pds::data::Shaping::Continuous,
+            separation: 3.0,
+            noise: 0.4,
+        },
+    };
+    spec.classes = classes;
+    spec
+}
+
+fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let config = opts.get("config").cloned().unwrap_or_else(|| "tiny".into());
+    let n_requests: usize = opts.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let wait_ms: u64 = opts.get("wait-ms").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let dir = artifacts_dir(opts);
+    let probe = pds::runtime::Manifest::probe(&dir, &config)?;
+    let netc = NetConfig::new(probe.layers.clone());
+    let mut rng = Rng::new(3);
+    let dout = DoutConfig(
+        (0..netc.n_junctions())
+            .map(|i| netc.junction(i).dout_for_density(0.25))
+            .collect(),
+    );
+    let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+    let server = pds::coordinator::InferenceServer::start(
+        dir,
+        &config,
+        &pattern,
+        None,
+        pds::coordinator::ServerConfig {
+            max_wait: std::time::Duration::from_millis(wait_ms),
+        },
+    )?;
+    println!(
+        "serving config {config} {:?} (batch {}), {} requests from 4 client threads",
+        probe.layers, probe.batch, n_requests
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let client = server.client();
+        let features = probe.layers[0];
+        let per = n_requests / 4;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c);
+            let mut lats = Vec::with_capacity(per);
+            for _ in 0..per {
+                let x: Vec<f32> = (0..features).map(|_| rng.normal()).collect();
+                let pred = client.classify(x).unwrap();
+                lats.push(pred.latency);
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<std::time::Duration> = Vec::new();
+    for h in handles {
+        lats.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+    lats.sort();
+    let stats = &server.stats;
+    println!(
+        "done in {wall:?}: throughput {:.0} req/s, latency p50 {:?} p95 {:?} p99 {:?}",
+        lats.len() as f64 / wall.as_secs_f64(),
+        lats[lats.len() / 2],
+        lats[lats.len() * 95 / 100],
+        lats[lats.len() * 99 / 100],
+    );
+    println!(
+        "batches {} (mean occupancy {:.1}), padded rows {}",
+        stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        lats.len() as f64 / stats.batches.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64,
+        stats.padded_rows.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    server.shutdown()?;
+    Ok(())
+}

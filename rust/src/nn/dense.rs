@@ -1,0 +1,324 @@
+//! Masked-dense MLP (eqs. 2-4 with a fixed 0/1 mask per junction).
+//!
+//! Used for FC baselines and for the §V-B LSS comparison (which must start
+//! fully connected and prune during training). The invariant maintained
+//! throughout: `w[i]` is always element-wise masked, so excluded edges are
+//! exactly zero at every step — the pre-defined sparsity contract.
+
+use super::matrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct DenseNet {
+    pub layers: Vec<usize>,
+    /// Weights per junction, row-major [n_right, n_left].
+    pub w: Vec<Vec<f32>>,
+    pub b: Vec<Vec<f32>>,
+    /// 0/1 masks per junction (all-ones = FC).
+    pub masks: Vec<Vec<f32>>,
+}
+
+/// Gradients in the same layout as (w, b).
+#[derive(Clone, Debug)]
+pub struct Grads {
+    pub gw: Vec<Vec<f32>>,
+    pub gb: Vec<Vec<f32>>,
+}
+
+/// Result of one forward+backward pass.
+pub struct StepOut {
+    pub loss: f32,
+    pub correct: usize,
+    pub grads: Grads,
+}
+
+impl DenseNet {
+    /// He-initialized [45] network with constant bias (Sec. IV-A), all-ones
+    /// masks (FC).
+    pub fn init_he(layers: &[usize], bias_init: f32, rng: &mut Rng) -> Self {
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        let mut masks = Vec::new();
+        for i in 1..layers.len() {
+            let (nl, nr) = (layers[i - 1], layers[i]);
+            let std = (2.0 / nl as f32).sqrt();
+            w.push((0..nr * nl).map(|_| rng.normal() * std).collect());
+            b.push(vec![bias_init; nr]);
+            masks.push(vec![1.0; nr * nl]);
+        }
+        DenseNet {
+            layers: layers.to_vec(),
+            w,
+            b,
+            masks,
+        }
+    }
+
+    pub fn n_junctions(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// Install masks (and zero the excluded weights).
+    pub fn set_masks(&mut self, masks: Vec<Vec<f32>>) {
+        assert_eq!(masks.len(), self.n_junctions());
+        self.masks = masks;
+        self.apply_masks();
+    }
+
+    pub fn apply_masks(&mut self) {
+        for (w, m) in self.w.iter_mut().zip(&self.masks) {
+            for (wv, &mv) in w.iter_mut().zip(m) {
+                *wv *= mv;
+            }
+        }
+    }
+
+    /// Forward pass; returns activations per layer (a[0] = input) and
+    /// pre-activations per junction.
+    pub fn forward(&self, x: &[f32], batch: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let l = self.n_junctions();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(l + 1);
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(l);
+        acts.push(x.to_vec());
+        for i in 0..l {
+            let (nl, nr) = (self.layers[i], self.layers[i + 1]);
+            let mut h = vec![0f32; batch * nr];
+            matrix::matmul_nt(&acts[i], &self.w[i], batch, nl, nr, &mut h);
+            matrix::add_bias(&mut h, &self.b[i], batch, nr);
+            pre.push(h.clone());
+            if i != l - 1 {
+                super::relu(&mut h);
+            }
+            acts.push(h);
+        }
+        (acts, pre)
+    }
+
+    /// Logits only (inference).
+    pub fn logits(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let (acts, _) = self.forward(x, batch);
+        acts.last().unwrap().clone()
+    }
+
+    /// Full forward + backward: softmax-CE loss with L2 penalty `l2` and
+    /// optional per-junction L1 penalty `l1` (the §V-B LSS term). Gradients
+    /// are masked, so Adam state of excluded edges stays zero.
+    pub fn step(&self, x: &[f32], y: &[i32], batch: usize, l2: f32, l1: Option<&[f32]>) -> StepOut {
+        let l = self.n_junctions();
+        let classes = *self.layers.last().unwrap();
+        let (acts, pre) = self.forward(x, batch);
+        let (loss, correct, dlogits) = super::softmax_ce(acts.last().unwrap(), y, classes);
+
+        let mut gw: Vec<Vec<f32>> = self.w.iter().map(|w| vec![0f32; w.len()]).collect();
+        let mut gb: Vec<Vec<f32>> = self.b.iter().map(|b| vec![0f32; b.len()]).collect();
+        let mut dh = dlogits;
+        for i in (0..l).rev() {
+            let (nl, nr) = (self.layers[i], self.layers[i + 1]);
+            // eq. (4b): dW = dh^T @ a_{i-1} (+ regularizers), masked
+            matrix::matmul_tn_acc(&dh, &acts[i], batch, nr, nl, 1.0, &mut gw[i]);
+            for j in 0..nr {
+                let mut acc = 0f32;
+                for bi in 0..batch {
+                    acc += dh[bi * nr + j];
+                }
+                gb[i][j] = acc;
+            }
+            for (idx, g) in gw[i].iter_mut().enumerate() {
+                let wv = self.w[i][idx];
+                *g += 2.0 * l2 * wv;
+                if let Some(gammas) = l1 {
+                    *g += gammas[i] * wv.signum() * if wv == 0.0 { 0.0 } else { 1.0 };
+                }
+                *g *= self.masks[i][idx];
+            }
+            if i > 0 {
+                // eq. (3b): da = dh @ W, then multiply by relu'(h_{i-1})
+                let mut da = vec![0f32; batch * nl];
+                matrix::matmul_nn(&dh, &self.w[i], batch, nr, nl, &mut da);
+                for (dv, &hv) in da.iter_mut().zip(&pre[i - 1]) {
+                    if hv <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+                dh = da;
+            }
+        }
+        StepOut {
+            loss,
+            correct,
+            grads: Grads { gw, gb },
+        }
+    }
+
+    /// Classification accuracy over a dataset slice.
+    pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
+        let batch = y.len();
+        let classes = *self.layers.last().unwrap();
+        let logits = self.logits(x, batch);
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / batch as f64
+    }
+
+    /// §V-B LSS finalization: keep the per-junction top-|W_i|*rho weights
+    /// by magnitude, zero the rest, install the induced mask.
+    pub fn prune_to_density(&mut self, rho: &[f64]) {
+        assert_eq!(rho.len(), self.n_junctions());
+        for i in 0..self.n_junctions() {
+            let w = &mut self.w[i];
+            let keep = ((w.len() as f64) * rho[i]).round() as usize;
+            let mut mags: Vec<(f32, usize)> =
+                w.iter().enumerate().map(|(idx, v)| (v.abs(), idx)).collect();
+            mags.sort_by(|a, b| b.0.total_cmp(&a.0));
+            let mut mask = vec![0f32; w.len()];
+            for &(_, idx) in mags.iter().take(keep) {
+                mask[idx] = 1.0;
+            }
+            for (wv, &mv) in w.iter_mut().zip(&mask) {
+                *wv *= mv;
+            }
+            self.masks[i] = mask;
+        }
+    }
+
+    /// Density of each junction as induced by the installed masks.
+    pub fn mask_densities(&self) -> Vec<f64> {
+        self.masks
+            .iter()
+            .map(|m| m.iter().filter(|&&v| v == 1.0).count() as f64 / m.len() as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(seed: u64) -> (DenseNet, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let net = DenseNet::init_he(&[6, 5, 4], 0.1, &mut rng);
+        let x: Vec<f32> = (0..8 * 6).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..8).map(|_| rng.below(4) as i32).collect();
+        (net, x, y)
+    }
+
+    #[test]
+    fn numerical_gradient_check() {
+        let (mut net, x, y) = toy(0);
+        // random mask to exercise the masked path
+        let mut rng = Rng::new(1);
+        let masks: Vec<Vec<f32>> = net
+            .masks
+            .iter()
+            .map(|m| m.iter().map(|_| if rng.uniform() < 0.6 { 1.0 } else { 0.0 }).collect())
+            .collect();
+        net.set_masks(masks);
+        let l2 = 0.01;
+        let out = net.step(&x, &y, 8, l2, None);
+        let eps = 1e-3;
+        let loss_at = |net: &DenseNet| {
+            let o = net.step(&x, &y, 8, 0.0, None);
+            let pen: f32 = net.w.iter().map(|w| w.iter().map(|v| v * v).sum::<f32>()).sum();
+            o.loss + l2 * pen
+        };
+        for (ji, wlen) in [(0usize, 30usize), (1, 20)] {
+            for &idx in &[0usize, wlen / 2, wlen - 1] {
+                let mut net2 = net.clone();
+                net2.w[ji][idx] += eps;
+                let lp = loss_at(&net2);
+                net2.w[ji][idx] -= 2.0 * eps;
+                let lm = loss_at(&net2);
+                let num = (lp - lm) / (2.0 * eps);
+                let ana = out.grads.gw[ji][idx];
+                // masked entries must have zero analytic grad
+                if net.masks[ji][idx] == 0.0 {
+                    assert_eq!(ana, 0.0);
+                } else {
+                    assert!(
+                        (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                        "junction {ji} idx {idx}: num {num} vs ana {ana}"
+                    );
+                }
+            }
+        }
+        // bias grads
+        for ji in 0..2 {
+            let mut net2 = net.clone();
+            net2.b[ji][0] += eps;
+            let lp = loss_at(&net2);
+            net2.b[ji][0] -= 2.0 * eps;
+            let lm = loss_at(&net2);
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - out.grads.gb[ji][0]).abs() < 2e-2 * (1.0 + num.abs()));
+        }
+    }
+
+    #[test]
+    fn masked_weights_stay_zero() {
+        let (mut net, x, y) = toy(2);
+        let masks: Vec<Vec<f32>> = net
+            .masks
+            .iter()
+            .map(|m| m.iter().enumerate().map(|(i, _)| (i % 3 == 0) as u8 as f32).collect())
+            .collect();
+        net.set_masks(masks);
+        let out = net.step(&x, &y, 8, 0.01, None);
+        for (ji, gw) in out.grads.gw.iter().enumerate() {
+            for (idx, g) in gw.iter().enumerate() {
+                if net.masks[ji][idx] == 0.0 {
+                    assert_eq!(*g, 0.0);
+                    assert_eq!(net.w[ji][idx], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prune_to_density_keeps_largest() {
+        let (mut net, _, _) = toy(3);
+        net.w[0] = (0..30).map(|i| i as f32 / 30.0).collect();
+        net.prune_to_density(&[0.2, 1.0]);
+        let d = net.mask_densities();
+        assert!((d[0] - 0.2).abs() < 0.05);
+        assert_eq!(d[1], 1.0);
+        // survivors are the 6 largest
+        for i in 0..24 {
+            assert_eq!(net.w[0][i], 0.0);
+        }
+        for i in 24..30 {
+            assert!(net.w[0][i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn l1_term_adds_sign_subgradient() {
+        let (net, x, y) = toy(4);
+        let base = net.step(&x, &y, 8, 0.0, None);
+        let lss = net.step(&x, &y, 8, 0.0, Some(&[0.5, 0.0]));
+        for idx in 0..net.w[0].len() {
+            let want = base.grads.gw[0][idx] + 0.5 * net.w[0][idx].signum();
+            assert!((lss.grads.gw[0][idx] - want).abs() < 1e-6);
+        }
+        for idx in 0..net.w[1].len() {
+            assert!((lss.grads.gw[1][idx] - base.grads.gw[1][idx]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn accuracy_is_fractional_correct() {
+        let (net, x, y) = toy(5);
+        let acc = net.accuracy(&x, &y);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,157 @@
+//! Row-major dense matmul kernels for the native trainer's three junction
+//! operations (FF / BP / UP in matrix form). Loop orders are chosen for
+//! unit-stride inner loops; see EXPERIMENTS.md §Perf for the measured
+//! effect of the blocking applied here.
+
+/// out[m,n] = a[m,k] @ b[n,k]^T  (FF: h = a @ W^T with W = [n_right, n_left])
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (j, o) in or.iter_mut().enumerate() {
+            let br = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            // unit stride over both operands; autovectorizes well
+            for t in 0..k {
+                acc += ar[t] * br[t];
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// out[m,n] = a[m,k] @ b[k,n]  (BP: da = delta @ W)
+pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let or = &mut out[i * n..(i + 1) * n];
+        for t in 0..k {
+            let av = a[i * k + t];
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[t * n..(t + 1) * n];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,n] += scale * a[k,m]^T @ b[k,n]  (UP: dW = delta^T @ a)
+pub fn matmul_tn_acc(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for t in 0..k {
+        let ar = &a[t * m..(t + 1) * m];
+        let br = &b[t * n..(t + 1) * n];
+        for (i, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let or = &mut out[i * n..(i + 1) * n];
+            let s = scale * av;
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += s * bv;
+            }
+        }
+    }
+}
+
+/// out[i, :] += v (bias broadcast)
+pub fn add_bias(out: &mut [f32], v: &[f32], m: usize, n: usize) {
+    assert_eq!(out.len(), m * n);
+    assert_eq!(v.len(), n);
+    for i in 0..m {
+        for (o, &b) in out[i * n..(i + 1) * n].iter_mut().zip(v) {
+            *o += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, ta: bool, tb: bool) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for t in 0..k {
+                    let av = if ta { a[t * m + i] } else { a[i * k + t] };
+                    let bv = if tb { b[j * k + t] } else { b[t * n + j] };
+                    acc += av * bv;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn nt_matches_naive() {
+        let (m, k, n) = (5, 7, 3);
+        let a = randvec(m * k, 0);
+        let b = randvec(n * k, 1);
+        let mut out = vec![0f32; m * n];
+        matmul_nt(&a, &b, m, k, n, &mut out);
+        let want = naive(&a, &b, m, k, n, false, true);
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nn_matches_naive() {
+        let (m, k, n) = (4, 6, 5);
+        let a = randvec(m * k, 2);
+        let b = randvec(k * n, 3);
+        let mut out = vec![0f32; m * n];
+        matmul_nn(&a, &b, m, k, n, &mut out);
+        let want = naive(&a, &b, m, k, n, false, false);
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn tn_acc_matches_naive_with_scale() {
+        let (k, m, n) = (6, 4, 3);
+        let a = randvec(k * m, 4);
+        let b = randvec(k * n, 5);
+        let mut out = vec![1f32; m * n]; // accumulate onto ones
+        matmul_tn_acc(&a, &b, k, m, n, 0.5, &mut out);
+        let want = naive(&a, &b, m, k, n, true, false);
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - (1.0 + 0.5 * w)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut out = vec![0f32; 6];
+        add_bias(&mut out, &[1.0, 2.0, 3.0], 2, 3);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Native Rust trainer for pre-defined sparse MLPs — the software-
+//! simulation path (the paper's Sec. IV experiments ran as software sims;
+//! DESIGN.md §Substitutions). Implements exactly the masked fwd/bwd/Adam
+//! math of the AOT JAX artifacts (cross-checked in rust/tests/), so the
+//! wide experiment sweeps and the PJRT path are interchangeable.
+//!
+//! - [`matrix`]: dense row-major matmul kernels,
+//! - [`dense`]: masked-dense MLP (FC baselines, LSS training §V-B),
+//! - [`sparse`]: CSR compacted-edge MLP — compute and storage proportional
+//!   to |W_i|, the software twin of the hardware's edge processing,
+//! - [`adam`]: the Adam optimizer [46] with the paper's decay schedule,
+//! - [`trainer`]: epoch loop, minibatching, metrics, LSS pruning,
+//!   pipeline-staleness emulation (Sec. III-D).
+
+pub mod adam;
+pub mod dense;
+pub mod matrix;
+pub mod sparse;
+pub mod trainer;
+
+/// Softmax cross-entropy over logits [batch, classes]: returns (mean loss,
+/// #correct, dlogits = (softmax - onehot)/batch).
+pub fn softmax_ce(logits: &[f32], y: &[i32], classes: usize) -> (f32, usize, Vec<f32>) {
+    let batch = y.len();
+    assert_eq!(logits.len(), batch * classes);
+    let mut dlogits = vec![0f32; logits.len()];
+    let mut loss = 0f64;
+    let mut correct = 0usize;
+    for i in 0..batch {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for &v in row {
+            denom += (v - mx).exp();
+        }
+        let target = y[i] as usize;
+        let logp_t = row[target] - mx - denom.ln();
+        loss -= logp_t as f64;
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+            let p = (v - mx).exp() / denom;
+            dlogits[i * classes + c] = (p - if c == target { 1.0 } else { 0.0 }) / batch as f32;
+        }
+        if best == target {
+            correct += 1;
+        }
+    }
+    ((loss / batch as f64) as f32, correct, dlogits)
+}
+
+/// ReLU applied in place; returns nothing (derivative is recomputed from
+/// the pre-activation sign where needed).
+pub fn relu(xs: &mut [f32]) {
+    for v in xs {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        // all-zero logits: loss = ln(C), grads = (1/C - onehot)/B
+        let logits = vec![0f32; 2 * 4];
+        let (loss, _correct, d) = softmax_ce(&logits, &[1, 3], 4);
+        assert!((loss - (4f32).ln()).abs() < 1e-6);
+        assert!((d[0] - 0.25 / 2.0).abs() < 1e-6);
+        assert!((d[1] - (0.25 - 1.0) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_ce_counts_correct() {
+        let logits = vec![5.0, 0.0, 0.0, 0.0, 0.0, 5.0];
+        let (_, correct, _) = softmax_ce(&logits, &[0, 2], 3);
+        assert_eq!(correct, 2);
+        let (_, correct2, _) = softmax_ce(&logits, &[1, 2], 3);
+        assert_eq!(correct2, 1);
+    }
+
+    #[test]
+    fn grads_sum_to_zero_per_row() {
+        let logits = vec![0.3, -1.0, 2.0, 0.1, 0.0, 0.7];
+        let (_, _, d) = softmax_ce(&logits, &[2, 0], 3);
+        for i in 0..2 {
+            let s: f32 = d[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! CSR compacted-edge MLP: the software twin of the hardware's edge-based
+//! processing (Fig. 4 layout). Storage and MACs are proportional to
+//! |W_i| = sum of in-degrees — this is where pre-defined sparsity's
+//! training-complexity reduction is actually realized in software
+//! (Sec. II-B: complexity directly proportional to the number of edges).
+
+use crate::sparsity::pattern::{NetPattern, Pattern};
+use crate::util::rng::Rng;
+
+/// One junction in compacted form: `idx/wc` rows follow the paper's edge
+/// numbering (row j = right neuron j's in-edges).
+#[derive(Clone, Debug)]
+pub struct SparseLayer {
+    pub n_left: usize,
+    pub n_right: usize,
+    /// CSR row offsets, len n_right + 1 (uniform d_in => offsets[j] = j*d_in).
+    pub offsets: Vec<u32>,
+    /// Left-neuron index per edge.
+    pub idx: Vec<u32>,
+    /// Weight per edge (the Fig. 4 weight memory).
+    pub wc: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl SparseLayer {
+    /// Build from a connection pattern with He init over the *connected*
+    /// fan-in (mean in-degree), constant bias.
+    pub fn init_he(p: &Pattern, bias_init: f32, rng: &mut Rng) -> Self {
+        let mut offsets = Vec::with_capacity(p.shape.n_right + 1);
+        let mut idx = Vec::with_capacity(p.n_edges());
+        offsets.push(0u32);
+        for edges in &p.in_edges {
+            idx.extend_from_slice(edges);
+            offsets.push(idx.len() as u32);
+        }
+        let mean_din = (p.n_edges() as f32 / p.shape.n_right as f32).max(1.0);
+        let std = (2.0 / mean_din).sqrt();
+        let wc = (0..idx.len()).map(|_| rng.normal() * std).collect();
+        SparseLayer {
+            n_left: p.shape.n_left,
+            n_right: p.shape.n_right,
+            offsets,
+            idx,
+            wc,
+            bias: vec![bias_init; p.shape.n_right],
+        }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// FF (eq. 2a): h[b, j] = sum_f wc[j, f] * a[b, idx[j, f]] + bias[j].
+    pub fn forward(&self, a: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(a.len(), batch * self.n_left);
+        assert_eq!(out.len(), batch * self.n_right);
+        for bi in 0..batch {
+            let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+            let or = &mut out[bi * self.n_right..(bi + 1) * self.n_right];
+            for j in 0..self.n_right {
+                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                let mut acc = self.bias[j];
+                for e in lo..hi {
+                    acc += self.wc[e] * ar[self.idx[e] as usize];
+                }
+                or[j] = acc;
+            }
+        }
+    }
+
+    /// BP (eq. 3b inner sum): da[b, k] = sum_j wc[j,.] delta[b, j] scattered
+    /// over idx. Caller applies the activation-derivative product.
+    pub fn backprop(&self, delta: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(delta.len(), batch * self.n_right);
+        assert_eq!(out.len(), batch * self.n_left);
+        out.fill(0.0);
+        for bi in 0..batch {
+            let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+            let or = &mut out[bi * self.n_left..(bi + 1) * self.n_left];
+            for j in 0..self.n_right {
+                let dv = dr[j];
+                if dv == 0.0 {
+                    continue;
+                }
+                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                for e in lo..hi {
+                    or[self.idx[e] as usize] += self.wc[e] * dv;
+                }
+            }
+        }
+    }
+
+    /// UP gradients (eq. 4b): gwc[e] = sum_b delta[b, j(e)] * a[b, idx[e]],
+    /// gb[j] = sum_b delta[b, j]. Adds the L2 term 2*l2*wc.
+    pub fn grads(
+        &self,
+        a: &[f32],
+        delta: &[f32],
+        batch: usize,
+        l2: f32,
+        gwc: &mut [f32],
+        gb: &mut [f32],
+    ) {
+        assert_eq!(gwc.len(), self.wc.len());
+        assert_eq!(gb.len(), self.n_right);
+        gwc.fill(0.0);
+        gb.fill(0.0);
+        for bi in 0..batch {
+            let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+            let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+            for j in 0..self.n_right {
+                let dv = dr[j];
+                if dv == 0.0 {
+                    continue;
+                }
+                gb[j] += dv;
+                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                for e in lo..hi {
+                    gwc[e] += dv * ar[self.idx[e] as usize];
+                }
+            }
+        }
+        for (g, &w) in gwc.iter_mut().zip(&self.wc) {
+            *g += 2.0 * l2 * w;
+        }
+    }
+
+    /// Densify to row-major [n_right, n_left] (for cross-checks and for
+    /// loading into the AOT masked-dense artifacts).
+    pub fn to_dense(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut w = vec![0f32; self.n_right * self.n_left];
+        let mut m = vec![0f32; self.n_right * self.n_left];
+        for j in 0..self.n_right {
+            for e in self.offsets[j] as usize..self.offsets[j + 1] as usize {
+                let k = self.idx[e] as usize;
+                w[j * self.n_left + k] = self.wc[e];
+                m[j * self.n_left + k] = 1.0;
+            }
+        }
+        (w, m)
+    }
+}
+
+/// Whole-network compacted MLP.
+#[derive(Clone, Debug)]
+pub struct SparseNet {
+    pub layers: Vec<usize>,
+    pub junctions: Vec<SparseLayer>,
+}
+
+/// Gradients in the compacted layout.
+pub struct SparseGrads {
+    pub gwc: Vec<Vec<f32>>,
+    pub gb: Vec<Vec<f32>>,
+}
+
+pub struct SparseStepOut {
+    pub loss: f32,
+    pub correct: usize,
+    pub grads: SparseGrads,
+}
+
+impl SparseNet {
+    pub fn init_he(pattern: &NetPattern, bias_init: f32, rng: &mut Rng) -> Self {
+        let mut layers = vec![pattern.junctions[0].shape.n_left];
+        layers.extend(pattern.junctions.iter().map(|p| p.shape.n_right));
+        SparseNet {
+            layers,
+            junctions: pattern
+                .junctions
+                .iter()
+                .map(|p| SparseLayer::init_he(p, bias_init, rng))
+                .collect(),
+        }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.junctions.iter().map(|j| j.n_edges()).sum()
+    }
+
+    pub fn logits(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut a = x.to_vec();
+        let l = self.junctions.len();
+        for (i, junction) in self.junctions.iter().enumerate() {
+            let mut h = vec![0f32; batch * junction.n_right];
+            junction.forward(&a, batch, &mut h);
+            if i != l - 1 {
+                super::relu(&mut h);
+            }
+            a = h;
+        }
+        a
+    }
+
+    /// Forward + backward over a minibatch.
+    pub fn step(&self, x: &[f32], y: &[i32], batch: usize, l2: f32) -> SparseStepOut {
+        let l = self.junctions.len();
+        let classes = *self.layers.last().unwrap();
+        // forward, keeping activations and pre-activations
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(l);
+        for (i, junction) in self.junctions.iter().enumerate() {
+            let mut h = vec![0f32; batch * junction.n_right];
+            junction.forward(&acts[i], batch, &mut h);
+            pre.push(h.clone());
+            if i != l - 1 {
+                super::relu(&mut h);
+            }
+            acts.push(h);
+        }
+        let (loss, correct, dlogits) = super::softmax_ce(acts.last().unwrap(), y, classes);
+
+        let mut gwc = Vec::with_capacity(l);
+        let mut gb = Vec::with_capacity(l);
+        for junction in &self.junctions {
+            gwc.push(vec![0f32; junction.wc.len()]);
+            gb.push(vec![0f32; junction.n_right]);
+        }
+        let mut dh = dlogits;
+        for i in (0..l).rev() {
+            let junction = &self.junctions[i];
+            junction.grads(&acts[i], &dh, batch, l2, &mut gwc[i], &mut gb[i]);
+            if i > 0 {
+                let mut da = vec![0f32; batch * junction.n_left];
+                junction.backprop(&dh, batch, &mut da);
+                for (dv, &hv) in da.iter_mut().zip(&pre[i - 1]) {
+                    if hv <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+                dh = da;
+            }
+        }
+        SparseStepOut {
+            loss,
+            correct,
+            grads: SparseGrads { gwc, gb },
+        }
+    }
+
+    pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
+        let batch = y.len();
+        let classes = *self.layers.last().unwrap();
+        let logits = self.logits(x, batch);
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / batch as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::dense::DenseNet;
+    use crate::sparsity::config::{DoutConfig, NetConfig};
+    use crate::sparsity::{generate, Method};
+
+    fn setup(seed: u64) -> (SparseNet, DenseNet, Vec<f32>, Vec<i32>) {
+        let net = NetConfig::new(vec![20, 12, 6]);
+        let dout = DoutConfig(vec![6, 3]);
+        let mut rng = Rng::new(seed);
+        let pattern = generate(Method::Structured, &net, &dout, None, &mut rng);
+        let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+        // mirror into a dense net with identical weights + masks
+        let mut dnet = DenseNet::init_he(&[20, 12, 6], 0.1, &mut rng);
+        let mut masks = Vec::new();
+        for (i, j) in snet.junctions.iter().enumerate() {
+            let (w, m) = j.to_dense();
+            dnet.w[i] = w;
+            dnet.b[i] = j.bias.clone();
+            masks.push(m);
+        }
+        dnet.set_masks(masks);
+        let x: Vec<f32> = (0..8 * 20).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..8).map(|_| rng.below(6) as i32).collect();
+        (snet, dnet, x, y)
+    }
+
+    #[test]
+    fn sparse_forward_matches_masked_dense() {
+        let (snet, dnet, x, _) = setup(0);
+        let ls = snet.logits(&x, 8);
+        let ld = dnet.logits(&x, 8);
+        for (a, b) in ls.iter().zip(&ld) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_grads_match_masked_dense() {
+        let (snet, dnet, x, y) = setup(1);
+        let so = snet.step(&x, &y, 8, 0.01);
+        let dor = dnet.step(&x, &y, 8, 0.01, None);
+        assert!((so.loss - dor.loss).abs() < 1e-5);
+        assert_eq!(so.correct, dor.correct);
+        for (i, j) in snet.junctions.iter().enumerate() {
+            // compacted grads scattered to dense must equal the dense grads
+            let nl = j.n_left;
+            for jr in 0..j.n_right {
+                for e in j.offsets[jr] as usize..j.offsets[jr + 1] as usize {
+                    let k = j.idx[e] as usize;
+                    let dg = dor.grads.gw[i][jr * nl + k];
+                    assert!(
+                        (so.grads.gwc[i][e] - dg).abs() < 1e-4,
+                        "junction {i} edge {e}: {} vs {dg}",
+                        so.grads.gwc[i][e]
+                    );
+                }
+            }
+            for (a, b) in so.grads.gb[i].iter().zip(&dor.grads.gb[i]) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn edge_count_matches_pattern() {
+        let (snet, _, _, _) = setup(2);
+        assert_eq!(snet.n_edges(), 20 * 6 + 12 * 3);
+    }
+
+    #[test]
+    fn variable_degree_csr_roundtrip() {
+        // non-uniform in-degree (random pattern) works through CSR
+        let net = NetConfig::new(vec![30, 10, 5]);
+        let mut rng = Rng::new(3);
+        let pattern = generate(
+            Method::Random,
+            &net,
+            &DoutConfig(vec![3, 2]),
+            None,
+            &mut rng,
+        );
+        let snet = SparseNet::init_he(&pattern, 0.0, &mut rng);
+        assert_eq!(snet.n_edges(), 30 * 3 + 10 * 2);
+        let x: Vec<f32> = (0..4 * 30).map(|_| rng.normal()).collect();
+        let logits = snet.logits(&x, 4);
+        assert_eq!(logits.len(), 4 * 5);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,313 @@
+//! Training loop for the native nets: epochs, shuffled minibatches, Adam,
+//! L2 / LSS-L1 regularization, and the Sec. III-D pipeline-staleness
+//! emulation (UP applied 2(L-i)+1 steps late, per junction).
+
+use std::collections::VecDeque;
+
+use super::adam::{Adam, AdamConfig};
+use super::dense::DenseNet;
+use super::sparse::SparseNet;
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Either backend: masked-dense (FC / LSS) or compacted CSR (pre-defined
+/// sparse patterns — compute proportional to |W|).
+pub enum Network {
+    Dense(DenseNet),
+    Sparse(SparseNet),
+}
+
+impl Network {
+    pub fn layers(&self) -> &[usize] {
+        match self {
+            Network::Dense(n) => &n.layers,
+            Network::Sparse(n) => &n.layers,
+        }
+    }
+
+    pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
+        match self {
+            Network::Dense(n) => n.accuracy(x, y),
+            Network::Sparse(n) => n.accuracy(x, y),
+        }
+    }
+
+    /// Trainable parameter count (weights + biases actually stored).
+    pub fn n_params(&self) -> usize {
+        match self {
+            Network::Dense(n) => n
+                .masks
+                .iter()
+                .map(|m| m.iter().filter(|&&v| v == 1.0).count())
+                .sum::<usize>()
+                + n.b.iter().map(|b| b.len()).sum::<usize>(),
+            Network::Sparse(n) => {
+                n.n_edges() + n.junctions.iter().map(|j| j.bias.len()).sum::<usize>()
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub adam: AdamConfig,
+    /// L2 penalty coefficient (the paper reduces it with sparsity since
+    /// sparse nets overfit less, Sec. IV-A).
+    pub l2: f32,
+    /// Per-junction L1 penalty gammas: the §V-B LSS objective (dense only).
+    pub l1: Option<Vec<f32>>,
+    pub seed: u64,
+    /// Emulate the hardware pipeline's delayed updates (Sec. III-D).
+    pub stale_updates: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 12,
+            batch: 64,
+            adam: AdamConfig::default(),
+            l2: 1e-4,
+            l1: None,
+            seed: 0,
+            stale_updates: false,
+        }
+    }
+}
+
+/// Scale the L2 coefficient down with density, mirroring Sec. IV-A's
+/// "reduced the L2 penalty coefficient with increasing sparsity".
+pub fn l2_for_density(base: f32, rho_net: f64) -> f32 {
+    base * rho_net as f32
+}
+
+#[derive(Clone, Debug)]
+pub struct EpochStat {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub train_acc: f64,
+    pub test_acc: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct History {
+    pub epochs: Vec<EpochStat>,
+}
+
+impl History {
+    pub fn final_test_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn best_test_acc(&self) -> f64 {
+        self.epochs.iter().map(|e| e.test_acc).fold(0.0, f64::max)
+    }
+}
+
+/// Chunked accuracy over a whole dataset.
+pub fn evaluate(net: &Network, ds: &Dataset) -> f64 {
+    let chunk = 512;
+    let mut correct = 0f64;
+    let mut i = 0;
+    while i < ds.n {
+        let hi = (i + chunk).min(ds.n);
+        let idx: Vec<usize> = (i..hi).collect();
+        let (x, y) = ds.gather(&idx);
+        correct += net.accuracy(&x, &y) * (hi - i) as f64;
+        i = hi;
+    }
+    correct / ds.n as f64
+}
+
+/// Train `net` on `train_ds`, reporting test accuracy each epoch.
+pub fn train(
+    net: &mut Network,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    cfg: &TrainConfig,
+) -> History {
+    let shapes: Vec<(usize, usize)> = match net {
+        Network::Dense(n) => n
+            .w
+            .iter()
+            .zip(&n.b)
+            .map(|(w, b)| (w.len(), b.len()))
+            .collect(),
+        Network::Sparse(n) => n
+            .junctions
+            .iter()
+            .map(|j| (j.wc.len(), j.bias.len()))
+            .collect(),
+    };
+    let l = shapes.len();
+    let mut opt = Adam::new(cfg.adam, &shapes);
+    let mut rng = Rng::new(cfg.seed ^ 0x7261696e);
+    let mut order: Vec<usize> = (0..train_ds.n).collect();
+    // staleness FIFOs: junction i (0-based) delays by 2(L-(i+1))+1 steps
+    let mut queues: Vec<VecDeque<(Vec<f32>, Vec<f32>)>> = (0..l).map(|_| VecDeque::new()).collect();
+    let depth = |i: usize| 2 * (l - (i + 1)) + 1;
+
+    let mut history = History { epochs: Vec::new() };
+    for epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut loss_sum = 0f64;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        for chunk in order.chunks(cfg.batch) {
+            let (x, y) = train_ds.gather(chunk);
+            let batch = chunk.len();
+            let (loss, corr, mut gw, mut gb) = match net {
+                Network::Dense(n) => {
+                    let out = n.step(&x, &y, batch, cfg.l2, cfg.l1.as_deref());
+                    (out.loss, out.correct, out.grads.gw, out.grads.gb)
+                }
+                Network::Sparse(n) => {
+                    let out = n.step(&x, &y, batch, cfg.l2);
+                    (out.loss, out.correct, out.grads.gwc, out.grads.gb)
+                }
+            };
+            loss_sum += loss as f64 * batch as f64;
+            correct += corr;
+            seen += batch;
+            if cfg.stale_updates {
+                // push fresh grads; apply the delayed ones (zeros during
+                // pipeline warmup — junction i's first updates are skipped)
+                for i in 0..l {
+                    queues[i].push_back((std::mem::take(&mut gw[i]), std::mem::take(&mut gb[i])));
+                    if queues[i].len() > depth(i) {
+                        let (dgw, dgb) = queues[i].pop_front().unwrap();
+                        gw[i] = dgw;
+                        gb[i] = dgb;
+                    } else {
+                        gw[i] = vec![0.0; shapes[i].0];
+                        gb[i] = vec![0.0; shapes[i].1];
+                    }
+                }
+            }
+            match net {
+                Network::Dense(n) => {
+                    opt.step(&mut n.w, &mut n.b, &gw, &gb);
+                    n.apply_masks();
+                }
+                Network::Sparse(n) => {
+                    let mut ws: Vec<Vec<f32>> = n
+                        .junctions
+                        .iter_mut()
+                        .map(|j| std::mem::take(&mut j.wc))
+                        .collect();
+                    let mut bs: Vec<Vec<f32>> = n
+                        .junctions
+                        .iter_mut()
+                        .map(|j| std::mem::take(&mut j.bias))
+                        .collect();
+                    opt.step(&mut ws, &mut bs, &gw, &gb);
+                    for ((j, w), b) in n.junctions.iter_mut().zip(ws).zip(bs) {
+                        j.wc = w;
+                        j.bias = b;
+                    }
+                }
+            }
+        }
+        let test_acc = evaluate(net, test_ds);
+        history.epochs.push(EpochStat {
+            epoch,
+            train_loss: (loss_sum / seen as f64) as f32,
+            train_acc: correct as f64 / seen as f64,
+            test_acc,
+        });
+    }
+    history
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Spec;
+    use crate::sparsity::config::{DoutConfig, NetConfig};
+    use crate::sparsity::{generate, Method};
+
+    fn tiny_data() -> (Dataset, Dataset) {
+        let spec = Spec {
+            name: "toy",
+            features: 16,
+            classes: 4,
+            latent_dim: 6,
+            shaping: crate::data::Shaping::Continuous,
+            separation: 3.0,
+            noise: 0.3,
+        };
+        let s = spec.splits(400, 0, 120, 11);
+        (s.train, s.test)
+    }
+
+    #[test]
+    fn dense_fc_learns() {
+        let (train_ds, test_ds) = tiny_data();
+        let mut rng = Rng::new(0);
+        let mut net = Network::Dense(DenseNet::init_he(&[16, 24, 4], 0.1, &mut rng));
+        let cfg = TrainConfig {
+            epochs: 8,
+            batch: 32,
+            ..Default::default()
+        };
+        let h = train(&mut net, &train_ds, &test_ds, &cfg);
+        assert!(
+            h.final_test_acc() > 0.8,
+            "FC acc {} (chance 0.25)",
+            h.final_test_acc()
+        );
+        assert!(h.epochs[0].train_loss > h.epochs.last().unwrap().train_loss);
+    }
+
+    #[test]
+    fn sparse_backend_learns_comparably() {
+        let (train_ds, test_ds) = tiny_data();
+        let netc = NetConfig::new(vec![16, 24, 4]);
+        let dout = DoutConfig(vec![12, 2]);
+        let mut rng = Rng::new(1);
+        let pattern = generate(Method::Structured, &netc, &dout, None, &mut rng);
+        let mut net = Network::Sparse(SparseNet::init_he(&pattern, 0.1, &mut rng));
+        let cfg = TrainConfig {
+            epochs: 16,
+            batch: 32,
+            ..Default::default()
+        };
+        let h = train(&mut net, &train_ds, &test_ds, &cfg);
+        assert!(h.final_test_acc() > 0.7, "sparse acc {}", h.final_test_acc());
+    }
+
+    #[test]
+    fn stale_updates_do_not_break_training() {
+        // Sec. III-D: "we found no performance degradation due to this
+        // variation from the standard backpropagation algorithm"
+        let (train_ds, test_ds) = tiny_data();
+        let mut rng = Rng::new(2);
+        let mut net = Network::Dense(DenseNet::init_he(&[16, 24, 24, 4], 0.1, &mut rng));
+        let cfg = TrainConfig {
+            epochs: 8,
+            batch: 32,
+            stale_updates: true,
+            ..Default::default()
+        };
+        let h = train(&mut net, &train_ds, &test_ds, &cfg);
+        assert!(h.final_test_acc() > 0.75, "stale acc {}", h.final_test_acc());
+    }
+
+    #[test]
+    fn n_params_counts_stored_values() {
+        let netc = NetConfig::new(vec![16, 8, 4]);
+        let dout = DoutConfig(vec![4, 2]);
+        let mut rng = Rng::new(3);
+        let pattern = generate(Method::Structured, &netc, &dout, None, &mut rng);
+        let net = Network::Sparse(SparseNet::init_he(&pattern, 0.1, &mut rng));
+        assert_eq!(net.n_params(), 16 * 4 + 8 * 2 + 8 + 4);
+    }
+
+    #[test]
+    fn l2_for_density_scales() {
+        assert_eq!(l2_for_density(1e-3, 1.0), 1e-3);
+        assert!(l2_for_density(1e-3, 0.2) < 3e-4);
+    }
+}

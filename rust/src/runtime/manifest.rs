@@ -1,0 +1,200 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    pub gather_dout: Option<Vec<usize>>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec, String> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or("spec missing name")?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .ok_or("spec missing shape")?
+        .iter()
+        .map(|v| v.as_usize().ok_or("bad dim"))
+        .collect::<Result<Vec<_>, _>>()?;
+    let dtype = match j.get("dtype").and_then(|v| v.as_str()) {
+        Some("f32") => Dtype::F32,
+        Some("i32") => Dtype::I32,
+        other => return Err(format!("unsupported dtype {other:?}")),
+    };
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+/// Cheap host-side config probe (no PJRT involvement).
+pub struct ProbeInfo {
+    pub layers: Vec<usize>,
+    pub batch: usize,
+}
+
+impl Manifest {
+    /// Read just one config's shape info from `<dir>/manifest.json`.
+    pub fn probe(
+        dir: impl AsRef<std::path::Path>,
+        config: &str,
+    ) -> anyhow::Result<ProbeInfo> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} — run `make artifacts`", path.display()))?;
+        let m = Manifest::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let entry = m
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow::anyhow!("config '{config}' not in manifest"))?;
+        Ok(ProbeInfo {
+            layers: entry.layers.clone(),
+            batch: entry.batch,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let root = Json::parse(text)?;
+        let mut configs = BTreeMap::new();
+        let cfgs = root
+            .get("configs")
+            .and_then(|v| v.as_obj())
+            .ok_or("manifest missing configs")?;
+        for (name, entry) in cfgs {
+            let layers = entry
+                .get("layers")
+                .and_then(|v| v.as_arr())
+                .ok_or("config missing layers")?
+                .iter()
+                .map(|v| v.as_usize().ok_or("bad layer"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let batch = entry
+                .get("batch")
+                .and_then(|v| v.as_usize())
+                .ok_or("config missing batch")?;
+            let gather_dout = entry.get("gather_dout").and_then(|v| v.as_arr()).map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_usize())
+                    .collect::<Vec<usize>>()
+            });
+            let mut programs = BTreeMap::new();
+            let progs = entry
+                .get("programs")
+                .and_then(|v| v.as_obj())
+                .ok_or("config missing programs")?;
+            for (tag, p) in progs {
+                let file = p
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or("program missing file")?
+                    .to_string();
+                let inputs = p
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("program missing inputs")?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<Vec<_>, _>>()?;
+                let outputs = p
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("program missing outputs")?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<Vec<_>, _>>()?;
+                programs.insert(tag.clone(), ProgramSpec { file, inputs, outputs });
+            }
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    layers,
+                    batch,
+                    gather_dout,
+                    programs,
+                },
+            );
+        }
+        Ok(Manifest { configs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"configs": {"tiny": {
+        "layers": [32, 16, 8], "batch": 16, "gather_dout": [4, 4],
+        "programs": {"train": {"file": "tiny_train.hlo.txt",
+            "inputs": [{"name": "w1", "shape": [16, 32], "dtype": "f32"},
+                       {"name": "y", "shape": [16], "dtype": "i32"},
+                       {"name": "t", "shape": [], "dtype": "f32"}],
+            "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}}}}}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let tiny = &m.configs["tiny"];
+        assert_eq!(tiny.layers, vec![32, 16, 8]);
+        assert_eq!(tiny.batch, 16);
+        assert_eq!(tiny.gather_dout, Some(vec![4, 4]));
+        let train = &tiny.programs["train"];
+        assert_eq!(train.file, "tiny_train.hlo.txt");
+        assert_eq!(train.inputs.len(), 3);
+        assert_eq!(train.inputs[1].dtype, Dtype::I32);
+        assert_eq!(train.inputs[2].shape, Vec::<usize>::new());
+        assert_eq!(train.outputs[0].name, "loss");
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("i32", "f64");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.configs.contains_key("tiny"));
+            let tiny = &m.configs["tiny"];
+            // train signature: 6L params + L masks + x,y,t,lr,l2
+            let train = &tiny.programs["train"];
+            let l = tiny.layers.len() - 1;
+            assert_eq!(train.inputs.len(), 7 * l + 5);
+            assert_eq!(train.outputs.len(), 6 * l + 3);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python never runs here — `make artifacts` is the only compile-path step;
+//! afterwards the `pds` binary is self-contained. The manifest
+//! (`artifacts/manifest.json`) describes every program's positional
+//! input/output literals so marshalling is validated, not guessed.
+
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub use manifest::{ConfigEntry, Dtype, Manifest, ProgramSpec, TensorSpec};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(d, _) => d.len(),
+            Value::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(..) => Dtype::F32,
+            Value::I32(..) => Dtype::I32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(data, shape) => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            Value::I32(data, shape) => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            Value::F32(d, _) if d.len() == 1 => Ok(d[0]),
+            _ => bail!("expected f32 scalar"),
+        }
+    }
+}
+
+/// The PJRT client (CPU plugin, the platform the xla 0.1.6 crate ships).
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+/// One compiled executable with its validated signature.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ProgramSpec,
+    pub name: String,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory (reads
+    /// `manifest.json`; fails with guidance if `make artifacts` never ran).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("bad manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            artifacts_dir: dir,
+            manifest,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile `programs[program]` of config `config`.
+    pub fn load(&self, config: &str, program: &str) -> Result<Program> {
+        let entry = self
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("config '{config}' not in manifest"))?;
+        let spec = entry
+            .programs
+            .get(program)
+            .ok_or_else(|| anyhow!("program '{program}' not in config '{config}'"))?;
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Program {
+            exe,
+            spec: spec.clone(),
+            name: format!("{config}/{program}"),
+        })
+    }
+}
+
+impl Program {
+    /// Execute with positional inputs; validates every shape/dtype against
+    /// the manifest and returns outputs in manifest order.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: {} inputs given, manifest wants {}",
+                self.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (v, spec) in inputs.iter().zip(&self.spec.inputs) {
+            let want: usize = spec.shape.iter().product();
+            if v.len() != want || v.dtype() != spec.dtype {
+                bail!(
+                    "{}: input '{}' expects {:?}{:?}, got {:?} with {} elements",
+                    self.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    v.dtype(),
+                    v.len()
+                );
+            }
+            literals.push(v.to_literal()?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, manifest says {}",
+                self.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
+            let v = match spec.dtype {
+                Dtype::F32 => Value::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+                Dtype::I32 => Value::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Index of a named input in the positional signature.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{}: no input named '{name}'", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes_and_accessors() {
+        let v = Value::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.as_f32().unwrap()[3], 4.0);
+        assert!(v.scalar().is_err());
+        let s = Value::scalar_f32(7.5);
+        assert_eq!(s.scalar().unwrap(), 7.5);
+        assert_eq!(s.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    fn engine_requires_manifest() {
+        let err = match Engine::new("/nonexistent/dir") {
+            Err(e) => e,
+            Ok(_) => panic!("engine created from nonexistent dir"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

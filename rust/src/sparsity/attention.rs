@@ -1,0 +1,169 @@
+//! Attention-based preprocessed sparsity (Sec. V-A): quantize input-feature
+//! variance into three attention levels and give high-variance inputs more
+//! out-connections; later junctions stay uniform.
+
+use super::config::JunctionShape;
+use super::pattern::Pattern;
+use crate::util::rng::Rng;
+
+/// Out-degree per input neuron from feature variances: variances are
+/// quantized into three levels by terciles; levels get weights (w, 2w, 3w)
+/// scaled so total edges ~= n_left * base_dout, each clamped to
+/// [1, n_right].
+pub fn variance_out_degrees(variances: &[f32], base_dout: usize, n_right: usize) -> Vec<usize> {
+    let n = variances.len();
+    assert!(n > 0 && base_dout >= 1);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| variances[a].total_cmp(&variances[b]));
+    // tercile level per neuron: 1 (low), 2 (mid), 3 (high attention)
+    let mut level = vec![1usize; n];
+    for (rank, &i) in order.iter().enumerate() {
+        level[i] = 1 + (rank * 3) / n;
+    }
+    let level_sum: usize = level.iter().sum();
+    let target_edges = n * base_dout;
+    let mut d: Vec<usize> = level
+        .iter()
+        .map(|&l| ((l * target_edges) as f64 / level_sum as f64).round().max(1.0) as usize)
+        .map(|d| d.clamp(1, n_right))
+        .collect();
+    // nudge to hit the exact edge budget (keeps comparisons density-matched)
+    let mut total: isize = d.iter().sum::<usize>() as isize;
+    let want = target_edges as isize;
+    let mut rank_iter_up = order.iter().rev().cycle();
+    let mut rank_iter_down = order.iter().cycle();
+    while total < want {
+        let &i = rank_iter_up.next().unwrap();
+        if d[i] < n_right {
+            d[i] += 1;
+            total += 1;
+        }
+    }
+    while total > want {
+        let &i = rank_iter_down.next().unwrap();
+        if d[i] > 1 {
+            d[i] -= 1;
+            total -= 1;
+        }
+    }
+    d
+}
+
+/// Build a pattern with the given per-left-neuron out-degrees: each left
+/// neuron's stubs are dealt to right neurons, keeping in-degrees balanced
+/// (right neurons filled in random order of current in-degree).
+pub fn generate_with_out_degrees(
+    shape: JunctionShape,
+    out_degrees: &[usize],
+    rng: &mut Rng,
+) -> Pattern {
+    assert_eq!(out_degrees.len(), shape.n_left);
+    let mut in_edges: Vec<Vec<u32>> = vec![Vec::new(); shape.n_right];
+    // process left neurons in random order; for each, connect to the
+    // out_degree right neurons with the lowest current in-degree (ties
+    // broken randomly) that it is not already connected to.
+    let mut left_order: Vec<usize> = (0..shape.n_left).collect();
+    rng.shuffle(&mut left_order);
+    for &k in &left_order {
+        let dk = out_degrees[k].min(shape.n_right);
+        let mut cand: Vec<usize> = (0..shape.n_right).collect();
+        rng.shuffle(&mut cand);
+        cand.sort_by_key(|&j| in_edges[j].len());
+        let mut placed = 0;
+        for &j in &cand {
+            if placed == dk {
+                break;
+            }
+            if !in_edges[j].contains(&(k as u32)) {
+                in_edges[j].push(k as u32);
+                placed += 1;
+            }
+        }
+        assert_eq!(placed, dk, "could not place left neuron {k}");
+    }
+    Pattern { shape, in_edges }
+}
+
+/// Full §V-A pattern for a network: attention-weighted first junction,
+/// structured uniform for the rest.
+pub fn generate_net(
+    net: &super::config::NetConfig,
+    dout: &super::config::DoutConfig,
+    feature_variances: &[f32],
+    rng: &mut Rng,
+) -> super::pattern::NetPattern {
+    let mut junctions = Vec::new();
+    for i in 0..net.n_junctions() {
+        let shape = net.junction(i);
+        if i == 0 {
+            let d = variance_out_degrees(feature_variances, dout.0[0], shape.n_right);
+            junctions.push(generate_with_out_degrees(shape, &d, rng));
+        } else {
+            junctions.push(super::structured::generate(shape, dout.0[i], rng));
+        }
+    }
+    super::pattern::NetPattern { junctions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::config::{DoutConfig, NetConfig};
+
+    #[test]
+    fn high_variance_features_get_more_edges() {
+        let mut var = vec![0.1f32; 30];
+        for v in var.iter_mut().take(10) {
+            *v = 10.0;
+        }
+        let d = variance_out_degrees(&var, 4, 50);
+        let high: usize = d[..10].iter().sum();
+        let low: usize = d[10..20].iter().sum();
+        assert!(high > low, "high {high} low {low}");
+        assert_eq!(d.iter().sum::<usize>(), 30 * 4);
+    }
+
+    #[test]
+    fn edge_budget_is_exact() {
+        let mut rng = Rng::new(0);
+        let var: Vec<f32> = (0..100).map(|_| rng.uniform()).collect();
+        let d = variance_out_degrees(&var, 7, 40);
+        assert_eq!(d.iter().sum::<usize>(), 700);
+        assert!(d.iter().all(|&x| (1..=40).contains(&x)));
+    }
+
+    #[test]
+    fn generated_pattern_valid_with_balanced_in_degree() {
+        let mut rng = Rng::new(1);
+        let shape = JunctionShape { n_left: 60, n_right: 20 };
+        let var: Vec<f32> = (0..60).map(|i| i as f32).collect();
+        let d = variance_out_degrees(&var, 5, 20);
+        let p = generate_with_out_degrees(shape, &d, &mut rng);
+        p.audit().unwrap();
+        assert_eq!(p.n_edges(), 300);
+        assert_eq!(p.out_degrees(), d);
+        let din = p.in_degrees();
+        let (mn, mx) = (din.iter().min().unwrap(), din.iter().max().unwrap());
+        assert!(mx - mn <= 2, "in-degrees unbalanced: {din:?}");
+    }
+
+    #[test]
+    fn net_pattern_density_matches_uniform_target() {
+        let mut rng = Rng::new(2);
+        let net = NetConfig::new(vec![50, 20, 10]);
+        let dout = DoutConfig(vec![4, 5]);
+        let var: Vec<f32> = (0..50).map(|_| rng.uniform()).collect();
+        let p = generate_net(&net, &dout, &var, &mut rng);
+        let uniform = super::super::generate(
+            super::super::Method::Structured,
+            &net,
+            &dout,
+            None,
+            &mut rng,
+        );
+        assert_eq!(
+            p.junctions[0].n_edges() + p.junctions[1].n_edges(),
+            uniform.junctions[0].n_edges() + uniform.junctions[1].n_edges()
+        );
+    }
+}

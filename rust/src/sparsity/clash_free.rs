@@ -1,0 +1,441 @@
+//! Clash-free connection patterns (Sec. III-C, Appendix C).
+//!
+//! Left-bank storage layout (Fig. 2b / Fig. 4): left neuron `n` lives in
+//! memory `n % z` at address `n / z`; the bank has `z` memories of depth
+//! `D = N_l / z`. A pattern is defined by the address each of the `z`
+//! lanes reads every cycle; one element per memory per cycle = clash-free
+//! by construction. Edges are numbered sequentially by right neuron
+//! (Sec. III-B): cycle `t` processes edges `[t*z, (t+1)*z)`, lane `m`
+//! carries edge `t*z + m`, and edge `e` terminates at right neuron
+//! `e / d_in`.
+//!
+//! Three flavors (Appendix C, Fig. 13), each optionally memory-dithered:
+//! - Type 1: one seed vector `phi`, addresses advance cyclically
+//!   (`addr = (phi[m] + c) mod D`), identical every sweep. Hardware cost:
+//!   store `phi`, use `z` incrementers.
+//! - Type 2: a fresh seed vector per sweep (our earlier FPGA work [40]).
+//! - Type 3: an arbitrary per-sweep address matrix `Phi in {0..D-1}^{D x z}`
+//!   whose columns are permutations (full access-sequence storage).
+
+use super::config::JunctionShape;
+use super::pattern::Pattern;
+use crate::util::rng::Rng;
+
+/// Clash-free pattern flavor (Appendix C types 1-3) with optional memory
+/// dithering (per-sweep permutation of the z memories; type 1 keeps a
+/// single permutation since its access pattern repeats every sweep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    Type1 { dither: bool },
+    Type2 { dither: bool },
+    Type3 { dither: bool },
+}
+
+impl Flavor {
+    pub fn name(&self) -> String {
+        let (t, d) = match self {
+            Flavor::Type1 { dither } => (1, dither),
+            Flavor::Type2 { dither } => (2, dither),
+            Flavor::Type3 { dither } => (3, dither),
+        };
+        format!("type{}{}", t, if *d { "+dither" } else { "" })
+    }
+}
+
+/// The per-cycle left-bank access schedule: `schedule[cycle][lane] =
+/// (memory, address)`. This is what the hardware's address generators
+/// emit, and what `hw::junction` replays against the banked memories.
+pub struct AccessSchedule {
+    pub z: usize,
+    pub depth: usize,
+    /// `d_out` sweeps x `depth` cycles.
+    pub cycles: Vec<Vec<(usize, usize)>>,
+}
+
+impl AccessSchedule {
+    /// Left neuron read by `lane` in `cycle` under the Fig. 4 layout.
+    pub fn neuron(&self, cycle: usize, lane: usize) -> usize {
+        let (mem, addr) = self.cycles[cycle][lane];
+        addr * self.z + mem
+    }
+
+    /// Verify the defining property: each memory accessed at most once per
+    /// cycle, and within every sweep each memory visits every address
+    /// exactly once (no neuron skipped or repeated in a sweep, Sec. III-B).
+    pub fn verify_clash_free(&self) -> Result<(), String> {
+        for (t, lanes) in self.cycles.iter().enumerate() {
+            let mut hit = vec![false; self.z];
+            for &(mem, addr) in lanes {
+                if mem >= self.z || addr >= self.depth {
+                    return Err(format!("cycle {t}: access ({mem},{addr}) out of range"));
+                }
+                if hit[mem] {
+                    return Err(format!("cycle {t}: memory {mem} accessed twice (clash)"));
+                }
+                hit[mem] = true;
+            }
+        }
+        let sweeps = self.cycles.len() / self.depth;
+        for s in 0..sweeps {
+            let mut seen = vec![false; self.z * self.depth];
+            for t in s * self.depth..(s + 1) * self.depth {
+                for lane in 0..self.z {
+                    let n = self.neuron(t, lane);
+                    if seen[n] {
+                        return Err(format!("sweep {s}: neuron {n} read twice"));
+                    }
+                    seen[n] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build the access schedule for a flavor. `d_out` = number of sweeps.
+pub fn schedule(
+    n_left: usize,
+    z: usize,
+    d_out: usize,
+    flavor: Flavor,
+    rng: &mut Rng,
+) -> AccessSchedule {
+    assert!(z >= 1 && n_left % z == 0, "z must divide N_l (Appendix B)");
+    let depth = n_left / z;
+    let identity: Vec<usize> = (0..z).collect();
+    let perm = |rng: &mut Rng| {
+        let mut p: Vec<usize> = (0..z).collect();
+        rng.shuffle(&mut p);
+        p
+    };
+    let seed = |rng: &mut Rng| -> Vec<usize> { (0..z).map(|_| rng.below(depth)).collect() };
+    let col_perm = |rng: &mut Rng| {
+        let mut p: Vec<usize> = (0..depth).collect();
+        rng.shuffle(&mut p);
+        p
+    };
+
+    let mut cycles = Vec::with_capacity(d_out * depth);
+    match flavor {
+        Flavor::Type1 { dither } => {
+            let phi = seed(rng);
+            let sigma = if dither { perm(rng) } else { identity.clone() };
+            for _sweep in 0..d_out {
+                for c in 0..depth {
+                    cycles.push(
+                        (0..z)
+                            .map(|m| (sigma[m], (phi[m] + c) % depth))
+                            .collect(),
+                    );
+                }
+            }
+        }
+        Flavor::Type2 { dither } => {
+            for _sweep in 0..d_out {
+                let phi = seed(rng);
+                let sigma = if dither { perm(rng) } else { identity.clone() };
+                for c in 0..depth {
+                    cycles.push(
+                        (0..z)
+                            .map(|m| (sigma[m], (phi[m] + c) % depth))
+                            .collect(),
+                    );
+                }
+            }
+        }
+        Flavor::Type3 { dither } => {
+            for _sweep in 0..d_out {
+                let cols: Vec<Vec<usize>> = (0..z).map(|_| col_perm(rng)).collect();
+                let sigma = if dither { perm(rng) } else { identity.clone() };
+                for c in 0..depth {
+                    cycles.push((0..z).map(|m| (sigma[m], cols[m][c])).collect());
+                }
+            }
+        }
+    }
+    AccessSchedule { z, depth, cycles }
+}
+
+/// Convert an access schedule into a connection pattern for a junction
+/// with in-degree `d_in` (edge `e = t*z + m` terminates at right `e/d_in`).
+pub fn pattern_from_schedule(
+    shape: JunctionShape,
+    d_in: usize,
+    sched: &AccessSchedule,
+) -> Result<Pattern, String> {
+    let n_edges = shape.n_right * d_in;
+    assert_eq!(n_edges, sched.cycles.len() * sched.z, "schedule/edge count mismatch");
+    let mut in_edges: Vec<Vec<u32>> = vec![Vec::with_capacity(d_in); shape.n_right];
+    for t in 0..sched.cycles.len() {
+        for m in 0..sched.z {
+            let e = t * sched.z + m;
+            let j = e / d_in;
+            let n = sched.neuron(t, m);
+            if in_edges[j].contains(&(n as u32)) {
+                return Err(format!("duplicate edge: right {j} <- left {n}"));
+            }
+            in_edges[j].push(n as u32);
+        }
+    }
+    Ok(Pattern { shape, in_edges })
+}
+
+/// Generate a clash-free pattern, retrying flavors that can produce
+/// cross-sweep duplicate edges (types 2/3) until valid.
+pub fn generate(
+    shape: JunctionShape,
+    d_out: usize,
+    z: usize,
+    flavor: Flavor,
+    rng: &mut Rng,
+) -> Pattern {
+    assert_eq!(
+        (shape.n_left * d_out) % shape.n_right,
+        0,
+        "d_in not integral (Appendix A)"
+    );
+    let d_in = shape.n_left * d_out / shape.n_right;
+    for _attempt in 0..500 {
+        let sched = schedule(shape.n_left, z, d_out, flavor, rng);
+        debug_assert!(sched.verify_clash_free().is_ok());
+        if let Ok(p) = pattern_from_schedule(shape, d_in, &sched) {
+            debug_assert!(p.audit().is_ok());
+            return p;
+        }
+    }
+    panic!(
+        "no duplicate-free {} pattern found for {shape:?} d_out={d_out} z={z} after 500 draws",
+        flavor.name()
+    );
+}
+
+/// A reasonable default degree of parallelism: the largest divisor of N_l
+/// not exceeding N_l/4 (the paper picks z per hardware budget; Table II
+/// uses e.g. z=200 for N_l=800).
+pub fn default_z(shape: JunctionShape, _d_out: usize) -> usize {
+    let n = shape.n_left;
+    (1..=n / 4).rev().find(|d| n % d == 0).unwrap_or(n)
+}
+
+// ---------------------------------------------------------------------------
+// Appendix C counting: |S_Mi| and address-generation storage (Table III).
+// ---------------------------------------------------------------------------
+
+/// Count of possible left-memory access patterns, carried in log10 (the
+/// type-3 counts overflow u128 for real junctions); `exact` is provided
+/// when it fits in u128.
+#[derive(Clone, Copy, Debug)]
+pub struct PatternSpace {
+    pub log10: f64,
+    pub exact: Option<u128>,
+    /// false when the dither factor is only the (z!)^d_out upper bound
+    /// (z and d_in mutually non-divisible, Appendix C).
+    pub is_exact_formula: bool,
+}
+
+fn ln_factorial(n: usize) -> f64 {
+    (2..=n).map(|k| (k as f64).ln()).sum()
+}
+
+fn log10_factorial(n: usize) -> f64 {
+    ln_factorial(n) / std::f64::consts::LN_10
+}
+
+/// Dither multiplier K_i (eq. 13). Returns (log10 K, exact formula?).
+fn dither_factor(z: usize, d_in: usize, d_out: usize, per_sweep: bool) -> (f64, bool) {
+    let expo = if per_sweep { d_out as f64 } else { 1.0 };
+    if d_in % z == 0 {
+        // integral d_in/z: a cycle touches all memories of one right neuron
+        // group; dithering cannot change connectivity.
+        (0.0, true)
+    } else if z % d_in == 0 {
+        // K = (z! / (d_in!)^(z/d_in))^expo
+        let base = log10_factorial(z) - (z / d_in) as f64 * log10_factorial(d_in);
+        (base * expo, true)
+    } else {
+        // upper bound (z!)^expo
+        (log10_factorial(z) * expo, false)
+    }
+}
+
+/// |S_Mi| for a junction (eqs. 10-12 plus the eq. 13 dither factor).
+pub fn pattern_space(
+    shape: JunctionShape,
+    d_out: usize,
+    z: usize,
+    flavor: Flavor,
+) -> PatternSpace {
+    let depth = shape.n_left / z;
+    let d_in = shape.n_left * d_out / shape.n_right;
+    let (base_log10, dith) = match flavor {
+        Flavor::Type1 { dither } => ((z as f64) * (depth as f64).log10(), dither.then_some(false)),
+        Flavor::Type2 { dither } => (
+            (z as f64) * (d_out as f64) * (depth as f64).log10(),
+            dither.then_some(true),
+        ),
+        Flavor::Type3 { dither } => (
+            (z as f64) * (d_out as f64) * log10_factorial(depth),
+            dither.then_some(true),
+        ),
+    };
+    let (k_log10, k_exact) = match dith {
+        None => (0.0, true),
+        Some(per_sweep) => dither_factor(z, d_in, d_out, per_sweep),
+    };
+    let log10 = base_log10 + k_log10;
+    let exact = if log10 < 38.0 {
+        Some(10f64.powf(log10).round() as u128)
+    } else {
+        None
+    };
+    PatternSpace {
+        log10,
+        exact,
+        is_exact_formula: k_exact,
+    }
+}
+
+/// Address-computation storage cost in words (Table III, last column).
+pub fn address_storage_cost(shape: JunctionShape, d_out: usize, z: usize, flavor: Flavor) -> usize {
+    match flavor {
+        Flavor::Type1 { dither: false } => z,
+        Flavor::Type1 { dither: true } => 2 * z,
+        Flavor::Type2 { dither: false } => z * d_out,
+        Flavor::Type2 { dither: true } => 2 * z * d_out,
+        Flavor::Type3 { dither: false } => shape.n_left * d_out,
+        Flavor::Type3 { dither: true } => (shape.n_left + z) * d_out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL_FLAVORS: [Flavor; 6] = [
+        Flavor::Type1 { dither: false },
+        Flavor::Type1 { dither: true },
+        Flavor::Type2 { dither: false },
+        Flavor::Type2 { dither: true },
+        Flavor::Type3 { dither: false },
+        Flavor::Type3 { dither: true },
+    ];
+
+    #[test]
+    fn schedules_are_clash_free() {
+        let mut rng = Rng::new(0);
+        for flavor in ALL_FLAVORS {
+            for (nl, z, dout) in [(12, 4, 2), (800, 200, 5), (39, 13, 3)] {
+                let s = schedule(nl, z, dout, flavor, &mut rng);
+                s.verify_clash_free()
+                    .unwrap_or_else(|e| panic!("{} ({nl},{z},{dout}): {e}", flavor.name()));
+                assert_eq!(s.cycles.len(), dout * nl / z);
+            }
+        }
+    }
+
+    #[test]
+    fn generated_patterns_are_structured_and_valid() {
+        let mut rng = Rng::new(1);
+        for flavor in ALL_FLAVORS {
+            let shape = JunctionShape { n_left: 60, n_right: 30 };
+            let p = generate(shape, 6, 12, flavor, &mut rng);
+            p.audit().unwrap();
+            assert!(p.is_structured(), "{}", flavor.name());
+            assert_eq!(p.n_edges(), 360);
+            assert!(p.in_degrees().iter().all(|&d| d == 12));
+            assert!(p.out_degrees().iter().all(|&d| d == 6));
+        }
+    }
+
+    #[test]
+    fn type1_never_needs_retry() {
+        // Analytically: with one phi, any right neuron spans <= D consecutive
+        // cycles, whose addresses are distinct per memory — no duplicates.
+        let mut rng = Rng::new(2);
+        for _ in 0..30 {
+            let shape = JunctionShape { n_left: 100, n_right: 20 };
+            let sched = schedule(100, 20, 7, Flavor::Type1 { dither: true }, &mut rng);
+            assert!(pattern_from_schedule(shape, 35, &sched).is_ok());
+        }
+    }
+
+    #[test]
+    fn fig4_toy_schedule() {
+        // Sec. III-C worked example: phi = (1,0,2,2), z=4, D=3 -> cycle 0
+        // reads neurons (4,1,10,11), cycle 1 reads (8,5,2,3).
+        let sched = AccessSchedule {
+            z: 4,
+            depth: 3,
+            cycles: (0..6)
+                .map(|t| {
+                    let phi = [1usize, 0, 2, 2];
+                    (0..4).map(|m| (m, (phi[m] + t) % 3)).collect()
+                })
+                .collect(),
+        };
+        sched.verify_clash_free().unwrap();
+        assert_eq!((0..4).map(|m| sched.neuron(0, m)).collect::<Vec<_>>(), vec![4, 1, 10, 11]);
+        assert_eq!((0..4).map(|m| sched.neuron(1, m)).collect::<Vec<_>>(), vec![8, 5, 2, 3]);
+        // cycles 3-5 repeat cycles 0-2 (D = 3)
+        assert_eq!(sched.neuron(3, 0), sched.neuron(0, 0));
+    }
+
+    #[test]
+    fn table3_pattern_counts() {
+        // Table III: (N_{i-1}, N_i, d_out, d_in, z) = (12, 12, 2, 2, 4).
+        let shape = JunctionShape { n_left: 12, n_right: 12 };
+        let cases: [(Flavor, u128); 6] = [
+            (Flavor::Type1 { dither: false }, 81),
+            (Flavor::Type1 { dither: true }, 486),
+            (Flavor::Type2 { dither: false }, 6_561),
+            (Flavor::Type2 { dither: true }, 236_196),
+            (Flavor::Type3 { dither: false }, 1_679_616),
+            (Flavor::Type3 { dither: true }, 60_466_176),
+        ];
+        for (flavor, want) in cases {
+            let got = pattern_space(shape, 2, 4, flavor);
+            let exact = got.exact.expect("fits");
+            // log10-roundtrip tolerance
+            let rel = (exact as f64 - want as f64).abs() / want as f64;
+            assert!(rel < 1e-6, "{}: got {exact}, want {want}", flavor.name());
+            assert!(got.is_exact_formula);
+        }
+    }
+
+    #[test]
+    fn table3_storage_costs() {
+        let shape = JunctionShape { n_left: 12, n_right: 12 };
+        let costs: Vec<usize> = [
+            Flavor::Type1 { dither: false },
+            Flavor::Type1 { dither: true },
+            Flavor::Type2 { dither: false },
+            Flavor::Type2 { dither: true },
+            Flavor::Type3 { dither: false },
+            Flavor::Type3 { dither: true },
+        ]
+        .iter()
+        .map(|f| address_storage_cost(shape, 2, 4, *f))
+        .collect();
+        assert_eq!(costs, vec![4, 8, 8, 16, 24, 32]);
+    }
+
+    #[test]
+    fn dither_factor_cases() {
+        // d_in % z == 0 -> no effect
+        assert_eq!(dither_factor(4, 8, 3, true).0, 0.0);
+        // z % d_in == 0, z/d_in = 2: K = 4!/(2!^2) = 6 per sweep
+        let (lg, exact) = dither_factor(4, 2, 2, true);
+        assert!(exact);
+        assert!((10f64.powf(lg) - 36.0).abs() < 1e-6); // 6^2
+        // mutually non-divisible -> upper bound flagged
+        assert!(!dither_factor(4, 3, 2, true).1);
+    }
+
+    #[test]
+    fn default_z_divides() {
+        for nl in [800, 2000, 39, 100, 12] {
+            let z = default_z(JunctionShape { n_left: nl, n_right: 10 }, 2);
+            assert_eq!(nl % z, 0, "nl={nl} z={z}");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Network/junction configuration and the density math of Sec. II-A and
+//! Appendix A.
+
+use crate::util::gcd;
+
+/// Neuronal configuration `N_net = (N_0, ..., N_L)`; layer 0 is the input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    pub layers: Vec<usize>,
+}
+
+/// One junction: `n_left = N_{i-1}` nodes on the left, `n_right = N_i`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JunctionShape {
+    pub n_left: usize,
+    pub n_right: usize,
+}
+
+/// Out-degree configuration `d_net_out = (d_1_out, ..., d_L_out)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DoutConfig(pub Vec<usize>);
+
+impl NetConfig {
+    pub fn new(layers: Vec<usize>) -> Self {
+        assert!(layers.len() >= 2, "need at least input + output layer");
+        assert!(layers.iter().all(|&n| n > 0), "empty layer");
+        Self { layers }
+    }
+
+    /// Number of junctions L for an (L+1)-layer MLP.
+    pub fn n_junctions(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// Junction i (0-based; the paper's junction i+1).
+    pub fn junction(&self, i: usize) -> JunctionShape {
+        JunctionShape {
+            n_left: self.layers[i],
+            n_right: self.layers[i + 1],
+        }
+    }
+
+    /// Fully-connected out-degree configuration.
+    pub fn fc_dout(&self) -> DoutConfig {
+        DoutConfig((1..self.layers.len()).map(|i| self.layers[i]).collect())
+    }
+
+    /// `|W_i|` per junction for out-degrees `dout`.
+    pub fn edges(&self, dout: &DoutConfig) -> Vec<usize> {
+        (0..self.n_junctions())
+            .map(|i| self.layers[i] * dout.0[i])
+            .collect()
+    }
+
+    /// Total trainable parameters (weights + biases) at out-degrees `dout`.
+    pub fn trainable_params(&self, dout: &DoutConfig) -> usize {
+        self.edges(dout).iter().sum::<usize>() + self.layers[1..].iter().sum::<usize>()
+    }
+
+    /// Overall density rho_net (eq. 1).
+    pub fn rho_net(&self, dout: &DoutConfig) -> f64 {
+        let num: usize = self.edges(dout).iter().sum();
+        let den: usize = (0..self.n_junctions())
+            .map(|i| self.layers[i] * self.layers[i + 1])
+            .sum();
+        num as f64 / den as f64
+    }
+
+    /// Per-junction densities rho_i = d_out_i / N_i.
+    pub fn rho_per_junction(&self, dout: &DoutConfig) -> Vec<f64> {
+        (0..self.n_junctions())
+            .map(|i| dout.0[i] as f64 / self.layers[i + 1] as f64)
+            .collect()
+    }
+
+    /// Validate `dout` against the structured constraints (eq. 6):
+    /// d_in = N_{i-1} d_out / N_i must be a natural number <= N_{i-1},
+    /// and d_out <= N_i.
+    pub fn validate_dout(&self, dout: &DoutConfig) -> Result<(), String> {
+        if dout.0.len() != self.n_junctions() {
+            return Err(format!(
+                "dout has {} entries for {} junctions",
+                dout.0.len(),
+                self.n_junctions()
+            ));
+        }
+        for i in 0..self.n_junctions() {
+            let s = self.junction(i);
+            let d_out = dout.0[i];
+            if d_out == 0 || d_out > s.n_right {
+                return Err(format!("junction {i}: d_out {d_out} not in 1..={}", s.n_right));
+            }
+            if (s.n_left * d_out) % s.n_right != 0 {
+                return Err(format!(
+                    "junction {i}: d_in = {}*{}/{} is not an integer (Appendix A: d_out must be a multiple of {}/gcd = {})",
+                    s.n_left,
+                    d_out,
+                    s.n_right,
+                    s.n_right,
+                    s.n_right / gcd(s.n_left, s.n_right)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// d_in per junction (requires a valid dout).
+    pub fn din(&self, dout: &DoutConfig) -> Vec<usize> {
+        (0..self.n_junctions())
+            .map(|i| {
+                let s = self.junction(i);
+                s.n_left * dout.0[i] / s.n_right
+            })
+            .collect()
+    }
+}
+
+impl JunctionShape {
+    /// The set of admissible densities (eq. 7): { k / gcd(Nl, Nr) }.
+    pub fn density_set(&self) -> Vec<f64> {
+        let g = gcd(self.n_left, self.n_right);
+        (1..=g).map(|k| k as f64 / g as f64).collect()
+    }
+
+    /// Number of admissible (d_out, d_in) pairs = gcd(Nl, Nr) (Appendix A).
+    pub fn n_density_choices(&self) -> usize {
+        gcd(self.n_left, self.n_right)
+    }
+
+    /// Smallest admissible d_out (= N_i / gcd).
+    pub fn min_dout(&self) -> usize {
+        self.n_right / gcd(self.n_left, self.n_right)
+    }
+
+    /// The admissible out-degree closest to a target density rho.
+    pub fn dout_for_density(&self, rho: f64) -> usize {
+        let step = self.min_dout();
+        let k = (rho * self.n_right as f64 / step as f64).round().max(1.0) as usize;
+        (k * step).min(self.n_right)
+    }
+}
+
+impl DoutConfig {
+    /// Paper notation, e.g. "(20, 10)".
+    pub fn show(&self) -> String {
+        let inner: Vec<String> = self.0.iter().map(|d| d.to_string()).collect();
+        format!("({})", inner.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mnist() -> NetConfig {
+        NetConfig::new(vec![800, 100, 10])
+    }
+
+    #[test]
+    fn rho_net_matches_paper_table1() {
+        // N_net = (800,100,10), d_out = (20,10): rho_net = 21% (Table I).
+        let net = mnist();
+        let dout = DoutConfig(vec![20, 10]);
+        let rho = net.rho_net(&dout);
+        assert!((rho - 0.2098).abs() < 1e-3, "rho={rho}");
+        assert_eq!(net.edges(&dout), vec![16_000, 1_000]);
+    }
+
+    #[test]
+    fn fc_dout_gives_density_one() {
+        let net = mnist();
+        let fc = net.fc_dout();
+        assert_eq!(fc.0, vec![100, 10]);
+        assert!((net.rho_net(&fc) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn din_math() {
+        // Table I: W storage = sum N_i d_in_i = 17000 for sparse.
+        let net = mnist();
+        let dout = DoutConfig(vec![20, 10]);
+        let din = net.din(&dout);
+        assert_eq!(din, vec![160, 100]);
+        let w: usize = din.iter().zip(&net.layers[1..]).map(|(d, n)| d * n).sum();
+        assert_eq!(w, 17_000);
+    }
+
+    #[test]
+    fn appendix_a_density_sets() {
+        // N_net = (117, 390, 13): gcd(117,390)=39 choices, gcd(390,13)=13.
+        let net = NetConfig::new(vec![117, 390, 13]);
+        assert_eq!(net.junction(0).n_density_choices(), 39);
+        assert_eq!(net.junction(1).n_density_choices(), 13);
+        let set = net.junction(1).density_set();
+        assert_eq!(set.len(), 13);
+        assert!((set[0] - 1.0 / 13.0).abs() < 1e-12);
+        assert!((set[12] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_dout_rejects_fractional_din() {
+        let net = NetConfig::new(vec![117, 390, 13]);
+        // junction 0: min d_out = 390/39 = 10; d_out=5 is invalid
+        assert!(net.validate_dout(&DoutConfig(vec![5, 1])).is_err());
+        assert!(net.validate_dout(&DoutConfig(vec![10, 1])).is_ok());
+        assert_eq!(net.junction(0).min_dout(), 10);
+    }
+
+    #[test]
+    fn validate_dout_bounds() {
+        let net = mnist();
+        assert!(net.validate_dout(&DoutConfig(vec![101, 10])).is_err()); // > N_1
+        assert!(net.validate_dout(&DoutConfig(vec![0, 10])).is_err());
+        assert!(net.validate_dout(&DoutConfig(vec![20])).is_err()); // wrong len
+    }
+
+    #[test]
+    fn dout_for_density_snaps_to_admissible() {
+        let j = JunctionShape { n_left: 117, n_right: 390 };
+        let d = j.dout_for_density(0.5);
+        assert_eq!(d % j.min_dout(), 0);
+        assert!((d as f64 / 390.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn trainable_params() {
+        let net = mnist();
+        assert_eq!(net.trainable_params(&net.fc_dout()), 80_000 + 1_000 + 110);
+    }
+}

@@ -1,0 +1,120 @@
+//! Pre-defined sparsity (paper Sec. II): connection-pattern generation,
+//! density math, and the clash-free patterns of Sec. III-C / Appendix C.
+//!
+//! A *pattern* is fixed before training and held fixed through training and
+//! inference. Three families are implemented, mirroring Table II:
+//! - [`clash_free`]: seed-vector cyclic patterns the hardware can stream
+//!   with zero memory contention (most constrained, hardware-friendly),
+//! - [`structured`]: fixed out-degree / in-degree, otherwise random,
+//! - [`random`]: unconstrained random edges (may disconnect neurons),
+//! plus the §V-A [`attention`] baseline with variance-weighted in-layer
+//! out-degrees.
+
+pub mod attention;
+pub mod clash_free;
+pub mod config;
+pub mod pattern;
+pub mod random;
+pub mod structured;
+
+pub use config::{DoutConfig, JunctionShape, NetConfig};
+pub use pattern::{NetPattern, Pattern};
+
+use crate::util::rng::Rng;
+
+/// Pattern family selector used by experiments and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    ClashFree,
+    Structured,
+    Random,
+}
+
+impl Method {
+    pub const ALL: [Method; 3] = [Method::ClashFree, Method::Structured, Method::Random];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::ClashFree => "clash-free",
+            Method::Structured => "structured",
+            Method::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "clash-free" | "clashfree" | "cf" => Some(Method::ClashFree),
+            "structured" | "s" => Some(Method::Structured),
+            "random" | "r" => Some(Method::Random),
+            _ => None,
+        }
+    }
+}
+
+/// Generate a whole-network pattern for `net` with out-degrees `dout`.
+///
+/// For [`Method::ClashFree`], `znet` (degree-of-parallelism per junction)
+/// shapes the pattern; pass `None` to auto-derive a balanced z-config.
+pub fn generate(
+    method: Method,
+    net: &NetConfig,
+    dout: &DoutConfig,
+    znet: Option<&[usize]>,
+    rng: &mut Rng,
+) -> NetPattern {
+    let junctions: Vec<Pattern> = (0..net.n_junctions())
+        .map(|i| {
+            let shape = net.junction(i);
+            match method {
+                Method::Structured => structured::generate(shape, dout.0[i], rng),
+                Method::Random => {
+                    let edges = shape.n_left * dout.0[i];
+                    random::generate(shape, edges, rng)
+                }
+                Method::ClashFree => {
+                    let z = znet
+                        .map(|zs| zs[i])
+                        .unwrap_or_else(|| clash_free::default_z(shape, dout.0[i]));
+                    clash_free::generate(
+                        shape,
+                        dout.0[i],
+                        z,
+                        clash_free::Flavor::Type1 { dither: false },
+                        rng,
+                    )
+                }
+            }
+        })
+        .collect();
+    NetPattern { junctions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn generate_all_methods_produce_valid_patterns() {
+        let net = NetConfig::new(vec![32, 16, 8]);
+        let dout = DoutConfig(vec![4, 4]);
+        let mut rng = Rng::new(0);
+        for m in Method::ALL {
+            let p = generate(m, &net, &dout, None, &mut rng);
+            assert_eq!(p.junctions.len(), 2);
+            for (i, j) in p.junctions.iter().enumerate() {
+                let shape = net.junction(i);
+                assert_eq!(j.shape, shape);
+                assert_eq!(j.n_edges(), shape.n_left * dout.0[i]);
+                j.audit().expect("valid pattern");
+            }
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Connection-pattern representation and audits.
+//!
+//! Edges are stored per *right* neuron (the paper's edge numbering,
+//! Sec. III-B: edges are numbered sequentially top-to-bottom on the right
+//! side), which is also the compacted weight-memory layout of Fig. 4.
+
+use super::config::JunctionShape;
+
+/// A single junction's connection pattern.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pattern {
+    pub shape: JunctionShape,
+    /// `in_edges[j]` = left-neuron indices feeding right neuron j,
+    /// in edge-number order (so row j is row j of the wc/idx memories).
+    pub in_edges: Vec<Vec<u32>>,
+}
+
+/// Per-junction patterns for the whole network.
+#[derive(Clone, Debug)]
+pub struct NetPattern {
+    pub junctions: Vec<Pattern>,
+}
+
+impl Pattern {
+    pub fn n_edges(&self) -> usize {
+        self.in_edges.iter().map(|e| e.len()).sum()
+    }
+
+    /// Junction density rho_i = |W_i| / (Nl * Nr).
+    pub fn density(&self) -> f64 {
+        self.n_edges() as f64 / (self.shape.n_left * self.shape.n_right) as f64
+    }
+
+    /// In-degree per right neuron.
+    pub fn in_degrees(&self) -> Vec<usize> {
+        self.in_edges.iter().map(|e| e.len()).collect()
+    }
+
+    /// Out-degree per left neuron.
+    pub fn out_degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.shape.n_left];
+        for edges in &self.in_edges {
+            for &k in edges {
+                d[k as usize] += 1;
+            }
+        }
+        d
+    }
+
+    /// Structured in the paper's sense: all in-degrees equal and all
+    /// out-degrees equal.
+    pub fn is_structured(&self) -> bool {
+        let din = self.in_degrees();
+        let dout = self.out_degrees();
+        din.windows(2).all(|w| w[0] == w[1]) && dout.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Left neurons with no outgoing edge (information irrecoverably lost
+    /// — the failure mode of random patterns at low density, Sec. IV-B).
+    pub fn disconnected_left(&self) -> usize {
+        self.out_degrees().iter().filter(|&&d| d == 0).count()
+    }
+
+    /// Right neurons with no incoming edge.
+    pub fn disconnected_right(&self) -> usize {
+        self.in_degrees().iter().filter(|&&d| d == 0).count()
+    }
+
+    /// Structural invariants: indices in range, no duplicate edge into the
+    /// same right neuron.
+    pub fn audit(&self) -> Result<(), String> {
+        if self.in_edges.len() != self.shape.n_right {
+            return Err(format!(
+                "{} rows for {} right neurons",
+                self.in_edges.len(),
+                self.shape.n_right
+            ));
+        }
+        for (j, edges) in self.in_edges.iter().enumerate() {
+            let mut seen = vec![false; self.shape.n_left];
+            for &k in edges {
+                if (k as usize) >= self.shape.n_left {
+                    return Err(format!("right {j}: left index {k} out of range"));
+                }
+                if seen[k as usize] {
+                    return Err(format!("right {j}: duplicate edge to left {k}"));
+                }
+                seen[k as usize] = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense 0/1 mask, row-major [n_right, n_left] — the AOT artifacts'
+    /// mask input layout.
+    pub fn mask(&self) -> Vec<f32> {
+        let mut m = vec![0f32; self.shape.n_right * self.shape.n_left];
+        for (j, edges) in self.in_edges.iter().enumerate() {
+            for &k in edges {
+                m[j * self.shape.n_left + k as usize] = 1.0;
+            }
+        }
+        m
+    }
+
+    /// Compacted index memory [n_right, d_in] (row-major), the Fig. 4
+    /// weight-memory layout. Only defined for uniform in-degree.
+    pub fn compact_indices(&self) -> Option<(Vec<i32>, usize)> {
+        let din = self.in_edges.first()?.len();
+        if din == 0 || !self.in_edges.iter().all(|e| e.len() == din) {
+            return None;
+        }
+        let mut idx = Vec::with_capacity(self.shape.n_right * din);
+        for edges in &self.in_edges {
+            idx.extend(edges.iter().map(|&k| k as i32));
+        }
+        Some((idx, din))
+    }
+
+    /// Extract the compacted weights [n_right, d_in] from a dense
+    /// row-major [n_right, n_left] weight matrix.
+    pub fn compact_weights(&self, dense: &[f32]) -> Vec<f32> {
+        assert_eq!(dense.len(), self.shape.n_right * self.shape.n_left);
+        let mut wc = Vec::with_capacity(self.n_edges());
+        for (j, edges) in self.in_edges.iter().enumerate() {
+            for &k in edges {
+                wc.push(dense[j * self.shape.n_left + k as usize]);
+            }
+        }
+        wc
+    }
+
+    /// Fully-connected pattern.
+    pub fn fully_connected(shape: JunctionShape) -> Pattern {
+        Pattern {
+            shape,
+            in_edges: (0..shape.n_right)
+                .map(|_| (0..shape.n_left as u32).collect())
+                .collect(),
+        }
+    }
+}
+
+impl NetPattern {
+    /// Overall density rho_net (eq. 1).
+    pub fn rho_net(&self) -> f64 {
+        let num: usize = self.junctions.iter().map(|p| p.n_edges()).sum();
+        let den: usize = self
+            .junctions
+            .iter()
+            .map(|p| p.shape.n_left * p.shape.n_right)
+            .sum();
+        num as f64 / den as f64
+    }
+
+    /// Total neurons (left of junction 0 + every right layer) with no
+    /// connectivity in their adjacent junction.
+    pub fn disconnected_neurons(&self) -> usize {
+        let mut total = self.junctions[0].disconnected_left();
+        for p in &self.junctions {
+            total += p.disconnected_right();
+        }
+        // hidden layers also lose information if their *outgoing* junction
+        // drops them
+        for p in &self.junctions[1..] {
+            total += p.disconnected_left();
+        }
+        total
+    }
+
+    pub fn masks(&self) -> Vec<Vec<f32>> {
+        self.junctions.iter().map(|p| p.mask()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Pattern {
+        // Fig. 4: N_{i-1}=12, N_i=8, d_in=3, d_out=2
+        Pattern {
+            shape: JunctionShape { n_left: 12, n_right: 8 },
+            in_edges: vec![
+                vec![4, 1, 10],
+                vec![11, 5, 0],
+                vec![2, 7, 6],
+                vec![3, 9, 8],
+                vec![0, 5, 1],
+                vec![4, 10, 11],
+                vec![6, 8, 2],
+                vec![7, 3, 9],
+            ],
+        }
+    }
+
+    #[test]
+    fn toy_pattern_stats() {
+        let p = toy();
+        assert_eq!(p.n_edges(), 24);
+        assert!((p.density() - 0.25).abs() < 1e-12);
+        assert!(p.is_structured());
+        assert_eq!(p.disconnected_left(), 0);
+        assert_eq!(p.disconnected_right(), 0);
+        p.audit().unwrap();
+    }
+
+    #[test]
+    fn mask_layout() {
+        let p = toy();
+        let m = p.mask();
+        assert_eq!(m.len(), 96);
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 24);
+        assert_eq!(m[4], 1.0); // right 0 <- left 4
+        assert_eq!(m[12 + 11], 1.0); // right 1 <- left 11
+        assert_eq!(m[3], 0.0);
+    }
+
+    #[test]
+    fn compact_roundtrip() {
+        let p = toy();
+        let (idx, din) = p.compact_indices().unwrap();
+        assert_eq!(din, 3);
+        assert_eq!(idx.len(), 24);
+        assert_eq!(&idx[0..3], &[4, 1, 10]);
+        // dense weights where w[j,k] = j*100 + k, compacted row j follows idx
+        let mut dense = vec![0f32; 96];
+        for j in 0..8 {
+            for k in 0..12 {
+                dense[j * 12 + k] = (j * 100 + k) as f32;
+            }
+        }
+        let wc = p.compact_weights(&dense);
+        assert_eq!(wc[0], 4.0);
+        assert_eq!(wc[3], 111.0); // right 1, left 11
+    }
+
+    #[test]
+    fn audit_rejects_bad_patterns() {
+        let mut p = toy();
+        p.in_edges[0][1] = 4; // duplicate of first entry
+        assert!(p.audit().is_err());
+        let mut p2 = toy();
+        p2.in_edges[2][0] = 99; // out of range
+        assert!(p2.audit().is_err());
+    }
+
+    #[test]
+    fn fc_pattern() {
+        let p = Pattern::fully_connected(JunctionShape { n_left: 5, n_right: 3 });
+        assert_eq!(p.n_edges(), 15);
+        assert!((p.density() - 1.0).abs() < 1e-12);
+        assert!(p.is_structured());
+        assert!(p.compact_indices().is_some());
+    }
+
+    #[test]
+    fn disconnected_counts() {
+        let p = Pattern {
+            shape: JunctionShape { n_left: 4, n_right: 3 },
+            in_edges: vec![vec![0], vec![0], vec![]],
+        };
+        assert_eq!(p.disconnected_left(), 3);
+        assert_eq!(p.disconnected_right(), 1);
+        assert!(!p.is_structured());
+    }
+}

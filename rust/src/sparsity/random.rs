@@ -1,0 +1,89 @@
+//! Random pre-defined sparsity (Sec. II-A): `|W_i|` edges placed uniformly
+//! at random with no degree constraints. At low density this has
+//! non-negligible probability of fully disconnecting neurons, which the
+//! paper identifies as the cause of its poor low-density accuracy
+//! (Sec. IV-B, blue values in Table II).
+
+use super::config::JunctionShape;
+use super::pattern::Pattern;
+use crate::util::rng::Rng;
+
+/// Place exactly `n_edges` distinct edges uniformly at random.
+pub fn generate(shape: JunctionShape, n_edges: usize, rng: &mut Rng) -> Pattern {
+    let total = shape.n_left * shape.n_right;
+    assert!(n_edges <= total, "more edges than the FC junction holds");
+    // Sample distinct cell ids; partial Fisher-Yates is O(total) memory,
+    // fine at MLP scale (<= few 10^5 cells for the paper's configs).
+    let cells = rng.sample_distinct(total, n_edges);
+    let mut in_edges: Vec<Vec<u32>> = vec![Vec::new(); shape.n_right];
+    for c in cells {
+        let j = c / shape.n_left;
+        let k = (c % shape.n_left) as u32;
+        in_edges[j].push(k);
+    }
+    for row in &mut in_edges {
+        row.sort_unstable();
+    }
+    Pattern { shape, in_edges }
+}
+
+/// Monte-Carlo estimate of the expected number of disconnected neurons at
+/// a given density — quantifies the Sec. IV-B failure mode.
+pub fn expected_disconnected(
+    shape: JunctionShape,
+    n_edges: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut total = 0usize;
+    for _ in 0..trials {
+        let p = generate(shape, n_edges, rng);
+        total += p.disconnected_left() + p.disconnected_right();
+    }
+    total as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_edge_count_and_validity() {
+        let mut rng = Rng::new(0);
+        let shape = JunctionShape { n_left: 50, n_right: 20 };
+        for n in [1, 10, 100, 999, 1000] {
+            let p = generate(shape, n, &mut rng);
+            assert_eq!(p.n_edges(), n);
+            p.audit().unwrap();
+        }
+    }
+
+    #[test]
+    fn fc_when_all_edges() {
+        let mut rng = Rng::new(1);
+        let shape = JunctionShape { n_left: 7, n_right: 5 };
+        let p = generate(shape, 35, &mut rng);
+        assert!((p.density() - 1.0).abs() < 1e-12);
+        assert_eq!(p.disconnected_left() + p.disconnected_right(), 0);
+    }
+
+    #[test]
+    fn low_density_disconnects_high_density_does_not() {
+        // The Sec. IV-B observation: at rho=2% random patterns lose neurons,
+        // at rho=50% they essentially never do.
+        let mut rng = Rng::new(2);
+        let shape = JunctionShape { n_left: 100, n_right: 50 };
+        let sparse = expected_disconnected(shape, 100, 50, &mut rng); // rho = 2%
+        let dense = expected_disconnected(shape, 2500, 50, &mut rng); // rho = 50%
+        assert!(sparse > 5.0, "sparse: {sparse}");
+        assert_eq!(dense, 0.0);
+    }
+
+    #[test]
+    fn generally_not_structured() {
+        let mut rng = Rng::new(3);
+        let shape = JunctionShape { n_left: 100, n_right: 50 };
+        let p = generate(shape, 500, &mut rng);
+        assert!(!p.is_structured());
+    }
+}

@@ -1,0 +1,167 @@
+//! Structured pre-defined sparsity (Sec. II-A): random patterns with fixed
+//! out-degree d_out on every left neuron and fixed in-degree d_in on every
+//! right neuron.
+//!
+//! Generation is the bipartite configuration model with repair: deal each
+//! left neuron's d_out stubs across the right neurons' d_in slots, then fix
+//! duplicate (right, left) pairs by swapping with other rows; a bounded
+//! number of full reshuffles guards pathological deals.
+
+use super::config::JunctionShape;
+use super::pattern::Pattern;
+use crate::util::rng::Rng;
+
+/// Generate a structured pattern. Panics if (shape, d_out) violates the
+/// Appendix-A integrality constraint.
+pub fn generate(shape: JunctionShape, d_out: usize, rng: &mut Rng) -> Pattern {
+    assert!(d_out >= 1 && d_out <= shape.n_right, "d_out out of range");
+    assert_eq!(
+        (shape.n_left * d_out) % shape.n_right,
+        0,
+        "d_in = {}*{}/{} not integral (Appendix A)",
+        shape.n_left,
+        d_out,
+        shape.n_right
+    );
+    let d_in = shape.n_left * d_out / shape.n_right;
+    if d_in == shape.n_left {
+        // FC junction: exactly one pattern exists.
+        return Pattern::fully_connected(shape);
+    }
+
+    for _attempt in 0..64 {
+        // stubs: each left neuron repeated d_out times
+        let mut stubs: Vec<u32> = (0..shape.n_left as u32)
+            .flat_map(|k| std::iter::repeat(k).take(d_out))
+            .collect();
+        rng.shuffle(&mut stubs);
+        if let Some(rows) = deal_and_repair(&stubs, shape.n_right, d_in, rng) {
+            let p = Pattern {
+                shape,
+                in_edges: rows,
+            };
+            debug_assert!(p.audit().is_ok());
+            return p;
+        }
+    }
+    panic!("structured pattern generation failed after 64 reshuffles (shape {shape:?}, d_out {d_out})");
+}
+
+/// Split `stubs` into `n_right` rows of `d_in`, then repair duplicate
+/// entries within a row by swapping with entries from other rows.
+fn deal_and_repair(
+    stubs: &[u32],
+    n_right: usize,
+    d_in: usize,
+    rng: &mut Rng,
+) -> Option<Vec<Vec<u32>>> {
+    let mut rows: Vec<Vec<u32>> = stubs.chunks(d_in).map(|c| c.to_vec()).collect();
+    debug_assert_eq!(rows.len(), n_right);
+
+    let nl = 1 + *stubs.iter().max().unwrap() as usize;
+
+    for j in 0..n_right {
+        while let Some(pos) = first_dup_pos(&rows[j]) {
+            // Deterministic repair: row j is missing some value b (it has a
+            // duplicate a, so by pigeonhole at least one value in 0..nl is
+            // absent... but b must come from another row to preserve
+            // out-degrees). Find a row j2 holding some b not in row j, where
+            // row j2 (minus that slot) does not hold a, and swap.
+            let a = rows[j][pos];
+            let mut in_j = vec![false; nl];
+            for &x in &rows[j] {
+                in_j[x as usize] = true;
+            }
+            let start = rng.below(n_right);
+            let mut fixed = false;
+            'search: for off in 0..n_right {
+                let j2 = (start + off) % n_right;
+                if j2 == j {
+                    continue;
+                }
+                let count_a = rows[j2].iter().filter(|&&x| x == a).count();
+                for p2 in 0..d_in {
+                    let b = rows[j2][p2];
+                    if b == a || in_j[b as usize] {
+                        continue;
+                    }
+                    // after swap, row j2 holds `a` at p2: ok iff it had no
+                    // other copy of a
+                    if count_a == 0 {
+                        rows[j][pos] = b;
+                        rows[j2][p2] = a;
+                        fixed = true;
+                        break 'search;
+                    }
+                }
+            }
+            if !fixed {
+                return None; // pathological deal; caller reshuffles
+            }
+        }
+    }
+    debug_assert!(rows.iter().all(|r| first_dup_pos(r).is_none()));
+    Some(rows)
+}
+
+fn first_dup_pos(row: &[u32]) -> Option<usize> {
+    for (i, &x) in row.iter().enumerate() {
+        if row[..i].contains(&x) {
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrees_are_exact() {
+        let mut rng = Rng::new(0);
+        for (nl, nr, dout) in [(12, 8, 2), (800, 100, 20), (100, 10, 10), (39, 390, 90)] {
+            let shape = JunctionShape { n_left: nl, n_right: nr };
+            let p = generate(shape, dout, &mut rng);
+            p.audit().unwrap();
+            assert!(p.is_structured(), "({nl},{nr},{dout})");
+            assert!(p.out_degrees().iter().all(|&d| d == dout));
+            let din = nl * dout / nr;
+            assert!(p.in_degrees().iter().all(|&d| d == din));
+        }
+    }
+
+    #[test]
+    fn fc_case() {
+        let mut rng = Rng::new(1);
+        let shape = JunctionShape { n_left: 6, n_right: 4 };
+        let p = generate(shape, 4, &mut rng);
+        assert!((p.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extreme_sparsity_has_no_disconnection() {
+        // structured d_out >= 1 guarantees every left neuron connected,
+        // d_in >= 1 every right neuron connected — the Sec. IV-B advantage.
+        let mut rng = Rng::new(2);
+        let shape = JunctionShape { n_left: 2000, n_right: 50 };
+        let p = generate(shape, 1, &mut rng);
+        assert_eq!(p.disconnected_left(), 0);
+        assert_eq!(p.disconnected_right(), 0);
+        assert_eq!(p.n_edges(), 2000);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let shape = JunctionShape { n_left: 40, n_right: 20 };
+        let a = generate(shape, 5, &mut Rng::new(3));
+        let b = generate(shape, 5, &mut Rng::new(4));
+        assert_ne!(a.in_edges, b.in_edges);
+    }
+
+    #[test]
+    #[should_panic(expected = "not integral")]
+    fn rejects_invalid_dout() {
+        generate(JunctionShape { n_left: 117, n_right: 390 }, 5, &mut Rng::new(0));
+    }
+}

@@ -1,0 +1,119 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Warmup + N timed iterations, reports median / mean / p95 and a derived
+//! throughput. Used by every target under rust/benches/.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.median.as_secs_f64() > 0.0 {
+            1.0 / self.median.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} median  {:>10} mean  {:>10} p95  {:>12.1}/s  ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.per_sec(),
+            self.iters
+        );
+    }
+
+    /// One-line report with a unit count per iteration (e.g. edges, requests).
+    pub fn report_throughput(&self, unit: &str, units_per_iter: f64) {
+        println!(
+            "{:<44} {:>10} median  {:>14.3e} {unit}/s  ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            units_per_iter * self.per_sec(),
+            self.iters
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median,
+        mean,
+        p95,
+        min: samples[0],
+    }
+}
+
+/// Auto-pick an iteration count so each bench takes ~`target` of wall time.
+pub fn bench_auto<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (target.as_secs_f64() / once.as_secs_f64()).clamp(5.0, 10_000.0) as usize;
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports_sane_stats() {
+        let mut count = 0u64;
+        let r = bench("noop", 2, 50, || {
+            count += 1;
+        });
+        assert_eq!(r.iters, 50);
+        assert_eq!(count, 52);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(50)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

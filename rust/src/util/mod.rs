@@ -1,0 +1,79 @@
+//! In-tree replacements for crates unavailable in the offline build
+//! (see DESIGN.md §Dependencies): deterministic PRNG, minimal JSON,
+//! micro-bench harness, and a property-test driver.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Greatest common divisor (Appendix A density-set math).
+pub fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Ceiling division, used throughout the hardware cycle math.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+/// Sample standard deviation (0.0 for < 2 elements).
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / (xs.len() - 1) as f32).sqrt()
+}
+
+/// Half-width of a 90% confidence interval on the mean (the paper reports
+/// 90% CIs over >= 5 runs, Sec. IV-A). Uses the normal approximation.
+pub fn ci90(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.645 * std_dev(xs) / (xs.len() as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basic() {
+        assert_eq!(gcd(800, 100), 100);
+        assert_eq!(gcd(117, 390), 39);
+        assert_eq!(gcd(390, 13), 13);
+        assert_eq!(gcd(7, 1), 1);
+        assert_eq!(gcd(0, 5), 5);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(6, 3), 2);
+        assert_eq!(ceil_div(7, 3), 3);
+        assert_eq!(ceil_div(1, 3), 1);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-5);
+        assert!(ci90(&xs) > 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Property-test driver (proptest is unavailable offline).
+//!
+//! `for_all` runs a closure over `cases` generated inputs from a seeded
+//! generator and panics with the failing seed + case index, so failures
+//! are reproducible by pinning the seed. No shrinking — generators are kept
+//! small enough that raw cases are readable.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics on first failure
+/// with the reproducing seed.
+pub fn for_all<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case_idx} (seed {case_seed:#x}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all(
+            "x < x + 1",
+            7,
+            64,
+            |r| r.below(1000),
+            |&x| {
+                if x < x + 1 {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure_with_seed() {
+        for_all("always fails", 7, 4, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

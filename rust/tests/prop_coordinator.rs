@@ -1,0 +1,212 @@
+//! Property tests over coordinator-adjacent invariants that don't need
+//! PJRT: native-trainer state management (sparse/dense equivalence,
+//! mask fixedness under training), softmax-CE gradient structure, and
+//! dataset batching.
+
+use pds::data::{Dataset, Shaping, Spec};
+use pds::nn::dense::DenseNet;
+use pds::nn::sparse::SparseNet;
+use pds::nn::softmax_ce;
+use pds::prop_assert;
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::prop::for_all;
+use pds::util::rng::Rng;
+
+#[test]
+fn sparse_and_masked_dense_agree_on_random_nets() {
+    for_all(
+        "sparse == masked dense",
+        61,
+        24,
+        |r| {
+            let layers = vec![4 * (1 + r.below(8)), 4 * (1 + r.below(6)), 2 + r.below(8)];
+            (layers, r.next_u64())
+        },
+        |case| {
+            let (layers, seed) = case;
+            let netc = NetConfig::new(layers.clone());
+            let mut rng = Rng::new(*seed);
+            let dout = DoutConfig(
+                (0..2).map(|i| netc.junction(i).min_dout()).collect(),
+            );
+            netc.validate_dout(&dout)?;
+            let pattern = generate(Method::Structured, &netc, &dout, None, &mut rng);
+            let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+            let mut dnet = DenseNet::init_he(layers, 0.1, &mut rng);
+            let mut masks = Vec::new();
+            for (i, j) in snet.junctions.iter().enumerate() {
+                let (w, m) = j.to_dense();
+                dnet.w[i] = w;
+                dnet.b[i] = j.bias.clone();
+                masks.push(m);
+            }
+            dnet.set_masks(masks);
+            let batch = 4;
+            let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+            let y: Vec<i32> = (0..batch)
+                .map(|_| rng.below(layers[2]) as i32)
+                .collect();
+            let so = snet.step(&x, &y, batch, 0.001);
+            let dor = dnet.step(&x, &y, batch, 0.001, None);
+            prop_assert!(
+                (so.loss - dor.loss).abs() < 1e-4 * (1.0 + dor.loss.abs()),
+                "loss {} vs {}",
+                so.loss,
+                dor.loss
+            );
+            prop_assert!(so.correct == dor.correct, "correct count");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn excluded_weights_never_move_under_training() {
+    for_all(
+        "mask fixedness",
+        67,
+        12,
+        |r| r.next_u64(),
+        |&seed| {
+            let spec = Spec {
+                name: "prop",
+                features: 16,
+                classes: 4,
+                latent_dim: 6,
+                shaping: Shaping::Continuous,
+                separation: 3.0,
+                noise: 0.4,
+            };
+            let splits = spec.splits(120, 0, 40, seed);
+            let netc = NetConfig::new(vec![16, 12, 4]);
+            let dout = DoutConfig(vec![3, 2]);
+            let mut rng = Rng::new(seed);
+            let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+            let masks: Vec<Vec<f32>> = pattern.junctions.iter().map(|p| p.mask()).collect();
+            let mut dnet = DenseNet::init_he(&[16, 12, 4], 0.1, &mut rng);
+            dnet.set_masks(masks.clone());
+            let mut net = pds::nn::trainer::Network::Dense(dnet);
+            let cfg = pds::nn::trainer::TrainConfig {
+                epochs: 3,
+                batch: 16,
+                seed,
+                ..Default::default()
+            };
+            pds::nn::trainer::train(&mut net, &splits.train, &splits.test, &cfg);
+            if let pds::nn::trainer::Network::Dense(n) = &net {
+                for (i, m) in masks.iter().enumerate() {
+                    for (idx, (&wv, &mv)) in n.w[i].iter().zip(m).enumerate() {
+                        prop_assert!(
+                            mv == 1.0 || wv == 0.0,
+                            "junction {i} weight {idx} moved off-mask: {wv}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn softmax_ce_gradient_structure() {
+    for_all(
+        "softmax-CE grads",
+        71,
+        64,
+        |r| {
+            let batch = 1 + r.below(8);
+            let classes = 2 + r.below(10);
+            let mut rng = r.fork();
+            let logits: Vec<f32> = (0..batch * classes).map(|_| rng.normal() * 3.0).collect();
+            let y: Vec<i32> = (0..batch).map(|_| rng.below(classes) as i32).collect();
+            (logits, y, classes)
+        },
+        |case| {
+            let (logits, y, classes) = case;
+            let (loss, correct, d) = softmax_ce(logits, y, *classes);
+            prop_assert!(loss >= 0.0 && loss.is_finite(), "loss {loss}");
+            prop_assert!(correct <= y.len(), "correct > batch");
+            for i in 0..y.len() {
+                let row = &d[i * classes..(i + 1) * classes];
+                let sum: f32 = row.iter().sum();
+                prop_assert!(sum.abs() < 1e-5, "row {i} grads sum to {sum}");
+                // target grad negative, all others positive
+                prop_assert!(row[y[i] as usize] < 0.0, "target grad not negative");
+                for (c, &g) in row.iter().enumerate() {
+                    if c != y[i] as usize {
+                        prop_assert!(g >= 0.0, "non-target grad negative");
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dataset_gather_preserves_rows() {
+    for_all(
+        "gather rows",
+        73,
+        32,
+        |r| (r.next_u64(), 10 + r.below(50)),
+        |&(seed, n)| {
+            let spec = Spec {
+                name: "prop",
+                features: 9,
+                classes: 3,
+                latent_dim: 4,
+                shaping: Shaping::Continuous,
+                separation: 2.0,
+                noise: 0.5,
+            };
+            let mut rng = Rng::new(seed);
+            let ds: Dataset = spec.generate(n, &mut rng);
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            let take = &idx[..n / 2];
+            let (x, y) = ds.gather(take);
+            for (pos, &i) in take.iter().enumerate() {
+                prop_assert!(
+                    x[pos * 9..(pos + 1) * 9] == *ds.row(i),
+                    "row {i} mangled at {pos}"
+                );
+                prop_assert!(y[pos] == ds.y[i], "label {i} mangled");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lss_prune_hits_requested_density_and_keeps_magnitude_order() {
+    for_all(
+        "LSS prune",
+        79,
+        32,
+        |r| (r.next_u64(), 1 + r.below(9)),
+        |&(seed, tenths)| {
+            let rho = tenths as f64 / 10.0;
+            let mut rng = Rng::new(seed);
+            let mut net = DenseNet::init_he(&[20, 15, 5], 0.1, &mut rng);
+            net.prune_to_density(&[rho, 1.0]);
+            let d = net.mask_densities();
+            prop_assert!(
+                (d[0] - rho).abs() < 0.05,
+                "junction 1 density {} != {rho}",
+                d[0]
+            );
+            // every surviving weight >= every pruned weight in magnitude
+            let kept_min = net.w[0]
+                .iter()
+                .zip(&net.masks[0])
+                .filter(|(_, &m)| m == 1.0)
+                .map(|(w, _)| w.abs())
+                .fold(f32::INFINITY, f32::min);
+            prop_assert!(kept_min > 0.0 || rho == 0.0, "zero weight kept");
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,271 @@
+//! Property tests over the sparsity module: structural invariants of every
+//! pattern family under randomized shapes/degrees/seeds.
+
+use pds::prop_assert;
+use pds::sparsity::clash_free::{self, Flavor};
+use pds::sparsity::config::{DoutConfig, JunctionShape, NetConfig};
+use pds::sparsity::{attention, generate, random, structured, Method};
+use pds::util::prop::for_all;
+use pds::util::rng::Rng;
+use pds::util::{ceil_div, gcd};
+
+/// Random admissible (shape, d_out) with d_in integral.
+fn junction_case(r: &mut Rng) -> (JunctionShape, usize) {
+    loop {
+        let n_left = 2 + r.below(60);
+        let n_right = 2 + r.below(40);
+        let shape = JunctionShape { n_left, n_right };
+        let step = shape.min_dout();
+        let max_k = n_right / step;
+        if max_k == 0 {
+            continue;
+        }
+        let d_out = step * (1 + r.below(max_k));
+        return (shape, d_out);
+    }
+}
+
+#[test]
+fn structured_patterns_have_exact_degrees() {
+    for_all(
+        "structured degrees",
+        11,
+        96,
+        |r| {
+            let (shape, d_out) = junction_case(r);
+            (shape, d_out, r.next_u64())
+        },
+        |&(shape, d_out, seed)| {
+            let p = structured::generate(shape, d_out, &mut Rng::new(seed));
+            p.audit()?;
+            let d_in = shape.n_left * d_out / shape.n_right;
+            prop_assert!(p.is_structured(), "not structured");
+            prop_assert!(
+                p.out_degrees().iter().all(|&d| d == d_out),
+                "out-degree wrong"
+            );
+            prop_assert!(p.in_degrees().iter().all(|&d| d == d_in), "in-degree wrong");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn clash_free_schedules_never_clash_and_cover_each_sweep() {
+    for_all(
+        "clash-free schedule",
+        13,
+        64,
+        |r| {
+            let z_choices = [1usize, 2, 3, 4, 5, 6, 8, 10, 12];
+            let z = z_choices[r.below(z_choices.len())];
+            let depth = 1 + r.below(12);
+            let n_left = z * depth;
+            let d_out = 1 + r.below(6);
+            let flavor = match r.below(6) {
+                0 => Flavor::Type1 { dither: false },
+                1 => Flavor::Type1 { dither: true },
+                2 => Flavor::Type2 { dither: false },
+                3 => Flavor::Type2 { dither: true },
+                4 => Flavor::Type3 { dither: false },
+                _ => Flavor::Type3 { dither: true },
+            };
+            (n_left, z, d_out, flavor, r.next_u64())
+        },
+        |&(n_left, z, d_out, flavor, seed)| {
+            let s = clash_free::schedule(n_left, z, d_out, flavor, &mut Rng::new(seed));
+            s.verify_clash_free()?;
+            prop_assert!(
+                s.cycles.len() == d_out * n_left / z,
+                "cycle count {} != {}",
+                s.cycles.len(),
+                d_out * n_left / z
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn clash_free_patterns_are_structured_and_respect_right_bound() {
+    for_all(
+        "clash-free pattern",
+        17,
+        48,
+        |r| {
+            // need z | n_left and d_in integral: build from factors
+            let z = 1 + r.below(8);
+            let depth = 1 + r.below(8);
+            let n_left = z * depth;
+            let n_right = 1 + r.below(24);
+            let step = n_right / gcd(n_left, n_right);
+            let d_out = step * (1 + r.below((n_right / step).max(1)));
+            (
+                JunctionShape { n_left, n_right },
+                d_out.min(n_right),
+                z,
+                r.next_u64(),
+            )
+        },
+        |&(shape, d_out, z, seed)| {
+            if (shape.n_left * d_out) % shape.n_right != 0 || d_out == 0 {
+                return Ok(()); // inadmissible draw, skip
+            }
+            let p = clash_free::generate(
+                shape,
+                d_out,
+                z,
+                Flavor::Type1 { dither: false },
+                &mut Rng::new(seed),
+            );
+            p.audit()?;
+            prop_assert!(p.is_structured(), "clash-free must be structured");
+            let d_in = shape.n_left * d_out / shape.n_right;
+            // Sec. III-B bound: the z edges of one cycle span at most
+            // ceil(z/d_in) distinct right neurons when groups align, +1
+            // when a neuron straddles the cycle boundary
+            let bound = ceil_div(z, d_in) + 1;
+            let n_edges = p.n_edges();
+            for t in 0..n_edges / z {
+                let rights: std::collections::BTreeSet<usize> =
+                    (t * z..(t + 1) * z).map(|e| e / d_in).collect();
+                prop_assert!(rights.len() <= bound, "rights {} > bound {bound}", rights.len());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn random_patterns_place_exact_edges() {
+    for_all(
+        "random edges",
+        19,
+        96,
+        |r| {
+            let shape = JunctionShape {
+                n_left: 1 + r.below(50),
+                n_right: 1 + r.below(30),
+            };
+            let n_edges = r.below(shape.n_left * shape.n_right + 1);
+            (shape, n_edges, r.next_u64())
+        },
+        |&(shape, n_edges, seed)| {
+            let p = random::generate(shape, n_edges, &mut Rng::new(seed));
+            p.audit()?;
+            prop_assert!(p.n_edges() == n_edges, "edge count");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn attention_patterns_hit_edge_budget_with_min_degree_one() {
+    for_all(
+        "attention pattern",
+        23,
+        48,
+        |r| {
+            let n_left = 4 + r.below(40);
+            let n_right = 4 + r.below(20);
+            let base = 1 + r.below(n_right.min(8));
+            let seed = r.next_u64();
+            (n_left, n_right, base, seed)
+        },
+        |&(n_left, n_right, base, seed)| {
+            let mut rng = Rng::new(seed);
+            let var: Vec<f32> = (0..n_left).map(|_| rng.uniform() * 10.0).collect();
+            let d = attention::variance_out_degrees(&var, base, n_right);
+            prop_assert!(
+                d.iter().sum::<usize>() == n_left * base,
+                "budget {} != {}",
+                d.iter().sum::<usize>(),
+                n_left * base
+            );
+            prop_assert!(d.iter().all(|&x| x >= 1 && x <= n_right), "degree bounds");
+            let p = attention::generate_with_out_degrees(
+                JunctionShape { n_left, n_right },
+                &d,
+                &mut rng,
+            );
+            p.audit()?;
+            prop_assert!(
+                p.disconnected_left() == 0,
+                "attention must not disconnect inputs"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn density_sets_match_appendix_a() {
+    for_all(
+        "density set",
+        29,
+        128,
+        |r| JunctionShape {
+            n_left: 1 + r.below(200),
+            n_right: 1 + r.below(200),
+        },
+        |&shape| {
+            let set = shape.density_set();
+            prop_assert!(
+                set.len() == gcd(shape.n_left, shape.n_right),
+                "cardinality != gcd"
+            );
+            for &rho in &set {
+                let d_out = (rho * shape.n_right as f64).round() as usize;
+                prop_assert!(
+                    (shape.n_left * d_out) % shape.n_right == 0,
+                    "rho {rho} gives fractional d_in"
+                );
+            }
+            prop_assert!((set.last().unwrap() - 1.0).abs() < 1e-12, "max density != 1");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn whole_net_generation_consistency() {
+    for_all(
+        "net pattern",
+        31,
+        32,
+        |r| {
+            let l = 2 + r.below(3);
+            let mut layers = vec![8 * (1 + r.below(6))];
+            for _ in 0..l {
+                layers.push(4 * (1 + r.below(8)));
+            }
+            (layers, r.next_u64())
+        },
+        |case| {
+            let (layers, seed) = case;
+            let netc = NetConfig::new(layers.clone());
+            let mut rng = Rng::new(*seed);
+            let dout = DoutConfig(
+                (0..netc.n_junctions())
+                    .map(|i| netc.junction(i).min_dout())
+                    .collect(),
+            );
+            netc.validate_dout(&dout)?;
+            for method in Method::ALL {
+                let p = generate(method, &netc, &dout, None, &mut rng);
+                let expect: usize = netc.edges(&dout).iter().sum();
+                prop_assert!(
+                    p.junctions.iter().map(|j| j.n_edges()).sum::<usize>() == expect,
+                    "{}: edge total",
+                    method.name()
+                );
+                prop_assert!(
+                    (p.rho_net() - netc.rho_net(&dout)).abs() < 1e-9,
+                    "{}: rho mismatch",
+                    method.name()
+                );
+            }
+            Ok(())
+        },
+    );
+}

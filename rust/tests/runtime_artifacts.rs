@@ -1,0 +1,271 @@
+//! Runtime integration tests against the built AOT artifacts.
+//!
+//! These require `make artifacts`; they skip (with a notice) when the
+//! artifacts directory is absent so bare `cargo test` still passes.
+
+use pds::data::Spec;
+use pds::runtime::{Engine, Value};
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::pattern::NetPattern;
+use pds::sparsity::{generate, Method};
+use pds::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match Engine::new(dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime tests: {err:#}");
+            None
+        }
+    }
+}
+
+fn tiny_pattern(engine: &Engine, density_dout: &[usize], seed: u64) -> NetPattern {
+    let layers = engine.manifest.configs["tiny"].layers.clone();
+    let net = NetConfig::new(layers);
+    let mut rng = Rng::new(seed);
+    generate(
+        Method::ClashFree,
+        &net,
+        &DoutConfig(density_dout.to_vec()),
+        None,
+        &mut rng,
+    )
+}
+
+#[test]
+fn forward_artifact_matches_native_dense() {
+    let Some(engine) = engine() else { return };
+    let prog = engine.load("tiny", "forward").unwrap();
+    let entry = &engine.manifest.configs["tiny"];
+    let (layers, batch) = (entry.layers.clone(), entry.batch);
+    let mut rng = Rng::new(7);
+
+    // identical weights into the artifact and the native dense net
+    let mut dnet = pds::nn::dense::DenseNet::init_he(&layers, 0.1, &mut rng);
+    let mut inputs: Vec<Value> = Vec::new();
+    for i in 0..dnet.n_junctions() {
+        let (nl, nr) = (layers[i], layers[i + 1]);
+        inputs.push(Value::F32(dnet.w[i].clone(), vec![nr, nl]));
+        inputs.push(Value::F32(dnet.b[i].clone(), vec![nr]));
+    }
+    let masks: Vec<Vec<f32>> = (0..dnet.n_junctions())
+        .map(|i| {
+            let (nl, nr) = (layers[i], layers[i + 1]);
+            (0..nl * nr)
+                .map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    for (i, m) in masks.iter().enumerate() {
+        let (nl, nr) = (layers[i], layers[i + 1]);
+        inputs.push(Value::F32(m.clone(), vec![nr, nl]));
+    }
+    dnet.set_masks(masks);
+    let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+    inputs.push(Value::F32(x.clone(), vec![batch, layers[0]]));
+
+    let out = prog.run(&inputs).unwrap();
+    let got = out[0].as_f32().unwrap();
+    let want = dnet.logits(&x, batch);
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn train_artifact_reduces_loss_and_keeps_masks() {
+    let Some(engine) = engine() else { return };
+    let pattern = tiny_pattern(&engine, &[8, 4], 1);
+    let mut session =
+        pds::coordinator::TrainSession::new(&engine, "tiny", &pattern, 5e-3, 1e-4, 2).unwrap();
+    let spec = Spec {
+        name: "tiny-data",
+        features: 32,
+        classes: 8,
+        latent_dim: 8,
+        shaping: pds::data::Shaping::Continuous,
+        separation: 3.0,
+        noise: 0.3,
+    };
+    let splits = spec.splits(128, 0, 64, 3);
+    let mut rng = Rng::new(4);
+    let (first_loss, _) = session.epoch(&splits.train, &mut rng).unwrap();
+    for _ in 0..6 {
+        session.epoch(&splits.train, &mut rng).unwrap();
+    }
+    let (last_loss, train_acc) = session.epoch(&splits.train, &mut rng).unwrap();
+    assert!(
+        last_loss < first_loss,
+        "loss did not fall: {first_loss} -> {last_loss}"
+    );
+    assert!(train_acc > 0.3, "train acc {train_acc}");
+    session.check_mask_invariant().unwrap();
+    let acc = session.evaluate(&splits.test).unwrap();
+    assert!(acc > 0.3, "test acc {acc}");
+}
+
+#[test]
+fn train_artifact_matches_native_trainer_step() {
+    // One fused PJRT step == one native masked-dense step (same init).
+    let Some(engine) = engine() else { return };
+    let entry = &engine.manifest.configs["tiny"];
+    let (layers, batch) = (entry.layers.clone(), entry.batch);
+    let pattern = tiny_pattern(&engine, &[8, 4], 5);
+    let mut session =
+        pds::coordinator::TrainSession::new(&engine, "tiny", &pattern, 1e-3, 1e-3, 6).unwrap();
+
+    // mirror initial params into a native dense net
+    let mut dnet = pds::nn::dense::DenseNet::init_he(&layers, 0.1, &mut Rng::new(0));
+    for i in 0..dnet.n_junctions() {
+        dnet.w[i] = session.param(i, false).as_f32().unwrap().to_vec();
+        dnet.b[i] = session.param(i, true).as_f32().unwrap().to_vec();
+    }
+    dnet.set_masks(pattern.junctions.iter().map(|p| p.mask()).collect());
+
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..batch)
+        .map(|_| rng.below(layers[layers.len() - 1]) as i32)
+        .collect();
+
+    let out = session.step(&x, &y).unwrap();
+    let native = dnet.step(&x, &y, batch, 1e-3, None);
+    assert_eq!(out.correct, native.correct);
+    assert!(
+        (out.loss - native.loss).abs() < 1e-4 * (1.0 + native.loss.abs()),
+        "loss {} vs {}",
+        out.loss,
+        native.loss
+    );
+    // apply the same Adam step natively and compare updated weights
+    let mut opt = pds::nn::adam::Adam::new(
+        pds::nn::adam::AdamConfig {
+            lr: 1e-3,
+            ..Default::default()
+        },
+        &dnet
+            .w
+            .iter()
+            .zip(&dnet.b)
+            .map(|(w, b)| (w.len(), b.len()))
+            .collect::<Vec<_>>(),
+    );
+    opt.step(&mut dnet.w, &mut dnet.b, &native.grads.gw, &native.grads.gb);
+    for i in 0..dnet.n_junctions() {
+        let got = session.param(i, false).as_f32().unwrap();
+        for (idx, (g, w)) in got.iter().zip(&dnet.w[i]).enumerate() {
+            assert!(
+                (g - w).abs() < 5e-4 * (1.0 + w.abs()),
+                "junction {i} w[{idx}]: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gather_forward_matches_masked_forward() {
+    // compacted structured-sparse inference == masked dense inference
+    let Some(engine) = engine() else { return };
+    let entry = &engine.manifest.configs["tiny"];
+    let (layers, batch) = (entry.layers.clone(), entry.batch);
+    let dout: Vec<usize> = entry.gather_dout.clone().unwrap();
+    let net = NetConfig::new(layers.clone());
+    let mut rng = Rng::new(9);
+    let pattern = generate(Method::ClashFree, &net, &DoutConfig(dout), None, &mut rng);
+
+    let forward = engine.load("tiny", "forward").unwrap();
+    let gather = engine.load("tiny", "gather_forward").unwrap();
+    let mut dense_inputs: Vec<Value> = Vec::new();
+    let mut wcs: Vec<Value> = Vec::new();
+    let mut idxs: Vec<Value> = Vec::new();
+    let mut biases: Vec<Value> = Vec::new();
+    for (i, p) in pattern.junctions.iter().enumerate() {
+        let (nl, nr) = (layers[i], layers[i + 1]);
+        let w: Vec<f32> = (0..nr * nl).map(|_| rng.normal()).collect();
+        let mask = p.mask();
+        let masked: Vec<f32> = w.iter().zip(&mask).map(|(w, m)| w * m).collect();
+        let b: Vec<f32> = (0..nr).map(|_| rng.normal()).collect();
+        let (idx, din) = p.compact_indices().unwrap();
+        wcs.push(Value::F32(p.compact_weights(&masked), vec![nr, din]));
+        idxs.push(Value::I32(idx, vec![nr, din]));
+        biases.push(Value::F32(b.clone(), vec![nr]));
+        dense_inputs.push(Value::F32(masked, vec![nr, nl]));
+        dense_inputs.push(Value::F32(b, vec![nr]));
+    }
+    for p in &pattern.junctions {
+        dense_inputs.push(Value::F32(
+            p.mask(),
+            vec![p.shape.n_right, p.shape.n_left],
+        ));
+    }
+    let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+    dense_inputs.push(Value::F32(x.clone(), vec![batch, layers[0]]));
+    let want = forward.run(&dense_inputs).unwrap();
+
+    let mut gather_inputs = wcs;
+    gather_inputs.extend(idxs);
+    gather_inputs.extend(biases);
+    gather_inputs.push(Value::F32(x, vec![batch, layers[0]]));
+    let got = gather.run(&gather_inputs).unwrap();
+
+    for (g, w) in got[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(want[0].as_f32().unwrap())
+    {
+        assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn inference_server_serves_batched_requests() {
+    let Some(engine) = engine() else { return };
+    let pattern = tiny_pattern(&engine, &[8, 4], 11);
+    drop(engine);
+    let server = pds::coordinator::InferenceServer::start(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        "tiny",
+        &pattern,
+        None,
+        pds::coordinator::ServerConfig {
+            max_wait: std::time::Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    let n_clients = 4;
+    let per_client = 25;
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            let mut classes = Vec::new();
+            for _ in 0..per_client {
+                let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+                let pred = client.classify(x).unwrap();
+                assert!(pred.class < 8);
+                assert!(pred.batch_occupancy >= 1);
+                classes.push(pred.class);
+            }
+            classes
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let reqs = server
+        .stats
+        .requests
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(reqs, (n_clients * per_client) as u64);
+    let batches = server
+        .stats
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches as usize <= n_clients * per_client);
+    server.shutdown().unwrap();
+}
