@@ -1,8 +1,10 @@
 //! Quickstart: generate a hardware-friendly clash-free sparse pattern for
 //! the paper's Table-I network, inspect its storage/compute savings, and
-//! run inference through the AOT PJRT artifact.
+//! run inference through the runtime engine (the parallel native backend
+//! by default; the AOT PJRT artifacts with `--features pjrt` after
+//! `make artifacts`).
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use pds::hw::storage::StorageComparison;
 use pds::runtime::{Engine, Value};
@@ -46,8 +48,8 @@ fn main() -> anyhow::Result<()> {
         cmp.compute_reduction()
     );
 
-    // 4. Inference through the compiled PJRT artifact (mnist_fc2 config
-    //    has exactly this shape). Masked-dense path with the pattern's mask.
+    // 4. Inference through the runtime engine (mnist_fc2 config has
+    //    exactly this shape). Masked-dense path with the pattern's mask.
     let engine = Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
     let prog = engine.load("mnist_fc2", "forward")?;
     let batch = engine.manifest.configs["mnist_fc2"].batch;
@@ -68,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let out = prog.run(&inputs)?;
     println!(
-        "PJRT forward ({}): batch {} in {:?}, logits[0][..4] = {:?}",
+        "forward ({}): batch {} in {:?}, logits[0][..4] = {:?}",
         engine.platform(),
         batch,
         t0.elapsed(),

@@ -1,9 +1,10 @@
 //! Inference-service example: dynamic batching over the fixed-batch
-//! compiled forward artifact, with latency/throughput reporting — the
-//! software analogue of feeding the junction pipeline one input per
-//! junction cycle.
+//! forward program, with latency/throughput reporting — the software
+//! analogue of feeding the junction pipeline one input per junction
+//! cycle. Runs on the parallel native backend by default (PJRT with
+//! `--features pjrt` after `make artifacts`).
 //!
-//!     make artifacts && cargo run --release --example serve
+//!     cargo run --release --example serve
 
 use std::time::{Duration, Instant};
 

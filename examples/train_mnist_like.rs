@@ -1,13 +1,14 @@
-//! End-to-end headline run (EXPERIMENTS.md §E2E): train the paper's
-//! Table-I network — N_net = (800, 100, 10) — both fully-connected and at
-//! rho_net = 21% clash-free pre-defined sparsity, entirely through the
-//! three-layer stack: Rust coordinator -> AOT-compiled JAX train step
-//! (whose junctions are Pallas FF/BP/UP kernels) -> PJRT CPU.
+//! End-to-end headline run: train the paper's Table-I network —
+//! N_net = (800, 100, 10) — both fully-connected and at rho_net = 21%
+//! clash-free pre-defined sparsity, through the coordinator ->
+//! runtime-engine stack (parallel native backend by default; with
+//! `--features pjrt` after `make artifacts`, the AOT-compiled JAX train
+//! step whose junctions are Pallas FF/BP/UP kernels, on PJRT CPU).
 //!
 //! Logs the loss curve and reports the paper's core claim: ~4.8X fewer
 //! MACs / ~3.9X less weight storage at near-FC accuracy.
 //!
-//!     make artifacts && cargo run --release --example train_mnist_like
+//!     cargo run --release --example train_mnist_like
 
 use pds::coordinator::TrainSession;
 use pds::data::Spec;
@@ -49,7 +50,7 @@ fn train(
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("runtime platform: {}", engine.platform());
     let netc = NetConfig::new(vec![800, 100, 10]);
     let dout = DoutConfig(vec![20, 10]);
 

@@ -1,56 +1,72 @@
-//! PJRT runtime benches: end-to-end train-step and forward latency of the
-//! AOT artifacts from the Rust hot path (the L3 dispatch overhead target
-//! in DESIGN.md §Perf), across artifact configs.
+//! Runtime execution benches: end-to-end train-step and forward latency
+//! through the backend-agnostic `runtime::Engine` (the L3 dispatch
+//! overhead target in DESIGN.md §Perf), across configs, plus the
+//! parallel-speedup report for the native backend's batched hot paths.
 //!
-//! Skips with a notice when artifacts are not built.
+//! Runs with no xla/PJRT libraries installed: the default engine is the
+//! pure-Rust native backend with built-in configs. With `--features pjrt`
+//! and built artifacts the same harness times the compiled executables.
 
 use pds::data::Spec;
 use pds::runtime::Engine;
 use pds::sparsity::config::{DoutConfig, NetConfig};
+
 use pds::sparsity::{generate, Method};
 use pds::util::bench::bench_auto;
+use pds::util::parallel;
 use pds::util::rng::Rng;
 use std::time::Duration;
 
+/// Build a clash-free ~25%-density session plus one matching minibatch.
+fn setup(
+    engine: &Engine,
+    config: &str,
+) -> Option<(pds::coordinator::TrainSession, Vec<f32>, Vec<i32>)> {
+    let entry = engine.manifest.configs.get(config)?;
+    let layers = entry.layers.clone();
+    let batch = entry.batch;
+    let netc = NetConfig::new(layers.clone());
+    let dout = DoutConfig(
+        (0..netc.n_junctions())
+            .map(|i| netc.junction(i).dout_for_density(0.25))
+            .collect(),
+    );
+    let mut rng = Rng::new(1);
+    let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+    let session =
+        pds::coordinator::TrainSession::new(engine, config, &pattern, 1e-3, 1e-4, 2).unwrap();
+    let spec = Spec {
+        name: "bench",
+        features: layers[0],
+        classes: *layers.last().unwrap(),
+        latent_dim: (layers[0] / 4).clamp(4, 64),
+        shaping: pds::data::Shaping::Continuous,
+        separation: 2.5,
+        noise: 0.5,
+    };
+    let mut drng = Rng::new(3);
+    let ds = spec.generate(batch, &mut drng);
+    let idx: Vec<usize> = (0..batch).collect();
+    let (x, y) = ds.gather(&idx);
+    Some((session, x, y))
+}
+
 fn main() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let Ok(engine) = Engine::new(dir) else {
-        eprintln!("runtime_exec: artifacts not built, skipping (run `make artifacts`)");
-        return;
+    let engine = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("runtime_exec: engine unavailable: {e:#}");
+            return;
+        }
     };
-    println!("== PJRT end-to-end step latency ({}) ==", engine.platform());
+    println!("== end-to-end step latency ({}) ==", engine.platform());
 
     for config in ["tiny", "mnist_fc2", "timit"] {
-        let Some(entry) = engine.manifest.configs.get(config) else {
+        let Some((mut session, x, y)) = setup(&engine, config) else {
             continue;
         };
-        let layers = entry.layers.clone();
-        let batch = entry.batch;
-        let netc = NetConfig::new(layers.clone());
-        let dout = DoutConfig(
-            (0..netc.n_junctions())
-                .map(|i| netc.junction(i).dout_for_density(0.25))
-                .collect(),
-        );
-        let mut rng = Rng::new(1);
-        let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
-        let mut session =
-            pds::coordinator::TrainSession::new(&engine, config, &pattern, 1e-3, 1e-4, 2).unwrap();
-        let spec = Spec {
-            name: "bench",
-            features: layers[0],
-            classes: *layers.last().unwrap(),
-            latent_dim: (layers[0] / 4).clamp(4, 64),
-            shaping: pds::data::Shaping::Continuous,
-            separation: 2.5,
-            noise: 0.5,
-        };
-        let mut drng = Rng::new(3);
-        let ds = spec.generate(batch, &mut drng);
-        let idx: Vec<usize> = (0..batch).collect();
-        let (x, y) = ds.gather(&idx);
-
-        let edges = pattern.junctions.iter().map(|j| j.n_edges()).sum::<usize>() as f64;
+        let batch = session.batch;
         bench_auto(
             &format!("{config} train step (batch {batch})"),
             Duration::from_secs(1),
@@ -67,6 +83,67 @@ fn main() {
             },
         )
         .report_throughput("samples", batch as f64);
-        let _ = edges;
+    }
+
+    // Parallel speedup of the native backend's batched hot paths over the
+    // single-threaded seed kernels. Only meaningful on the native backend
+    // (PJRT parallelism is XLA's business), at batch >= 64.
+    if !engine.platform().starts_with("native") {
+        return;
+    }
+    println!("\n== native parallel speedup vs single-threaded kernels ==");
+    for config in ["mnist_fc2", "timit"] {
+        let Some((mut session, x, y)) = setup(&engine, config) else {
+            continue;
+        };
+        let batch = session.batch;
+        if batch < 64 {
+            eprintln!("{config}: batch {batch} < 64, skipping speedup comparison");
+            continue;
+        }
+
+        parallel::set_threads(1);
+        let fwd_1 = bench_auto(
+            &format!("{config} forward (batch {batch}) 1 thread"),
+            Duration::from_secs(1),
+            || {
+                std::hint::black_box(session.logits(&x).unwrap());
+            },
+        );
+        fwd_1.report_throughput("samples", batch as f64);
+        let step_1 = bench_auto(
+            &format!("{config} train step (batch {batch}) 1 thread"),
+            Duration::from_secs(1),
+            || {
+                std::hint::black_box(session.step(&x, &y).unwrap());
+            },
+        );
+        step_1.report_throughput("samples", batch as f64);
+
+        parallel::set_threads(0); // restore auto-detection
+        let threads = parallel::max_threads();
+        let fwd_n = bench_auto(
+            &format!("{config} forward (batch {batch}) {threads} threads"),
+            Duration::from_secs(1),
+            || {
+                std::hint::black_box(session.logits(&x).unwrap());
+            },
+        );
+        fwd_n.report_throughput("samples", batch as f64);
+        let step_n = bench_auto(
+            &format!("{config} train step (batch {batch}) {threads} threads"),
+            Duration::from_secs(1),
+            || {
+                std::hint::black_box(session.step(&x, &y).unwrap());
+            },
+        );
+        step_n.report_throughput("samples", batch as f64);
+
+        let fwd_speedup = fwd_1.median.as_secs_f64() / fwd_n.median.as_secs_f64().max(1e-12);
+        let step_speedup = step_1.median.as_secs_f64() / step_n.median.as_secs_f64().max(1e-12);
+        println!(
+            "{config}: parallel forward speedup {fwd_speedup:.2}X, train-step speedup \
+             {step_speedup:.2}X over the single-threaded kernels ({threads} threads, batch {batch})"
+        );
     }
 }

@@ -1,6 +1,7 @@
 //! L3 coordinator: the training orchestrator and the inference service,
-//! both running entirely over the AOT PJRT artifacts (no Python on any
-//! path here).
+//! both running over the backend-agnostic `runtime::Engine` (the parallel
+//! native backend by default, AOT PJRT artifacts behind the `pjrt`
+//! feature; no Python on any path here).
 //!
 //! The paper's system contribution is the sparsity-aware accelerator, so
 //! L3 is the surrounding machine: session/state management for training

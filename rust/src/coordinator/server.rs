@@ -1,13 +1,17 @@
 //! Batched inference service: request router + dynamic batcher over the
-//! fixed-batch `forward` artifact.
+//! fixed-batch `forward` program of the runtime backend.
 //!
-//! A worker thread owns the compiled executable and the (sparse) model
+//! A worker thread owns the loaded executable and the (sparse) model
 //! parameters. Clients submit single feature vectors; the batcher
-//! collects up to the artifact's compiled batch size or until
+//! collects up to the config's compiled batch size or until
 //! `max_wait` elapses, pads the tail with zero rows, executes once, and
 //! fans the argmax results back out. This mirrors the hardware pipeline's
 //! rhythm: a full junction cycle is paid per batch regardless of
 //! occupancy, so latency = queueing + one fixed execution.
+//!
+//! On the default native backend the batched execution itself is
+//! parallel: the forward kernels chunk the batch dimension across the
+//! `util::parallel` thread pool, so one flush saturates multiple cores.
 //!
 //! Implemented on std threads + channels (tokio is unavailable in the
 //! offline build; the request path is compute-bound, not I/O-bound).
@@ -95,10 +99,11 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Spawn the worker: it builds its own PJRT engine (executables are
-    /// not `Send` — the xla crate wraps thread-affine raw handles), loads
-    /// the `forward` program of `config`, and serves with He-initialized
-    /// (or externally trained) parameters for `pattern`.
+    /// Spawn the worker: it builds its own engine (PJRT executables are
+    /// not `Send` — the xla crate wraps thread-affine raw handles — so the
+    /// backend lives entirely on the worker thread), loads the `forward`
+    /// program of `config`, and serves with He-initialized (or externally
+    /// trained) parameters for `pattern`.
     pub fn start(
         artifacts_dir: impl Into<PathBuf>,
         config: &str,
@@ -142,7 +147,7 @@ impl InferenceServer {
         let stats = Arc::new(ServerStats::default());
         let worker_stats = Arc::clone(&stats);
         let worker = std::thread::spawn(move || -> Result<()> {
-            // PJRT objects live and die on this thread
+            // backend objects live and die on this thread
             let engine = match Engine::new(&artifacts_dir) {
                 Ok(e) => e,
                 Err(e) => {

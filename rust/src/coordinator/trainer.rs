@@ -1,10 +1,11 @@
-//! Training session over the AOT `train` artifact.
+//! Training session over the runtime's fused `train` program.
 //!
 //! Host state (weights, biases, Adam moments, masks, step counter) is
-//! initialized in Rust, fed to the compiled train-step positionally per
+//! initialized in Rust, fed to the loaded train-step positionally per
 //! the manifest, and replaced by the returned updated tensors — the
 //! classic leader/state-manager loop, with the whole fwd/bwd/update fused
-//! into a single PJRT execution.
+//! into a single backend execution (batch-parallel on the native
+//! backend).
 
 use anyhow::{bail, Result};
 

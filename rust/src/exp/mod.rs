@@ -1,6 +1,6 @@
 //! Experiment harnesses: one per table/figure in the paper's evaluation
 //! (see the DESIGN.md experiment index). Each prints the same rows/series
-//! the paper reports; EXPERIMENTS.md records paper-vs-measured.
+//! the paper reports.
 //!
 //! Scale note: the paper trained 50 epochs on the full corpora over >= 5
 //! repeats; this harness runs the synthetic surrogates at a single-core

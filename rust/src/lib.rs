@@ -4,10 +4,20 @@
 //! Hardware Acceleration" (IEEE JETCAS 2019): pre-defined sparse MLPs with
 //! clash-free hardware-friendly connection patterns, a cycle-accurate
 //! simulator of the paper's edge-based FPGA architecture, and a Rust
-//! coordinator executing AOT-compiled JAX/Pallas artifacts via PJRT.
+//! coordinator executing training and batched inference over a pluggable
+//! runtime — the pure-Rust parallel [`runtime::NativeEngine`] by default,
+//! or AOT-compiled JAX/Pallas artifacts via PJRT behind the `pjrt` cargo
+//! feature.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See DESIGN.md (in this directory) for the system inventory, the
+//! backend architecture, and the performance notes.
+
+// numerics code: index-based loops over multiple parallel buffers are the
+// clearest expression of the paper's equations
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::many_single_char_names)]
+
 pub mod sparsity;
 pub mod hw;
 pub mod data;

@@ -1,11 +1,12 @@
 //! `pds` — pre-defined sparse neural networks with hardware acceleration.
 //!
 //! Subcommands:
-//!   info                       list AOT artifacts and configs
+//!   info                       list runtime configs and programs
 //!   patterns  [opts]           generate + audit a connection pattern
 //!   storage   [opts]           Table-I storage model for a config
 //!   simulate  [opts]           cycle-accurate junction FF/BP/UP run
-//!   train     [opts]           train via the AOT PJRT artifacts
+//!   train     [opts]           train via the runtime backend (native by
+//!                              default; PJRT with the `pjrt` feature)
 //!   serve     [opts]           batched inference service demo
 //!   exp <id>  [--quick]        paper experiment harnesses (see DESIGN.md)
 //!
@@ -117,7 +118,7 @@ fn print_help() {
 
 fn cmd_info(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let engine = Engine::new(artifacts_dir(opts))?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("runtime platform: {}", engine.platform());
     for (name, cfg) in &engine.manifest.configs {
         println!(
             "config {:<12} layers {:?} batch {}",
@@ -262,7 +263,7 @@ fn cmd_train(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let mut rng = Rng::new(seed);
     let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
     println!(
-        "training config {config} {layers:?} rho_net {:.1}% on PJRT ({})",
+        "training config {config} {layers:?} rho_net {:.1}% on {}",
         pattern.rho_net() * 100.0,
         engine.platform()
     );

@@ -1,26 +1,32 @@
 //! Row-major dense matmul kernels for the native trainer's three junction
 //! operations (FF / BP / UP in matrix form). Loop orders are chosen for
-//! unit-stride inner loops; see EXPERIMENTS.md §Perf for the measured
-//! effect of the blocking applied here.
+//! unit-stride inner loops (see DESIGN.md §Perf), and every kernel is
+//! batch-parallel: the output rows (FF/BP) or the batch reduction (UP)
+//! are chunked over the [`crate::util::parallel`] thread pool when the
+//! problem is big enough to amortize the fork-join.
+
+use crate::util::parallel;
 
 /// out[m,n] = a[m,k] @ b[n,k]^T  (FF: h = a @ W^T with W = [n_right, n_left])
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
     assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (j, o) in or.iter_mut().enumerate() {
-            let br = &b[j * k..(j + 1) * k];
-            let mut acc = 0f32;
-            // unit stride over both operands; autovectorizes well
-            for t in 0..k {
-                acc += ar[t] * br[t];
+    parallel::par_rows(out, n, k * n, |row0, chunk| {
+        for (li, or) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + li;
+            let ar = &a[i * k..(i + 1) * k];
+            for (j, o) in or.iter_mut().enumerate() {
+                let br = &b[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                // unit stride over both operands; autovectorizes well
+                for t in 0..k {
+                    acc += ar[t] * br[t];
+                }
+                *o = acc;
             }
-            *o = acc;
         }
-    }
+    });
 }
 
 /// out[m,n] = a[m,k] @ b[k,n]  (BP: da = delta @ W)
@@ -28,20 +34,22 @@ pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for i in 0..m {
-        let or = &mut out[i * n..(i + 1) * n];
-        for t in 0..k {
-            let av = a[i * k + t];
-            if av == 0.0 {
-                continue;
-            }
-            let br = &b[t * n..(t + 1) * n];
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += av * bv;
+    parallel::par_rows(out, n, k * n, |row0, chunk| {
+        chunk.fill(0.0);
+        for (li, or) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + li;
+            for t in 0..k {
+                let av = a[i * k + t];
+                if av == 0.0 {
+                    continue;
+                }
+                let br = &b[t * n..(t + 1) * n];
+                for (o, &bv) in or.iter_mut().zip(br) {
+                    *o += av * bv;
+                }
             }
         }
-    }
+    });
 }
 
 /// out[m,n] += scale * a[k,m]^T @ b[k,n]  (UP: dW = delta^T @ a)
@@ -57,20 +65,22 @@ pub fn matmul_tn_acc(
     assert_eq!(a.len(), k * m);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
-    for t in 0..k {
-        let ar = &a[t * m..(t + 1) * m];
-        let br = &b[t * n..(t + 1) * n];
-        for (i, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let or = &mut out[i * n..(i + 1) * n];
-            let s = scale * av;
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += s * bv;
+    parallel::par_batch_reduce(k, m * n, out, |range, acc| {
+        for t in range {
+            let ar = &a[t * m..(t + 1) * m];
+            let br = &b[t * n..(t + 1) * n];
+            for (i, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let or = &mut acc[i * n..(i + 1) * n];
+                let s = scale * av;
+                for (o, &bv) in or.iter_mut().zip(br) {
+                    *o += s * bv;
+                }
             }
         }
-    }
+    });
 }
 
 /// out[i, :] += v (bias broadcast)
@@ -153,5 +163,42 @@ mod tests {
         let mut out = vec![0f32; 6];
         add_bias(&mut out, &[1.0, 2.0, 3.0], 2, 3);
         assert_eq!(out, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn kernels_match_under_forced_parallelism() {
+        let _guard = parallel::override_guard();
+        // big enough that par_rows / par_batch_reduce actually fork
+        let (m, k, n) = (96usize, 64, 48);
+        let a = randvec(m * k, 10);
+        let bt = randvec(n * k, 11);
+        let bn = randvec(k * n, 12);
+        let run = |threads: usize| {
+            parallel::set_threads(threads);
+            let mut nt = vec![0f32; m * n];
+            matmul_nt(&a, &bt, m, k, n, &mut nt);
+            let mut nn = vec![0f32; m * n];
+            matmul_nn(&a, &bn, m, k, n, &mut nn);
+            // tn_acc reduces k items into an [m, n] output; a here is read
+            // as [k, m] (element count matches, layout is irrelevant for
+            // the 1-vs-N-thread comparison). m*n*k is big enough that the
+            // batch reduction actually forks.
+            let mut tn = vec![0f32; m * n];
+            matmul_tn_acc(&a[..k * m], &bn, k, m, n, 0.5, &mut tn);
+            parallel::set_threads(0);
+            (nt, nn, tn)
+        };
+        let (nt1, nn1, tn1) = run(1);
+        let (nt4, nn4, tn4) = run(4);
+        for (x, y) in nt1.iter().zip(&nt4) {
+            assert_eq!(x, y, "nt rows are chunk-independent");
+        }
+        for (x, y) in nn1.iter().zip(&nn4) {
+            assert_eq!(x, y, "nn rows are chunk-independent");
+        }
+        for (x, y) in tn1.iter().zip(&tn4) {
+            // reduction merge order differs -> tolerance compare
+            assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "{x} vs {y}");
+        }
     }
 }

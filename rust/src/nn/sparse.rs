@@ -5,6 +5,7 @@
 //! (Sec. II-B: complexity directly proportional to the number of edges).
 
 use crate::sparsity::pattern::{NetPattern, Pattern};
+use crate::util::parallel;
 use crate::util::rng::Rng;
 
 /// One junction in compacted form: `idx/wc` rows follow the paper's edge
@@ -51,47 +52,57 @@ impl SparseLayer {
     }
 
     /// FF (eq. 2a): h[b, j] = sum_f wc[j, f] * a[b, idx[j, f]] + bias[j].
+    /// Batch rows are independent, so they are chunked across the
+    /// [`parallel`] thread pool.
     pub fn forward(&self, a: &[f32], batch: usize, out: &mut [f32]) {
         assert_eq!(a.len(), batch * self.n_left);
         assert_eq!(out.len(), batch * self.n_right);
-        for bi in 0..batch {
-            let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
-            let or = &mut out[bi * self.n_right..(bi + 1) * self.n_right];
-            for j in 0..self.n_right {
-                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
-                let mut acc = self.bias[j];
-                for e in lo..hi {
-                    acc += self.wc[e] * ar[self.idx[e] as usize];
+        let work = self.n_edges().max(1);
+        parallel::par_rows(out, self.n_right, work, |row0, chunk| {
+            for (li, or) in chunk.chunks_mut(self.n_right).enumerate() {
+                let bi = row0 + li;
+                let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+                for j in 0..self.n_right {
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    let mut acc = self.bias[j];
+                    for e in lo..hi {
+                        acc += self.wc[e] * ar[self.idx[e] as usize];
+                    }
+                    or[j] = acc;
                 }
-                or[j] = acc;
             }
-        }
+        });
     }
 
     /// BP (eq. 3b inner sum): da[b, k] = sum_j wc[j,.] delta[b, j] scattered
-    /// over idx. Caller applies the activation-derivative product.
+    /// over idx. Caller applies the activation-derivative product. The
+    /// scatter stays within one batch row, so rows parallelize cleanly.
     pub fn backprop(&self, delta: &[f32], batch: usize, out: &mut [f32]) {
         assert_eq!(delta.len(), batch * self.n_right);
         assert_eq!(out.len(), batch * self.n_left);
-        out.fill(0.0);
-        for bi in 0..batch {
-            let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
-            let or = &mut out[bi * self.n_left..(bi + 1) * self.n_left];
-            for j in 0..self.n_right {
-                let dv = dr[j];
-                if dv == 0.0 {
-                    continue;
-                }
-                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
-                for e in lo..hi {
-                    or[self.idx[e] as usize] += self.wc[e] * dv;
+        let work = self.n_edges().max(1);
+        parallel::par_rows(out, self.n_left, work, |row0, chunk| {
+            chunk.fill(0.0);
+            for (li, or) in chunk.chunks_mut(self.n_left).enumerate() {
+                let bi = row0 + li;
+                let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+                for j in 0..self.n_right {
+                    let dv = dr[j];
+                    if dv == 0.0 {
+                        continue;
+                    }
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    for e in lo..hi {
+                        or[self.idx[e] as usize] += self.wc[e] * dv;
+                    }
                 }
             }
-        }
+        });
     }
 
     /// UP gradients (eq. 4b): gwc[e] = sum_b delta[b, j(e)] * a[b, idx[e]],
-    /// gb[j] = sum_b delta[b, j]. Adds the L2 term 2*l2*wc.
+    /// gb[j] = sum_b delta[b, j]. Adds the L2 term 2*l2*wc. The batch
+    /// reduction runs on per-thread partial buffers merged at the end.
     pub fn grads(
         &self,
         a: &[f32],
@@ -103,22 +114,41 @@ impl SparseLayer {
     ) {
         assert_eq!(gwc.len(), self.wc.len());
         assert_eq!(gb.len(), self.n_right);
-        gwc.fill(0.0);
-        gb.fill(0.0);
-        for bi in 0..batch {
-            let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
-            let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
-            for j in 0..self.n_right {
-                let dv = dr[j];
-                if dv == 0.0 {
-                    continue;
-                }
-                gb[j] += dv;
-                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
-                for e in lo..hi {
-                    gwc[e] += dv * ar[self.idx[e] as usize];
+        let nw = gwc.len();
+        let work = self.n_edges().max(1);
+        let body = |range: std::ops::Range<usize>, gw: &mut [f32], gbp: &mut [f32]| {
+            for bi in range {
+                let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+                let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+                for j in 0..self.n_right {
+                    let dv = dr[j];
+                    if dv == 0.0 {
+                        continue;
+                    }
+                    gbp[j] += dv;
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    for e in lo..hi {
+                        gw[e] += dv * ar[self.idx[e] as usize];
+                    }
                 }
             }
+        };
+        if parallel::threads_for(batch, work) <= 1 {
+            // serial fast path: accumulate straight into the caller's
+            // buffers, no scratch allocation
+            gwc.fill(0.0);
+            gb.fill(0.0);
+            body(0..batch, gwc, gb);
+        } else {
+            // one contiguous accumulator [gwc | gb] so a single reduction
+            // covers both gradient tensors
+            let mut both = vec![0f32; nw + self.n_right];
+            parallel::par_batch_reduce(batch, work, &mut both, |range, acc| {
+                let (gw, gbp) = acc.split_at_mut(nw);
+                body(range, gw, gbp);
+            });
+            gwc.copy_from_slice(&both[..nw]);
+            gb.copy_from_slice(&both[nw..]);
         }
         for (g, &w) in gwc.iter_mut().zip(&self.wc) {
             *g += 2.0 * l2 * w;

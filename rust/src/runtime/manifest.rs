@@ -1,5 +1,17 @@
 //! Typed view of `artifacts/manifest.json` (written by
-//! `python/compile/aot.py`).
+//! `python/compile/aot.py`), plus synthesized built-in configs so the
+//! native backend can run with no artifact files at all.
+//!
+//! Every program follows one fixed positional signature convention
+//! (L = number of junctions, layers = [N_0..N_L]):
+//! - `forward`:        [w_i, b_i]*L, [mask_i]*L, x[batch, N_0]
+//!                     -> [logits[batch, N_L]]
+//! - `train`:          [w_i, b_i]*L, [m_w_i, m_b_i]*L, [v_w_i, v_b_i]*L,
+//!                     [mask_i]*L, x, y[batch] i32, t, lr, l2 (scalars)
+//!                     -> updated params/m/v in the same order, then
+//!                        t+1, mean CE loss, #correct (scalars)
+//! - `gather_forward`: [wc_i[N_i, d_in_i]]*L, [idx_i i32]*L, [b_i]*L, x
+//!                     -> [logits] (only for uniform-in-degree configs)
 
 use std::collections::BTreeMap;
 
@@ -59,22 +71,157 @@ fn tensor_spec(j: &Json) -> Result<TensorSpec, String> {
     Ok(TensorSpec { name, shape, dtype })
 }
 
-/// Cheap host-side config probe (no PJRT involvement).
+/// Cheap host-side config probe (no backend involvement).
 pub struct ProbeInfo {
     pub layers: Vec<usize>,
     pub batch: usize,
 }
 
+fn spec(name: String, shape: Vec<usize>, dtype: Dtype) -> TensorSpec {
+    TensorSpec { name, shape, dtype }
+}
+
+impl ConfigEntry {
+    /// Synthesize a config (standard program signatures, no artifact
+    /// files) for the native backend. `gather_dout` adds a
+    /// `gather_forward` program when every junction's in-degree
+    /// `N_{i-1} * d_out_i / N_i` is integral.
+    pub fn synthesize(layers: Vec<usize>, batch: usize, gather_dout: Option<Vec<usize>>) -> ConfigEntry {
+        let l = layers.len() - 1;
+        let n0 = layers[0];
+        let classes = layers[l];
+
+        let mut params = Vec::with_capacity(2 * l);
+        let mut masks = Vec::with_capacity(l);
+        for i in 0..l {
+            let (nl, nr) = (layers[i], layers[i + 1]);
+            params.push(spec(format!("w{}", i + 1), vec![nr, nl], Dtype::F32));
+            params.push(spec(format!("b{}", i + 1), vec![nr], Dtype::F32));
+            masks.push(spec(format!("mask{}", i + 1), vec![nr, nl], Dtype::F32));
+        }
+        let x = spec("x".into(), vec![batch, n0], Dtype::F32);
+        let logits = spec("logits".into(), vec![batch, classes], Dtype::F32);
+
+        let mut programs = BTreeMap::new();
+
+        // forward: params, masks, x -> logits
+        let mut fin = params.clone();
+        fin.extend(masks.iter().cloned());
+        fin.push(x.clone());
+        programs.insert(
+            "forward".to_string(),
+            ProgramSpec { file: "<native>".into(), inputs: fin, outputs: vec![logits.clone()] },
+        );
+
+        // train: params, m, v, masks, x, y, t, lr, l2
+        //        -> params', m', v', t+1, loss, correct
+        let renamed = |prefix: &str| -> Vec<TensorSpec> {
+            params
+                .iter()
+                .map(|s| spec(format!("{prefix}{}", s.name), s.shape.clone(), s.dtype))
+                .collect()
+        };
+        let mut tin = params.clone();
+        tin.extend(renamed("m_"));
+        tin.extend(renamed("v_"));
+        tin.extend(masks.iter().cloned());
+        tin.push(x.clone());
+        tin.push(spec("y".into(), vec![batch], Dtype::I32));
+        tin.push(spec("t".into(), vec![], Dtype::F32));
+        tin.push(spec("lr".into(), vec![], Dtype::F32));
+        tin.push(spec("l2".into(), vec![], Dtype::F32));
+        let mut tout = params.clone();
+        tout.extend(renamed("m_"));
+        tout.extend(renamed("v_"));
+        tout.push(spec("t_next".into(), vec![], Dtype::F32));
+        tout.push(spec("loss".into(), vec![], Dtype::F32));
+        tout.push(spec("correct".into(), vec![], Dtype::F32));
+        programs.insert(
+            "train".to_string(),
+            ProgramSpec { file: "<native>".into(), inputs: tin, outputs: tout },
+        );
+
+        // gather_forward: wc*, idx*, b*, x -> logits (uniform d_in only)
+        if let Some(dout) = &gather_dout {
+            let din: Option<Vec<usize>> = (0..l)
+                .map(|i| {
+                    let (nl, nr) = (layers[i], layers[i + 1]);
+                    if (nl * dout[i]) % nr == 0 {
+                        Some(nl * dout[i] / nr)
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            if let Some(din) = din {
+                let mut gin = Vec::with_capacity(3 * l + 1);
+                for i in 0..l {
+                    let nr = layers[i + 1];
+                    gin.push(spec(format!("wc{}", i + 1), vec![nr, din[i]], Dtype::F32));
+                }
+                for i in 0..l {
+                    let nr = layers[i + 1];
+                    gin.push(spec(format!("idx{}", i + 1), vec![nr, din[i]], Dtype::I32));
+                }
+                for i in 0..l {
+                    gin.push(spec(format!("b{}", i + 1), vec![layers[i + 1]], Dtype::F32));
+                }
+                gin.push(x);
+                programs.insert(
+                    "gather_forward".to_string(),
+                    ProgramSpec { file: "<native>".into(), inputs: gin, outputs: vec![logits] },
+                );
+            }
+        }
+
+        ConfigEntry { layers, batch, gather_dout, programs }
+    }
+}
+
 impl Manifest {
-    /// Read just one config's shape info from `<dir>/manifest.json`.
+    /// Built-in configs served by the native backend when no
+    /// `manifest.json` exists (shapes follow the AOT compile set: the
+    /// paper's Table-I MNIST network, its TIMIT network, and a tiny
+    /// CI-sized config).
+    pub fn builtin() -> Manifest {
+        let mut configs = BTreeMap::new();
+        configs.insert(
+            "tiny".to_string(),
+            ConfigEntry::synthesize(vec![32, 16, 8], 16, Some(vec![4, 4])),
+        );
+        configs.insert(
+            "mnist_fc2".to_string(),
+            ConfigEntry::synthesize(vec![800, 100, 10], 256, Some(vec![20, 10])),
+        );
+        configs.insert(
+            "timit".to_string(),
+            ConfigEntry::synthesize(vec![39, 390, 39], 128, Some(vec![90, 9])),
+        );
+        Manifest { configs }
+    }
+
+    /// Read `<dir>/manifest.json` when present, falling back to the
+    /// built-in native configs only when the file does not exist; any
+    /// other read or parse failure is surfaced rather than silently
+    /// replaced with the wrong configs.
+    pub fn load_or_builtin(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                Manifest::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest {}: {e}", path.display()))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Manifest::builtin()),
+            Err(e) => Err(anyhow::anyhow!("cannot read {}: {e}", path.display())),
+        }
+    }
+
+    /// Read just one config's shape info (manifest file when present,
+    /// built-in configs otherwise).
     pub fn probe(
         dir: impl AsRef<std::path::Path>,
         config: &str,
     ) -> anyhow::Result<ProbeInfo> {
-        let path = dir.as_ref().join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} — run `make artifacts`", path.display()))?;
-        let m = Manifest::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let m = Manifest::load_or_builtin(dir)?;
         let entry = m
             .configs
             .get(config)
@@ -181,6 +328,36 @@ mod tests {
     fn rejects_bad_dtype() {
         let bad = SAMPLE.replace("i32", "f64");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn builtin_configs_follow_signature_convention() {
+        let m = Manifest::builtin();
+        for name in ["tiny", "mnist_fc2", "timit"] {
+            let c = &m.configs[name];
+            let l = c.layers.len() - 1;
+            // train signature: 6L params/opt + L masks + x,y,t,lr,l2
+            let train = &c.programs["train"];
+            assert_eq!(train.inputs.len(), 7 * l + 5, "{name} train inputs");
+            assert_eq!(train.outputs.len(), 6 * l + 3, "{name} train outputs");
+            assert_eq!(train.inputs[7 * l + 1].dtype, Dtype::I32, "{name} y dtype");
+            let fwd = &c.programs["forward"];
+            assert_eq!(fwd.inputs.len(), 3 * l + 1, "{name} forward inputs");
+            assert_eq!(fwd.outputs.len(), 1);
+            assert_eq!(fwd.outputs[0].shape, vec![c.batch, c.layers[l]]);
+            // all built-in configs have admissible gather degrees
+            let g = &c.programs["gather_forward"];
+            assert_eq!(g.inputs.len(), 3 * l + 1, "{name} gather inputs");
+            assert_eq!(g.inputs[l].dtype, Dtype::I32, "{name} idx dtype");
+        }
+    }
+
+    #[test]
+    fn probe_falls_back_to_builtin() {
+        let p = Manifest::probe("/nonexistent/dir", "tiny").unwrap();
+        assert_eq!(p.layers, vec![32, 16, 8]);
+        assert_eq!(p.batch, 16);
+        assert!(Manifest::probe("/nonexistent/dir", "nope").is_err());
     }
 
     #[test]

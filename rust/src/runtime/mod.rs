@@ -1,19 +1,36 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them from the Rust hot path.
+//! Backend-agnostic execution layer (see DESIGN.md §Backends).
 //!
-//! Python never runs here — `make artifacts` is the only compile-path step;
-//! afterwards the `pds` binary is self-contained. The manifest
-//! (`artifacts/manifest.json`) describes every program's positional
-//! input/output literals so marshalling is validated, not guessed.
+//! The manifest (`artifacts/manifest.json`, or the built-in synthesized
+//! configs) describes every program's positional input/output tensors, so
+//! marshalling is validated, not guessed. Execution is pluggable behind
+//! the [`ExecBackend`] trait:
+//!
+//! - [`native::NativeEngine`] — always compiled, the default: executes the
+//!   manifest's forward / train / gather_forward programs with the crate's
+//!   own `nn::matrix` / `nn::sparse` kernels (batch-parallel over the
+//!   `util::parallel` thread pool). Needs no artifact files and no native
+//!   libraries.
+//! - `pjrt::PjrtEngine` (cargo feature `pjrt`, off by default) — loads the
+//!   AOT HLO-text artifacts produced by `python/compile/aot.py` and runs
+//!   them on the PJRT CPU plugin via the `xla` crate. Python never runs
+//!   here — `make artifacts` is the only compile-path step.
+//!
+//! [`Engine::new`] picks PJRT when the feature is enabled and compiled
+//! artifacts exist, and the native backend otherwise, so every caller
+//! (coordinator, CLI, benches, tests) is backend-agnostic.
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::path::{Path, PathBuf};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
 
 pub use manifest::{ConfigEntry, Dtype, Manifest, ProgramSpec, TensorSpec};
+pub use native::NativeEngine;
 
-/// A host-side tensor crossing the PJRT boundary.
+/// A host-side tensor crossing the backend boundary.
 #[derive(Clone, Debug)]
 pub enum Value {
     F32(Vec<f32>, Vec<usize>),
@@ -49,32 +66,17 @@ impl Value {
         }
     }
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            Value::F32(data, shape) => {
-                if shape.is_empty() {
-                    xla::Literal::scalar(data[0])
-                } else {
-                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data).reshape(&dims)?
-                }
-            }
-            Value::I32(data, shape) => {
-                if shape.is_empty() {
-                    xla::Literal::scalar(data[0])
-                } else {
-                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data).reshape(&dims)?
-                }
-            }
-        };
-        Ok(lit)
-    }
-
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Value::F32(d, _) => Ok(d),
             _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 value"),
         }
     }
 
@@ -86,46 +88,81 @@ impl Value {
     }
 }
 
-/// The PJRT client (CPU plugin, the platform the xla 0.1.6 crate ships).
+/// A pluggable execution backend: resolves manifest (config, program)
+/// pairs into executable programs.
+pub trait ExecBackend {
+    /// Human-readable platform tag (e.g. "native-cpu", "Host").
+    fn platform(&self) -> String;
+
+    /// Build the executable for `programs[program]` of `config`. The
+    /// facade passes the manifest entry and program spec; inputs are
+    /// validated by [`Program::run`] before reaching the executable.
+    fn load_program(
+        &self,
+        config: &str,
+        program: &str,
+        entry: &ConfigEntry,
+        spec: &ProgramSpec,
+    ) -> Result<Box<dyn ProgramExec>>;
+}
+
+/// One loaded executable. `run` receives inputs already validated against
+/// the manifest spec and must return outputs in manifest order.
+pub trait ProgramExec {
+    fn run(&self, inputs: &[Value], spec: &ProgramSpec) -> Result<Vec<Value>>;
+}
+
+/// Backend-agnostic engine over an artifacts directory.
 pub struct Engine {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
+    backend: Box<dyn ExecBackend>,
     pub manifest: Manifest,
 }
 
 /// One compiled executable with its validated signature.
 pub struct Program {
-    exe: xla::PjRtLoadedExecutable,
+    exec: Box<dyn ProgramExec>,
     pub spec: ProgramSpec,
     pub name: String,
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifacts directory (reads
-    /// `manifest.json`; fails with guidance if `make artifacts` never ran).
+    /// Default engine: PJRT when the `pjrt` feature is enabled and
+    /// compiled artifacts exist in `artifacts_dir`, the pure-Rust native
+    /// backend otherwise.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "cannot read {} — run `make artifacts` first",
-                manifest_path.display()
-            )
-        })?;
-        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("bad manifest: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
+        #[cfg(feature = "pjrt")]
+        if artifacts_dir.as_ref().join("manifest.json").exists() {
+            return Engine::pjrt(artifacts_dir);
+        }
+        Engine::native(artifacts_dir)
+    }
+
+    /// Pure-Rust native engine. Reads `manifest.json` for config shapes
+    /// when present; otherwise serves the built-in synthesized configs —
+    /// no artifact files are required either way.
+    pub fn native(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load_or_builtin(artifacts_dir)?;
         Ok(Engine {
-            client,
-            artifacts_dir: dir,
+            backend: Box::new(NativeEngine),
+            manifest,
+        })
+    }
+
+    /// PJRT engine over compiled AOT artifacts (requires `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let (backend, manifest) = pjrt::PjrtEngine::new(artifacts_dir)?;
+        Ok(Engine {
+            backend: Box::new(backend),
             manifest,
         })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Compile `programs[program]` of config `config`.
+    /// Load `programs[program]` of config `config`.
     pub fn load(&self, config: &str, program: &str) -> Result<Program> {
         let entry = self
             .manifest
@@ -136,13 +173,9 @@ impl Engine {
             .programs
             .get(program)
             .ok_or_else(|| anyhow!("program '{program}' not in config '{config}'"))?;
-        let path = self.artifacts_dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        let exec = self.backend.load_program(config, program, entry, spec)?;
         Ok(Program {
-            exe,
+            exec,
             spec: spec.clone(),
             name: format!("{config}/{program}"),
         })
@@ -161,7 +194,6 @@ impl Program {
                 self.spec.inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (v, spec) in inputs.iter().zip(&self.spec.inputs) {
             let want: usize = spec.shape.iter().product();
             if v.len() != want || v.dtype() != spec.dtype {
@@ -175,26 +207,15 @@ impl Program {
                     v.len()
                 );
             }
-            literals.push(v.to_literal()?);
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
+        let out = self.exec.run(inputs, &self.spec)?;
+        if out.len() != self.spec.outputs.len() {
             bail!(
                 "{}: {} outputs returned, manifest says {}",
                 self.name,
-                parts.len(),
+                out.len(),
                 self.spec.outputs.len()
             );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
-            let v = match spec.dtype {
-                Dtype::F32 => Value::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
-                Dtype::I32 => Value::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
-            };
-            out.push(v);
         }
         Ok(out)
     }
@@ -220,17 +241,33 @@ mod tests {
         assert_eq!(v.len(), 4);
         assert_eq!(v.as_f32().unwrap()[3], 4.0);
         assert!(v.scalar().is_err());
+        assert!(v.as_i32().is_err());
         let s = Value::scalar_f32(7.5);
         assert_eq!(s.scalar().unwrap(), 7.5);
         assert_eq!(s.dtype(), Dtype::F32);
     }
 
     #[test]
-    fn engine_requires_manifest() {
-        let err = match Engine::new("/nonexistent/dir") {
-            Err(e) => e,
-            Ok(_) => panic!("engine created from nonexistent dir"),
-        };
-        assert!(format!("{err:#}").contains("make artifacts"));
+    fn native_fallback_serves_builtin_configs() {
+        // no manifest.json anywhere near this path: the native backend
+        // must still come up with the built-in configs
+        let e = Engine::native("/nonexistent/dir").unwrap();
+        assert!(e.manifest.configs.contains_key("tiny"));
+        assert!(e.platform().starts_with("native"));
+        assert!(e.load("tiny", "forward").is_ok());
+        assert!(e.load("tiny", "train").is_ok());
+        assert!(e.load("tiny", "bogus").is_err());
+        assert!(e.load("bogus", "forward").is_err());
+    }
+
+    #[test]
+    fn program_facade_validates_inputs() {
+        let e = Engine::native("/nonexistent/dir").unwrap();
+        let p = e.load("tiny", "forward").unwrap();
+        // wrong arity
+        let err = p.run(&[Value::scalar_f32(1.0)]).unwrap_err();
+        assert!(format!("{err:#}").contains("inputs given"));
+        assert!(p.input_index("x").is_ok());
+        assert!(p.input_index("nope").is_err());
     }
 }

@@ -1,0 +1,128 @@
+//! PJRT execution backend (cargo feature `pjrt`, off by default): loads
+//! the AOT HLO-text artifacts produced by `python/compile/aot.py` and
+//! executes them on the PJRT CPU plugin (the platform the xla 0.1.6 crate
+//! ships). Linking requires native XLA libraries, which is why this
+//! backend is feature-gated; the default build uses
+//! [`super::native::NativeEngine`] instead.
+//!
+//! PJRT objects wrap thread-affine raw handles (not `Send`), so each
+//! thread that needs this backend builds its own engine — see
+//! `coordinator::server`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::{ConfigEntry, Dtype, ExecBackend, Manifest, ProgramExec, ProgramSpec, Value};
+
+/// The PJRT client over an artifacts directory.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+struct PjrtProgram {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+fn to_literal(v: &Value) -> Result<xla::Literal> {
+    let lit = match v {
+        Value::F32(data, shape) => {
+            if shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+        Value::I32(data, shape) => {
+            if shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over an artifacts directory (reads
+    /// `manifest.json`; fails with guidance if `make artifacts` never
+    /// ran). Returns the engine together with the parsed manifest for the
+    /// [`super::Engine`] facade.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<(Self, Manifest)> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest =
+            Manifest::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok((
+            PjrtEngine {
+                client,
+                artifacts_dir: dir,
+            },
+            manifest,
+        ))
+    }
+}
+
+impl ExecBackend for PjrtEngine {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load_program(
+        &self,
+        config: &str,
+        program: &str,
+        _entry: &ConfigEntry,
+        spec: &ProgramSpec,
+    ) -> Result<Box<dyn ProgramExec>> {
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Box::new(PjrtProgram {
+            exe,
+            name: format!("{config}/{program}"),
+        }))
+    }
+}
+
+impl ProgramExec for PjrtProgram {
+    fn run(&self, inputs: &[Value], spec: &ProgramSpec) -> Result<Vec<Value>> {
+        let literals = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, manifest says {}",
+                self.name,
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+            let v = match ospec.dtype {
+                Dtype::F32 => Value::F32(lit.to_vec::<f32>()?, ospec.shape.clone()),
+                Dtype::I32 => Value::I32(lit.to_vec::<i32>()?, ospec.shape.clone()),
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+}

@@ -222,8 +222,10 @@ pub fn default_z(shape: JunctionShape, _d_out: usize) -> usize {
 // ---------------------------------------------------------------------------
 
 /// Count of possible left-memory access patterns, carried in log10 (the
-/// type-3 counts overflow u128 for real junctions); `exact` is provided
-/// when it fits in u128.
+/// type-3 counts overflow u128 for real junctions); `exact` is the
+/// integer-exact count, computed with checked u128 arithmetic and `None`
+/// on overflow — never reconstructed from the float logarithm, which
+/// loses integer precision above ~2^53.
 #[derive(Clone, Copy, Debug)]
 pub struct PatternSpace {
     pub log10: f64,
@@ -239,6 +241,36 @@ fn ln_factorial(n: usize) -> f64 {
 
 fn log10_factorial(n: usize) -> f64 {
     ln_factorial(n) / std::f64::consts::LN_10
+}
+
+fn checked_factorial(n: usize) -> Option<u128> {
+    let mut acc: u128 = 1;
+    for k in 2..=n as u128 {
+        acc = acc.checked_mul(k)?;
+    }
+    Some(acc)
+}
+
+fn checked_pow(base: u128, exp: usize) -> Option<u128> {
+    let e: u32 = exp.try_into().ok()?;
+    base.checked_pow(e)
+}
+
+/// Exact dither multiplier K_i (eq. 13) in checked u128; `None` on
+/// overflow (the log10 path still carries the magnitude).
+fn dither_factor_exact(z: usize, d_in: usize, d_out: usize, per_sweep: bool) -> Option<u128> {
+    let expo = if per_sweep { d_out } else { 1 };
+    if d_in % z == 0 {
+        Some(1)
+    } else if z % d_in == 0 {
+        // K = (z! / (d_in!)^(z/d_in))^expo; the quotient is an exact
+        // multinomial coefficient
+        let denom = checked_pow(checked_factorial(d_in)?, z / d_in)?;
+        checked_pow(checked_factorial(z)? / denom, expo)
+    } else {
+        // upper bound (z!)^expo
+        checked_pow(checked_factorial(z)?, expo)
+    }
 }
 
 /// Dither multiplier K_i (eq. 13). Returns (log10 K, exact formula?).
@@ -267,31 +299,40 @@ pub fn pattern_space(
 ) -> PatternSpace {
     let depth = shape.n_left / z;
     let d_in = shape.n_left * d_out / shape.n_right;
-    let (base_log10, dith) = match flavor {
-        Flavor::Type1 { dither } => ((z as f64) * (depth as f64).log10(), dither.then_some(false)),
+    let (base_log10, base_exact, dith) = match flavor {
+        Flavor::Type1 { dither } => (
+            (z as f64) * (depth as f64).log10(),
+            checked_pow(depth as u128, z),
+            dither.then_some(false),
+        ),
         Flavor::Type2 { dither } => (
             (z as f64) * (d_out as f64) * (depth as f64).log10(),
+            checked_pow(depth as u128, z * d_out),
             dither.then_some(true),
         ),
         Flavor::Type3 { dither } => (
             (z as f64) * (d_out as f64) * log10_factorial(depth),
+            checked_factorial(depth).and_then(|f| checked_pow(f, z * d_out)),
             dither.then_some(true),
         ),
     };
-    let (k_log10, k_exact) = match dith {
-        None => (0.0, true),
-        Some(per_sweep) => dither_factor(z, d_in, d_out, per_sweep),
+    let (k_log10, k_exact_formula, k_exact) = match dith {
+        None => (0.0, true, Some(1u128)),
+        Some(per_sweep) => {
+            let (lg, ex) = dither_factor(z, d_in, d_out, per_sweep);
+            (lg, ex, dither_factor_exact(z, d_in, d_out, per_sweep))
+        }
     };
-    let log10 = base_log10 + k_log10;
-    let exact = if log10 < 38.0 {
-        Some(10f64.powf(log10).round() as u128)
-    } else {
-        None
+    // integer-exact count via checked u128 arithmetic; only the log10
+    // carries the magnitude once any factor overflows
+    let exact = match (base_exact, k_exact) {
+        (Some(b), Some(k)) => b.checked_mul(k),
+        _ => None,
     };
     PatternSpace {
-        log10,
+        log10: base_log10 + k_log10,
         exact,
-        is_exact_formula: k_exact,
+        is_exact_formula: k_exact_formula,
     }
 }
 
@@ -394,12 +435,51 @@ mod tests {
         ];
         for (flavor, want) in cases {
             let got = pattern_space(shape, 2, 4, flavor);
-            let exact = got.exact.expect("fits");
-            // log10-roundtrip tolerance
-            let rel = (exact as f64 - want as f64).abs() / want as f64;
-            assert!(rel < 1e-6, "{}: got {exact}, want {want}", flavor.name());
+            // integer-exact counts, no float roundtrip
+            assert_eq!(got.exact, Some(want), "{}", flavor.name());
             assert!(got.is_exact_formula);
         }
+    }
+
+    #[test]
+    fn pattern_space_exact_beyond_f64_precision() {
+        // depth^z = 3^40 = 12157665459056928801 (> 2^53): the old
+        // 10^log10-roundtrip reconstruction loses the low digits here even
+        // though the count fits comfortably in u128.
+        let shape = JunctionShape { n_left: 120, n_right: 120 };
+        let got = pattern_space(shape, 2, 40, Flavor::Type1 { dither: false });
+        assert_eq!(got.exact, Some(3u128.pow(40)));
+        assert!((got.log10 - 40.0 * 3f64.log10()).abs() < 1e-9);
+
+        // type 2: depth^(z*d_out) = 3^80, still exact in u128
+        let got2 = pattern_space(shape, 2, 40, Flavor::Type2 { dither: false });
+        assert_eq!(got2.exact, Some(3u128.pow(80)));
+    }
+
+    #[test]
+    fn pattern_space_overflow_falls_back_to_log10() {
+        // the Table-II MNIST junction's type-3 space overflows u128 by a
+        // huge margin; exact must be None with log10 still carrying the
+        // magnitude
+        let big = JunctionShape { n_left: 800, n_right: 100 };
+        let got = pattern_space(big, 20, 200, Flavor::Type3 { dither: true });
+        assert!(got.exact.is_none());
+        assert!(got.log10 > 38.0);
+    }
+
+    #[test]
+    fn checked_helpers() {
+        assert_eq!(checked_factorial(0), Some(1));
+        assert_eq!(checked_factorial(5), Some(120));
+        assert_eq!(checked_factorial(34), Some((2..=34u128).product()));
+        assert_eq!(checked_factorial(35), None, "35! overflows u128");
+        assert_eq!(checked_pow(2, 127), Some(1u128 << 127));
+        assert_eq!(checked_pow(2, 128), None);
+        // exact dither factor agrees with the log-space one where defined
+        let (lg, _) = dither_factor(4, 2, 2, true);
+        assert_eq!(dither_factor_exact(4, 2, 2, true), Some(36));
+        assert!((10f64.powf(lg) - 36.0).abs() < 1e-6);
+        assert_eq!(dither_factor_exact(4, 8, 3, true), Some(1));
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! In-tree replacements for crates unavailable in the offline build
 //! (see DESIGN.md §Dependencies): deterministic PRNG, minimal JSON,
-//! micro-bench harness, and a property-test driver.
+//! micro-bench harness, scoped fork-join parallelism, and a
+//! property-test driver.
 
 pub mod bench;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 

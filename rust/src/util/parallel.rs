@@ -1,0 +1,209 @@
+//! Minimal fork-join parallelism over `std::thread::scope` (rayon is
+//! unavailable in the offline build; see DESIGN.md §Dependencies).
+//!
+//! Two shapes cover every hot path in the crate:
+//! - [`par_rows`]: split a row-major output buffer into contiguous
+//!   per-thread chunks of whole rows — each row is written by exactly one
+//!   thread (FF / BP, batched over the batch dimension),
+//! - [`par_batch_reduce`]: fold a batch range into an accumulator with
+//!   per-thread partial buffers merged serially (UP / weight gradients).
+//!
+//! Threading only engages when the estimated work amortizes thread spawn
+//! (~tens of microseconds); below the threshold everything runs inline on
+//! the caller's thread, so tiny unit-test problems stay deterministic and
+//! fast. The thread count is `PDS_THREADS` if set, else
+//! `available_parallelism`, and can be overridden at runtime with
+//! [`set_threads`] (used by the benches to measure parallel speedup
+//! against the single-threaded kernels).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = auto-detect; anything else is an explicit override.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// Cached auto-detected count (0 = not yet detected).
+static AUTO: AtomicUsize = AtomicUsize::new(0);
+
+/// Minimum estimated scalar operations per worker before threading pays
+/// for itself. Threads are spawned per call (scoped, no persistent pool),
+/// so each worker must amortize a ~10-50us spawn: 128k f32 ops is ~50us+
+/// of compute, comfortably above the spawn cost while still engaging all
+/// cores on real batched workloads (e.g. a batch-256 800x100 junction is
+/// ~20M ops).
+const MIN_WORK_PER_THREAD: usize = 1 << 17;
+
+/// Override the worker-thread count (`set_threads(1)` forces the serial
+/// path, `set_threads(0)` restores auto-detection).
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Current maximum number of worker threads.
+pub fn max_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    let cached = AUTO.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("PDS_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .clamp(1, 64);
+    AUTO.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Thread count worth using for `items` units of `work_per_item` scalar
+/// operations each (1 = run inline). Public so callers can pick a
+/// zero-copy serial path when threading will not engage.
+pub fn threads_for(items: usize, work_per_item: usize) -> usize {
+    let total = items.saturating_mul(work_per_item);
+    let by_work = (total / MIN_WORK_PER_THREAD).max(1);
+    max_threads().min(by_work).min(items.max(1))
+}
+
+/// Serializes tests that mutate the global thread override (cargo runs
+/// unit tests concurrently in one process, so unsynchronized
+/// `set_threads` calls from different tests race).
+#[cfg(test)]
+pub(crate) fn override_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Process `out` (row-major, `row_width` elements per row) in parallel:
+/// `f(first_row, chunk)` receives a contiguous chunk of whole rows
+/// starting at global row index `first_row`. Rows must be independent.
+/// `work_per_row` is an estimate of scalar operations per row, used to
+/// decide whether threading pays.
+pub fn par_rows<F>(out: &mut [f32], row_width: usize, work_per_row: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_width > 0 && out.len() % row_width == 0);
+    let rows = out.len() / row_width;
+    let threads = threads_for(rows, work_per_row);
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = out;
+        let mut first_row = 0usize;
+        while !rest.is_empty() {
+            let take = (rows_per * row_width).min(rest.len());
+            // move `rest` out so the split halves keep the outer lifetime
+            let tmp = rest;
+            let (head, tail) = tmp.split_at_mut(take);
+            rest = tail;
+            let row0 = first_row;
+            first_row += take / row_width;
+            if rest.is_empty() {
+                // run the last chunk on the calling thread
+                f(row0, head);
+            } else {
+                s.spawn(move || f(row0, head));
+            }
+        }
+    });
+}
+
+/// Fold the batch range `0..batch` into `acc`: `f(range, partial)` must
+/// *add* its contribution for `range` into `partial`. Parallel execution
+/// gives each thread a zeroed partial buffer and merges by element-wise
+/// addition, so existing contents of `acc` are preserved (accumulate
+/// semantics, like the serial path).
+pub fn par_batch_reduce<F>(batch: usize, work_per_item: usize, acc: &mut [f32], f: F)
+where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    let threads = threads_for(batch, work_per_item);
+    if threads <= 1 {
+        f(0..batch, acc);
+        return;
+    }
+    let per = batch.div_ceil(threads);
+    let n_chunks = batch.div_ceil(per);
+    let mut partials: Vec<Vec<f32>> = (1..n_chunks).map(|_| vec![0f32; acc.len()]).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        for (ci, buf) in partials.iter_mut().enumerate() {
+            let lo = (ci + 1) * per;
+            let hi = (lo + per).min(batch);
+            s.spawn(move || f(lo..hi, buf));
+        }
+        f(0..per.min(batch), acc);
+    });
+    for buf in &partials {
+        for (a, b) in acc.iter_mut().zip(buf) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_rows_covers_every_row_once() {
+        // large enough to engage threading regardless of core count
+        let rows = 257;
+        let width = 3;
+        let mut out = vec![0f32; rows * width];
+        par_rows(&mut out, width, MIN_WORK_PER_THREAD, |row0, chunk| {
+            for (i, r) in chunk.chunks_mut(width).enumerate() {
+                for v in r.iter_mut() {
+                    *v += (row0 + i) as f32;
+                }
+            }
+        });
+        for (i, r) in out.chunks(width).enumerate() {
+            assert!(r.iter().all(|&v| v == i as f32), "row {i}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn par_batch_reduce_matches_serial_sum_and_accumulates() {
+        let batch = 1000;
+        let mut acc = vec![1f32; 8];
+        par_batch_reduce(batch, MIN_WORK_PER_THREAD, &mut acc, |range, part| {
+            for i in range {
+                for (j, p) in part.iter_mut().enumerate() {
+                    *p += (i * (j + 1)) as f32;
+                }
+            }
+        });
+        for (j, &v) in acc.iter().enumerate() {
+            let want = 1.0 + ((batch * (batch - 1) / 2) * (j + 1)) as f32;
+            assert!((v - want).abs() < want * 1e-6, "j={j}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn small_work_stays_serial() {
+        // threads_for must return 1 for tiny problems
+        assert_eq!(threads_for(4, 10), 1);
+        assert_eq!(threads_for(0, 100), 1);
+    }
+
+    #[test]
+    fn set_threads_overrides_and_resets() {
+        let _guard = override_guard();
+        set_threads(1);
+        assert_eq!(max_threads(), 1);
+        set_threads(0);
+        assert!(max_threads() >= 1);
+    }
+}

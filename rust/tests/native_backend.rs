@@ -1,0 +1,306 @@
+//! Integration tests for the pure-Rust `runtime::NativeEngine` backend:
+//! forward / train_step parity against the `nn` reference trainer on a
+//! small clash-free network, mask-invariant training end to end, parallel
+//! kernel consistency, and (behind the `pjrt` feature) parity between the
+//! PJRT artifact path and the native path. These run unconditionally —
+//! the native backend needs no artifact files.
+
+use pds::nn::adam::{Adam, AdamConfig};
+use pds::nn::dense::DenseNet;
+use pds::nn::sparse::SparseNet;
+use pds::runtime::{Engine, Value};
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::pattern::NetPattern;
+use pds::sparsity::{generate, Method};
+use pds::util::parallel;
+use pds::util::rng::Rng;
+
+const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn tiny_pattern(engine: &Engine, dout: &[usize], seed: u64) -> NetPattern {
+    let layers = engine.manifest.configs["tiny"].layers.clone();
+    let net = NetConfig::new(layers);
+    let mut rng = Rng::new(seed);
+    generate(
+        Method::ClashFree,
+        &net,
+        &DoutConfig(dout.to_vec()),
+        None,
+        &mut rng,
+    )
+}
+
+/// Two fused native train steps == two reference masked-dense steps with
+/// the reference Adam (identical init, t = 1 then t = 2).
+#[test]
+fn native_train_step_matches_reference_trainer() {
+    let engine = Engine::native(DIR).unwrap();
+    let entry = &engine.manifest.configs["tiny"];
+    let (layers, batch) = (entry.layers.clone(), entry.batch);
+    let pattern = tiny_pattern(&engine, &[8, 4], 5);
+    let mut session =
+        pds::coordinator::TrainSession::new(&engine, "tiny", &pattern, 1e-3, 1e-3, 6).unwrap();
+
+    // mirror initial params into the reference dense net
+    let mut dnet = DenseNet::init_he(&layers, 0.1, &mut Rng::new(0));
+    for i in 0..dnet.n_junctions() {
+        dnet.w[i] = session.param(i, false).as_f32().unwrap().to_vec();
+        dnet.b[i] = session.param(i, true).as_f32().unwrap().to_vec();
+    }
+    dnet.set_masks(pattern.junctions.iter().map(|p| p.mask()).collect());
+    let mut opt = Adam::new(
+        AdamConfig {
+            lr: 1e-3,
+            ..Default::default()
+        },
+        &dnet
+            .w
+            .iter()
+            .zip(&dnet.b)
+            .map(|(w, b)| (w.len(), b.len()))
+            .collect::<Vec<_>>(),
+    );
+
+    let mut rng = Rng::new(7);
+    for step in 0..2 {
+        let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..batch)
+            .map(|_| rng.below(layers[layers.len() - 1]) as i32)
+            .collect();
+        let out = session.step(&x, &y).unwrap();
+        let native = dnet.step(&x, &y, batch, 1e-3, None);
+        assert_eq!(out.correct, native.correct, "step {step}");
+        assert!(
+            (out.loss - native.loss).abs() < 1e-5 * (1.0 + native.loss.abs()),
+            "step {step} loss {} vs {}",
+            out.loss,
+            native.loss
+        );
+        opt.step(&mut dnet.w, &mut dnet.b, &native.grads.gw, &native.grads.gb);
+        for i in 0..dnet.n_junctions() {
+            let got_w = session.param(i, false).as_f32().unwrap();
+            for (idx, (g, w)) in got_w.iter().zip(&dnet.w[i]).enumerate() {
+                assert!(
+                    (g - w).abs() < 1e-5 * (1.0 + w.abs()),
+                    "step {step} junction {i} w[{idx}]: {g} vs {w}"
+                );
+            }
+            let got_b = session.param(i, true).as_f32().unwrap();
+            for (idx, (g, b)) in got_b.iter().zip(&dnet.b[i]).enumerate() {
+                assert!(
+                    (g - b).abs() < 1e-5 * (1.0 + b.abs()),
+                    "step {step} junction {i} b[{idx}]: {g} vs {b}"
+                );
+            }
+        }
+    }
+    assert_eq!(session.step_count(), 2);
+}
+
+/// Session logits through the native `forward` program == the reference
+/// masked-dense logits on mirrored parameters.
+#[test]
+fn native_forward_matches_reference_trainer() {
+    let engine = Engine::native(DIR).unwrap();
+    let entry = &engine.manifest.configs["tiny"];
+    let (layers, batch) = (entry.layers.clone(), entry.batch);
+    let pattern = tiny_pattern(&engine, &[4, 2], 9);
+    let session =
+        pds::coordinator::TrainSession::new(&engine, "tiny", &pattern, 1e-3, 0.0, 11).unwrap();
+    let mut dnet = DenseNet::init_he(&layers, 0.1, &mut Rng::new(1));
+    for i in 0..dnet.n_junctions() {
+        dnet.w[i] = session.param(i, false).as_f32().unwrap().to_vec();
+        dnet.b[i] = session.param(i, true).as_f32().unwrap().to_vec();
+    }
+    dnet.set_masks(pattern.junctions.iter().map(|p| p.mask()).collect());
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+    let got = session.logits(&x).unwrap();
+    let want = dnet.logits(&x, batch);
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}
+
+/// The compacted gather_forward program == the masked-dense forward
+/// program on the same pattern and weights.
+#[test]
+fn native_gather_forward_matches_masked_forward() {
+    let engine = Engine::native(DIR).unwrap();
+    let entry = &engine.manifest.configs["tiny"];
+    let (layers, batch) = (entry.layers.clone(), entry.batch);
+    let dout: Vec<usize> = entry.gather_dout.clone().unwrap();
+    let net = NetConfig::new(layers.clone());
+    let mut rng = Rng::new(9);
+    let pattern = generate(Method::ClashFree, &net, &DoutConfig(dout), None, &mut rng);
+
+    let forward = engine.load("tiny", "forward").unwrap();
+    let gather = engine.load("tiny", "gather_forward").unwrap();
+    let mut dense_inputs: Vec<Value> = Vec::new();
+    let mut wcs: Vec<Value> = Vec::new();
+    let mut idxs: Vec<Value> = Vec::new();
+    let mut biases: Vec<Value> = Vec::new();
+    for (i, p) in pattern.junctions.iter().enumerate() {
+        let (nl, nr) = (layers[i], layers[i + 1]);
+        let w: Vec<f32> = (0..nr * nl).map(|_| rng.normal()).collect();
+        let mask = p.mask();
+        let masked: Vec<f32> = w.iter().zip(&mask).map(|(w, m)| w * m).collect();
+        let b: Vec<f32> = (0..nr).map(|_| rng.normal()).collect();
+        let (idx, din) = p.compact_indices().unwrap();
+        wcs.push(Value::F32(p.compact_weights(&masked), vec![nr, din]));
+        idxs.push(Value::I32(idx, vec![nr, din]));
+        biases.push(Value::F32(b.clone(), vec![nr]));
+        dense_inputs.push(Value::F32(masked, vec![nr, nl]));
+        dense_inputs.push(Value::F32(b, vec![nr]));
+    }
+    for p in &pattern.junctions {
+        dense_inputs.push(Value::F32(
+            p.mask(),
+            vec![p.shape.n_right, p.shape.n_left],
+        ));
+    }
+    let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+    dense_inputs.push(Value::F32(x.clone(), vec![batch, layers[0]]));
+    let want = forward.run(&dense_inputs).unwrap();
+
+    let mut gather_inputs = wcs;
+    gather_inputs.extend(idxs);
+    gather_inputs.extend(biases);
+    gather_inputs.push(Value::F32(x, vec![batch, layers[0]]));
+    let got = gather.run(&gather_inputs).unwrap();
+
+    for (g, w) in got[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(want[0].as_f32().unwrap())
+    {
+        assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}
+
+/// Full training runs on the native backend: loss falls, accuracy beats
+/// chance, and the pre-defined sparsity contract (excluded weights stay
+/// exactly zero) holds after many Adam steps.
+#[test]
+fn native_session_trains_and_keeps_mask_invariant() {
+    let engine = Engine::native(DIR).unwrap();
+    let pattern = tiny_pattern(&engine, &[8, 4], 1);
+    let mut session =
+        pds::coordinator::TrainSession::new(&engine, "tiny", &pattern, 5e-3, 1e-4, 2).unwrap();
+    let spec = pds::data::Spec {
+        name: "native-e2e",
+        features: session.layers[0],
+        classes: *session.layers.last().unwrap(),
+        latent_dim: 8,
+        shaping: pds::data::Shaping::Continuous,
+        separation: 3.0,
+        noise: 0.3,
+    };
+    let splits = spec.splits(128, 0, 64, 3);
+    let mut rng = Rng::new(4);
+    let (first_loss, _) = session.epoch(&splits.train, &mut rng).unwrap();
+    for _ in 0..6 {
+        session.epoch(&splits.train, &mut rng).unwrap();
+    }
+    let (last_loss, train_acc) = session.epoch(&splits.train, &mut rng).unwrap();
+    assert!(
+        last_loss < first_loss,
+        "loss did not fall: {first_loss} -> {last_loss}"
+    );
+    assert!(train_acc > 0.3, "train acc {train_acc}");
+    session.check_mask_invariant().unwrap();
+    let acc = session.evaluate(&splits.test).unwrap();
+    assert!(acc > 0.3, "test acc {acc}");
+}
+
+/// Sparse CSR kernels agree between the forced single-thread path and the
+/// forced multi-thread path (FF/BP bitwise — rows are chunk-independent —
+/// and the gradient reduction within tolerance).
+#[test]
+fn sparse_kernels_match_under_forced_parallelism() {
+    let netc = NetConfig::new(vec![256, 128, 8]);
+    let dout = DoutConfig(vec![32, 4]);
+    let mut rng = Rng::new(21);
+    let pattern = generate(Method::Structured, &netc, &dout, None, &mut rng);
+    let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+    let layer = &snet.junctions[0];
+    let batch = 64;
+    let x: Vec<f32> = (0..batch * 256).map(|_| rng.normal()).collect();
+    let delta: Vec<f32> = (0..batch * 128).map(|_| rng.normal()).collect();
+
+    let run = |threads: usize| {
+        parallel::set_threads(threads);
+        let mut ff = vec![0f32; batch * 128];
+        layer.forward(&x, batch, &mut ff);
+        let mut bp = vec![0f32; batch * 256];
+        layer.backprop(&delta, batch, &mut bp);
+        let mut gwc = vec![0f32; layer.wc.len()];
+        let mut gb = vec![0f32; 128];
+        layer.grads(&x, &delta, batch, 1e-4, &mut gwc, &mut gb);
+        parallel::set_threads(0);
+        (ff, bp, gwc, gb)
+    };
+    let (ff1, bp1, gwc1, gb1) = run(1);
+    let (ff4, bp4, gwc4, gb4) = run(4);
+    assert_eq!(ff1, ff4, "forward rows are chunk-independent");
+    assert_eq!(bp1, bp4, "backprop rows are chunk-independent");
+    for (a, b) in gwc1.iter().zip(&gwc4) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "gwc {a} vs {b}");
+    }
+    for (a, b) in gb1.iter().zip(&gb4) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "gb {a} vs {b}");
+    }
+}
+
+/// PJRT parity (requires `--features pjrt` and built artifacts; skips
+/// with a notice otherwise): the artifact forward program must match the
+/// native backend on identical inputs.
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_forward_matches_native_backend() {
+    let pjrt = match Engine::pjrt(DIR) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("skipping PJRT parity: {err:#}");
+            return;
+        }
+    };
+    let native = Engine::native(DIR).unwrap();
+    let entry = &native.manifest.configs["tiny"];
+    let (layers, batch) = (entry.layers.clone(), entry.batch);
+    let l = layers.len() - 1;
+    let mut rng = Rng::new(13);
+    let mut inputs: Vec<Value> = Vec::new();
+    for i in 0..l {
+        let (nl, nr) = (layers[i], layers[i + 1]);
+        let w: Vec<f32> = (0..nr * nl).map(|_| rng.normal() * 0.3).collect();
+        inputs.push(Value::F32(w, vec![nr, nl]));
+        inputs.push(Value::F32(vec![0.1; nr], vec![nr]));
+    }
+    for i in 0..l {
+        let (nl, nr) = (layers[i], layers[i + 1]);
+        let m: Vec<f32> = (0..nr * nl)
+            .map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 })
+            .collect();
+        inputs.push(Value::F32(m, vec![nr, nl]));
+    }
+    let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+    inputs.push(Value::F32(x, vec![batch, layers[0]]));
+
+    let want = native
+        .load("tiny", "forward")
+        .unwrap()
+        .run(&inputs)
+        .unwrap();
+    let got = pjrt.load("tiny", "forward").unwrap().run(&inputs).unwrap();
+    for (g, w) in got[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(want[0].as_f32().unwrap())
+    {
+        assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}

@@ -1,7 +1,10 @@
-//! Runtime integration tests against the built AOT artifacts.
+//! Runtime integration tests through the default `Engine::new` path.
 //!
-//! These require `make artifacts`; they skip (with a notice) when the
-//! artifacts directory is absent so bare `cargo test` still passes.
+//! With the default feature set these exercise the native backend (no
+//! artifact files needed — the built-in configs are served). With
+//! `--features pjrt` and built artifacts (`make artifacts`) the same
+//! tests run against the compiled PJRT executables; they skip with a
+//! notice only if that engine fails to come up.
 
 use pds::data::Spec;
 use pds::runtime::{Engine, Value};

@@ -1,7 +1,8 @@
 //! End-to-end headline reproduction at test scale (the full run lives in
-//! examples/train_mnist_like.rs and EXPERIMENTS.md): a pre-defined sparse
-//! net at ~21% density trains through the AOT PJRT path to accuracy near
-//! its FC twin while storing ~4X fewer weights — the paper's core claim.
+//! examples/train_mnist_like.rs): a pre-defined sparse net at ~21% density
+//! trains through the runtime backend (native by default, PJRT behind the
+//! `pjrt` feature) to accuracy near its FC twin while storing ~4X fewer
+//! weights — the paper's core claim.
 
 use pds::data::Spec;
 use pds::runtime::Engine;
