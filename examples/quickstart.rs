@@ -1,8 +1,12 @@
-//! Quickstart: generate a hardware-friendly clash-free sparse pattern for
-//! the paper's Table-I network, inspect its storage/compute savings, and
-//! run inference through the runtime engine (the parallel native backend
-//! by default; the AOT PJRT artifacts with `--features pjrt` after
-//! `make artifacts`).
+//! Quickstart walkthrough — and smoke test.
+//!
+//! Generates a hardware-friendly clash-free sparse pattern for the
+//! paper's Table-I network, inspects its storage/compute savings, and
+//! runs batched inference through the runtime engine (the parallel
+//! native backend by default; the AOT PJRT artifacts with
+//! `--features pjrt` after `make artifacts`). Each step asserts on its
+//! outputs, so a green run doubles as an end-to-end check (referenced
+//! from the top-level README §Examples).
 //!
 //!     cargo run --release --example quickstart
 
@@ -13,14 +17,17 @@ use pds::sparsity::{generate, Method};
 use pds::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    // 1. The paper's Table-I configuration: N_net = (800, 100, 10) at
-    //    d_out = (20, 10), i.e. rho_net = 21%.
+    // Step 1: the paper's Table-I configuration: N_net = (800, 100, 10)
+    // with out-degrees d_out = (20, 10), i.e. rho_net ~ 21% — each
+    // input neuron keeps 20 of its 100 possible outgoing edges.
     let netc = NetConfig::new(vec![800, 100, 10]);
     let dout = DoutConfig(vec![20, 10]);
     netc.validate_dout(&dout).map_err(|e| anyhow::anyhow!(e))?;
 
-    // 2. A clash-free pre-defined sparse pattern (streams on the paper's
-    //    architecture with zero memory contention).
+    // Step 2: a clash-free pre-defined sparse pattern (Sec. III-C).
+    // Clash-freedom means the pattern streams through the paper's
+    // banked memories with zero contention; z = (160, 10) sets the
+    // per-junction degree of hardware parallelism.
     let mut rng = Rng::new(7);
     let pattern = generate(Method::ClashFree, &netc, &dout, Some(&[160, 10]), &mut rng);
     println!(
@@ -28,6 +35,8 @@ fn main() -> anyhow::Result<()> {
         pattern.rho_net() * 100.0,
         pattern.junctions.iter().map(|j| j.n_edges()).collect::<Vec<_>>()
     );
+    // 800*20 + 100*10 = 17000 edges of 81000 possible = 20.99%
+    assert!((pattern.rho_net() - 0.2099).abs() < 0.005, "Table-I density");
     for (i, j) in pattern.junctions.iter().enumerate() {
         j.audit().map_err(|e| anyhow::anyhow!(e))?;
         println!(
@@ -36,9 +45,14 @@ fn main() -> anyhow::Result<()> {
             j.is_structured(),
             j.disconnected_left() + j.disconnected_right()
         );
+        // structured patterns never strand a neuron — the failure mode
+        // of random patterns at low density (Sec. IV-B)
+        assert!(j.is_structured(), "clash-free patterns are structured");
+        assert_eq!(j.disconnected_left() + j.disconnected_right(), 0);
     }
 
-    // 3. What the hardware saves (Table I).
+    // Step 3: what the hardware saves (Table I): words of weight
+    // storage and MACs drop with the edge count.
     let cmp = StorageComparison::new(&netc, &dout);
     println!(
         "storage: FC {} words -> sparse {} words ({:.1}X); compute {:.1}X fewer MACs",
@@ -47,9 +61,13 @@ fn main() -> anyhow::Result<()> {
         cmp.memory_reduction(),
         cmp.compute_reduction()
     );
+    assert!(cmp.memory_reduction() > 2.0, "sparsity must shrink storage");
+    assert!(cmp.compute_reduction() > 2.0, "sparsity must shrink compute");
 
-    // 4. Inference through the runtime engine (mnist_fc2 config has
-    //    exactly this shape). Masked-dense path with the pattern's mask.
+    // Step 4: batched inference through the runtime engine. The
+    // mnist_fc2 config has exactly this shape; the masked-dense forward
+    // program takes [w_i, b_i] per junction, the pattern's masks, and
+    // one fixed-size input batch.
     let engine = Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
     let prog = engine.load("mnist_fc2", "forward")?;
     let batch = engine.manifest.configs["mnist_fc2"].batch;
@@ -69,12 +87,17 @@ fn main() -> anyhow::Result<()> {
     inputs.push(Value::F32(x, vec![batch, 800]));
     let t0 = std::time::Instant::now();
     let out = prog.run(&inputs)?;
+    let logits = out[0].as_f32()?;
     println!(
         "forward ({}): batch {} in {:?}, logits[0][..4] = {:?}",
         engine.platform(),
         batch,
         t0.elapsed(),
-        &out[0].as_f32()?[..4]
+        &logits[..4]
     );
+    assert_eq!(logits.len(), batch * 10, "one 10-class logit row per input");
+    assert!(logits.iter().all(|v| v.is_finite()), "logits must be finite");
+
+    println!("quickstart OK");
     Ok(())
 }

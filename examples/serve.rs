@@ -1,79 +1,98 @@
-//! Inference-service example: dynamic batching over the fixed-batch
-//! forward program, with latency/throughput reporting — the software
-//! analogue of feeding the junction pipeline one input per junction
-//! cycle. Runs on the parallel native backend by default (PJRT with
-//! `--features pjrt` after `make artifacts`).
+//! Multi-worker inference-service walkthrough — and smoke test.
+//!
+//! Serves two manifest configs from one service, drives closed-loop
+//! load, and shows the dynamic batcher's latency/throughput knob
+//! (`max_wait`). Every step asserts on its outputs, so a green run is a
+//! real end-to-end check of the serving layer (referenced from the
+//! top-level README §Examples).
 //!
 //!     cargo run --release --example serve
 
-use std::time::{Duration, Instant};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
 
-use pds::coordinator::{InferenceServer, ServerConfig};
-use pds::runtime::Manifest;
-use pds::sparsity::config::{DoutConfig, NetConfig};
-use pds::sparsity::{generate, Method};
-use pds::util::rng::Rng;
+use pds::coordinator::loadgen::{self, LoadSpec};
+use pds::coordinator::{InferenceService, ServerConfig};
 
 fn main() -> anyhow::Result<()> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let config = "mnist_fc2";
-    let probe = Manifest::probe(dir, config)?;
-    let netc = NetConfig::new(probe.layers.clone());
-    let mut rng = Rng::new(5);
-    let pattern = generate(
-        Method::ClashFree,
-        &netc,
-        &DoutConfig(vec![20, 10]),
-        None,
-        &mut rng,
-    );
 
-    for wait_ms in [1u64, 5, 20] {
-        let server = InferenceServer::start(
+    // Step 1: pick two models. A "model" for the service is a manifest
+    // config plus a pre-defined sparse connection pattern; model_spec
+    // builds a clash-free ~25%-density pattern for each config (the
+    // same construction `pds serve` uses). Both run on the parallel
+    // native backend by default (PJRT with `--features pjrt` after
+    // `make artifacts`).
+    let models = vec!["tiny".to_string(), "mnist_fc2".to_string()];
+
+    // Step 2: sweep the dynamic batcher's flush timeout. The compiled
+    // executable always pays one fixed-batch execution per flush, so a
+    // larger max_wait collects fuller batches: higher throughput, but
+    // up to max_wait of extra queueing latency per request.
+    for wait_ms in [1u64, 5] {
+        let specs = models
+            .iter()
+            .map(|m| loadgen::model_spec(dir, m, 0.25, 5))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        // Step 3: start the service — 2 workers per model, each owning
+        // its own engine (backend handles are thread-affine) and one
+        // bounded request shard. The router fills the shallowest shard;
+        // dry workers steal from the deepest sibling.
+        let svc = InferenceService::start(
             dir,
-            config,
-            &pattern,
-            None,
+            specs,
             ServerConfig {
                 max_wait: Duration::from_millis(wait_ms),
+                workers: 2,
+                queue_depth: 256,
+                tune_kernel_threads: true,
             },
         )?;
-        let n_clients = 8usize;
-        let per_client = 100usize;
-        let t0 = Instant::now();
-        let mut handles = Vec::new();
-        for c in 0..n_clients {
-            let client = server.client();
-            let features = probe.layers[0];
-            handles.push(std::thread::spawn(move || {
-                let mut rng = Rng::new(900 + c as u64);
-                let mut lats = Vec::with_capacity(per_client);
-                for _ in 0..per_client {
-                    let x: Vec<f32> = (0..features).map(|_| rng.normal()).collect();
-                    lats.push(client.classify(x).unwrap().latency);
-                }
-                lats
-            }));
+
+        // Step 4: drive both models concurrently with closed-loop
+        // clients (each waits for its reply before submitting again, so
+        // in-flight load is bounded by the client count).
+        let load = LoadSpec {
+            clients: 6,
+            requests: 50,
+            think_time: Duration::ZERO,
+            burst: 1,
+        };
+        let reports = loadgen::run_load(&svc, &models, &load, 11)?;
+
+        println!("max_wait {wait_ms}ms:");
+        for r in &reports {
+            r.print();
+            // smoke-test assertions: nothing lost, quantiles ordered
+            assert_eq!(
+                r.served,
+                (load.clients * load.requests) as u64,
+                "{}: every request must be answered",
+                r.model
+            );
+            assert!(r.p50 <= r.p99, "{}: latency quantiles must be ordered", r.model);
+            assert!(r.throughput > 0.0);
         }
-        let mut lats: Vec<Duration> = Vec::new();
-        for h in handles {
-            lats.extend(h.join().unwrap());
+
+        // Step 5: the metrics registry must agree with itself — the
+        // occupancy histogram, weighted by occupancy, is exactly the
+        // number of served requests.
+        for m in &models {
+            let met = svc.metrics(m).unwrap();
+            let hist = met.occupancy_histogram();
+            let weighted: u64 = hist
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| (k as u64 + 1) * c)
+                .sum();
+            assert_eq!(weighted, met.requests.load(Ordering::Relaxed), "{m}");
+            println!("{}", met.report(m));
         }
-        let wall = t0.elapsed();
-        lats.sort();
-        let batches = server.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
-        println!(
-            "max_wait {wait_ms:>2}ms: {:>6.0} req/s | p50 {:>9.2?} p95 {:>9.2?} p99 {:>9.2?} | {} batches (occupancy {:.1}/{})",
-            lats.len() as f64 / wall.as_secs_f64(),
-            lats[lats.len() / 2],
-            lats[lats.len() * 95 / 100],
-            lats[lats.len() * 99 / 100],
-            batches,
-            lats.len() as f64 / batches.max(1) as f64,
-            probe.batch
-        );
-        server.shutdown()?;
+        svc.shutdown()?;
     }
-    println!("\n(larger max_wait -> fuller batches -> higher throughput, higher latency)");
+
+    println!("\n(larger max_wait -> fuller batches -> higher throughput, higher tail latency)");
+    println!("serve example OK");
     Ok(())
 }

@@ -1,0 +1,63 @@
+//! Serving-layer load bench: sustained throughput of the multi-worker
+//! sharded inference service against the single-worker configuration,
+//! under the same closed-loop load (see DESIGN.md §Perf).
+//!
+//! Two models are served concurrently to exercise the per-model worker
+//! pools; each scenario starts a fresh service so its metrics cover
+//! exactly that run. Writes the baseline numbers to `BENCH_serve.json`
+//! at the repo root.
+//!
+//!     cargo bench --bench serve_load
+
+use std::time::Duration;
+
+use pds::coordinator::loadgen::{self, LoadSpec};
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let models = vec!["tiny".to_string(), "mnist_fc2".to_string()];
+    let load = LoadSpec {
+        clients: 8,
+        requests: 150,
+        think_time: Duration::ZERO,
+        burst: 1,
+    };
+    let mut scenarios = Vec::new();
+    for workers in [1usize, 2, 4] {
+        println!("== {workers} worker(s) per model ==");
+        match loadgen::bench_service(
+            dir,
+            &models,
+            workers,
+            256,
+            Duration::from_millis(2),
+            &load,
+            7,
+        ) {
+            Ok(reports) => {
+                for r in &reports {
+                    r.print();
+                }
+                scenarios.push((workers, reports));
+            }
+            Err(e) => {
+                eprintln!("serve_load: scenario with {workers} workers failed: {e:#}");
+                return;
+            }
+        }
+    }
+    let t1: f64 = scenarios[0].1.iter().map(|r| r.throughput).sum();
+    let (wn, last) = scenarios.last().unwrap();
+    let tn: f64 = last.iter().map(|r| r.throughput).sum();
+    println!(
+        "\nsustained throughput: {tn:.0} req/s at {wn} workers vs {t1:.0} req/s single-worker \
+         ({:.2}X)",
+        tn / t1.max(1e-9)
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    let doc = loadgen::bench_json(&scenarios);
+    match std::fs::write(out, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("serve_load: cannot write {out}: {e}"),
+    }
+}

@@ -1,0 +1,322 @@
+//! Closed-loop load generation for the [`InferenceService`], shared by
+//! the `pds serve` / `pds serve-bench` CLI commands, the `serve_load`
+//! bench target, and the service integration tests.
+//!
+//! A *closed-loop* client submits one request, waits for the reply, then
+//! submits the next — so total in-flight load equals the client count
+//! and a saturated service slows the clients down instead of building an
+//! unbounded backlog. [`ServeError::Busy`] rejections are retried after
+//! a short backoff and counted via the model's
+//! [`crate::coordinator::ModelMetrics::rejected`] counter. The arrival
+//! pattern is shaped by [`LoadSpec::burst`] / [`LoadSpec::think_time`]:
+//! bursty arrivals stress the shard router and the dynamic batcher's
+//! partial-flush path.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::server::{InferenceService, ModelMetrics, ModelSpec, ServeError, ServerConfig};
+use crate::runtime::Manifest;
+use crate::sparsity::config::{DoutConfig, NetConfig};
+use crate::sparsity::{generate, Method};
+use crate::util::json::Json;
+use crate::util::parallel;
+use crate::util::rng::Rng;
+
+/// Backoff between retries of a [`ServeError::Busy`] rejection.
+const BUSY_BACKOFF: Duration = Duration::from_micros(200);
+
+/// Shape of the offered load, per model.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    /// Concurrent closed-loop client threads per model.
+    pub clients: usize,
+    /// Requests each client submits.
+    pub requests: usize,
+    /// Pause a client inserts after every `burst` responses (zero =
+    /// submit back-to-back; the classic closed loop).
+    pub think_time: Duration,
+    /// Responses between pauses; 1 with a nonzero `think_time` is a
+    /// uniform paced arrival, larger values are bursty arrivals.
+    pub burst: usize,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            clients: 8,
+            requests: 100,
+            think_time: Duration::ZERO,
+            burst: 1,
+        }
+    }
+}
+
+/// What one model sustained under a [`LoadSpec`].
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Model (manifest config) name.
+    pub model: String,
+    /// Workers per model the service ran with.
+    pub workers: usize,
+    /// Closed-loop clients that drove this model.
+    pub clients: usize,
+    /// Requests served.
+    pub served: u64,
+    /// Submit attempts rejected with [`ServeError::Busy`] (each was
+    /// retried by the load generator).
+    pub rejected: u64,
+    /// Wall-clock time of the whole load run.
+    pub wall: Duration,
+    /// Sustained requests per second (served / wall).
+    pub throughput: f64,
+    /// Median request latency (submit to reply).
+    pub p50: Duration,
+    /// 95th-percentile latency.
+    pub p95: Duration,
+    /// 99th-percentile latency.
+    pub p99: Duration,
+    /// Batches executed.
+    pub batches: u64,
+    /// Mean live rows per batch.
+    pub mean_occupancy: f64,
+    /// Requests served by a worker that stole them from a sibling shard.
+    pub stolen: u64,
+}
+
+impl LoadReport {
+    /// One-line human-readable summary.
+    pub fn print(&self) {
+        println!(
+            "{:<12} workers {:>2}, clients {:>2}: {:>8.0} req/s | p50 {:>9.2?} p95 {:>9.2?} \
+             p99 {:>9.2?} | occupancy {:>5.1} | {} batches, {} rejected, {} stolen",
+            self.model,
+            self.workers,
+            self.clients,
+            self.throughput,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.mean_occupancy,
+            self.batches,
+            self.rejected,
+            self.stolen,
+        );
+    }
+
+    /// JSON object for `BENCH_serve.json`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("workers".to_string(), Json::Num(self.workers as f64));
+        m.insert("clients".to_string(), Json::Num(self.clients as f64));
+        m.insert("served".to_string(), Json::Num(self.served as f64));
+        m.insert("rejected".to_string(), Json::Num(self.rejected as f64));
+        m.insert("wall_s".to_string(), Json::Num(self.wall.as_secs_f64()));
+        m.insert("throughput_rps".to_string(), Json::Num(self.throughput));
+        m.insert("p50_us".to_string(), Json::Num(self.p50.as_secs_f64() * 1e6));
+        m.insert("p95_us".to_string(), Json::Num(self.p95.as_secs_f64() * 1e6));
+        m.insert("p99_us".to_string(), Json::Num(self.p99.as_secs_f64() * 1e6));
+        m.insert("batches".to_string(), Json::Num(self.batches as f64));
+        m.insert(
+            "mean_occupancy".to_string(),
+            Json::Num(self.mean_occupancy),
+        );
+        m.insert("stolen".to_string(), Json::Num(self.stolen as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Build a [`ModelSpec`] for `config` with a clash-free pattern at
+/// roughly `density` (snapped to the admissible degree set), the shape
+/// every serve surface (CLI, bench, example, tests) uses.
+pub fn model_spec(
+    artifacts_dir: impl AsRef<Path>,
+    config: &str,
+    density: f64,
+    seed: u64,
+) -> Result<ModelSpec> {
+    let probe = Manifest::probe(artifacts_dir, config)?;
+    let netc = NetConfig::new(probe.layers.clone());
+    let dout = DoutConfig(
+        (0..netc.n_junctions())
+            .map(|i| netc.junction(i).dout_for_density(density))
+            .collect(),
+    );
+    let mut rng = Rng::new(seed);
+    let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+    Ok(ModelSpec::new(config, pattern))
+}
+
+/// Drive `spec` against every model in `models` concurrently and return
+/// one report per model. Counters are read from the service's metrics,
+/// so this expects a freshly started service (cumulative counters would
+/// fold earlier traffic into the report).
+pub fn run_load(
+    svc: &InferenceService,
+    models: &[String],
+    spec: &LoadSpec,
+    seed: u64,
+) -> Result<Vec<LoadReport>> {
+    anyhow::ensure!(spec.clients > 0 && spec.requests > 0, "empty load spec");
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for (mi, model) in models.iter().enumerate() {
+            let client = svc.client(model)?;
+            for c in 0..spec.clients {
+                let client = client.clone();
+                handles.push(s.spawn(move || -> Result<()> {
+                    let mut rng = Rng::new(seed ^ ((mi as u64) << 32) ^ c as u64);
+                    let mut since_pause = 0usize;
+                    for _ in 0..spec.requests {
+                        let x: Vec<f32> =
+                            (0..client.features()).map(|_| rng.normal()).collect();
+                        loop {
+                            match client.classify(x.clone()) {
+                                Ok(p) => {
+                                    anyhow::ensure!(
+                                        p.class < client.classes(),
+                                        "class {} out of range for {}",
+                                        p.class,
+                                        client.model()
+                                    );
+                                    break;
+                                }
+                                Err(ServeError::Busy) => std::thread::sleep(BUSY_BACKOFF),
+                                Err(e) => anyhow::bail!("classify failed: {e}"),
+                            }
+                        }
+                        since_pause += 1;
+                        if !spec.think_time.is_zero() && since_pause >= spec.burst.max(1) {
+                            std::thread::sleep(spec.think_time);
+                            since_pause = 0;
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("load client panicked"))??;
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed();
+    let workers = svc.config().workers.max(1);
+    models
+        .iter()
+        .map(|m| {
+            let met = svc
+                .metrics(m)
+                .ok_or_else(|| anyhow::anyhow!("no metrics for '{m}'"))?;
+            Ok(snapshot(m, workers, spec.clients, met, wall))
+        })
+        .collect()
+}
+
+fn snapshot(
+    model: &str,
+    workers: usize,
+    clients: usize,
+    met: &ModelMetrics,
+    wall: Duration,
+) -> LoadReport {
+    let served = met.requests.load(Ordering::Relaxed);
+    LoadReport {
+        model: model.to_string(),
+        workers,
+        clients,
+        served,
+        rejected: met.rejected.load(Ordering::Relaxed),
+        wall,
+        throughput: served as f64 / wall.as_secs_f64().max(1e-9),
+        p50: met.latency.quantile(0.50),
+        p95: met.latency.quantile(0.95),
+        p99: met.latency.quantile(0.99),
+        batches: met.batches.load(Ordering::Relaxed),
+        mean_occupancy: met.mean_occupancy(),
+        stolen: met.stolen.load(Ordering::Relaxed),
+    }
+}
+
+/// Start a fresh service for `models` with `workers` workers per model,
+/// drive `load` against every model concurrently, shut down, and return
+/// the per-model reports. The unit of comparison for the serve bench:
+/// same load, varying worker count.
+pub fn bench_service(
+    artifacts_dir: impl AsRef<Path>,
+    models: &[String],
+    workers: usize,
+    queue_depth: usize,
+    max_wait: Duration,
+    load: &LoadSpec,
+    seed: u64,
+) -> Result<Vec<LoadReport>> {
+    let dir = artifacts_dir.as_ref();
+    let specs = models
+        .iter()
+        .map(|m| model_spec(dir, m, 0.25, seed))
+        .collect::<Result<Vec<_>>>()?;
+    let svc = InferenceService::start(
+        dir,
+        specs,
+        ServerConfig {
+            max_wait,
+            workers,
+            queue_depth,
+            tune_kernel_threads: true,
+        },
+    )?;
+    let reports = run_load(&svc, models, load, seed ^ 0x5EED)?;
+    svc.shutdown()?;
+    Ok(reports)
+}
+
+/// Assemble the `BENCH_serve.json` document from `(workers, reports)`
+/// scenarios; includes the sustained-throughput speedup of the largest
+/// worker count over the single-worker baseline when both are present.
+pub fn bench_json(scenarios: &[(usize, Vec<LoadReport>)]) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serve_load".to_string()));
+    root.insert(
+        "kernel_threads_total".to_string(),
+        Json::Num(parallel::machine_threads() as f64),
+    );
+    let mut arr = Vec::new();
+    let mut base: Option<f64> = None;
+    let mut best: Option<(usize, f64)> = None;
+    for (workers, reports) in scenarios {
+        let total: f64 = reports.iter().map(|r| r.throughput).sum();
+        if *workers == 1 {
+            base = Some(total);
+        }
+        let replace = match best {
+            Some((w, _)) => *workers > w,
+            None => true,
+        };
+        if replace {
+            best = Some((*workers, total));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("workers".to_string(), Json::Num(*workers as f64));
+        obj.insert("total_throughput_rps".to_string(), Json::Num(total));
+        obj.insert(
+            "models".to_string(),
+            Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+        );
+        arr.push(Json::Obj(obj));
+    }
+    root.insert("scenarios".to_string(), Json::Arr(arr));
+    if let (Some(b), Some((w, t))) = (base, best) {
+        if w > 1 && b > 0.0 {
+            root.insert("speedup_workers".to_string(), Json::Num(w as f64));
+            root.insert("speedup_vs_single_worker".to_string(), Json::Num(t / b));
+        }
+    }
+    Json::Obj(root)
+}

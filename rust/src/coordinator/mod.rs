@@ -1,17 +1,27 @@
 //! L3 coordinator: the training orchestrator and the inference service,
-//! both running over the backend-agnostic `runtime::Engine` (the parallel
-//! native backend by default, AOT PJRT artifacts behind the `pjrt`
-//! feature; no Python on any path here).
+//! both running over the backend-agnostic [`crate::runtime::Engine`]
+//! (the parallel native backend by default, AOT PJRT artifacts behind
+//! the `pjrt` feature; no Python on any path here).
 //!
 //! The paper's system contribution is the sparsity-aware accelerator, so
-//! L3 is the surrounding machine: session/state management for training
-//! (parameters, Adam state and masks live host-side between steps), and a
-//! batched inference server whose dynamic batcher feeds the fixed-batch
-//! compiled executable — the software analogue of feeding the junction
-//! pipeline one input per junction cycle.
+//! L3 is the surrounding machine:
+//!
+//! - [`trainer`] — session/state management for training: parameters,
+//!   Adam state and masks live host-side between fused train steps.
+//! - [`server`] — the multi-worker, multi-model sharded inference
+//!   service: per-worker engines, depth-balanced bounded request shards
+//!   with work stealing, dynamic batching into the fixed-batch compiled
+//!   executable (the software analogue of feeding the junction pipeline
+//!   one input per junction cycle), and per-model [`ModelMetrics`].
+//! - [`loadgen`] — the closed-loop load generator behind `pds serve`,
+//!   `pds serve-bench` and the `serve_load` bench target.
 
+pub mod loadgen;
 pub mod server;
 pub mod trainer;
 
-pub use server::{InferenceServer, ServerConfig, ServerStats};
+pub use server::{
+    Client, InferenceServer, InferenceService, LatencyHistogram, ModelMetrics, ModelSpec,
+    Prediction, ServeError, ServerConfig,
+};
 pub use trainer::{TrainSession, TrainStepOut};

@@ -1,25 +1,47 @@
-//! Batched inference service: request router + dynamic batcher over the
-//! fixed-batch `forward` program of the runtime backend.
+//! Multi-worker, multi-model sharded inference service.
 //!
-//! A worker thread owns the loaded executable and the (sparse) model
-//! parameters. Clients submit single feature vectors; the batcher
-//! collects up to the config's compiled batch size or until
-//! `max_wait` elapses, pads the tail with zero rows, executes once, and
-//! fans the argmax results back out. This mirrors the hardware pipeline's
-//! rhythm: a full junction cycle is paid per batch regardless of
-//! occupancy, so latency = queueing + one fixed execution.
+//! The paper's hardware gets its throughput from running many junction
+//! pipelines concurrently on a fixed clock (Sec. III); this module is the
+//! software analogue of that scale-out. One [`InferenceService`] hosts any
+//! number of *models* (manifest configs, each with its own pre-defined
+//! sparse pattern and parameters), and each model is served by a pool of
+//! worker threads:
 //!
-//! On the default native backend the batched execution itself is
-//! parallel: the forward kernels chunk the batch dimension across the
-//! `util::parallel` thread pool, so one flush saturates multiple cores.
+//! - **Per-worker engines.** Every worker owns its own
+//!   [`crate::runtime::Engine`] and loaded `forward` executable. PJRT
+//!   handles are thread-affine (the `xla` crate wraps raw pointers that
+//!   must not cross threads), so per-worker engines are the *required*
+//!   design, not an optimization. Construction stays cheap because the
+//!   manifest is parsed once and shared ([`crate::runtime::Engine::for_worker`]).
+//! - **Sharded queues + work stealing.** Each worker owns one bounded
+//!   request shard. The router enqueues onto the shallowest shard
+//!   (load balancing by queue depth) and a worker whose shard runs dry
+//!   steals from the deepest sibling, so a hot shard never strands work
+//!   behind an idle worker.
+//! - **Backpressure, not unbounded growth.** Shards are bounded by
+//!   [`ServerConfig::queue_depth`]; when every shard of a model is full,
+//!   [`Client::classify`] fails fast with [`ServeError::Busy`] instead of
+//!   queueing without limit. The caller decides whether to retry, shed,
+//!   or slow down.
+//! - **Dynamic batching.** A worker collects up to the config's compiled
+//!   batch size or until [`ServerConfig::max_wait`] elapses, pads the
+//!   tail with zero rows, executes once, and fans the argmax results
+//!   back out — one fixed junction-cycle cost per flush, exactly like
+//!   the hardware pipeline's rhythm.
+//! - **Metrics.** Each model owns a lock-free [`ModelMetrics`] registry:
+//!   request/reject/batch counters, a batch-occupancy histogram, and a
+//!   log₂-bucketed latency histogram with p50/p95/p99 quantiles. The CLI
+//!   (`pds serve`, `pds serve-bench`) dumps it after a run.
 //!
 //! Implemented on std threads + channels (tokio is unavailable in the
 //! offline build; the request path is compute-bound, not I/O-bound).
 
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -27,30 +49,90 @@ use anyhow::Result;
 
 use crate::runtime::{Engine, Manifest, Value};
 use crate::sparsity::pattern::NetPattern;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 
+/// How long an idle worker parks on its shard's condvar before re-polling
+/// sibling shards (steals are not signalled on the thief's condvar).
+const IDLE_POLL: Duration = Duration::from_millis(5);
+/// Cap on the batch-fill wait, for the same reason.
+const STEAL_POLL: Duration = Duration::from_millis(1);
+
+/// Service tuning knobs (see the module docs for the architecture).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Flush a partial batch after this long (the latency/throughput knob).
+    /// How long a worker holds a partial batch open before flushing it.
+    ///
+    /// This is *the* latency/throughput trade-off of dynamic batching:
+    /// the compiled executable always pays one full fixed-batch execution
+    /// per flush, so a **larger** `max_wait` collects fuller batches —
+    /// more requests amortize each execution (higher throughput, fewer
+    /// padded rows) at the cost of up to `max_wait` of added queueing
+    /// latency on every request. A **smaller** value flushes eagerly:
+    /// lower p50 latency, but mostly-padded batches waste compute under
+    /// light load. The default of 2 ms suits the built-in configs, whose
+    /// batch execution takes a few hundred microseconds to a few
+    /// milliseconds; exposed on the CLI as `--wait-ms`.
     pub max_wait: Duration,
+    /// Worker threads per model. Each worker owns its own engine and one
+    /// request shard (CLI: `--workers`).
+    pub workers: usize,
+    /// Bound of each shard's request queue. When every shard of a model
+    /// is full, submission fails with [`ServeError::Busy`]
+    /// (CLI: `--queue-depth`).
+    pub queue_depth: usize,
+    /// Divide the machine's kernel-thread budget evenly among the
+    /// service's workers via [`parallel::worker_thread_budget`], so
+    /// worker count × per-batch kernel threads does not oversubscribe
+    /// the cores. The previous override is restored when the service
+    /// drops (shutdown or any error path). Disable for tests that must
+    /// not touch the global thread override (it is process-wide).
+    pub tune_kernel_threads: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             max_wait: Duration::from_millis(2),
+            workers: 1,
+            queue_depth: 256,
+            tune_kernel_threads: false,
         }
     }
 }
 
+/// Why a submission was not accepted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Every shard queue of the model is at capacity — explicit
+    /// backpressure. Retry later, shed the request, or slow the caller.
+    Busy,
+    /// The service has shut down (or the model's workers died).
+    Stopped,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Busy => write!(f, "service busy: all request shards full"),
+            ServeError::Stopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// A classification response.
 #[derive(Clone, Copy, Debug)]
 pub struct Prediction {
+    /// Argmax class of the model's logits.
     pub class: usize,
-    /// Time from submit to response.
+    /// Time from submit to response (queueing + batch wait + execution).
     pub latency: Duration,
-    /// How full the batch that served this request was.
+    /// How many live requests shared the batch that served this one.
     pub batch_occupancy: usize,
+    /// Index of the worker (within the model's pool) that ran the batch.
+    pub worker: usize,
 }
 
 struct Request {
@@ -59,51 +141,715 @@ struct Request {
     reply: Sender<Prediction>,
 }
 
-/// Shared counters.
-#[derive(Default)]
-pub struct ServerStats {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
-    pub padded_rows: AtomicU64,
+/// Lock-free log₂-bucketed latency histogram (microsecond resolution,
+/// power-of-two bucket widths). Quantiles report the upper bound of the
+/// bucket containing the target rank, so they are conservative by at
+/// most one bucket width.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
 }
 
-/// Handle for submitting requests; cloneable across client threads.
+impl LatencyHistogram {
+    const BUCKETS: usize = 40;
+
+    fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, d: Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let idx = (us.ilog2() as usize).min(Self::BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Latency at quantile `q` in (0, 1], e.g. `0.5` / `0.95` / `0.99`.
+    /// Zero when no samples have been recorded.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1u64 << ((i as u32 + 1).min(63)));
+            }
+        }
+        Duration::from_micros(1u64 << (Self::BUCKETS as u32))
+    }
+}
+
+/// Per-model serving counters. All fields are lock-free atomics updated
+/// by the router and the workers; read them at any time with
+/// `Ordering::Relaxed`.
+#[derive(Debug)]
+pub struct ModelMetrics {
+    /// Requests served (responses actually sent).
+    pub requests: AtomicU64,
+    /// Submit attempts rejected with [`ServeError::Busy`].
+    pub rejected: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Zero rows padded into partial batches.
+    pub padded_rows: AtomicU64,
+    /// Requests a worker stole from a sibling shard.
+    pub stolen: AtomicU64,
+    /// Submit-to-reply latency histogram (see [`LatencyHistogram`]).
+    pub latency: LatencyHistogram,
+    occupancy: Vec<AtomicU64>,
+}
+
+impl ModelMetrics {
+    fn new(batch: usize) -> Self {
+        ModelMetrics {
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_rows: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+            occupancy: (0..batch).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Batch-occupancy histogram: entry `k` counts the batches that
+    /// carried `k + 1` live requests, so `sum_k (k + 1) * hist[k]`
+    /// equals [`ModelMetrics::requests`] and `sum_k hist[k]` equals
+    /// [`ModelMetrics::batches`].
+    pub fn occupancy_histogram(&self) -> Vec<u64> {
+        self.occupancy.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Mean live rows per executed batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Human-readable dump (what `pds serve` prints after a run).
+    pub fn report(&self, model: &str) -> String {
+        let batch = self.occupancy.len();
+        let hist = self.occupancy_histogram();
+        let nz: Vec<String> = hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, &c)| format!("{}:{c}", k + 1))
+            .collect();
+        format!(
+            "model {model}: {} served, {} rejected, {} batches (mean occupancy {:.1}/{batch}, \
+             {} stolen), {} padded rows\n  latency p50 {:?} p95 {:?} p99 {:?}; \
+             occupancy histogram {{{}}}",
+            self.requests.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_occupancy(),
+            self.stolen.load(Ordering::Relaxed),
+            self.padded_rows.load(Ordering::Relaxed),
+            self.latency.quantile(0.50),
+            self.latency.quantile(0.95),
+            self.latency.quantile(0.99),
+            nz.join(" "),
+        )
+    }
+}
+
+struct ShardState {
+    q: VecDeque<Request>,
+    stopped: bool,
+}
+
+/// One bounded request queue, owned by one worker. `depth` mirrors the
+/// queue length so the router and thieves can scan without locking.
+struct Shard {
+    state: Mutex<ShardState>,
+    nonempty: Condvar,
+    depth: AtomicUsize,
+    capacity: usize,
+}
+
+impl Shard {
+    fn new(capacity: usize) -> Shard {
+        Shard {
+            state: Mutex::new(ShardState {
+                q: VecDeque::new(),
+                stopped: false,
+            }),
+            nonempty: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            capacity,
+        }
+    }
+
+    fn try_push(&self, req: Request) -> Result<(), (ServeError, Request)> {
+        let mut s = self.state.lock().unwrap();
+        if s.stopped {
+            return Err((ServeError::Stopped, req));
+        }
+        if s.q.len() >= self.capacity {
+            return Err((ServeError::Busy, req));
+        }
+        s.q.push_back(req);
+        self.depth.store(s.q.len(), Ordering::Relaxed);
+        drop(s);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    fn try_pop(&self) -> Option<Request> {
+        let mut s = self.state.lock().unwrap();
+        let r = s.q.pop_front();
+        self.depth.store(s.q.len(), Ordering::Relaxed);
+        r
+    }
+
+    fn is_empty(&self) -> bool {
+        self.state.lock().unwrap().q.is_empty()
+    }
+
+    /// Park until something is pushed, the shard stops, or `timeout`
+    /// elapses (spurious wakeups are fine — callers re-poll).
+    fn wait_nonempty(&self, timeout: Duration) {
+        let s = self.state.lock().unwrap();
+        if s.q.is_empty() && !s.stopped {
+            let _ = self.nonempty.wait_timeout(s, timeout);
+        }
+    }
+
+    fn stop(&self) {
+        self.state.lock().unwrap().stopped = true;
+        self.nonempty.notify_all();
+    }
+}
+
+/// Shared state of one served model: its shards, shape info and metrics.
+struct ModelCore {
+    name: String,
+    batch: usize,
+    features: usize,
+    classes: usize,
+    shards: Vec<Shard>,
+    metrics: ModelMetrics,
+    stop: AtomicBool,
+}
+
+impl ModelCore {
+    /// Pop from the deepest sibling shard (depth is a racy hint; the
+    /// victim's lock decides).
+    fn steal(&self, not_from: usize) -> Option<Request> {
+        let mut best = None;
+        let mut best_depth = 0usize;
+        for (i, sh) in self.shards.iter().enumerate() {
+            if i == not_from {
+                continue;
+            }
+            let d = sh.depth.load(Ordering::Relaxed);
+            if d > best_depth {
+                best_depth = d;
+                best = Some(i);
+            }
+        }
+        self.shards[best?].try_pop()
+    }
+
+    fn all_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+}
+
+/// Submission handle for one model; cloneable across client threads.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Request>,
-    features: usize,
+    core: Arc<ModelCore>,
 }
 
 impl Client {
-    /// Submit one feature vector; blocks until the prediction returns.
-    pub fn classify(&self, features: Vec<f32>) -> Result<Prediction> {
-        assert_eq!(features.len(), self.features, "feature dim mismatch");
+    /// Name of the model this client submits to.
+    pub fn model(&self) -> &str {
+        &self.core.name
+    }
+
+    /// Input feature dimension the model expects.
+    pub fn features(&self) -> usize {
+        self.core.features
+    }
+
+    /// Number of output classes.
+    pub fn classes(&self) -> usize {
+        self.core.classes
+    }
+
+    /// Submit one feature vector and block until its prediction returns.
+    ///
+    /// Routing: the shallowest shard is tried first (load balances
+    /// toward idle workers), then the remaining shards in index order
+    /// on overflow. Fails fast with [`ServeError::Busy`]
+    /// when every shard is at capacity (bounded-queue backpressure — the
+    /// caller decides whether to retry or shed), and with
+    /// [`ServeError::Stopped`] after shutdown.
+    ///
+    /// # Panics
+    /// If `features.len()` does not match the model's input dimension.
+    pub fn classify(&self, features: Vec<f32>) -> Result<Prediction, ServeError> {
+        assert_eq!(features.len(), self.core.features, "feature dim mismatch");
         let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request {
+        let mut req = Request {
             features,
             submitted: Instant::now(),
             reply: reply_tx,
         };
-        self.tx
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(reply_rx.recv()?)
+        let shards = &self.core.shards;
+        let n = shards.len();
+        // hot path: one O(n) scan for the shallowest shard, no
+        // allocation; the remaining shards matter only on rejection
+        let mut first = 0usize;
+        let mut min_depth = usize::MAX;
+        for (i, sh) in shards.iter().enumerate() {
+            let d = sh.depth.load(Ordering::Relaxed);
+            if d < min_depth {
+                min_depth = d;
+                first = i;
+            }
+        }
+        let mut stopped = 0usize;
+        for i in std::iter::once(first).chain((0..n).filter(|&i| i != first)) {
+            match shards[i].try_push(req) {
+                Ok(()) => return reply_rx.recv().map_err(|_| ServeError::Stopped),
+                // a single stopped shard just means its worker died;
+                // siblings may still serve — only all-stopped is fatal
+                Err((ServeError::Stopped, r)) => {
+                    stopped += 1;
+                    req = r;
+                }
+                Err((_, r)) => req = r,
+            }
+        }
+        if stopped == n {
+            return Err(ServeError::Stopped);
+        }
+        self.core.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        Err(ServeError::Busy)
     }
 }
 
+/// One model (manifest config + connection pattern + optional trained
+/// parameters) for [`InferenceService::start`].
+#[derive(Clone)]
+pub struct ModelSpec {
+    /// Manifest config name (`tiny`, `mnist_fc2`, `timit`, ...).
+    pub config: String,
+    /// Pre-defined sparse connection pattern; decides the masks and
+    /// which weights are trainable.
+    pub pattern: NetPattern,
+    /// `w_i, b_i` interleaved per junction (the `forward` signature
+    /// order). He-initialized from `pattern` when `None`.
+    pub params: Option<Vec<Value>>,
+}
+
+impl ModelSpec {
+    /// Spec with He-initialized parameters.
+    pub fn new(config: impl Into<String>, pattern: NetPattern) -> ModelSpec {
+        ModelSpec {
+            config: config.into(),
+            pattern,
+            params: None,
+        }
+    }
+}
+
+/// The multi-worker, multi-model inference service. See the module docs
+/// for the architecture; [`InferenceServer`] is the single-model
+/// convenience wrapper.
+pub struct InferenceService {
+    models: BTreeMap<String, Arc<ModelCore>>,
+    workers: Vec<JoinHandle<Result<()>>>,
+    cfg: ServerConfig,
+    /// Kernel-thread override in force before this service pinned it
+    /// (`Some` only when `tune_kernel_threads` applied); restored on
+    /// drop so even error paths hand the budget back.
+    prev_threads: Option<usize>,
+}
+
+impl InferenceService {
+    /// Spawn `cfg.workers` workers for every model in `specs` and block
+    /// until each has built its engine and loaded its `forward` program
+    /// (startup failures surface here, not on first request).
+    ///
+    /// The manifest at `artifacts_dir` is parsed once; each worker gets
+    /// a cheap engine over the shared parse
+    /// ([`crate::runtime::Engine::for_worker`]).
+    pub fn start(
+        artifacts_dir: impl Into<PathBuf>,
+        specs: Vec<ModelSpec>,
+        cfg: ServerConfig,
+    ) -> Result<InferenceService> {
+        anyhow::ensure!(!specs.is_empty(), "no models to serve");
+        let artifacts_dir = artifacts_dir.into();
+        let workers_per_model = cfg.workers.max(1);
+        let manifest = Arc::new(Manifest::load_or_builtin(&artifacts_dir)?);
+        // validate every spec before spawning any worker or pinning the
+        // process-wide kernel-thread budget: no failure past this block
+        // may leak running threads or a stale global override
+        let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+        for spec in &specs {
+            anyhow::ensure!(
+                seen.insert(&spec.config),
+                "model '{}' listed twice",
+                spec.config
+            );
+            let entry = manifest
+                .configs
+                .get(&spec.config)
+                .ok_or_else(|| anyhow::anyhow!("config '{}' not in manifest", spec.config))?;
+            let layers = &entry.layers;
+            anyhow::ensure!(
+                spec.pattern.junctions.len() == layers.len() - 1,
+                "'{}': pattern has {} junctions, net has {}",
+                spec.config,
+                spec.pattern.junctions.len(),
+                layers.len() - 1
+            );
+            for (i, p) in spec.pattern.junctions.iter().enumerate() {
+                anyhow::ensure!(
+                    p.shape.n_left == layers[i] && p.shape.n_right == layers[i + 1],
+                    "'{}': pattern junction {i} shape mismatch",
+                    spec.config
+                );
+            }
+        }
+        let mut prev_threads = None;
+        if cfg.tune_kernel_threads {
+            prev_threads = Some(parallel::thread_override());
+            parallel::set_threads(parallel::worker_thread_budget(
+                workers_per_model * specs.len(),
+            ));
+        }
+        let mut models: BTreeMap<String, Arc<ModelCore>> = BTreeMap::new();
+        let mut handles = Vec::new();
+        let mut ready = Vec::new();
+        for spec in specs {
+            let entry = &manifest.configs[&spec.config];
+            let layers = entry.layers.clone();
+            let masks: Arc<Vec<Value>> = Arc::new(
+                spec.pattern
+                    .junctions
+                    .iter()
+                    .map(|p| Value::F32(p.mask(), vec![p.shape.n_right, p.shape.n_left]))
+                    .collect(),
+            );
+            let params = Arc::new(init_params(&layers, &spec.pattern, spec.params));
+            let core = Arc::new(ModelCore {
+                name: spec.config.clone(),
+                batch: entry.batch,
+                features: layers[0],
+                classes: *layers.last().unwrap(),
+                shards: (0..workers_per_model)
+                    .map(|_| Shard::new(cfg.queue_depth.max(1)))
+                    .collect(),
+                metrics: ModelMetrics::new(entry.batch),
+                stop: AtomicBool::new(false),
+            });
+            for w in 0..workers_per_model {
+                let (ready_tx, ready_rx) = mpsc::channel();
+                ready.push((spec.config.clone(), ready_rx));
+                let core = Arc::clone(&core);
+                let dir = artifacts_dir.clone();
+                let manifest = Arc::clone(&manifest);
+                let params = Arc::clone(&params);
+                let masks = Arc::clone(&masks);
+                let max_wait = cfg.max_wait;
+                handles.push(std::thread::spawn(move || {
+                    worker_loop(core, w, dir, manifest, params, masks, max_wait, ready_tx)
+                }));
+            }
+            models.insert(core.name.clone(), core);
+        }
+        let svc = InferenceService {
+            models,
+            workers: handles,
+            cfg,
+            prev_threads,
+        };
+        for (model, rx) in ready {
+            let up = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker for '{model}' died during startup"));
+            match up {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) | Err(e) => {
+                    let _ = svc.shutdown();
+                    return Err(e.context(format!("starting worker for '{model}'")));
+                }
+            }
+        }
+        Ok(svc)
+    }
+
+    /// Submission handle for `model`.
+    pub fn client(&self, model: &str) -> Result<Client> {
+        let core = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("model '{model}' not served"))?;
+        Ok(Client {
+            core: Arc::clone(core),
+        })
+    }
+
+    /// This model's metrics registry, if served.
+    pub fn metrics(&self, model: &str) -> Option<&ModelMetrics> {
+        self.models.get(model).map(|c| &c.metrics)
+    }
+
+    /// Names of the models being served.
+    pub fn models(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// The configuration the service was started with.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    fn signal_stop(&self) {
+        for core in self.models.values() {
+            // order matters: mark every shard closed to new submissions
+            // *before* raising the stop flag, so a worker that observes
+            // `stop` can conclude from empty queues that nothing is left
+            for sh in &core.shards {
+                sh.stop();
+            }
+            core.stop.store(true, Ordering::Release);
+            for sh in &core.shards {
+                sh.nonempty.notify_all();
+            }
+        }
+    }
+
+    /// Stop accepting requests, drain every queued request, and join the
+    /// workers. The kernel-thread override this service pinned
+    /// (`tune_kernel_threads`) is restored to its previous value when
+    /// `self` drops at the end. Returns the first worker error, if any.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.signal_stop();
+        let mut first_err = None;
+        for h in self.workers.drain(..) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("serve worker panicked"));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for InferenceService {
+    /// Dropping without [`InferenceService::shutdown`] still signals the
+    /// workers to stop (they exit after draining, detached rather than
+    /// joined), and restores the kernel-thread override this service
+    /// pinned — so error paths that drop the service mid-run don't leak
+    /// a divided thread budget into the rest of the process.
+    fn drop(&mut self) {
+        self.signal_stop();
+        if let Some(prev) = self.prev_threads.take() {
+            parallel::set_threads(prev);
+        }
+    }
+}
+
+/// Closes a worker's shard on every exit path — normal shutdown, a
+/// `?` error from execution, or a panic: marks it stopped so new
+/// submissions are rejected rather than queued forever, and drops any
+/// already-queued requests so their clients observe
+/// [`ServeError::Stopped`] instead of blocking on a reply that will
+/// never come. Idempotent on the normal path (the shard is stopped and
+/// drained by then).
+struct ShardCloseGuard<'a> {
+    shard: &'a Shard,
+}
+
+impl Drop for ShardCloseGuard<'_> {
+    fn drop(&mut self) {
+        self.shard.stop();
+        while self.shard.try_pop().is_some() {}
+    }
+}
+
+/// He-initialize `w_i, b_i` per junction with excluded edges pre-zeroed,
+/// unless externally trained parameters are supplied.
+fn init_params(layers: &[usize], pattern: &NetPattern, params: Option<Vec<Value>>) -> Vec<Value> {
+    if let Some(p) = params {
+        return p;
+    }
+    let mut rng = Rng::new(0xD15EA5E);
+    let mut p = Vec::new();
+    for i in 1..layers.len() {
+        let (nl, nr) = (layers[i - 1], layers[i]);
+        let std = (2.0 / nl as f32).sqrt();
+        let mask = pattern.junctions[i - 1].mask();
+        let w: Vec<f32> = mask.iter().map(|&m| rng.normal() * std * m).collect();
+        p.push(Value::F32(w, vec![nr, nl]));
+        p.push(Value::F32(vec![0.1; nr], vec![nr]));
+    }
+    p
+}
+
+/// One worker: builds its backend on this thread (PJRT executables wrap
+/// thread-affine raw handles), then loops collecting dynamic batches
+/// from its own shard — stealing from the deepest sibling when dry —
+/// executing, and fanning results back out.
+fn worker_loop(
+    core: Arc<ModelCore>,
+    w: usize,
+    artifacts_dir: PathBuf,
+    manifest: Arc<Manifest>,
+    params: Arc<Vec<Value>>,
+    masks: Arc<Vec<Value>>,
+    max_wait: Duration,
+    ready: Sender<Result<()>>,
+) -> Result<()> {
+    let engine = match Engine::for_worker(&artifacts_dir, &manifest) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(e));
+            anyhow::bail!("{msg}");
+        }
+    };
+    let prog = match engine.load(&core.name, "forward") {
+        Ok(p) => p,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(e));
+            anyhow::bail!("{msg}");
+        }
+    };
+    let _ = ready.send(Ok(()));
+    let my = &core.shards[w];
+    let _close = ShardCloseGuard { shard: my };
+    let (batch, features, classes) = (core.batch, core.features, core.classes);
+    let mut pending: Vec<Request> = Vec::with_capacity(batch);
+    // weights and masks are immutable and `Program::run` only borrows
+    // them, so build the positional input list once and rewrite only
+    // the trailing x tensor per flush — no per-batch parameter clones
+    let mut inputs: Vec<Value> = Vec::with_capacity(params.len() + masks.len() + 1);
+    inputs.extend(params.iter().cloned());
+    inputs.extend(masks.iter().cloned());
+    inputs.push(Value::F32(vec![0f32; batch * features], vec![batch, features]));
+    let x_idx = inputs.len() - 1;
+    loop {
+        // block for the first request of a batch (or drain + exit)
+        let first = loop {
+            if let Some(r) = my.try_pop() {
+                break r;
+            }
+            if let Some(r) = core.steal(w) {
+                core.metrics.stolen.fetch_add(1, Ordering::Relaxed);
+                break r;
+            }
+            if core.stop.load(Ordering::Acquire) {
+                // shards stopped before the flag was raised, so empty
+                // queues now mean empty forever
+                if core.all_empty() {
+                    return Ok(());
+                }
+                continue;
+            }
+            my.wait_nonempty(IDLE_POLL);
+        };
+        pending.push(first);
+        let deadline = Instant::now() + max_wait;
+        while pending.len() < batch {
+            if let Some(r) = my.try_pop() {
+                pending.push(r);
+                continue;
+            }
+            if let Some(r) = core.steal(w) {
+                core.metrics.stolen.fetch_add(1, Ordering::Relaxed);
+                pending.push(r);
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline || core.stop.load(Ordering::Acquire) {
+                break;
+            }
+            // cap the wait so sibling shards are re-polled for stealing
+            // even while this worker's own shard stays quiet
+            my.wait_nonempty((deadline - now).min(STEAL_POLL));
+        }
+        // assemble the padded batch and execute once
+        let occupancy = pending.len();
+        if let Value::F32(x, _) = &mut inputs[x_idx] {
+            for (i, req) in pending.iter().enumerate() {
+                x[i * features..(i + 1) * features].copy_from_slice(&req.features);
+            }
+            // zero the tail so rows left over from a fuller flush never
+            // leak into this batch's padding
+            x[occupancy * features..].fill(0.0);
+        }
+        let out = prog.run(&inputs)?;
+        let logits = out[0].as_f32()?;
+        let m = &core.metrics;
+        m.requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+        m.batches.fetch_add(1, Ordering::Relaxed);
+        m.padded_rows.fetch_add((batch - occupancy) as u64, Ordering::Relaxed);
+        m.occupancy[occupancy - 1].fetch_add(1, Ordering::Relaxed);
+        for (i, req) in pending.drain(..).enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            let latency = req.submitted.elapsed();
+            m.latency.record(latency);
+            let _ = req.reply.send(Prediction {
+                class: best,
+                latency,
+                batch_occupancy: occupancy,
+                worker: w,
+            });
+        }
+    }
+}
+
+/// Single-model convenience wrapper over [`InferenceService`] (the shape
+/// most tests and simple callers want).
 pub struct InferenceServer {
-    client_tx: Sender<Request>,
-    worker: Option<JoinHandle<Result<()>>>,
-    pub stats: Arc<ServerStats>,
-    features: usize,
+    svc: InferenceService,
+    model: String,
 }
 
 impl InferenceServer {
-    /// Spawn the worker: it builds its own engine (PJRT executables are
-    /// not `Send` — the xla crate wraps thread-affine raw handles — so the
-    /// backend lives entirely on the worker thread), loads the `forward`
-    /// program of `config`, and serves with He-initialized (or externally
-    /// trained) parameters for `pattern`.
+    /// One model, `cfg.workers` workers. See [`InferenceService::start`].
     pub fn start(
         artifacts_dir: impl Into<PathBuf>,
         config: &str,
@@ -111,137 +857,102 @@ impl InferenceServer {
         params: Option<Vec<Value>>,
         cfg: ServerConfig,
     ) -> Result<Self> {
-        let artifacts_dir = artifacts_dir.into();
-        let config = config.to_string();
-        // read the manifest up front (host-side, cheap) for shape info
-        let probe = Manifest::probe(&artifacts_dir, &config)?;
-        let layers = probe.layers;
-        let batch = probe.batch;
-        let classes = *layers.last().unwrap();
-        let features = layers[0];
-
-        let params = match params {
-            Some(p) => p,
-            None => {
-                let mut rng = Rng::new(0xD15EA5E);
-                let mut p = Vec::new();
-                for i in 1..layers.len() {
-                    let (nl, nr) = (layers[i - 1], layers[i]);
-                    let std = (2.0 / nl as f32).sqrt();
-                    let mask = pattern.junctions[i - 1].mask();
-                    let w: Vec<f32> = mask.iter().map(|&m| rng.normal() * std * m).collect();
-                    p.push(Value::F32(w, vec![nr, nl]));
-                    p.push(Value::F32(vec![0.1; nr], vec![nr]));
-                }
-                p
-            }
-        };
-        let masks: Vec<Value> = pattern
-            .junctions
-            .iter()
-            .map(|p| Value::F32(p.mask(), vec![p.shape.n_right, p.shape.n_left]))
-            .collect();
-
-        let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let stats = Arc::new(ServerStats::default());
-        let worker_stats = Arc::clone(&stats);
-        let worker = std::thread::spawn(move || -> Result<()> {
-            // backend objects live and die on this thread
-            let engine = match Engine::new(&artifacts_dir) {
-                Ok(e) => e,
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    let _ = ready_tx.send(Err(e));
-                    anyhow::bail!("{msg}");
-                }
-            };
-            let prog = match engine.load(&config, "forward") {
-                Ok(p) => p,
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    let _ = ready_tx.send(Err(e));
-                    anyhow::bail!("{msg}");
-                }
-            };
-            let _ = ready_tx.send(Ok(()));
-            let mut pending: Vec<Request> = Vec::with_capacity(batch);
-            loop {
-                // block for the first request of a batch
-                match rx.recv() {
-                    Err(_) => return Ok(()), // all clients dropped
-                    Ok(req) => pending.push(req),
-                }
-                let deadline = Instant::now() + cfg.max_wait;
-                while pending.len() < batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(req) => pending.push(req),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                // assemble the padded batch
-                let occupancy = pending.len();
-                let mut x = vec![0f32; batch * features];
-                for (i, req) in pending.iter().enumerate() {
-                    x[i * features..(i + 1) * features].copy_from_slice(&req.features);
-                }
-                let mut inputs: Vec<Value> = Vec::new();
-                inputs.extend(params.iter().cloned());
-                inputs.extend(masks.iter().cloned());
-                inputs.push(Value::F32(x, vec![batch, features]));
-                let out = prog.run(&inputs)?;
-                let logits = out[0].as_f32()?;
-                worker_stats.requests.fetch_add(occupancy as u64, Ordering::Relaxed);
-                worker_stats.batches.fetch_add(1, Ordering::Relaxed);
-                worker_stats
-                    .padded_rows
-                    .fetch_add((batch - occupancy) as u64, Ordering::Relaxed);
-                for (i, req) in pending.drain(..).enumerate() {
-                    let row = &logits[i * classes..(i + 1) * classes];
-                    let mut best = 0usize;
-                    for (c, &v) in row.iter().enumerate() {
-                        if v > row[best] {
-                            best = c;
-                        }
-                    }
-                    let _ = req.reply.send(Prediction {
-                        class: best,
-                        latency: req.submitted.elapsed(),
-                        batch_occupancy: occupancy,
-                    });
-                }
-            }
-        });
-        // propagate load/compile failures synchronously
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        let svc = InferenceService::start(
+            artifacts_dir,
+            vec![ModelSpec {
+                config: config.to_string(),
+                pattern: pattern.clone(),
+                params,
+            }],
+            cfg,
+        )?;
         Ok(InferenceServer {
-            client_tx: tx,
-            worker: Some(worker),
-            stats,
-            features,
+            svc,
+            model: config.to_string(),
         })
     }
 
+    /// Submission handle; cloneable across client threads.
     pub fn client(&self) -> Client {
-        Client {
-            tx: self.client_tx.clone(),
-            features: self.features,
+        self.svc.client(&self.model).expect("own model is served")
+    }
+
+    /// The model's metrics registry.
+    pub fn metrics(&self) -> &ModelMetrics {
+        self.svc.metrics(&self.model).expect("own model is served")
+    }
+
+    /// Stop, drain, and join the workers.
+    pub fn shutdown(self) -> Result<()> {
+        self.svc.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_request() -> (Request, mpsc::Receiver<Prediction>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                features: vec![0.0; 4],
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn shard_rejects_when_full_and_recovers() {
+        let sh = Shard::new(2);
+        let (r1, _k1) = dummy_request();
+        let (r2, _k2) = dummy_request();
+        let (r3, _k3) = dummy_request();
+        assert!(sh.try_push(r1).is_ok());
+        assert!(sh.try_push(r2).is_ok());
+        let err = sh.try_push(r3).err().map(|(e, _)| e);
+        assert_eq!(err, Some(ServeError::Busy));
+        // popping one frees capacity again: bounded, never blocking
+        assert!(sh.try_pop().is_some());
+        let (r4, _k4) = dummy_request();
+        assert!(sh.try_push(r4).is_ok());
+        assert_eq!(sh.depth.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn stopped_shard_rejects_with_stopped() {
+        let sh = Shard::new(4);
+        sh.stop();
+        let (r, _k) = dummy_request();
+        match sh.try_push(r) {
+            Err((ServeError::Stopped, _)) => {}
+            _ => panic!("expected Stopped"),
         }
     }
 
-    /// Stop the worker (drops the submit channel, then joins).
-    pub fn shutdown(mut self) -> Result<()> {
-        drop(self.client_tx);
-        if let Some(w) = self.worker.take() {
-            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    #[test]
+    fn latency_histogram_quantiles_are_monotonic() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            for _ in 0..20 {
+                h.record(Duration::from_micros(us));
+            }
         }
-        Ok(())
+        assert_eq!(h.count(), 100);
+        let (p50, p95, p99) = (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        // 100us samples sit in the [64, 128)us bucket; its upper bound
+        // is the reported median
+        assert_eq!(p50, Duration::from_micros(128));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(16_384));
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
     }
 }

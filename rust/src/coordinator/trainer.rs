@@ -107,8 +107,8 @@ impl TrainSession {
         (self.t - 1.0) as usize
     }
 
-    /// One fused train step on a full minibatch (x: [batch, N_0], y:
-    /// [batch]).
+    /// One fused train step on a full minibatch (`x: [batch, N_0]`,
+    /// `y: [batch]`).
     pub fn step(&mut self, x: &[f32], y: &[i32]) -> Result<TrainStepOut> {
         let n0 = self.layers[0];
         if x.len() != self.batch * n0 || y.len() != self.batch {

@@ -1,6 +1,14 @@
 //! Numeric, cycle-accurate execution of one junction's FF / BP / UP
 //! (Sec. III-B, Fig. 3/4) against banked memories.
 //!
+//! This simulator is deliberately serial: it models *one* junction unit
+//! clocking `z` edge processors per cycle, so cycle counts and clash
+//! checks stay exact. Throughput in software comes from the batched
+//! [`crate::nn`] kernels (parallel over [`crate::util::parallel`]) and
+//! from the multi-worker inference service in [`crate::coordinator`];
+//! here, concurrency is *modeled* (pipelining across junction units
+//! lives in [`crate::hw::pipeline`]), not executed.
+//!
 //! Layout contract (Fig. 4):
 //! - weights: edge `e` (numbered sequentially by right neuron) lives in
 //!   weight memory `e % z` at address `e / z`; read in natural order, one
@@ -138,7 +146,7 @@ impl JunctionUnit {
         Pattern { shape: self.shape, in_edges }
     }
 
-    /// Load weights from a dense row-major [n_right, n_left] matrix
+    /// Load weights from a dense row-major `[n_right, n_left]` matrix
     /// (host DMA; untimed).
     pub fn load_weights_dense(&mut self, dense: &[f32]) {
         assert_eq!(dense.len(), self.shape.n_right * self.shape.n_left);
@@ -160,7 +168,7 @@ impl JunctionUnit {
         self.weights.load(flat);
     }
 
-    /// Dump weights to dense row-major [n_right, n_left] (untimed).
+    /// Dump weights to dense row-major `[n_right, n_left]` (untimed).
     pub fn dump_weights_dense(&self) -> Vec<f32> {
         let flat = self.weights.dump(self.shape.n_right * self.d_in);
         let mut dense = vec![0f32; self.shape.n_right * self.shape.n_left];

@@ -1,16 +1,29 @@
 //! # predef-sparse
 //!
 //! Reproduction of Dey et al., "Pre-Defined Sparse Neural Networks with
-//! Hardware Acceleration" (IEEE JETCAS 2019): pre-defined sparse MLPs with
-//! clash-free hardware-friendly connection patterns, a cycle-accurate
-//! simulator of the paper's edge-based FPGA architecture, and a Rust
-//! coordinator executing training and batched inference over a pluggable
-//! runtime — the pure-Rust parallel [`runtime::NativeEngine`] by default,
-//! or AOT-compiled JAX/Pallas artifacts via PJRT behind the `pjrt` cargo
-//! feature.
+//! Hardware Acceleration" (IEEE JETCAS 2019 / arXiv:1812.01164):
+//! pre-defined sparse MLPs with clash-free hardware-friendly connection
+//! patterns, a cycle-accurate simulator of the paper's edge-based FPGA
+//! architecture, and a Rust coordinator executing training and
+//! multi-worker batched inference over a pluggable runtime — the
+//! pure-Rust parallel [`runtime::NativeEngine`] by default, or
+//! AOT-compiled JAX artifacts via PJRT behind the `pjrt` cargo feature.
 //!
-//! See DESIGN.md (in this directory) for the system inventory, the
-//! backend architecture, and the performance notes.
+//! ## Module tree vs. the paper
+//!
+//! | module | paper | role |
+//! |---|---|---|
+//! | [`sparsity`] | Sec. II, III-C, App. A/C | density math, clash-free / structured / random pattern generators, audits |
+//! | [`hw`] | Sec. III, Table I | cycle-accurate junction/pipeline simulator, banked memories, storage model |
+//! | [`nn`] | Sec. II eq. 2–4 | reference dense + CSR compacted kernels (batch-parallel), Adam trainers |
+//! | [`runtime`] | — | backend-agnostic [`runtime::Engine`] facade: native or PJRT execution of the manifest programs |
+//! | [`coordinator`] | Sec. III (scale-out analogue) | training sessions; the multi-worker sharded inference service + load generator |
+//! | [`data`] | Sec. IV | synthetic class-conditional surrogates for MNIST / Reuters / TIMIT / CIFAR |
+//! | [`exp`] | Sec. IV figures/tables | the paper's experiment harnesses (`pds exp <id>`) |
+//! | [`util`] | — | in-tree rng / json / bench / property-test / fork-join replacements |
+//!
+//! See `DESIGN.md` (next to this crate) for the system inventory and the
+//! performance notes, and the top-level `README.md` for a quickstart.
 
 // numerics code: index-based loops over multiple parallel buffers are the
 // clearest expression of the paper's equations

@@ -1,20 +1,25 @@
 //! `pds` — pre-defined sparse neural networks with hardware acceleration.
 //!
-//! Subcommands:
-//!   info                       list runtime configs and programs
-//!   patterns  [opts]           generate + audit a connection pattern
-//!   storage   [opts]           Table-I storage model for a config
-//!   simulate  [opts]           cycle-accurate junction FF/BP/UP run
-//!   train     [opts]           train via the runtime backend (native by
-//!                              default; PJRT with the `pjrt` feature)
-//!   serve     [opts]           batched inference service demo
-//!   exp <id>  [--quick]        paper experiment harnesses (see DESIGN.md)
+//! ```text
+//! info                   list runtime configs and programs
+//! patterns    [opts]     generate + audit a connection pattern
+//! storage     [opts]     Table-I storage model for a config
+//! simulate    [opts]     cycle-accurate junction FF/BP/UP run
+//! train       [opts]     train via the runtime backend (native by
+//!                        default; PJRT with the `pjrt` feature)
+//! serve       [opts]     multi-worker sharded inference service demo
+//! serve-bench [opts]     serve load bench: multi-worker vs single-worker
+//! exp <id>    [--quick]  paper experiment harnesses (see DESIGN.md)
+//! ```
 //!
 //! (CLI parsing is hand-rolled: clap is unavailable in the offline build.)
 
 use std::collections::BTreeMap;
 use std::process::ExitCode;
+use std::time::Duration;
 
+use pds::coordinator::loadgen::{self, LoadSpec};
+use pds::coordinator::{InferenceService, ServerConfig};
 use pds::data::Spec;
 use pds::exp::common::Scale;
 use pds::hw::junction::{Act, JunctionUnit};
@@ -83,6 +88,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&opts)?,
         "train" => cmd_train(&opts)?,
         "serve" => cmd_serve(&opts)?,
+        "serve-bench" => cmd_serve_bench(&opts)?,
         "exp" => {
             let id = pos.first().map(String::as_str).unwrap_or("all");
             let scale = if opts.contains_key("quick") {
@@ -109,7 +115,11 @@ fn print_help() {
            storage   --layers 800,100,10 --dout 20,10\n\
            simulate  --left 800 --right 100 --dout 20 --z 200\n\
            train     --config tiny [--dout 8,4] [--epochs 5] [--lr 1e-3] [--fc]\n\
-           serve     --config tiny [--requests 200] [--wait-ms 2]\n\
+           serve     --models tiny,mnist_fc2 [--workers 2] [--queue-depth 256]\n\
+                     [--clients 4] [--requests 200] [--wait-ms 2]\n\
+           serve-bench --models tiny,mnist_fc2 [--workers 4] [--clients 8]\n\
+                     [--requests 200] [--wait-ms 2] [--queue-depth 256]\n\
+                     [--think-us 0] [--burst 1] [--out BENCH_serve.json]\n\
            exp <fig1|table1|table2|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table3|pipeline|all> [--quick]\n\
          \n\
          global: --artifacts <dir> (default: ./artifacts)"
@@ -301,70 +311,104 @@ fn spec_for_features(features: usize, classes: usize) -> Spec {
     spec
 }
 
+/// Comma-separated model list (`--models a,b`; `--config` kept as an
+/// alias for the single-model case).
+fn parse_models(opts: &BTreeMap<String, String>, default: &str) -> Vec<String> {
+    opts.get("models")
+        .or_else(|| opts.get("config"))
+        .map(String::as_str)
+        .unwrap_or(default)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
 fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
-    let config = opts.get("config").cloned().unwrap_or_else(|| "tiny".into());
-    let n_requests: usize = opts.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let models = parse_models(opts, "tiny");
+    let requests: usize = opts.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let clients: usize = opts.get("clients").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let wait_ms: u64 = opts.get("wait-ms").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let workers: usize = opts.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let queue_depth: usize = opts.get("queue-depth").map(|s| s.parse()).transpose()?.unwrap_or(256);
     let dir = artifacts_dir(opts);
-    let probe = pds::runtime::Manifest::probe(&dir, &config)?;
-    let netc = NetConfig::new(probe.layers.clone());
-    let mut rng = Rng::new(3);
-    let dout = DoutConfig(
-        (0..netc.n_junctions())
-            .map(|i| netc.junction(i).dout_for_density(0.25))
-            .collect(),
-    );
-    let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
-    let server = pds::coordinator::InferenceServer::start(
-        dir,
-        &config,
-        &pattern,
-        None,
-        pds::coordinator::ServerConfig {
-            max_wait: std::time::Duration::from_millis(wait_ms),
+    let specs = models
+        .iter()
+        .map(|m| loadgen::model_spec(&dir, m, 0.25, 3))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let svc = InferenceService::start(
+        &dir,
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(wait_ms),
+            workers,
+            queue_depth,
+            tune_kernel_threads: true,
         },
     )?;
     println!(
-        "serving config {config} {:?} (batch {}), {} requests from 4 client threads",
-        probe.layers, probe.batch, n_requests
+        "serving {models:?}: {workers} workers/model, queue depth {queue_depth}, \
+         max_wait {wait_ms}ms; {clients} clients x {requests} requests per model"
     );
-    let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for c in 0..4u64 {
-        let client = server.client();
-        let features = probe.layers[0];
-        let per = n_requests / 4;
-        handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(1000 + c);
-            let mut lats = Vec::with_capacity(per);
-            for _ in 0..per {
-                let x: Vec<f32> = (0..features).map(|_| rng.normal()).collect();
-                let pred = client.classify(x).unwrap();
-                lats.push(pred.latency);
-            }
-            lats
-        }));
+    let load = LoadSpec {
+        clients,
+        requests,
+        think_time: Duration::ZERO,
+        burst: 1,
+    };
+    let reports = loadgen::run_load(&svc, &models, &load, 42)?;
+    for r in &reports {
+        r.print();
     }
-    let mut lats: Vec<std::time::Duration> = Vec::new();
-    for h in handles {
-        lats.extend(h.join().unwrap());
+    println!("-- metrics --");
+    for m in &models {
+        println!("{}", svc.metrics(m).unwrap().report(m));
     }
-    let wall = t0.elapsed();
-    lats.sort();
-    let stats = &server.stats;
-    println!(
-        "done in {wall:?}: throughput {:.0} req/s, latency p50 {:?} p95 {:?} p99 {:?}",
-        lats.len() as f64 / wall.as_secs_f64(),
-        lats[lats.len() / 2],
-        lats[lats.len() * 95 / 100],
-        lats[lats.len() * 99 / 100],
-    );
-    println!(
-        "batches {} (mean occupancy {:.1}), padded rows {}",
-        stats.batches.load(std::sync::atomic::Ordering::Relaxed),
-        lats.len() as f64 / stats.batches.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64,
-        stats.padded_rows.load(std::sync::atomic::Ordering::Relaxed)
-    );
-    server.shutdown()?;
+    svc.shutdown()?;
+    Ok(())
+}
+
+fn cmd_serve_bench(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let models = parse_models(opts, "tiny,mnist_fc2");
+    let workers: usize = opts.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let clients: usize = opts.get("clients").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let requests: usize = opts.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let wait_ms: u64 = opts.get("wait-ms").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let queue_depth: usize = opts.get("queue-depth").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let think_us: u64 = opts.get("think-us").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let burst: usize = opts.get("burst").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let dir = artifacts_dir(opts);
+    let load = LoadSpec {
+        clients,
+        requests,
+        think_time: Duration::from_micros(think_us),
+        burst,
+    };
+    let max_wait = Duration::from_millis(wait_ms);
+    println!("serve-bench: models {models:?}, {clients} clients x {requests} requests per model");
+    let sweep: Vec<usize> = if workers <= 1 { vec![1] } else { vec![1, workers] };
+    let mut scenarios = Vec::new();
+    for w in sweep {
+        println!("-- {w} worker(s) per model --");
+        let reports = loadgen::bench_service(&dir, &models, w, queue_depth, max_wait, &load, 7)?;
+        for r in &reports {
+            r.print();
+        }
+        scenarios.push((w, reports));
+    }
+    if scenarios.len() == 2 {
+        let t1: f64 = scenarios[0].1.iter().map(|r| r.throughput).sum();
+        let tn: f64 = scenarios[1].1.iter().map(|r| r.throughput).sum();
+        println!(
+            "sustained throughput: {tn:.0} req/s with {workers} workers vs {t1:.0} req/s \
+             single-worker ({:.2}X)",
+            tn / t1.max(1e-9)
+        );
+    }
+    if let Some(path) = opts.get("out") {
+        let doc = loadgen::bench_json(&scenarios);
+        std::fs::write(path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

@@ -1,8 +1,14 @@
 //! CSR compacted-edge MLP: the software twin of the hardware's edge-based
 //! processing (Fig. 4 layout). Storage and MACs are proportional to
-//! |W_i| = sum of in-degrees — this is where pre-defined sparsity's
+//! `|W_i|` = sum of in-degrees — this is where pre-defined sparsity's
 //! training-complexity reduction is actually realized in software
 //! (Sec. II-B: complexity directly proportional to the number of edges).
+//!
+//! The kernels here are batch-parallel over [`crate::util::parallel`]:
+//! FF and BP chunk independent batch rows across threads, UP reduces the
+//! batch with per-thread partial accumulators. They back the reference
+//! trainers and the native runtime backend's `gather_forward` program
+//! (the inference service's compacted path).
 
 use crate::sparsity::pattern::{NetPattern, Pattern};
 use crate::util::parallel;
@@ -14,7 +20,7 @@ use crate::util::rng::Rng;
 pub struct SparseLayer {
     pub n_left: usize,
     pub n_right: usize,
-    /// CSR row offsets, len n_right + 1 (uniform d_in => offsets[j] = j*d_in).
+    /// CSR row offsets, len n_right + 1 (uniform d_in => `offsets[j] = j*d_in`).
     pub offsets: Vec<u32>,
     /// Left-neuron index per edge.
     pub idx: Vec<u32>,
@@ -51,7 +57,7 @@ impl SparseLayer {
         self.idx.len()
     }
 
-    /// FF (eq. 2a): h[b, j] = sum_f wc[j, f] * a[b, idx[j, f]] + bias[j].
+    /// FF (eq. 2a): `h[b, j] = sum_f wc[j, f] * a[b, idx[j, f]] + bias[j]`.
     /// Batch rows are independent, so they are chunked across the
     /// [`parallel`] thread pool.
     pub fn forward(&self, a: &[f32], batch: usize, out: &mut [f32]) {
@@ -74,9 +80,10 @@ impl SparseLayer {
         });
     }
 
-    /// BP (eq. 3b inner sum): da[b, k] = sum_j wc[j,.] delta[b, j] scattered
-    /// over idx. Caller applies the activation-derivative product. The
-    /// scatter stays within one batch row, so rows parallelize cleanly.
+    /// BP (eq. 3b inner sum): `da[b, k] = sum_j wc[j,.] delta[b, j]`
+    /// scattered over idx. Caller applies the activation-derivative
+    /// product. The scatter stays within one batch row, so rows
+    /// parallelize cleanly.
     pub fn backprop(&self, delta: &[f32], batch: usize, out: &mut [f32]) {
         assert_eq!(delta.len(), batch * self.n_right);
         assert_eq!(out.len(), batch * self.n_left);
@@ -100,8 +107,8 @@ impl SparseLayer {
         });
     }
 
-    /// UP gradients (eq. 4b): gwc[e] = sum_b delta[b, j(e)] * a[b, idx[e]],
-    /// gb[j] = sum_b delta[b, j]. Adds the L2 term 2*l2*wc. The batch
+    /// UP gradients (eq. 4b): `gwc[e] = sum_b delta[b, j(e)] * a[b, idx[e]]`,
+    /// `gb[j] = sum_b delta[b, j]`. Adds the L2 term `2*l2*wc`. The batch
     /// reduction runs on per-thread partial buffers merged at the end.
     pub fn grads(
         &self,
@@ -155,8 +162,8 @@ impl SparseLayer {
         }
     }
 
-    /// Densify to row-major [n_right, n_left] (for cross-checks and for
-    /// loading into the AOT masked-dense artifacts).
+    /// Densify to row-major `[n_right, n_left]` (for cross-checks and
+    /// for loading into the AOT masked-dense artifacts).
     pub fn to_dense(&self) -> (Vec<f32>, Vec<f32>) {
         let mut w = vec![0f32; self.n_right * self.n_left];
         let mut m = vec![0f32; self.n_right * self.n_left];

@@ -3,15 +3,18 @@
 //! native backend can run with no artifact files at all.
 //!
 //! Every program follows one fixed positional signature convention
-//! (L = number of junctions, layers = [N_0..N_L]):
-//! - `forward`:        [w_i, b_i]*L, [mask_i]*L, x[batch, N_0]
-//!                     -> [logits[batch, N_L]]
-//! - `train`:          [w_i, b_i]*L, [m_w_i, m_b_i]*L, [v_w_i, v_b_i]*L,
-//!                     [mask_i]*L, x, y[batch] i32, t, lr, l2 (scalars)
-//!                     -> updated params/m/v in the same order, then
-//!                        t+1, mean CE loss, #correct (scalars)
-//! - `gather_forward`: [wc_i[N_i, d_in_i]]*L, [idx_i i32]*L, [b_i]*L, x
-//!                     -> [logits] (only for uniform-in-degree configs)
+//! (`L` = number of junctions, layers = `[N_0..N_L]`):
+//!
+//! ```text
+//! forward:        [w_i, b_i]*L, [mask_i]*L, x[batch, N_0]
+//!                 -> [logits[batch, N_L]]
+//! train:          [w_i, b_i]*L, [m_w_i, m_b_i]*L, [v_w_i, v_b_i]*L,
+//!                 [mask_i]*L, x, y[batch] i32, t, lr, l2 (scalars)
+//!                 -> updated params/m/v in the same order, then
+//!                    t+1, mean CE loss, #correct (scalars)
+//! gather_forward: [wc_i[N_i, d_in_i]]*L, [idx_i i32]*L, [b_i]*L, x
+//!                 -> [logits] (only for uniform-in-degree configs)
+//! ```
 
 use std::collections::BTreeMap;
 

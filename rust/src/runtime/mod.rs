@@ -158,6 +158,35 @@ impl Engine {
         })
     }
 
+    /// Native engine over an already-parsed manifest — no file I/O, no
+    /// parsing, effectively free. This is what lets a multi-worker
+    /// service parse `manifest.json` once and still give every worker
+    /// thread its own engine.
+    pub fn from_manifest(manifest: Manifest) -> Engine {
+        Engine {
+            backend: Box::new(NativeEngine),
+            manifest,
+        }
+    }
+
+    /// Cheap per-worker engine construction. Backend handles can be
+    /// thread-affine (PJRT executables wrap raw pointers that must not
+    /// cross threads), so each worker thread needs its *own* engine;
+    /// this constructor keeps that cheap by reusing `manifest`, the
+    /// single shared parse, on the native path. With the `pjrt` feature
+    /// enabled and compiled artifacts present it builds a fresh PJRT
+    /// engine instead (the artifact load is the unavoidable per-worker
+    /// cost there).
+    pub fn for_worker(artifacts_dir: impl AsRef<Path>, manifest: &Manifest) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        #[cfg(feature = "pjrt")]
+        if dir.join("manifest.json").exists() {
+            return Engine::pjrt(dir);
+        }
+        let _ = dir;
+        Ok(Engine::from_manifest(manifest.clone()))
+    }
+
     pub fn platform(&self) -> String {
         self.backend.platform()
     }
@@ -258,6 +287,18 @@ mod tests {
         assert!(e.load("tiny", "train").is_ok());
         assert!(e.load("tiny", "bogus").is_err());
         assert!(e.load("bogus", "forward").is_err());
+    }
+
+    #[test]
+    fn worker_engines_share_one_parsed_manifest() {
+        let m = Manifest::builtin();
+        let e = Engine::from_manifest(m.clone());
+        assert!(e.load("tiny", "forward").is_ok());
+        // for_worker falls back to the shared parse when no compiled
+        // artifacts exist at the path
+        let e2 = Engine::for_worker("/nonexistent/dir", &m).unwrap();
+        assert!(e2.manifest.configs.contains_key("mnist_fc2"));
+        assert!(e2.load("timit", "forward").is_ok());
     }
 
     #[test]

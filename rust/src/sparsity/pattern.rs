@@ -22,6 +22,7 @@ pub struct NetPattern {
 }
 
 impl Pattern {
+    /// Total edge count `|W_i|` — the junction's storage and MAC cost.
     pub fn n_edges(&self) -> usize {
         self.in_edges.iter().map(|e| e.len()).sum()
     }
@@ -91,8 +92,8 @@ impl Pattern {
         Ok(())
     }
 
-    /// Dense 0/1 mask, row-major [n_right, n_left] — the AOT artifacts'
-    /// mask input layout.
+    /// Dense 0/1 mask, row-major `[n_right, n_left]` — the AOT
+    /// artifacts' mask input layout.
     pub fn mask(&self) -> Vec<f32> {
         let mut m = vec![0f32; self.shape.n_right * self.shape.n_left];
         for (j, edges) in self.in_edges.iter().enumerate() {
@@ -103,7 +104,7 @@ impl Pattern {
         m
     }
 
-    /// Compacted index memory [n_right, d_in] (row-major), the Fig. 4
+    /// Compacted index memory `[n_right, d_in]` (row-major), the Fig. 4
     /// weight-memory layout. Only defined for uniform in-degree.
     pub fn compact_indices(&self) -> Option<(Vec<i32>, usize)> {
         let din = self.in_edges.first()?.len();
@@ -117,8 +118,8 @@ impl Pattern {
         Some((idx, din))
     }
 
-    /// Extract the compacted weights [n_right, d_in] from a dense
-    /// row-major [n_right, n_left] weight matrix.
+    /// Extract the compacted weights `[n_right, d_in]` from a dense
+    /// row-major `[n_right, n_left]` weight matrix.
     pub fn compact_weights(&self, dense: &[f32]) -> Vec<f32> {
         assert_eq!(dense.len(), self.shape.n_right * self.shape.n_left);
         let mut wc = Vec::with_capacity(self.n_edges());
@@ -168,6 +169,7 @@ impl NetPattern {
         total
     }
 
+    /// All junction masks in [`Pattern::mask`] layout, network order.
     pub fn masks(&self) -> Vec<Vec<f32>> {
         self.junctions.iter().map(|p| p.mask()).collect()
     }

@@ -38,12 +38,15 @@ pub fn set_threads(n: usize) {
     OVERRIDE.store(n, Ordering::Relaxed);
 }
 
-/// Current maximum number of worker threads.
-pub fn max_threads() -> usize {
-    let o = OVERRIDE.load(Ordering::Relaxed);
-    if o != 0 {
-        return o;
-    }
+/// The current explicit override (0 = auto-detection) — what a caller
+/// that temporarily pins the budget must save and restore.
+pub fn thread_override() -> usize {
+    OVERRIDE.load(Ordering::Relaxed)
+}
+
+/// Detected machine budget: `PDS_THREADS` if set, else
+/// `available_parallelism`, ignoring any [`set_threads`] override.
+fn auto_threads() -> usize {
     let cached = AUTO.load(Ordering::Relaxed);
     if cached != 0 {
         return cached;
@@ -60,6 +63,33 @@ pub fn max_threads() -> usize {
         .clamp(1, 64);
     AUTO.store(n, Ordering::Relaxed);
     n
+}
+
+/// Current maximum number of worker threads.
+pub fn max_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    auto_threads()
+}
+
+/// The detected machine budget itself (`PDS_THREADS` if set, else
+/// `available_parallelism`), independent of any [`set_threads`]
+/// override — the quantity [`worker_thread_budget`] divides.
+pub fn machine_threads() -> usize {
+    auto_threads()
+}
+
+/// Kernel-thread budget for each of `workers` concurrent batch-serving
+/// threads: the detected machine budget (`PDS_THREADS` or
+/// `available_parallelism`, not any [`set_threads`] override) divided
+/// evenly, so that worker count × per-batch kernel threads does not
+/// oversubscribe the cores. Always at least 1. The inference service
+/// applies this via [`set_threads`] when its `tune_kernel_threads`
+/// config flag is set.
+pub fn worker_thread_budget(workers: usize) -> usize {
+    (auto_threads() / workers.max(1)).max(1)
 }
 
 /// Thread count worth using for `items` units of `work_per_item` scalar
@@ -196,6 +226,23 @@ mod tests {
         // threads_for must return 1 for tiny problems
         assert_eq!(threads_for(4, 10), 1);
         assert_eq!(threads_for(0, 100), 1);
+    }
+
+    #[test]
+    fn worker_budget_divides_without_oversubscribing() {
+        let _guard = override_guard();
+        // the budget ignores the override: it divides the machine's
+        // detected parallelism, not whatever a bench pinned
+        set_threads(1);
+        let full = worker_thread_budget(1);
+        assert!(full >= 1);
+        assert!(worker_thread_budget(2) <= full);
+        assert_eq!(worker_thread_budget(usize::MAX), 1);
+        // workers * per-worker budget never exceeds the machine budget
+        for workers in [1usize, 2, 3, 8, 64] {
+            assert!(worker_thread_budget(workers) * workers <= full.max(workers));
+        }
+        set_threads(0);
     }
 
     #[test]

@@ -236,6 +236,7 @@ fn inference_server_serves_batched_requests() {
         None,
         pds::coordinator::ServerConfig {
             max_wait: std::time::Duration::from_millis(1),
+            ..Default::default()
         },
     )
     .unwrap();
@@ -261,12 +262,12 @@ fn inference_server_serves_batched_requests() {
         h.join().unwrap();
     }
     let reqs = server
-        .stats
+        .metrics()
         .requests
         .load(std::sync::atomic::Ordering::Relaxed);
     assert_eq!(reqs, (n_clients * per_client) as u64);
     let batches = server
-        .stats
+        .metrics()
         .batches
         .load(std::sync::atomic::Ordering::Relaxed);
     assert!(batches as usize <= n_clients * per_client);

@@ -1,0 +1,180 @@
+//! Integration tests for the multi-worker sharded inference service:
+//! cross-model stress, bounded-queue backpressure totality, and metrics
+//! sanity (occupancy histogram vs request counters, latency quantiles).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use pds::coordinator::loadgen::{self, LoadSpec};
+use pds::coordinator::{InferenceService, ServeError, ServerConfig};
+use pds::util::rng::Rng;
+
+fn dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+/// Many concurrent clients across two models at once: every prediction
+/// must come back with a sane class, nothing may be lost, and with the
+/// queue bound above the in-flight client count nothing may be rejected.
+#[test]
+fn stress_two_models_many_clients() {
+    let models = ["tiny", "timit"];
+    let specs = models
+        .iter()
+        .map(|m| loadgen::model_spec(dir(), m, 0.25, 1).unwrap())
+        .collect();
+    let svc = InferenceService::start(
+        dir(),
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_depth: 64,
+            tune_kernel_threads: false,
+        },
+    )
+    .unwrap();
+    let clients = 4usize;
+    let per_client = 30usize;
+    std::thread::scope(|s| {
+        for (mi, model) in models.iter().enumerate() {
+            for c in 0..clients {
+                let client = svc.client(model).unwrap();
+                s.spawn(move || {
+                    let mut rng = Rng::new((mi * 100 + c) as u64);
+                    for _ in 0..per_client {
+                        let x: Vec<f32> =
+                            (0..client.features()).map(|_| rng.normal()).collect();
+                        let pred = client.classify(x).unwrap();
+                        assert!(pred.class < client.classes(), "class out of range");
+                        assert!(pred.batch_occupancy >= 1);
+                        assert!(pred.worker < 2);
+                    }
+                });
+            }
+        }
+    });
+    for model in models {
+        let m = svc.metrics(model).unwrap();
+        assert_eq!(
+            m.requests.load(Ordering::Relaxed),
+            (clients * per_client) as u64,
+            "{model}: every request must be served exactly once"
+        );
+        // closed-loop in-flight (4) never exceeds one shard's bound (64)
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 0, "{model}");
+    }
+    svc.shutdown().unwrap();
+}
+
+/// Bounded queues shed load instead of blocking forever: with a depth-1
+/// queue and a flood of clients, every `classify` call must return
+/// (joining the scope proves totality), and the client-observed
+/// outcomes must match the service's own counters exactly.
+#[test]
+fn bounded_queue_rejects_instead_of_blocking() {
+    let specs = vec![loadgen::model_spec(dir(), "tiny", 0.25, 2).unwrap()];
+    let svc = InferenceService::start(
+        dir(),
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            queue_depth: 1,
+            tune_kernel_threads: false,
+        },
+    )
+    .unwrap();
+    let served = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..16u64 {
+            let client = svc.client("tiny").unwrap();
+            let served = &served;
+            let rejected = &rejected;
+            s.spawn(move || {
+                let mut rng = Rng::new(c);
+                for _ in 0..10 {
+                    let x: Vec<f32> = (0..client.features()).map(|_| rng.normal()).collect();
+                    match client.classify(x) {
+                        Ok(p) => {
+                            assert!(p.class < client.classes());
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ServeError::Busy) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let m = svc.metrics("tiny").unwrap();
+    assert_eq!(
+        served.load(Ordering::Relaxed) + rejected.load(Ordering::Relaxed),
+        160,
+        "every submission must resolve to served or rejected"
+    );
+    assert_eq!(m.requests.load(Ordering::Relaxed), served.load(Ordering::Relaxed));
+    assert_eq!(m.rejected.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed));
+    // the service must still be healthy after shedding load
+    let client = svc.client("tiny").unwrap();
+    loop {
+        let x = vec![0.5f32; client.features()];
+        match client.classify(x) {
+            Ok(p) => {
+                assert!(p.class < client.classes());
+                break;
+            }
+            Err(ServeError::Busy) => std::thread::yield_now(),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    svc.shutdown().unwrap();
+}
+
+/// The metrics registry must be self-consistent: the occupancy histogram
+/// weighted by occupancy sums to the request count, its plain sum is the
+/// batch count, the latency histogram saw every request, and quantiles
+/// are monotone.
+#[test]
+fn metrics_occupancy_and_latency_are_consistent() {
+    let specs = vec![loadgen::model_spec(dir(), "tiny", 0.25, 4).unwrap()];
+    let svc = InferenceService::start(
+        dir(),
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_depth: 64,
+            tune_kernel_threads: false,
+        },
+    )
+    .unwrap();
+    let models = vec!["tiny".to_string()];
+    let load = LoadSpec {
+        clients: 6,
+        requests: 25,
+        think_time: Duration::ZERO,
+        burst: 1,
+    };
+    let reports = loadgen::run_load(&svc, &models, &load, 9).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(r.served, (load.clients * load.requests) as u64);
+    assert!(r.throughput > 0.0);
+    assert!(r.p50 <= r.p95 && r.p95 <= r.p99);
+
+    let m = svc.metrics("tiny").unwrap();
+    let hist = m.occupancy_histogram();
+    let weighted: u64 = hist.iter().enumerate().map(|(k, &c)| (k as u64 + 1) * c).sum();
+    let flat: u64 = hist.iter().sum();
+    assert_eq!(weighted, m.requests.load(Ordering::Relaxed), "occupancy-weighted sum");
+    assert_eq!(flat, m.batches.load(Ordering::Relaxed), "histogram counts batches");
+    assert_eq!(m.latency.count(), m.requests.load(Ordering::Relaxed));
+    assert_eq!(r.batches, flat);
+    // the report is a faithful snapshot of the registry
+    assert_eq!(r.stolen, m.stolen.load(Ordering::Relaxed));
+    svc.shutdown().unwrap();
+}
