@@ -1,0 +1,193 @@
+//! Training-path bench: epoch throughput of the pipelined engine
+//! (`nn::pipeline`, the Sec. III-A FF/BP/UP interleave at full depth)
+//! against the sequential `nn::trainer` loop, on the same nets, data and
+//! batch sizes (batch >= 64). Writes the numbers to `BENCH_train.json`
+//! at the repo root.
+//!
+//! Both sides run exactly one epoch + one small-test evaluation per
+//! iteration, so the comparison is work-for-work: the pipelined side
+//! wins only by overlapping the FF/BP/UP stages of different minibatches
+//! across cores (its kernels are the same batch-parallel CSR kernels the
+//! sequential loop uses, with the kernel-thread budget divided across
+//! stages).
+//!
+//!     cargo bench --bench train_pipeline
+
+use std::collections::BTreeMap;
+
+use pds::data::Spec;
+use pds::nn::pipeline::{PipelineConfig, PipelinedTrainer};
+use pds::nn::sparse::SparseNet;
+use pds::nn::trainer::{self, Network, TrainConfig};
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::bench::bench;
+use pds::util::json::Json;
+use pds::util::parallel;
+use pds::util::rng::Rng;
+
+struct Case {
+    name: &'static str,
+    layers: Vec<usize>,
+    dout: Vec<usize>,
+    batch: usize,
+    n_train: usize,
+}
+
+fn run_case(case: &Case) -> Json {
+    let l = case.layers.len() - 1;
+    let netc = NetConfig::new(case.layers.clone());
+    let mut prng = Rng::new(7);
+    let pattern = generate(
+        Method::ClashFree,
+        &netc,
+        &DoutConfig(case.dout.clone()),
+        None,
+        &mut prng,
+    );
+    let spec = Spec {
+        name: "train-bench",
+        features: case.layers[0],
+        classes: *case.layers.last().unwrap(),
+        latent_dim: (case.layers[0] / 4).clamp(4, 64),
+        shaping: pds::data::Shaping::Continuous,
+        separation: 2.5,
+        noise: 0.5,
+    };
+    let splits = spec.splits(case.n_train, 0, 64, 21);
+
+    // sequential baseline: the nn::trainer epoch loop
+    let mut init_rng = Rng::new(9);
+    let snet = SparseNet::init_he(&pattern, 0.1, &mut init_rng);
+    let mut seq_net = Network::Sparse(snet);
+    let seq_cfg = TrainConfig {
+        epochs: 1,
+        batch: case.batch,
+        seed: 9,
+        ..Default::default()
+    };
+    let r_seq = bench(
+        &format!("{} sequential epoch (batch {})", case.name, case.batch),
+        1,
+        5,
+        || {
+            std::hint::black_box(trainer::train(
+                &mut seq_net,
+                &splits.train,
+                &splits.test,
+                &seq_cfg,
+            ));
+        },
+    );
+    r_seq.report_throughput("samples", case.n_train as f64);
+
+    // pipelined engine at full depth (2L minibatches in flight)
+    let mut pipe = PipelinedTrainer::from_pattern(
+        &case.layers,
+        &pattern,
+        &PipelineConfig {
+            epochs: 1,
+            batch: case.batch,
+            depth: 0,
+            seed: 9,
+            tune_kernel_threads: true,
+            ..Default::default()
+        },
+    )
+    .expect("pipelined trainer");
+    let depth = pipe.depth();
+    let r_pipe = bench(
+        &format!("{} pipelined epoch (depth {depth})", case.name),
+        1,
+        5,
+        || {
+            std::hint::black_box(pipe.train(&splits.train, &splits.test).unwrap());
+        },
+    );
+    r_pipe.report_throughput("samples", case.n_train as f64);
+    pipe.audit_banked().expect("banked audit after the run");
+
+    let speedup = r_seq.median.as_secs_f64() / r_pipe.median.as_secs_f64().max(1e-12);
+    println!(
+        "{}: pipelined {speedup:.2}X over sequential epochs (L = {l}, \
+         steady ops/cycle = {})\n",
+        case.name,
+        3 * l - 1
+    );
+
+    let mut obj = BTreeMap::new();
+    obj.insert("name".to_string(), Json::Str(case.name.to_string()));
+    obj.insert(
+        "layers".to_string(),
+        Json::Arr(case.layers.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    obj.insert("l".to_string(), Json::Num(l as f64));
+    obj.insert("batch".to_string(), Json::Num(case.batch as f64));
+    obj.insert("depth".to_string(), Json::Num(depth as f64));
+    obj.insert(
+        "samples_per_epoch".to_string(),
+        Json::Num(case.n_train as f64),
+    );
+    obj.insert(
+        "seq_epoch_ms".to_string(),
+        Json::Num(r_seq.median.as_secs_f64() * 1e3),
+    );
+    obj.insert(
+        "pipe_epoch_ms".to_string(),
+        Json::Num(r_pipe.median.as_secs_f64() * 1e3),
+    );
+    obj.insert("speedup".to_string(), Json::Num(speedup));
+    Json::Obj(obj)
+}
+
+fn main() {
+    let cores = parallel::machine_threads();
+    println!("train_pipeline bench: {cores} kernel threads available\n");
+    let cases = [
+        Case {
+            name: "timit L=2",
+            layers: vec![39, 390, 39],
+            dout: vec![90, 9],
+            batch: 128,
+            n_train: 1024,
+        },
+        Case {
+            name: "mnist L=4",
+            layers: vec![800, 100, 100, 100, 10],
+            dout: vec![20, 20, 20, 10],
+            batch: 256,
+            n_train: 2048,
+        },
+    ];
+    let mut results = Vec::new();
+    let mut max_speedup = 0f64;
+    for case in &cases {
+        let json = run_case(case);
+        if let Some(s) = json.get("speedup").and_then(|v| v.as_f64()) {
+            max_speedup = max_speedup.max(s);
+        }
+        results.push(json);
+    }
+    if cores >= 4 && max_speedup < 1.5 {
+        eprintln!(
+            "WARNING: best pipelined speedup {max_speedup:.2}X is below the 1.5X \
+             acceptance target on {cores} cores"
+        );
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("train_pipeline".to_string()));
+    root.insert("recorded".to_string(), Json::Bool(true));
+    root.insert(
+        "kernel_threads_total".to_string(),
+        Json::Num(cores as f64),
+    );
+    root.insert("cases".to_string(), Json::Arr(results));
+    root.insert("max_speedup".to_string(), Json::Num(max_speedup));
+    root.insert("target_speedup".to_string(), Json::Num(1.5));
+    let doc = Json::Obj(root);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
+    match std::fs::write(out, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("train_pipeline: cannot write {out}: {e}"),
+    }
+}

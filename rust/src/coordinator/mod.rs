@@ -7,7 +7,10 @@
 //! L3 is the surrounding machine:
 //!
 //! - [`trainer`] — session/state management for training: parameters,
-//!   Adam state and masks live host-side between fused train steps.
+//!   Adam state and masks live host-side between fused train steps
+//!   ([`TrainSession`]), plus the streaming pipelined session
+//!   ([`PipelinedTrainSession`]) that runs the paper's Sec. III-A
+//!   FF/BP/UP interleave on the native backend.
 //! - [`server`] — the multi-worker, multi-model sharded inference
 //!   service: per-worker engines, depth-balanced bounded request shards
 //!   with work stealing, dynamic batching into the fixed-batch compiled
@@ -24,4 +27,4 @@ pub use server::{
     Client, InferenceServer, InferenceService, LatencyHistogram, ModelMetrics, ModelSpec,
     Prediction, ServeError, ServerConfig,
 };
-pub use trainer::{TrainSession, TrainStepOut};
+pub use trainer::{PipelinedTrainSession, TrainSession, TrainStepOut};

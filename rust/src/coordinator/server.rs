@@ -475,6 +475,21 @@ impl ModelSpec {
 /// The multi-worker, multi-model inference service. See the module docs
 /// for the architecture; [`InferenceServer`] is the single-model
 /// convenience wrapper.
+///
+/// ```
+/// use pds::coordinator::loadgen::model_spec;
+/// use pds::coordinator::{InferenceService, ServerConfig};
+///
+/// // a ~25%-density clash-free model over the built-in `tiny` config
+/// let spec = model_spec("/nonexistent/dir", "tiny", 0.25, 7).unwrap();
+/// let svc = InferenceService::start("/nonexistent/dir", vec![spec], ServerConfig::default())
+///     .unwrap();
+/// let client = svc.client("tiny").unwrap();
+/// let pred = client.classify(vec![0.0; client.features()]).unwrap();
+/// assert!(pred.class < client.classes());
+/// assert_eq!(svc.metrics("tiny").unwrap().batches.load(std::sync::atomic::Ordering::Relaxed), 1);
+/// svc.shutdown().unwrap();
+/// ```
 pub struct InferenceService {
     models: BTreeMap<String, Arc<ModelCore>>,
     workers: Vec<JoinHandle<Result<()>>>,

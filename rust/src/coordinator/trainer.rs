@@ -1,15 +1,26 @@
-//! Training session over the runtime's fused `train` program.
+//! Training sessions: the fused sequential path and the streaming
+//! pipelined path, both config-validated against the runtime manifest.
 //!
-//! Host state (weights, biases, Adam moments, masks, step counter) is
+//! [`TrainSession`] drives the runtime's fused `train` program: host
+//! state (weights, biases, Adam moments, masks, step counter) is
 //! initialized in Rust, fed to the loaded train-step positionally per
 //! the manifest, and replaced by the returned updated tensors — the
-//! classic leader/state-manager loop, with the whole fwd/bwd/update fused
-//! into a single backend execution (batch-parallel on the native
-//! backend).
+//! classic leader/state-manager loop, with the whole fwd/bwd/update
+//! fused into a single backend execution (batch-parallel on the native
+//! backend). It works on every backend, PJRT included.
+//!
+//! [`PipelinedTrainSession`] instead streams minibatches through the
+//! paper's Sec. III-A junction pipeline
+//! ([`crate::nn::pipeline::PipelinedTrainer`] via
+//! [`Engine::train_pipelined`]): junction i runs FF on batch `t` while
+//! junction i-1 runs BP/UP on batch `t-1`, with bounded, measured weight
+//! staleness. Native backend only — a fused artifact cannot be split
+//! into per-junction stages.
 
 use anyhow::{bail, Result};
 
 use crate::data::Dataset;
+use crate::nn::pipeline::{PipelineConfig, PipelineMetrics, PipelinedTrainer};
 use crate::runtime::{Engine, Program, Value};
 use crate::sparsity::pattern::NetPattern;
 use crate::util::rng::Rng;
@@ -17,13 +28,17 @@ use crate::util::rng::Rng;
 /// Per-step outputs.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainStepOut {
+    /// Mean cross-entropy loss of the minibatch.
     pub loss: f32,
+    /// Correct argmax predictions in the minibatch.
     pub correct: usize,
 }
 
 /// Training state bound to one artifact config.
 pub struct TrainSession {
+    /// Neuronal configuration `[N_0, ..., N_L]` of the config.
     pub layers: Vec<usize>,
+    /// Batch size the artifact was compiled/synthesized for.
     pub batch: usize,
     train_prog: Program,
     forward_prog: Program,
@@ -33,7 +48,9 @@ pub struct TrainSession {
     opt_v: Vec<Value>,
     masks: Vec<Value>,
     t: f32,
+    /// Learning rate fed to the train step each call.
     pub lr: f32,
+    /// L2 penalty coefficient fed to the train step each call.
     pub l2: f32,
 }
 
@@ -103,6 +120,7 @@ impl TrainSession {
         })
     }
 
+    /// Number of fused train steps executed so far.
     pub fn step_count(&self) -> usize {
         (self.t - 1.0) as usize
     }
@@ -226,5 +244,70 @@ impl TrainSession {
             }
         }
         Ok(())
+    }
+}
+
+/// Streaming pipelined training session bound to one artifact config:
+/// the Sec. III-A FF/BP/UP interleave over real minibatches, with the
+/// dataset/epoch glue of [`TrainSession`]. Built by
+/// [`PipelinedTrainSession::new`] over [`Engine::train_pipelined`]
+/// (native backend only).
+pub struct PipelinedTrainSession {
+    /// Neuronal configuration `[N_0, ..., N_L]` of the config.
+    pub layers: Vec<usize>,
+    /// Minibatch size each pipeline input carries.
+    pub batch: usize,
+    trainer: PipelinedTrainer,
+}
+
+impl PipelinedTrainSession {
+    /// Validate `pattern` against `config`'s layers and build the
+    /// pipelined engine. `cfg.batch = 0` adopts the config's batch size
+    /// (the native pipeline is not shape-compiled, so any batch works).
+    pub fn new(
+        engine: &Engine,
+        config: &str,
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+    ) -> Result<Self> {
+        let entry = engine
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow::anyhow!("no config {config}"))?;
+        let layers = entry.layers.clone();
+        let mut cfg = cfg.clone();
+        if cfg.batch == 0 {
+            cfg.batch = entry.batch;
+        }
+        let batch = cfg.batch;
+        let trainer = engine.train_pipelined(config, pattern, &cfg)?;
+        Ok(PipelinedTrainSession {
+            layers,
+            batch,
+            trainer,
+        })
+    }
+
+    /// One epoch over `ds` (shuffled with `rng`); returns (mean train
+    /// loss, train accuracy).
+    pub fn epoch(&mut self, ds: &Dataset, rng: &mut Rng) -> Result<(f32, f64)> {
+        self.trainer.epoch(ds, rng)
+    }
+
+    /// Chunked test accuracy over a dataset.
+    pub fn evaluate(&self, ds: &Dataset) -> f64 {
+        self.trainer.evaluate(ds)
+    }
+
+    /// The underlying pipelined engine (staleness probes, banked z_net,
+    /// schedule metrics).
+    pub fn trainer(&self) -> &PipelinedTrainer {
+        &self.trainer
+    }
+
+    /// Execution counters of the runs so far.
+    pub fn metrics(&self) -> &PipelineMetrics {
+        &self.trainer.metrics
     }
 }

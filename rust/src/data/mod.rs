@@ -13,18 +13,26 @@ use crate::util::rng::Rng;
 /// A labelled dataset: row-major features `[n, features]`, integer labels.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Features, row-major `[n, features]`.
     pub x: Vec<f32>,
+    /// Integer class labels, one per sample.
     pub y: Vec<i32>,
+    /// Sample count.
     pub n: usize,
+    /// Feature dimension.
     pub features: usize,
+    /// Number of classes.
     pub classes: usize,
 }
 
 /// Train/validation/test split.
 #[derive(Clone, Debug)]
 pub struct Splits {
+    /// Training split.
     pub train: Dataset,
+    /// Validation split.
     pub val: Dataset,
+    /// Test split.
     pub test: Dataset,
 }
 
@@ -45,10 +53,15 @@ pub enum Shaping {
 /// redundancy (`features >> latent_dim` = high redundancy).
 #[derive(Clone, Debug)]
 pub struct Spec {
+    /// Label used in experiment printouts.
     pub name: &'static str,
+    /// Feature dimension of generated samples.
     pub features: usize,
+    /// Number of classes.
     pub classes: usize,
+    /// Dimension of the class-conditional latent.
     pub latent_dim: usize,
+    /// Per-dataset feature shaping.
     pub shaping: Shaping,
     /// Class-center separation relative to within-class noise; larger is
     /// an easier problem.

@@ -16,14 +16,20 @@ use crate::util::{ci90, mean};
 /// here: synthetic surrogates at a single-core budget).
 #[derive(Clone, Copy, Debug)]
 pub struct Scale {
+    /// Training samples per run.
     pub n_train: usize,
+    /// Test samples per run.
     pub n_test: usize,
+    /// Epochs per run.
     pub epochs: usize,
+    /// Minibatch size.
     pub batch: usize,
+    /// Repeats per reported number (for the 90% CIs).
     pub repeats: usize,
 }
 
 impl Scale {
+    /// Default experiment scale (what `pds exp` runs without `--quick`).
     pub fn standard() -> Scale {
         Scale {
             n_train: 1000,
@@ -79,6 +85,7 @@ pub enum Approach {
 }
 
 impl Approach {
+    /// Display name used in the experiment tables.
     pub fn name(&self) -> &'static str {
         match self {
             Approach::ClashFree => "clash-free",

@@ -60,6 +60,7 @@ fn train_fc(layers: &[usize], scale: &Scale, seed: u64) -> DenseNet {
     }
 }
 
+/// Print the Fig. 1 weight histograms and accuracy-vs-density rows.
 pub fn run(scale: &Scale) {
     for layers in [vec![800usize, 100, 10], vec![800, 100, 100, 100, 10]] {
         println!("\nFig. 1 weight histograms — FC N_net = {layers:?} (mnist-like)");

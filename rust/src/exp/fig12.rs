@@ -7,6 +7,7 @@ use crate::data::Spec;
 use crate::sparsity::config::NetConfig;
 use crate::util::{ci90, mean};
 
+/// Print the Fig. 12 comparison (clash-free vs attention vs LSS).
 pub fn run(scale: &Scale) {
     let cases: Vec<(Spec, Vec<usize>)> = vec![
         (Spec::mnist_like(), vec![800, 100, 10]),

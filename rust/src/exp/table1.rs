@@ -8,6 +8,7 @@ use crate::hw::storage::{training_storage, StorageComparison, StorageCost};
 use crate::hw::zconfig;
 use crate::sparsity::config::{DoutConfig, NetConfig};
 
+/// Print the Table-I storage comparison.
 pub fn run(_scale: &Scale) {
     let net = NetConfig::new(vec![800, 100, 10]);
     let dout = DoutConfig(vec![20, 10]);
@@ -39,6 +40,7 @@ pub fn run(_scale: &Scale) {
     );
 }
 
+/// Print the Sec. III-A pipeline accounting (`pds exp pipeline`).
 pub fn run_pipeline(_scale: &Scale) {
     println!("Sec. III-A junction pipelining / operational parallelism");
     for l in [2usize, 4] {

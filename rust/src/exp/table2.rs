@@ -81,10 +81,12 @@ fn blocks(full: bool) -> Vec<Block> {
     out
 }
 
+/// Print the Table-II grid (full corpus set only at standard scale).
 pub fn run(scale: &Scale) {
     run_with(scale, scale.repeats > 2)
 }
 
+/// Print the Table-II grid; `full` includes every corpus block.
 pub fn run_with(scale: &Scale, full: bool) {
     for block in blocks(full) {
         let netc = NetConfig::new(block.layers.clone());

@@ -15,6 +15,7 @@ fn fmt_count(log10: f64, exact: Option<u128>) -> String {
     }
 }
 
+/// Print the Table-III pattern-space and address-storage rows.
 pub fn run(_scale: &Scale) {
     println!("Table III — clash-free pattern spaces, junction (N_l, N_r, d_out, d_in, z) = (12, 12, 2, 2, 4)");
     println!(

@@ -1,0 +1,138 @@
+//! Clash-free banked view of one junction's compacted weight memory
+//! (Fig. 4), shared between the cycle-accurate simulator and the
+//! software pipelined trainer.
+//!
+//! The hardware stores edge `e` (numbered sequentially by right neuron)
+//! in weight memory `e % z` at address `e / z`, and streams one address
+//! row — `z` edges — per clock. Flattened address-major, that layout is
+//! the *identity* permutation over the kernel's edge order: the
+//! `nn::sparse` CSR buffers already hold the weights exactly as the
+//! banked memories would. This module makes that contract executable
+//! rather than implicit: [`BankedWeights`] derives the banked geometry
+//! from a junction's edge count and a z from
+//! [`crate::hw::zconfig::balanced_for_edges`], and [`BankedWeights::audit`]
+//! replays a full junction cycle of FF/BP reads plus UP write-backs
+//! through a real [`crate::hw::memory::Bank`] — so a refactor that broke
+//! the edge order or the port discipline fails the audit instead of
+//! silently diverging from the hardware model.
+
+use crate::hw::memory::{Bank, Clash, Port};
+
+/// Banked geometry of one junction's weight memory: `z` simple
+/// dual-ported memories of `depth` words each, edge `e` at memory
+/// `e % z`, address `e / z` (the Fig. 4 layout).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BankedWeights {
+    /// Parallel weight memories (= edge processors fed per cycle).
+    pub z: usize,
+    /// Words per memory = the junction cycle `C = |W| / z`.
+    pub depth: usize,
+}
+
+impl BankedWeights {
+    /// View over `n_edges` compacted weights with parallelism `z`
+    /// (`z` must divide `n_edges`, the [`crate::hw::zconfig`] contract).
+    pub fn new(n_edges: usize, z: usize) -> Self {
+        assert!(z > 0 && n_edges > 0, "empty banked view");
+        assert!(
+            n_edges % z == 0,
+            "z = {z} does not divide |W| = {n_edges}"
+        );
+        BankedWeights {
+            z,
+            depth: n_edges / z,
+        }
+    }
+
+    /// Total edges the view covers.
+    pub fn n_edges(&self) -> usize {
+        self.z * self.depth
+    }
+
+    /// (memory, address) of edge `e` — the Fig. 4 placement.
+    pub fn location_of(&self, e: usize) -> (usize, usize) {
+        (e % self.z, e / self.z)
+    }
+
+    /// The `z` edges streamed in operation cycle `t` (one per memory).
+    pub fn lanes(&self, t: usize) -> std::ops::Range<usize> {
+        t * self.z..(t + 1) * self.z
+    }
+
+    /// Replay one junction cycle of weight traffic through a real
+    /// [`Bank`] with the hardware's port discipline — every cycle issues
+    /// one read (the shared FF/BP/UP read) and one UP write-back per
+    /// memory, which simple dual porting must absorb clash-free — then
+    /// verify the bank's entity-ordered dump equals `wc`, proving the
+    /// kernel's edge order *is* the banked layout.
+    pub fn audit(&self, wc: &[f32]) -> Result<(), Clash> {
+        if wc.len() != self.n_edges() {
+            return Err(Clash {
+                memory: 0,
+                cycle: 0,
+                what: "weight buffer length does not match the banked geometry",
+            });
+        }
+        let mut bank = Bank::new("W", self.z, self.depth, Port::SimpleDual);
+        bank.load(wc);
+        for t in 0..self.depth {
+            for e in self.lanes(t) {
+                let (m, a) = self.location_of(e);
+                let w = bank.read(m, a)?;
+                // UP writes back through the second port in the same cycle
+                bank.write(m, a, w)?;
+            }
+            bank.tick();
+        }
+        if bank.dump(self.n_edges()) != wc {
+            return Err(Clash {
+                memory: 0,
+                cycle: self.depth,
+                what: "banked dump diverges from the kernel edge order",
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::zconfig::balanced_for_edges;
+
+    #[test]
+    fn layout_matches_fig4_placement() {
+        let b = BankedWeights::new(12, 4);
+        assert_eq!(b.depth, 3);
+        assert_eq!(b.n_edges(), 12);
+        assert_eq!(b.location_of(0), (0, 0));
+        assert_eq!(b.location_of(5), (1, 1));
+        assert_eq!(b.location_of(11), (3, 2));
+        assert_eq!(b.lanes(2), 8..12);
+    }
+
+    #[test]
+    fn audit_passes_for_balanced_views() {
+        // the shapes the pipelined trainer actually derives
+        let edges = [16usize * 20, 100 * 10];
+        let zcfg = balanced_for_edges(&edges, 40);
+        for (&e, &z) in edges.iter().zip(&zcfg.z) {
+            let view = BankedWeights::new(e, z);
+            let wc: Vec<f32> = (0..e).map(|x| x as f32 * 0.5).collect();
+            view.audit(&wc).unwrap();
+        }
+    }
+
+    #[test]
+    fn audit_rejects_wrong_buffer_length() {
+        let view = BankedWeights::new(8, 2);
+        let err = view.audit(&[0.0; 7]).unwrap_err();
+        assert!(err.what.contains("length"));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn non_dividing_z_is_rejected() {
+        BankedWeights::new(10, 3);
+    }
+}

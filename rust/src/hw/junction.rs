@@ -30,11 +30,14 @@ use crate::util::ceil_div;
 /// Activation applied by the FF logic as right neurons complete.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Act {
+    /// max(0, h) — hidden junctions.
     Relu,
+    /// Identity — the output junction (softmax lives host-side).
     Linear,
 }
 
 impl Act {
+    /// The activation value a(h).
     pub fn apply(&self, h: f32) -> f32 {
         match self {
             Act::Relu => h.max(0.0),
@@ -42,6 +45,7 @@ impl Act {
         }
     }
 
+    /// The derivative a'(h) stored in the a-dot memories.
     pub fn derivative(&self, h: f32) -> f32 {
         match self {
             Act::Relu => {
@@ -59,11 +63,18 @@ impl Act {
 /// Cycle/access statistics for one operation pass.
 #[derive(Clone, Debug, Default)]
 pub struct OpStats {
+    /// Clock cycles the pass took.
     pub cycles: usize,
+    /// Weight-memory reads issued.
     pub weight_reads: usize,
+    /// Weight-memory writes issued (UP only).
     pub weight_writes: usize,
+    /// Left-bank (activation / a-dot / delta) reads issued.
     pub left_reads: usize,
+    /// Right-bank accesses issued.
     pub right_accesses: usize,
+    /// Most distinct right neurons touched in any one cycle (bounded by
+    /// eq. 9's `z_next`).
     pub max_rights_per_cycle: usize,
 }
 
@@ -71,20 +82,30 @@ pub struct OpStats {
 /// (eq. 2a-2c), plus the pass statistics.
 #[derive(Clone, Debug)]
 pub struct FfOut {
+    /// Pre-activations h (eq. 2a).
     pub h: Vec<f32>,
+    /// Activations a(h) (eq. 2b).
     pub a: Vec<f32>,
+    /// Activation derivatives a'(h) (eq. 2c).
     pub adot: Vec<f32>,
+    /// Cycle/access statistics of the pass.
     pub stats: OpStats,
 }
 
 /// One junction's processing unit: `z` edge processors, the weight bank,
 /// and the clash-free left access schedule.
 pub struct JunctionUnit {
+    /// Left/right layer widths.
     pub shape: JunctionShape,
+    /// In-degree per right neuron.
     pub d_in: usize,
+    /// Out-degree per left neuron.
     pub d_out: usize,
+    /// Edge processors clocked per cycle.
     pub z: usize,
+    /// Right-bank parallelism (eq. 9).
     pub z_next: usize,
+    /// Cycles per operation pass: `|W| / z`.
     pub junction_cycle: usize,
     sched: AccessSchedule,
     weights: Bank,

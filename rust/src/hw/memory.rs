@@ -9,13 +9,16 @@
 /// simple dual-ported; a and a-dot memories are single-ported).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Port {
+    /// One access of any kind per cycle (a / a-dot memories).
     Single,
+    /// One read + one write may share a cycle (weight / delta memories).
     SimpleDual,
 }
 
 /// One memory (a BRAM column in Fig. 2b / Fig. 4).
 #[derive(Clone, Debug)]
 pub struct Memory {
+    /// The memory's port discipline.
     pub port: Port,
     data: Vec<f32>,
     reads_this_cycle: usize,
@@ -25,8 +28,11 @@ pub struct Memory {
 /// Error raised when an access pattern violates the port discipline.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Clash {
+    /// Index of the memory within its bank.
     pub memory: usize,
+    /// Cycle at which the clash occurred.
     pub cycle: usize,
+    /// What discipline was violated.
     pub what: &'static str,
 }
 
@@ -37,6 +43,7 @@ impl std::fmt::Display for Clash {
 }
 
 impl Memory {
+    /// A zeroed memory of `depth` words with the given port discipline.
     pub fn new(depth: usize, port: Port) -> Self {
         Self {
             port,
@@ -46,6 +53,7 @@ impl Memory {
         }
     }
 
+    /// Words the memory holds.
     pub fn depth(&self) -> usize {
         self.data.len()
     }
@@ -79,16 +87,21 @@ impl Memory {
 /// Tracks the cycle counter and enforces clash-freedom on every access.
 #[derive(Clone, Debug)]
 pub struct Bank {
+    /// Label used in diagnostics (`"W"`, `"a"`, `"d"`...).
     pub name: &'static str,
     mems: Vec<Memory>,
     cycle: usize,
+    /// Reads issued across all cycles.
     pub total_reads: usize,
+    /// Writes issued across all cycles.
     pub total_writes: usize,
+    /// Most accesses observed in any completed cycle.
     pub max_accesses_in_cycle: usize,
     accesses_this_cycle: usize,
 }
 
 impl Bank {
+    /// A bank of `z` zeroed memories, each `depth` words.
     pub fn new(name: &'static str, z: usize, depth: usize, port: Port) -> Self {
         Self {
             name,
@@ -101,14 +114,17 @@ impl Bank {
         }
     }
 
+    /// Memories in the bank (the degree of parallelism).
     pub fn z(&self) -> usize {
         self.mems.len()
     }
 
+    /// Words per memory.
     pub fn depth(&self) -> usize {
         self.mems[0].depth()
     }
 
+    /// Current clock cycle.
     pub fn cycle(&self) -> usize {
         self.cycle
     }
@@ -124,6 +140,7 @@ impl Bank {
         self.cycle += 1;
     }
 
+    /// Read `addr` of memory `mem` this cycle (clash-checked).
     pub fn read(&mut self, mem: usize, addr: usize) -> Result<f32, Clash> {
         let m = &mut self.mems[mem];
         m.check_read().map_err(|what| Clash {
@@ -137,6 +154,7 @@ impl Bank {
         Ok(m.data[addr])
     }
 
+    /// Write `v` to `addr` of memory `mem` this cycle (clash-checked).
     pub fn write(&mut self, mem: usize, addr: usize, v: f32) -> Result<(), Clash> {
         let m = &mut self.mems[mem];
         m.check_write().map_err(|what| Clash {
@@ -157,15 +175,18 @@ impl Bank {
     // sequentially-numbered edges).
     // ------------------------------------------------------------------
 
+    /// (memory, address) of entity `n` in the Fig. 4 layout.
     pub fn location_of(&self, n: usize) -> (usize, usize) {
         (n % self.z(), n / self.z())
     }
 
+    /// Read entity `n` through its Fig. 4 location.
     pub fn read_entity(&mut self, n: usize) -> Result<f32, Clash> {
         let (m, a) = self.location_of(n);
         self.read(m, a)
     }
 
+    /// Write entity `n` through its Fig. 4 location.
     pub fn write_entity(&mut self, n: usize, v: f32) -> Result<(), Clash> {
         let (m, a) = self.location_of(n);
         self.write(m, a, v)

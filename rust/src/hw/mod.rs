@@ -4,6 +4,9 @@
 //!
 //! - [`memory`]: single/dual-port memories and banks with per-cycle clash
 //!   detection (footnote 6's definition of a clash),
+//! - [`banked`]: the Fig. 4 banked weight-memory geometry as an auditable
+//!   view — shared with the software pipelined trainer (`nn::pipeline`),
+//!   which replays its weight traffic through it,
 //! - [`zconfig`]: degree-of-parallelism selection, the `C_i = |W_i|/z_i = C`
 //!   balance rule and the eq. (9) stall-freedom constraint,
 //! - [`junction`]: numeric FF / BP / UP execution of one junction against
@@ -12,6 +15,7 @@
 //!   parallelism (Fig. 2c), throughput/latency/staleness accounting,
 //! - [`storage`]: the Table-I storage cost model.
 
+pub mod banked;
 pub mod junction;
 pub mod memory;
 pub mod pipeline;

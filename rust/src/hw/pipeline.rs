@@ -18,12 +18,16 @@ use std::collections::BTreeMap;
 /// One operation slot in the pipeline timetable.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Op {
+    /// Feedforward (eq. 2).
     Ff,
+    /// Backpropagation of deltas (eq. 3).
     Bp,
+    /// Weight/bias update (eq. 4).
     Up,
 }
 
 impl Op {
+    /// Short display name ("FF" / "BP" / "UP").
     pub fn name(&self) -> &'static str {
         match self {
             Op::Ff => "FF",
@@ -36,6 +40,7 @@ impl Op {
 /// The pipeline schedule for an L-junction network.
 #[derive(Clone, Debug)]
 pub struct Pipeline {
+    /// Number of junctions L.
     pub l: usize,
 }
 
@@ -44,6 +49,7 @@ pub struct Pipeline {
 pub type Slot = (usize, Op, i64);
 
 impl Pipeline {
+    /// Schedule for an `l`-junction network (`l >= 1`).
     pub fn new(l: usize) -> Self {
         assert!(l >= 1);
         Pipeline { l }

@@ -13,14 +13,20 @@ use crate::sparsity::config::{DoutConfig, NetConfig};
 /// Word counts per parameter type for a network + out-degree config.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StorageCost {
+    /// Queued activation banks (`a`).
     pub activations: usize,
+    /// Queued activation-derivative banks (`a-dot`).
     pub act_derivatives: usize,
+    /// Delta banks (`d`).
     pub deltas: usize,
+    /// Bias words (`b`).
     pub biases: usize,
+    /// Weight words (`W` — the only banks pre-defined sparsity shrinks).
     pub weights: usize,
 }
 
 impl StorageCost {
+    /// Total words across every parameter type.
     pub fn total(&self) -> usize {
         self.activations + self.act_derivatives + self.deltas + self.biases + self.weights
     }
@@ -59,11 +65,14 @@ pub fn training_storage(net: &NetConfig, dout: &DoutConfig) -> StorageCost {
 
 /// The Table-I comparison row: FC vs a sparse out-degree config.
 pub struct StorageComparison {
+    /// Training-mode storage of the fully-connected network.
     pub fc: StorageCost,
+    /// Training-mode storage at the sparse out-degrees.
     pub sparse: StorageCost,
 }
 
 impl StorageComparison {
+    /// Compare FC against `dout` for the same neuronal configuration.
     pub fn new(net: &NetConfig, dout: &DoutConfig) -> Self {
         StorageComparison {
             fc: training_storage(net, &net.fc_dout()),

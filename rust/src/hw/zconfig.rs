@@ -11,6 +11,8 @@ use crate::util::ceil_div;
 /// A validated degree-of-parallelism configuration.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ZConfig {
+    /// Degree of parallelism per junction (edge processors clocked each
+    /// cycle).
     pub z: Vec<usize>,
     /// Junction cycle C = max_i |W_i|/z_i: the pipeline advances at the
     /// pace of the slowest junction; faster junctions idle (the paper's
@@ -37,10 +39,17 @@ impl ZConfig {
 /// Why a z_net is rejected.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ZConfigError {
+    /// z_net length differs from the junction count.
     WrongLength { got: usize, want: usize },
+    /// `z_i` does not divide the junction's edge count `|W_i|`.
     NotDividing { junction: usize, edges: usize, z: usize },
+    /// `z_i` does not divide `N_{i-1}` (the Appendix B memory-depth rule).
     DepthNotIntegral { junction: usize, n_left: usize, z: usize },
+    /// Junction cycles `C_i` are not all equal (only raised by
+    /// [`validate_strict`]).
     Unbalanced { cycles: Vec<usize> },
+    /// `z_{i+1}` cannot absorb junction i's right-neuron completion rate
+    /// (eq. 9).
     RightBankOverrun { junction: usize, need: usize, have: usize },
 }
 
@@ -112,6 +121,40 @@ pub fn validate(
         cycles,
         balanced,
     })
+}
+
+/// Nearest-balanced z_net for raw per-junction edge counts.
+///
+/// The [`validate`]/[`derive`] pair works from a `(NetConfig, DoutConfig)`
+/// pair, i.e. uniform in-degrees. The software pipelined trainer
+/// (`nn::pipeline`) instead starts from a *generated* pattern whose edge
+/// counts are whatever the pattern produced, so this helper picks, per
+/// junction, the largest operation-cycle count `C_i = |W_i| / z_i` that
+/// divides `|W_i|` while not exceeding `c_target` — giving near-equal
+/// stage times (the Sec. III-A balance rule) with exact division
+/// guaranteed. The returned [`ZConfig`] reports whether perfect balance
+/// was achieved.
+pub fn balanced_for_edges(edges: &[usize], c_target: usize) -> ZConfig {
+    assert!(!edges.is_empty() && edges.iter().all(|&e| e > 0), "empty junction");
+    let c_target = c_target.max(1);
+    let mut z = Vec::with_capacity(edges.len());
+    let mut cycles = Vec::with_capacity(edges.len());
+    for &e in edges {
+        let mut c = c_target.min(e);
+        while e % c != 0 {
+            c -= 1;
+        }
+        z.push(e / c);
+        cycles.push(c);
+    }
+    let junction_cycle = *cycles.iter().max().unwrap();
+    let balanced = cycles.iter().all(|&c| c == junction_cycle);
+    ZConfig {
+        z,
+        junction_cycle,
+        cycles,
+        balanced,
+    }
 }
 
 /// Like [`validate`] but additionally requires perfectly balanced junction
@@ -289,6 +332,30 @@ mod tests {
             // paper configs are nearly balanced: < 20% idle
             assert!(cfg.idle_fraction() < 0.20, "{layers:?}: idle {}", cfg.idle_fraction());
         }
+    }
+
+    #[test]
+    fn balanced_for_edges_divides_exactly_and_balances() {
+        // equal edge counts balance perfectly at any target
+        let cfg = balanced_for_edges(&[3510, 3510], 110);
+        assert!(cfg.balanced);
+        assert_eq!(cfg.cycles, vec![90, 90]);
+        assert_eq!(cfg.z, vec![39, 39]);
+        for (z, e) in cfg.z.iter().zip([3510usize, 3510]) {
+            assert_eq!(e % z, 0);
+        }
+        // uneven counts: every cycle count divides its edges and stays
+        // within the target
+        let cfg = balanced_for_edges(&[16000, 1000, 7], 100);
+        for ((&z, &c), &e) in cfg.z.iter().zip(&cfg.cycles).zip(&[16000usize, 1000, 7]) {
+            assert_eq!(z * c, e);
+            assert!(c <= 100);
+        }
+        assert_eq!(cfg.junction_cycle, *cfg.cycles.iter().max().unwrap());
+        // degenerate target clamps to 1 cycle
+        let cfg = balanced_for_edges(&[12], 0);
+        assert_eq!(cfg.cycles, vec![1]);
+        assert_eq!(cfg.z, vec![12]);
     }
 
     #[test]

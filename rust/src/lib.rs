@@ -15,16 +15,21 @@
 //! |---|---|---|
 //! | [`sparsity`] | Sec. II, III-C, App. A/C | density math, clash-free / structured / random pattern generators, audits |
 //! | [`hw`] | Sec. III, Table I | cycle-accurate junction/pipeline simulator, banked memories, storage model |
-//! | [`nn`] | Sec. II eq. 2–4 | reference dense + CSR compacted kernels (batch-parallel), Adam trainers |
-//! | [`runtime`] | — | backend-agnostic [`runtime::Engine`] facade: native or PJRT execution of the manifest programs |
-//! | [`coordinator`] | Sec. III (scale-out analogue) | training sessions; the multi-worker sharded inference service + load generator |
+//! | [`nn`] | Sec. II eq. 2–4, Sec. III-A/D | reference dense + CSR compacted kernels (batch-parallel), Adam trainers, and the pipelined training engine ([`nn::pipeline`]) executing the FF/BP/UP interleave |
+//! | [`runtime`] | — | backend-agnostic [`runtime::Engine`] facade: native or PJRT execution of the manifest programs, plus the native-only streaming `train_pipelined` path |
+//! | [`coordinator`] | Sec. III (scale-out analogue) | training sessions (fused + pipelined); the multi-worker sharded inference service + load generator |
 //! | [`data`] | Sec. IV | synthetic class-conditional surrogates for MNIST / Reuters / TIMIT / CIFAR |
 //! | [`exp`] | Sec. IV figures/tables | the paper's experiment harnesses (`pds exp <id>`) |
 //! | [`util`] | — | in-tree rng / json / bench / property-test / fork-join replacements |
 //!
-//! See `DESIGN.md` (next to this crate) for the system inventory and the
-//! performance notes, and the top-level `README.md` for a quickstart.
+//! See `ARCHITECTURE.md` (next to this crate) for the paper-figure →
+//! module map and the pipeline timing diagram, `DESIGN.md` for the
+//! system inventory and the performance notes, and the top-level
+//! `README.md` for a quickstart.
 
+// every public item is documented; CI builds rustdoc with -D warnings,
+// so this keeps the crate-wide documentation contract enforced
+#![warn(missing_docs)]
 // numerics code: index-based loops over multiple parallel buffers are the
 // clearest expression of the paper's equations
 #![allow(clippy::needless_range_loop)]

@@ -3,12 +3,18 @@
 //! python/compile/model.py::adam_step exactly (cross-checked in the
 //! runtime integration tests).
 
+/// Optimizer hyperparameters (defaults = the paper's configuration).
 #[derive(Clone, Copy, Debug)]
 pub struct AdamConfig {
+    /// Base learning rate.
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator stabilizer.
     pub eps: f32,
+    /// Learning-rate decay: effective lr at step t is `lr / (1 + decay*(t-1))`.
     pub decay: f32,
 }
 
@@ -27,11 +33,14 @@ impl Default for AdamConfig {
 /// First/second-moment state for one parameter tensor.
 #[derive(Clone, Debug)]
 pub struct AdamState {
+    /// First-moment (mean) accumulator per parameter.
     pub m: Vec<f32>,
+    /// Second-moment (uncentered variance) accumulator per parameter.
     pub v: Vec<f32>,
 }
 
 impl AdamState {
+    /// Fresh zeroed state for an `n`-element parameter tensor.
     pub fn zeros(n: usize) -> Self {
         AdamState {
             m: vec![0.0; n],
@@ -59,12 +68,16 @@ impl AdamState {
 /// Per-junction optimizer over (weight, bias) tensor pairs.
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// Hyperparameters shared by every tensor.
     pub cfg: AdamConfig,
+    /// Step counter (1-based after the first [`Adam::step`]).
     pub t: f32,
+    /// Per-junction (weight, bias) moment states.
     pub states: Vec<(AdamState, AdamState)>,
 }
 
 impl Adam {
+    /// Zeroed optimizer for junctions with `(weight_len, bias_len)` shapes.
     pub fn new(cfg: AdamConfig, shapes: &[(usize, usize)]) -> Self {
         Adam {
             cfg,

@@ -8,11 +8,14 @@
 use super::matrix;
 use crate::util::rng::Rng;
 
+/// Masked-dense MLP state.
 #[derive(Clone, Debug)]
 pub struct DenseNet {
+    /// Neuronal configuration `[N_0, ..., N_L]`.
     pub layers: Vec<usize>,
     /// Weights per junction, row-major [n_right, n_left].
     pub w: Vec<Vec<f32>>,
+    /// Biases per junction.
     pub b: Vec<Vec<f32>>,
     /// 0/1 masks per junction (all-ones = FC).
     pub masks: Vec<Vec<f32>>,
@@ -21,14 +24,19 @@ pub struct DenseNet {
 /// Gradients in the same layout as (w, b).
 #[derive(Clone, Debug)]
 pub struct Grads {
+    /// Weight gradients per junction (masked).
     pub gw: Vec<Vec<f32>>,
+    /// Bias gradients per junction.
     pub gb: Vec<Vec<f32>>,
 }
 
 /// Result of one forward+backward pass.
 pub struct StepOut {
+    /// Mean softmax cross-entropy of the minibatch.
     pub loss: f32,
+    /// Correct argmax predictions in the minibatch.
     pub correct: usize,
+    /// Loss gradients (regularizers included, masks applied).
     pub grads: Grads,
 }
 
@@ -54,6 +62,7 @@ impl DenseNet {
         }
     }
 
+    /// Number of junctions L.
     pub fn n_junctions(&self) -> usize {
         self.layers.len() - 1
     }
@@ -65,6 +74,7 @@ impl DenseNet {
         self.apply_masks();
     }
 
+    /// Re-zero every excluded weight (the pre-defined sparsity contract).
     pub fn apply_masks(&mut self) {
         for (w, m) in self.w.iter_mut().zip(&self.masks) {
             for (wv, &mv) in w.iter_mut().zip(m) {

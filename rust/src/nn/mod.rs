@@ -9,12 +9,17 @@
 //! - [`sparse`]: CSR compacted-edge MLP — compute and storage proportional
 //!   to |W_i|, the software twin of the hardware's edge processing,
 //! - [`adam`]: the Adam optimizer [46] with the paper's decay schedule,
-//! - [`trainer`]: epoch loop, minibatching, metrics, LSS pruning,
-//!   pipeline-staleness emulation (Sec. III-D).
+//! - [`trainer`]: sequential epoch loop, minibatching, metrics, LSS
+//!   pruning, pipeline-staleness emulation (Sec. III-D),
+//! - [`pipeline`]: the pipelined training engine — minibatches stream
+//!   through the Sec. III-A FF/BP/UP interleave with `hw`'s timetable
+//!   and clash-free banked weight views as the executable source of
+//!   truth (sequential-equivalent at depth 1).
 
 pub mod adam;
 pub mod dense;
 pub mod matrix;
+pub mod pipeline;
 pub mod sparse;
 pub mod trainer;
 

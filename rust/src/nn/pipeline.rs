@@ -1,0 +1,718 @@
+//! Software pipelined training engine: the Sec. III-A junction pipeline +
+//! FF/BP/UP operational parallelism executed on real minibatches, with
+//! `hw` as the executable source of truth for the schedule.
+//!
+//! Minibatches stream through the network the way inputs stream through
+//! the paper's Fig. 2c timeline: junction `i` runs FF on batch `t` while
+//! junction `i-1` is still running BP/UP on batch `t-1`. The timetable is
+//! [`crate::hw::pipeline::Pipeline`] itself — `FF_i(n)` at junction cycle
+//! `tau = n·k + i`, `BP_i(n)`/`UP_i(n)` at `tau = n·k + 2L - i + 1` —
+//! generalized by an admission stride `k`: at `k = 1` every junction
+//! cycle admits a new minibatch (the full hardware schedule, up to `2L`
+//! batches in flight and the paper's Sec. III-D weight staleness of
+//! `2(L-i)+1` updates at junction i); at `k = 2L` a batch finishes
+//! completely before the next is admitted, which makes the run
+//! *bit-for-bit identical* to the sequential [`crate::nn::trainer`] loop
+//! (staleness 0). [`PipelineConfig::depth`] picks the point on that line.
+//!
+//! All operations scheduled in one junction cycle are mutually
+//! independent (they touch different in-flight batches, and weight
+//! updates are deferred to the end of the cycle exactly like the
+//! hardware's end-of-cycle write-back), so each cycle fans its
+//! operations out over scoped stage threads; the per-op kernels are the
+//! same batch-parallel [`crate::nn::sparse`] kernels the sequential
+//! trainer uses, with the kernel-thread budget divided by
+//! [`crate::util::parallel::worker_thread_budget`] so stage count ×
+//! kernel threads stays within the machine budget.
+//!
+//! The hardware model does not just *inspire* this engine — it checks it:
+//! construction audits the timetable with
+//! [`crate::hw::pipeline::Pipeline::audit`], every junction's weight
+//! buffer is replayed through the clash-free banked view
+//! ([`crate::hw::banked::BankedWeights`], geometry from
+//! [`crate::hw::zconfig::balanced_for_edges`]), and the run *measures*
+//! its own weight staleness, which tests compare against the closed form
+//! `Pipeline::staleness` / `Pipeline::measured_staleness`.
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::hw::banked::BankedWeights;
+use crate::hw::pipeline::{Op, Pipeline};
+use crate::hw::zconfig::{self, ZConfig};
+use crate::nn::adam::{AdamConfig, AdamState};
+use crate::nn::sparse::SparseNet;
+use crate::nn::trainer::{EpochStat, History};
+use crate::nn::{relu, softmax_ce};
+use crate::sparsity::pattern::NetPattern;
+use crate::util::parallel;
+use crate::util::rng::Rng;
+
+/// Knobs of the pipelined trainer.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Epochs for [`PipelinedTrainer::train`].
+    pub epochs: usize,
+    /// Minibatch size (every batch is one pipeline input).
+    pub batch: usize,
+    /// Maximum minibatches in flight: `1` is sequential-equivalent
+    /// (bit-for-bit the [`crate::nn::trainer`] loop), `2L` (or `0` =
+    /// auto) is the full Fig. 2c schedule with the paper's Sec. III-D
+    /// staleness.
+    pub depth: usize,
+    /// Optimizer configuration (per-junction Adam states, stepped once
+    /// per batch per junction exactly like the sequential trainer).
+    pub adam: AdamConfig,
+    /// L2 penalty coefficient.
+    pub l2: f32,
+    /// Seed for parameter init and the epoch shuffles.
+    pub seed: u64,
+    /// Parallelism of the largest junction's banked weight view
+    /// (`0` = auto); shapes the audited [`ZConfig`], not the arithmetic.
+    pub z0: usize,
+    /// Divide the machine's kernel-thread budget by the steady-state
+    /// stage count for the duration of each run (restored afterwards,
+    /// even on panic). Off by default so tests don't touch the global
+    /// override.
+    pub tune_kernel_threads: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            epochs: 12,
+            batch: 64,
+            depth: 0,
+            adam: AdamConfig::default(),
+            l2: 1e-4,
+            seed: 0,
+            z0: 0,
+            tune_kernel_threads: false,
+        }
+    }
+}
+
+/// Execution counters of the pipelined runs so far.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMetrics {
+    /// Junction cycles executed.
+    pub taus: u64,
+    /// FF/BP/UP operations executed.
+    pub ops: u64,
+    /// Most operations co-scheduled in one junction cycle (steady state
+    /// reaches `3L - 1` at full depth).
+    pub max_ops_in_tau: usize,
+    /// Minibatches retired.
+    pub flights: u64,
+}
+
+/// One in-flight minibatch and its queued per-layer state (the software
+/// analogue of the Table-I activation / a-dot / delta bank queues).
+struct Flight {
+    x: Vec<f32>,
+    y: Vec<i32>,
+    batch: usize,
+    /// `acts[j]` = activations out of junction j+1 (logits for the last).
+    acts: Vec<Option<Vec<f32>>>,
+    /// `pre[j]` = pre-activations of junction j+1.
+    pre: Vec<Option<Vec<f32>>>,
+    /// `delta[j]` = loss gradient at layer j+1.
+    delta: Vec<Option<Vec<f32>>>,
+    /// Weight version each junction's FF read (staleness probe).
+    ff_version: Vec<u64>,
+    loss: f32,
+    correct: usize,
+}
+
+impl Flight {
+    fn new(x: Vec<f32>, y: Vec<i32>, l: usize) -> Flight {
+        let batch = y.len();
+        Flight {
+            x,
+            y,
+            batch,
+            acts: vec![None; l],
+            pre: vec![None; l],
+            delta: vec![None; l],
+            ff_version: vec![0; l],
+            loss: 0.0,
+            correct: 0,
+        }
+    }
+
+    /// UP_1 was the last operation of this input: drop the queued state.
+    fn retire(&mut self) {
+        self.x = Vec::new();
+        self.y = Vec::new();
+        for slot in self.acts.iter_mut().chain(&mut self.pre).chain(&mut self.delta) {
+            *slot = None;
+        }
+    }
+}
+
+/// What one operation produced; installed after the junction-cycle
+/// barrier (the hardware's end-of-cycle write-back).
+enum OpOut {
+    Ff {
+        pre: Vec<f32>,
+        act: Vec<f32>,
+        /// Loss head, only from the last junction: (mean loss, #correct,
+        /// dlogits).
+        head: Option<(f32, usize, Vec<f32>)>,
+    },
+    Bp {
+        dprev: Vec<f32>,
+    },
+    Up {
+        gwc: Vec<f32>,
+        gb: Vec<f32>,
+    },
+}
+
+/// Steady-state staleness observations for one junction.
+#[derive(Clone, Copy, Debug, Default)]
+struct StalenessProbe {
+    value: Option<usize>,
+    consistent: bool,
+}
+
+/// Restores the kernel-thread override when a pipelined run ends (even
+/// by panic), mirroring the inference service's budget handling.
+struct ThreadBudgetGuard {
+    prev: Option<usize>,
+}
+
+impl ThreadBudgetGuard {
+    fn pin(concurrent_ops: usize, enable: bool) -> ThreadBudgetGuard {
+        if !enable {
+            return ThreadBudgetGuard { prev: None };
+        }
+        let prev = parallel::thread_override();
+        parallel::set_threads(parallel::worker_thread_budget(concurrent_ops.max(1)));
+        ThreadBudgetGuard { prev: Some(prev) }
+    }
+}
+
+impl Drop for ThreadBudgetGuard {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev {
+            parallel::set_threads(prev);
+        }
+    }
+}
+
+/// The pipelined training engine (see the module docs for the schedule).
+pub struct PipelinedTrainer {
+    net: SparseNet,
+    cfg: PipelineConfig,
+    pipe: Pipeline,
+    /// Junction cycles between admitted minibatches (1 = full schedule,
+    /// 2L = sequential-equivalent).
+    stride: usize,
+    /// First input index whose staleness is clamp-free (pipeline full).
+    warmup: usize,
+    opt: Vec<(AdamState, AdamState)>,
+    /// UP count per junction (the weight version counters of Sec. III-D).
+    versions: Vec<u64>,
+    zcfg: ZConfig,
+    banked: Vec<BankedWeights>,
+    probes: Vec<StalenessProbe>,
+    /// Execution counters, cumulative over this trainer's runs.
+    pub metrics: PipelineMetrics,
+}
+
+impl PipelinedTrainer {
+    /// He-initialize a compacted net for `pattern` (seeded from
+    /// `cfg.seed`, the same init the sequential trainer would perform)
+    /// and build the engine. `layers` is the expected neuronal
+    /// configuration; mismatched patterns are rejected.
+    pub fn from_pattern(
+        layers: &[usize],
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+    ) -> Result<PipelinedTrainer> {
+        ensure!(layers.len() >= 2, "need at least input + output layer");
+        ensure!(
+            pattern.junctions.len() == layers.len() - 1,
+            "pattern has {} junctions, net has {}",
+            pattern.junctions.len(),
+            layers.len() - 1
+        );
+        for (i, p) in pattern.junctions.iter().enumerate() {
+            ensure!(
+                p.shape.n_left == layers[i] && p.shape.n_right == layers[i + 1],
+                "pattern junction {i} shape mismatch"
+            );
+        }
+        let mut rng = Rng::new(cfg.seed);
+        let net = SparseNet::init_he(pattern, 0.1, &mut rng);
+        PipelinedTrainer::new(net, cfg.clone())
+    }
+
+    /// Build the engine around an existing compacted net (weights are
+    /// taken as-is; useful for resuming or for parity tests that
+    /// construct the sequential twin from the same init).
+    pub fn new(net: SparseNet, cfg: PipelineConfig) -> Result<PipelinedTrainer> {
+        let l = net.junctions.len();
+        ensure!(l >= 1, "net has no junctions");
+        ensure!(cfg.batch > 0, "batch must be positive");
+        let edges: Vec<usize> = net.junctions.iter().map(|j| j.n_edges()).collect();
+        ensure!(
+            edges.iter().all(|&e| e > 0),
+            "every junction needs at least one edge"
+        );
+        let pipe = Pipeline::new(l);
+        // the timetable itself must satisfy the paper's structural claims
+        pipe.audit((4 * l + 8) as i64)
+            .map_err(|e| anyhow::anyhow!("pipeline schedule audit failed: {e}"))?;
+        let depth = if cfg.depth == 0 { 2 * l } else { cfg.depth.min(2 * l) };
+        let stride = (2 * l).div_ceil(depth);
+        let warmup = (2 * l).div_ceil(stride);
+        // banked weight views: balanced z_net over the actual edge counts
+        let max_e = *edges.iter().max().unwrap();
+        let z0 = if cfg.z0 == 0 { 32 } else { cfg.z0 };
+        let c_target = max_e.div_ceil(z0.clamp(1, max_e));
+        let zcfg = zconfig::balanced_for_edges(&edges, c_target);
+        let banked: Vec<BankedWeights> = edges
+            .iter()
+            .zip(&zcfg.z)
+            .map(|(&e, &z)| BankedWeights::new(e, z))
+            .collect();
+        for (view, junction) in banked.iter().zip(&net.junctions) {
+            view.audit(&junction.wc)
+                .map_err(|e| anyhow::anyhow!("banked weight audit failed: {e}"))?;
+        }
+        let opt = net
+            .junctions
+            .iter()
+            .map(|j| (AdamState::zeros(j.wc.len()), AdamState::zeros(j.bias.len())))
+            .collect();
+        Ok(PipelinedTrainer {
+            probes: vec![StalenessProbe::default(); l],
+            versions: vec![0; l],
+            opt,
+            banked,
+            zcfg,
+            stride,
+            warmup,
+            pipe,
+            net,
+            cfg,
+            metrics: PipelineMetrics::default(),
+        })
+    }
+
+    /// The trained network (weights update in place as batches retire).
+    pub fn net(&self) -> &SparseNet {
+        &self.net
+    }
+
+    /// Junction cycles between admitted minibatches (1 = full Fig. 2c
+    /// schedule, 2L = sequential-equivalent).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Effective minibatches in flight (`ceil(2L / stride)`).
+    pub fn depth(&self) -> usize {
+        (2 * self.pipe.l).div_ceil(self.stride)
+    }
+
+    /// The balanced banked z_net the weight views were derived from.
+    pub fn z_net(&self) -> &ZConfig {
+        &self.zcfg
+    }
+
+    /// Weight staleness the schedule implies at junction `i` (1-based):
+    /// the paper's `2(L-i)+1` divided by the admission stride (0 when
+    /// sequential-equivalent).
+    pub fn expected_staleness(&self, i: usize) -> usize {
+        (2 * (self.pipe.l - i) + 1) / self.stride
+    }
+
+    /// Steady-state weight staleness *measured* during the runs so far at
+    /// junction `i` (1-based): `None` until the pipeline has filled, or
+    /// if the observations were not constant (which would falsify the
+    /// schedule model).
+    pub fn measured_staleness(&self, i: usize) -> Option<usize> {
+        let p = &self.probes[i - 1];
+        if p.consistent {
+            p.value
+        } else {
+            None
+        }
+    }
+
+    /// Re-replay every junction's current weight buffer through its
+    /// clash-free banked view (see [`BankedWeights::audit`]).
+    pub fn audit_banked(&self) -> Result<()> {
+        for (view, junction) in self.banked.iter().zip(&self.net.junctions) {
+            view.audit(&junction.wc)
+                .map_err(|e| anyhow::anyhow!("banked weight audit failed: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// One epoch over `ds`: shuffle with `rng`, chunk into `cfg.batch`
+    /// minibatches (the final partial batch included, like the sequential
+    /// trainer), stream them through the pipeline. Returns (mean train
+    /// loss, train accuracy).
+    pub fn epoch(&mut self, ds: &Dataset, rng: &mut Rng) -> Result<(f32, f64)> {
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        rng.shuffle(&mut order);
+        self.epoch_in_order(ds, &order)
+    }
+
+    fn epoch_in_order(&mut self, ds: &Dataset, order: &[usize]) -> Result<(f32, f64)> {
+        let l = self.net.junctions.len();
+        // eager gather holds one extra copy of the epoch's inputs; only
+        // ~depth flights ever carry live activations (retired flights
+        // free their buffers), so switch to gathering at FF_1 admission
+        // if datasets outgrow the in-repo synthetic scale
+        let flights: Vec<Flight> = order
+            .chunks(self.cfg.batch)
+            .map(|chunk| {
+                let (x, y) = ds.gather(chunk);
+                Flight::new(x, y, l)
+            })
+            .collect();
+        ensure!(!flights.is_empty(), "dataset is empty");
+        let (loss_sum, correct, seen) = self.run_flights(flights);
+        Ok((
+            (loss_sum / seen as f64) as f32,
+            correct as f64 / seen as f64,
+        ))
+    }
+
+    /// Train for `cfg.epochs`, mirroring [`crate::nn::trainer::train`]'s
+    /// shuffle discipline (same seed mix, cumulative order permutation)
+    /// so a depth-1 run reproduces the sequential trainer bit for bit.
+    pub fn train(&mut self, train_ds: &Dataset, test_ds: &Dataset) -> Result<History> {
+        let mut rng = Rng::new(self.cfg.seed ^ 0x7261696e);
+        let mut order: Vec<usize> = (0..train_ds.n).collect();
+        let mut history = History { epochs: Vec::new() };
+        for epoch in 0..self.cfg.epochs {
+            rng.shuffle(&mut order);
+            let (train_loss, train_acc) = self.epoch_in_order(train_ds, &order)?;
+            let test_acc = self.evaluate(test_ds);
+            history.epochs.push(EpochStat {
+                epoch,
+                train_loss,
+                train_acc,
+                test_acc,
+            });
+        }
+        Ok(history)
+    }
+
+    /// Chunked test accuracy — the same evaluation loop as the
+    /// sequential trainer ([`crate::nn::trainer::evaluate_with`]), so
+    /// histories are comparable number for number.
+    pub fn evaluate(&self, ds: &Dataset) -> f64 {
+        crate::nn::trainer::evaluate_with(ds, |x, y| self.net.accuracy(x, y))
+    }
+
+    /// The tau loop: run every junction cycle of the timetable, fanning
+    /// the cycle's operations out over stage threads and applying weight
+    /// updates at the cycle barrier. Returns (loss sum, correct, seen).
+    fn run_flights(&mut self, mut flights: Vec<Flight>) -> (f64, usize, usize) {
+        let l = self.net.junctions.len();
+        let k = self.stride;
+        let nb = flights.len();
+        let mut loss_sum = 0f64;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        if nb == 0 {
+            return (loss_sum, correct, seen);
+        }
+        let concurrent = self.pipe.steady_state_ops().div_ceil(k);
+        let _budget = ThreadBudgetGuard::pin(concurrent, self.cfg.tune_kernel_threads);
+        let last_tau = (nb - 1) * k + 2 * l;
+        let mut ops: Vec<(usize, Op, usize)> = Vec::with_capacity(3 * l);
+        for tau in 1..=last_tau {
+            // assemble this junction cycle from the hw timetable:
+            // FF_i(n) at tau = n*k + i; BP_i/UP_i(n) at tau = n*k + 2L-i+1
+            ops.clear();
+            for i in 1..=l {
+                if tau >= i && (tau - i) % k == 0 {
+                    let n = (tau - i) / k;
+                    if n < nb {
+                        ops.push((i, Op::Ff, n));
+                    }
+                }
+                let off = 2 * l - i + 1;
+                if tau >= off && (tau - off) % k == 0 {
+                    let n = (tau - off) / k;
+                    if n < nb {
+                        if i >= 2 {
+                            ops.push((i, Op::Bp, n));
+                        }
+                        ops.push((i, Op::Up, n));
+                    }
+                }
+            }
+            if ops.is_empty() {
+                continue;
+            }
+            // staleness probe: note the weight version each FF reads
+            for &(i, op, n) in &ops {
+                if op == Op::Ff {
+                    flights[n].ff_version[i - 1] = self.versions[i - 1];
+                }
+            }
+            // all ops in one junction cycle are mutually independent:
+            // execute concurrently, reading the cycle-start weights
+            let net = &self.net;
+            let fl: &[Flight] = &flights;
+            let l2 = self.cfg.l2;
+            let results: Vec<OpOut> = if ops.len() == 1 {
+                vec![exec_op(net, fl, l2, l, ops[0])]
+            } else {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = ops[1..]
+                        .iter()
+                        .map(|&op| s.spawn(move || exec_op(net, fl, l2, l, op)))
+                        .collect();
+                    let mut out = Vec::with_capacity(ops.len());
+                    out.push(exec_op(net, fl, l2, l, ops[0]));
+                    for h in handles {
+                        out.push(h.join().expect("pipeline stage panicked"));
+                    }
+                    out
+                })
+            };
+            // cycle barrier: install results, then the deferred UP
+            // write-backs (so FF/BP of this cycle saw pre-update weights,
+            // exactly like the hardware's dual-ported write-back)
+            for (res, &(i, _op, n)) in results.into_iter().zip(&ops) {
+                let j = i - 1;
+                match res {
+                    OpOut::Ff { pre, act, head } => {
+                        let f = &mut flights[n];
+                        f.pre[j] = Some(pre);
+                        f.acts[j] = Some(act);
+                        if let Some((loss, corr, dlogits)) = head {
+                            f.loss = loss;
+                            f.correct = corr;
+                            f.delta[l - 1] = Some(dlogits);
+                        }
+                    }
+                    OpOut::Bp { dprev } => {
+                        flights[n].delta[i - 2] = Some(dprev);
+                    }
+                    OpOut::Up { gwc, gb } => {
+                        if n >= self.warmup {
+                            // the version BP_i(n)/UP_i(n) read this cycle
+                            // minus the version FF_i(n) read = staleness
+                            let s = (self.versions[j] - flights[n].ff_version[j]) as usize;
+                            let probe = &mut self.probes[j];
+                            match probe.value {
+                                None => {
+                                    probe.value = Some(s);
+                                    probe.consistent = true;
+                                }
+                                Some(prev) if prev != s => probe.consistent = false,
+                                Some(_) => {}
+                            }
+                        }
+                        let t = (self.versions[j] + 1) as f32;
+                        let junction = &mut self.net.junctions[j];
+                        let (sw, sb) = &mut self.opt[j];
+                        sw.step(&mut junction.wc, &gwc, t, &self.cfg.adam);
+                        sb.step(&mut junction.bias, &gb, t, &self.cfg.adam);
+                        self.versions[j] += 1;
+                        if i == 1 {
+                            // UP_1 is the last op of input n: retire it
+                            let f = &mut flights[n];
+                            loss_sum += f.loss as f64 * f.batch as f64;
+                            correct += f.correct;
+                            seen += f.batch;
+                            f.retire();
+                            self.metrics.flights += 1;
+                        }
+                    }
+                }
+            }
+            self.metrics.taus += 1;
+            self.metrics.ops += ops.len() as u64;
+            self.metrics.max_ops_in_tau = self.metrics.max_ops_in_tau.max(ops.len());
+        }
+        (loss_sum, correct, seen)
+    }
+}
+
+/// Execute one scheduled operation against the cycle-start state. Reads
+/// only; every write (activations, deltas, weight updates) is installed
+/// at the cycle barrier by the caller.
+fn exec_op(
+    net: &SparseNet,
+    flights: &[Flight],
+    l2: f32,
+    l: usize,
+    (i, op, n): (usize, Op, usize),
+) -> OpOut {
+    let junction = &net.junctions[i - 1];
+    let f = &flights[n];
+    let batch = f.batch;
+    match op {
+        Op::Ff => {
+            let a_in: &[f32] = if i == 1 {
+                &f.x
+            } else {
+                f.acts[i - 2].as_deref().expect("FF input not ready")
+            };
+            let mut h = vec![0f32; batch * junction.n_right];
+            junction.forward(a_in, batch, &mut h);
+            let pre = h.clone();
+            let head = if i == l {
+                // the loss head rides on the last junction's FF slot
+                let (loss, corr, dlogits) = softmax_ce(&h, &f.y, junction.n_right);
+                Some((loss, corr, dlogits))
+            } else {
+                relu(&mut h);
+                None
+            };
+            OpOut::Ff { pre, act: h, head }
+        }
+        Op::Bp => {
+            let d = f.delta[i - 1].as_deref().expect("BP delta not ready");
+            let mut da = vec![0f32; batch * junction.n_left];
+            junction.backprop(d, batch, &mut da);
+            // fold the ReLU derivative of layer i-1 into the handoff
+            let pre_prev = f.pre[i - 2].as_deref().expect("BP pre-activations not ready");
+            for (dv, &hv) in da.iter_mut().zip(pre_prev) {
+                if hv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            OpOut::Bp { dprev: da }
+        }
+        Op::Up => {
+            // eq. (4b) over the *queued* left activations of input n
+            let a_in: &[f32] = if i == 1 {
+                &f.x
+            } else {
+                f.acts[i - 2].as_deref().expect("UP activations not queued")
+            };
+            let d = f.delta[i - 1].as_deref().expect("UP delta not ready");
+            let mut gwc = vec![0f32; junction.wc.len()];
+            let mut gb = vec![0f32; junction.n_right];
+            junction.grads(a_in, d, batch, l2, &mut gwc, &mut gb);
+            OpOut::Up { gwc, gb }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Spec;
+    use crate::sparsity::config::{DoutConfig, NetConfig};
+    use crate::sparsity::{generate, Method};
+
+    fn toy_pattern(layers: &[usize], dout: &[usize], seed: u64) -> NetPattern {
+        let netc = NetConfig::new(layers.to_vec());
+        let mut rng = Rng::new(seed);
+        generate(
+            Method::Structured,
+            &netc,
+            &DoutConfig(dout.to_vec()),
+            None,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn depth_maps_to_stride() {
+        let pattern = toy_pattern(&[12, 10, 6], &[5, 3], 0);
+        let mk = |depth| {
+            PipelinedTrainer::from_pattern(
+                &[12, 10, 6],
+                &pattern,
+                &PipelineConfig {
+                    depth,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        // L = 2: full schedule = 4 in flight
+        assert_eq!(mk(0).stride(), 1);
+        assert_eq!(mk(0).depth(), 4);
+        assert_eq!(mk(1).stride(), 4);
+        assert_eq!(mk(1).depth(), 1);
+        assert_eq!(mk(2).stride(), 2);
+        assert_eq!(mk(99).stride(), 1);
+        // expected staleness: full schedule = paper closed form, depth 1 = 0
+        let full = mk(0);
+        assert_eq!(full.expected_staleness(1), 3);
+        assert_eq!(full.expected_staleness(2), 1);
+        let seq = mk(1);
+        assert_eq!(seq.expected_staleness(1), 0);
+        assert_eq!(seq.expected_staleness(2), 0);
+    }
+
+    #[test]
+    fn single_batch_matches_reference_step_loss() {
+        // one minibatch through the pipeline = one fused reference step
+        let layers = [12usize, 10, 6];
+        let pattern = toy_pattern(&layers, &[5, 3], 1);
+        let mut rng = Rng::new(2);
+        let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+        let mut xr = Rng::new(3);
+        let x: Vec<f32> = (0..8 * 12).map(|_| xr.normal()).collect();
+        let y: Vec<i32> = (0..8).map(|_| xr.below(6) as i32).collect();
+        let reference = snet.step(&x, &y, 8, 1e-4);
+
+        let mut trainer = PipelinedTrainer::new(
+            snet.clone(),
+            PipelineConfig {
+                batch: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let flights = vec![Flight::new(x, y, 2)];
+        let (loss_sum, correct, seen) = trainer.run_flights(flights);
+        assert_eq!(seen, 8);
+        assert_eq!(correct, reference.correct);
+        assert!((loss_sum / 8.0 - reference.loss as f64).abs() < 1e-6);
+        // one update per junction happened
+        assert_eq!(trainer.versions, vec![1, 1]);
+        trainer.audit_banked().unwrap();
+    }
+
+    #[test]
+    fn steady_state_reaches_full_operational_parallelism() {
+        let layers = [12usize, 10, 8, 6];
+        let pattern = toy_pattern(&layers, &[5, 4, 3], 4);
+        let mut trainer = PipelinedTrainer::from_pattern(
+            &layers,
+            &pattern,
+            &PipelineConfig {
+                batch: 4,
+                depth: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let spec = Spec {
+            name: "toy",
+            features: 12,
+            classes: 6,
+            latent_dim: 5,
+            shaping: crate::data::Shaping::Continuous,
+            separation: 2.0,
+            noise: 0.5,
+        };
+        let mut rng = Rng::new(5);
+        let ds = spec.generate(48, &mut rng); // 12 batches >> 2L = 6
+        let mut erng = Rng::new(6);
+        trainer.epoch(&ds, &mut erng).unwrap();
+        // L = 3: steady state co-schedules 3L - 1 = 8 ops per cycle
+        assert_eq!(trainer.metrics.max_ops_in_tau, 8);
+        assert_eq!(trainer.metrics.flights, 12);
+        // every junction saw one update per batch
+        assert_eq!(trainer.versions, vec![12, 12, 12]);
+    }
+}

@@ -18,7 +18,9 @@ use crate::util::rng::Rng;
 /// numbering (row j = right neuron j's in-edges).
 #[derive(Clone, Debug)]
 pub struct SparseLayer {
+    /// Left (input) layer width `N_{i-1}`.
     pub n_left: usize,
+    /// Right (output) layer width `N_i`.
     pub n_right: usize,
     /// CSR row offsets, len n_right + 1 (uniform d_in => `offsets[j] = j*d_in`).
     pub offsets: Vec<u32>,
@@ -26,6 +28,7 @@ pub struct SparseLayer {
     pub idx: Vec<u32>,
     /// Weight per edge (the Fig. 4 weight memory).
     pub wc: Vec<f32>,
+    /// Bias per right neuron.
     pub bias: Vec<f32>,
 }
 
@@ -53,6 +56,7 @@ impl SparseLayer {
         }
     }
 
+    /// Stored edge count `|W_i|`.
     pub fn n_edges(&self) -> usize {
         self.idx.len()
     }
@@ -181,23 +185,32 @@ impl SparseLayer {
 /// Whole-network compacted MLP.
 #[derive(Clone, Debug)]
 pub struct SparseNet {
+    /// Neuronal configuration `[N_0, ..., N_L]`.
     pub layers: Vec<usize>,
+    /// One compacted layer per junction.
     pub junctions: Vec<SparseLayer>,
 }
 
 /// Gradients in the compacted layout.
 pub struct SparseGrads {
+    /// Per-edge weight gradients, per junction.
     pub gwc: Vec<Vec<f32>>,
+    /// Bias gradients per junction.
     pub gb: Vec<Vec<f32>>,
 }
 
+/// Result of one forward+backward pass over the compacted net.
 pub struct SparseStepOut {
+    /// Mean softmax cross-entropy of the minibatch.
     pub loss: f32,
+    /// Correct argmax predictions in the minibatch.
     pub correct: usize,
+    /// Loss gradients in the compacted layout (L2 term included).
     pub grads: SparseGrads,
 }
 
 impl SparseNet {
+    /// He-initialize every junction from `pattern` (constant bias).
     pub fn init_he(pattern: &NetPattern, bias_init: f32, rng: &mut Rng) -> Self {
         let mut layers = vec![pattern.junctions[0].shape.n_left];
         layers.extend(pattern.junctions.iter().map(|p| p.shape.n_right));
@@ -211,10 +224,12 @@ impl SparseNet {
         }
     }
 
+    /// Total stored edges across every junction.
     pub fn n_edges(&self) -> usize {
         self.junctions.iter().map(|j| j.n_edges()).sum()
     }
 
+    /// Inference pass: logits `[batch, N_L]`.
     pub fn logits(&self, x: &[f32], batch: usize) -> Vec<f32> {
         let mut a = x.to_vec();
         let l = self.junctions.len();
@@ -275,6 +290,7 @@ impl SparseNet {
         }
     }
 
+    /// Classification accuracy over one batch.
     pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
         let batch = y.len();
         let classes = *self.layers.last().unwrap();

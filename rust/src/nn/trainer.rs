@@ -13,11 +13,14 @@ use crate::util::rng::Rng;
 /// Either backend: masked-dense (FC / LSS) or compacted CSR (pre-defined
 /// sparse patterns — compute proportional to |W|).
 pub enum Network {
+    /// Masked-dense backend (FC baselines, §V-B LSS).
     Dense(DenseNet),
+    /// Compacted CSR backend (pre-defined sparse patterns).
     Sparse(SparseNet),
 }
 
 impl Network {
+    /// Neuronal configuration `[N_0, ..., N_L]`.
     pub fn layers(&self) -> &[usize] {
         match self {
             Network::Dense(n) => &n.layers,
@@ -25,6 +28,7 @@ impl Network {
         }
     }
 
+    /// Classification accuracy over one batch.
     pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
         match self {
             Network::Dense(n) => n.accuracy(x, y),
@@ -48,18 +52,25 @@ impl Network {
     }
 }
 
+/// Sequential training-loop configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Epochs to run.
     pub epochs: usize,
+    /// Minibatch size (the final partial batch is trained too).
     pub batch: usize,
+    /// Optimizer hyperparameters.
     pub adam: AdamConfig,
     /// L2 penalty coefficient (the paper reduces it with sparsity since
     /// sparse nets overfit less, Sec. IV-A).
     pub l2: f32,
     /// Per-junction L1 penalty gammas: the §V-B LSS objective (dense only).
     pub l1: Option<Vec<f32>>,
+    /// Seed for the epoch shuffles.
     pub seed: u64,
-    /// Emulate the hardware pipeline's delayed updates (Sec. III-D).
+    /// Emulate the hardware pipeline's delayed updates (Sec. III-D) by
+    /// queueing each junction's gradients `2(L-i)+1` steps. The
+    /// `nn::pipeline` engine *runs* that schedule instead of emulating it.
     pub stale_updates: bool,
 }
 
@@ -83,31 +94,43 @@ pub fn l2_for_density(base: f32, rho_net: f64) -> f32 {
     base * rho_net as f32
 }
 
+/// Metrics of one training epoch.
 #[derive(Clone, Debug)]
 pub struct EpochStat {
+    /// Epoch index (0-based).
     pub epoch: usize,
+    /// Mean train loss over the epoch's minibatches.
     pub train_loss: f32,
+    /// Train-set accuracy over the epoch.
     pub train_acc: f64,
+    /// Test accuracy after the epoch.
     pub test_acc: f64,
 }
 
+/// Per-epoch metrics of one training run.
 #[derive(Clone, Debug)]
 pub struct History {
+    /// One entry per epoch, in order.
     pub epochs: Vec<EpochStat>,
 }
 
 impl History {
+    /// Test accuracy after the last epoch (0.0 for an empty run).
     pub fn final_test_acc(&self) -> f64 {
         self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
     }
 
+    /// Best test accuracy seen across the run.
     pub fn best_test_acc(&self) -> f64 {
         self.epochs.iter().map(|e| e.test_acc).fold(0.0, f64::max)
     }
 }
 
-/// Chunked accuracy over a whole dataset.
-pub fn evaluate(net: &Network, ds: &Dataset) -> f64 {
+/// Chunked accuracy over a whole dataset for any batch-accuracy
+/// function — the single evaluation loop shared by the sequential and
+/// pipelined trainers, so their test-accuracy numbers stay comparable
+/// chunk for chunk.
+pub fn evaluate_with(ds: &Dataset, mut batch_acc: impl FnMut(&[f32], &[i32]) -> f64) -> f64 {
     let chunk = 512;
     let mut correct = 0f64;
     let mut i = 0;
@@ -115,10 +138,15 @@ pub fn evaluate(net: &Network, ds: &Dataset) -> f64 {
         let hi = (i + chunk).min(ds.n);
         let idx: Vec<usize> = (i..hi).collect();
         let (x, y) = ds.gather(&idx);
-        correct += net.accuracy(&x, &y) * (hi - i) as f64;
+        correct += batch_acc(&x, &y) * (hi - i) as f64;
         i = hi;
     }
     correct / ds.n as f64
+}
+
+/// Chunked accuracy over a whole dataset.
+pub fn evaluate(net: &Network, ds: &Dataset) -> f64 {
+    evaluate_with(ds, |x, y| net.accuracy(x, y))
 }
 
 /// Train `net` on `train_ds`, reporting test accuracy each epoch.

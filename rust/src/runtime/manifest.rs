@@ -20,36 +20,54 @@ use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
+/// Element type of a program tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float (parameters, activations, scalars).
     F32,
+    /// 32-bit integer (labels, gather indices).
     I32,
 }
 
+/// One positional input/output tensor of a program.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Tensor name (for diagnostics and [`crate::runtime::Program::input_index`]).
     pub name: String,
+    /// Expected shape (empty = scalar).
     pub shape: Vec<usize>,
+    /// Expected element type.
     pub dtype: Dtype,
 }
 
+/// The validated signature of one program.
 #[derive(Clone, Debug)]
 pub struct ProgramSpec {
+    /// Artifact file name (`<native>` for synthesized configs).
     pub file: String,
+    /// Positional input tensors.
     pub inputs: Vec<TensorSpec>,
+    /// Positional output tensors.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// One network configuration and its programs.
 #[derive(Clone, Debug)]
 pub struct ConfigEntry {
+    /// Neuronal configuration `[N_0, ..., N_L]`.
     pub layers: Vec<usize>,
+    /// Batch size the programs are compiled/synthesized for.
     pub batch: usize,
+    /// Out-degrees of the `gather_forward` program, when admissible.
     pub gather_dout: Option<Vec<usize>>,
+    /// Programs by tag (`forward`, `train`, `gather_forward`).
     pub programs: BTreeMap<String, ProgramSpec>,
 }
 
+/// The full artifact manifest: every servable config.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Configs by name (`tiny`, `mnist_fc2`, ...).
     pub configs: BTreeMap<String, ConfigEntry>,
 }
 
@@ -76,7 +94,9 @@ fn tensor_spec(j: &Json) -> Result<TensorSpec, String> {
 
 /// Cheap host-side config probe (no backend involvement).
 pub struct ProbeInfo {
+    /// Neuronal configuration `[N_0, ..., N_L]`.
     pub layers: Vec<usize>,
+    /// Compiled/synthesized batch size.
     pub batch: usize,
 }
 
@@ -184,8 +204,8 @@ impl ConfigEntry {
 impl Manifest {
     /// Built-in configs served by the native backend when no
     /// `manifest.json` exists (shapes follow the AOT compile set: the
-    /// paper's Table-I MNIST network, its TIMIT network, and a tiny
-    /// CI-sized config).
+    /// paper's Table-I MNIST network, its Table-II L=4 MNIST network,
+    /// its TIMIT network, and a tiny CI-sized config).
     pub fn builtin() -> Manifest {
         let mut configs = BTreeMap::new();
         configs.insert(
@@ -195,6 +215,10 @@ impl Manifest {
         configs.insert(
             "mnist_fc2".to_string(),
             ConfigEntry::synthesize(vec![800, 100, 10], 256, Some(vec![20, 10])),
+        );
+        configs.insert(
+            "mnist_fc4".to_string(),
+            ConfigEntry::synthesize(vec![800, 100, 100, 100, 10], 256, Some(vec![20, 20, 20, 10])),
         );
         configs.insert(
             "timit".to_string(),
@@ -235,6 +259,7 @@ impl Manifest {
         })
     }
 
+    /// Parse a `manifest.json` document.
     pub fn parse(text: &str) -> Result<Manifest, String> {
         let root = Json::parse(text)?;
         let mut configs = BTreeMap::new();
@@ -336,7 +361,7 @@ mod tests {
     #[test]
     fn builtin_configs_follow_signature_convention() {
         let m = Manifest::builtin();
-        for name in ["tiny", "mnist_fc2", "timit"] {
+        for name in ["tiny", "mnist_fc2", "mnist_fc4", "timit"] {
             let c = &m.configs[name];
             let l = c.layers.len() - 1;
             // train signature: 6L params/opt + L masks + x,y,t,lr,l2

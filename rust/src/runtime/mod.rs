@@ -22,10 +22,14 @@
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
+#[allow(missing_docs)] // optional backend, not compiled in the offline CI doc build
 pub mod pjrt;
 
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
+
+use crate::nn::pipeline::{PipelineConfig, PipelinedTrainer};
+use crate::sparsity::pattern::NetPattern;
 
 pub use manifest::{ConfigEntry, Dtype, Manifest, ProgramSpec, TensorSpec};
 pub use native::NativeEngine;
@@ -33,21 +37,26 @@ pub use native::NativeEngine;
 /// A host-side tensor crossing the backend boundary.
 #[derive(Clone, Debug)]
 pub enum Value {
+    /// f32 data with its shape (empty shape = scalar).
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data with its shape (labels, gather indices).
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl Value {
+    /// A scalar f32 value (empty shape).
     pub fn scalar_f32(v: f32) -> Value {
         Value::F32(vec![v], vec![])
     }
 
+    /// The tensor's shape (empty = scalar).
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32(_, s) | Value::I32(_, s) => s,
         }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         match self {
             Value::F32(d, _) => d.len(),
@@ -55,10 +64,12 @@ impl Value {
         }
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The element dtype.
     pub fn dtype(&self) -> Dtype {
         match self {
             Value::F32(..) => Dtype::F32,
@@ -66,6 +77,7 @@ impl Value {
         }
     }
 
+    /// The f32 data, or an error for i32 tensors.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Value::F32(d, _) => Ok(d),
@@ -73,6 +85,7 @@ impl Value {
         }
     }
 
+    /// The i32 data, or an error for f32 tensors.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Value::I32(d, _) => Ok(d),
@@ -80,6 +93,7 @@ impl Value {
         }
     }
 
+    /// The single f32 element of a scalar, or an error otherwise.
     pub fn scalar(&self) -> Result<f32> {
         match self {
             Value::F32(d, _) if d.len() == 1 => Ok(d[0]),
@@ -104,24 +118,43 @@ pub trait ExecBackend {
         entry: &ConfigEntry,
         spec: &ProgramSpec,
     ) -> Result<Box<dyn ProgramExec>>;
+
+    /// Streaming pipelined trainer (the Sec. III-A FF/BP/UP interleave,
+    /// `nn::pipeline`) for `entry`'s network, if this backend can execute
+    /// it junction by junction. Default: `None` — fused AOT artifacts run
+    /// a whole train step as one executable and cannot be split into
+    /// per-junction stages; only the native backend overrides this.
+    fn pipelined_trainer(
+        &self,
+        entry: &ConfigEntry,
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+    ) -> Option<Result<PipelinedTrainer>> {
+        let _ = (entry, pattern, cfg);
+        None
+    }
 }
 
 /// One loaded executable. `run` receives inputs already validated against
 /// the manifest spec and must return outputs in manifest order.
 pub trait ProgramExec {
+    /// Execute with validated positional inputs.
     fn run(&self, inputs: &[Value], spec: &ProgramSpec) -> Result<Vec<Value>>;
 }
 
 /// Backend-agnostic engine over an artifacts directory.
 pub struct Engine {
     backend: Box<dyn ExecBackend>,
+    /// The parsed manifest (artifact file or built-in configs).
     pub manifest: Manifest,
 }
 
 /// One compiled executable with its validated signature.
 pub struct Program {
     exec: Box<dyn ProgramExec>,
+    /// The manifest signature `run` validates inputs against.
     pub spec: ProgramSpec,
+    /// `config/program` label used in error messages.
     pub name: String,
 }
 
@@ -177,6 +210,17 @@ impl Engine {
     /// enabled and compiled artifacts present it builds a fresh PJRT
     /// engine instead (the artifact load is the unavoidable per-worker
     /// cost there).
+    ///
+    /// ```
+    /// use pds::runtime::{Engine, Manifest};
+    ///
+    /// // parse (or synthesize) the manifest once...
+    /// let manifest = Manifest::builtin();
+    /// // ...then hand every worker thread its own engine, nearly free
+    /// let engine = Engine::for_worker("/nonexistent/dir", &manifest).unwrap();
+    /// assert!(engine.load("tiny", "forward").is_ok());
+    /// assert!(engine.platform().starts_with("native"));
+    /// ```
     pub fn for_worker(artifacts_dir: impl AsRef<Path>, manifest: &Manifest) -> Result<Self> {
         let dir = artifacts_dir.as_ref();
         #[cfg(feature = "pjrt")]
@@ -187,8 +231,55 @@ impl Engine {
         Ok(Engine::from_manifest(manifest.clone()))
     }
 
+    /// The active backend's platform tag (e.g. `native-cpu (8 threads)`).
     pub fn platform(&self) -> String {
         self.backend.platform()
+    }
+
+    /// Build the streaming pipelined training engine
+    /// ([`crate::nn::pipeline::PipelinedTrainer`]) for `config`: the
+    /// Sec. III-A schedule where junction i runs FF on batch `t` while
+    /// junction i-1 runs BP/UP on batch `t-1`. Fails when the active
+    /// backend cannot train junction by junction (fused PJRT artifacts;
+    /// the always-available native backend can).
+    ///
+    /// ```
+    /// use pds::nn::pipeline::PipelineConfig;
+    /// use pds::runtime::Engine;
+    /// use pds::sparsity::config::{DoutConfig, NetConfig};
+    /// use pds::sparsity::{generate, Method};
+    /// use pds::util::rng::Rng;
+    ///
+    /// let engine = Engine::native("/nonexistent/dir").unwrap();
+    /// let layers = engine.manifest.configs["tiny"].layers.clone();
+    /// let netc = NetConfig::new(layers);
+    /// let mut rng = Rng::new(0);
+    /// let pattern = generate(Method::ClashFree, &netc, &DoutConfig(vec![4, 2]), None, &mut rng);
+    /// let cfg = PipelineConfig { batch: 16, ..Default::default() };
+    /// let trainer = engine.train_pipelined("tiny", &pattern, &cfg).unwrap();
+    /// // full Fig. 2c schedule for an L = 2 net: 4 minibatches in flight
+    /// assert_eq!(trainer.depth(), 4);
+    /// trainer.audit_banked().unwrap();
+    /// ```
+    pub fn train_pipelined(
+        &self,
+        config: &str,
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+    ) -> Result<PipelinedTrainer> {
+        let entry = self
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("config '{config}' not in manifest"))?;
+        match self.backend.pipelined_trainer(entry, pattern, cfg) {
+            Some(trainer) => trainer,
+            None => bail!(
+                "backend '{}' has no pipelined training path (the native backend trains \
+                 junction by junction; fused AOT artifacts cannot)",
+                self.platform()
+            ),
+        }
     }
 
     /// Load `programs[program]` of config `config`.

@@ -19,8 +19,10 @@ use anyhow::{bail, Result};
 use super::{ConfigEntry, ExecBackend, ProgramExec, ProgramSpec, Value};
 use crate::nn::adam::{AdamConfig, AdamState};
 use crate::nn::dense::DenseNet;
+use crate::nn::pipeline::{PipelineConfig, PipelinedTrainer};
 use crate::nn::relu;
 use crate::nn::sparse::SparseLayer;
+use crate::sparsity::pattern::NetPattern;
 use crate::util::parallel;
 
 /// The always-available CPU backend (stateless: program shapes come from
@@ -66,6 +68,18 @@ impl ExecBackend for NativeEngine {
             batch: entry.batch,
             name: format!("{config}/{program}"),
         }))
+    }
+
+    /// The native backend executes junctions individually, so it can run
+    /// the streaming pipelined schedule (`nn::pipeline`) directly on the
+    /// compacted CSR kernels.
+    fn pipelined_trainer(
+        &self,
+        entry: &ConfigEntry,
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+    ) -> Option<Result<PipelinedTrainer>> {
+        Some(PipelinedTrainer::from_pattern(&entry.layers, pattern, cfg))
     }
 }
 

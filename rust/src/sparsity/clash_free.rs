@@ -26,12 +26,25 @@ use crate::util::rng::Rng;
 /// single permutation since its access pattern repeats every sweep).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Flavor {
-    Type1 { dither: bool },
-    Type2 { dither: bool },
-    Type3 { dither: bool },
+    /// One seed vector, repeated with increments every sweep.
+    Type1 {
+        /// Apply per-pattern memory dithering.
+        dither: bool,
+    },
+    /// Fresh seed vector per sweep.
+    Type2 {
+        /// Apply per-sweep memory dithering.
+        dither: bool,
+    },
+    /// Fresh seed vector per cycle (largest pattern space).
+    Type3 {
+        /// Apply per-sweep memory dithering.
+        dither: bool,
+    },
 }
 
 impl Flavor {
+    /// Display name, e.g. `type2+dither`.
     pub fn name(&self) -> String {
         let (t, d) = match self {
             Flavor::Type1 { dither } => (1, dither),
@@ -46,7 +59,9 @@ impl Flavor {
 /// (memory, address)`. This is what the hardware's address generators
 /// emit, and what `hw::junction` replays against the banked memories.
 pub struct AccessSchedule {
+    /// Memories in the left bank (= edge processors fed per cycle).
     pub z: usize,
+    /// Words per memory (`N_left / z`).
     pub depth: usize,
     /// `d_out` sweeps x `depth` cycles.
     pub cycles: Vec<Vec<(usize, usize)>>,
@@ -228,7 +243,9 @@ pub fn default_z(shape: JunctionShape, _d_out: usize) -> usize {
 /// loses integer precision above ~2^53.
 #[derive(Clone, Copy, Debug)]
 pub struct PatternSpace {
+    /// log10 of the pattern count (always available).
     pub log10: f64,
+    /// Integer-exact count, `None` on u128 overflow.
     pub exact: Option<u128>,
     /// false when the dither factor is only the (z!)^d_out upper bound
     /// (z and d_in mutually non-divisible, Appendix C).

@@ -6,13 +6,16 @@ use crate::util::gcd;
 /// Neuronal configuration `N_net = (N_0, ..., N_L)`; layer 0 is the input.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct NetConfig {
+    /// Layer widths, input first.
     pub layers: Vec<usize>,
 }
 
 /// One junction: `n_left = N_{i-1}` nodes on the left, `n_right = N_i`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct JunctionShape {
+    /// Left (earlier) layer width.
     pub n_left: usize,
+    /// Right (later) layer width.
     pub n_right: usize,
 }
 
@@ -21,6 +24,7 @@ pub struct JunctionShape {
 pub struct DoutConfig(pub Vec<usize>);
 
 impl NetConfig {
+    /// Validated configuration (>= 2 non-empty layers).
     pub fn new(layers: Vec<usize>) -> Self {
         assert!(layers.len() >= 2, "need at least input + output layer");
         assert!(layers.iter().all(|&n| n > 0), "empty layer");

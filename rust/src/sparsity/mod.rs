@@ -25,14 +25,19 @@ use crate::util::rng::Rng;
 /// Pattern family selector used by experiments and the CLI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
+    /// Seed-vector cyclic patterns (hardware clash-free, Sec. III-C).
     ClashFree,
+    /// Fixed in/out degrees, random placement.
     Structured,
+    /// Unconstrained random edges.
     Random,
 }
 
 impl Method {
+    /// Every pattern family, in Table-II order.
     pub const ALL: [Method; 3] = [Method::ClashFree, Method::Structured, Method::Random];
 
+    /// CLI/display name.
     pub fn name(&self) -> &'static str {
         match self {
             Method::ClashFree => "clash-free",
@@ -41,6 +46,7 @@ impl Method {
         }
     }
 
+    /// Parse a CLI name (accepts the short aliases `cf`, `s`, `r`).
     pub fn parse(s: &str) -> Option<Method> {
         match s {
             "clash-free" | "clashfree" | "cf" => Some(Method::ClashFree),

@@ -9,6 +9,7 @@ use super::config::JunctionShape;
 /// A single junction's connection pattern.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Pattern {
+    /// The junction's layer widths.
     pub shape: JunctionShape,
     /// `in_edges[j]` = left-neuron indices feeding right neuron j,
     /// in edge-number order (so row j is row j of the wc/idx memories).
@@ -18,6 +19,7 @@ pub struct Pattern {
 /// Per-junction patterns for the whole network.
 #[derive(Clone, Debug)]
 pub struct NetPattern {
+    /// One pattern per junction, input side first.
     pub junctions: Vec<Pattern>,
 }
 

@@ -5,16 +5,24 @@
 
 use std::time::{Duration, Instant};
 
+/// Timing summary of one benchmark.
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations run.
     pub iters: usize,
+    /// Median iteration time.
     pub median: Duration,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl BenchResult {
+    /// Iterations per second at the median time.
     pub fn per_sec(&self) -> f64 {
         if self.median.as_secs_f64() > 0.0 {
             1.0 / self.median.as_secs_f64()
@@ -23,6 +31,7 @@ impl BenchResult {
         }
     }
 
+    /// Print the one-line median/mean/p95 summary.
     pub fn report(&self) {
         println!(
             "{:<44} {:>10} median  {:>10} mean  {:>10} p95  {:>12.1}/s  ({} iters)",

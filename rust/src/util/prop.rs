@@ -7,6 +7,7 @@
 
 use super::rng::Rng;
 
+/// Default generated-case count for property tests.
 pub const DEFAULT_CASES: usize = 128;
 
 /// Run `prop` over `cases` inputs drawn by `gen`. Panics on first failure

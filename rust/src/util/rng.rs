@@ -3,12 +3,14 @@
 //! Every experiment in the repo threads explicit seeds through this so the
 //! paper-reproduction tables are bit-reproducible run to run.
 
+/// Deterministic xoshiro256** generator.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
 }
 
 impl Rng {
+    /// Seeded generator (any seed value is fine, including 0).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed into the xoshiro state.
         let mut sm = seed;
@@ -24,6 +26,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

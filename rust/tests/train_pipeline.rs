@@ -1,0 +1,241 @@
+//! Integration tests for the pipelined training engine (`nn::pipeline`
+//! + `runtime::Engine::train_pipelined`):
+//!
+//! - depth-1 runs reproduce the sequential `nn::trainer` *bit for bit*
+//!   (same kernels, same Adam trajectory, same shuffles),
+//! - the full-depth schedule's measured weight staleness equals the
+//!   paper's Sec. III-D closed form (cross-checked against the
+//!   `hw::pipeline` model itself),
+//! - bounded-staleness training still converges on the synthesized
+//!   config (the paper's "no performance degradation" claim),
+//! - the runtime engine exposes the path end to end and validates its
+//!   inputs.
+//!
+//! No test here touches the global kernel-thread override — bit parity
+//! relies on both paths running under the same thread budget.
+
+use pds::data::Spec;
+use pds::hw::pipeline::Pipeline;
+use pds::nn::pipeline::{PipelineConfig, PipelinedTrainer};
+use pds::nn::sparse::SparseNet;
+use pds::nn::trainer::{self, Network, TrainConfig};
+use pds::runtime::Engine;
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::pattern::NetPattern;
+use pds::sparsity::{generate, Method};
+use pds::util::rng::Rng;
+
+fn pattern_for(layers: &[usize], dout: &[usize], seed: u64) -> NetPattern {
+    let netc = NetConfig::new(layers.to_vec());
+    let mut rng = Rng::new(seed);
+    generate(
+        Method::Structured,
+        &netc,
+        &DoutConfig(dout.to_vec()),
+        None,
+        &mut rng,
+    )
+}
+
+fn toy_splits(features: usize, classes: usize, n_train: usize, n_test: usize, seed: u64) -> (pds::data::Dataset, pds::data::Dataset) {
+    let spec = Spec {
+        name: "pipe-test",
+        features,
+        classes,
+        latent_dim: (features / 3).max(4),
+        shaping: pds::data::Shaping::Continuous,
+        separation: 3.0,
+        noise: 0.4,
+    };
+    let s = spec.splits(n_train, 0, n_test, seed);
+    (s.train, s.test)
+}
+
+#[test]
+fn depth_1_matches_sequential_trainer_bit_for_bit() {
+    let layers = [20usize, 16, 12, 6];
+    let pattern = pattern_for(&layers, &[8, 6, 3], 5);
+    let (train_ds, test_ds) = toy_splits(20, 6, 200, 60, 11);
+    let seed = 5u64;
+
+    // sequential reference: same init draws, same shuffle recipe
+    let mut init_rng = Rng::new(seed);
+    let snet = SparseNet::init_he(&pattern, 0.1, &mut init_rng);
+    let mut seq_net = Network::Sparse(snet);
+    let seq_cfg = TrainConfig {
+        epochs: 3,
+        batch: 32,
+        l2: 1e-4,
+        seed,
+        ..Default::default()
+    };
+    let h_seq = trainer::train(&mut seq_net, &train_ds, &test_ds, &seq_cfg);
+
+    // pipelined at depth 1: one batch in flight, staleness 0
+    let mut pipe = PipelinedTrainer::from_pattern(
+        &layers,
+        &pattern,
+        &PipelineConfig {
+            epochs: 3,
+            batch: 32,
+            depth: 1,
+            l2: 1e-4,
+            seed,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(pipe.depth(), 1);
+    let h_pipe = pipe.train(&train_ds, &test_ds).unwrap();
+
+    // histories agree to the bit
+    assert_eq!(h_seq.epochs.len(), h_pipe.epochs.len());
+    for (a, b) in h_seq.epochs.iter().zip(&h_pipe.epochs) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "epoch {} train loss diverged: {} vs {}",
+            a.epoch,
+            a.train_loss,
+            b.train_loss
+        );
+        assert_eq!(a.train_acc, b.train_acc, "epoch {} train acc", a.epoch);
+        assert_eq!(a.test_acc, b.test_acc, "epoch {} test acc", a.epoch);
+    }
+    // ...and so do all trained parameters
+    let seq_snet = match &seq_net {
+        Network::Sparse(n) => n,
+        _ => unreachable!(),
+    };
+    for (j, (sj, pj)) in seq_snet
+        .junctions
+        .iter()
+        .zip(&pipe.net().junctions)
+        .enumerate()
+    {
+        for (e, (a, b)) in sj.wc.iter().zip(&pj.wc).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "junction {j} weight {e}: {a} vs {b}"
+            );
+        }
+        for (a, b) in sj.bias.iter().zip(&pj.bias) {
+            assert_eq!(a.to_bits(), b.to_bits(), "junction {j} bias diverged");
+        }
+    }
+    // sequential-equivalent schedule measures zero staleness
+    for i in 1..=3 {
+        assert_eq!(pipe.measured_staleness(i), Some(0), "junction {i}");
+        assert_eq!(pipe.expected_staleness(i), 0);
+    }
+}
+
+#[test]
+fn full_depth_staleness_matches_paper_closed_form() {
+    let layers = [20usize, 16, 12, 6];
+    let l = layers.len() - 1;
+    let pattern = pattern_for(&layers, &[8, 6, 3], 7);
+    let (train_ds, _) = toy_splits(20, 6, 320, 32, 13);
+    let mut pipe = PipelinedTrainer::from_pattern(
+        &layers,
+        &pattern,
+        &PipelineConfig {
+            batch: 32,
+            depth: 0, // full Fig. 2c schedule
+            seed: 7,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(pipe.stride(), 1);
+    assert_eq!(pipe.depth(), 2 * l);
+    let mut rng = Rng::new(17);
+    pipe.epoch(&train_ds, &mut rng).unwrap();
+
+    let model = Pipeline::new(l);
+    for i in 1..=l {
+        let want = model.staleness(i); // 2(L-i)+1
+        assert_eq!(
+            pipe.measured_staleness(i),
+            Some(want),
+            "junction {i}: live run disagrees with Sec. III-D"
+        );
+        assert_eq!(pipe.expected_staleness(i), want);
+        // the analytical model measures the same value on its own timetable
+        assert_eq!(model.measured_staleness(i, 200), Some(want));
+    }
+    // steady state co-schedules 3L - 1 operations per junction cycle
+    assert_eq!(pipe.metrics.max_ops_in_tau, 3 * l - 1);
+    // 320 samples / batch 32 = 10 minibatches, all retired
+    assert_eq!(pipe.metrics.flights, 10);
+    pipe.audit_banked().unwrap();
+}
+
+#[test]
+fn bounded_staleness_training_converges() {
+    // Sec. III-D: "no performance degradation due to this variation from
+    // the standard backpropagation algorithm"
+    let layers = [16usize, 24, 4];
+    let pattern = pattern_for(&layers, &[12, 2], 1);
+    let (train_ds, test_ds) = toy_splits(16, 4, 400, 120, 19);
+    let mut pipe = PipelinedTrainer::from_pattern(
+        &layers,
+        &pattern,
+        &PipelineConfig {
+            epochs: 16,
+            batch: 32,
+            depth: 0,
+            seed: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let h = pipe.train(&train_ds, &test_ds).unwrap();
+    assert!(
+        h.final_test_acc() > 0.7,
+        "stale pipelined training collapsed: acc {} (chance 0.25)",
+        h.final_test_acc()
+    );
+    assert!(h.epochs[0].train_loss > h.epochs.last().unwrap().train_loss);
+    // full schedule for L = 2: staleness (3, 1)
+    assert_eq!(pipe.measured_staleness(1), Some(3));
+    assert_eq!(pipe.measured_staleness(2), Some(1));
+}
+
+#[test]
+fn runtime_engine_exposes_the_pipelined_path() {
+    let engine = Engine::native("/nonexistent/dir").unwrap();
+    let layers = engine.manifest.configs["tiny"].layers.clone();
+    let netc = NetConfig::new(layers.clone());
+    let mut rng = Rng::new(3);
+    let pattern = generate(Method::ClashFree, &netc, &DoutConfig(vec![4, 2]), None, &mut rng);
+
+    let cfg = PipelineConfig {
+        seed: 3,
+        batch: 0, // adopt the manifest config's batch
+        ..Default::default()
+    };
+    let mut session =
+        pds::coordinator::PipelinedTrainSession::new(&engine, "tiny", &pattern, &cfg).unwrap();
+    // batch 0 adopts the config's batch
+    assert_eq!(session.batch, engine.manifest.configs["tiny"].batch);
+    let (train_ds, test_ds) = toy_splits(layers[0], *layers.last().unwrap(), 160, 64, 23);
+    let mut erng = Rng::new(29);
+    let mut last_loss = f32::INFINITY;
+    for _ in 0..3 {
+        let (loss, acc) = session.epoch(&train_ds, &mut erng).unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+        last_loss = loss;
+    }
+    assert!(last_loss.is_finite());
+    let acc = session.evaluate(&test_ds);
+    assert!((0.0..=1.0).contains(&acc));
+    session.trainer().audit_banked().unwrap();
+    assert!(session.metrics().taus > 0);
+
+    // validation: unknown config and mismatched pattern are rejected
+    assert!(engine.train_pipelined("bogus", &pattern, &cfg).is_err());
+    assert!(engine.train_pipelined("timit", &pattern, &cfg).is_err());
+}
