@@ -1,0 +1,169 @@
+//! Quantized vs f32 execution bench: fixed-point (Qm.n, `nn::fixed`)
+//! against the f32 reference on the same models, at two levels —
+//!
+//! 1. **kernel**: batched sparse forward throughput of
+//!    `FixedSparseNet::logits_q` vs `SparseNet::logits` on an
+//!    mnist_fc2-shaped clash-free net (batch 256),
+//! 2. **service**: sustained req/s of the multi-worker inference service
+//!    serving the same models quantized vs f32, under identical
+//!    closed-loop load ([`pds::coordinator::loadgen::bench_service`]
+//!    with and without a quant format).
+//!
+//! Merges a `quant_exec` section into `BENCH_serve.json` at the repo
+//! root, preserving the `serve_load` scenario section.
+//!
+//!     cargo bench --bench quant_exec
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use pds::coordinator::loadgen::{self, LoadSpec};
+use pds::nn::fixed::{FixedSparseNet, QFormat};
+use pds::nn::sparse::SparseNet;
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::json::Json;
+use pds::util::parallel;
+use pds::util::rng::Rng;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Median wall-time of `reps` runs of `f`, in milliseconds.
+fn time_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let fmt = QFormat::default();
+    println!("quant_exec: fixed-point {fmt} vs f32");
+
+    // -- kernel level: mnist_fc2-shaped sparse forward, batch 256 --
+    let layers = vec![800usize, 100, 10];
+    let batch = 256usize;
+    let netc = NetConfig::new(layers.clone());
+    let mut rng = Rng::new(11);
+    let pattern = generate(
+        Method::ClashFree,
+        &netc,
+        &DoutConfig(vec![20, 10]),
+        None,
+        &mut rng,
+    );
+    let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+    let qnet = FixedSparseNet::from_f32(&snet, fmt);
+    let x: Vec<f32> = (0..batch * layers[0])
+        .map(|_| rng.uniform() * 2.0 - 1.0)
+        .collect();
+    let xq = fmt.quantize_slice(&x);
+    // warmup + saturation check
+    snet.logits(&x, batch);
+    let (_, saturations) = qnet.logits_q(&xq, batch);
+    let reps = 30;
+    let f32_ms = time_ms(reps, || {
+        snet.logits(&x, batch);
+    });
+    let quant_ms = time_ms(reps, || {
+        qnet.logits_q(&xq, batch);
+    });
+    let kernel_speedup = f32_ms / quant_ms.max(1e-9);
+    println!(
+        "kernel (mnist_fc2-like, batch {batch}): f32 {f32_ms:.3} ms, {fmt} {quant_ms:.3} ms \
+         ({kernel_speedup:.2}X), {saturations} saturated outputs"
+    );
+
+    // -- service level: same models, quantized vs f32 workers --
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let models = vec!["tiny".to_string(), "mnist_fc2".to_string()];
+    let load = LoadSpec {
+        clients: 8,
+        requests: 150,
+        think_time: Duration::ZERO,
+        burst: 1,
+    };
+    let workers = 2usize;
+    let mut rps = Vec::new();
+    for quant in [None, Some(fmt)] {
+        let label = match quant {
+            Some(f) => format!("{f}"),
+            None => "f32".to_string(),
+        };
+        println!("-- service, {workers} workers/model, {label} --");
+        match loadgen::bench_service(
+            dir,
+            &models,
+            workers,
+            256,
+            Duration::from_millis(2),
+            &load,
+            13,
+            quant,
+        ) {
+            Ok(reports) => {
+                for r in &reports {
+                    r.print();
+                }
+                rps.push(reports.iter().map(|r| r.throughput).sum::<f64>());
+            }
+            Err(e) => {
+                eprintln!("quant_exec: {label} scenario failed: {e:#}");
+                return;
+            }
+        }
+    }
+    let serve_speedup = rps[1] / rps[0].max(1e-9);
+    println!(
+        "service throughput: {:.0} req/s quantized vs {:.0} req/s f32 ({serve_speedup:.2}X)",
+        rps[1], rps[0]
+    );
+
+    // -- merge the section into BENCH_serve.json --
+    let section = obj(vec![
+        ("recorded", Json::Bool(true)),
+        ("format", Json::Str(format!("{fmt}"))),
+        (
+            "kernel_threads_total",
+            Json::Num(parallel::machine_threads() as f64),
+        ),
+        (
+            "kernel",
+            obj(vec![
+                ("config", Json::Str("mnist_fc2-like".into())),
+                ("batch", Json::Num(batch as f64)),
+                ("f32_ms", Json::Num(f32_ms)),
+                ("quant_ms", Json::Num(quant_ms)),
+                ("quant_speedup", Json::Num(kernel_speedup)),
+                ("saturations", Json::Num(saturations as f64)),
+            ]),
+        ),
+        (
+            "serve",
+            obj(vec![
+                ("workers", Json::Num(workers as f64)),
+                ("f32_rps", Json::Num(rps[0])),
+                ("quant_rps", Json::Num(rps[1])),
+                ("quant_speedup", Json::Num(serve_speedup)),
+            ]),
+        ),
+    ]);
+    let doc = obj(vec![("quant_exec", section)]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match loadgen::write_bench_json(out, doc) {
+        Ok(()) => println!("merged quant_exec section into {out}"),
+        Err(e) => eprintln!("quant_exec: cannot write {out}: {e}"),
+    }
+}

@@ -33,6 +33,7 @@ fn main() {
             Duration::from_millis(2),
             &load,
             7,
+            None,
         ) {
             Ok(reports) => {
                 for r in &reports {
@@ -56,7 +57,8 @@ fn main() {
     );
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
     let doc = loadgen::bench_json(&scenarios);
-    match std::fs::write(out, format!("{doc}\n")) {
+    // merge-write so the quant_exec bench's section survives
+    match loadgen::write_bench_json(out, doc) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => eprintln!("serve_load: cannot write {out}: {e}"),
     }

@@ -247,7 +247,9 @@ fn snapshot(
 /// Start a fresh service for `models` with `workers` workers per model,
 /// drive `load` against every model concurrently, shut down, and return
 /// the per-model reports. The unit of comparison for the serve bench:
-/// same load, varying worker count.
+/// same load, varying worker count — and, with `quant` set, f32 vs
+/// fixed-point execution of the same models under the same load
+/// (`quant_exec` bench, `serve-bench --quant`).
 pub fn bench_service(
     artifacts_dir: impl AsRef<Path>,
     models: &[String],
@@ -256,11 +258,14 @@ pub fn bench_service(
     max_wait: Duration,
     load: &LoadSpec,
     seed: u64,
+    quant: Option<crate::nn::fixed::QFormat>,
 ) -> Result<Vec<LoadReport>> {
     let dir = artifacts_dir.as_ref();
     let specs = models
         .iter()
-        .map(|m| model_spec(dir, m, 0.25, seed))
+        .map(|m| {
+            model_spec(dir, m, 0.25, seed).map(|s| ModelSpec { quant, ..s })
+        })
         .collect::<Result<Vec<_>>>()?;
     let svc = InferenceService::start(
         dir,
@@ -283,6 +288,7 @@ pub fn bench_service(
 pub fn bench_json(scenarios: &[(usize, Vec<LoadReport>)]) -> Json {
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serve_load".to_string()));
+    root.insert("recorded".to_string(), Json::Bool(true));
     root.insert(
         "kernel_threads_total".to_string(),
         Json::Num(parallel::machine_threads() as f64),
@@ -312,11 +318,55 @@ pub fn bench_json(scenarios: &[(usize, Vec<LoadReport>)]) -> Json {
         arr.push(Json::Obj(obj));
     }
     root.insert("scenarios".to_string(), Json::Arr(arr));
-    if let (Some(b), Some((w, t))) = (base, best) {
-        if w > 1 && b > 0.0 {
-            root.insert("speedup_workers".to_string(), Json::Num(w as f64));
-            root.insert("speedup_vs_single_worker".to_string(), Json::Num(t / b));
+    // always emit the speedup keys — Null when the sweep had no
+    // single-worker baseline or no multi-worker scenario — so a
+    // key-wise merge over an older file can never leave stale values
+    let (sw, sv) = match (base, best) {
+        (Some(b), Some((w, t))) if w > 1 && b > 0.0 => {
+            (Json::Num(w as f64), Json::Num(t / b))
         }
-    }
+        _ => (Json::Null, Json::Null),
+    };
+    root.insert("speedup_workers".to_string(), sw);
+    root.insert("speedup_vs_single_worker".to_string(), sv);
     Json::Obj(root)
+}
+
+/// Write a serve-bench document to `path`, merging over whatever the
+/// file already holds so unrelated top-level sections survive — the
+/// `serve_load` and `quant_exec` benches both record into
+/// `BENCH_serve.json`, each owning different keys. When `doc` refreshes
+/// the main scenario section (it carries a `recorded` flag), the
+/// placeholder `note` is dropped. A missing file is written fresh; an
+/// *unparsable* existing file is an error, never silently replaced —
+/// losing the sibling bench's recorded section would be worse than
+/// failing.
+pub fn write_bench_json(path: impl AsRef<Path>, doc: Json) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let merged = match std::fs::read_to_string(path) {
+        Ok(text) => match (Json::parse(&text), doc) {
+            (Ok(Json::Obj(mut base)), Json::Obj(new)) => {
+                if new.contains_key("recorded") {
+                    base.remove("note");
+                }
+                for (k, v) in new {
+                    base.insert(k, v);
+                }
+                Json::Obj(base)
+            }
+            (Ok(_), _) | (Err(_), _) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "existing {} is not a JSON object — refusing to overwrite it \
+                         (fix or delete the file, then rerun the bench)",
+                        path.display()
+                    ),
+                ));
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => doc,
+        Err(e) => return Err(e),
+    };
+    std::fs::write(path, format!("{merged}\n"))
 }

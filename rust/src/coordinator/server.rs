@@ -32,6 +32,12 @@
 //!   request/reject/batch counters, a batch-occupancy histogram, and a
 //!   log₂-bucketed latency histogram with p50/p95/p99 quantiles. The CLI
 //!   (`pds serve`, `pds serve-bench`) dumps it after a run.
+//! - **Quantized serving.** A model with [`ModelSpec::quant`] set is
+//!   served in Qm.n fixed point ([`crate::nn::fixed`]): parameters are
+//!   compacted and quantized once at startup, every worker runs the
+//!   saturating integer kernels on raw words (argmax included — no
+//!   dequantization on the reply path), and saturation events surface in
+//!   [`ModelMetrics::quant_saturations`]. CLI: `serve --quant Qm.n`.
 //!
 //! Implemented on std threads + channels (tokio is unavailable in the
 //! offline build; the request path is compute-bound, not I/O-bound).
@@ -47,7 +53,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, Manifest, Value};
+use crate::nn::fixed::{FixedSparseNet, QFormat};
+use crate::nn::sparse::SparseNet;
+use crate::runtime::{Engine, Manifest, Program, Value};
 use crate::sparsity::pattern::NetPattern;
 use crate::util::parallel;
 use crate::util::rng::Rng;
@@ -205,6 +213,10 @@ pub struct ModelMetrics {
     pub padded_rows: AtomicU64,
     /// Requests a worker stole from a sibling shard.
     pub stolen: AtomicU64,
+    /// Saturated fixed-point outputs across all quantized batches (zero
+    /// on f32-served models). A persistently nonzero count means the
+    /// model's Qm.n format lacks integer headroom for its inputs.
+    pub quant_saturations: AtomicU64,
     /// Submit-to-reply latency histogram (see [`LatencyHistogram`]).
     pub latency: LatencyHistogram,
     occupancy: Vec<AtomicU64>,
@@ -218,6 +230,7 @@ impl ModelMetrics {
             batches: AtomicU64::new(0),
             padded_rows: AtomicU64::new(0),
             stolen: AtomicU64::new(0),
+            quant_saturations: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
             occupancy: (0..batch).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -253,14 +266,15 @@ impl ModelMetrics {
             .collect();
         format!(
             "model {model}: {} served, {} rejected, {} batches (mean occupancy {:.1}/{batch}, \
-             {} stolen), {} padded rows\n  latency p50 {:?} p95 {:?} p99 {:?}; \
-             occupancy histogram {{{}}}",
+             {} stolen), {} padded rows, {} quant saturations\n  latency p50 {:?} p95 {:?} \
+             p99 {:?}; occupancy histogram {{{}}}",
             self.requests.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_occupancy(),
             self.stolen.load(Ordering::Relaxed),
             self.padded_rows.load(Ordering::Relaxed),
+            self.quant_saturations.load(Ordering::Relaxed),
             self.latency.quantile(0.50),
             self.latency.quantile(0.95),
             self.latency.quantile(0.99),
@@ -335,6 +349,20 @@ impl Shard {
         self.state.lock().unwrap().stopped = true;
         self.nonempty.notify_all();
     }
+}
+
+/// Everything [`InferenceService::start`] computes for one model before
+/// any worker thread exists: the fallible work (validation, parameter
+/// init, quantization + clip check) lives in the prepare pass, so a
+/// failing model can never leak already-spawned sibling workers or a
+/// pinned kernel-thread override.
+struct PreparedModel {
+    config: String,
+    layers: Vec<usize>,
+    batch: usize,
+    masks: Arc<Vec<Value>>,
+    params: Arc<Vec<Value>>,
+    qnet: Option<Arc<FixedSparseNet>>,
 }
 
 /// Shared state of one served model: its shards, shape info and metrics.
@@ -459,16 +487,28 @@ pub struct ModelSpec {
     /// `w_i, b_i` interleaved per junction (the `forward` signature
     /// order). He-initialized from `pattern` when `None`.
     pub params: Option<Vec<Value>>,
+    /// Serve this model in Qm.n fixed point (`nn::fixed`): the
+    /// parameters are quantized once at startup and every worker runs
+    /// the saturating integer kernels instead of a compiled f32
+    /// `forward` program (CLI: `serve --quant Qm.n`). `None` serves f32.
+    pub quant: Option<QFormat>,
 }
 
 impl ModelSpec {
-    /// Spec with He-initialized parameters.
+    /// Spec with He-initialized parameters, f32 serving.
     pub fn new(config: impl Into<String>, pattern: NetPattern) -> ModelSpec {
         ModelSpec {
             config: config.into(),
             pattern,
             params: None,
+            quant: None,
         }
+    }
+
+    /// Serve this model quantized in `fmt` (see [`ModelSpec::quant`]).
+    pub fn with_quant(mut self, fmt: QFormat) -> ModelSpec {
+        self.quant = Some(fmt);
+        self
     }
 }
 
@@ -517,13 +557,16 @@ impl InferenceService {
         let artifacts_dir = artifacts_dir.into();
         let workers_per_model = cfg.workers.max(1);
         let manifest = Arc::new(Manifest::load_or_builtin(&artifacts_dir)?);
-        // validate every spec before spawning any worker or pinning the
-        // process-wide kernel-thread budget: no failure past this block
-        // may leak running threads or a stale global override
-        let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
-        for spec in &specs {
+        // validate AND fully prepare every model (masks, parameters, the
+        // quantized net with its clip check) before spawning any worker
+        // or pinning the process-wide kernel-thread budget: no failure
+        // past this pass may leak running threads or a stale override
+        let n_models = specs.len();
+        let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        let mut prepared: Vec<PreparedModel> = Vec::with_capacity(n_models);
+        for spec in specs {
             anyhow::ensure!(
-                seen.insert(&spec.config),
+                seen.insert(spec.config.clone()),
                 "model '{}' listed twice",
                 spec.config
             );
@@ -531,7 +574,7 @@ impl InferenceService {
                 .configs
                 .get(&spec.config)
                 .ok_or_else(|| anyhow::anyhow!("config '{}' not in manifest", spec.config))?;
-            let layers = &entry.layers;
+            let layers = entry.layers.clone();
             anyhow::ensure!(
                 spec.pattern.junctions.len() == layers.len() - 1,
                 "'{}': pattern has {} junctions, net has {}",
@@ -546,20 +589,6 @@ impl InferenceService {
                     spec.config
                 );
             }
-        }
-        let mut prev_threads = None;
-        if cfg.tune_kernel_threads {
-            prev_threads = Some(parallel::thread_override());
-            parallel::set_threads(parallel::worker_thread_budget(
-                workers_per_model * specs.len(),
-            ));
-        }
-        let mut models: BTreeMap<String, Arc<ModelCore>> = BTreeMap::new();
-        let mut handles = Vec::new();
-        let mut ready = Vec::new();
-        for spec in specs {
-            let entry = &manifest.configs[&spec.config];
-            let layers = entry.layers.clone();
             let masks: Arc<Vec<Value>> = Arc::new(
                 spec.pattern
                     .junctions
@@ -568,28 +597,74 @@ impl InferenceService {
                     .collect(),
             );
             let params = Arc::new(init_params(&layers, &spec.pattern, spec.params));
-            let core = Arc::new(ModelCore {
-                name: spec.config.clone(),
+            // quantized serving: compact + quantize the parameters ONCE
+            // here, so workers share one immutable fixed-point net
+            // instead of re-quantizing per batch
+            let qnet: Option<Arc<FixedSparseNet>> = match spec.quant {
+                Some(fmt) => {
+                    let net = quantized_net(&spec.pattern, &params, fmt)?;
+                    anyhow::ensure!(
+                        net.clipped_params() == 0,
+                        "'{}': {} parameters clip at the {fmt} range — the format lacks \
+                         integer headroom for this model's weights; pick a wider Qm.n",
+                        spec.config,
+                        net.clipped_params()
+                    );
+                    Some(Arc::new(net))
+                }
+                None => None,
+            };
+            prepared.push(PreparedModel {
+                config: spec.config,
+                layers,
                 batch: entry.batch,
+                masks,
+                params,
+                qnet,
+            });
+        }
+        let mut prev_threads = None;
+        if cfg.tune_kernel_threads {
+            prev_threads = Some(parallel::thread_override());
+            parallel::set_threads(parallel::worker_thread_budget(
+                workers_per_model * n_models,
+            ));
+        }
+        let mut models: BTreeMap<String, Arc<ModelCore>> = BTreeMap::new();
+        let mut handles = Vec::new();
+        let mut ready = Vec::new();
+        for PreparedModel {
+            config,
+            layers,
+            batch,
+            masks,
+            params,
+            qnet,
+        } in prepared
+        {
+            let core = Arc::new(ModelCore {
+                name: config.clone(),
+                batch,
                 features: layers[0],
                 classes: *layers.last().unwrap(),
                 shards: (0..workers_per_model)
                     .map(|_| Shard::new(cfg.queue_depth.max(1)))
                     .collect(),
-                metrics: ModelMetrics::new(entry.batch),
+                metrics: ModelMetrics::new(batch),
                 stop: AtomicBool::new(false),
             });
             for w in 0..workers_per_model {
                 let (ready_tx, ready_rx) = mpsc::channel();
-                ready.push((spec.config.clone(), ready_rx));
+                ready.push((config.clone(), ready_rx));
                 let core = Arc::clone(&core);
                 let dir = artifacts_dir.clone();
                 let manifest = Arc::clone(&manifest);
                 let params = Arc::clone(&params);
                 let masks = Arc::clone(&masks);
+                let qnet = qnet.clone();
                 let max_wait = cfg.max_wait;
                 handles.push(std::thread::spawn(move || {
-                    worker_loop(core, w, dir, manifest, params, masks, max_wait, ready_tx)
+                    worker_loop(core, w, dir, manifest, params, masks, qnet, max_wait, ready_tx)
                 }));
             }
             models.insert(core.name.clone(), core);
@@ -736,10 +811,66 @@ fn init_params(layers: &[usize], pattern: &NetPattern, params: Option<Vec<Value>
     p
 }
 
+/// Compact + quantize a model's dense parameters (w/b interleaved, the
+/// `forward` signature order) into a fixed-point net — the startup step
+/// of quantized serving: quantize once, serve many.
+fn quantized_net(
+    pattern: &NetPattern,
+    params: &[Value],
+    fmt: QFormat,
+) -> Result<FixedSparseNet> {
+    let mut pairs = Vec::with_capacity(pattern.junctions.len());
+    for i in 0..pattern.junctions.len() {
+        pairs.push((params[2 * i].as_f32()?, params[2 * i + 1].as_f32()?));
+    }
+    Ok(FixedSparseNet::from_f32(
+        &SparseNet::from_pattern_dense(pattern, &pairs),
+        fmt,
+    ))
+}
+
+/// How one worker executes a flushed batch: through a compiled backend
+/// `forward` program (f32), or through the model's shared quantized net
+/// (Qm.n fixed point — no engine, no compiled program).
+enum ExecPath {
+    /// Compiled f32 path; positional inputs are built once, only the
+    /// trailing x tensor is rewritten per flush.
+    Prog {
+        prog: Program,
+        inputs: Vec<Value>,
+        x_idx: usize,
+    },
+    /// Fixed-point path with its reusable quantized input buffer.
+    Quant {
+        net: Arc<FixedSparseNet>,
+        xq: Vec<i32>,
+    },
+}
+
+/// Argmax per occupied row (works on f32 logits and raw fixed-point
+/// words alike — dequantization is order-preserving, so the quantized
+/// path never needs it).
+fn argmax_rows<T: Copy + PartialOrd>(logits: &[T], rows: usize, classes: usize) -> Vec<usize> {
+    (0..rows)
+        .map(|i| {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
 /// One worker: builds its backend on this thread (PJRT executables wrap
-/// thread-affine raw handles), then loops collecting dynamic batches
+/// thread-affine raw handles; quantized models skip the backend and use
+/// the shared fixed-point net), then loops collecting dynamic batches
 /// from its own shard — stealing from the deepest sibling when dry —
 /// executing, and fanning results back out.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     core: Arc<ModelCore>,
     w: usize,
@@ -747,38 +878,53 @@ fn worker_loop(
     manifest: Arc<Manifest>,
     params: Arc<Vec<Value>>,
     masks: Arc<Vec<Value>>,
+    qnet: Option<Arc<FixedSparseNet>>,
     max_wait: Duration,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
-    let engine = match Engine::for_worker(&artifacts_dir, &manifest) {
-        Ok(e) => e,
-        Err(e) => {
-            let msg = format!("{e:#}");
-            let _ = ready.send(Err(e));
-            anyhow::bail!("{msg}");
-        }
-    };
-    let prog = match engine.load(&core.name, "forward") {
-        Ok(p) => p,
-        Err(e) => {
-            let msg = format!("{e:#}");
-            let _ = ready.send(Err(e));
-            anyhow::bail!("{msg}");
+    let (batch, features, classes) = (core.batch, core.features, core.classes);
+    let mut exec = match qnet {
+        Some(net) => ExecPath::Quant {
+            net,
+            xq: vec![0i32; batch * features],
+        },
+        None => {
+            let engine = match Engine::for_worker(&artifacts_dir, &manifest) {
+                Ok(e) => e,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let _ = ready.send(Err(e));
+                    anyhow::bail!("{msg}");
+                }
+            };
+            let prog = match engine.load(&core.name, "forward") {
+                Ok(p) => p,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let _ = ready.send(Err(e));
+                    anyhow::bail!("{msg}");
+                }
+            };
+            // weights and masks are immutable and `Program::run` only
+            // borrows them, so build the positional input list once and
+            // rewrite only the trailing x tensor per flush — no
+            // per-batch parameter clones
+            let mut inputs: Vec<Value> = Vec::with_capacity(params.len() + masks.len() + 1);
+            inputs.extend(params.iter().cloned());
+            inputs.extend(masks.iter().cloned());
+            inputs.push(Value::F32(vec![0f32; batch * features], vec![batch, features]));
+            let x_idx = inputs.len() - 1;
+            ExecPath::Prog {
+                prog,
+                inputs,
+                x_idx,
+            }
         }
     };
     let _ = ready.send(Ok(()));
     let my = &core.shards[w];
     let _close = ShardCloseGuard { shard: my };
-    let (batch, features, classes) = (core.batch, core.features, core.classes);
     let mut pending: Vec<Request> = Vec::with_capacity(batch);
-    // weights and masks are immutable and `Program::run` only borrows
-    // them, so build the positional input list once and rewrite only
-    // the trailing x tensor per flush — no per-batch parameter clones
-    let mut inputs: Vec<Value> = Vec::with_capacity(params.len() + masks.len() + 1);
-    inputs.extend(params.iter().cloned());
-    inputs.extend(masks.iter().cloned());
-    inputs.push(Value::F32(vec![0f32; batch * features], vec![batch, features]));
-    let x_idx = inputs.len() - 1;
     loop {
         // block for the first request of a batch (or drain + exit)
         let first = loop {
@@ -821,29 +967,52 @@ fn worker_loop(
         }
         // assemble the padded batch and execute once
         let occupancy = pending.len();
-        if let Value::F32(x, _) = &mut inputs[x_idx] {
-            for (i, req) in pending.iter().enumerate() {
-                x[i * features..(i + 1) * features].copy_from_slice(&req.features);
-            }
-            // zero the tail so rows left over from a fuller flush never
-            // leak into this batch's padding
-            x[occupancy * features..].fill(0.0);
-        }
-        let out = prog.run(&inputs)?;
-        let logits = out[0].as_f32()?;
         let m = &core.metrics;
+        let best_classes: Vec<usize> = match &mut exec {
+            ExecPath::Prog {
+                prog,
+                inputs,
+                x_idx,
+            } => {
+                if let Value::F32(x, _) = &mut inputs[*x_idx] {
+                    for (i, req) in pending.iter().enumerate() {
+                        x[i * features..(i + 1) * features].copy_from_slice(&req.features);
+                    }
+                    // zero the tail so rows left over from a fuller flush
+                    // never leak into this batch's padding
+                    x[occupancy * features..].fill(0.0);
+                }
+                let out = prog.run(inputs)?;
+                argmax_rows(out[0].as_f32()?, occupancy, classes)
+            }
+            ExecPath::Quant { net, xq } => {
+                let fmt = net.fmt;
+                // input clips count as saturations: a clipped feature
+                // violates the error bound the same way a saturated
+                // MAC does
+                let mut clipped = 0usize;
+                for (i, req) in pending.iter().enumerate() {
+                    for (d, &v) in xq[i * features..(i + 1) * features]
+                        .iter_mut()
+                        .zip(&req.features)
+                    {
+                        *d = fmt.quantize_counted(v, &mut clipped);
+                    }
+                }
+                xq[occupancy * features..].fill(0);
+                let (logits, sats) = net.logits_q(xq, batch);
+                if sats + clipped > 0 {
+                    m.quant_saturations
+                        .fetch_add((sats + clipped) as u64, Ordering::Relaxed);
+                }
+                argmax_rows(&logits, occupancy, classes)
+            }
+        };
         m.requests.fetch_add(occupancy as u64, Ordering::Relaxed);
         m.batches.fetch_add(1, Ordering::Relaxed);
         m.padded_rows.fetch_add((batch - occupancy) as u64, Ordering::Relaxed);
         m.occupancy[occupancy - 1].fetch_add(1, Ordering::Relaxed);
-        for (i, req) in pending.drain(..).enumerate() {
-            let row = &logits[i * classes..(i + 1) * classes];
-            let mut best = 0usize;
-            for (c, &v) in row.iter().enumerate() {
-                if v > row[best] {
-                    best = c;
-                }
-            }
+        for (req, best) in pending.drain(..).zip(best_classes) {
             let latency = req.submitted.elapsed();
             m.latency.record(latency);
             let _ = req.reply.send(Prediction {
@@ -878,6 +1047,7 @@ impl InferenceServer {
                 config: config.to_string(),
                 pattern: pattern.clone(),
                 params,
+                quant: None,
             }],
             cfg,
         )?;

@@ -66,6 +66,21 @@ impl BankedWeights {
     /// verify the bank's entity-ordered dump equals `wc`, proving the
     /// kernel's edge order *is* the banked layout.
     pub fn audit(&self, wc: &[f32]) -> Result<(), Clash> {
+        self.replay(wc)
+    }
+
+    /// The fixed-point variant of [`BankedWeights::audit`]: the same
+    /// replay over raw Qm.n words (`crate::nn::fixed`), because the
+    /// weight memories of the quantized hardware hold integer words —
+    /// banked weight replay carries whatever word type the execution
+    /// path uses, the geometry and port discipline are identical.
+    pub fn audit_fixed(&self, wq: &[i32]) -> Result<(), Clash> {
+        self.replay(wq)
+    }
+
+    /// Word-type-generic replay behind [`BankedWeights::audit`] /
+    /// [`BankedWeights::audit_fixed`].
+    fn replay<T: Copy + Default + PartialEq>(&self, wc: &[T]) -> Result<(), Clash> {
         if wc.len() != self.n_edges() {
             return Err(Clash {
                 memory: 0,
@@ -73,7 +88,7 @@ impl BankedWeights {
                 what: "weight buffer length does not match the banked geometry",
             });
         }
-        let mut bank = Bank::new("W", self.z, self.depth, Port::SimpleDual);
+        let mut bank: Bank<T> = Bank::new("W", self.z, self.depth, Port::SimpleDual);
         bank.load(wc);
         for t in 0..self.depth {
             for e in self.lanes(t) {
@@ -134,5 +149,57 @@ mod tests {
     #[should_panic(expected = "does not divide")]
     fn non_dividing_z_is_rejected() {
         BankedWeights::new(10, 3);
+    }
+
+    #[test]
+    fn z_equals_one_serial_view_audits_clean() {
+        // z = 1 is the fully serial hardware: one memory, depth = |W|,
+        // every cycle a 1R+1W pair on the same memory — legal on a
+        // simple dual port, and the layout is trivially the identity
+        let view = BankedWeights::new(13, 1);
+        assert_eq!(view.depth, 13);
+        assert_eq!(view.location_of(7), (0, 7));
+        assert_eq!(view.lanes(5), 5..6);
+        let wc: Vec<f32> = (0..13).map(|x| x as f32 - 6.0).collect();
+        view.audit(&wc).unwrap();
+    }
+
+    #[test]
+    fn prime_edge_counts_only_admit_trivial_z() {
+        // a prime |W| only divides by 1 and itself; both extremes must
+        // audit clean (z = |W| is the fully parallel single-cycle view)
+        for e in [7usize, 13, 101] {
+            let wc: Vec<f32> = (0..e).map(|x| x as f32 * 0.25).collect();
+            BankedWeights::new(e, 1).audit(&wc).unwrap();
+            let full = BankedWeights::new(e, e);
+            assert_eq!(full.depth, 1);
+            full.audit(&wc).unwrap();
+        }
+    }
+
+    #[test]
+    fn single_junction_single_edge_view() {
+        // the degenerate single-junction, single-edge net (L = 1 with a
+        // 1x1 junction): z = depth = 1
+        let view = BankedWeights::new(1, 1);
+        assert_eq!(view.n_edges(), 1);
+        view.audit(&[0.5]).unwrap();
+        view.audit_fixed(&[512]).unwrap();
+    }
+
+    #[test]
+    fn fixed_word_replay_matches_f32_geometry() {
+        // audit and audit_fixed run the identical schedule; quantized
+        // words must replay clash-free through the same ports
+        let edges = [12usize, 7, 100];
+        for &e in &edges {
+            let zcfg = balanced_for_edges(&[e], 5);
+            let view = BankedWeights::new(e, zcfg.z[0]);
+            let wq: Vec<i32> = (0..e as i32).map(|x| x * 17 - 40).collect();
+            view.audit_fixed(&wq).unwrap();
+        }
+        // length mismatch is reported, not panicked
+        let err = BankedWeights::new(8, 2).audit_fixed(&[0i32; 7]).unwrap_err();
+        assert!(err.what.contains("length"));
     }
 }

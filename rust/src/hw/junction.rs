@@ -22,6 +22,7 @@
 //!   which `z_next` must cover (eq. 9).
 
 use crate::hw::memory::{Bank, Clash, Port};
+use crate::nn::fixed::QFormat;
 use crate::sparsity::clash_free::AccessSchedule;
 use crate::sparsity::config::JunctionShape;
 use crate::sparsity::pattern::Pattern;
@@ -88,6 +89,28 @@ pub struct FfOut {
     pub a: Vec<f32>,
     /// Activation derivatives a'(h) (eq. 2c).
     pub adot: Vec<f32>,
+    /// Cycle/access statistics of the pass.
+    pub stats: OpStats,
+}
+
+/// FF outputs of the fixed-point pass: raw Qm.n words plus the pass
+/// statistics (the quantized twin of [`FfOut`]).
+#[derive(Clone, Debug)]
+pub struct QFfOut {
+    /// Raw pre-activations h (eq. 2a) in Qm.n words.
+    pub h_raw: Vec<i32>,
+    /// Raw activations a(h).
+    pub a_raw: Vec<i32>,
+    /// ReLU derivative bits (0/1 per right neuron — the single bit the
+    /// hardware's a-dot memories store per word for ReLU; all 1 for the
+    /// linear output junction).
+    pub adot_bits: Vec<i32>,
+    /// Outputs that saturated at the Qm.n range.
+    pub saturations: usize,
+    /// Weights / biases / input activations that clipped at the Qm.n
+    /// range while being quantized into the banks (a clipped word voids
+    /// the forward error bound just like a saturated MAC).
+    pub clipped_words: usize,
     /// Cycle/access statistics of the pass.
     pub stats: OpStats,
 }
@@ -252,6 +275,105 @@ impl JunctionUnit {
         stats.right_accesses = self.shape.n_right;
         let a_out = right.dump(self.shape.n_right);
         Ok(FfOut { h, a: a_out, adot, stats })
+    }
+
+    /// Fixed-point feedforward: the same one-junction-cycle schedule as
+    /// [`JunctionUnit::feedforward`], executed in Qm.n arithmetic against
+    /// `i32`-word banks — the arithmetic the paper's FPGA companion
+    /// (arXiv:1806.01087) actually computes in. The current f32 weight
+    /// bank contents are quantized into a fixed-point weight bank (the
+    /// DMA step that loads integer words into the BRAMs), activations
+    /// stream through quantized left banks under the identical clash-free
+    /// access schedule and port discipline, and each right neuron folds
+    /// its wide MAC accumulator once via [`QFormat::fold_mac`] on
+    /// completion.
+    ///
+    /// This makes `hw` the executable source of truth for the
+    /// *arithmetic*, not just the scheduling: the batch kernel
+    /// [`crate::nn::fixed::FixedSparseLayer::forward`] must produce
+    /// bit-identical raw words (`i64` accumulation is exact, so the edge
+    /// order cannot change the sum) — `tests/prop_fixed.rs` pins that.
+    pub fn feedforward_quantized(
+        &mut self,
+        a_prev: &[f32],
+        bias: &[f32],
+        act: Act,
+        fmt: QFormat,
+    ) -> Result<QFfOut, Clash> {
+        assert_eq!(a_prev.len(), self.shape.n_left);
+        assert_eq!(bias.len(), self.shape.n_right);
+        let n_edges = self.shape.n_right * self.d_in;
+        // quantize the weight bank contents into the fixed-point bank
+        // (untimed host DMA, like load_weights_*), counting range clips
+        let mut clipped_words = 0usize;
+        let wq = fmt.quantize_slice_counted(&self.weights.dump(n_edges), &mut clipped_words);
+        let mut wbank: Bank<i32> = Bank::new("Wq", self.z, self.junction_cycle, Port::SimpleDual);
+        wbank.load(&wq);
+        let mut left: Bank<i32> = Bank::new("aq", self.z, self.sched.depth, Port::Single);
+        left.load(&fmt.quantize_slice_counted(a_prev, &mut clipped_words));
+        let mut right: Bank<i32> = Bank::new(
+            "aq'",
+            self.z_next,
+            ceil_div(self.shape.n_right, self.z_next),
+            Port::Single,
+        );
+        let bq = fmt.quantize_slice_counted(bias, &mut clipped_words);
+
+        // wide per-neuron MAC accumulators (the DSP accumulator chain)
+        let mut acc = vec![0i64; self.shape.n_right];
+        let mut cnt = vec![0usize; self.shape.n_right];
+        let mut h_raw = vec![0i32; self.shape.n_right];
+        let mut adot_bits = vec![0i32; self.shape.n_right];
+        let mut saturations = 0usize;
+        let mut stats = OpStats::default();
+
+        for t in 0..self.junction_cycle {
+            let mut completed: Vec<usize> = Vec::new();
+            for m in 0..self.z {
+                let e = t * self.z + m;
+                let j = e / self.d_in;
+                let (wm, wa) = (e % self.z, e / self.z);
+                let w = wbank.read(wm, wa)?;
+                let (lm, la) = self.sched.cycles[t][m];
+                let a = left.read(lm, la)?;
+                acc[j] += w as i64 * a as i64;
+                cnt[j] += 1;
+                if cnt[j] == self.d_in {
+                    completed.push(j);
+                }
+            }
+            for &j in &completed {
+                let hv = fmt.fold_mac(acc[j], bq[j], &mut saturations);
+                h_raw[j] = hv;
+                let av = match act {
+                    Act::Relu => hv.max(0),
+                    Act::Linear => hv,
+                };
+                adot_bits[j] = match act {
+                    Act::Relu => i32::from(hv > 0),
+                    Act::Linear => 1,
+                };
+                right.write_entity(j, av)?;
+            }
+            stats.max_rights_per_cycle = stats.max_rights_per_cycle.max(completed.len());
+            wbank.tick();
+            left.tick();
+            right.tick();
+            stats.cycles += 1;
+        }
+        debug_assert!(cnt.iter().all(|&c| c == self.d_in));
+        stats.weight_reads = self.junction_cycle * self.z;
+        stats.left_reads = self.junction_cycle * self.z;
+        stats.right_accesses = self.shape.n_right;
+        let a_raw = right.dump(self.shape.n_right);
+        Ok(QFfOut {
+            h_raw,
+            a_raw,
+            adot_bits,
+            saturations,
+            clipped_words,
+            stats,
+        })
     }
 
     /// Backprop (eq. 3b): compute delta for the *left* layer from the right
@@ -526,6 +648,44 @@ mod tests {
         let sched_big = schedule(12, 4, 2, Flavor::Type1 { dither: false }, &mut rng2);
         let unit_sparse = JunctionUnit::new(shape, 3, sched_big, 2);
         assert_eq!(unit_sparse.junction_cycle, 6);
+    }
+
+    #[test]
+    fn quantized_ff_tracks_f32_ff() {
+        use crate::nn::fixed::QFormat;
+        let fmt = QFormat::default();
+        for (nl, nr, dout, z) in [(12, 8, 2, 4), (40, 10, 2, 8)] {
+            let (mut unit, _) = setup(nl, nr, dout, z, 21);
+            let mut rng = Rng::new(22);
+            let a: Vec<f32> = (0..nl).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+            let bias: Vec<f32> = (0..nr).map(|_| rng.uniform() - 0.5).collect();
+            let f32_out = unit.feedforward(&a, &bias, Act::Relu).unwrap();
+            let q_out = unit
+                .feedforward_quantized(&a, &bias, Act::Relu, fmt)
+                .unwrap();
+            assert_eq!(q_out.saturations, 0, "toy junction must not saturate");
+            assert_eq!(q_out.stats.cycles, f32_out.stats.cycles);
+            // single layer: d_in quantized products + bias + one rounding
+            let d_in = unit.d_in as f32;
+            let amax = a.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let wmax = unit
+                .dump_weights_dense()
+                .iter()
+                .fold(0f32, |m, v| m.max(v.abs()));
+            let bound = d_in * (amax + wmax) * 0.5 * fmt.ulp() + fmt.ulp() + 1e-5;
+            for (j, (&hq, &hf)) in q_out.h_raw.iter().zip(&f32_out.h).enumerate() {
+                let got = fmt.dequantize(hq);
+                assert!(
+                    (got - hf).abs() <= bound,
+                    "({nl},{nr}) neuron {j}: {got} vs {hf} (bound {bound})"
+                );
+            }
+            // activation and derivative bits agree with the raw sign
+            for (j, &hq) in q_out.h_raw.iter().enumerate() {
+                assert_eq!(q_out.a_raw[j], hq.max(0));
+                assert_eq!(q_out.adot_bits[j], i32::from(hq > 0));
+            }
+        }
     }
 
     #[test]

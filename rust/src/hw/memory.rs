@@ -4,6 +4,12 @@
 //! two operations in a cycle clash; for simple dual-ported memories (one
 //! read port + one write port) a read and a write may share a cycle but
 //! two reads or two writes clash.
+//!
+//! Memories are generic over their word type (default `f32`): the same
+//! clash-checked banks carry f32 words for the reference simulator and
+//! raw `i32` Qm.n words for the fixed-point execution path
+//! ([`crate::nn::fixed`]) — the port discipline is a property of the
+//! BRAM, not of what the words mean.
 
 /// Port discipline of a memory (footnote 4: weight and delta memories are
 /// simple dual-ported; a and a-dot memories are single-ported).
@@ -15,12 +21,14 @@ pub enum Port {
     SimpleDual,
 }
 
-/// One memory (a BRAM column in Fig. 2b / Fig. 4).
+/// One memory (a BRAM column in Fig. 2b / Fig. 4), generic over its word
+/// type (`f32` reference words by default, raw `i32` fixed-point words
+/// for the quantized path).
 #[derive(Clone, Debug)]
-pub struct Memory {
+pub struct Memory<T = f32> {
     /// The memory's port discipline.
     pub port: Port,
-    data: Vec<f32>,
+    data: Vec<T>,
     reads_this_cycle: usize,
     writes_this_cycle: usize,
 }
@@ -42,12 +50,12 @@ impl std::fmt::Display for Clash {
     }
 }
 
-impl Memory {
+impl<T: Copy + Default> Memory<T> {
     /// A zeroed memory of `depth` words with the given port discipline.
     pub fn new(depth: usize, port: Port) -> Self {
         Self {
             port,
-            data: vec![0.0; depth],
+            data: vec![T::default(); depth],
             reads_this_cycle: 0,
             writes_this_cycle: 0,
         }
@@ -85,11 +93,12 @@ impl Memory {
 
 /// A bank of `z` memories accessed in parallel each cycle (Fig. 2b).
 /// Tracks the cycle counter and enforces clash-freedom on every access.
+/// Generic over the word type like [`Memory`].
 #[derive(Clone, Debug)]
-pub struct Bank {
+pub struct Bank<T = f32> {
     /// Label used in diagnostics (`"W"`, `"a"`, `"d"`...).
     pub name: &'static str,
-    mems: Vec<Memory>,
+    mems: Vec<Memory<T>>,
     cycle: usize,
     /// Reads issued across all cycles.
     pub total_reads: usize,
@@ -100,7 +109,7 @@ pub struct Bank {
     accesses_this_cycle: usize,
 }
 
-impl Bank {
+impl<T: Copy + Default> Bank<T> {
     /// A bank of `z` zeroed memories, each `depth` words.
     pub fn new(name: &'static str, z: usize, depth: usize, port: Port) -> Self {
         Self {
@@ -141,7 +150,7 @@ impl Bank {
     }
 
     /// Read `addr` of memory `mem` this cycle (clash-checked).
-    pub fn read(&mut self, mem: usize, addr: usize) -> Result<f32, Clash> {
+    pub fn read(&mut self, mem: usize, addr: usize) -> Result<T, Clash> {
         let m = &mut self.mems[mem];
         m.check_read().map_err(|what| Clash {
             memory: mem,
@@ -155,7 +164,7 @@ impl Bank {
     }
 
     /// Write `v` to `addr` of memory `mem` this cycle (clash-checked).
-    pub fn write(&mut self, mem: usize, addr: usize, v: f32) -> Result<(), Clash> {
+    pub fn write(&mut self, mem: usize, addr: usize, v: T) -> Result<(), Clash> {
         let m = &mut self.mems[mem];
         m.check_write().map_err(|what| Clash {
             memory: mem,
@@ -181,19 +190,19 @@ impl Bank {
     }
 
     /// Read entity `n` through its Fig. 4 location.
-    pub fn read_entity(&mut self, n: usize) -> Result<f32, Clash> {
+    pub fn read_entity(&mut self, n: usize) -> Result<T, Clash> {
         let (m, a) = self.location_of(n);
         self.read(m, a)
     }
 
     /// Write entity `n` through its Fig. 4 location.
-    pub fn write_entity(&mut self, n: usize, v: f32) -> Result<(), Clash> {
+    pub fn write_entity(&mut self, n: usize, v: T) -> Result<(), Clash> {
         let (m, a) = self.location_of(n);
         self.write(m, a, v)
     }
 
     /// Bulk-load contents outside of timed simulation (e.g. DMA from host).
-    pub fn load(&mut self, values: &[f32]) {
+    pub fn load(&mut self, values: &[T]) {
         assert!(values.len() <= self.z() * self.depth());
         for (n, &v) in values.iter().enumerate() {
             let (m, a) = self.location_of(n);
@@ -202,7 +211,7 @@ impl Bank {
     }
 
     /// Dump contents (entity-ordered) outside of timed simulation.
-    pub fn dump(&self, n: usize) -> Vec<f32> {
+    pub fn dump(&self, n: usize) -> Vec<T> {
         (0..n)
             .map(|i| {
                 let (m, a) = self.location_of(i);
@@ -272,5 +281,22 @@ mod tests {
         let vals: Vec<f32> = (0..10).map(|x| x as f32 * 0.5).collect();
         b.load(&vals);
         assert_eq!(b.dump(10), vals);
+    }
+
+    #[test]
+    fn fixed_word_bank_keeps_port_discipline() {
+        // the same bank model carries raw i32 fixed-point words; the
+        // clash rules are unchanged because they never look at the data
+        let mut b: Bank<i32> = Bank::new("Wq", 2, 3, Port::SimpleDual);
+        let vals: Vec<i32> = (0..6).map(|x| x * 37 - 50).collect();
+        b.load(&vals);
+        assert_eq!(b.read(0, 0).unwrap(), vals[0]);
+        assert!(b.write(0, 1, 99).is_ok(), "1R+1W legal on simple dual port");
+        assert!(b.read(0, 2).is_err(), "second read clashes");
+        b.tick();
+        // the write landed at memory 0, address 1 = entity 2
+        assert_eq!(b.read_entity(2).unwrap(), 99);
+        assert_eq!(b.dump(6)[2], 99);
+        assert_eq!(b.dump(6)[1], vals[1]);
     }
 }

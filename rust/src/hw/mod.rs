@@ -6,11 +6,14 @@
 //!   detection (footnote 6's definition of a clash),
 //! - [`banked`]: the Fig. 4 banked weight-memory geometry as an auditable
 //!   view — shared with the software pipelined trainer (`nn::pipeline`),
-//!   which replays its weight traffic through it,
+//!   which replays its weight traffic through it; carries f32 *or* raw
+//!   fixed-point words (the quantized path's integer weight memories),
 //! - [`zconfig`]: degree-of-parallelism selection, the `C_i = |W_i|/z_i = C`
 //!   balance rule and the eq. (9) stall-freedom constraint,
 //! - [`junction`]: numeric FF / BP / UP execution of one junction against
-//!   the banked memories, replaying the clash-free access schedule,
+//!   the banked memories, replaying the clash-free access schedule — in
+//!   f32 and, via `feedforward_quantized`, in saturating Qm.n fixed
+//!   point (bit-identical to the `nn::fixed` batch kernels),
 //! - [`pipeline`]: L-stage junction pipelining + FF/BP/UP operational
 //!   parallelism (Fig. 2c), throughput/latency/staleness accounting,
 //! - [`storage`]: the Table-I storage cost model.

@@ -359,6 +359,54 @@ mod tests {
     }
 
     #[test]
+    fn balanced_for_edges_prime_counts() {
+        // prime |W|: the only admissible cycle counts are 1 and |W|, so
+        // any target below |W| collapses to C = 1 (fully parallel) —
+        // exact division must still hold and nothing may panic
+        for e in [7usize, 13, 101, 997] {
+            let cfg = balanced_for_edges(&[e], e / 2);
+            assert_eq!(cfg.cycles, vec![1], "prime {e}");
+            assert_eq!(cfg.z, vec![e]);
+            assert!(cfg.balanced);
+            // target >= |W| keeps the fully serial z = 1 view
+            let cfg = balanced_for_edges(&[e], e);
+            assert_eq!(cfg.cycles, vec![e]);
+            assert_eq!(cfg.z, vec![1]);
+        }
+    }
+
+    #[test]
+    fn balanced_for_edges_single_junction_and_unit_edges() {
+        // single-junction nets (L = 1), down to the 1-edge degenerate
+        let cfg = balanced_for_edges(&[1], 100);
+        assert_eq!((cfg.z[0], cfg.cycles[0]), (1, 1));
+        assert!(cfg.balanced);
+        assert_eq!(cfg.idle_fraction(), 0.0);
+        let cfg = balanced_for_edges(&[42], 1);
+        assert_eq!((cfg.z[0], cfg.cycles[0]), (42, 1));
+    }
+
+    #[test]
+    fn balanced_for_edges_mixed_prime_invariants() {
+        // mixing primes with composites: every junction still divides
+        // exactly, the junction cycle is the max, idle fraction in [0, 1)
+        let edges = [17usize, 4, 97, 3510];
+        let cfg = balanced_for_edges(&edges, 10);
+        for ((&z, &c), &e) in cfg.z.iter().zip(&cfg.cycles).zip(&edges) {
+            assert_eq!(z * c, e);
+            assert!(c <= 10);
+        }
+        assert_eq!(cfg.junction_cycle, *cfg.cycles.iter().max().unwrap());
+        assert!((0.0..1.0).contains(&cfg.idle_fraction()));
+        // banked views built from the config must audit clean, z = 1
+        // included
+        for (&e, &z) in edges.iter().zip(&cfg.z) {
+            let wc: Vec<f32> = (0..e).map(|x| x as f32 * 0.5 - 1.0).collect();
+            crate::hw::banked::BankedWeights::new(e, z).audit(&wc).unwrap();
+        }
+    }
+
+    #[test]
     fn timit_junction_cycle_scaling() {
         // Sec. IV-B: TIMIT keeps z_net = (13, 13); junction cycle grows from
         // 90 cycles at rho=7.69% to 810 at rho=69.23%.

@@ -15,7 +15,7 @@
 //! |---|---|---|
 //! | [`sparsity`] | Sec. II, III-C, App. A/C | density math, clash-free / structured / random pattern generators, audits |
 //! | [`hw`] | Sec. III, Table I | cycle-accurate junction/pipeline simulator, banked memories, storage model |
-//! | [`nn`] | Sec. II eq. 2–4, Sec. III-A/D | reference dense + CSR compacted kernels (batch-parallel), Adam trainers, and the pipelined training engine ([`nn::pipeline`]) executing the FF/BP/UP interleave |
+//! | [`nn`] | Sec. II eq. 2–4, Sec. III-A/D | reference dense + CSR compacted kernels (batch-parallel), Adam trainers, the pipelined training engine ([`nn::pipeline`]) executing the FF/BP/UP interleave, and the Qm.n fixed-point execution path ([`nn::fixed`]) |
 //! | [`runtime`] | — | backend-agnostic [`runtime::Engine`] facade: native or PJRT execution of the manifest programs, plus the native-only streaming `train_pipelined` path |
 //! | [`coordinator`] | Sec. III (scale-out analogue) | training sessions (fused + pipelined); the multi-worker sharded inference service + load generator |
 //! | [`data`] | Sec. IV | synthetic class-conditional surrogates for MNIST / Reuters / TIMIT / CIFAR |

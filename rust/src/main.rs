@@ -22,7 +22,9 @@ use std::time::Duration;
 
 use pds::coordinator::loadgen::{self, LoadSpec};
 use pds::coordinator::{InferenceService, PipelinedTrainSession, ServerConfig};
+use pds::nn::fixed::{FixedSparseNet, QFormat};
 use pds::nn::pipeline::PipelineConfig;
+use pds::nn::sparse::SparseNet;
 use pds::data::Spec;
 use pds::exp::common::Scale;
 use pds::hw::junction::{Act, JunctionUnit};
@@ -77,6 +79,18 @@ fn artifacts_dir(opts: &BTreeMap<String, String>) -> String {
         .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
 }
 
+/// Parse an optional Qm.n option: absent -> `None`, a bare flag -> the
+/// default format, a value -> that format (or an error).
+fn parse_quant(opts: &BTreeMap<String, String>, key: &str) -> anyhow::Result<Option<QFormat>> {
+    match opts.get(key).map(String::as_str) {
+        None => Ok(None),
+        Some("true") => Ok(Some(QFormat::default())),
+        Some(s) => QFormat::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("--{key}: bad fixed-point format '{s}' (want Qm.n)")),
+    }
+}
+
 fn run(args: Vec<String>) -> anyhow::Result<()> {
     let Some(cmd) = args.first().cloned() else {
         print_help();
@@ -119,14 +133,19 @@ fn print_help() {
            simulate  --left 800 --right 100 --dout 20 --z 200\n\
            train     --config tiny [--dout 8,4] [--epochs 5] [--lr 1e-3] [--fc]\n\
                      [--pipeline] [--depth N] [--batch N] [--z0 N]\n\
+                     [--quant-eval [Qm.n]]\n\
                      (--pipeline streams minibatches through the Sec. III-A\n\
                       FF/BP/UP junction pipeline; --depth 1 = sequential,\n\
-                      default = full 2L-deep schedule; native backend only)\n\
+                      default = full 2L-deep schedule; native backend only.\n\
+                      --quant-eval re-evaluates the trained net in Qm.n\n\
+                      fixed point, default Q5.10)\n\
            serve     --models tiny,mnist_fc2 [--workers 2] [--queue-depth 256]\n\
                      [--clients 4] [--requests 200] [--wait-ms 2]\n\
+                     [--quant [Qm.n]]  (serve in fixed point, default Q5.10)\n\
            serve-bench --models tiny,mnist_fc2 [--workers 4] [--clients 8]\n\
                      [--requests 200] [--wait-ms 2] [--queue-depth 256]\n\
-                     [--think-us 0] [--burst 1] [--out BENCH_serve.json]\n\
+                     [--think-us 0] [--burst 1] [--quant [Qm.n]]\n\
+                     [--out BENCH_serve.json]\n\
            exp <fig1|table1|table2|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table3|pipeline|all> [--quick]\n\
          \n\
          global: --artifacts <dir> (default: ./artifacts)"
@@ -297,6 +316,68 @@ fn cmd_train(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     }
     session.check_mask_invariant()?;
     println!("mask invariant holds: excluded edges exactly zero after training");
+    if let Some(fmt) = parse_quant(opts, "quant-eval")? {
+        // rebuild the compacted net from the session's dense parameters
+        let mut pairs = Vec::with_capacity(pattern.junctions.len());
+        for j in 0..pattern.junctions.len() {
+            pairs.push((
+                session.param(j, false).as_f32()?,
+                session.param(j, true).as_f32()?,
+            ));
+        }
+        let snet = SparseNet::from_pattern_dense(&pattern, &pairs);
+        // sequential path has no trainer-owned banked views, so derive a
+        // balanced z_net and replay the quantized words through it
+        let edges: Vec<usize> = snet.junctions.iter().map(|j| j.n_edges()).collect();
+        let zcfg = pds::hw::zconfig::balanced_for_edges(&edges, 100);
+        for (junction, &z) in snet.junctions.iter().zip(&zcfg.z) {
+            pds::hw::banked::BankedWeights::new(junction.n_edges(), z)
+                .audit_fixed(&fmt.quantize_slice(&junction.wc))
+                .map_err(|e| anyhow::anyhow!("banked quantized audit: {e}"))?;
+        }
+        println!("banked quantized weight audit clean ({fmt}, z_net {:?})", zcfg.z);
+        quant_eval_report(&snet, &splits.test, fmt)?;
+    }
+    Ok(())
+}
+
+/// `train --quant-eval`: re-evaluate a trained compacted net in Qm.n
+/// fixed point and report the accuracy delta plus every headroom
+/// violation (clipped parameters, saturated outputs). Banked quantized
+/// replay is the caller's job — the pipelined path audits through the
+/// trainer's *actual* banked views, the sequential path derives its own.
+fn quant_eval_report(
+    snet: &SparseNet,
+    test: &pds::data::Dataset,
+    fmt: QFormat,
+) -> anyhow::Result<()> {
+    let qnet = FixedSparseNet::from_f32(snet, fmt);
+    let clipped = qnet.clipped_params();
+    let classes = *snet.layers.last().unwrap();
+    let (mut correct_f, mut correct_q, mut sats, mut seen) = (0usize, 0usize, 0usize, 0usize);
+    let idxs: Vec<usize> = (0..test.n).collect();
+    for chunk in idxs.chunks(256) {
+        let (x, y) = test.gather(chunk);
+        let lf = snet.logits(&x, y.len());
+        for (i, &yi) in y.iter().enumerate() {
+            let row = &lf[i * classes..(i + 1) * classes];
+            let best = (0..classes).max_by(|&a, &b| row[a].total_cmp(&row[b])).unwrap();
+            if best == yi as usize {
+                correct_f += 1;
+            }
+        }
+        let (cq, s) = qnet.eval_batch(&x, &y);
+        correct_q += cq;
+        sats += s;
+        seen += y.len();
+    }
+    println!(
+        "quant eval {fmt}: f32 test acc {:.1}% | quantized {:.1}% ({:+.2} pts), \
+         {sats} saturated outputs / {clipped} clipped params over {seen} samples",
+        100.0 * correct_f as f64 / seen.max(1) as f64,
+        100.0 * correct_q as f64 / seen.max(1) as f64,
+        100.0 * (correct_q as f64 - correct_f as f64) / seen.max(1) as f64,
+    );
     Ok(())
 }
 
@@ -377,6 +458,11 @@ fn cmd_train_pipelined(
     );
     t.audit_banked()?;
     println!("banked weight audit clean: clash-free under the Fig. 4 port discipline");
+    if let Some(fmt) = parse_quant(opts, "quant-eval")? {
+        t.audit_banked_quantized(fmt)?;
+        println!("banked quantized weight audit clean ({fmt})");
+        quant_eval_report(t.net(), &splits.test, fmt)?;
+    }
     Ok(())
 }
 
@@ -421,10 +507,16 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let wait_ms: u64 = opts.get("wait-ms").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let workers: usize = opts.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let queue_depth: usize = opts.get("queue-depth").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let quant = parse_quant(opts, "quant")?;
     let dir = artifacts_dir(opts);
     let specs = models
         .iter()
-        .map(|m| loadgen::model_spec(&dir, m, 0.25, 3))
+        .map(|m| {
+            loadgen::model_spec(&dir, m, 0.25, 3).map(|s| match quant {
+                Some(fmt) => s.with_quant(fmt),
+                None => s,
+            })
+        })
         .collect::<anyhow::Result<Vec<_>>>()?;
     let svc = InferenceService::start(
         &dir,
@@ -438,7 +530,11 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     )?;
     println!(
         "serving {models:?}: {workers} workers/model, queue depth {queue_depth}, \
-         max_wait {wait_ms}ms; {clients} clients x {requests} requests per model"
+         max_wait {wait_ms}ms; {clients} clients x {requests} requests per model{}",
+        match quant {
+            Some(fmt) => format!("; fixed-point {fmt}"),
+            None => String::new(),
+        }
     );
     let load = LoadSpec {
         clients,
@@ -474,13 +570,21 @@ fn cmd_serve_bench(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         think_time: Duration::from_micros(think_us),
         burst,
     };
+    let quant = parse_quant(opts, "quant")?;
     let max_wait = Duration::from_millis(wait_ms);
-    println!("serve-bench: models {models:?}, {clients} clients x {requests} requests per model");
+    println!(
+        "serve-bench: models {models:?}, {clients} clients x {requests} requests per model{}",
+        match quant {
+            Some(fmt) => format!(", fixed-point {fmt}"),
+            None => String::new(),
+        }
+    );
     let sweep: Vec<usize> = if workers <= 1 { vec![1] } else { vec![1, workers] };
     let mut scenarios = Vec::new();
     for w in sweep {
         println!("-- {w} worker(s) per model --");
-        let reports = loadgen::bench_service(&dir, &models, w, queue_depth, max_wait, &load, 7)?;
+        let reports =
+            loadgen::bench_service(&dir, &models, w, queue_depth, max_wait, &load, 7, quant)?;
         for r in &reports {
             r.print();
         }
@@ -497,7 +601,7 @@ fn cmd_serve_bench(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     }
     if let Some(path) = opts.get("out") {
         let doc = loadgen::bench_json(&scenarios);
-        std::fs::write(path, format!("{doc}\n"))?;
+        loadgen::write_bench_json(path, doc)?;
         println!("wrote {path}");
     }
     Ok(())

@@ -1,0 +1,873 @@
+//! Fixed-point (Qm.n) execution: the arithmetic half of the hardware
+//! claim.
+//!
+//! The paper's FPGA architecture does not compute in f32. The companion
+//! implementation ("A Highly Parallel FPGA Implementation of Sparse
+//! Neural Network Training", arXiv:1806.01087) runs the whole FF/BP/UP
+//! pipeline in narrow signed fixed-point with saturating arithmetic and
+//! an interpolated activation table, and "Sparsely-Connected Neural
+//! Networks" (arXiv:1611.01427) shows quantized sparse MLPs keep their
+//! accuracy at a fraction of the storage. This module is that numeric
+//! universe for the reproduction:
+//!
+//! - [`QFormat`] — a configurable Qm.n signed fixed-point format (sign +
+//!   `m` integer bits + `n` fraction bits in an `i32` word) with
+//!   round-to-nearest [`QFormat::quantize`] / [`QFormat::dequantize`]
+//!   and *saturating* [`QFormat::sat_add`] / [`QFormat::sat_mul`] (the
+//!   hardware clamps, it never wraps),
+//! - [`SigmoidLut`] — the companion hardware's activation evaluator: a
+//!   sigmoid lookup table with linear interpolation between nodes and a
+//!   documented worst-case error bound ([`SigmoidLut::max_error`]).
+//!   The paper's MLP configs in this repo are ReLU networks, so the
+//!   execution surfaces use [`relu_raw`]; the LUT is the validated
+//!   building block for sigmoid-activated configs (tests pin its error
+//!   bound and monotonicity), not part of the ReLU forward paths,
+//! - [`FixedSparseLayer`] / [`FixedSparseNet`] — fixed-point twins of the
+//!   compacted-edge [`crate::nn::sparse`] kernels (FF / BP / UP), with
+//!   wide (`i64`) MAC accumulators and a single rounding shift per
+//!   output, the way DSP-block MAC chains behave,
+//! - [`forward_error_bound`] — the derivable |quantized − f32| forward
+//!   error bound the differential tests enforce (derivation in
+//!   `ARCHITECTURE.md` §Fixed-point arithmetic).
+//!
+//! The f32 kernels are untouched: the quantized path is a parallel
+//! universe selected per call (runtime `forward_quantized` program,
+//! `serve --quant`, `train --quant-eval`), never a silent replacement.
+//!
+//! Bit-exactness contract: [`FixedSparseLayer::forward`] and the
+//! cycle-accurate [`crate::hw::junction::JunctionUnit::feedforward_quantized`]
+//! produce *identical raw words* for the same junction — `i64`
+//! accumulation is exact, so edge order cannot change the sum. The
+//! differential tests in `tests/prop_fixed.rs` pin that contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::nn::sparse::{SparseLayer, SparseNet};
+use crate::util::parallel;
+
+/// A signed Qm.n fixed-point format: one sign bit, `int_bits` integer
+/// bits, `frac_bits` fraction bits, stored in an `i32` raw word scaled by
+/// `2^frac_bits`. Representable range is `[-2^m, 2^m - 2^-n]` with a
+/// resolution (ULP) of `2^-n`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    /// Integer bits `m` (magnitude range `±2^m`).
+    pub int_bits: u32,
+    /// Fraction bits `n` (resolution `2^-n`).
+    pub frac_bits: u32,
+}
+
+impl Default for QFormat {
+    /// Q5.10: range ±32, resolution ~0.001 — enough integer headroom for
+    /// every built-in config's pre-activations at normalized inputs, with
+    /// a forward error bound well under the class-decision scale.
+    fn default() -> Self {
+        QFormat {
+            int_bits: 5,
+            frac_bits: 10,
+        }
+    }
+}
+
+impl std::fmt::Display for QFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Q{}.{}", self.int_bits, self.frac_bits)
+    }
+}
+
+/// Round-half-up arithmetic right shift (the hardware's MAC output
+/// rounding): `v / 2^n` rounded to the nearest integer, ties toward
+/// +infinity. Exact in `i64` for every product of two in-range raw words.
+#[inline]
+fn shift_round(v: i64, n: u32) -> i64 {
+    if n == 0 {
+        v
+    } else {
+        (v + (1i64 << (n - 1))) >> n
+    }
+}
+
+impl QFormat {
+    /// A validated Qm.n format; panics unless `1 <= m + n <= 31` (the
+    /// word must fit an `i32` with its sign bit).
+    pub fn new(int_bits: u32, frac_bits: u32) -> QFormat {
+        QFormat::new_checked(int_bits, frac_bits)
+            .unwrap_or_else(|| panic!("invalid fixed-point format Q{int_bits}.{frac_bits}"))
+    }
+
+    /// Like [`QFormat::new`] but `None` instead of panicking.
+    pub fn new_checked(int_bits: u32, frac_bits: u32) -> Option<QFormat> {
+        let bits = int_bits + frac_bits;
+        if (1..=31).contains(&bits) {
+            Some(QFormat {
+                int_bits,
+                frac_bits,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Parse `"Qm.n"` (e.g. `"Q5.10"`, case-insensitive prefix).
+    pub fn parse(s: &str) -> Option<QFormat> {
+        let rest = s.trim().strip_prefix(['Q', 'q'])?;
+        let (m, n) = rest.split_once('.')?;
+        QFormat::new_checked(m.parse().ok()?, n.parse().ok()?)
+    }
+
+    /// Total word width in bits (sign + m + n).
+    pub fn word_bits(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Scaling factor `2^n` between real values and raw words.
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// One unit in the last place: `2^-n`, the format's resolution.
+    pub fn ulp(&self) -> f32 {
+        (1.0 / self.scale()) as f32
+    }
+
+    /// Largest raw word: `2^(m+n) - 1`.
+    pub fn max_raw(&self) -> i32 {
+        ((1i64 << (self.int_bits + self.frac_bits)) - 1) as i32
+    }
+
+    /// Smallest raw word: `-2^(m+n)`.
+    pub fn min_raw(&self) -> i32 {
+        (-(1i64 << (self.int_bits + self.frac_bits))) as i32
+    }
+
+    /// Largest representable real value (`2^m - 2^-n`).
+    pub fn max_value(&self) -> f32 {
+        self.dequantize(self.max_raw())
+    }
+
+    /// Real → raw: round to nearest, saturate at the range ends. NaN maps
+    /// to zero; ±infinity saturates. Never panics.
+    pub fn quantize(&self, x: f32) -> i32 {
+        let mut clipped = 0usize;
+        self.quantize_counted(x, &mut clipped)
+    }
+
+    /// Like [`QFormat::quantize`], counting range clips into `clipped` —
+    /// a clipped value violates the |Δ| ≤ ulp/2 premise of the forward
+    /// error bound, so every quantization surface that feeds the bound
+    /// (parameter ingest, request inputs) counts clips instead of hiding
+    /// them. Values that land exactly on the range ends without exceeding
+    /// them are not clips.
+    pub fn quantize_counted(&self, x: f32, clipped: &mut usize) -> i32 {
+        if x.is_nan() {
+            *clipped += 1;
+            return 0;
+        }
+        let v = (x as f64 * self.scale()).round();
+        if v > self.max_raw() as f64 {
+            *clipped += 1;
+            self.max_raw()
+        } else if v < self.min_raw() as f64 {
+            *clipped += 1;
+            self.min_raw()
+        } else {
+            v as i32
+        }
+    }
+
+    /// Raw → real (exact: every raw word is exactly representable in f32
+    /// for word widths up to 25 bits, and within 1 ULP beyond).
+    pub fn dequantize(&self, raw: i32) -> f32 {
+        (raw as f64 / self.scale()) as f32
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i32> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Quantize a slice, counting range clips into `clipped` (see
+    /// [`QFormat::quantize_counted`]).
+    pub fn quantize_slice_counted(&self, xs: &[f32], clipped: &mut usize) -> Vec<i32> {
+        xs.iter().map(|&x| self.quantize_counted(x, clipped)).collect()
+    }
+
+    /// Dequantize a slice.
+    pub fn dequantize_slice(&self, rs: &[i32]) -> Vec<f32> {
+        rs.iter().map(|&r| self.dequantize(r)).collect()
+    }
+
+    /// Clamp a wide intermediate into the raw range (the saturation
+    /// every hardware ALU output applies). Never panics, for any `i64`.
+    pub fn clamp_raw(&self, v: i64) -> i32 {
+        v.clamp(self.min_raw() as i64, self.max_raw() as i64) as i32
+    }
+
+    /// Like [`QFormat::clamp_raw`], counting saturation events into `sat`.
+    #[inline]
+    pub fn clamp_raw_counted(&self, v: i64, sat: &mut usize) -> i32 {
+        if v > self.max_raw() as i64 {
+            *sat += 1;
+            self.max_raw()
+        } else if v < (self.min_raw() as i64) {
+            *sat += 1;
+            self.min_raw()
+        } else {
+            v as i32
+        }
+    }
+
+    /// Saturating fixed-point add. Accepts any raw `i32` inputs (even
+    /// out-of-range ones) and never panics or wraps.
+    pub fn sat_add(&self, a: i32, b: i32) -> i32 {
+        self.clamp_raw(a as i64 + b as i64)
+    }
+
+    /// Saturating fixed-point multiply with round-half-up output
+    /// rounding: `(a * b) / 2^n`, clamped. Accepts any raw `i32` inputs
+    /// and never panics or wraps (`i32::MIN * i32::MIN = 2^62` fits the
+    /// `i64` intermediate).
+    pub fn sat_mul(&self, a: i32, b: i32) -> i32 {
+        self.clamp_raw(shift_round(a as i64 * b as i64, self.frac_bits))
+    }
+
+    /// Fold a wide MAC accumulator (edge products at scale `2^2n`) plus a
+    /// Qm.n bias into a saturated Qm.n word: one rounding shift at the
+    /// very end, the way a DSP-block accumulator chain rounds once on
+    /// write-back. This is *the* arithmetic contract shared by
+    /// [`FixedSparseLayer::forward`] and the cycle-accurate
+    /// [`crate::hw::junction::JunctionUnit::feedforward_quantized`] —
+    /// both call it, so they agree bit for bit.
+    ///
+    /// Accumulator headroom: with in-range words (`|raw| <= 2^(m+n)`)
+    /// the `i64` accumulator is exact for up to `2^(62 - 2(m+n))` edges
+    /// per output — 2^32 edges for the default Q5.10 (m + n = 15), far
+    /// beyond any junction in the paper. Formats near the 31-bit word
+    /// limit are for scalar arithmetic, not the MAC kernels.
+    #[inline]
+    pub fn fold_mac(&self, acc: i64, bias_raw: i32, sat: &mut usize) -> i32 {
+        self.clamp_raw_counted(
+            shift_round(acc + ((bias_raw as i64) << self.frac_bits), self.frac_bits),
+            sat,
+        )
+    }
+}
+
+/// ReLU in the raw domain (sign-exact twin of [`crate::nn::relu`]:
+/// quantization preserves sign, so relu-then-quantize equals
+/// quantize-then-relu).
+pub fn relu_raw(xs: &mut [i32]) {
+    for v in xs {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+/// Segments of the sigmoid interpolation table (range [-8, 8], node
+/// spacing h = 0.25 — beyond ±8 the sigmoid is within 3.4e-4 of its
+/// asymptote, so clamping there costs less than the interpolation error).
+const SIGMOID_SEGMENTS: usize = 64;
+
+/// Sigmoid via lookup table + linear interpolation — the activation
+/// evaluator of the arXiv:1806.01087 FPGA pipeline. Table nodes are
+/// Qm.n-quantized sigmoid values at spacing h = 0.25 over [-8, 8];
+/// evaluation is pure fixed-point (one multiply, one rounding shift).
+#[derive(Clone, Debug)]
+pub struct SigmoidLut {
+    fmt: QFormat,
+    /// Raw word of the table's left edge (-8.0; exact for m >= 4).
+    lo_raw: i32,
+    /// Raw word of the right edge (+8.0).
+    hi_raw: i32,
+    /// Raw width of one segment (h = 0.25 => scale / 4, exact for n >= 2).
+    seg_raw: i64,
+    /// `n - 2`: dividing by `seg_raw` is this arithmetic shift.
+    seg_shift: u32,
+    /// Quantized sigmoid at the 65 nodes.
+    table: Vec<i32>,
+}
+
+impl SigmoidLut {
+    /// Build the table for `fmt`. Requires `m >= 4` (the format must
+    /// represent ±8, the table's domain) and `n >= 2` (the node spacing
+    /// 0.25 must be a whole number of raw units).
+    pub fn new(fmt: QFormat) -> SigmoidLut {
+        assert!(
+            fmt.int_bits >= 4 && fmt.frac_bits >= 2,
+            "sigmoid LUT needs m >= 4 and n >= 2, got {fmt}"
+        );
+        let table = (0..=SIGMOID_SEGMENTS)
+            .map(|i| {
+                let x = -8.0 + i as f64 * 0.25;
+                fmt.quantize((1.0 / (1.0 + (-x).exp())) as f32)
+            })
+            .collect();
+        SigmoidLut {
+            fmt,
+            lo_raw: fmt.quantize(-8.0),
+            hi_raw: fmt.quantize(8.0),
+            seg_raw: 1i64 << (fmt.frac_bits - 2),
+            seg_shift: fmt.frac_bits - 2,
+            table,
+        }
+    }
+
+    /// The format the table is quantized in.
+    pub fn format(&self) -> QFormat {
+        self.fmt
+    }
+
+    /// Evaluate at a raw Qm.n word: clamp into [-8, 8], pick the segment,
+    /// linearly interpolate between its quantized nodes. Output is always
+    /// a valid raw word in [0, 2^n] (never saturates).
+    pub fn eval_raw(&self, x: i32) -> i32 {
+        let x = x.clamp(self.lo_raw, self.hi_raw);
+        let u = (x - self.lo_raw) as i64;
+        let i = ((u / self.seg_raw) as usize).min(SIGMOID_SEGMENTS - 1);
+        let frac = u - (i as i64) * self.seg_raw;
+        let t0 = self.table[i] as i64;
+        let t1 = self.table[i + 1] as i64;
+        (t0 + shift_round((t1 - t0) * frac, self.seg_shift)) as i32
+    }
+
+    /// Evaluate at a real value (quantize, interpolate, dequantize).
+    pub fn eval(&self, x: f32) -> f32 {
+        self.fmt.dequantize(self.eval_raw(self.fmt.quantize(x)))
+    }
+
+    /// Worst-case |LUT sigmoid − exact sigmoid| over the reals:
+    ///
+    /// - linear interpolation between exact nodes: `h^2/8 · max|σ''|`
+    ///   with h = 0.25 and max|σ''| = 1/(6√3) ≈ 0.0962 → ≤ 7.6e-4,
+    /// - node quantization: ≤ ulp/2, carried through interpolation,
+    /// - interpolation output rounding: ≤ ulp/2,
+    /// - input quantization (for [`SigmoidLut::eval`]): ≤ σ'·ulp/2 ≤ ulp/8,
+    /// - clamping at ±8: ≤ σ(-8) ≈ 3.4e-4 (inside the first term's slack).
+    pub fn max_error(&self) -> f32 {
+        7.6e-4 + 1.5 * self.fmt.ulp()
+    }
+}
+
+/// One junction in compacted fixed-point form: the Qm.n twin of
+/// [`SparseLayer`], same CSR geometry, raw `i32` words for weights and
+/// biases.
+#[derive(Clone, Debug)]
+pub struct FixedSparseLayer {
+    /// Left (input) layer width.
+    pub n_left: usize,
+    /// Right (output) layer width.
+    pub n_right: usize,
+    /// CSR row offsets, len `n_right + 1`.
+    pub offsets: Vec<u32>,
+    /// Left-neuron index per edge.
+    pub idx: Vec<u32>,
+    /// Quantized weight per edge (raw Qm.n words — the Fig. 4 weight
+    /// memory as the FPGA would actually store it).
+    pub wq: Vec<i32>,
+    /// Quantized bias per right neuron.
+    pub bq: Vec<i32>,
+    /// Weights/biases that were *clipped* at the Qm.n range during
+    /// quantization. Nonzero means the format lacks headroom for this
+    /// model's parameters and the forward error bound does not apply.
+    pub clipped: usize,
+    /// The fixed-point format of every word in this layer.
+    pub fmt: QFormat,
+}
+
+impl FixedSparseLayer {
+    /// Quantize an f32 compacted layer into `fmt`, recording how many
+    /// parameters clipped at the range ends (see
+    /// [`FixedSparseLayer::clipped`]).
+    pub fn from_f32(layer: &SparseLayer, fmt: QFormat) -> FixedSparseLayer {
+        let mut clipped = 0usize;
+        let wq = fmt.quantize_slice_counted(&layer.wc, &mut clipped);
+        let bq = fmt.quantize_slice_counted(&layer.bias, &mut clipped);
+        FixedSparseLayer {
+            n_left: layer.n_left,
+            n_right: layer.n_right,
+            offsets: layer.offsets.clone(),
+            idx: layer.idx.clone(),
+            wq,
+            bq,
+            clipped,
+            fmt,
+        }
+    }
+
+    /// Stored edge count.
+    pub fn n_edges(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Fixed-point FF (eq. 2a): per output, a wide `i64` MAC accumulation
+    /// over the edges followed by one [`QFormat::fold_mac`] rounding /
+    /// saturation — bit-identical to the cycle-accurate
+    /// [`crate::hw::junction::JunctionUnit::feedforward_quantized`].
+    /// Batch rows chunk across the [`parallel`] pool like the f32 kernel.
+    /// Returns the number of saturated outputs.
+    pub fn forward(&self, a: &[i32], batch: usize, out: &mut [i32]) -> usize {
+        assert_eq!(a.len(), batch * self.n_left);
+        assert_eq!(out.len(), batch * self.n_right);
+        let work = self.n_edges().max(1);
+        let sat = AtomicUsize::new(0);
+        parallel::par_rows(out, self.n_right, work, |row0, chunk| {
+            let mut local = 0usize;
+            for (li, or) in chunk.chunks_mut(self.n_right).enumerate() {
+                let bi = row0 + li;
+                let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+                for j in 0..self.n_right {
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    let mut acc = 0i64;
+                    for e in lo..hi {
+                        acc += self.wq[e] as i64 * ar[self.idx[e] as usize] as i64;
+                    }
+                    or[j] = self.fmt.fold_mac(acc, self.bq[j], &mut local);
+                }
+            }
+            if local > 0 {
+                sat.fetch_add(local, Ordering::Relaxed);
+            }
+        });
+        sat.load(Ordering::Relaxed)
+    }
+
+    /// Fixed-point BP (eq. 3b inner sum): scatter `wq · delta` into wide
+    /// per-left-neuron accumulators, one rounding shift per output.
+    /// Caller applies the activation-derivative product (for ReLU that is
+    /// a sign mask, exact in either domain). Returns saturated outputs.
+    pub fn backprop(&self, delta: &[i32], batch: usize, out: &mut [i32]) -> usize {
+        assert_eq!(delta.len(), batch * self.n_right);
+        assert_eq!(out.len(), batch * self.n_left);
+        let work = self.n_edges().max(1);
+        let sat = AtomicUsize::new(0);
+        parallel::par_rows(out, self.n_left, work, |row0, chunk| {
+            let mut local = 0usize;
+            let mut accs = vec![0i64; self.n_left];
+            for (li, or) in chunk.chunks_mut(self.n_left).enumerate() {
+                let bi = row0 + li;
+                let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+                accs.fill(0);
+                for j in 0..self.n_right {
+                    let dv = dr[j] as i64;
+                    if dv == 0 {
+                        continue;
+                    }
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    for e in lo..hi {
+                        accs[self.idx[e] as usize] += self.wq[e] as i64 * dv;
+                    }
+                }
+                for (o, &acc) in or.iter_mut().zip(&accs) {
+                    *o = self
+                        .fmt
+                        .clamp_raw_counted(shift_round(acc, self.fmt.frac_bits), &mut local);
+                }
+            }
+            if local > 0 {
+                sat.fetch_add(local, Ordering::Relaxed);
+            }
+        });
+        sat.load(Ordering::Relaxed)
+    }
+
+    /// Fixed-point UP gradients (eq. 4b): `gwq[e] = Σ_b delta·a` (rounded
+    /// once), `gbq[j] = Σ_b delta` (already at scale n). No L2 term — the
+    /// hardware's plain SGD gradient. Returns saturated outputs.
+    pub fn grads(
+        &self,
+        a: &[i32],
+        delta: &[i32],
+        batch: usize,
+        gwq: &mut [i32],
+        gbq: &mut [i32],
+    ) -> usize {
+        assert_eq!(a.len(), batch * self.n_left);
+        assert_eq!(delta.len(), batch * self.n_right);
+        assert_eq!(gwq.len(), self.wq.len());
+        assert_eq!(gbq.len(), self.n_right);
+        let mut acc_w = vec![0i64; self.wq.len()];
+        let mut acc_b = vec![0i64; self.n_right];
+        for bi in 0..batch {
+            let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+            let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+            for j in 0..self.n_right {
+                let dv = dr[j] as i64;
+                if dv == 0 {
+                    continue;
+                }
+                acc_b[j] += dv;
+                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                for e in lo..hi {
+                    acc_w[e] += dv * ar[self.idx[e] as usize] as i64;
+                }
+            }
+        }
+        let mut sat = 0usize;
+        for (g, &acc) in gwq.iter_mut().zip(&acc_w) {
+            *g = self
+                .fmt
+                .clamp_raw_counted(shift_round(acc, self.fmt.frac_bits), &mut sat);
+        }
+        for (g, &acc) in gbq.iter_mut().zip(&acc_b) {
+            *g = self.fmt.clamp_raw_counted(acc, &mut sat);
+        }
+        sat
+    }
+}
+
+/// Whole-network fixed-point MLP: the Qm.n twin of [`SparseNet`].
+#[derive(Clone, Debug)]
+pub struct FixedSparseNet {
+    /// Neuronal configuration `[N_0, ..., N_L]`.
+    pub layers: Vec<usize>,
+    /// One quantized compacted layer per junction.
+    pub junctions: Vec<FixedSparseLayer>,
+    /// The shared fixed-point format.
+    pub fmt: QFormat,
+}
+
+impl FixedSparseNet {
+    /// Quantize a trained (or initialized) f32 compacted net.
+    pub fn from_f32(net: &SparseNet, fmt: QFormat) -> FixedSparseNet {
+        FixedSparseNet {
+            layers: net.layers.clone(),
+            junctions: net
+                .junctions
+                .iter()
+                .map(|j| FixedSparseLayer::from_f32(j, fmt))
+                .collect(),
+            fmt,
+        }
+    }
+
+    /// Total stored edges.
+    pub fn n_edges(&self) -> usize {
+        self.junctions.iter().map(|j| j.n_edges()).sum()
+    }
+
+    /// Parameters that clipped at the Qm.n range during quantization,
+    /// across every junction. Nonzero voids the forward error bound
+    /// (its |Δw| ≤ ulp/2 premise), so callers surface it next to the
+    /// runtime saturation count instead of treating the net as sound.
+    pub fn clipped_params(&self) -> usize {
+        self.junctions.iter().map(|j| j.clipped).sum()
+    }
+
+    /// Fixed-point inference on raw inputs: returns raw logits
+    /// `[batch, N_L]` and the total saturated outputs across all layers.
+    pub fn logits_q(&self, xq: &[i32], batch: usize) -> (Vec<i32>, usize) {
+        let mut a = xq.to_vec();
+        let l = self.junctions.len();
+        let mut sats = 0usize;
+        for (i, junction) in self.junctions.iter().enumerate() {
+            let mut h = vec![0i32; batch * junction.n_right];
+            sats += junction.forward(&a, batch, &mut h);
+            if i != l - 1 {
+                relu_raw(&mut h);
+            }
+            a = h;
+        }
+        (a, sats)
+    }
+
+    /// Real-valued convenience: quantize the input, run fixed-point,
+    /// dequantize the logits. Returns (logits, saturated outputs).
+    pub fn logits(&self, x: &[f32], batch: usize) -> (Vec<f32>, usize) {
+        let (raw, sats) = self.logits_q(&self.fmt.quantize_slice(x), batch);
+        (self.fmt.dequantize_slice(&raw), sats)
+    }
+
+    /// (correct argmax predictions, saturated outputs) over one batch —
+    /// argmax is taken on raw words (order-preserving, no dequantization
+    /// needed, exactly what a hardware classifier head would do).
+    pub fn eval_batch(&self, x: &[f32], y: &[i32]) -> (usize, usize) {
+        let batch = y.len();
+        let classes = *self.layers.last().unwrap();
+        let (logits, sats) = self.logits_q(&self.fmt.quantize_slice(x), batch);
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1;
+            }
+        }
+        (correct, sats)
+    }
+
+    /// Classification accuracy over one batch (fixed-point end to end).
+    pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
+        let (correct, _) = self.eval_batch(x, y);
+        correct as f64 / y.len().max(1) as f64
+    }
+}
+
+/// Worst-case |dequantized quantized forward − f32 forward| for `net` on
+/// the concrete input `x`, under `fmt` — the bound `tests/prop_fixed.rs`
+/// enforces. Per layer (derivation in ARCHITECTURE.md §Fixed-point
+/// arithmetic; u = ulp, ε_in = incoming activation error):
+///
+/// ```text
+/// ε_out = d_in_max · (w_max·ε_in + (a_max + ε_in)·u/2) + u
+/// ```
+///
+/// where the trailing `u` covers bias quantization (u/2) plus the single
+/// MAC rounding shift (u/2); ε_in starts at u/2 (input quantization) and
+/// ReLU is 1-Lipschitz so the bound passes through activations
+/// unchanged. Valid only when no saturation occurred (the tests assert
+/// the saturation count is zero first). `a_max`/`w_max` are measured on
+/// the f32 reference, so the bound is input-specific, not a worst case
+/// over all inputs.
+pub fn forward_error_bound(net: &SparseNet, x: &[f32], batch: usize, fmt: QFormat) -> f32 {
+    let u = fmt.ulp() as f64;
+    let mut err = 0.5 * u;
+    let l = net.junctions.len();
+    let mut a = x.to_vec();
+    for (i, junction) in net.junctions.iter().enumerate() {
+        let amax = a.iter().fold(0f32, |m, v| m.max(v.abs())) as f64;
+        let wmax = junction.wc.iter().fold(0f32, |m, v| m.max(v.abs())) as f64;
+        let din_max = (0..junction.n_right)
+            .map(|j| (junction.offsets[j + 1] - junction.offsets[j]) as usize)
+            .max()
+            .unwrap_or(0) as f64;
+        err = din_max * (wmax * err + (amax + err) * 0.5 * u) + u;
+        let mut h = vec![0f32; batch * junction.n_right];
+        junction.forward(&a, batch, &mut h);
+        if i != l - 1 {
+            crate::nn::relu(&mut h);
+        }
+        a = h;
+    }
+    // small multiplicative + absolute slack for the f32 reference's own
+    // rounding (the bound above treats the f32 path as exact)
+    (err * 1.001 + 1e-5) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::config::{DoutConfig, NetConfig};
+    use crate::sparsity::{generate, Method};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn format_ranges_and_parse() {
+        let q = QFormat::new(4, 12);
+        assert_eq!(q.word_bits(), 17);
+        assert_eq!(q.max_raw(), (1 << 16) - 1);
+        assert_eq!(q.min_raw(), -(1 << 16));
+        assert!((q.ulp() - 1.0 / 4096.0).abs() < 1e-12);
+        assert_eq!(QFormat::parse("Q4.12"), Some(q));
+        assert_eq!(QFormat::parse("q4.12"), Some(q));
+        assert_eq!(QFormat::parse(" Q5.10 "), Some(QFormat::default()));
+        assert_eq!(QFormat::parse("4.12"), None);
+        assert_eq!(QFormat::parse("Q40.12"), None);
+        assert_eq!(QFormat::parse("Qx.y"), None);
+        assert!(QFormat::new_checked(0, 0).is_none());
+        assert!(QFormat::new_checked(15, 16).is_some());
+        assert!(QFormat::new_checked(16, 16).is_none());
+        assert_eq!(format!("{}", QFormat::default()), "Q5.10");
+    }
+
+    #[test]
+    fn quantize_saturates_and_handles_non_finite() {
+        let q = QFormat::new(3, 8);
+        assert_eq!(q.quantize(1000.0), q.max_raw());
+        assert_eq!(q.quantize(-1000.0), q.min_raw());
+        assert_eq!(q.quantize(f32::INFINITY), q.max_raw());
+        assert_eq!(q.quantize(f32::NEG_INFINITY), q.min_raw());
+        assert_eq!(q.quantize(f32::NAN), 0);
+        assert_eq!(q.quantize(0.0), 0);
+        // exact grid points are exact
+        assert_eq!(q.quantize(1.5), 384);
+        assert_eq!(q.dequantize(384), 1.5);
+    }
+
+    #[test]
+    fn sat_ops_clamp_without_wrapping() {
+        let q = QFormat::new(4, 8);
+        assert_eq!(q.sat_add(q.max_raw(), 1), q.max_raw());
+        assert_eq!(q.sat_add(q.min_raw(), -1), q.min_raw());
+        assert_eq!(q.sat_add(i32::MAX, i32::MAX), q.max_raw());
+        assert_eq!(q.sat_mul(i32::MIN, i32::MIN), q.max_raw());
+        assert_eq!(q.sat_mul(i32::MIN, i32::MAX), q.min_raw());
+        // in-range product is the rounded real product
+        let a = q.quantize(1.25);
+        let b = q.quantize(-2.5);
+        assert_eq!(q.sat_mul(a, b), q.quantize(-3.125));
+    }
+
+    #[test]
+    fn shift_round_rounds_half_up() {
+        assert_eq!(shift_round(5, 1), 3); // 2.5 -> 3
+        assert_eq!(shift_round(-5, 1), -2); // -2.5 -> -2 (toward +inf)
+        assert_eq!(shift_round(4, 2), 1);
+        assert_eq!(shift_round(7, 0), 7);
+    }
+
+    #[test]
+    fn sigmoid_lut_tracks_reference_within_bound() {
+        for fmt in [QFormat::default(), QFormat::new(4, 12), QFormat::new(6, 8)] {
+            let lut = SigmoidLut::new(fmt);
+            let bound = lut.max_error();
+            let mut x = -12.0f32;
+            while x <= 12.0 {
+                let want = 1.0 / (1.0 + (-x as f64).exp());
+                let got = lut.eval(x) as f64;
+                assert!(
+                    (got - want).abs() <= bound as f64,
+                    "{fmt} at x={x}: {got} vs {want} (bound {bound})"
+                );
+                x += 0.0173;
+            }
+        }
+    }
+
+    #[test]
+    fn sigmoid_lut_is_monotone_and_bounded() {
+        let lut = SigmoidLut::new(QFormat::default());
+        let scale = QFormat::default().scale() as i32;
+        let mut prev = i32::MIN;
+        for raw in (-9 * scale..=9 * scale).step_by(37) {
+            let y = lut.eval_raw(raw);
+            assert!((0..=scale).contains(&y), "sigmoid out of [0,1]: {y}");
+            assert!(y >= prev, "sigmoid not monotone at raw {raw}");
+            prev = y;
+        }
+    }
+
+    fn toy_nets(seed: u64) -> (SparseNet, FixedSparseNet, Vec<f32>) {
+        let netc = NetConfig::new(vec![20, 12, 6]);
+        let mut rng = Rng::new(seed);
+        let pattern = generate(
+            Method::Structured,
+            &netc,
+            &DoutConfig(vec![6, 3]),
+            None,
+            &mut rng,
+        );
+        let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+        let fmt = QFormat::default();
+        let qnet = FixedSparseNet::from_f32(&snet, fmt);
+        let x: Vec<f32> = (0..8 * 20).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+        (snet, qnet, x)
+    }
+
+    #[test]
+    fn quantized_forward_tracks_f32_within_bound() {
+        let (snet, qnet, x) = toy_nets(1);
+        let want = snet.logits(&x, 8);
+        let (got, sats) = qnet.logits(&x, 8);
+        assert_eq!(sats, 0, "toy net must not saturate");
+        let bound = forward_error_bound(&snet, &x, 8, qnet.fmt);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= bound, "{g} vs {w} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn backprop_and_grads_track_f32() {
+        let (snet, qnet, _) = toy_nets(2);
+        let fmt = qnet.fmt;
+        let mut rng = Rng::new(3);
+        let batch = 4;
+        let j = &snet.junctions[0];
+        let jq = &qnet.junctions[0];
+        let a: Vec<f32> = (0..batch * j.n_left).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+        let d: Vec<f32> = (0..batch * j.n_right).map(|_| rng.uniform() - 0.5).collect();
+
+        let mut da = vec![0f32; batch * j.n_left];
+        j.backprop(&d, batch, &mut da);
+        let mut daq = vec![0i32; batch * j.n_left];
+        let sat = jq.backprop(&fmt.quantize_slice(&d), batch, &mut daq);
+        assert_eq!(sat, 0);
+        for (g, w) in fmt.dequantize_slice(&daq).iter().zip(&da) {
+            // loose envelope: d_in quantized products, each within ~u
+            assert!((g - w).abs() < 32.0 * fmt.ulp(), "{g} vs {w}");
+        }
+
+        let mut gw = vec![0f32; j.wc.len()];
+        let mut gb = vec![0f32; j.n_right];
+        j.grads(&a, &d, batch, 0.0, &mut gw, &mut gb);
+        let mut gwq = vec![0i32; j.wc.len()];
+        let mut gbq = vec![0i32; j.n_right];
+        let sat = jq.grads(
+            &fmt.quantize_slice(&a),
+            &fmt.quantize_slice(&d),
+            batch,
+            &mut gwq,
+            &mut gbq,
+        );
+        assert_eq!(sat, 0);
+        for (g, w) in fmt.dequantize_slice(&gwq).iter().zip(&gw) {
+            assert!((g - w).abs() < 16.0 * fmt.ulp(), "{g} vs {w}");
+        }
+        for (g, w) in fmt.dequantize_slice(&gbq).iter().zip(&gb) {
+            assert!((g - w).abs() < 16.0 * fmt.ulp(), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn quantization_clips_are_counted() {
+        let q = QFormat::new(3, 8); // range ±8
+        let mut clipped = 0usize;
+        // in-range values (range ends included) are not clips
+        assert_eq!(q.quantize_counted(1.0, &mut clipped), 256);
+        assert_eq!(q.quantize_counted(q.max_value(), &mut clipped), q.max_raw());
+        assert_eq!(q.quantize_counted(-8.0, &mut clipped), q.min_raw());
+        assert_eq!(clipped, 0);
+        // out-of-range and non-finite values count
+        q.quantize_counted(100.0, &mut clipped);
+        q.quantize_counted(-100.0, &mut clipped);
+        q.quantize_counted(f32::NAN, &mut clipped);
+        assert_eq!(clipped, 3);
+        // layer ingest records parameter clips
+        let layer = SparseLayer {
+            n_left: 2,
+            n_right: 1,
+            offsets: vec![0, 2],
+            idx: vec![0, 1],
+            wc: vec![0.5, 40.0], // second weight clips at ±8
+            bias: vec![0.0],
+        };
+        let fq = FixedSparseLayer::from_f32(&layer, q);
+        assert_eq!(fq.clipped, 1);
+    }
+
+    #[test]
+    fn saturation_is_counted_not_panicked() {
+        // weights/inputs at the format maximum force accumulator overflow
+        let fmt = QFormat::new(2, 6); // tiny range ±4
+        let layer = SparseLayer {
+            n_left: 4,
+            n_right: 2,
+            offsets: vec![0, 4, 8],
+            idx: vec![0, 1, 2, 3, 0, 1, 2, 3],
+            wc: vec![3.9; 8],
+            bias: vec![0.0, 0.0],
+        };
+        let q = FixedSparseLayer::from_f32(&layer, fmt);
+        let a = vec![fmt.max_raw(); 4];
+        let mut out = vec![0i32; 2];
+        let sats = q.forward(&a, 1, &mut out);
+        assert_eq!(sats, 2, "both outputs must saturate");
+        assert!(out.iter().all(|&v| v == fmt.max_raw()));
+    }
+
+    #[test]
+    fn accuracy_matches_f32_on_separable_toy() {
+        let (snet, qnet, x) = toy_nets(4);
+        let y: Vec<i32> = (0..8).map(|i| (i % 6) as i32).collect();
+        let af = snet.accuracy(&x, &y);
+        let aq = qnet.accuracy(&x, &y);
+        // logits differ by less than the bound, so argmax flips are rare;
+        // allow one flip on the 8-sample toy batch
+        assert!((af - aq).abs() <= 0.125 + 1e-9, "{af} vs {aq}");
+    }
+}

@@ -14,10 +14,15 @@
 //! - [`pipeline`]: the pipelined training engine — minibatches stream
 //!   through the Sec. III-A FF/BP/UP interleave with `hw`'s timetable
 //!   and clash-free banked weight views as the executable source of
-//!   truth (sequential-equivalent at depth 1).
+//!   truth (sequential-equivalent at depth 1),
+//! - [`fixed`]: the Qm.n fixed-point execution path (saturating
+//!   arithmetic, LUT sigmoid, quantized twins of the [`sparse`] kernels)
+//!   — the arithmetic the paper's FPGA companion (arXiv:1806.01087)
+//!   actually computes in, differentially tested against f32.
 
 pub mod adam;
 pub mod dense;
+pub mod fixed;
 pub mod matrix;
 pub mod pipeline;
 pub mod sparse;

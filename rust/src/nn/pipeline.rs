@@ -353,6 +353,21 @@ impl PipelinedTrainer {
         Ok(())
     }
 
+    /// Quantized twin of [`PipelinedTrainer::audit_banked`]: quantize
+    /// every junction's current weights into `fmt` and replay the raw
+    /// Qm.n words through the same banked views
+    /// ([`BankedWeights::audit_fixed`]) — the check `train --quant-eval`
+    /// runs before reporting quantized accuracy, proving the integer
+    /// weight memories obey the identical Fig. 4 layout and port
+    /// discipline.
+    pub fn audit_banked_quantized(&self, fmt: crate::nn::fixed::QFormat) -> Result<()> {
+        for (view, junction) in self.banked.iter().zip(&self.net.junctions) {
+            view.audit_fixed(&fmt.quantize_slice(&junction.wc))
+                .map_err(|e| anyhow::anyhow!("banked quantized weight audit failed: {e}"))?;
+        }
+        Ok(())
+    }
+
     /// One epoch over `ds`: shuffle with `rng`, chunk into `cfg.batch`
     /// minibatches (the final partial batch included, like the sequential
     /// trainer), stream them through the pipeline. Returns (mean train

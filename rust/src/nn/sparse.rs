@@ -56,6 +56,30 @@ impl SparseLayer {
         }
     }
 
+    /// Build from a connection pattern plus dense row-major
+    /// `[n_right, n_left]` weights and a bias vector — the compaction
+    /// step every dense-parameter surface (runtime values, trained
+    /// sessions) uses to enter the CSR kernels. Off-pattern entries of
+    /// `dense` are ignored.
+    pub fn from_pattern_dense(p: &Pattern, dense: &[f32], bias: &[f32]) -> Self {
+        assert_eq!(bias.len(), p.shape.n_right);
+        let mut offsets = Vec::with_capacity(p.shape.n_right + 1);
+        let mut idx = Vec::with_capacity(p.n_edges());
+        offsets.push(0u32);
+        for edges in &p.in_edges {
+            idx.extend_from_slice(edges);
+            offsets.push(idx.len() as u32);
+        }
+        SparseLayer {
+            n_left: p.shape.n_left,
+            n_right: p.shape.n_right,
+            offsets,
+            idx,
+            wc: p.compact_weights(dense),
+            bias: bias.to_vec(),
+        }
+    }
+
     /// Stored edge count `|W_i|`.
     pub fn n_edges(&self) -> usize {
         self.idx.len()
@@ -220,6 +244,25 @@ impl SparseNet {
                 .junctions
                 .iter()
                 .map(|p| SparseLayer::init_he(p, bias_init, rng))
+                .collect(),
+        }
+    }
+
+    /// Build a compacted net from a connection pattern plus one
+    /// `(dense_weights, bias)` pair per junction (dense row-major
+    /// `[n_right, n_left]`) — the single home for the dense-parameter →
+    /// CSR compaction used by quantized serving and `train --quant-eval`.
+    pub fn from_pattern_dense(pattern: &NetPattern, params: &[(&[f32], &[f32])]) -> Self {
+        assert_eq!(params.len(), pattern.junctions.len());
+        let mut layers = vec![pattern.junctions[0].shape.n_left];
+        layers.extend(pattern.junctions.iter().map(|p| p.shape.n_right));
+        SparseNet {
+            layers,
+            junctions: pattern
+                .junctions
+                .iter()
+                .zip(params)
+                .map(|(p, &(w, b))| SparseLayer::from_pattern_dense(p, w, b))
                 .collect(),
         }
     }

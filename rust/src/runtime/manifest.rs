@@ -18,6 +18,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::nn::fixed::QFormat;
 use crate::util::json::Json;
 
 /// Element type of a program tensor.
@@ -51,6 +52,17 @@ pub struct ProgramSpec {
     pub outputs: Vec<TensorSpec>,
 }
 
+/// Fixed-point execution parameters of a config: which Qm.n format the
+/// quantized programs (`forward_quantized`, the quantized serving path)
+/// run in. Manifest syntax: `"quant": "Q5.10"`; every built-in
+/// synthesized config carries the default format.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QuantSpec {
+    /// The Qm.n fixed-point format (see [`crate::nn::fixed::QFormat`]);
+    /// defaults to the format's default (Q5.10).
+    pub format: QFormat,
+}
+
 /// One network configuration and its programs.
 #[derive(Clone, Debug)]
 pub struct ConfigEntry {
@@ -60,7 +72,11 @@ pub struct ConfigEntry {
     pub batch: usize,
     /// Out-degrees of the `gather_forward` program, when admissible.
     pub gather_dout: Option<Vec<usize>>,
-    /// Programs by tag (`forward`, `train`, `gather_forward`).
+    /// Fixed-point execution parameters; `None` disables the quantized
+    /// programs for this config.
+    pub quant: Option<QuantSpec>,
+    /// Programs by tag (`forward`, `train`, `gather_forward`,
+    /// `forward_quantized`).
     pub programs: BTreeMap<String, ProgramSpec>,
 }
 
@@ -108,8 +124,15 @@ impl ConfigEntry {
     /// Synthesize a config (standard program signatures, no artifact
     /// files) for the native backend. `gather_dout` adds a
     /// `gather_forward` program when every junction's in-degree
-    /// `N_{i-1} * d_out_i / N_i` is integral.
-    pub fn synthesize(layers: Vec<usize>, batch: usize, gather_dout: Option<Vec<usize>>) -> ConfigEntry {
+    /// `N_{i-1} * d_out_i / N_i` is integral; `quant` adds a
+    /// `forward_quantized` program (forward signature plus a trailing
+    /// saturation-count output) executed in that Qm.n format.
+    pub fn synthesize(
+        layers: Vec<usize>,
+        batch: usize,
+        gather_dout: Option<Vec<usize>>,
+        quant: Option<QuantSpec>,
+    ) -> ConfigEntry {
         let l = layers.len() - 1;
         let n0 = layers[0];
         let classes = layers[l];
@@ -133,8 +156,27 @@ impl ConfigEntry {
         fin.push(x.clone());
         programs.insert(
             "forward".to_string(),
-            ProgramSpec { file: "<native>".into(), inputs: fin, outputs: vec![logits.clone()] },
+            ProgramSpec {
+                file: "<native>".into(),
+                inputs: fin.clone(),
+                outputs: vec![logits.clone()],
+            },
         );
+
+        // forward_quantized: same inputs, logits + saturation count out
+        if quant.is_some() {
+            programs.insert(
+                "forward_quantized".to_string(),
+                ProgramSpec {
+                    file: "<native>".into(),
+                    inputs: fin,
+                    outputs: vec![
+                        logits.clone(),
+                        spec("saturations".into(), vec![], Dtype::F32),
+                    ],
+                },
+            );
+        }
 
         // train: params, m, v, masks, x, y, t, lr, l2
         //        -> params', m', v', t+1, loss, correct
@@ -197,7 +239,7 @@ impl ConfigEntry {
             }
         }
 
-        ConfigEntry { layers, batch, gather_dout, programs }
+        ConfigEntry { layers, batch, gather_dout, quant, programs }
     }
 }
 
@@ -207,22 +249,28 @@ impl Manifest {
     /// paper's Table-I MNIST network, its Table-II L=4 MNIST network,
     /// its TIMIT network, and a tiny CI-sized config).
     pub fn builtin() -> Manifest {
+        let q = Some(QuantSpec::default());
         let mut configs = BTreeMap::new();
         configs.insert(
             "tiny".to_string(),
-            ConfigEntry::synthesize(vec![32, 16, 8], 16, Some(vec![4, 4])),
+            ConfigEntry::synthesize(vec![32, 16, 8], 16, Some(vec![4, 4]), q),
         );
         configs.insert(
             "mnist_fc2".to_string(),
-            ConfigEntry::synthesize(vec![800, 100, 10], 256, Some(vec![20, 10])),
+            ConfigEntry::synthesize(vec![800, 100, 10], 256, Some(vec![20, 10]), q),
         );
         configs.insert(
             "mnist_fc4".to_string(),
-            ConfigEntry::synthesize(vec![800, 100, 100, 100, 10], 256, Some(vec![20, 20, 20, 10])),
+            ConfigEntry::synthesize(
+                vec![800, 100, 100, 100, 10],
+                256,
+                Some(vec![20, 20, 20, 10]),
+                q,
+            ),
         );
         configs.insert(
             "timit".to_string(),
-            ConfigEntry::synthesize(vec![39, 390, 39], 128, Some(vec![90, 9])),
+            ConfigEntry::synthesize(vec![39, 390, 39], 128, Some(vec![90, 9]), q),
         );
         Manifest { configs }
     }
@@ -284,6 +332,17 @@ impl Manifest {
                     .filter_map(|v| v.as_usize())
                     .collect::<Vec<usize>>()
             });
+            // optional fixed-point spec: "quant": "Qm.n" (a malformed
+            // format string is an error, not a silent f32 fallback)
+            let quant = match entry.get("quant") {
+                None => None,
+                Some(v) => {
+                    let s = v.as_str().ok_or("quant must be a \"Qm.n\" string")?;
+                    let format = QFormat::parse(s)
+                        .ok_or_else(|| format!("bad quant format '{s}' (want Qm.n)"))?;
+                    Some(QuantSpec { format })
+                }
+            };
             let mut programs = BTreeMap::new();
             let progs = entry
                 .get("programs")
@@ -317,6 +376,7 @@ impl Manifest {
                     layers,
                     batch,
                     gather_dout,
+                    quant,
                     programs,
                 },
             );
@@ -377,7 +437,31 @@ mod tests {
             let g = &c.programs["gather_forward"];
             assert_eq!(g.inputs.len(), 3 * l + 1, "{name} gather inputs");
             assert_eq!(g.inputs[l].dtype, Dtype::I32, "{name} idx dtype");
+            // every built-in config carries the quantized path
+            assert_eq!(c.quant, Some(QuantSpec::default()), "{name} quant");
+            let fq = &c.programs["forward_quantized"];
+            assert_eq!(fq.inputs, fwd.inputs, "{name} quant inputs");
+            assert_eq!(fq.outputs.len(), 2, "{name} quant outputs");
+            assert_eq!(fq.outputs[1].name, "saturations");
+            assert_eq!(fq.outputs[1].shape, Vec::<usize>::new());
         }
+    }
+
+    #[test]
+    fn parses_and_rejects_quant_field() {
+        let with_quant = SAMPLE.replace(
+            "\"batch\": 16,",
+            "\"batch\": 16, \"quant\": \"Q4.12\",",
+        );
+        let m = Manifest::parse(&with_quant).unwrap();
+        let q = m.configs["tiny"].quant.unwrap();
+        assert_eq!((q.format.int_bits, q.format.frac_bits), (4, 12));
+        // absent => None
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.configs["tiny"].quant, None);
+        // malformed => parse error, not a silent fallback
+        let bad = SAMPLE.replace("\"batch\": 16,", "\"batch\": 16, \"quant\": \"4.12\",");
+        assert!(Manifest::parse(&bad).is_err());
     }
 
     #[test]

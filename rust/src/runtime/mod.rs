@@ -31,7 +31,7 @@ use std::path::Path;
 use crate::nn::pipeline::{PipelineConfig, PipelinedTrainer};
 use crate::sparsity::pattern::NetPattern;
 
-pub use manifest::{ConfigEntry, Dtype, Manifest, ProgramSpec, TensorSpec};
+pub use manifest::{ConfigEntry, Dtype, Manifest, ProgramSpec, QuantSpec, TensorSpec};
 pub use native::NativeEngine;
 
 /// A host-side tensor crossing the backend boundary.
@@ -280,6 +280,39 @@ impl Engine {
                 self.platform()
             ),
         }
+    }
+
+    /// Load the fixed-point forward executable of `config`: the
+    /// `forward_quantized` program, which takes the same positional
+    /// inputs as `forward` but executes in the config's Qm.n format
+    /// ([`QuantSpec`], `nn::fixed`) and returns `[logits, saturations]`
+    /// — the saturation count tells callers when the format's integer
+    /// headroom was exceeded. Fails with a pointed error when the config
+    /// carries no quant spec (every built-in synthesized config does).
+    ///
+    /// ```
+    /// use pds::runtime::Engine;
+    ///
+    /// let engine = Engine::native("/nonexistent/dir").unwrap();
+    /// let prog = engine.forward_quantized("tiny").unwrap();
+    /// // same inputs as `forward`, one extra output (the saturation count)
+    /// let fwd = engine.load("tiny", "forward").unwrap();
+    /// assert_eq!(prog.spec.inputs.len(), fwd.spec.inputs.len());
+    /// assert_eq!(prog.spec.outputs.len(), 2);
+    /// ```
+    pub fn forward_quantized(&self, config: &str) -> Result<Program> {
+        let entry = self
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("config '{config}' not in manifest"))?;
+        if entry.quant.is_none() {
+            bail!(
+                "config '{config}' has no quant spec: add `\"quant\": \"Qm.n\"` to the \
+                 manifest entry (built-in synthesized configs carry one by default)"
+            );
+        }
+        self.load(config, "forward_quantized")
     }
 
     /// Load `programs[program]` of config `config`.

@@ -19,6 +19,7 @@ use anyhow::{bail, Result};
 use super::{ConfigEntry, ExecBackend, ProgramExec, ProgramSpec, Value};
 use crate::nn::adam::{AdamConfig, AdamState};
 use crate::nn::dense::DenseNet;
+use crate::nn::fixed::{self, FixedSparseLayer, QFormat};
 use crate::nn::pipeline::{PipelineConfig, PipelinedTrainer};
 use crate::nn::relu;
 use crate::nn::sparse::SparseLayer;
@@ -33,6 +34,8 @@ enum Kind {
     Forward,
     Train,
     GatherForward,
+    /// Fixed-point forward in the config's Qm.n format (`nn::fixed`).
+    QuantForward(QFormat),
 }
 
 struct NativeProgram {
@@ -58,6 +61,10 @@ impl ExecBackend for NativeEngine {
             "forward" => Kind::Forward,
             "train" => Kind::Train,
             "gather_forward" => Kind::GatherForward,
+            "forward_quantized" => match entry.quant {
+                Some(q) => Kind::QuantForward(q.format),
+                None => bail!("config '{config}' has no quant spec for 'forward_quantized'"),
+            },
             other => bail!(
                 "native backend has no implementation for program '{other}' (config '{config}')"
             ),
@@ -182,6 +189,70 @@ impl NativeProgram {
         Ok(out)
     }
 
+    /// Fixed-point forward (`nn::fixed`): compact each junction's dense
+    /// masked weights into CSR, quantize weights / biases / input into
+    /// the config's Qm.n format, run the saturating integer kernels with
+    /// ReLU in the raw domain, and dequantize the logits. The second
+    /// output counts every headroom violation — MAC outputs that
+    /// saturated *and* parameters/inputs that clipped during
+    /// quantization — so callers (and the parity tests) can tell when
+    /// the format was exceeded and the documented error bound no longer
+    /// applies.
+    fn run_quant_forward(
+        &self,
+        fmt: QFormat,
+        inputs: &[Value],
+        spec: &ProgramSpec,
+    ) -> Result<Vec<Value>> {
+        let l = self.layers.len() - 1;
+        let x = inputs[3 * l].as_f32()?;
+        let mut saturations = 0usize;
+        let mut aq = fmt.quantize_slice_counted(x, &mut saturations);
+        for i in 0..l {
+            let (nl, nr) = (self.layers[i], self.layers[i + 1]);
+            let w = inputs[2 * i].as_f32()?;
+            let b = inputs[2 * i + 1].as_f32()?;
+            let m = inputs[2 * l + i].as_f32()?;
+            // CSR extraction in the row-major edge order, weights
+            // pre-masked like the f32 path
+            let mut offsets = Vec::with_capacity(nr + 1);
+            let mut idx = Vec::new();
+            let mut wc = Vec::new();
+            offsets.push(0u32);
+            for j in 0..nr {
+                for k in 0..nl {
+                    if m[j * nl + k] != 0.0 {
+                        idx.push(k as u32);
+                        wc.push(w[j * nl + k]);
+                    }
+                }
+                offsets.push(idx.len() as u32);
+            }
+            let layer = FixedSparseLayer::from_f32(
+                &SparseLayer {
+                    n_left: nl,
+                    n_right: nr,
+                    offsets,
+                    idx,
+                    wc,
+                    bias: b.to_vec(),
+                },
+                fmt,
+            );
+            saturations += layer.clipped;
+            let mut h = vec![0i32; self.batch * nr];
+            saturations += layer.forward(&aq, self.batch, &mut h);
+            if i != l - 1 {
+                fixed::relu_raw(&mut h);
+            }
+            aq = h;
+        }
+        Ok(vec![
+            Value::F32(fmt.dequantize_slice(&aq), spec.outputs[0].shape.clone()),
+            Value::scalar_f32(saturations as f32),
+        ])
+    }
+
     /// Compacted (CSR-style) forward over the gathered weight/index
     /// memories — the software twin of the hardware's edge processing,
     /// executed with the batch-parallel `SparseLayer` kernel.
@@ -227,6 +298,7 @@ impl ProgramExec for NativeProgram {
             Kind::Forward => self.run_forward(inputs, spec),
             Kind::Train => self.run_train(inputs, spec),
             Kind::GatherForward => self.run_gather(inputs, spec),
+            Kind::QuantForward(fmt) => self.run_quant_forward(fmt, inputs, spec),
         }
     }
 }
@@ -240,13 +312,19 @@ mod tests {
 
     #[test]
     fn unknown_program_is_rejected_at_load() {
-        let entry = crate::runtime::ConfigEntry::synthesize(vec![8, 4], 2, None);
+        let entry = crate::runtime::ConfigEntry::synthesize(vec![8, 4], 2, None, None);
         let spec = entry.programs["forward"].clone();
         let err = NativeEngine
             .load_program("c", "backward", &entry, &spec)
             .err()
             .expect("must reject");
         assert!(format!("{err:#}").contains("no implementation"));
+        // forward_quantized without a quant spec is rejected at load too
+        let err = NativeEngine
+            .load_program("c", "forward_quantized", &entry, &spec)
+            .err()
+            .expect("must reject");
+        assert!(format!("{err:#}").contains("quant spec"));
     }
 
     #[test]

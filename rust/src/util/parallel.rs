@@ -114,10 +114,12 @@ pub(crate) fn override_guard() -> std::sync::MutexGuard<'static, ()> {
 /// `f(first_row, chunk)` receives a contiguous chunk of whole rows
 /// starting at global row index `first_row`. Rows must be independent.
 /// `work_per_row` is an estimate of scalar operations per row, used to
-/// decide whether threading pays.
-pub fn par_rows<F>(out: &mut [f32], row_width: usize, work_per_row: usize, f: F)
+/// decide whether threading pays. Generic over the element type so the
+/// f32 kernels and the fixed-point (`i32` raw word) kernels share one
+/// fork-join shape.
+pub fn par_rows<T: Send, F>(out: &mut [T], row_width: usize, work_per_row: usize, f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(row_width > 0 && out.len() % row_width == 0);
     let rows = out.len() / row_width;

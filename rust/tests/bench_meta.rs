@@ -1,0 +1,161 @@
+//! Bench-metadata sanity: `BENCH_train.json` and `BENCH_serve.json` at
+//! the repo root must parse and carry the schema the benches write —
+//! including the `recorded` flag — so placeholder drift (a bench
+//! renaming a field, or a stale placeholder losing sync with the
+//! recorder) is caught by `cargo test` instead of review.
+//!
+//! Contract: every timing/throughput field must be *present*; it may be
+//! `null` only while the file's `recorded` flag is `false`. Once a file
+//! claims `recorded: true`, nulls in required numeric fields fail.
+
+use pds::util::json::Json;
+
+fn load(name: &str) -> Json {
+    let path = format!("{}/../{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("{name} is not valid JSON: {e}"))
+}
+
+/// The `recorded` flag must exist and be a bool.
+fn recorded_flag(doc: &Json, what: &str) -> bool {
+    match doc.get("recorded") {
+        Some(Json::Bool(b)) => *b,
+        other => panic!("{what}: 'recorded' must be a bool, got {other:?}"),
+    }
+}
+
+/// A required field: present always, numeric when `recorded`.
+fn check_field(obj: &Json, key: &str, recorded: bool, what: &str) {
+    match obj.get(key) {
+        None => panic!("{what}: missing required field '{key}'"),
+        Some(Json::Null) if recorded => {
+            panic!("{what}: '{key}' is null but the file claims recorded=true")
+        }
+        Some(Json::Null) | Some(Json::Num(_)) => {}
+        Some(other) => panic!("{what}: '{key}' must be a number or null, got {other:?}"),
+    }
+}
+
+#[test]
+fn bench_train_schema() {
+    let doc = load("BENCH_train.json");
+    assert_eq!(
+        doc.get("bench").and_then(|v| v.as_str()),
+        Some("train_pipeline"),
+        "bench tag"
+    );
+    let recorded = recorded_flag(&doc, "BENCH_train.json");
+    check_field(&doc, "kernel_threads_total", recorded, "BENCH_train.json");
+    check_field(&doc, "max_speedup", recorded, "BENCH_train.json");
+    assert!(
+        doc.get("target_speedup").and_then(|v| v.as_f64()).is_some(),
+        "target_speedup must be a number"
+    );
+    let cases = doc
+        .get("cases")
+        .and_then(|v| v.as_arr())
+        .expect("cases array");
+    assert!(!cases.is_empty(), "cases must not be empty");
+    for (i, case) in cases.iter().enumerate() {
+        let what = format!("BENCH_train.json case {i}");
+        assert!(
+            case.get("name").and_then(|v| v.as_str()).is_some(),
+            "{what}: name"
+        );
+        let layers = case
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .unwrap_or_else(|| panic!("{what}: layers"));
+        assert!(layers.len() >= 2, "{what}: layers too short");
+        for key in ["batch", "depth", "samples_per_epoch"] {
+            assert!(
+                case.get(key).and_then(|v| v.as_usize()).is_some(),
+                "{what}: '{key}' must be a positive integer"
+            );
+        }
+        for key in ["seq_epoch_ms", "pipe_epoch_ms", "speedup"] {
+            check_field(case, key, recorded, &what);
+        }
+    }
+}
+
+#[test]
+fn bench_serve_schema() {
+    let doc = load("BENCH_serve.json");
+    assert_eq!(
+        doc.get("bench").and_then(|v| v.as_str()),
+        Some("serve_load"),
+        "bench tag"
+    );
+    let recorded = recorded_flag(&doc, "BENCH_serve.json");
+    check_field(&doc, "kernel_threads_total", recorded, "BENCH_serve.json");
+    // the speedup keys must be present but may legitimately be null
+    // even when recorded (a single-scenario sweep has no baseline pair)
+    for key in ["speedup_workers", "speedup_vs_single_worker"] {
+        match doc.get(key) {
+            Some(Json::Null) | Some(Json::Num(_)) => {}
+            other => panic!("BENCH_serve.json: '{key}' must be number or null, got {other:?}"),
+        }
+    }
+    let scenarios = doc
+        .get("scenarios")
+        .and_then(|v| v.as_arr())
+        .expect("scenarios array");
+    assert!(!scenarios.is_empty(), "scenarios must not be empty");
+    for (i, sc) in scenarios.iter().enumerate() {
+        let what = format!("BENCH_serve.json scenario {i}");
+        assert!(
+            sc.get("workers").and_then(|v| v.as_usize()).is_some(),
+            "{what}: workers"
+        );
+        check_field(sc, "total_throughput_rps", recorded, &what);
+        let models = sc
+            .get("models")
+            .and_then(|v| v.as_arr())
+            .unwrap_or_else(|| panic!("{what}: models array"));
+        for (j, m) in models.iter().enumerate() {
+            let what = format!("{what} model {j}");
+            assert!(m.get("model").and_then(|v| v.as_str()).is_some(), "{what}");
+            for key in [
+                "served",
+                "rejected",
+                "throughput_rps",
+                "p50_us",
+                "p95_us",
+                "p99_us",
+                "batches",
+                "mean_occupancy",
+                "stolen",
+            ] {
+                check_field(m, key, recorded, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn bench_serve_quant_section_schema() {
+    let doc = load("BENCH_serve.json");
+    let q = doc
+        .get("quant_exec")
+        .expect("quant_exec section (written by `cargo bench --bench quant_exec`)");
+    let recorded = recorded_flag(q, "quant_exec");
+    // the format tag must always parse as Qm.n
+    let fmt = q
+        .get("format")
+        .and_then(|v| v.as_str())
+        .expect("quant_exec.format");
+    assert!(
+        pds::nn::fixed::QFormat::parse(fmt).is_some(),
+        "quant_exec.format '{fmt}' is not a Qm.n format"
+    );
+    let kernel = q.get("kernel").expect("quant_exec.kernel");
+    for key in ["batch", "f32_ms", "quant_ms", "quant_speedup", "saturations"] {
+        check_field(kernel, key, recorded, "quant_exec.kernel");
+    }
+    let serve = q.get("serve").expect("quant_exec.serve");
+    for key in ["workers", "f32_rps", "quant_rps", "quant_speedup"] {
+        check_field(serve, key, recorded, "quant_exec.serve");
+    }
+}

@@ -1,0 +1,130 @@
+//! Golden regression tests for the paper-reproduction numbers behind
+//! `pds exp table1` / `pds exp table3`.
+//!
+//! The values below are *committed* goldens, not recomputed from the
+//! same formulas at test time: a refactor of `hw::storage` or
+//! `sparsity::clash_free` that silently shifts a count must fail here,
+//! because these are the numbers the paper comparison rests on
+//! (Table I storage words and reduction factors; Table III clash-free
+//! pattern-space sizes |S_Mi| and address-generation storage).
+
+use pds::hw::storage::{training_storage, StorageComparison, StorageCost};
+use pds::sparsity::clash_free::{address_storage_cost, pattern_space, Flavor};
+use pds::sparsity::config::{DoutConfig, JunctionShape, NetConfig};
+
+// ---------------------------------------------------------------------
+// Table I — N_net = (800, 100, 10), sparse d_out = (20, 10)
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_table1_fc_storage() {
+    let net = NetConfig::new(vec![800, 100, 10]);
+    let c = training_storage(&net, &net.fc_dout());
+    // committed golden values (paper Table I, FC column)
+    assert_eq!(c.activations, 4_300);
+    assert_eq!(c.act_derivatives, 300);
+    assert_eq!(c.deltas, 220);
+    assert_eq!(c.biases, 110);
+    assert_eq!(c.weights, 81_000);
+    assert_eq!(c.total(), 85_930);
+}
+
+#[test]
+fn golden_table1_sparse_storage_and_reductions() {
+    let net = NetConfig::new(vec![800, 100, 10]);
+    let dout = DoutConfig(vec![20, 10]);
+    let c = training_storage(&net, &dout);
+    // committed golden values (paper Table I, sparse column)
+    assert_eq!(c.weights, 17_000);
+    assert_eq!(c.total(), 21_930);
+    let cmp = StorageComparison::new(&net, &dout);
+    // paper: 3.9X memory, 4.8X compute
+    assert!((cmp.memory_reduction() - 85_930.0 / 21_930.0).abs() < 1e-12);
+    assert!((cmp.compute_reduction() - 81.0 / 17.0).abs() < 1e-12);
+    // inference-only variant drops the training banks
+    let inf = StorageCost::inference_only(&net, &dout);
+    assert_eq!(inf.total(), 900 + 110 + 17_000);
+}
+
+// ---------------------------------------------------------------------
+// Table III — junction (N_l, N_r, d_out, d_in, z) = (12, 12, 2, 2, 4)
+// ---------------------------------------------------------------------
+
+const T3_SHAPE: JunctionShape = JunctionShape {
+    n_left: 12,
+    n_right: 12,
+};
+
+#[test]
+fn golden_table3_pattern_space_counts() {
+    // committed goldens: (flavor, |S_Mi| exact, exact-formula?)
+    // depth = N_l / z = 3; dither factor K = 4!/(2!)^2 = 6 (z % d_in = 0)
+    let cases: [(Flavor, u128, bool); 6] = [
+        (Flavor::Type1 { dither: false }, 81, true), // 3^4
+        (Flavor::Type1 { dither: true }, 486, true), // 81 * 6
+        (Flavor::Type2 { dither: false }, 6_561, true), // 3^8
+        (Flavor::Type2 { dither: true }, 236_196, true), // 6561 * 36
+        (Flavor::Type3 { dither: false }, 1_679_616, true), // 6^8
+        (Flavor::Type3 { dither: true }, 60_466_176, true), // 6^8 * 36
+    ];
+    for (flavor, want, exact_formula) in cases {
+        let got = pattern_space(T3_SHAPE, 2, 4, flavor);
+        assert_eq!(got.exact, Some(want), "{flavor:?}");
+        assert_eq!(got.is_exact_formula, exact_formula, "{flavor:?}");
+        // the log10 channel must agree with the exact count
+        assert!(
+            (got.log10 - (want as f64).log10()).abs() < 1e-9,
+            "{flavor:?}: log10 {} vs exact {want}",
+            got.log10
+        );
+    }
+}
+
+#[test]
+fn golden_table3_address_storage() {
+    // committed goldens (Table III, last column), z = 4, d_out = 2
+    let cases: [(Flavor, usize); 6] = [
+        (Flavor::Type1 { dither: false }, 4),
+        (Flavor::Type1 { dither: true }, 8),
+        (Flavor::Type2 { dither: false }, 8),
+        (Flavor::Type2 { dither: true }, 16),
+        (Flavor::Type3 { dither: false }, 24),
+        (Flavor::Type3 { dither: true }, 32),
+    ];
+    for (flavor, want) in cases {
+        assert_eq!(address_storage_cost(T3_SHAPE, 2, 4, flavor), want, "{flavor:?}");
+    }
+}
+
+#[test]
+fn golden_table3_mnist_junction() {
+    // the production-sized (800, 100, d_out=20, z=200) junction the
+    // table3 harness also prints: counts overflow u128, so the goldens
+    // pin the log10 channel and the storage words
+    let big = JunctionShape {
+        n_left: 800,
+        n_right: 100,
+    };
+    let t1 = pattern_space(big, 20, 200, Flavor::Type1 { dither: false });
+    // depth = 4: |S| = 4^200 -> log10 = 200 * log10(4)
+    assert_eq!(t1.exact, None, "4^200 must overflow u128");
+    // golden: 200 * log10(4) = 120.41199826559248
+    assert!(
+        (t1.log10 - 120.411_998_265_592_48).abs() < 1e-9,
+        "type1 log10 {}",
+        t1.log10
+    );
+    assert!(t1.is_exact_formula);
+    let t3 = pattern_space(big, 20, 200, Flavor::Type3 { dither: true });
+    // z = 200, d_in = 160: mutually non-divisible -> (z!)^d_out upper bound
+    assert!(!t3.is_exact_formula);
+    assert_eq!(t3.exact, None);
+    assert_eq!(
+        address_storage_cost(big, 20, 200, Flavor::Type1 { dither: false }),
+        200
+    );
+    assert_eq!(
+        address_storage_cost(big, 20, 200, Flavor::Type3 { dither: true }),
+        20_000
+    );
+}

@@ -178,3 +178,44 @@ fn metrics_occupancy_and_latency_are_consistent() {
     assert_eq!(r.stolen, m.stolen.load(Ordering::Relaxed));
     svc.shutdown().unwrap();
 }
+
+/// Quantized serving: a model with a Qm.n format set serves through the
+/// fixed-point kernels. Predictions must agree with an f32-served twin
+/// of the *same* model (same pattern seed, same parameter init) on
+/// bounded inputs — quantization error is far below the class-decision
+/// margins at Q5.10 — and the saturation metric must stay zero.
+#[test]
+fn quantized_model_serves_and_matches_f32_twin() {
+    let fmt = pds::nn::fixed::QFormat::default();
+    let spec_f32 = loadgen::model_spec(dir(), "tiny", 0.25, 5).unwrap();
+    let spec_q = loadgen::model_spec(dir(), "tiny", 0.25, 5).unwrap().with_quant(fmt);
+    // two services so both specs can share the config name
+    let svc_f = InferenceService::start(dir(), vec![spec_f32], ServerConfig::default()).unwrap();
+    let svc_q = InferenceService::start(dir(), vec![spec_q], ServerConfig::default()).unwrap();
+    let cf = svc_f.client("tiny").unwrap();
+    let cq = svc_q.client("tiny").unwrap();
+    let mut rng = Rng::new(6);
+    let mut agree = 0usize;
+    let n = 40usize;
+    for _ in 0..n {
+        let x: Vec<f32> = (0..cf.features()).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+        let pf = cf.classify(x.clone()).unwrap();
+        let pq = cq.classify(x).unwrap();
+        assert!(pq.class < cq.classes());
+        if pf.class == pq.class {
+            agree += 1;
+        }
+    }
+    // identical models, milli-scale logit differences: argmax may flip
+    // only on near-ties, which bounded random inputs make rare
+    assert!(agree >= n - 4, "only {agree}/{n} predictions agree");
+    let mq = svc_q.metrics("tiny").unwrap();
+    assert_eq!(
+        mq.quant_saturations.load(Ordering::Relaxed),
+        0,
+        "Q5.10 must have headroom for the tiny config"
+    );
+    assert_eq!(mq.requests.load(Ordering::Relaxed), n as u64);
+    svc_f.shutdown().unwrap();
+    svc_q.shutdown().unwrap();
+}
