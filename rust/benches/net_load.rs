@@ -1,0 +1,110 @@
+//! Networked serving bench: sustained throughput and achieved
+//! micro-batch coalescing of the TCP front-end under concurrent
+//! pipelined socket clients, against the single-client baseline.
+//!
+//! Each scenario starts a fresh service + `NetServer` on an ephemeral
+//! loopback port, drives the closed-loop socket load generator through
+//! real TCP connections, and reads the coalescing counters back over
+//! the wire. Merges a `net` section (including the achieved mean
+//! coalesced batch size — the number that proves socket traffic reaches
+//! the parallel batch kernels as batches, not batch-1 calls) into
+//! `BENCH_serve.json` at the repo root, preserving the `serve_load` and
+//! `quant_exec` sections.
+//!
+//!     cargo bench --bench net_load
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pds::coordinator::loadgen::{self, SocketLoadSpec};
+use pds::coordinator::{InferenceService, ServerConfig};
+use pds::net::{NetServer, NetServerConfig};
+
+const BATCH_WINDOW: Duration = Duration::from_micros(1000);
+
+fn run_scenario(
+    dir: &str,
+    models: &[String],
+    spec: SocketLoadSpec,
+) -> anyhow::Result<Vec<loadgen::SocketLoadReport>> {
+    let specs = models
+        .iter()
+        .map(|m| loadgen::model_spec(dir, m, 0.25, 7))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let svc = Arc::new(InferenceService::start(
+        dir,
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_depth: 256,
+            tune_kernel_threads: true,
+        },
+    )?);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            max_connections: 64,
+            batch_window: BATCH_WINDOW,
+        },
+    )?;
+    let reports = loadgen::run_socket_load(server.local_addr(), models, &spec, 0x5EED)?;
+    let svc = server.shutdown()?;
+    drop(svc);
+    Ok(reports)
+}
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let models = vec!["tiny".to_string(), "mnist_fc2".to_string()];
+    // sweep offered concurrency: 1 client x 1 pipeline is the
+    // batch-1 degenerate baseline; the others give the micro-batcher
+    // something to coalesce
+    let sweep = [
+        SocketLoadSpec { clients: 1, requests: 64, pipeline: 1 },
+        SocketLoadSpec { clients: 4, requests: 96, pipeline: 8 },
+        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8 },
+    ];
+    let mut scenarios = Vec::new();
+    for spec in sweep {
+        println!(
+            "== {} client(s) x pipeline {} per model ==",
+            spec.clients, spec.pipeline
+        );
+        match run_scenario(dir, &models, spec) {
+            Ok(reports) => {
+                for r in &reports {
+                    r.print();
+                }
+                scenarios.push((spec, reports));
+            }
+            Err(e) => {
+                eprintln!(
+                    "net_load: scenario {}x{} failed: {e:#}",
+                    spec.clients, spec.pipeline
+                );
+                return;
+            }
+        }
+    }
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    let doc = loadgen::net_bench_json(&scenarios, BATCH_WINDOW);
+    // print the same flush-weighted aggregate the document records, so
+    // the console headline cannot diverge from BENCH_serve.json
+    if let Some(mean) = doc
+        .get("net")
+        .and_then(|n| n.get("mean_coalesced_batch"))
+        .and_then(|v| v.as_f64())
+    {
+        println!(
+            "\nachieved mean coalesced batch size {mean:.2} \
+             (pipelined socket traffic reaches the engine as batches)"
+        );
+    }
+    // merge-write so the serve_load and quant_exec sections survive
+    match loadgen::write_bench_json(out, doc) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("net_load: cannot write {out}: {e}"),
+    }
+}

@@ -11,15 +11,27 @@
 //! pattern is shaped by [`LoadSpec::burst`] / [`LoadSpec::think_time`]:
 //! bursty arrivals stress the shard router and the dynamic batcher's
 //! partial-flush path.
+//!
+//! The *socket* mode ([`run_socket_load`]) drives the same closed loop
+//! through a real TCP connection per client against a
+//! [`crate::net::NetServer`], with pipelined multi-sample groups — the
+//! traffic shape the network micro-batcher coalesces. It backs
+//! `benches/net_load.rs` (the `net` section of `BENCH_serve.json`,
+//! including the achieved mean coalesced batch size) and the `pds
+//! serve --listen` end-to-end tests.
 
 use std::collections::BTreeMap;
+use std::net::SocketAddr;
 use std::path::Path;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::server::{InferenceService, ModelMetrics, ModelSpec, ServeError, ServerConfig};
+use super::server::{
+    InferenceService, LatencyHistogram, ModelMetrics, ModelSpec, ServeError, ServerConfig,
+};
+use crate::net::{NetClient, NetClientError};
 use crate::runtime::Manifest;
 use crate::sparsity::config::{DoutConfig, NetConfig};
 use crate::sparsity::{generate, Method};
@@ -369,4 +381,340 @@ pub fn write_bench_json(path: impl AsRef<Path>, doc: Json) -> std::io::Result<()
         Err(e) => return Err(e),
     };
     std::fs::write(path, format!("{merged}\n"))
+}
+
+/// Shape of the offered *socket* load, per model: closed-loop clients
+/// over real TCP connections, each submitting pipelined groups.
+#[derive(Clone, Copy, Debug)]
+pub struct SocketLoadSpec {
+    /// Concurrent closed-loop TCP clients per model (one connection
+    /// each).
+    pub clients: usize,
+    /// Total samples each client submits.
+    pub requests: usize,
+    /// Samples per pipelined group ([`NetClient::classify_pipelined`]):
+    /// the client writes the whole group before reading any response,
+    /// which is the concurrency the server-side micro-batcher coalesces.
+    pub pipeline: usize,
+}
+
+impl Default for SocketLoadSpec {
+    fn default() -> Self {
+        SocketLoadSpec {
+            clients: 4,
+            requests: 96,
+            pipeline: 8,
+        }
+    }
+}
+
+/// What one model sustained under a [`SocketLoadSpec`], end to end
+/// through the TCP front-end.
+#[derive(Clone, Debug)]
+pub struct SocketLoadReport {
+    /// Model (manifest config) name.
+    pub model: String,
+    /// Closed-loop TCP clients that drove this model.
+    pub clients: usize,
+    /// Samples per pipelined group actually driven (the requested
+    /// [`SocketLoadSpec::pipeline`] clamped to this model's engine
+    /// batch size).
+    pub pipeline: usize,
+    /// Samples served (responses received by the clients).
+    pub served: u64,
+    /// Pipelined groups retried after a `Busy` shed.
+    pub busy_retries: u64,
+    /// Wall-clock time of the whole socket load run.
+    pub wall: Duration,
+    /// Sustained samples per second through the socket (served / wall).
+    pub throughput: f64,
+    /// Median client-observed *group* round-trip (connect-side wall
+    /// time per pipelined group, recorded once per sample).
+    pub p50: Duration,
+    /// 95th-percentile group round-trip.
+    pub p95: Duration,
+    /// 99th-percentile group round-trip.
+    pub p99: Duration,
+    /// Micro-batcher flushes at the server for this model.
+    pub net_flushes: u64,
+    /// Samples those flushes coalesced.
+    pub net_coalesced: u64,
+    /// Achieved mean coalesced batch size (`net_coalesced /
+    /// net_flushes`) — the number that proves socket traffic reaches the
+    /// engine as batches, not batch-1 calls.
+    pub mean_coalesced: f64,
+}
+
+impl SocketLoadReport {
+    /// One-line human-readable summary.
+    pub fn print(&self) {
+        println!(
+            "{:<12} clients {:>2} x pipeline {:>2}: {:>8.0} samp/s | group p50 {:>9.2?} \
+             p95 {:>9.2?} p99 {:>9.2?} | coalesced {:>5.1}/flush ({} flushes), {} busy retries",
+            self.model,
+            self.clients,
+            self.pipeline,
+            self.throughput,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.mean_coalesced,
+            self.net_flushes,
+            self.busy_retries,
+        );
+    }
+
+    /// JSON object for the `net` section of `BENCH_serve.json`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("clients".to_string(), Json::Num(self.clients as f64));
+        m.insert("pipeline".to_string(), Json::Num(self.pipeline as f64));
+        m.insert("served".to_string(), Json::Num(self.served as f64));
+        m.insert(
+            "busy_retries".to_string(),
+            Json::Num(self.busy_retries as f64),
+        );
+        m.insert("wall_s".to_string(), Json::Num(self.wall.as_secs_f64()));
+        m.insert("throughput_rps".to_string(), Json::Num(self.throughput));
+        m.insert("p50_us".to_string(), Json::Num(self.p50.as_secs_f64() * 1e6));
+        m.insert("p95_us".to_string(), Json::Num(self.p95.as_secs_f64() * 1e6));
+        m.insert("p99_us".to_string(), Json::Num(self.p99.as_secs_f64() * 1e6));
+        m.insert(
+            "net_flushes".to_string(),
+            Json::Num(self.net_flushes as f64),
+        );
+        m.insert(
+            "net_coalesced".to_string(),
+            Json::Num(self.net_coalesced as f64),
+        );
+        m.insert(
+            "mean_coalesced".to_string(),
+            Json::Num(self.mean_coalesced),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Submit one pipelined group with the standard `Busy` retry policy
+/// ([`BUSY_BACKOFF`] between attempts, optional overall deadline),
+/// returning the predictions and how many attempts were shed with
+/// `Busy`. Shared by the socket load generator and the `pds client`
+/// CLI so the two cannot drift apart on retry behavior.
+pub fn classify_group_with_retry(
+    net: &mut NetClient,
+    model: &str,
+    group: &[Vec<f32>],
+    deadline: Option<Instant>,
+) -> Result<(Vec<crate::net::NetPrediction>, u64)> {
+    let mut busy_retries = 0u64;
+    loop {
+        match net.classify_pipelined(model, group) {
+            Ok(preds) => return Ok((preds, busy_retries)),
+            Err(NetClientError::Busy) => {
+                busy_retries += 1;
+                if let Some(d) = deadline {
+                    anyhow::ensure!(
+                        Instant::now() < d,
+                        "server still busy after {busy_retries} retries — giving up"
+                    );
+                }
+                std::thread::sleep(BUSY_BACKOFF);
+            }
+            Err(e) => anyhow::bail!("socket classify failed: {e}"),
+        }
+    }
+}
+
+/// Drive `spec` against every model in `models` through the TCP
+/// front-end at `addr`, one real connection per client, pipelined
+/// groups of [`SocketLoadSpec::pipeline`] samples (clamped per model to
+/// its engine batch size — a larger group cannot coalesce further and
+/// could livelock the whole-group `Busy` retry against the server's
+/// batcher queue cap). `Busy` sheds are retried after a short backoff
+/// and counted; because a retry resubmits the whole group, the
+/// server-side coalescing counters include any retried work, while the
+/// report's `served` counts each sample once. Counters are read back
+/// over the wire with a `MetricsRequest` at the end, so this works
+/// against any server, not just an in-process one — but like
+/// [`run_load`] it expects a freshly started server (cumulative
+/// counters would fold earlier traffic in).
+pub fn run_socket_load(
+    addr: SocketAddr,
+    models: &[String],
+    spec: &SocketLoadSpec,
+    seed: u64,
+) -> Result<Vec<SocketLoadReport>> {
+    anyhow::ensure!(
+        spec.clients > 0 && spec.requests > 0 && spec.pipeline > 0,
+        "empty socket load spec"
+    );
+    // resolve every model's shape once, up front
+    let mut probe = NetClient::connect(addr)?;
+    let health = probe.health().map_err(|e| anyhow::anyhow!("health: {e}"))?;
+    drop(probe);
+    // per model: feature dim, class count, and the pipelined group size
+    // actually driven — the requested pipeline clamped to the engine
+    // batch (a larger group cannot coalesce further and, since a Busy
+    // shed retries the *whole* group, could livelock against the
+    // server's batcher queue cap). Computed once here; the client
+    // threads and the report both read this value.
+    let mut dims: BTreeMap<&str, (usize, usize, usize)> = BTreeMap::new();
+    for m in models {
+        let info = health
+            .models
+            .iter()
+            .find(|i| &i.name == m)
+            .ok_or_else(|| anyhow::anyhow!("model '{m}' not served at {addr}"))?;
+        dims.insert(
+            m.as_str(),
+            (
+                info.features as usize,
+                info.classes as usize,
+                spec.pipeline.min(info.batch as usize).max(1),
+            ),
+        );
+    }
+    let hists: BTreeMap<&str, LatencyHistogram> =
+        models.iter().map(|m| (m.as_str(), LatencyHistogram::new())).collect();
+    let served: BTreeMap<&str, AtomicU64> =
+        models.iter().map(|m| (m.as_str(), AtomicU64::new(0))).collect();
+    let busy: BTreeMap<&str, AtomicU64> =
+        models.iter().map(|m| (m.as_str(), AtomicU64::new(0))).collect();
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for (mi, model) in models.iter().enumerate() {
+            let (features, classes, pipeline) = dims[model.as_str()];
+            for c in 0..spec.clients {
+                let hist = &hists[model.as_str()];
+                let served = &served[model.as_str()];
+                let busy = &busy[model.as_str()];
+                handles.push(s.spawn(move || -> Result<()> {
+                    let mut net = NetClient::connect(addr)?;
+                    let mut rng = Rng::new(seed ^ ((mi as u64) << 32) ^ c as u64);
+                    let mut remaining = spec.requests;
+                    while remaining > 0 {
+                        let k = pipeline.min(remaining);
+                        let group: Vec<Vec<f32>> = (0..k)
+                            .map(|_| (0..features).map(|_| rng.normal()).collect())
+                            .collect();
+                        let t = Instant::now();
+                        let (preds, retries) =
+                            classify_group_with_retry(&mut net, model, &group, None)?;
+                        for p in &preds {
+                            anyhow::ensure!(
+                                p.class < classes,
+                                "class {} out of range for {model}",
+                                p.class
+                            );
+                        }
+                        let rt = t.elapsed();
+                        for _ in 0..k {
+                            hist.record(rt);
+                        }
+                        served.fetch_add(k as u64, Ordering::Relaxed);
+                        busy.fetch_add(retries, Ordering::Relaxed);
+                        remaining -= k;
+                    }
+                    Ok(())
+                }));
+            }
+        }
+        for h in handles {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("socket load client panicked"))??;
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed();
+    // read the server-side coalescing counters back over the wire
+    let mut probe = NetClient::connect(addr)?;
+    models
+        .iter()
+        .map(|m| {
+            let snap = probe
+                .metrics(m)
+                .map_err(|e| anyhow::anyhow!("metrics for '{m}': {e}"))?;
+            let hist = &hists[m.as_str()];
+            let served = served[m.as_str()].load(Ordering::Relaxed);
+            Ok(SocketLoadReport {
+                model: m.clone(),
+                clients: spec.clients,
+                // the group size actually driven (clamped once, in dims)
+                pipeline: dims[m.as_str()].2,
+                served,
+                busy_retries: busy[m.as_str()].load(Ordering::Relaxed),
+                wall,
+                throughput: served as f64 / wall.as_secs_f64().max(1e-9),
+                p50: hist.quantile(0.50),
+                p95: hist.quantile(0.95),
+                p99: hist.quantile(0.99),
+                net_flushes: snap.net_flushes,
+                net_coalesced: snap.net_coalesced,
+                mean_coalesced: snap.mean_coalesced(),
+            })
+        })
+        .collect()
+}
+
+/// Assemble the `net` section of `BENCH_serve.json` from socket-load
+/// scenarios (merged over the existing file with [`write_bench_json`],
+/// so the `serve_load` and `quant_exec` sections survive). The
+/// top-level `mean_coalesced_batch` is the flush-weighted mean over
+/// every scenario — the headline number for "socket traffic reaches the
+/// engine as batches".
+pub fn net_bench_json(
+    scenarios: &[(SocketLoadSpec, Vec<SocketLoadReport>)],
+    batch_window: Duration,
+) -> Json {
+    let mut net = BTreeMap::new();
+    net.insert("recorded".to_string(), Json::Bool(true));
+    net.insert(
+        "kernel_threads_total".to_string(),
+        Json::Num(parallel::machine_threads() as f64),
+    );
+    net.insert(
+        "batch_window_us".to_string(),
+        Json::Num(batch_window.as_secs_f64() * 1e6),
+    );
+    let mut arr = Vec::new();
+    let (mut flushes, mut coalesced) = (0u64, 0u64);
+    for (spec, reports) in scenarios {
+        let total: f64 = reports.iter().map(|r| r.throughput).sum();
+        let (f, c) = reports.iter().fold((0u64, 0u64), |(f, c), r| {
+            (f + r.net_flushes, c + r.net_coalesced)
+        });
+        flushes += f;
+        coalesced += c;
+        let mut obj = BTreeMap::new();
+        obj.insert("clients".to_string(), Json::Num(spec.clients as f64));
+        obj.insert("pipeline".to_string(), Json::Num(spec.pipeline as f64));
+        obj.insert("total_throughput_rps".to_string(), Json::Num(total));
+        obj.insert(
+            "mean_coalesced_batch".to_string(),
+            if f == 0 {
+                Json::Null
+            } else {
+                Json::Num(c as f64 / f as f64)
+            },
+        );
+        obj.insert(
+            "models".to_string(),
+            Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+        );
+        arr.push(Json::Obj(obj));
+    }
+    net.insert("scenarios".to_string(), Json::Arr(arr));
+    net.insert(
+        "mean_coalesced_batch".to_string(),
+        if flushes == 0 {
+            Json::Null
+        } else {
+            Json::Num(coalesced as f64 / flushes as f64)
+        },
+    );
+    let mut root = BTreeMap::new();
+    root.insert("net".to_string(), Json::Obj(net));
+    Json::Obj(root)
 }

@@ -17,7 +17,10 @@
 //!   executable (the software analogue of feeding the junction pipeline
 //!   one input per junction cycle), and per-model [`ModelMetrics`].
 //! - [`loadgen`] — the closed-loop load generator behind `pds serve`,
-//!   `pds serve-bench` and the `serve_load` bench target.
+//!   `pds serve-bench` and the `serve_load` bench target, plus its
+//!   socket mode (`run_socket_load`: real TCP connections with
+//!   pipelined groups through [`crate::net::NetServer`], backing the
+//!   `net_load` bench).
 
 pub mod loadgen;
 pub mod server;
@@ -25,6 +28,6 @@ pub mod trainer;
 
 pub use server::{
     Client, InferenceServer, InferenceService, LatencyHistogram, ModelMetrics, ModelSpec,
-    Prediction, ServeError, ServerConfig,
+    PendingPrediction, Prediction, ServeError, ServerConfig,
 };
 pub use trainer::{PipelinedTrainSession, TrainSession, TrainStepOut};

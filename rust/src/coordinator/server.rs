@@ -158,10 +158,19 @@ pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
 }
 
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
 impl LatencyHistogram {
     const BUCKETS: usize = 40;
 
-    fn new() -> Self {
+    /// Empty histogram. Public so out-of-service measurement points
+    /// (e.g. the socket load generator's client-observed latencies) can
+    /// reuse the same bucketing and quantile math.
+    pub fn new() -> Self {
         LatencyHistogram {
             buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -406,6 +415,23 @@ pub struct Client {
     core: Arc<ModelCore>,
 }
 
+/// A request accepted into the service but not yet computed — the
+/// non-blocking half of [`Client::submit`]. Call
+/// [`PendingPrediction::wait`] to block for the reply. Dropping it
+/// abandons the result (the worker's reply send fails harmlessly).
+pub struct PendingPrediction {
+    rx: mpsc::Receiver<Prediction>,
+}
+
+impl PendingPrediction {
+    /// Block until the prediction is computed. Fails with
+    /// [`ServeError::Stopped`] if the serving worker dropped the request
+    /// during shutdown instead of executing it.
+    pub fn wait(self) -> Result<Prediction, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Stopped)
+    }
+}
+
 impl Client {
     /// Name of the model this client submits to.
     pub fn model(&self) -> &str {
@@ -422,18 +448,28 @@ impl Client {
         self.core.classes
     }
 
-    /// Submit one feature vector and block until its prediction returns.
+    /// Compiled engine batch size — the most requests one worker flush
+    /// can carry, and therefore the natural coalescing bound for
+    /// upstream micro-batchers ([`crate::net::MicroBatcher`]).
+    pub fn batch(&self) -> usize {
+        self.core.batch
+    }
+
+    /// Submit one feature vector without blocking for the result.
     ///
     /// Routing: the shallowest shard is tried first (load balances
     /// toward idle workers), then the remaining shards in index order
     /// on overflow. Fails fast with [`ServeError::Busy`]
     /// when every shard is at capacity (bounded-queue backpressure — the
     /// caller decides whether to retry or shed), and with
-    /// [`ServeError::Stopped`] after shutdown.
+    /// [`ServeError::Stopped`] after shutdown. A burst of `submit`
+    /// calls issued back-to-back lands in the worker queues together,
+    /// so the dynamic batcher coalesces it into full engine batches —
+    /// this is the primitive the network micro-batcher flushes through.
     ///
     /// # Panics
     /// If `features.len()` does not match the model's input dimension.
-    pub fn classify(&self, features: Vec<f32>) -> Result<Prediction, ServeError> {
+    pub fn submit(&self, features: Vec<f32>) -> Result<PendingPrediction, ServeError> {
         assert_eq!(features.len(), self.core.features, "feature dim mismatch");
         let (reply_tx, reply_rx) = mpsc::channel();
         let mut req = Request {
@@ -457,7 +493,7 @@ impl Client {
         let mut stopped = 0usize;
         for i in std::iter::once(first).chain((0..n).filter(|&i| i != first)) {
             match shards[i].try_push(req) {
-                Ok(()) => return reply_rx.recv().map_err(|_| ServeError::Stopped),
+                Ok(()) => return Ok(PendingPrediction { rx: reply_rx }),
                 // a single stopped shard just means its worker died;
                 // siblings may still serve — only all-stopped is fatal
                 Err((ServeError::Stopped, r)) => {
@@ -472,6 +508,15 @@ impl Client {
         }
         self.core.metrics.rejected.fetch_add(1, Ordering::Relaxed);
         Err(ServeError::Busy)
+    }
+
+    /// Submit one feature vector and block until its prediction returns
+    /// ([`Client::submit`] + [`PendingPrediction::wait`]).
+    ///
+    /// # Panics
+    /// If `features.len()` does not match the model's input dimension.
+    pub fn classify(&self, features: Vec<f32>) -> Result<Prediction, ServeError> {
+        self.submit(features)?.wait()
     }
 }
 

@@ -18,6 +18,7 @@
 //! | [`nn`] | Sec. II eq. 2–4, Sec. III-A/D | reference dense + CSR compacted kernels (batch-parallel), Adam trainers, the pipelined training engine ([`nn::pipeline`]) executing the FF/BP/UP interleave, and the Qm.n fixed-point execution path ([`nn::fixed`]) |
 //! | [`runtime`] | — | backend-agnostic [`runtime::Engine`] facade: native or PJRT execution of the manifest programs, plus the native-only streaming `train_pipelined` path |
 //! | [`coordinator`] | Sec. III (scale-out analogue) | training sessions (fused + pipelined); the multi-worker sharded inference service + load generator |
+//! | [`net`] | Sec. III (network-edge analogue) | binary wire protocol, threaded TCP front-end ([`net::NetServer`]), adaptive micro-batching into engine batches, blocking pipelined [`net::NetClient`] |
 //! | [`data`] | Sec. IV | synthetic class-conditional surrogates for MNIST / Reuters / TIMIT / CIFAR |
 //! | [`exp`] | Sec. IV figures/tables | the paper's experiment harnesses (`pds exp <id>`) |
 //! | [`util`] | — | in-tree rng / json / bench / property-test / fork-join replacements |
@@ -42,5 +43,6 @@ pub mod data;
 pub mod nn;
 pub mod runtime;
 pub mod coordinator;
+pub mod net;
 pub mod exp;
 pub mod util;

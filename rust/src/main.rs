@@ -22,6 +22,7 @@ use std::time::Duration;
 
 use pds::coordinator::loadgen::{self, LoadSpec};
 use pds::coordinator::{InferenceService, PipelinedTrainSession, ServerConfig};
+use pds::net::{NetClient, NetServer, NetServerConfig};
 use pds::nn::fixed::{FixedSparseNet, QFormat};
 use pds::nn::pipeline::PipelineConfig;
 use pds::nn::sparse::SparseNet;
@@ -105,6 +106,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&opts)?,
         "train" => cmd_train(&opts)?,
         "serve" => cmd_serve(&opts)?,
+        "client" => cmd_client(&opts)?,
         "serve-bench" => cmd_serve_bench(&opts)?,
         "exp" => {
             let id = pos.first().map(String::as_str).unwrap_or("all");
@@ -142,6 +144,15 @@ fn print_help() {
            serve     --models tiny,mnist_fc2 [--workers 2] [--queue-depth 256]\n\
                      [--clients 4] [--requests 200] [--wait-ms 2]\n\
                      [--quant [Qm.n]]  (serve in fixed point, default Q5.10)\n\
+                     [--listen ADDR [--batch-window USEC] [--max-conns N]]\n\
+                     (--listen 127.0.0.1:0 starts the TCP front-end and\n\
+                      serves until a client sends a shutdown frame;\n\
+                      --batch-window is the micro-batcher's coalescing\n\
+                      deadline in microseconds, default 1000)\n\
+           client    --addr HOST:PORT [--model NAME] [--requests 16]\n\
+                     [--pipeline 4] [--seed 0] [--shutdown]\n\
+                     (drives a `serve --listen` server over TCP;\n\
+                      --shutdown asks the server to drain and exit)\n\
            serve-bench --models tiny,mnist_fc2 [--workers 4] [--clients 8]\n\
                      [--requests 200] [--wait-ms 2] [--queue-depth 256]\n\
                      [--think-us 0] [--burst 1] [--quant [Qm.n]]\n\
@@ -528,6 +539,9 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
             tune_kernel_threads: true,
         },
     )?;
+    if let Some(listen) = opts.get("listen") {
+        return cmd_serve_listen(svc, listen, &models, opts);
+    }
     println!(
         "serving {models:?}: {workers} workers/model, queue depth {queue_depth}, \
          max_wait {wait_ms}ms; {clients} clients x {requests} requests per model{}",
@@ -551,6 +565,175 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         println!("{}", svc.metrics(m).unwrap().report(m));
     }
     svc.shutdown()?;
+    Ok(())
+}
+
+/// `serve --listen ADDR`: front the service with the TCP server and
+/// park until a client requests drain with a shutdown frame.
+fn cmd_serve_listen(
+    svc: InferenceService,
+    listen: &str,
+    models: &[String],
+    opts: &BTreeMap<String, String>,
+) -> anyhow::Result<()> {
+    let window_us: u64 = opts
+        .get("batch-window")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1000);
+    let max_conns: usize = opts
+        .get("max-conns")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(64);
+    let svc = std::sync::Arc::new(svc);
+    let server = NetServer::start(
+        std::sync::Arc::clone(&svc),
+        listen,
+        NetServerConfig {
+            max_connections: max_conns,
+            batch_window: Duration::from_micros(window_us),
+        },
+    )?;
+    println!(
+        "serving {models:?} — listening on {} (batch window {window_us}us, \
+         max {max_conns} connections); send a shutdown frame to drain \
+         (`pds client --addr {} --shutdown`)",
+        server.local_addr(),
+        server.local_addr(),
+    );
+    server.run_until_shutdown();
+    println!("shutdown requested: draining in-flight requests");
+    // batcher handles survive the server teardown, so the summary below
+    // includes requests answered *during* the drain
+    let handles: Vec<_> = models.iter().filter_map(|m| server.batcher(m)).collect();
+    let net = server.shutdown()?;
+    for h in &handles {
+        if let Some(snap) = pds::net::model_metrics_snapshot(&net, h) {
+            println!(
+                "model {}: {} served, {} engine batches (mean occupancy {:.1}), \
+                 {} micro-batch flushes (mean coalesced {:.1})",
+                snap.model,
+                snap.requests,
+                snap.batches,
+                snap.mean_occupancy,
+                snap.net_flushes,
+                snap.mean_coalesced(),
+            );
+        }
+    }
+    // both Arcs must go before the unwrap: ours and the one the server
+    // handed back
+    drop(svc);
+    match std::sync::Arc::try_unwrap(net) {
+        Ok(svc) => svc.shutdown()?,
+        Err(_) => anyhow::bail!("service still referenced after network drain"),
+    }
+    println!("clean shutdown: network drained, engine workers joined");
+    Ok(())
+}
+
+/// `client`: drive a `serve --listen` server over TCP.
+fn cmd_client(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let addr = opts
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("client requires --addr HOST:PORT"))?;
+    let mut net = NetClient::connect(addr)?;
+    let health = net.health().map_err(|e| anyhow::anyhow!("health: {e}"))?;
+    anyhow::ensure!(!health.models.is_empty(), "server serves no models");
+    if opts.get("shutdown").map(String::as_str) == Some("true") && !opts.contains_key("requests")
+    {
+        // pure shutdown call: no inference traffic wanted
+        net.shutdown_server()
+            .map_err(|e| anyhow::anyhow!("shutdown: {e}"))?;
+        println!("server acknowledged shutdown");
+        return Ok(());
+    }
+    let model = match opts.get("model") {
+        Some(m) => m.clone(),
+        None => health.models[0].name.clone(),
+    };
+    let info = health
+        .models
+        .iter()
+        .find(|i| i.name == model)
+        .ok_or_else(|| anyhow::anyhow!("model '{model}' not served (have: {:?})",
+            health.models.iter().map(|i| &i.name).collect::<Vec<_>>()))?;
+    let requests: usize = opts.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    // clamp to the engine batch: a larger group cannot coalesce any
+    // further, and past the server's batcher queue cap it would only
+    // earn Busy sheds (same clamp as loadgen::run_socket_load)
+    let pipeline: usize = opts
+        .get("pipeline")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4)
+        .clamp(1, info.batch as usize);
+    let seed: u64 = opts.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    println!(
+        "connected to {addr}: {} model(s), targeting '{model}' ({} features, {} classes, \
+         engine batch {})",
+        health.models.len(),
+        info.features,
+        info.classes,
+        info.batch
+    );
+    let mut rng = Rng::new(seed);
+    let mut served = 0usize;
+    let mut occupancy_sum = 0u64;
+    let mut busy_retries = 0usize;
+    let t0 = std::time::Instant::now();
+    let mut remaining = requests;
+    while remaining > 0 {
+        let k = pipeline.min(remaining);
+        let group: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..info.features as usize).map(|_| rng.normal()).collect())
+            .collect();
+        // a transiently saturated server sheds Busy; retry with the
+        // load generator's shared policy — but bounded, so a
+        // persistently saturated server fails loudly instead of
+        // hanging the CLI
+        let retry_deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let (preds, retries) = loadgen::classify_group_with_retry(
+            &mut net,
+            &model,
+            &group,
+            Some(retry_deadline),
+        )?;
+        busy_retries += retries as usize;
+        for p in &preds {
+            anyhow::ensure!(
+                p.class < info.classes as usize,
+                "class {} out of range",
+                p.class
+            );
+            occupancy_sum += p.batch_occupancy as u64;
+        }
+        served += k;
+        remaining -= k;
+    }
+    let wall = t0.elapsed();
+    println!(
+        "client: {served} predictions round-tripped in {wall:?} \
+         ({:.0} samp/s, mean engine occupancy {:.1}, {busy_retries} busy retries)",
+        served as f64 / wall.as_secs_f64().max(1e-9),
+        occupancy_sum as f64 / served.max(1) as f64,
+    );
+    if let Ok(snap) = net.metrics(&model) {
+        println!(
+            "server metrics for {model}: {} served, {} engine batches, \
+             {} micro-batch flushes (mean coalesced {:.1})",
+            snap.requests,
+            snap.batches,
+            snap.net_flushes,
+            snap.mean_coalesced(),
+        );
+    }
+    if opts.get("shutdown").map(String::as_str) == Some("true") {
+        net.shutdown_server()
+            .map_err(|e| anyhow::anyhow!("shutdown: {e}"))?;
+        println!("server acknowledged shutdown");
+    }
     Ok(())
 }
 

@@ -1,0 +1,538 @@
+//! Adaptive micro-batching between the socket front-end and the engine.
+//!
+//! A TCP edge degenerates into batch-1 engine calls if every connection
+//! handler submits its requests one at a time: the engine pays one full
+//! fixed-batch execution per request, exactly the failure mode the
+//! paper's hardware avoids by keeping its junction pipeline full. The
+//! [`MicroBatcher`] closes that gap: connection handlers *enqueue*
+//! requests (never blocking on the engine), a collector thread coalesces
+//! everything that arrives within one *batch window* into a group, and
+//! flushes the whole group into the [`Client`]'s worker shards
+//! back-to-back — so the service's dynamic batcher sees the group
+//! together and executes it as one (or few) engine batches.
+//!
+//! Flush policy — whichever comes first:
+//! - **full**: the group reaches the model's engine batch size (waiting
+//!   longer could not make the engine batch any fuller), or
+//! - **deadline**: [`BatcherConfig::window`] has elapsed since the
+//!   group's *first* request arrived (bounding the latency a lone
+//!   request can pay; the window is armed per group, not a fixed tick,
+//!   so an idle service adds no latency jitter).
+//!
+//! The window is the deadline knob exposed on the CLI
+//! (`serve --listen ... --batch-window USEC`): 0 flushes every request
+//! immediately (pure pass-through, lowest latency), larger values trade
+//! queueing latency for fuller engine batches. Achieved coalescing is
+//! observable: [`BatcherMetrics`] counts flushes and coalesced requests
+//! (their ratio is the achieved mean coalesced batch size reported in
+//! `BENCH_serve.json`'s `net` section), split by flush cause.
+//!
+//! Completion is pipelined: the collector hands each flushed group (a
+//! vector of [`PendingPrediction`]s) to a completion thread and
+//! immediately resumes collecting, so waiting on one group's engine
+//! execution never blocks coalescing of the next.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Client, PendingPrediction, Prediction, ServeError};
+
+/// Tuning knobs for one model's [`MicroBatcher`].
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Deadline from a group's first enqueue to its forced flush.
+    /// `Duration::ZERO` flushes every request immediately.
+    pub window: Duration,
+    /// Flush as soon as a group reaches this size (normally the model's
+    /// engine batch size — larger groups cannot fill an engine batch
+    /// any further).
+    pub max_batch: usize,
+    /// Bound on requests queued ahead of the collector; beyond it,
+    /// enqueues are rejected with [`ServeError::Busy`] (backpressure at
+    /// the network edge mirrors the engine's bounded shards).
+    pub queue_cap: usize,
+}
+
+impl BatcherConfig {
+    /// Config for a model served by `client`: flush at the engine batch
+    /// size, queue at most 4 engine batches ahead.
+    pub fn for_client(client: &Client, window: Duration) -> BatcherConfig {
+        let max_batch = client.batch().max(1);
+        BatcherConfig {
+            window,
+            max_batch,
+            queue_cap: max_batch * 4,
+        }
+    }
+}
+
+/// Coalescing counters for one model's micro-batcher. All atomics,
+/// readable at any time with `Ordering::Relaxed`.
+#[derive(Debug, Default)]
+pub struct BatcherMetrics {
+    /// Groups flushed into the engine.
+    pub flushes: AtomicU64,
+    /// Requests carried by those groups; `coalesced / flushes` is the
+    /// achieved mean coalesced batch size.
+    pub coalesced: AtomicU64,
+    /// Flushes triggered by the group reaching `max_batch`.
+    pub full_flushes: AtomicU64,
+    /// Flushes triggered by the batch window expiring (or by shutdown
+    /// draining a partial group).
+    pub deadline_flushes: AtomicU64,
+    /// Enqueues rejected because the collector queue was at
+    /// [`BatcherConfig::queue_cap`].
+    pub rejected: AtomicU64,
+}
+
+impl BatcherMetrics {
+    /// Achieved mean coalesced batch size (0.0 before any flush).
+    pub fn mean_coalesced(&self) -> f64 {
+        let f = self.flushes.load(Ordering::Relaxed);
+        if f == 0 {
+            0.0
+        } else {
+            self.coalesced.load(Ordering::Relaxed) as f64 / f as f64
+        }
+    }
+}
+
+/// The delivery callback of a [`BatchItem`]: invoked exactly once with
+/// the request's outcome, from a batcher thread.
+pub type Responder = Box<dyn FnOnce(Result<Prediction, ServeError>) + Send>;
+
+/// One queued request: the feature vector plus the callback that
+/// delivers its outcome (the socket layer writes a `Response` or
+/// `Error` frame from it; tests capture the result directly).
+pub struct BatchItem {
+    /// Input feature vector (already validated against the model's
+    /// input dimension by the caller).
+    pub features: Vec<f32>,
+    /// Invoked exactly once with the request's outcome, from a batcher
+    /// thread.
+    pub respond: Responder,
+}
+
+/// A queued request stamped with its arrival time, so the flush
+/// deadline of any group is always measured from its *oldest* member —
+/// including requests left behind by a full flush.
+struct QueuedItem {
+    item: BatchItem,
+    arrived: Instant,
+}
+
+struct BatcherState {
+    queue: VecDeque<QueuedItem>,
+    stopped: bool,
+}
+
+struct BatcherShared {
+    client: Client,
+    cfg: BatcherConfig,
+    state: Mutex<BatcherState>,
+    nonempty: Condvar,
+    metrics: BatcherMetrics,
+}
+
+/// Cloneable enqueue handle onto a [`MicroBatcher`] (what connection
+/// handlers hold; the batcher itself stays owned by the server for
+/// shutdown).
+#[derive(Clone)]
+pub struct BatcherHandle {
+    shared: Arc<BatcherShared>,
+}
+
+impl BatcherHandle {
+    /// Queue one request for the next flush. On rejection (queue cap
+    /// reached, or the batcher already stopped) the item's `respond`
+    /// callback is invoked immediately with the error — every accepted
+    /// call resolves exactly once, on some thread.
+    pub fn enqueue(&self, item: BatchItem) {
+        let err = {
+            let mut s = self.shared.state.lock().unwrap();
+            if s.stopped {
+                Some((ServeError::Stopped, item))
+            } else if s.queue.len() >= self.shared.cfg.queue_cap {
+                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Some((ServeError::Busy, item))
+            } else {
+                s.queue.push_back(QueuedItem {
+                    item,
+                    arrived: Instant::now(),
+                });
+                None
+            }
+        };
+        match err {
+            // respond outside the lock: the callback does socket I/O
+            Some((e, item)) => (item.respond)(Err(e)),
+            None => self.shared.nonempty.notify_one(),
+        }
+    }
+
+    /// This batcher's coalescing counters.
+    pub fn metrics(&self) -> &BatcherMetrics {
+        &self.shared.metrics
+    }
+
+    /// The model this batcher feeds.
+    pub fn model(&self) -> &str {
+        self.shared.client.model()
+    }
+
+    /// Input feature dimension of the model this batcher feeds.
+    pub fn features(&self) -> usize {
+        self.shared.client.features()
+    }
+
+    /// Number of output classes of the model this batcher feeds.
+    pub fn classes(&self) -> usize {
+        self.shared.client.classes()
+    }
+
+    /// Engine batch size of the model this batcher feeds.
+    pub fn batch(&self) -> usize {
+        self.shared.client.batch()
+    }
+}
+
+/// One flushed group in flight: the accepted submissions paired with
+/// their responders, handed to the completion thread.
+struct InFlightGroup {
+    items: Vec<(PendingPrediction, Responder)>,
+}
+
+/// Per-model adaptive micro-batcher (see the module docs). Owns the
+/// collector and completion threads; [`MicroBatcher::shutdown`] drains
+/// every accepted request before returning.
+pub struct MicroBatcher {
+    shared: Arc<BatcherShared>,
+    collector: Option<JoinHandle<()>>,
+    completer: Option<JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    /// Spawn the collector + completion threads for `client`'s model.
+    pub fn start(client: Client, cfg: BatcherConfig) -> MicroBatcher {
+        let shared = Arc::new(BatcherShared {
+            client,
+            cfg,
+            state: Mutex::new(BatcherState {
+                queue: VecDeque::new(),
+                stopped: false,
+            }),
+            nonempty: Condvar::new(),
+            metrics: BatcherMetrics::default(),
+        });
+        let (group_tx, group_rx): (Sender<InFlightGroup>, Receiver<InFlightGroup>) =
+            mpsc::channel();
+        let collector = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || collector_loop(shared, group_tx))
+        };
+        let completer = std::thread::spawn(move || completer_loop(group_rx));
+        MicroBatcher {
+            shared,
+            collector: Some(collector),
+            completer: Some(completer),
+        }
+    }
+
+    /// Cloneable enqueue handle for connection handlers.
+    pub fn handle(&self) -> BatcherHandle {
+        BatcherHandle {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// This batcher's coalescing counters.
+    pub fn metrics(&self) -> &BatcherMetrics {
+        &self.shared.metrics
+    }
+
+    /// Begin the drain without blocking: stop accepting new enqueues
+    /// (they resolve with [`ServeError::Stopped`]) and make the
+    /// collector flush already-queued requests immediately instead of
+    /// holding them for the rest of their window. Used by the TCP
+    /// server so connection drains are bounded by execution time, not
+    /// by the batch-window setting.
+    pub fn request_stop(&self) {
+        self.signal_stop();
+    }
+
+    /// Stop accepting, flush whatever is queued (a partial group is
+    /// flushed immediately, not held for its window), wait for every
+    /// in-flight response to be delivered, and join both threads.
+    pub fn shutdown(mut self) {
+        self.signal_stop();
+        if let Some(h) = self.collector.take() {
+            let _ = h.join();
+        }
+        // the collector exiting dropped its group sender, so the
+        // completion thread drains the channel and exits
+        if let Some(h) = self.completer.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn signal_stop(&self) {
+        self.shared.state.lock().unwrap().stopped = true;
+        self.shared.nonempty.notify_all();
+    }
+}
+
+impl Drop for MicroBatcher {
+    /// Dropping without [`MicroBatcher::shutdown`] still signals the
+    /// threads to stop; they drain detached rather than joined.
+    fn drop(&mut self) {
+        self.signal_stop();
+    }
+}
+
+/// Collect-and-flush loop: block for a group's first request, then
+/// fill until `max_batch` or the window deadline, then dispatch the
+/// whole group into the engine shards back-to-back.
+fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
+    loop {
+        let (group, full) = {
+            let mut s = shared.state.lock().unwrap();
+            // wait for the first request of a group (or stop + empty)
+            loop {
+                if !s.queue.is_empty() || s.stopped {
+                    break;
+                }
+                // spurious wakeups just re-check the predicate
+                s = shared.nonempty.wait(s).unwrap();
+            }
+            if s.queue.is_empty() {
+                // stopped and drained: done
+                return;
+            }
+            // fill until full, deadline, or stop (stop flushes the
+            // partial group immediately so shutdown never waits a
+            // whole window). The deadline is measured from the oldest
+            // queued request's own arrival, so a request left behind
+            // by a previous full flush never waits more than one
+            // window in total.
+            let deadline = s.queue.front().map(|q| q.arrived).unwrap_or_else(Instant::now)
+                + shared.cfg.window;
+            while s.queue.len() < shared.cfg.max_batch && !s.stopped {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) =
+                    shared.nonempty.wait_timeout(s, deadline - now).unwrap();
+                s = guard;
+            }
+            let take = s.queue.len().min(shared.cfg.max_batch);
+            let group: Vec<BatchItem> = s.queue.drain(..take).map(|q| q.item).collect();
+            (group, take >= shared.cfg.max_batch)
+        };
+        // dispatch outside the lock: back-to-back submits land in the
+        // worker shards together, which is what turns this group into
+        // full engine batches downstream
+        let mut in_flight = Vec::with_capacity(group.len());
+        for item in group {
+            match shared.client.submit(item.features) {
+                Ok(pending) => in_flight.push((pending, item.respond)),
+                Err(e) => (item.respond)(Err(e)),
+            }
+        }
+        if !in_flight.is_empty() {
+            // count the flush AFTER dispatch and only over accepted
+            // submits: mean_coalesced() is the acceptance metric
+            // claiming traffic reached the engine as batches, so work
+            // the engine shed with Busy/Stopped must not inflate it
+            let m = &shared.metrics;
+            m.flushes.fetch_add(1, Ordering::Relaxed);
+            m.coalesced.fetch_add(in_flight.len() as u64, Ordering::Relaxed);
+            if full {
+                m.full_flushes.fetch_add(1, Ordering::Relaxed);
+            } else {
+                m.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+            }
+            if let Err(failed) = groups.send(InFlightGroup { items: in_flight }) {
+                // completion thread is gone (it only exits early if a
+                // responder panicked): the exactly-once contract still
+                // holds — resolve every stranded responder with Stopped
+                // instead of silently dropping it, so connection
+                // handlers and tests never wait on a reply that cannot
+                // come. The workers tolerate the abandoned predictions
+                // (their reply send fails harmlessly).
+                for (pending, respond) in failed.0.items {
+                    drop(pending);
+                    respond(Err(ServeError::Stopped));
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Deliver engine results group by group. Within a group the waits are
+/// sequential, which is fine: the group executed together, so by the
+/// time the first reply arrives the rest are computed or imminent.
+fn completer_loop(groups: Receiver<InFlightGroup>) {
+    while let Ok(group) = groups.recv() {
+        for (pending, respond) in group.items {
+            respond(pending.wait());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    use crate::coordinator::loadgen::model_spec;
+    use crate::coordinator::{InferenceService, ServerConfig};
+
+    fn dir() -> &'static str {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+    }
+
+    /// A wide window plus a burst of enqueues must coalesce into one
+    /// flush, and every request must resolve exactly once.
+    #[test]
+    fn burst_coalesces_into_one_flush() {
+        let spec = model_spec(dir(), "tiny", 0.25, 21).unwrap();
+        let svc =
+            InferenceService::start(dir(), vec![spec], ServerConfig::default()).unwrap();
+        let client = svc.client("tiny").unwrap();
+        let features = client.features();
+        let batcher = MicroBatcher::start(
+            client,
+            BatcherConfig {
+                window: Duration::from_millis(200),
+                max_batch: 16,
+                queue_cap: 64,
+            },
+        );
+        let handle = batcher.handle();
+        let (tx, rx) = channel();
+        let n = 8usize;
+        for _ in 0..n {
+            let tx = tx.clone();
+            handle.enqueue(BatchItem {
+                features: vec![0.25; features],
+                respond: Box::new(move |res| tx.send(res.map(|p| p.class)).unwrap()),
+            });
+        }
+        for _ in 0..n {
+            let class = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("every request resolves")
+                .expect("prediction ok");
+            assert!(class < 8);
+        }
+        let m = batcher.metrics();
+        assert_eq!(m.coalesced.load(Ordering::Relaxed), n as u64);
+        assert_eq!(
+            m.flushes.load(Ordering::Relaxed),
+            1,
+            "burst inside one window must be one flush"
+        );
+        assert!(m.mean_coalesced() > 1.0);
+        batcher.shutdown();
+        svc.shutdown().unwrap();
+    }
+
+    /// Shutdown must drain accepted requests (partial group flushed
+    /// immediately) and reject later enqueues with `Stopped`.
+    #[test]
+    fn shutdown_drains_accepted_and_rejects_late() {
+        let spec = model_spec(dir(), "tiny", 0.25, 22).unwrap();
+        let svc =
+            InferenceService::start(dir(), vec![spec], ServerConfig::default()).unwrap();
+        let client = svc.client("tiny").unwrap();
+        let features = client.features();
+        let batcher = MicroBatcher::start(
+            client,
+            BatcherConfig {
+                // a window far longer than the test: only the shutdown
+                // drain can flush these
+                window: Duration::from_secs(60),
+                max_batch: 16,
+                queue_cap: 64,
+            },
+        );
+        let handle = batcher.handle();
+        let (tx, rx) = channel();
+        for _ in 0..3 {
+            let tx = tx.clone();
+            handle.enqueue(BatchItem {
+                features: vec![0.1; features],
+                respond: Box::new(move |res| tx.send(res.is_ok()).unwrap()),
+            });
+        }
+        batcher.shutdown();
+        for _ in 0..3 {
+            assert!(
+                rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+                "accepted requests must be served by the drain"
+            );
+        }
+        let (tx2, rx2) = channel();
+        handle.enqueue(BatchItem {
+            features: vec![0.1; features],
+            respond: Box::new(move |res| {
+                tx2.send(matches!(res, Err(ServeError::Stopped))).unwrap()
+            }),
+        });
+        assert!(rx2.recv_timeout(Duration::from_secs(10)).unwrap());
+        svc.shutdown().unwrap();
+    }
+
+    /// The queue cap sheds with `Busy` instead of growing unbounded.
+    #[test]
+    fn queue_cap_rejects_with_busy() {
+        let spec = model_spec(dir(), "tiny", 0.25, 23).unwrap();
+        let svc =
+            InferenceService::start(dir(), vec![spec], ServerConfig::default()).unwrap();
+        let client = svc.client("tiny").unwrap();
+        let features = client.features();
+        let batcher = MicroBatcher::start(
+            client,
+            BatcherConfig {
+                window: Duration::from_secs(60),
+                max_batch: 1000, // never full-flush during the test
+                queue_cap: 4,
+            },
+        );
+        let handle = batcher.handle();
+        let (tx, rx) = channel();
+        let mut busy = 0usize;
+        for _ in 0..8 {
+            let tx = tx.clone();
+            handle.enqueue(BatchItem {
+                features: vec![0.0; features],
+                respond: Box::new(move |res| {
+                    tx.send(matches!(res, Err(ServeError::Busy))).unwrap()
+                }),
+            });
+        }
+        // the cap is 4 and the collector may drain some before later
+        // enqueues, so at least 8 - 4 - (drained) rejections... the
+        // collector holds its group for the 60 s window, so exactly the
+        // overflow beyond one in-progress group is rejected; count the
+        // immediate Busy responses (they resolve synchronously)
+        while let Ok(was_busy) = rx.try_recv() {
+            if was_busy {
+                busy += 1;
+            }
+        }
+        assert!(busy >= 1, "overflow beyond the cap must shed as Busy");
+        assert_eq!(
+            batcher.metrics().rejected.load(Ordering::Relaxed),
+            busy as u64
+        );
+        batcher.shutdown();
+        svc.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,263 @@
+//! Blocking TCP client for the [`crate::net`] wire protocol.
+//!
+//! [`NetClient`] is deliberately simple — one connection, synchronous
+//! calls — but supports *pipelined* multi-sample classification:
+//! [`NetClient::classify_pipelined`] writes a whole group of `Request`
+//! frames in one buffered burst before reading any `Response`, which is
+//! exactly the traffic shape the server's micro-batcher coalesces into
+//! full engine batches. Responses are matched back to requests by frame
+//! id (the server may answer out of order), so results always come back
+//! in submission order.
+
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::wire::{
+    encode_request, read_frame, ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError,
+};
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum NetClientError {
+    /// The server shed this *request* with `Busy` — explicit
+    /// backpressure, retry after a backoff. A connection-level `Busy`
+    /// (the connection-cap shed, after which the server closes the
+    /// socket) surfaces as [`NetClientError::Remote`] instead, because
+    /// retrying on that connection cannot succeed.
+    Busy,
+    /// The server is draining or stopped.
+    Stopped,
+    /// The server reported another error (bad request, unknown model,
+    /// internal).
+    Remote {
+        /// Machine-readable failure class from the error frame.
+        code: ErrorCode,
+        /// Human-readable detail from the error frame.
+        message: String,
+    },
+    /// The server closed the connection before answering.
+    Closed,
+    /// A protocol violation on the stream (decode failure) or an
+    /// underlying transport failure.
+    Wire(WireError),
+    /// The server answered with a frame type that makes no sense for
+    /// the call (protocol confusion).
+    Unexpected,
+}
+
+impl std::fmt::Display for NetClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetClientError::Busy => write!(f, "server busy"),
+            NetClientError::Stopped => write!(f, "server stopped"),
+            NetClientError::Remote { code, message } => {
+                write!(f, "server error ({code}): {message}")
+            }
+            NetClientError::Closed => write!(f, "connection closed by server"),
+            NetClientError::Wire(e) => write!(f, "wire error: {e}"),
+            NetClientError::Unexpected => write!(f, "unexpected reply frame"),
+        }
+    }
+}
+
+impl std::error::Error for NetClientError {}
+
+impl From<WireError> for NetClientError {
+    fn from(e: WireError) -> Self {
+        NetClientError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for NetClientError {
+    fn from(e: std::io::Error) -> Self {
+        NetClientError::Wire(WireError::Io(e))
+    }
+}
+
+impl NetClientError {
+    fn from_error_frame(code: ErrorCode, message: String) -> NetClientError {
+        match code {
+            ErrorCode::Busy => NetClientError::Busy,
+            ErrorCode::Stopped => NetClientError::Stopped,
+            _ => NetClientError::Remote { code, message },
+        }
+    }
+}
+
+/// A prediction as observed over the socket (mirrors
+/// [`crate::coordinator::Prediction`]; `latency` is the *server-side*
+/// submit-to-reply latency carried in the response frame).
+#[derive(Clone, Copy, Debug)]
+pub struct NetPrediction {
+    /// Argmax class of the model's logits.
+    pub class: usize,
+    /// Server-side submit-to-reply latency.
+    pub latency: Duration,
+    /// Live rows in the engine batch that served this request.
+    pub batch_occupancy: usize,
+    /// Index of the engine worker that ran the batch.
+    pub worker: usize,
+}
+
+/// Server health as reported by a `HealthReply` frame.
+#[derive(Clone, Debug)]
+pub struct Health {
+    /// True once the server has begun drain-then-shutdown.
+    pub draining: bool,
+    /// Open client connections at snapshot time.
+    pub active_connections: usize,
+    /// Shape info for every served model.
+    pub models: Vec<ModelInfo>,
+}
+
+/// Blocking client over one TCP connection (see the module docs).
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect to a [`crate::net::NetServer`] (Nagle disabled — frames
+    /// are small and latency-sensitive).
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream, next_id: 1 })
+    }
+
+    fn read(&mut self) -> Result<Frame, NetClientError> {
+        match read_frame(&mut self.stream)? {
+            Some(f) => Ok(f),
+            None => Err(NetClientError::Closed),
+        }
+    }
+
+    /// Classify one feature vector (a pipelined group of one).
+    pub fn classify(
+        &mut self,
+        model: &str,
+        features: Vec<f32>,
+    ) -> Result<NetPrediction, NetClientError> {
+        let mut preds = self.classify_pipelined(model, std::slice::from_ref(&features))?;
+        Ok(preds.remove(0))
+    }
+
+    /// Classify a group of feature vectors, pipelined: every `Request`
+    /// frame is written (one buffered burst, a single syscall) before
+    /// any `Response` is read, results return in submission order.
+    /// Samples are borrowed, so a `Busy` retry loop re-submits the same
+    /// group without re-cloning it.
+    ///
+    /// All-or-nothing: if the server answers any sample with an error
+    /// frame, the first error is returned after all replies for the
+    /// group have been collected (so the stream stays in sync and the
+    /// caller can simply retry the group on [`NetClientError::Busy`]).
+    pub fn classify_pipelined(
+        &mut self,
+        model: &str,
+        samples: &[Vec<f32>],
+    ) -> Result<Vec<NetPrediction>, NetClientError> {
+        if samples.is_empty() {
+            return Ok(Vec::new());
+        }
+        let first_id = self.next_id;
+        let mut burst = Vec::new();
+        for features in samples {
+            burst.extend_from_slice(&encode_request(self.next_id, model, features));
+            self.next_id += 1;
+        }
+        let n = (self.next_id - first_id) as usize;
+        self.stream.write_all(&burst)?;
+        // collect every reply for the group, whatever the arrival order
+        let mut results: Vec<Option<Result<NetPrediction, NetClientError>>> = (0..n)
+            .map(|_| None)
+            .collect();
+        let mut seen = 0usize;
+        while seen < n {
+            match self.read()? {
+                Frame::Response { id, class, latency_us, batch_occupancy, worker }
+                    if id >= first_id && id < first_id + n as u64 =>
+                {
+                    let slot = (id - first_id) as usize;
+                    if results[slot].is_none() {
+                        seen += 1;
+                    }
+                    results[slot] = Some(Ok(NetPrediction {
+                        class: class as usize,
+                        latency: Duration::from_micros(latency_us),
+                        batch_occupancy: batch_occupancy as usize,
+                        worker: worker as usize,
+                    }));
+                }
+                Frame::Error { id, code, message }
+                    if id >= first_id && id < first_id + n as u64 =>
+                {
+                    let slot = (id - first_id) as usize;
+                    if results[slot].is_none() {
+                        seen += 1;
+                    }
+                    results[slot] =
+                        Some(Err(NetClientError::from_error_frame(code, message)));
+                }
+                // a connection-level error (id 0 / unknown id) aborts
+                // the whole group and is NOT mapped to the retryable
+                // Busy/Stopped variants: it means the connection itself
+                // was rejected (e.g. the server's connection-cap shed,
+                // which closes the socket right after) — retrying the
+                // group on this stream could only fail again
+                Frame::Error { code, message, .. } => {
+                    return Err(NetClientError::Remote { code, message });
+                }
+                _ => return Err(NetClientError::Unexpected),
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("all slots filled"))
+            .collect()
+    }
+
+    /// Fetch the server's health summary (drain state, connection
+    /// gauge, served models with their shapes).
+    pub fn health(&mut self) -> Result<Health, NetClientError> {
+        self.stream.write_all(&Frame::HealthRequest.encode())?;
+        match self.read()? {
+            Frame::HealthReply { draining, active_connections, models } => Ok(Health {
+                draining,
+                active_connections: active_connections as usize,
+                models,
+            }),
+            Frame::Error { code, message, .. } => {
+                Err(NetClientError::from_error_frame(code, message))
+            }
+            _ => Err(NetClientError::Unexpected),
+        }
+    }
+
+    /// Fetch one model's serving counters (engine + micro-batcher).
+    pub fn metrics(&mut self, model: &str) -> Result<MetricsSnapshot, NetClientError> {
+        let frame = Frame::MetricsRequest { model: model.to_string() };
+        self.stream.write_all(&frame.encode())?;
+        match self.read()? {
+            Frame::MetricsReply(s) => Ok(s),
+            Frame::Error { code, message, .. } => {
+                Err(NetClientError::from_error_frame(code, message))
+            }
+            _ => Err(NetClientError::Unexpected),
+        }
+    }
+
+    /// Ask the server to drain and shut down; returns once the server
+    /// acknowledges the request.
+    pub fn shutdown_server(&mut self) -> Result<(), NetClientError> {
+        self.stream.write_all(&Frame::Shutdown.encode())?;
+        match self.read()? {
+            Frame::Shutdown => Ok(()),
+            Frame::Error { code, message, .. } => {
+                Err(NetClientError::from_error_frame(code, message))
+            }
+            _ => Err(NetClientError::Unexpected),
+        }
+    }
+}

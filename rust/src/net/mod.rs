@@ -1,0 +1,40 @@
+//! Networked serving layer: the boundary between the outside world and
+//! the inference engine.
+//!
+//! The paper's hardware earns its throughput by keeping the batch
+//! pipeline full (one input per junction cycle, Sec. III); at a network
+//! edge the same economics demand coalescing many small independent
+//! requests into engine-sized batches. This module is that edge,
+//! built on `std::net` + threads (no tokio — the offline-build design
+//! note in [`crate::coordinator::server`] applies):
+//!
+//! - [`wire`] — length-prefixed binary protocol with a versioned frame
+//!   header and strict decoding (oversized / truncated / unknown-version
+//!   frames are rejected, never guessed at).
+//! - [`server`] — [`NetServer`]: threaded TCP accept loop fronting an
+//!   [`crate::coordinator::InferenceService`], with per-connection
+//!   handlers, a connection cap with explicit `Busy` shed, graceful
+//!   drain-then-shutdown, and health/metrics frames wired to
+//!   [`crate::coordinator::ModelMetrics`].
+//! - [`batcher`] — [`MicroBatcher`]: adaptive micro-batching (flush on
+//!   engine-batch-full or batch-window deadline, whichever first) that
+//!   turns concurrent socket traffic into coalesced engine batches
+//!   instead of batch-1 calls.
+//! - [`client`] — [`NetClient`]: blocking client with pipelined
+//!   multi-sample support (the `pds client` subcommand and the socket
+//!   load generator sit on it).
+//!
+//! CLI: `pds serve --listen ADDR [--batch-window USEC]` starts the
+//! server; `pds client --addr ADDR ...` drives it.
+
+pub mod batcher;
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use batcher::{
+    BatchItem, BatcherConfig, BatcherHandle, BatcherMetrics, MicroBatcher, Responder,
+};
+pub use client::{Health, NetClient, NetClientError, NetPrediction};
+pub use server::{model_metrics_snapshot, NetMetrics, NetServer, NetServerConfig};
+pub use wire::{ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError};

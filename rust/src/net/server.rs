@@ -1,0 +1,658 @@
+//! Threaded TCP front-end over the in-process [`InferenceService`].
+//!
+//! [`NetServer`] is the network boundary the rest of the crate never
+//! had: a `std::net` accept loop (no tokio — the design note in
+//! [`crate::coordinator::server`] applies: offline build, compute-bound
+//! request path) that speaks the [`crate::net::wire`] protocol and feeds
+//! every `Request` frame through a per-model
+//! [`MicroBatcher`](crate::net::MicroBatcher) so concurrent socket
+//! traffic reaches the engine as coalesced batches.
+//!
+//! - **Per-connection handler threads.** Each accepted connection gets
+//!   one reader thread. Responses are written by batcher completion
+//!   threads through a mutex-shared writer, so a connection can pipeline
+//!   many requests before reading any response (frames carry ids).
+//! - **Connection cap.** Beyond [`NetServerConfig::max_connections`]
+//!   live connections, a new peer receives one `Error{Busy}` frame and
+//!   is closed — explicit shed, mirroring the engine's bounded shards.
+//! - **Graceful drain-then-shutdown.** [`NetServer::shutdown`] stops
+//!   accepting, lets every accepted request finish (handlers exit once
+//!   their in-flight count drains; batchers flush partial groups
+//!   immediately), then joins every thread. A client can request the
+//!   same drain remotely with a `Shutdown` frame —
+//!   [`NetServer::run_until_shutdown`] blocks until one arrives.
+//! - **Strict decode.** An undecodable frame gets one best-effort
+//!   `Error{BadRequest}` frame and the connection is closed; the server
+//!   never guesses at resynchronization.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::batcher::{BatchItem, BatcherConfig, BatcherHandle, MicroBatcher};
+use super::wire::{
+    read_frame, write_frame, ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError,
+};
+use crate::coordinator::{InferenceService, ServeError};
+
+/// How long a handler's blocking read waits before re-checking the
+/// server's stop flag (bounds shutdown latency per connection).
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Accept-loop poll interval while the listener has no pending peer.
+const ACCEPT_POLL: Duration = Duration::from_millis(1);
+/// Cap on concurrent shed threads (the polite Busy-frame goodbye takes
+/// up to ~1.4 s against a non-reading peer). Beyond it, over-cap
+/// connections are dropped outright — under a connect flood the
+/// resource bound matters more than the courtesy frame.
+const MAX_SHED_THREADS: usize = 32;
+
+/// Tuning knobs for the TCP front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct NetServerConfig {
+    /// Live-connection cap; peers beyond it are shed with one
+    /// `Error{Busy}` frame (CLI: `--max-conns`).
+    pub max_connections: usize,
+    /// Micro-batcher flush deadline — *the* latency/throughput knob of
+    /// the socket path, armed when a group's first request arrives
+    /// (CLI: `serve --listen ... --batch-window USEC`; 0 = flush every
+    /// request immediately).
+    pub batch_window: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            max_connections: 64,
+            batch_window: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Network-layer counters (the engine layer keeps its own
+/// [`crate::coordinator::ModelMetrics`]). All atomics, readable at any
+/// time with `Ordering::Relaxed`.
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    /// Connections accepted and handled.
+    pub accepted: AtomicU64,
+    /// Connections shed at the cap with `Error{Busy}`.
+    pub rejected_connections: AtomicU64,
+    /// Valid request frames received (including ones the micro-batcher
+    /// then shed synchronously with `Busy`/`Stopped`; reconcile against
+    /// [`crate::net::BatcherMetrics::rejected`] for admitted-only
+    /// counts).
+    pub requests: AtomicU64,
+    /// Response frames written (successful predictions).
+    pub responses: AtomicU64,
+    /// Error frames written (per-request and connection-level).
+    pub errors: AtomicU64,
+    /// Connections dropped on an undecodable frame.
+    pub wire_errors: AtomicU64,
+    /// Currently open connections (gauge).
+    pub active: AtomicUsize,
+}
+
+/// Shared state between the accept loop, the handlers, and the owner.
+struct ServerShared {
+    /// The engine service (handlers read its metrics for
+    /// `MetricsRequest` frames; submissions go through the batchers'
+    /// own clients).
+    svc: Arc<InferenceService>,
+    /// Set by [`NetServer::shutdown`]: stop accepting, drain, exit.
+    stop: AtomicBool,
+    /// Set when a peer sends a `Shutdown` frame; wakes
+    /// [`NetServer::run_until_shutdown`].
+    shutdown_requested: Mutex<bool>,
+    shutdown_cv: Condvar,
+    metrics: NetMetrics,
+    /// Per-model enqueue handles (immutable after startup).
+    batchers: BTreeMap<String, BatcherHandle>,
+    /// Live handler threads; the accept loop pushes, shutdown joins.
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ServerShared {
+    fn health_frame(&self) -> Frame {
+        Frame::HealthReply {
+            draining: self.stop.load(Ordering::Acquire),
+            active_connections: self.metrics.active.load(Ordering::Relaxed) as u32,
+            models: self
+                .batchers
+                .values()
+                .map(|b| ModelInfo {
+                    name: b.model().to_string(),
+                    features: b.features() as u32,
+                    classes: b.classes() as u32,
+                    batch: b.batch() as u32,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The TCP front-end. See the module docs for the architecture.
+///
+/// Startup takes the service as an `Arc` so the owner can keep an
+/// in-process [`crate::coordinator::Client`] to the very same engines —
+/// which is how the end-to-end tests prove socket inference bit-identical
+/// to in-process inference. [`NetServer::shutdown`] hands the `Arc`
+/// back after the network drain, so the owner decides when the engine
+/// workers stop.
+pub struct NetServer {
+    svc: Arc<InferenceService>,
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    batchers: Vec<MicroBatcher>,
+    addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), spawn
+    /// one micro-batcher per served model and the accept loop, and
+    /// return immediately. The bound address is [`NetServer::local_addr`].
+    pub fn start(
+        svc: Arc<InferenceService>,
+        addr: impl ToSocketAddrs,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let mut batchers = Vec::new();
+        let mut handles = BTreeMap::new();
+        for model in svc.models() {
+            let client = svc.client(&model)?;
+            let bcfg = BatcherConfig::for_client(&client, cfg.batch_window);
+            let b = MicroBatcher::start(client, bcfg);
+            handles.insert(model, b.handle());
+            batchers.push(b);
+        }
+        let shared = Arc::new(ServerShared {
+            svc: Arc::clone(&svc),
+            stop: AtomicBool::new(false),
+            shutdown_requested: Mutex::new(false),
+            shutdown_cv: Condvar::new(),
+            metrics: NetMetrics::default(),
+            batchers: handles,
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let max_conns = cfg.max_connections.max(1);
+            std::thread::spawn(move || accept_loop(listener, shared, max_conns))
+        };
+        Ok(NetServer {
+            svc,
+            shared,
+            accept: Some(accept),
+            batchers,
+            addr,
+        })
+    }
+
+    /// The address the listener actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Network-layer counters.
+    pub fn metrics(&self) -> &NetMetrics {
+        &self.shared.metrics
+    }
+
+    /// The served models' metrics snapshot as sent to clients
+    /// (engine counters + this server's micro-batcher coalescing).
+    pub fn model_snapshot(&self, model: &str) -> Option<MetricsSnapshot> {
+        model_metrics_snapshot(&self.svc, self.shared.batchers.get(model)?)
+    }
+
+    /// Enqueue handle of `model`'s micro-batcher. The handle stays
+    /// valid (for metrics reads) after [`NetServer::shutdown`], which
+    /// is how the CLI reports final post-drain coalescing numbers.
+    pub fn batcher(&self, model: &str) -> Option<BatcherHandle> {
+        self.shared.batchers.get(model).cloned()
+    }
+
+    /// Block until a peer requests drain with a `Shutdown` frame (or
+    /// [`NetServer::shutdown`] is invoked from another thread). The CLI
+    /// parks here between "listening" and the drain.
+    pub fn run_until_shutdown(&self) {
+        let mut requested = self.shared.shutdown_requested.lock().unwrap();
+        while !*requested && !self.shared.stop.load(Ordering::Acquire) {
+            let (guard, _) = self
+                .shared
+                .shutdown_cv
+                .wait_timeout(requested, Duration::from_millis(200))
+                .unwrap();
+            requested = guard;
+        }
+    }
+
+    /// Drain-then-shutdown of the *network* layer: stop accepting, let
+    /// every admitted request finish, join the accept loop, every
+    /// connection handler and every batcher thread — then hand the
+    /// inference service back to the owner (who calls
+    /// [`InferenceService::shutdown`] once no other `Arc`s remain).
+    pub fn shutdown(mut self) -> Result<Arc<InferenceService>> {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.shutdown_cv.notify_all();
+        // flush queued partial groups now, so the handler drain below is
+        // bounded by engine execution time, not by the batch window
+        for b in &self.batchers {
+            b.request_stop();
+        }
+        // a panicked thread is reported, but never short-circuits the
+        // teardown: every remaining thread is still joined and every
+        // batcher still drained before the error surfaces
+        let mut first_err: Option<anyhow::Error> = None;
+        if let Some(h) = self.accept.take() {
+            if h.join().is_err() {
+                first_err = Some(anyhow::anyhow!("accept loop panicked"));
+            }
+        }
+        // handlers exit once stopped + their in-flight replies drained
+        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            if h.join().is_err() && first_err.is_none() {
+                first_err = Some(anyhow::anyhow!("connection handler panicked"));
+            }
+        }
+        // batchers flush partial groups immediately on stop and join
+        // their completion threads, so every admitted request has been
+        // answered by the time this returns
+        for b in self.batchers.drain(..) {
+            b.shutdown();
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(Arc::clone(&self.svc)),
+        }
+    }
+}
+
+impl Drop for NetServer {
+    /// Dropping without [`NetServer::shutdown`] still signals every
+    /// thread to stop; they drain detached rather than joined.
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.shutdown_cv.notify_all();
+    }
+}
+
+/// Build the combined engine + micro-batcher metrics snapshot for one
+/// model — what a `MetricsReply` frame carries, also usable after
+/// [`NetServer::shutdown`] with the returned service and a
+/// [`BatcherHandle`] to report final post-drain numbers.
+pub fn model_metrics_snapshot(
+    svc: &InferenceService,
+    batcher: &BatcherHandle,
+) -> Option<MetricsSnapshot> {
+    let model = batcher.model().to_string();
+    let m = svc.metrics(&model)?;
+    let bm = batcher.metrics();
+    Some(MetricsSnapshot {
+        model,
+        requests: m.requests.load(Ordering::Relaxed),
+        rejected: m.rejected.load(Ordering::Relaxed),
+        batches: m.batches.load(Ordering::Relaxed),
+        padded_rows: m.padded_rows.load(Ordering::Relaxed),
+        stolen: m.stolen.load(Ordering::Relaxed),
+        quant_saturations: m.quant_saturations.load(Ordering::Relaxed),
+        p50_us: m.latency.quantile(0.50).as_micros() as u64,
+        p95_us: m.latency.quantile(0.95).as_micros() as u64,
+        p99_us: m.latency.quantile(0.99).as_micros() as u64,
+        mean_occupancy: m.mean_occupancy(),
+        net_flushes: bm.flushes.load(Ordering::Relaxed),
+        net_coalesced: bm.coalesced.load(Ordering::Relaxed),
+    })
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>, max_conns: usize) {
+    // live shed threads (detached, bounded by MAX_SHED_THREADS)
+    let shedding = Arc::new(AtomicUsize::new(0));
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let m = &shared.metrics;
+                if m.active.load(Ordering::Relaxed) >= max_conns {
+                    m.rejected_connections.fetch_add(1, Ordering::Relaxed);
+                    // shed on a short-lived detached thread: the write
+                    // timeout + lingering close can take over a second
+                    // against a non-reading peer, and the accept loop
+                    // must keep accepting meanwhile. Under a connect
+                    // flood the shed threads themselves are capped —
+                    // past the cap the connection is dropped without
+                    // the courtesy frame.
+                    if shedding.load(Ordering::Relaxed) < MAX_SHED_THREADS {
+                        shedding.fetch_add(1, Ordering::Relaxed);
+                        let shedding = Arc::clone(&shedding);
+                        std::thread::spawn(move || {
+                            shed_connection(stream);
+                            shedding.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    }
+                    continue;
+                }
+                m.active.fetch_add(1, Ordering::Relaxed);
+                m.accepted.fetch_add(1, Ordering::Relaxed);
+                let shared2 = Arc::clone(&shared);
+                let handle =
+                    std::thread::spawn(move || handle_connection(stream, shared2));
+                let mut conns = shared.conns.lock().unwrap();
+                // reap finished handlers so a long-lived server does not
+                // accumulate dead JoinHandles
+                conns.retain(|h| !h.is_finished());
+                conns.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// Over-cap peer: one best-effort Busy frame, then close.
+fn shed_connection(mut stream: TcpStream) {
+    // see handle_connection: accepted sockets can inherit non-blocking
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = write_frame(
+        &mut stream,
+        &Frame::Error {
+            id: 0,
+            code: ErrorCode::Busy,
+            message: "connection cap reached".to_string(),
+        },
+    );
+    let _ = stream.flush();
+    drain_before_close(&mut stream);
+}
+
+/// Absorb whatever the peer already sent before dropping a connection.
+/// Closing a socket with unread received bytes makes the kernel answer
+/// with RST, which can discard the error frame we just wrote out of the
+/// peer's receive buffer — draining first turns the close into a clean
+/// FIN so the peer reliably reads its `Error` frame.
+fn drain_before_close(stream: &mut TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut scratch = [0u8; 4096];
+    for _ in 0..8 {
+        match std::io::Read::read(stream, &mut scratch) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Truncate a client-supplied string before echoing it into an error
+/// message: wire strings are capped at u16::MAX bytes and the encoder
+/// asserts on longer ones, so echoing a hostile 64 KiB model name
+/// verbatim could panic the handler. 64 bytes is plenty for diagnosis.
+fn shorten(s: &str) -> String {
+    const MAX: usize = 64;
+    if s.len() <= MAX {
+        return s.to_string();
+    }
+    let mut end = MAX;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    format!("{}...", &s[..end])
+}
+
+/// Map an engine rejection onto a wire error code.
+fn code_for(e: ServeError) -> ErrorCode {
+    match e {
+        ServeError::Busy => ErrorCode::Busy,
+        ServeError::Stopped => ErrorCode::Stopped,
+    }
+}
+
+/// Shared per-connection writer with a dead-man flag: the first failed
+/// write (a non-reading peer's timeout, or a vanished peer) marks the
+/// connection dead and every later frame to it is dropped. This bounds
+/// the damage a stalled peer can do to the single completion thread to
+/// one write-timeout total — not one per queued response — so it
+/// cannot head-of-line-block other connections' replies for long.
+struct ConnWriter {
+    stream: Mutex<TcpStream>,
+    dead: AtomicBool,
+}
+
+impl ConnWriter {
+    fn new(stream: TcpStream) -> ConnWriter {
+        ConnWriter {
+            stream: Mutex::new(stream),
+            dead: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Serialize one frame onto the shared writer (best-effort: a vanished
+/// or stalled peer is not an error worth propagating — see
+/// [`ConnWriter`]).
+fn send(writer: &ConnWriter, metrics: &NetMetrics, frame: &Frame) {
+    if writer.dead.load(Ordering::Relaxed) {
+        return;
+    }
+    match frame {
+        Frame::Response { .. } => {
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+        }
+        Frame::Error { .. } => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {}
+    }
+    let mut w = writer.stream.lock().unwrap();
+    if write_frame(&mut *w, frame).is_err() {
+        writer.dead.store(true, Ordering::Relaxed);
+    }
+}
+
+/// One connection's reader loop. Decrements the active gauge on every
+/// exit path via a guard.
+fn handle_connection(stream: TcpStream, shared: Arc<ServerShared>) {
+    struct ActiveGuard<'a>(&'a NetMetrics);
+    impl Drop for ActiveGuard<'_> {
+        fn drop(&mut self) {
+            self.0.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+    let _guard = ActiveGuard(&shared.metrics);
+    // BSD-derived systems let accepted sockets inherit the listener's
+    // non-blocking flag (Linux does not); clear it explicitly or the
+    // read timeout below would be ineffective (instant EAGAIN spins)
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    // a peer that stops reading must not park responders (and through
+    // them the shutdown drain) forever on a full send buffer
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(ConnWriter::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = stream;
+    // replies this connection still owes (responders not yet invoked);
+    // the drain condition on shutdown
+    let in_flight = Arc::new(AtomicUsize::new(0));
+    loop {
+        match read_frame(&mut reader) {
+            Ok(None) => break, // clean close by the peer
+            Err(WireError::Io(e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // idle poll tick; the shared drain check below decides
+            }
+            Ok(Some(Frame::Request { id, model, features })) => {
+                handle_request(&shared, &writer, &in_flight, id, model, features);
+            }
+            Ok(Some(Frame::HealthRequest)) => {
+                send(&writer, &shared.metrics, &shared.health_frame());
+            }
+            Ok(Some(Frame::MetricsRequest { model })) => {
+                let frame = shared
+                    .batchers
+                    .get(&model)
+                    .and_then(|b| model_metrics_snapshot(&shared.svc, b))
+                    .map(Frame::MetricsReply)
+                    .unwrap_or_else(|| Frame::Error {
+                        id: 0,
+                        code: ErrorCode::UnknownModel,
+                        message: format!("model '{}' not served", shorten(&model)),
+                    });
+                send(&writer, &shared.metrics, &frame);
+            }
+            Ok(Some(Frame::Shutdown)) => {
+                send(&writer, &shared.metrics, &Frame::Shutdown);
+                let mut req = shared.shutdown_requested.lock().unwrap();
+                *req = true;
+                shared.shutdown_cv.notify_all();
+            }
+            Ok(Some(_)) => {
+                // server-to-client frame types arriving here mean a
+                // confused peer: strict close
+                send(
+                    &writer,
+                    &shared.metrics,
+                    &Frame::Error {
+                        id: 0,
+                        code: ErrorCode::BadRequest,
+                        message: "unexpected frame type".to_string(),
+                    },
+                );
+                break;
+            }
+            Err(e) => {
+                // undecodable or transport-broken: one best-effort
+                // error frame, then strict close
+                shared.metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+                send(
+                    &writer,
+                    &shared.metrics,
+                    &Frame::Error {
+                        id: 0,
+                        code: ErrorCode::BadRequest,
+                        message: format!("protocol error: {e}"),
+                    },
+                );
+                break;
+            }
+        }
+        // drain exit — checked after EVERY frame, not only on idle
+        // ticks, so a peer that keeps sending (and being answered with
+        // Stopped errors) cannot keep this handler — and through the
+        // join, NetServer::shutdown — alive forever
+        if shared.stop.load(Ordering::Acquire) && in_flight.load(Ordering::Acquire) == 0 {
+            break;
+        }
+    }
+    // No wait on `in_flight` here: reaching this point means either the
+    // peer is gone (EOF / protocol close — nobody left to write to) or
+    // the drain-path break already required in_flight == 0. Responders
+    // still pending in a batcher own the writer via Arc and either
+    // write harmlessly to the dead socket or are resolved by the
+    // batcher's own drain — parking this thread (and its connection-cap
+    // slot) for up to a batch window would serve no one.
+    //
+    // Absorb unread peer bytes so the close is a FIN, not an RST that
+    // could wipe our final error frame out of the peer's receive buffer.
+    drain_before_close(&mut reader);
+}
+
+/// Validate and enqueue one request; the responder writes the Response
+/// or Error frame from a batcher thread.
+fn handle_request(
+    shared: &Arc<ServerShared>,
+    writer: &Arc<ConnWriter>,
+    in_flight: &Arc<AtomicUsize>,
+    id: u64,
+    model: String,
+    features: Vec<f32>,
+) {
+    let metrics = &shared.metrics;
+    if shared.stop.load(Ordering::Acquire) {
+        send(
+            writer,
+            metrics,
+            &Frame::Error {
+                id,
+                code: ErrorCode::Stopped,
+                message: "server draining".to_string(),
+            },
+        );
+        return;
+    }
+    let Some(batcher) = shared.batchers.get(&model) else {
+        send(
+            writer,
+            metrics,
+            &Frame::Error {
+                id,
+                code: ErrorCode::UnknownModel,
+                message: format!("model '{}' not served", shorten(&model)),
+            },
+        );
+        return;
+    };
+    if features.len() != batcher.features() {
+        send(
+            writer,
+            metrics,
+            &Frame::Error {
+                id,
+                code: ErrorCode::BadRequest,
+                message: format!(
+                    "feature dim {} != model dim {}",
+                    features.len(),
+                    batcher.features()
+                ),
+            },
+        );
+        return;
+    }
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    in_flight.fetch_add(1, Ordering::AcqRel);
+    let writer = Arc::clone(writer);
+    let in_flight = Arc::clone(in_flight);
+    let shared = Arc::clone(shared);
+    batcher.enqueue(BatchItem {
+        features,
+        respond: Box::new(move |res| {
+            let frame = match res {
+                Ok(p) => Frame::Response {
+                    id,
+                    class: p.class as u32,
+                    latency_us: p.latency.as_micros() as u64,
+                    batch_occupancy: p.batch_occupancy as u32,
+                    worker: p.worker as u32,
+                },
+                Err(e) => Frame::Error {
+                    id,
+                    code: code_for(e),
+                    message: e.to_string(),
+                },
+            };
+            send(&writer, &shared.metrics, &frame);
+            in_flight.fetch_sub(1, Ordering::AcqRel);
+        }),
+    });
+}

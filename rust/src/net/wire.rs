@@ -1,0 +1,862 @@
+//! Length-prefixed binary wire protocol for the networked serving layer.
+//!
+//! Every frame on the wire is an 8-byte header followed by a payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  "PD" (0x50 0x44)
+//! 2       1     protocol version (currently 1)
+//! 3       1     frame type tag (see the table on [`Frame`])
+//! 4       4     payload length, u32 little-endian
+//! 8       len   payload (per-type layout, all integers little-endian)
+//! ```
+//!
+//! The decoder is *strict*: a frame with a bad magic, an unknown
+//! version, an unknown type tag, a declared payload longer than
+//! [`MAX_PAYLOAD`], payload bytes left over after the typed decode, or
+//! any out-of-range read inside the payload is rejected with a typed
+//! [`WireError`] — never a panic, and never a partial frame. Strings
+//! are u16-length-prefixed UTF-8; feature vectors are u32-count-prefixed
+//! f32 words (bit-exact round-trip: values go through
+//! `to_le_bytes`/`from_le_bytes`, never a numeric conversion).
+//!
+//! The codec is pure (`Frame::encode` / `Frame::decode` work on byte
+//! slices) so the property tests in `tests/prop_net.rs` can exercise
+//! truncation, bit flips and oversized headers without sockets;
+//! [`read_frame`] / [`write_frame`] adapt it to `std::io` streams.
+
+use std::io::{Read, Write};
+
+/// First two header bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"PD";
+/// Protocol version this build speaks. Frames carrying any other
+/// version are rejected with [`WireError::UnknownVersion`].
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes (magic + version + type + payload length).
+pub const HEADER_LEN: usize = 8;
+/// Hard cap on the declared payload length. A header announcing more is
+/// rejected *before* any allocation ([`WireError::Oversized`]), so a
+/// hostile 4 GiB length field cannot balloon server memory.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+
+/// How many consecutive read timeouts [`read_frame`] tolerates in the
+/// *middle* of a frame before giving up with [`WireError::Truncated`].
+/// A peer that stalls mid-frame holds a connection handler hostage;
+/// this bounds the hostage time to `limit x read_timeout` (about 5 s at
+/// the server's 100 ms read timeout) without ever abandoning partially
+/// consumed bytes.
+const MID_FRAME_STALL_LIMIT: usize = 50;
+
+/// Frame type tags (one per [`Frame`] variant).
+const T_REQUEST: u8 = 1;
+const T_RESPONSE: u8 = 2;
+const T_ERROR: u8 = 3;
+const T_HEALTH_REQUEST: u8 = 4;
+const T_HEALTH_REPLY: u8 = 5;
+const T_METRICS_REQUEST: u8 = 6;
+const T_METRICS_REPLY: u8 = 7;
+const T_SHUTDOWN: u8 = 8;
+
+/// Why a request failed, as carried by [`Frame::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The service (or the connection cap) is at capacity — explicit
+    /// backpressure, retry later.
+    Busy,
+    /// The service has shut down (or is draining and no longer accepts
+    /// new requests).
+    Stopped,
+    /// The request was structurally invalid (wrong feature dimension,
+    /// undecodable frame, unexpected frame type).
+    BadRequest,
+    /// The named model is not served.
+    UnknownModel,
+    /// An internal server failure.
+    Internal,
+}
+
+impl ErrorCode {
+    fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::Busy => 1,
+            ErrorCode::Stopped => 2,
+            ErrorCode::BadRequest => 3,
+            ErrorCode::UnknownModel => 4,
+            ErrorCode::Internal => 5,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::Busy),
+            2 => Some(ErrorCode::Stopped),
+            3 => Some(ErrorCode::BadRequest),
+            4 => Some(ErrorCode::UnknownModel),
+            5 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ErrorCode::Busy => "busy",
+            ErrorCode::Stopped => "stopped",
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::UnknownModel => "unknown-model",
+            ErrorCode::Internal => "internal",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Shape info for one served model, carried by [`Frame::HealthReply`]
+/// so a client can size feature vectors without out-of-band knowledge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInfo {
+    /// Manifest config name.
+    pub name: String,
+    /// Input feature dimension.
+    pub features: u32,
+    /// Number of output classes.
+    pub classes: u32,
+    /// Compiled engine batch size (the micro-batcher's flush bound).
+    pub batch: u32,
+}
+
+/// One model's serving counters, carried by [`Frame::MetricsReply`].
+/// Mirrors [`crate::coordinator::ModelMetrics`] plus the network
+/// micro-batcher's coalescing counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Manifest config name.
+    pub model: String,
+    /// Requests served (responses actually sent by the engine workers).
+    pub requests: u64,
+    /// Submissions rejected with `Busy` backpressure.
+    pub rejected: u64,
+    /// Engine batches executed.
+    pub batches: u64,
+    /// Zero rows padded into partial engine batches.
+    pub padded_rows: u64,
+    /// Requests stolen across worker shards.
+    pub stolen: u64,
+    /// Saturated fixed-point outputs (zero on f32-served models).
+    pub quant_saturations: u64,
+    /// Median submit-to-reply latency, microseconds.
+    pub p50_us: u64,
+    /// 95th-percentile latency, microseconds.
+    pub p95_us: u64,
+    /// 99th-percentile latency, microseconds.
+    pub p99_us: u64,
+    /// Mean live rows per executed engine batch.
+    pub mean_occupancy: f64,
+    /// Micro-batcher flushes for this model (socket path only).
+    pub net_flushes: u64,
+    /// Requests coalesced across those flushes; `net_coalesced /
+    /// net_flushes` is the achieved mean coalesced batch size.
+    pub net_coalesced: u64,
+}
+
+impl MetricsSnapshot {
+    /// Achieved mean coalesced batch size at the network micro-batcher
+    /// (0.0 before any flush).
+    pub fn mean_coalesced(&self) -> f64 {
+        if self.net_flushes == 0 {
+            0.0
+        } else {
+            self.net_coalesced as f64 / self.net_flushes as f64
+        }
+    }
+}
+
+/// One protocol frame.
+///
+/// | tag | variant | direction | payload |
+/// |-----|---------|-----------|---------|
+/// | 1 | `Request` | client → server | id u64, model string, features `[f32]` |
+/// | 2 | `Response` | server → client | id u64, class u32, latency_us u64, batch_occupancy u32, worker u32 |
+/// | 3 | `Error` | server → client | id u64 (0 = connection-level), code u8, message string |
+/// | 4 | `HealthRequest` | client → server | empty |
+/// | 5 | `HealthReply` | server → client | draining u8, active_connections u32, models `[ModelInfo]` |
+/// | 6 | `MetricsRequest` | client → server | model string |
+/// | 7 | `MetricsReply` | server → client | [`MetricsSnapshot`] |
+/// | 8 | `Shutdown` | both | empty (client: request drain; server: ack) |
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Classify one feature vector. Responses are matched to requests by
+    /// `id` (a connection may pipeline many requests before reading any
+    /// response, and responses may arrive out of order).
+    Request {
+        /// Client-chosen correlation id, echoed in the response.
+        id: u64,
+        /// Target model (manifest config name).
+        model: String,
+        /// Input feature vector; must match the model's input dimension.
+        features: Vec<f32>,
+    },
+    /// A completed classification.
+    Response {
+        /// Correlation id of the request this answers.
+        id: u64,
+        /// Argmax class of the model's logits.
+        class: u32,
+        /// Server-side submit-to-reply latency in microseconds.
+        latency_us: u64,
+        /// Live rows in the engine batch that served this request.
+        batch_occupancy: u32,
+        /// Index of the engine worker that ran the batch.
+        worker: u32,
+    },
+    /// A failed request (`id` != 0) or a connection-level fault
+    /// (`id` == 0, e.g. an undecodable frame or a connection-cap
+    /// rejection).
+    Error {
+        /// Correlation id of the failed request, 0 for connection-level.
+        id: u64,
+        /// Machine-readable failure class.
+        code: ErrorCode,
+        /// Human-readable detail.
+        message: String,
+    },
+    /// Ask the server for its health summary.
+    HealthRequest,
+    /// Server health: drain state, connection gauge, served models.
+    HealthReply {
+        /// True once the server has begun drain-then-shutdown.
+        draining: bool,
+        /// Currently open client connections.
+        active_connections: u32,
+        /// Shape info for every served model.
+        models: Vec<ModelInfo>,
+    },
+    /// Ask for one model's serving counters.
+    MetricsRequest {
+        /// Manifest config name.
+        model: String,
+    },
+    /// One model's serving counters.
+    MetricsReply(MetricsSnapshot),
+    /// Client → server: drain in-flight work and shut down. Server →
+    /// client: acknowledgement that the drain has been initiated.
+    Shutdown,
+}
+
+/// A wire protocol violation or transport failure.
+#[derive(Debug)]
+pub enum WireError {
+    /// The byte stream ended (or the buffer ran out) before the frame
+    /// did.
+    Truncated,
+    /// The first two header bytes are not [`MAGIC`].
+    BadMagic,
+    /// The header carries a protocol version this build does not speak.
+    UnknownVersion(u8),
+    /// The header carries a frame type tag this build does not know.
+    UnknownType(u8),
+    /// The header declares a payload longer than [`MAX_PAYLOAD`]
+    /// (the declared length is carried).
+    Oversized(usize),
+    /// The payload's typed layout is violated (bad UTF-8, out-of-range
+    /// count, trailing bytes, unknown error code, ...).
+    Malformed(&'static str),
+    /// An underlying I/O failure. [`read_frame`] only ever returns a
+    /// `WouldBlock`/`TimedOut` I/O error when *zero* bytes of the next
+    /// frame have been consumed, so callers using read timeouts may
+    /// treat that case as "idle, retry" without losing stream sync.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::UnknownVersion(v) => write!(f, "unknown protocol version {v}"),
+            WireError::UnknownType(t) => write!(f, "unknown frame type {t}"),
+            WireError::Oversized(n) => {
+                write!(f, "declared payload {n} bytes exceeds cap {MAX_PAYLOAD}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+            WireError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ---- encode helpers ------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Strings on the wire are u16-length-prefixed UTF-8.
+///
+/// # Panics
+/// If `s` is 64 KiB or longer (model names and error messages are
+/// always far shorter; a length that large is a caller bug).
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize, "wire string too long");
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+// ---- decode helpers ------------------------------------------------------
+
+/// Bounds-checked reader over a payload slice. Every accessor returns
+/// `Err(Malformed)` instead of panicking when the payload runs short.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Malformed("payload shorter than its fields"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("string is not UTF-8"))
+    }
+
+    /// A u32-count-prefixed f32 vector. The count is validated against
+    /// the bytes actually present *before* any allocation, so a
+    /// corrupted count cannot trigger a huge `Vec` reservation.
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() / 4 {
+            return Err(WireError::Malformed("f32 vector count exceeds payload"));
+        }
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            xs.push(self.f32()?);
+        }
+        Ok(xs)
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed("trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    fn type_tag(&self) -> u8 {
+        match self {
+            Frame::Request { .. } => T_REQUEST,
+            Frame::Response { .. } => T_RESPONSE,
+            Frame::Error { .. } => T_ERROR,
+            Frame::HealthRequest => T_HEALTH_REQUEST,
+            Frame::HealthReply { .. } => T_HEALTH_REPLY,
+            Frame::MetricsRequest { .. } => T_METRICS_REQUEST,
+            Frame::MetricsReply(_) => T_METRICS_REPLY,
+            Frame::Shutdown => T_SHUTDOWN,
+        }
+    }
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            Frame::Request { id, model, features } => {
+                request_payload(out, *id, model, features);
+            }
+            Frame::Response { id, class, latency_us, batch_occupancy, worker } => {
+                put_u64(out, *id);
+                put_u32(out, *class);
+                put_u64(out, *latency_us);
+                put_u32(out, *batch_occupancy);
+                put_u32(out, *worker);
+            }
+            Frame::Error { id, code, message } => {
+                put_u64(out, *id);
+                out.push(code.as_u8());
+                put_str(out, message);
+            }
+            Frame::HealthRequest | Frame::Shutdown => {}
+            Frame::HealthReply { draining, active_connections, models } => {
+                out.push(u8::from(*draining));
+                put_u32(out, *active_connections);
+                assert!(models.len() <= u16::MAX as usize, "too many models");
+                put_u16(out, models.len() as u16);
+                for m in models {
+                    put_str(out, &m.name);
+                    put_u32(out, m.features);
+                    put_u32(out, m.classes);
+                    put_u32(out, m.batch);
+                }
+            }
+            Frame::MetricsRequest { model } => {
+                put_str(out, model);
+            }
+            Frame::MetricsReply(s) => {
+                put_str(out, &s.model);
+                put_u64(out, s.requests);
+                put_u64(out, s.rejected);
+                put_u64(out, s.batches);
+                put_u64(out, s.padded_rows);
+                put_u64(out, s.stolen);
+                put_u64(out, s.quant_saturations);
+                put_u64(out, s.p50_us);
+                put_u64(out, s.p95_us);
+                put_u64(out, s.p99_us);
+                put_f64(out, s.mean_occupancy);
+                put_u64(out, s.net_flushes);
+                put_u64(out, s.net_coalesced);
+            }
+        }
+    }
+
+    /// Serialize this frame (header + payload) into a fresh byte vector.
+    ///
+    /// # Panics
+    /// If the payload would exceed [`MAX_PAYLOAD`] (a single feature
+    /// vector that size is a caller bug, not a runtime condition).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + 32);
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.type_tag());
+        out.extend_from_slice(&[0u8; 4]); // length, patched below
+        self.encode_payload(&mut out);
+        let len = out.len() - HEADER_LEN;
+        assert!(len <= MAX_PAYLOAD, "frame payload exceeds MAX_PAYLOAD");
+        out[4..8].copy_from_slice(&(len as u32).to_le_bytes());
+        out
+    }
+
+    /// Parse one frame from the front of `buf`. On success returns the
+    /// frame and the number of bytes consumed (header + payload).
+    /// Strict: see the module docs for the full rejection list. Never
+    /// panics on arbitrary input.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+        if buf.len() < HEADER_LEN {
+            return Err(WireError::Truncated);
+        }
+        let (ftype, len) = parse_header(buf[..HEADER_LEN].try_into().unwrap())?;
+        if buf.len() < HEADER_LEN + len {
+            return Err(WireError::Truncated);
+        }
+        let frame = decode_payload(ftype, &buf[HEADER_LEN..HEADER_LEN + len])?;
+        Ok((frame, HEADER_LEN + len))
+    }
+}
+
+/// The `Request` payload layout, shared by [`Frame::encode`] and
+/// [`encode_request`] so the two can never diverge.
+fn request_payload(out: &mut Vec<u8>, id: u64, model: &str, features: &[f32]) {
+    put_u64(out, id);
+    put_str(out, model);
+    put_f32s(out, features);
+}
+
+/// Encode a complete `Request` frame from borrowed data — bit-identical
+/// to `Frame::Request { .. }.encode()` (a unit test pins it) but
+/// without cloning the feature vector into a `Frame` first. This is
+/// the hot path of [`crate::net::NetClient::classify_pipelined`].
+pub fn encode_request(id: u64, model: &str, features: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 14 + model.len() + 4 * features.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(T_REQUEST);
+    out.extend_from_slice(&[0u8; 4]);
+    request_payload(&mut out, id, model, features);
+    let len = out.len() - HEADER_LEN;
+    assert!(len <= MAX_PAYLOAD, "frame payload exceeds MAX_PAYLOAD");
+    out[4..8].copy_from_slice(&(len as u32).to_le_bytes());
+    out
+}
+
+/// Validate a raw header; returns the frame type tag and payload length.
+fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
+    if h[0..2] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if h[2] != VERSION {
+        return Err(WireError::UnknownVersion(h[2]));
+    }
+    let len = u32::from_le_bytes(h[4..8].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    Ok((h[3], len))
+}
+
+/// Decode a complete payload of the given type. Every byte must be
+/// consumed.
+fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cursor::new(payload);
+    let frame = match ftype {
+        T_REQUEST => Frame::Request {
+            id: c.u64()?,
+            model: c.string()?,
+            features: c.f32s()?,
+        },
+        T_RESPONSE => Frame::Response {
+            id: c.u64()?,
+            class: c.u32()?,
+            latency_us: c.u64()?,
+            batch_occupancy: c.u32()?,
+            worker: c.u32()?,
+        },
+        T_ERROR => Frame::Error {
+            id: c.u64()?,
+            code: ErrorCode::from_u8(c.u8()?)
+                .ok_or_else(|| WireError::Malformed("unknown error code"))?,
+            message: c.string()?,
+        },
+        T_HEALTH_REQUEST => Frame::HealthRequest,
+        T_HEALTH_REPLY => {
+            let draining = match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::Malformed("draining flag not 0/1")),
+            };
+            let active_connections = c.u32()?;
+            let n = c.u16()? as usize;
+            let mut models = Vec::new();
+            for _ in 0..n {
+                models.push(ModelInfo {
+                    name: c.string()?,
+                    features: c.u32()?,
+                    classes: c.u32()?,
+                    batch: c.u32()?,
+                });
+            }
+            Frame::HealthReply { draining, active_connections, models }
+        }
+        T_METRICS_REQUEST => Frame::MetricsRequest { model: c.string()? },
+        T_METRICS_REPLY => Frame::MetricsReply(MetricsSnapshot {
+            model: c.string()?,
+            requests: c.u64()?,
+            rejected: c.u64()?,
+            batches: c.u64()?,
+            padded_rows: c.u64()?,
+            stolen: c.u64()?,
+            quant_saturations: c.u64()?,
+            p50_us: c.u64()?,
+            p95_us: c.u64()?,
+            p99_us: c.u64()?,
+            mean_occupancy: c.f64()?,
+            net_flushes: c.u64()?,
+            net_coalesced: c.u64()?,
+        }),
+        T_SHUTDOWN => Frame::Shutdown,
+        other => return Err(WireError::UnknownType(other)),
+    };
+    c.finish()?;
+    Ok(frame)
+}
+
+/// Write one frame to a stream (a single `write_all` of the encoded
+/// bytes, so frames from different threads sharing a locked writer never
+/// interleave).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.encode())
+}
+
+/// Read one frame from a stream. `Ok(None)` means the peer closed the
+/// connection cleanly *between* frames; a close mid-frame is
+/// [`WireError::Truncated`].
+///
+/// Timeout discipline (see [`WireError::Io`]): a `WouldBlock`/`TimedOut`
+/// read error is surfaced to the caller only when zero bytes of the next
+/// frame have been consumed — safe to retry. Mid-frame timeouts are
+/// retried internally up to a small bound, then reported as
+/// [`WireError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    match read_full(r, &mut header, true)? {
+        ReadOutcome::CleanEof => return Ok(None),
+        ReadOutcome::Done => {}
+    }
+    let (ftype, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    match read_full(r, &mut payload, false)? {
+        ReadOutcome::CleanEof => unreachable!("CleanEof only at frame start"),
+        ReadOutcome::Done => {}
+    }
+    decode_payload(ftype, &payload).map(Some)
+}
+
+enum ReadOutcome {
+    /// EOF before the first byte (only possible with `at_frame_start`).
+    CleanEof,
+    /// Buffer completely filled.
+    Done,
+}
+
+/// Fill `buf` completely. At a frame boundary (`at_frame_start`), EOF
+/// and timeouts before the first byte are non-errors (clean close /
+/// idle); once any byte has been consumed, EOF is [`WireError::Truncated`]
+/// and timeouts are retried up to [`MID_FRAME_STALL_LIMIT`].
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    at_frame_start: bool,
+) -> Result<ReadOutcome, WireError> {
+    if buf.is_empty() {
+        return Ok(ReadOutcome::Done);
+    }
+    let mut filled = 0usize;
+    let mut stalls = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && at_frame_start {
+                    return Ok(ReadOutcome::CleanEof);
+                }
+                return Err(WireError::Truncated);
+            }
+            Ok(n) => {
+                filled += n;
+                // progress resets the stall budget: the limit is on
+                // *consecutive* timeouts, a slow-but-moving peer is fine
+                stalls = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if filled == 0 && at_frame_start {
+                    // nothing consumed: the caller may treat this as
+                    // "idle" and retry without losing stream sync
+                    return Err(WireError::Io(e));
+                }
+                stalls += 1;
+                if stalls > MID_FRAME_STALL_LIMIT {
+                    return Err(WireError::Truncated);
+                }
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(ReadOutcome::Done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Request {
+                id: 7,
+                model: "tiny".into(),
+                features: vec![0.5, -1.25, 3.0],
+            },
+            Frame::Response {
+                id: 7,
+                class: 3,
+                latency_us: 1234,
+                batch_occupancy: 5,
+                worker: 1,
+            },
+            Frame::Error {
+                id: 9,
+                code: ErrorCode::Busy,
+                message: "all shards full".into(),
+            },
+            Frame::HealthRequest,
+            Frame::HealthReply {
+                draining: false,
+                active_connections: 2,
+                models: vec![ModelInfo {
+                    name: "tiny".into(),
+                    features: 32,
+                    classes: 8,
+                    batch: 16,
+                }],
+            },
+            Frame::MetricsRequest { model: "tiny".into() },
+            Frame::MetricsReply(MetricsSnapshot {
+                model: "tiny".into(),
+                requests: 100,
+                rejected: 1,
+                batches: 20,
+                padded_rows: 3,
+                stolen: 2,
+                quant_saturations: 0,
+                p50_us: 128,
+                p95_us: 512,
+                p99_us: 1024,
+                mean_occupancy: 5.0,
+                net_flushes: 12,
+                net_coalesced: 60,
+            }),
+            Frame::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_frame_type() {
+        for f in sample_frames() {
+            let bytes = f.encode();
+            let (back, used) = Frame::decode(&bytes).unwrap();
+            assert_eq!(back, f);
+            assert_eq!(used, bytes.len());
+        }
+    }
+
+    #[test]
+    fn header_rejections() {
+        let good = Frame::HealthRequest.encode();
+        // bad magic
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert!(matches!(Frame::decode(&b), Err(WireError::BadMagic)));
+        // unknown version
+        let mut b = good.clone();
+        b[2] = 99;
+        assert!(matches!(Frame::decode(&b), Err(WireError::UnknownVersion(99))));
+        // unknown type
+        let mut b = good.clone();
+        b[3] = 200;
+        assert!(matches!(Frame::decode(&b), Err(WireError::UnknownType(200))));
+        // oversized declared length
+        let mut b = good.clone();
+        b[4..8].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        assert!(matches!(Frame::decode(&b), Err(WireError::Oversized(_))));
+    }
+
+    #[test]
+    fn every_strict_prefix_is_truncated() {
+        let bytes = Frame::Request {
+            id: 1,
+            model: "m".into(),
+            features: vec![1.0, 2.0],
+        }
+        .encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                matches!(Frame::decode(&bytes[..cut]), Err(WireError::Truncated)),
+                "prefix of {cut} bytes must be Truncated"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = Frame::HealthRequest.encode();
+        // grow the declared payload without giving it meaning
+        bytes.push(0);
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn feature_count_is_validated_before_allocation() {
+        // a Request whose declared f32 count vastly exceeds the payload
+        let mut bytes = Frame::Request {
+            id: 1,
+            model: "m".into(),
+            features: vec![],
+        }
+        .encode();
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn encode_request_matches_frame_encode() {
+        let (id, model, features) = (42u64, "tiny", vec![0.5f32, -2.0, 3.25]);
+        assert_eq!(
+            encode_request(id, model, &features),
+            Frame::Request {
+                id,
+                model: model.to_string(),
+                features,
+            }
+            .encode()
+        );
+    }
+
+    #[test]
+    fn io_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        for f in sample_frames() {
+            write_frame(&mut buf, &f).unwrap();
+        }
+        let mut r = std::io::Cursor::new(buf);
+        for f in sample_frames() {
+            assert_eq!(read_frame(&mut r).unwrap(), Some(f));
+        }
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF between frames");
+    }
+
+    #[test]
+    fn io_eof_mid_frame_is_truncated() {
+        let bytes = Frame::MetricsRequest { model: "tiny".into() }.encode();
+        let mut r = std::io::Cursor::new(bytes[..bytes.len() - 1].to_vec());
+        assert!(matches!(read_frame(&mut r), Err(WireError::Truncated)));
+    }
+}

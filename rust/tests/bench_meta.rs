@@ -135,6 +135,73 @@ fn bench_serve_schema() {
 }
 
 #[test]
+fn bench_serve_net_section_schema() {
+    let doc = load("BENCH_serve.json");
+    let net = doc
+        .get("net")
+        .expect("net section (written by `cargo bench --bench net_load`)");
+    let recorded = recorded_flag(net, "net");
+    check_field(net, "kernel_threads_total", recorded, "net");
+    // the batch window is a configuration constant, not a measurement:
+    // always a concrete number
+    assert!(
+        net.get("batch_window_us").and_then(|v| v.as_f64()).is_some(),
+        "net.batch_window_us must be a number"
+    );
+    // the headline coalescing number may be null only while unrecorded
+    check_field(net, "mean_coalesced_batch", recorded, "net");
+    let scenarios = net
+        .get("scenarios")
+        .and_then(|v| v.as_arr())
+        .expect("net.scenarios array");
+    assert!(!scenarios.is_empty(), "net.scenarios must not be empty");
+    for (i, sc) in scenarios.iter().enumerate() {
+        let what = format!("net scenario {i}");
+        for key in ["clients", "pipeline"] {
+            assert!(
+                sc.get(key).and_then(|v| v.as_usize()).is_some(),
+                "{what}: '{key}' must be a positive integer"
+            );
+        }
+        check_field(sc, "total_throughput_rps", recorded, &what);
+        check_field(sc, "mean_coalesced_batch", recorded, &what);
+        let models = sc
+            .get("models")
+            .and_then(|v| v.as_arr())
+            .unwrap_or_else(|| panic!("{what}: models array"));
+        for (j, m) in models.iter().enumerate() {
+            let what = format!("{what} model {j}");
+            assert!(m.get("model").and_then(|v| v.as_str()).is_some(), "{what}");
+            for key in [
+                "served",
+                "busy_retries",
+                "throughput_rps",
+                "p50_us",
+                "p95_us",
+                "p99_us",
+                "net_flushes",
+                "net_coalesced",
+                "mean_coalesced",
+            ] {
+                check_field(m, key, recorded, &what);
+            }
+        }
+    }
+    // acceptance discipline: once the net section claims recorded, the
+    // achieved mean coalesced batch size must demonstrate coalescing
+    if recorded {
+        let mean = net
+            .get("mean_coalesced_batch")
+            .and_then(|v| v.as_f64())
+            .expect("recorded net section has a numeric mean_coalesced_batch");
+        assert!(
+            mean > 1.0,
+            "recorded mean coalesced batch size must exceed 1 (got {mean})"
+        );
+    }
+}
+
+#[test]
 fn bench_serve_quant_section_schema() {
     let doc = load("BENCH_serve.json");
     let q = doc

@@ -1,0 +1,287 @@
+//! End-to-end tests of the networked serving layer over real loopback
+//! sockets: socket inference must be bit-identical to in-process
+//! `Client::classify` on the same model (f32 and quantized), the
+//! micro-batcher must coalesce pipelined socket traffic into engine
+//! batches, shutdown must drain in-flight socket requests, the
+//! connection cap must shed with `Busy`, and garbage bytes must get a
+//! strict error + close.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pds::coordinator::loadgen::{self, SocketLoadSpec};
+use pds::coordinator::{InferenceService, ServerConfig};
+use pds::net::{NetClient, NetClientError, NetServer, NetServerConfig};
+use pds::util::rng::Rng;
+
+fn dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+/// Service + TCP front-end over one `tiny` model.
+fn start_pair(
+    seed: u64,
+    quant: bool,
+    cfg: NetServerConfig,
+) -> (Arc<InferenceService>, NetServer) {
+    let mut spec = loadgen::model_spec(dir(), "tiny", 0.25, seed).unwrap();
+    if quant {
+        spec = spec.with_quant(pds::nn::fixed::QFormat::default());
+    }
+    let svc = Arc::new(
+        InferenceService::start(
+            dir(),
+            vec![spec],
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_depth: 64,
+                tune_kernel_threads: false,
+            },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+    (svc, server)
+}
+
+/// Tear down: network drain first, then the engine workers.
+fn stop_pair(svc: Arc<InferenceService>, server: NetServer) {
+    let returned = server.shutdown().unwrap();
+    drop(returned);
+    match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown().unwrap(),
+        Err(_) => panic!("service still referenced after network drain"),
+    }
+}
+
+/// The acceptance property: the socket path is a transport, not a
+/// different execution path — on the *same* running service, every
+/// prediction through TCP equals the in-process one bit for bit.
+fn assert_socket_matches_in_process(quant: bool, seed: u64) {
+    let (svc, server) = start_pair(seed, quant, NetServerConfig::default());
+    let local = svc.client("tiny").unwrap();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    let health = net.health().unwrap();
+    assert_eq!(health.models.len(), 1);
+    assert_eq!(health.models[0].features as usize, local.features());
+    assert_eq!(health.models[0].classes as usize, local.classes());
+    assert!(!health.draining);
+    let mut rng = Rng::new(seed ^ 0xE2E);
+    for i in 0..48 {
+        let x: Vec<f32> = (0..local.features())
+            .map(|_| rng.uniform() * 2.0 - 1.0)
+            .collect();
+        let p_local = local.classify(x.clone()).unwrap();
+        let p_net = net.classify("tiny", x).unwrap();
+        assert_eq!(
+            p_net.class, p_local.class,
+            "sample {i}: socket and in-process classes diverge (quant={quant})"
+        );
+        assert!(p_net.class < local.classes());
+    }
+    stop_pair(svc, server);
+}
+
+#[test]
+fn socket_inference_is_bit_identical_to_in_process_f32() {
+    assert_socket_matches_in_process(false, 31);
+}
+
+#[test]
+fn socket_inference_is_bit_identical_to_in_process_quantized() {
+    assert_socket_matches_in_process(true, 32);
+}
+
+/// A pipelined group written in one burst must be coalesced by the
+/// micro-batcher (one flush, not eight) and reach the engine as a
+/// multi-row batch (mean occupancy > 1), with counters observable over
+/// the wire.
+#[test]
+fn micro_batcher_coalesces_pipelined_socket_traffic() {
+    let (svc, server) = start_pair(
+        33,
+        false,
+        NetServerConfig {
+            max_connections: 8,
+            // wide window: the whole pipelined group lands inside it
+            batch_window: Duration::from_millis(100),
+        },
+    );
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    let features = svc.client("tiny").unwrap().features();
+    let mut rng = Rng::new(34);
+    let group: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..features).map(|_| rng.normal()).collect())
+        .collect();
+    let preds = net.classify_pipelined("tiny", &group).unwrap();
+    assert_eq!(preds.len(), 8);
+    let snap = net.metrics("tiny").unwrap();
+    assert_eq!(snap.requests, 8, "engine must have served all 8");
+    assert_eq!(snap.net_coalesced, 8);
+    assert!(
+        snap.net_flushes <= 2,
+        "a burst inside one window must not flush per-request ({} flushes)",
+        snap.net_flushes
+    );
+    assert!(
+        snap.mean_coalesced() > 1.0,
+        "mean coalesced batch size must exceed 1 (got {:.2})",
+        snap.mean_coalesced()
+    );
+    assert!(
+        snap.mean_occupancy > 1.0,
+        "coalesced group must reach the engine as a multi-row batch \
+         (mean occupancy {:.2})",
+        snap.mean_occupancy
+    );
+    // the per-prediction occupancy agrees with the engine-side metric
+    assert!(preds.iter().any(|p| p.batch_occupancy > 1));
+    stop_pair(svc, server);
+}
+
+/// The socket load generator (closed loop, concurrent connections,
+/// pipelined groups) must demonstrate coalescing end to end — this is
+/// the same code path `benches/net_load.rs` records into
+/// `BENCH_serve.json`.
+#[test]
+fn socket_load_generator_reports_coalescing() {
+    let (svc, server) = start_pair(35, false, NetServerConfig::default());
+    let models = vec!["tiny".to_string()];
+    let spec = SocketLoadSpec {
+        clients: 4,
+        requests: 24,
+        pipeline: 6,
+    };
+    let reports = loadgen::run_socket_load(server.local_addr(), &models, &spec, 36).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(r.served, (spec.clients * spec.requests) as u64);
+    assert!(r.throughput > 0.0);
+    assert!(r.p50 <= r.p95 && r.p95 <= r.p99);
+    assert!(
+        r.mean_coalesced > 1.0,
+        "concurrent pipelined clients must coalesce (mean {:.2})",
+        r.mean_coalesced
+    );
+    stop_pair(svc, server);
+}
+
+/// Shutdown must drain in-flight socket requests: a pipelined group
+/// parked in the batch window when the server shuts down still gets
+/// every response.
+#[test]
+fn server_shutdown_drains_in_flight_socket_requests() {
+    let (svc, server) = start_pair(
+        37,
+        false,
+        NetServerConfig {
+            max_connections: 8,
+            // minutes-long window: only the shutdown drain can flush
+            batch_window: Duration::from_secs(120),
+        },
+    );
+    let addr = server.local_addr();
+    let features = svc.client("tiny").unwrap().features();
+    let worker = std::thread::spawn(move || {
+        let mut net = NetClient::connect(addr).unwrap();
+        let group: Vec<Vec<f32>> = (0..4).map(|_| vec![0.25; features]).collect();
+        net.classify_pipelined("tiny", &group)
+    });
+    // let the group land in the batcher's (never-expiring) window
+    std::thread::sleep(Duration::from_millis(150));
+    let t0 = std::time::Instant::now();
+    stop_pair(svc, server);
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "drain must not wait out the batch window"
+    );
+    let preds = worker
+        .join()
+        .unwrap()
+        .expect("in-flight socket requests must be answered, not dropped");
+    assert_eq!(preds.len(), 4);
+}
+
+/// Beyond the connection cap, a new peer is shed with one explicit
+/// `Busy` error frame instead of hanging or being silently dropped.
+#[test]
+fn connection_cap_sheds_with_busy() {
+    let (svc, server) = start_pair(
+        38,
+        false,
+        NetServerConfig {
+            max_connections: 1,
+            batch_window: Duration::ZERO,
+        },
+    );
+    let features = svc.client("tiny").unwrap().features();
+    let mut first = NetClient::connect(server.local_addr()).unwrap();
+    // a served request proves the first connection's handler is live
+    // (and therefore counted) before the second peer arrives
+    first.classify("tiny", vec![0.5; features]).unwrap();
+    let mut second = NetClient::connect(server.local_addr()).unwrap();
+    // a cap shed is a connection-level Busy (non-retryable Remote, the
+    // server closes the socket right after), distinct from per-request
+    // Busy backpressure
+    match second.classify("tiny", vec![0.5; features]) {
+        Err(NetClientError::Remote { code: pds::net::ErrorCode::Busy, .. }) => {}
+        other => panic!("expected a Busy connection shed, got {other:?}"),
+    }
+    // the first connection must be unaffected
+    first.classify("tiny", vec![-0.5; features]).unwrap();
+    stop_pair(svc, server);
+}
+
+/// Garbage bytes get a strict `Error` frame and a close — the server
+/// never tries to resynchronize a corrupted stream.
+#[test]
+fn garbage_bytes_get_error_frame_and_close() {
+    use std::io::Write;
+    let (svc, server) = start_pair(39, false, NetServerConfig::default());
+    let mut raw = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    raw.write_all(b"definitely not a PD frame......").unwrap();
+    raw.flush().unwrap();
+    match pds::net::wire::read_frame(&mut raw).unwrap() {
+        Some(pds::net::Frame::Error { id, code, .. }) => {
+            assert_eq!(id, 0, "connection-level error");
+            assert_eq!(code, pds::net::ErrorCode::BadRequest);
+        }
+        other => panic!("expected a BadRequest error frame, got {other:?}"),
+    }
+    // then EOF: the server closed the connection
+    assert!(matches!(pds::net::wire::read_frame(&mut raw), Ok(None)));
+    assert_eq!(
+        server
+            .metrics()
+            .wire_errors
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    stop_pair(svc, server);
+}
+
+/// A request for an unserved model errors by name; the connection
+/// stays usable.
+#[test]
+fn unknown_model_is_rejected_by_name() {
+    let (svc, server) = start_pair(40, false, NetServerConfig::default());
+    let features = svc.client("tiny").unwrap().features();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    match net.classify("nope", vec![0.0; 4]) {
+        Err(NetClientError::Remote { code, .. }) => {
+            assert_eq!(code, pds::net::ErrorCode::UnknownModel);
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    // wrong feature dimension on a real model: BadRequest
+    match net.classify("tiny", vec![0.0; features + 1]) {
+        Err(NetClientError::Remote { code, .. }) => {
+            assert_eq!(code, pds::net::ErrorCode::BadRequest);
+        }
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    // and the connection still serves valid requests afterwards
+    net.classify("tiny", vec![0.0; features]).unwrap();
+    stop_pair(svc, server);
+}

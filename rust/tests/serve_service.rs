@@ -179,6 +179,73 @@ fn metrics_occupancy_and_latency_are_consistent() {
     svc.shutdown().unwrap();
 }
 
+/// Shutdown must *drain* in-flight requests, not drop them: every
+/// request accepted before `shutdown()` is signalled gets a real
+/// prediction, never a `Stopped` error and never a hang.
+///
+/// The setup parks requests in flight at shutdown time: one worker with
+/// a long batch-fill wait (500 ms) collects the first request and then
+/// holds its partial batch open, while the remaining requests sit
+/// queued in the shard. `shutdown()` arrives mid-wait (after a short
+/// sleep that lets every submission land), which must cut the batch
+/// wait short, execute what is pending, drain the rest of the queue,
+/// and only then let the worker exit.
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let specs = vec![loadgen::model_spec(dir(), "tiny", 0.25, 8).unwrap()];
+    let svc = InferenceService::start(
+        dir(),
+        specs,
+        ServerConfig {
+            // far longer than the test's shutdown delay: only the stop
+            // signal can flush the partial batch
+            max_wait: Duration::from_millis(500),
+            workers: 1,
+            queue_depth: 64,
+            tune_kernel_threads: false,
+        },
+    )
+    .unwrap();
+    let n = 8usize;
+    let submitted = std::sync::Barrier::new(n + 1);
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|c| {
+                let client = svc.client("tiny").unwrap();
+                let submitted = &submitted;
+                s.spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    let x: Vec<f32> =
+                        (0..client.features()).map(|_| rng.normal()).collect();
+                    // non-blocking submit, then rendezvous so the main
+                    // thread knows every request is accepted in-flight
+                    // before it shuts down
+                    let pending = client.submit(x).expect("queue far below capacity");
+                    submitted.wait();
+                    pending.wait()
+                })
+            })
+            .collect();
+        submitted.wait();
+        // all n requests are now in flight (first one holds the worker's
+        // partial batch open for its 500 ms fill wait); shut down early
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = std::time::Instant::now();
+        svc.shutdown().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(450),
+            "shutdown must cut the batch wait short, not sit it out"
+        );
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, r) in results.iter().enumerate() {
+        let pred = r.as_ref().unwrap_or_else(|e| {
+            panic!("in-flight request {i} was dropped on shutdown: {e}")
+        });
+        assert!(pred.class < 8);
+    }
+}
+
 /// Quantized serving: a model with a Qm.n format set serves through the
 /// fixed-point kernels. Predictions must agree with an f32-served twin
 /// of the *same* model (same pattern seed, same parameter init) on
