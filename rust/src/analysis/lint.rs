@@ -1,0 +1,396 @@
+//! Manifest lint: structural findings decidable from the manifest text
+//! alone — degenerate layers/batches, inadmissible out-degrees,
+//! duplicate or zero-sized tensors, program signatures that disagree
+//! with the config's shapes, quant formats with no usable value range,
+//! and (at the raw-document level) fields the parser would silently
+//! ignore or drop.
+//!
+//! The error-level subset is the load-time gate:
+//! [`crate::runtime::Manifest::load_or_builtin`] refuses to return a
+//! manifest with error findings, and
+//! [`crate::runtime::Engine::from_manifest`] asserts the same, so a
+//! structurally broken config can never reach a worker thread.
+
+use std::collections::BTreeSet;
+
+use super::{Finding, Severity};
+use crate::runtime::manifest::{ConfigEntry, Manifest, ProgramSpec};
+use crate::sparsity::config::{DoutConfig, NetConfig};
+use crate::util::json::Json;
+
+/// Lint every config of a parsed manifest.
+pub fn lint_manifest(manifest: &Manifest) -> Vec<Finding> {
+    manifest
+        .configs
+        .iter()
+        .flat_map(|(name, entry)| lint_entry(name, entry))
+        .collect()
+}
+
+/// Lint one parsed config entry.
+pub fn lint_entry(config: &str, entry: &ConfigEntry) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if entry.layers.len() < 2 {
+        out.push(Finding::new(
+            "lint",
+            "bad-layers",
+            Severity::Error,
+            config,
+            format!(
+                "layers {:?} do not describe a network (need >= 2 layers)",
+                entry.layers
+            ),
+        ));
+    }
+    if let Some(i) = entry.layers.iter().position(|&n| n == 0) {
+        out.push(Finding::new(
+            "lint",
+            "bad-layers",
+            Severity::Error,
+            config,
+            format!("layer {i} has width 0"),
+        ));
+    }
+    if entry.batch == 0 {
+        out.push(Finding::new(
+            "lint",
+            "bad-batch",
+            Severity::Error,
+            config,
+            "batch size 0".to_string(),
+        ));
+    }
+    let layers_ok = !out
+        .iter()
+        .any(|f| f.code == "bad-layers" || f.code == "bad-batch");
+    if layers_ok {
+        if let Some(d) = &entry.gather_dout {
+            let netc = NetConfig::new(entry.layers.clone());
+            if let Err(e) = netc.validate_dout(&DoutConfig(d.clone())) {
+                out.push(Finding::new(
+                    "lint",
+                    "bad-dout",
+                    Severity::Error,
+                    config,
+                    format!("gather_dout {d:?} inadmissible: {e}"),
+                ));
+            }
+        }
+    }
+    if let Some(q) = entry.quant {
+        if q.format.max_value() < 1.0 {
+            out.push(Finding::new(
+                "lint",
+                "quant-tiny-range",
+                Severity::Warning,
+                config,
+                format!(
+                    "{} cannot represent 1.0 (max {}): normalized inputs clip at ingest",
+                    q.format,
+                    q.format.max_value()
+                ),
+            ));
+        }
+    }
+    for (tag, program) in &entry.programs {
+        out.extend(lint_program(config, entry, tag, program, layers_ok));
+    }
+    out
+}
+
+/// Lint one program signature: duplicate tensor names per side, zero
+/// dimensions, and — for the conventional program tags — agreement of
+/// the `x` / `logits` / `y` shapes with the config's layers and batch.
+fn lint_program(
+    config: &str,
+    entry: &ConfigEntry,
+    tag: &str,
+    program: &ProgramSpec,
+    layers_ok: bool,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (side, specs) in [("input", &program.inputs), ("output", &program.outputs)] {
+        let mut seen = BTreeSet::new();
+        for t in specs {
+            if !seen.insert(t.name.as_str()) {
+                out.push(Finding::new(
+                    "lint",
+                    "dup-tensor",
+                    Severity::Error,
+                    config,
+                    format!("program '{tag}': duplicate {side} tensor '{}'", t.name),
+                ));
+            }
+            if t.shape.contains(&0) {
+                out.push(Finding::new(
+                    "lint",
+                    "zero-dim",
+                    Severity::Error,
+                    config,
+                    format!(
+                        "program '{tag}': {side} tensor '{}' has a zero dimension {:?}",
+                        t.name, t.shape
+                    ),
+                ));
+            }
+        }
+    }
+    if !layers_ok {
+        return out;
+    }
+    let batch = entry.batch;
+    let n0 = entry.layers[0];
+    let classes = *entry.layers.last().unwrap();
+    let mut expect = |side: &str, name: &str, want: Vec<usize>| {
+        let specs = if side == "input" {
+            &program.inputs
+        } else {
+            &program.outputs
+        };
+        if let Some(t) = specs.iter().find(|t| t.name == name) {
+            if t.shape != want {
+                out.push(Finding::new(
+                    "lint",
+                    "shape-mismatch",
+                    Severity::Error,
+                    config,
+                    format!(
+                        "program '{tag}': {side} '{name}' has shape {:?}, config \
+                         implies {want:?}",
+                        t.shape
+                    ),
+                ));
+            }
+        }
+    };
+    match tag {
+        "forward" | "forward_quantized" | "gather_forward" => {
+            expect("input", "x", vec![batch, n0]);
+            expect("output", "logits", vec![batch, classes]);
+        }
+        "train" => {
+            expect("input", "x", vec![batch, n0]);
+            expect("input", "y", vec![batch]);
+        }
+        _ => {}
+    }
+    out
+}
+
+/// Keys [`Manifest::parse`] reads from a config object.
+const CONFIG_KEYS: &[&str] = &["layers", "batch", "gather_dout", "quant", "programs"];
+/// Keys the parser reads from a program object.
+const PROGRAM_KEYS: &[&str] = &["file", "inputs", "outputs"];
+/// Keys the parser reads from a tensor-spec object.
+const SPEC_KEYS: &[&str] = &["name", "shape", "dtype"];
+
+/// Lint the raw manifest document for problems the parser cannot report:
+/// unknown fields it silently ignores, and `gather_dout` entries it
+/// silently drops (which would shorten the out-degree list without any
+/// error). Call with text that already parsed via [`Manifest::parse`].
+pub fn lint_text(text: &str) -> Vec<Finding> {
+    match Json::parse(text) {
+        Ok(doc) => lint_json(&doc),
+        Err(e) => vec![Finding::new(
+            "lint",
+            "parse-error",
+            Severity::Error,
+            "<manifest>",
+            format!("manifest is not valid JSON: {e}"),
+        )],
+    }
+}
+
+/// [`lint_text`] over an already-parsed document.
+pub fn lint_json(doc: &Json) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(root) = doc.as_obj() else {
+        out.push(Finding::new(
+            "lint",
+            "bad-manifest",
+            Severity::Error,
+            "<manifest>",
+            "manifest root is not an object".to_string(),
+        ));
+        return out;
+    };
+    for key in root.keys() {
+        if key != "configs" {
+            out.push(unknown_field("<manifest>", "manifest", key));
+        }
+    }
+    let Some(configs) = root.get("configs").and_then(Json::as_obj) else {
+        out.push(Finding::new(
+            "lint",
+            "bad-manifest",
+            Severity::Error,
+            "<manifest>",
+            "manifest has no 'configs' object".to_string(),
+        ));
+        return out;
+    };
+    for (name, entry) in configs {
+        let Some(eo) = entry.as_obj() else {
+            out.push(Finding::new(
+                "lint",
+                "bad-manifest",
+                Severity::Error,
+                name,
+                "config is not an object".to_string(),
+            ));
+            continue;
+        };
+        for key in eo.keys() {
+            if !CONFIG_KEYS.contains(&key.as_str()) {
+                out.push(unknown_field(name, "config", key));
+            }
+        }
+        if let Some(gd) = entry.get("gather_dout").and_then(Json::as_arr) {
+            for (i, v) in gd.iter().enumerate() {
+                if v.as_usize().is_none() {
+                    out.push(Finding::new(
+                        "lint",
+                        "bad-dout-entry",
+                        Severity::Error,
+                        name,
+                        format!(
+                            "gather_dout[{i}] = {v} is not a non-negative integer \
+                             (the parser silently drops it, shortening the \
+                             out-degree list)"
+                        ),
+                    ));
+                }
+            }
+        }
+        let Some(programs) = entry.get("programs").and_then(Json::as_obj) else {
+            continue;
+        };
+        for (tag, program) in programs {
+            let Some(po) = program.as_obj() else { continue };
+            for key in po.keys() {
+                if !PROGRAM_KEYS.contains(&key.as_str()) {
+                    out.push(unknown_field(name, &format!("program '{tag}'"), key));
+                }
+            }
+            for side in ["inputs", "outputs"] {
+                let Some(specs) = program.get(side).and_then(Json::as_arr) else {
+                    continue;
+                };
+                for t in specs {
+                    let Some(to) = t.as_obj() else { continue };
+                    for key in to.keys() {
+                        if !SPEC_KEYS.contains(&key.as_str()) {
+                            out.push(unknown_field(
+                                name,
+                                &format!("program '{tag}' tensor"),
+                                key,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn unknown_field(config: &str, scope: &str, key: &str) -> Finding {
+    Finding::new(
+        "lint",
+        "unknown-field",
+        Severity::Warning,
+        config,
+        format!("unknown {scope} field '{key}' (silently ignored by the parser)"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::fixed::QFormat;
+    use crate::runtime::manifest::QuantSpec;
+
+    #[test]
+    fn builtin_lints_clean() {
+        assert!(lint_manifest(&Manifest::builtin())
+            .iter()
+            .all(|f| f.severity != Severity::Error));
+    }
+
+    #[test]
+    fn degenerate_entries_are_errors() {
+        let mut entry = Manifest::builtin().configs["tiny"].clone();
+        entry.layers = vec![32, 0, 8];
+        entry.batch = 0;
+        let findings = lint_entry("tiny", &entry);
+        assert!(findings.iter().any(|f| f.code == "bad-layers"));
+        assert!(findings.iter().any(|f| f.code == "bad-batch"));
+    }
+
+    #[test]
+    fn inadmissible_gather_dout_is_an_error() {
+        // timit junction 0 is 39 -> 390: admissible d_out are multiples
+        // of 390/gcd(39,390) = 10, so 5 gives a fractional d_in
+        let mut entry = Manifest::builtin().configs["timit"].clone();
+        entry.gather_dout = Some(vec![5, 9]);
+        assert!(lint_entry("timit", &entry)
+            .iter()
+            .any(|f| f.code == "bad-dout" && f.severity == Severity::Error));
+    }
+
+    #[test]
+    fn duplicate_and_mismatched_tensors_are_errors() {
+        let mut entry = Manifest::builtin().configs["tiny"].clone();
+        {
+            let fwd = entry.programs.get_mut("forward").unwrap();
+            let x = fwd.inputs.last().unwrap().clone();
+            fwd.inputs.push(x); // duplicate 'x'
+            fwd.outputs[0].shape = vec![16, 99]; // logits disagree with layers
+        }
+        let findings = lint_entry("tiny", &entry);
+        assert!(findings.iter().any(|f| f.code == "dup-tensor"));
+        assert!(findings.iter().any(|f| f.code == "shape-mismatch"));
+    }
+
+    #[test]
+    fn tiny_quant_range_is_a_warning() {
+        let mut entry = Manifest::builtin().configs["tiny"].clone();
+        entry.quant = Some(QuantSpec {
+            format: QFormat::new(0, 4),
+        });
+        // Q0.4 max value is 15/16 < 1.0
+        assert!(lint_entry("tiny", &entry)
+            .iter()
+            .any(|f| f.code == "quant-tiny-range" && f.severity == Severity::Warning));
+    }
+
+    #[test]
+    fn raw_document_lint_catches_silent_drops() {
+        let text = r#"{"configs": {"tiny": {
+            "layers": [32, 16, 8], "batch": 16, "layrs": true,
+            "gather_dout": [4, -1],
+            "programs": {"train": {"file": "t.hlo", "inputz": []}}}}}"#;
+        let findings = lint_text(text);
+        assert!(
+            findings
+                .iter()
+                .filter(|f| f.code == "unknown-field")
+                .count()
+                >= 2,
+            "{findings:?}"
+        );
+        assert!(findings
+            .iter()
+            .any(|f| f.code == "bad-dout-entry" && f.severity == Severity::Error));
+    }
+
+    #[test]
+    fn non_object_root_is_an_error() {
+        assert!(lint_text("[1,2]")
+            .iter()
+            .any(|f| f.code == "bad-manifest"));
+        assert!(lint_text("{nope")
+            .iter()
+            .any(|f| f.code == "parse-error"));
+    }
+}

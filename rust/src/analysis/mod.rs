@@ -1,0 +1,374 @@
+//! Static verification of model-level properties (`pds analyze`).
+//!
+//! The runtime already *observes* the hardware contracts dynamically —
+//! `sparsity::clash_free` replays schedules, `hw::banked` audits concrete
+//! weights, and the Qm.n kernels count saturations after the fact. This
+//! module instead *proves* the same properties from structure alone, with
+//! no training data and no execution, the way arXiv:1806.01087 treats
+//! clash-freedom as a design-time proof obligation:
+//!
+//! - [`clash`] — the clash-freedom prover: per-junction symbolic proof
+//!   over the address-generator state ([`crate::sparsity::clash_free::ScheduleSpec`]),
+//!   the eq. 9 / Appendix B z-net constraints, and the closed-form
+//!   FF/BP/UP pipeline interleave of `hw::pipeline`, valid for *all*
+//!   cycles — with a typed counterexample (junction / cycle / bank) on
+//!   failure.
+//! - [`range`] — quantization range analysis: interval propagation
+//!   through the Qm.n dataflow bounding every activation and wide MAC
+//!   accumulator, proving saturation unreachable for a given input range
+//!   (or reporting the first junction where the bound breaks, the
+//!   certified safe input range, and the minimal Qm.n that would fix it).
+//! - [`lint`] — manifest lint: degenerate layers/batches, inadmissible
+//!   out-degrees, duplicate tensors, shape mismatches, unknown fields
+//!   and entries the parser would silently drop.
+//!
+//! Every pass emits typed, machine-readable [`Finding`]s graded by
+//! [`Severity`]; [`AnalysisReport::to_json`] is the stable `--json`
+//! surface (schema-checked by `tests/bench_meta.rs`). The cheap lint
+//! pass also runs at load time ([`crate::runtime::Manifest::load_or_builtin`]
+//! gates on it; [`crate::runtime::Engine::from_manifest`] asserts it), so
+//! a structurally broken manifest never reaches a worker thread.
+
+pub mod clash;
+pub mod lint;
+pub mod range;
+
+use std::collections::BTreeMap;
+
+use crate::nn::fixed::QFormat;
+use crate::runtime::manifest::{ConfigEntry, Manifest};
+use crate::util::json::Json;
+
+/// Severity grade of a [`Finding`]. Ordered most severe first, so a
+/// plain sort puts errors at the top of a report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// A proved violation: `pds analyze` exits nonzero.
+    Error,
+    /// Suspicious but not a proved violation.
+    Warning,
+    /// A positive result (what was proved) or a skipped pass.
+    Info,
+}
+
+impl Severity {
+    /// Machine-readable name (`error` / `warning` / `info`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// One typed analyzer finding. `junction` / `cycle` / `bank` carry the
+/// counterexample coordinates when the pass has them (the clash prover
+/// always points at the offending access).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Emitting pass (`clash`, `range`, `lint`).
+    pub pass: &'static str,
+    /// Stable machine-readable finding code (e.g. `memory-clash`).
+    pub code: &'static str,
+    /// Severity grade.
+    pub severity: Severity,
+    /// Config the finding is about (`<manifest>` for document-level).
+    pub config: String,
+    /// Human-readable description.
+    pub message: String,
+    /// Counterexample junction, when the finding has one.
+    pub junction: Option<usize>,
+    /// Counterexample cycle, when the finding has one.
+    pub cycle: Option<usize>,
+    /// Counterexample memory bank, when the finding has one.
+    pub bank: Option<usize>,
+}
+
+impl Finding {
+    /// A finding with no counterexample coordinates (attach them with
+    /// the `with_*` builders).
+    pub fn new(
+        pass: &'static str,
+        code: &'static str,
+        severity: Severity,
+        config: &str,
+        message: String,
+    ) -> Finding {
+        Finding {
+            pass,
+            code,
+            severity,
+            config: config.to_string(),
+            message,
+            junction: None,
+            cycle: None,
+            bank: None,
+        }
+    }
+
+    /// Attach the counterexample junction.
+    pub fn with_junction(mut self, j: usize) -> Finding {
+        self.junction = Some(j);
+        self
+    }
+
+    /// Attach the counterexample cycle.
+    pub fn with_cycle(mut self, c: usize) -> Finding {
+        self.cycle = Some(c);
+        self
+    }
+
+    /// Attach the counterexample memory bank.
+    pub fn with_bank(mut self, b: usize) -> Finding {
+        self.bank = Some(b);
+        self
+    }
+
+    /// The finding as one JSON object (coordinates present only when
+    /// the finding carries them).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("pass".to_string(), Json::Str(self.pass.to_string()));
+        m.insert("code".to_string(), Json::Str(self.code.to_string()));
+        m.insert(
+            "severity".to_string(),
+            Json::Str(self.severity.name().to_string()),
+        );
+        m.insert("config".to_string(), Json::Str(self.config.clone()));
+        m.insert("message".to_string(), Json::Str(self.message.clone()));
+        if let Some(j) = self.junction {
+            m.insert("junction".to_string(), Json::Num(j as f64));
+        }
+        if let Some(c) = self.cycle {
+            m.insert("cycle".to_string(), Json::Num(c as f64));
+        }
+        if let Some(b) = self.bank {
+            m.insert("bank".to_string(), Json::Num(b as f64));
+        }
+        Json::Obj(m)
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{:<7}] {} {}/{}: {}",
+            self.severity.name(),
+            self.config,
+            self.pass,
+            self.code,
+            self.message
+        )
+    }
+}
+
+/// What one `pds analyze` run concluded.
+#[derive(Clone, Debug, Default)]
+pub struct AnalysisReport {
+    /// Every finding, across passes and configs.
+    pub findings: Vec<Finding>,
+}
+
+impl AnalysisReport {
+    /// True when any finding is error-level (`pds analyze` exits nonzero).
+    pub fn has_errors(&self) -> bool {
+        self.count(Severity::Error) > 0
+    }
+
+    /// Number of findings at `severity`.
+    pub fn count(&self, severity: Severity) -> usize {
+        self.findings.iter().filter(|f| f.severity == severity).count()
+    }
+
+    /// Stable-sort findings most severe first (ties keep pass order).
+    pub fn sort_by_severity(&mut self) {
+        self.findings.sort_by_key(|f| f.severity);
+    }
+
+    /// The stable machine-readable report (the `pds analyze --json`
+    /// surface; `tests/bench_meta.rs` schema-checks this shape).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".to_string(), Json::Num(1.0));
+        m.insert(
+            "status".to_string(),
+            Json::Str(if self.has_errors() { "fail" } else { "pass" }.to_string()),
+        );
+        m.insert(
+            "errors".to_string(),
+            Json::Num(self.count(Severity::Error) as f64),
+        );
+        m.insert(
+            "warnings".to_string(),
+            Json::Num(self.count(Severity::Warning) as f64),
+        );
+        m.insert(
+            "infos".to_string(),
+            Json::Num(self.count(Severity::Info) as f64),
+        );
+        m.insert(
+            "findings".to_string(),
+            Json::Arr(self.findings.iter().map(Finding::to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+impl std::fmt::Display for AnalysisReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for finding in &self.findings {
+            writeln!(f, "{finding}")?;
+        }
+        writeln!(
+            f,
+            "analysis: {} error(s), {} warning(s), {} info",
+            self.count(Severity::Error),
+            self.count(Severity::Warning),
+            self.count(Severity::Info)
+        )
+    }
+}
+
+/// Knobs of one analyzer run.
+#[derive(Clone, Copy, Debug)]
+pub struct AnalyzeOptions {
+    /// Override the config's Qm.n format for the range analysis
+    /// (`None` = use the manifest's quant spec).
+    pub quant: Option<QFormat>,
+    /// Junction cycles for the pipeline-interleave audit (`None` = the
+    /// 4L+2 default; clamped up so the steady state is always covered).
+    pub depth: Option<usize>,
+    /// Input magnitude the range analysis must *prove* safe (`None` =
+    /// certify mode: report the maximal provably safe range instead,
+    /// erroring only when none exists).
+    pub input_range: Option<f32>,
+    /// Seed of the pattern/parameter draw the range analysis inspects
+    /// (the clash proof is seed-independent: it holds for every draw).
+    pub seed: u64,
+}
+
+impl Default for AnalyzeOptions {
+    fn default() -> Self {
+        AnalyzeOptions {
+            quant: None,
+            depth: None,
+            input_range: None,
+            seed: 0x1812_0116,
+        }
+    }
+}
+
+/// Run every pass over one config.
+pub fn analyze_config(name: &str, entry: &ConfigEntry, opts: &AnalyzeOptions) -> AnalysisReport {
+    let mut findings = lint::lint_entry(name, entry);
+    // deeper passes build NetConfig / patterns from the entry, which is
+    // only meaningful when the structural lint is clean
+    if !findings.iter().any(|f| f.severity == Severity::Error) {
+        let (clash_findings, _proof) = clash::prove_config(name, entry, opts.depth, opts.seed);
+        findings.extend(clash_findings);
+        findings.extend(range::analyze_entry(
+            name,
+            entry,
+            opts.quant,
+            opts.input_range,
+            opts.seed,
+        ));
+    }
+    AnalysisReport { findings }
+}
+
+/// Run every pass over every config of a manifest.
+pub fn analyze_manifest(manifest: &Manifest, opts: &AnalyzeOptions) -> AnalysisReport {
+    let mut report = AnalysisReport::default();
+    for (name, entry) in &manifest.configs {
+        report
+            .findings
+            .extend(analyze_config(name, entry, opts).findings);
+    }
+    report
+}
+
+/// The cheap load-time subset: manifest lint only (no pattern draws, no
+/// interval propagation) — what [`crate::runtime::Engine::from_manifest`]
+/// asserts and [`crate::runtime::Manifest::load_or_builtin`] gates on.
+pub fn quick_lint(manifest: &Manifest) -> AnalysisReport {
+    AnalysisReport {
+        findings: lint::lint_manifest(manifest),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_analyzes_clean() {
+        let report = analyze_manifest(&Manifest::builtin(), &AnalyzeOptions::default());
+        assert!(
+            !report.has_errors(),
+            "builtin configs must prove clean:\n{report}"
+        );
+        // every config produced a positive clash proof and a range proof
+        for name in ["tiny", "mnist_fc2", "mnist_fc4", "timit"] {
+            assert!(
+                report
+                    .findings
+                    .iter()
+                    .any(|f| f.config == name && f.code == "proved"),
+                "{name}: no clash proof"
+            );
+            assert!(
+                report
+                    .findings
+                    .iter()
+                    .any(|f| f.config == name && f.code == "certified-range"),
+                "{name}: no certified range"
+            );
+        }
+    }
+
+    #[test]
+    fn report_json_shape_and_counts() {
+        let mut report = AnalysisReport::default();
+        report.findings.push(Finding::new(
+            "clash",
+            "proved",
+            Severity::Info,
+            "tiny",
+            "ok".into(),
+        ));
+        report.findings.push(
+            Finding::new(
+                "clash",
+                "memory-clash",
+                Severity::Error,
+                "tiny",
+                "bank hit twice".into(),
+            )
+            .with_junction(1)
+            .with_cycle(4)
+            .with_bank(0),
+        );
+        report.sort_by_severity();
+        assert_eq!(report.findings[0].code, "memory-clash");
+        assert!(report.has_errors());
+        let j = report.to_json();
+        assert_eq!(j.get("status").and_then(|v| v.as_str()), Some("fail"));
+        assert_eq!(j.get("errors").and_then(|v| v.as_usize()), Some(1));
+        let arr = j.get("findings").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("junction").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(arr[0].get("cycle").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(arr[0].get("bank").and_then(|v| v.as_usize()), Some(0));
+        // round-trips through the hand-rolled JSON layer
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed, j);
+    }
+
+    #[test]
+    fn quick_lint_is_clean_on_builtin() {
+        assert!(!quick_lint(&Manifest::builtin()).has_errors());
+    }
+}

@@ -655,6 +655,21 @@ impl InferenceService {
                         spec.config,
                         net.clipped_params()
                     );
+                    // static range certification on the exact net being
+                    // served (cheap: a few interval propagations): the
+                    // format must admit a nonempty saturation-free input
+                    // range, or every request would clip
+                    let (findings, _cert) =
+                        crate::analysis::range::analyze_qnet(&spec.config, &net, None);
+                    if let Some(f) = findings
+                        .iter()
+                        .find(|f| f.severity == crate::analysis::Severity::Error)
+                    {
+                        anyhow::bail!(
+                            "'{}': static range analysis rejects serving at {fmt}: {f}",
+                            spec.config
+                        );
+                    }
                     Some(Arc::new(net))
                 }
                 None => None,

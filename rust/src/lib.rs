@@ -17,6 +17,7 @@
 //! | [`hw`] | Sec. III, Table I | cycle-accurate junction/pipeline simulator, banked memories, storage model |
 //! | [`nn`] | Sec. II eq. 2–4, Sec. III-A/D | reference dense + CSR compacted kernels (batch-parallel), Adam trainers, the pipelined training engine ([`nn::pipeline`]) executing the FF/BP/UP interleave, and the Qm.n fixed-point execution path ([`nn::fixed`]) |
 //! | [`runtime`] | — | backend-agnostic [`runtime::Engine`] facade: native or PJRT execution of the manifest programs, plus the native-only streaming `train_pipelined` path |
+//! | [`analysis`] | Sec. III-B/C, arXiv:1806.01087 | static verifier (`pds analyze`): clash-freedom prover over the pipelined interleave, Qm.n interval range analysis, manifest lint — typed findings, no execution |
 //! | [`coordinator`] | Sec. III (scale-out analogue) | training sessions (fused + pipelined); the multi-worker sharded inference service + load generator |
 //! | [`net`] | Sec. III (network-edge analogue) | binary wire protocol, threaded TCP front-end ([`net::NetServer`]), adaptive micro-batching into engine batches, blocking pipelined [`net::NetClient`] |
 //! | [`data`] | Sec. IV | synthetic class-conditional surrogates for MNIST / Reuters / TIMIT / CIFAR |
@@ -37,6 +38,7 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::many_single_char_names)]
 
+pub mod analysis;
 pub mod sparsity;
 pub mod hw;
 pub mod data;

@@ -2,6 +2,9 @@
 //!
 //! ```text
 //! info                   list runtime configs and programs
+//! analyze     [opts]     static verifier: clash-freedom prover, Qm.n
+//!                        range analysis, manifest lint (nonzero exit
+//!                        on error-level findings)
 //! patterns    [opts]     generate + audit a connection pattern
 //! storage     [opts]     Table-I storage model for a config
 //! simulate    [opts]     cycle-accurate junction FF/BP/UP run
@@ -101,6 +104,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     match cmd.as_str() {
         "help" | "--help" | "-h" => print_help(),
         "info" => cmd_info(&opts)?,
+        "analyze" => cmd_analyze(&opts)?,
         "patterns" => cmd_patterns(&opts)?,
         "storage" => cmd_storage(&opts)?,
         "simulate" => cmd_simulate(&opts)?,
@@ -130,6 +134,13 @@ fn print_help() {
          \n\
          commands:\n\
            info                              list artifact configs\n\
+           analyze   [--config NAME] [--manifest PATH] [--quant Qm.n]\n\
+                     [--depth N] [--input-range R] [--seed N] [--json]\n\
+                     (static verifier: proves clash-freedom across the\n\
+                      pipelined FF/BP/UP interleave, certifies the Qm.n\n\
+                      saturation-free input range — or proves a given\n\
+                      --input-range safe — and lints the manifest;\n\
+                      nonzero exit on any error-level finding)\n\
            patterns  --layers 800,100,10 --dout 20,10 [--method clash-free|structured|random] [--z 200,10]\n\
            storage   --layers 800,100,10 --dout 20,10\n\
            simulate  --left 800 --right 100 --dout 20 --z 200\n\
@@ -180,6 +191,95 @@ fn cmd_info(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
                 p.outputs.len()
             );
         }
+    }
+    Ok(())
+}
+
+/// `pds analyze`: run the static verifier (clash-freedom prover, Qm.n
+/// range analysis, manifest lint) over the builtin/artifact manifest or
+/// an explicit `--manifest PATH`, one `--config` or all. Exits nonzero
+/// on any error-level finding; `--json` prints the stable
+/// machine-readable report instead of the human one.
+fn cmd_analyze(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    use pds::analysis::{self, AnalysisReport, AnalyzeOptions, Finding, Severity};
+    use pds::runtime::Manifest;
+
+    let mut aopts = AnalyzeOptions {
+        quant: parse_quant(opts, "quant")?,
+        ..AnalyzeOptions::default()
+    };
+    if let Some(d) = opts.get("depth") {
+        aopts.depth = Some(d.parse().map_err(|e| anyhow::anyhow!("--depth: {e}"))?);
+    }
+    if let Some(r) = opts.get("input-range") {
+        aopts.input_range = Some(r.parse().map_err(|e| anyhow::anyhow!("--input-range: {e}"))?);
+    }
+    if let Some(s) = opts.get("seed") {
+        aopts.seed = s.parse().map_err(|e| anyhow::anyhow!("--seed: {e}"))?;
+    }
+    let json = opts.contains_key("json");
+
+    // manifest source: explicit --manifest PATH beats <artifacts>/manifest.json
+    // beats the builtin configs. A file that fails to parse is itself an
+    // analyzer finding (severity error), not a CLI crash.
+    let explicit = opts.get("manifest").cloned();
+    let path = explicit
+        .clone()
+        .unwrap_or_else(|| format!("{}/manifest.json", artifacts_dir(opts)));
+    let (manifest, raw_text) = match std::fs::read_to_string(&path) {
+        Ok(text) => match Manifest::parse(&text) {
+            Ok(m) => (m, Some(text)),
+            Err(e) => {
+                let report = AnalysisReport {
+                    findings: vec![Finding::new(
+                        "lint",
+                        "parse-error",
+                        Severity::Error,
+                        "<manifest>",
+                        format!("{path}: {e}"),
+                    )],
+                };
+                emit_report(report, json)?;
+                unreachable!("parse-error report always has errors")
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound && explicit.is_none() => {
+            (Manifest::builtin(), None)
+        }
+        Err(e) => anyhow::bail!("cannot read {path}: {e}"),
+    };
+
+    let mut report = match opts.get("config") {
+        Some(name) => {
+            let entry = manifest
+                .configs
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("config '{name}' not in manifest"))?;
+            analysis::analyze_config(name, entry, &aopts)
+        }
+        None => analysis::analyze_manifest(&manifest, &aopts),
+    };
+    // raw-document lint: fields the parser silently ignores or drops
+    if let Some(text) = &raw_text {
+        report.findings.extend(analysis::lint::lint_text(text));
+    }
+    emit_report(report, json)
+}
+
+/// Print an analysis report (human or `--json`) and turn error-level
+/// findings into a nonzero exit.
+fn emit_report(mut report: pds::analysis::AnalysisReport, json: bool) -> anyhow::Result<()> {
+    report.sort_by_severity();
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{report}");
+    }
+    if report.has_errors() {
+        anyhow::bail!(
+            "analysis found {} error-level finding(s)",
+            report.count(pds::analysis::Severity::Error)
+        );
     }
     Ok(())
 }

@@ -25,6 +25,13 @@
 //! truncation, bit flips and oversized headers without sockets;
 //! [`read_frame`] / [`write_frame`] adapt it to `std::io` streams.
 
+// codec boundary: every narrowing cast here writes a length field whose
+// range is enforced by an assert or a size invariant just above it, so
+// each site carries a targeted allow with its argument — a new
+// unannotated cast is a bug until proven otherwise
+#![deny(clippy::cast_possible_truncation)]
+#![deny(clippy::lossy_float_literal)]
+
 use std::io::{Read, Write};
 
 /// First two header bytes of every frame.
@@ -315,12 +322,18 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
 /// # Panics
 /// If `s` is 64 KiB or longer (model names and error messages are
 /// always far shorter; a length that large is a caller bug).
+// length fits u16: asserted on the line above the cast
+#[allow(clippy::cast_possible_truncation)]
 fn put_str(out: &mut Vec<u8>, s: &str) {
     assert!(s.len() <= u16::MAX as usize, "wire string too long");
     put_u16(out, s.len() as u16);
     out.extend_from_slice(s.as_bytes());
 }
 
+// count fits u32: a vector anywhere near 2^32 f32s (16 GiB) would blow
+// the MAX_PAYLOAD assert in encode()/encode_request long before the cast
+// could wrap
+#[allow(clippy::cast_possible_truncation)]
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
     put_u32(out, xs.len() as u32);
     for x in xs {
@@ -423,6 +436,8 @@ impl Frame {
         }
     }
 
+    // model count fits u16: asserted immediately above the cast
+    #[allow(clippy::cast_possible_truncation)]
     fn encode_payload(&self, out: &mut Vec<u8>) {
         match self {
             Frame::Request { id, model, features } => {
@@ -479,6 +494,8 @@ impl Frame {
     /// # Panics
     /// If the payload would exceed [`MAX_PAYLOAD`] (a single feature
     /// vector that size is a caller bug, not a runtime condition).
+    // length fits u32: asserted <= MAX_PAYLOAD on the line above the cast
+    #[allow(clippy::cast_possible_truncation)]
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(HEADER_LEN + 32);
         out.extend_from_slice(&MAGIC);
@@ -521,6 +538,8 @@ fn request_payload(out: &mut Vec<u8>, id: u64, model: &str, features: &[f32]) {
 /// to `Frame::Request { .. }.encode()` (a unit test pins it) but
 /// without cloning the feature vector into a `Frame` first. This is
 /// the hot path of [`crate::net::NetClient::classify_pipelined`].
+// length fits u32: asserted <= MAX_PAYLOAD on the line above the cast
+#[allow(clippy::cast_possible_truncation)]
 pub fn encode_request(id: u64, model: &str, features: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_LEN + 14 + model.len() + 4 * features.len());
     out.extend_from_slice(&MAGIC);
@@ -703,6 +722,8 @@ fn read_full<R: Read>(
 }
 
 #[cfg(test)]
+// test fixtures cast freely between numeric types on hand-picked values
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
 

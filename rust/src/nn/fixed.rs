@@ -40,6 +40,13 @@
 //! accumulation is exact, so edge order cannot change the sum. The
 //! differential tests in `tests/prop_fixed.rs` pin that contract.
 
+// numerics boundary: every narrowing cast in this module is a deliberate
+// range-checked conversion (post-clamp, post-round, or validated-format
+// arithmetic), so each site carries a targeted allow with its argument —
+// a new unannotated cast is a bug until proven otherwise
+#![deny(clippy::cast_possible_truncation)]
+#![deny(clippy::lossy_float_literal)]
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::nn::sparse::{SparseLayer, SparseNet};
@@ -78,8 +85,13 @@ impl std::fmt::Display for QFormat {
 /// Round-half-up arithmetic right shift (the hardware's MAC output
 /// rounding): `v / 2^n` rounded to the nearest integer, ties toward
 /// +infinity. Exact in `i64` for every product of two in-range raw words.
+///
+/// `pub(crate)` so the static verifier's `i128` twin
+/// ([`crate::analysis::range::shift_round_wide`]) can be pinned to this
+/// exact rounding rule by a unit test below — the range analysis is only
+/// sound if both round identically on the shared `i64` domain.
 #[inline]
-fn shift_round(v: i64, n: u32) -> i64 {
+pub(crate) fn shift_round(v: i64, n: u32) -> i64 {
     if n == 0 {
         v
     } else {
@@ -126,16 +138,22 @@ impl QFormat {
     }
 
     /// One unit in the last place: `2^-n`, the format's resolution.
+    // 2^-n is a power of two, exactly representable in f32 for n <= 31
+    #[allow(clippy::cast_possible_truncation)]
     pub fn ulp(&self) -> f32 {
         (1.0 / self.scale()) as f32
     }
 
     /// Largest raw word: `2^(m+n) - 1`.
+    // m + n <= 31 (validated in new_checked), so the word fits an i32
+    #[allow(clippy::cast_possible_truncation)]
     pub fn max_raw(&self) -> i32 {
         ((1i64 << (self.int_bits + self.frac_bits)) - 1) as i32
     }
 
     /// Smallest raw word: `-2^(m+n)`.
+    // m + n <= 31 (validated in new_checked), so the word fits an i32
+    #[allow(clippy::cast_possible_truncation)]
     pub fn min_raw(&self) -> i32 {
         (-(1i64 << (self.int_bits + self.frac_bits))) as i32
     }
@@ -158,6 +176,9 @@ impl QFormat {
     /// (parameter ingest, request inputs) counts clips instead of hiding
     /// them. Values that land exactly on the range ends without exceeding
     /// them are not clips.
+    // the final `v as i32` runs only after the range comparisons above it
+    // proved v lies inside [min_raw, max_raw]
+    #[allow(clippy::cast_possible_truncation)]
     pub fn quantize_counted(&self, x: f32, clipped: &mut usize) -> i32 {
         if x.is_nan() {
             *clipped += 1;
@@ -177,6 +198,9 @@ impl QFormat {
 
     /// Raw → real (exact: every raw word is exactly representable in f32
     /// for word widths up to 25 bits, and within 1 ULP beyond).
+    // the f64 quotient is finite and within f32 range for every i32 raw
+    // word, so the narrowing is a rounding, never an overflow
+    #[allow(clippy::cast_possible_truncation)]
     pub fn dequantize(&self, raw: i32) -> f32 {
         (raw as f64 / self.scale()) as f32
     }
@@ -199,11 +223,16 @@ impl QFormat {
 
     /// Clamp a wide intermediate into the raw range (the saturation
     /// every hardware ALU output applies). Never panics, for any `i64`.
+    // clamp guarantees the value is inside the i32-ranged [min_raw, max_raw]
+    #[allow(clippy::cast_possible_truncation)]
     pub fn clamp_raw(&self, v: i64) -> i32 {
         v.clamp(self.min_raw() as i64, self.max_raw() as i64) as i32
     }
 
     /// Like [`QFormat::clamp_raw`], counting saturation events into `sat`.
+    // the fall-through `v as i32` runs only after both range comparisons
+    // proved v lies inside [min_raw, max_raw]
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     pub fn clamp_raw_counted(&self, v: i64, sat: &mut usize) -> i32 {
         if v > self.max_raw() as i64 {
@@ -292,6 +321,9 @@ impl SigmoidLut {
     /// Build the table for `fmt`. Requires `m >= 4` (the format must
     /// represent ±8, the table's domain) and `n >= 2` (the node spacing
     /// 0.25 must be a whole number of raw units).
+    // sigmoid values lie in (0, 1): the f64 → f32 narrowing before
+    // quantize is a sub-ULP rounding, never out of range
+    #[allow(clippy::cast_possible_truncation)]
     pub fn new(fmt: QFormat) -> SigmoidLut {
         assert!(
             fmt.int_bits >= 4 && fmt.frac_bits >= 2,
@@ -321,6 +353,9 @@ impl SigmoidLut {
     /// Evaluate at a raw Qm.n word: clamp into [-8, 8], pick the segment,
     /// linearly interpolate between its quantized nodes. Output is always
     /// a valid raw word in [0, 2^n] (never saturates).
+    // segment index is bounded by SIGMOID_SEGMENTS (fits usize on any
+    // target); the interpolated word lies between two i32 table nodes
+    #[allow(clippy::cast_possible_truncation)]
     pub fn eval_raw(&self, x: i32) -> i32 {
         let x = x.clamp(self.lo_raw, self.hi_raw);
         let u = (x - self.lo_raw) as i64;
@@ -624,6 +659,9 @@ impl FixedSparseNet {
 /// the saturation count is zero first). `a_max`/`w_max` are measured on
 /// the f32 reference, so the bound is input-specific, not a worst case
 /// over all inputs.
+// the accumulated f64 bound is tiny (fractions of the activation scale)
+// whenever the premises hold, so the final f32 narrowing is a rounding
+#[allow(clippy::cast_possible_truncation)]
 pub fn forward_error_bound(net: &SparseNet, x: &[f32], batch: usize, fmt: QFormat) -> f32 {
     let u = fmt.ulp() as f64;
     let mut err = 0.5 * u;
@@ -650,6 +688,8 @@ pub fn forward_error_bound(net: &SparseNet, x: &[f32], batch: usize, fmt: QForma
 }
 
 #[cfg(test)]
+// test fixtures cast freely between numeric types on hand-picked values
+#[allow(clippy::cast_possible_truncation, clippy::lossy_float_literal)]
 mod tests {
     use super::*;
     use crate::sparsity::config::{DoutConfig, NetConfig};
@@ -709,6 +749,51 @@ mod tests {
         assert_eq!(shift_round(-5, 1), -2); // -2.5 -> -2 (toward +inf)
         assert_eq!(shift_round(4, 2), 1);
         assert_eq!(shift_round(7, 0), 7);
+    }
+
+    /// Pins the static verifier's `i128` rounding shift
+    /// ([`crate::analysis::range::shift_round_wide`]) to the execution
+    /// kernels' `shift_round` on the shared `i64` domain — the range
+    /// analysis in `analysis::range` is only sound if the two agree on
+    /// every value the kernels can produce.
+    #[test]
+    fn shift_round_wide_agrees_with_kernel_rounding() {
+        use crate::analysis::range::shift_round_wide;
+        // cover signs, ties, zero, and magnitudes up to the MAC
+        // accumulator headroom (|acc| <= 2^62 per the fold_mac contract;
+        // shift_round itself needs |v| + 2^(n-1) to fit i64)
+        let samples: [i64; 12] = [
+            0,
+            1,
+            -1,
+            5,
+            -5,
+            255,
+            -256,
+            (1 << 20) + 3,
+            -(1 << 20) - 3,
+            (1 << 62) - 1,
+            -(1 << 62),
+            0x1812_0116,
+        ];
+        let mut rng = Rng::new(0x1812);
+        for n in [0u32, 1, 2, 5, 10, 15, 31] {
+            for &v in &samples {
+                assert_eq!(
+                    shift_round_wide(v as i128, n),
+                    shift_round(v, n) as i128,
+                    "divergence at v={v} n={n}"
+                );
+            }
+            for _ in 0..200 {
+                let v = (rng.next_u64() as i64) >> 2; // |v| <= 2^61: no overflow
+                assert_eq!(
+                    shift_round_wide(v as i128, n),
+                    shift_round(v, n) as i128,
+                    "divergence at v={v} n={n}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -278,12 +278,33 @@ impl Manifest {
     /// Read `<dir>/manifest.json` when present, falling back to the
     /// built-in native configs only when the file does not exist; any
     /// other read or parse failure is surfaced rather than silently
-    /// replaced with the wrong configs.
+    /// replaced with the wrong configs. Parsed manifests additionally
+    /// pass through the static lint gate
+    /// ([`crate::analysis::quick_lint`]): an error-level finding
+    /// (degenerate layers, inadmissible out-degrees, duplicate or
+    /// mis-shaped tensors) refuses the manifest here, at load time,
+    /// instead of surfacing later inside a worker thread.
     pub fn load_or_builtin(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Manifest> {
         let path = dir.as_ref().join("manifest.json");
         match std::fs::read_to_string(&path) {
             Ok(text) => {
-                Manifest::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest {}: {e}", path.display()))
+                let m = Manifest::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("bad manifest {}: {e}", path.display()))?;
+                let report = crate::analysis::quick_lint(&m);
+                if report.has_errors() {
+                    let first = report
+                        .findings
+                        .iter()
+                        .find(|f| f.severity == crate::analysis::Severity::Error)
+                        .expect("has_errors");
+                    anyhow::bail!(
+                        "manifest {} failed static lint: {first} ({} error finding(s); \
+                         run `pds analyze --manifest` for the full report)",
+                        path.display(),
+                        report.count(crate::analysis::Severity::Error)
+                    );
+                }
+                Ok(m)
             }
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Manifest::builtin()),
             Err(e) => Err(anyhow::anyhow!("cannot read {}: {e}", path.display())),

@@ -195,7 +195,20 @@ impl Engine {
     /// parsing, effectively free. This is what lets a multi-worker
     /// service parse `manifest.json` once and still give every worker
     /// thread its own engine.
+    ///
+    /// Runs the cheap static-analysis pass ([`crate::analysis::quick_lint`])
+    /// on the manifest and panics on an error-level finding: every
+    /// manifest in the system arrives here either synthesized
+    /// ([`Manifest::builtin`]) or through [`Manifest::load_or_builtin`],
+    /// whose lint gate already rejects broken files — so a failure at
+    /// this point is a programmer error (a hand-mutated `ConfigEntry`),
+    /// not an input error.
     pub fn from_manifest(manifest: Manifest) -> Engine {
+        let report = crate::analysis::quick_lint(&manifest);
+        assert!(
+            !report.has_errors(),
+            "manifest failed static lint: {report}"
+        );
         Engine {
             backend: Box::new(NativeEngine),
             manifest,

@@ -1,0 +1,173 @@
+//! Seeded mutation harness for `pds analyze`: proves the analyzer is
+//! *non-vacuous*. The positive half pins every builtin config to a
+//! clean report (including `mnist_fc4` at full pipeline depth); the
+//! negative half injects known-bad structure — clashing schedules,
+//! inadmissible out-degrees, overflowing quant formats, malformed
+//! manifests — and asserts each one is rejected with the expected typed
+//! finding. CI runs this next to the `pds analyze` invocation itself,
+//! so a regression that silently turns a pass into a no-op fails the
+//! build even though the clean run still looks clean.
+
+use pds::analysis::{analyze_config, analyze_manifest, AnalyzeOptions, Severity};
+use pds::nn::fixed::QFormat;
+use pds::runtime::Manifest;
+use pds::sparsity::clash_free::{schedule_spec, AddrGen, Flavor};
+use pds::util::rng::Rng;
+
+fn assert_code(findings: &[pds::analysis::Finding], code: &str, severity: Severity) {
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.code == code && f.severity == severity),
+        "expected a {severity:?} '{code}' finding, got:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {f}\n"))
+            .collect::<String>()
+    );
+}
+
+#[test]
+fn every_builtin_config_analyzes_clean() {
+    let report = analyze_manifest(&Manifest::builtin(), &AnalyzeOptions::default());
+    assert!(!report.has_errors(), "builtin must be clean:\n{report}");
+    for name in ["tiny", "mnist_fc2", "mnist_fc4", "timit"] {
+        assert!(
+            report
+                .findings
+                .iter()
+                .any(|f| f.config == name && f.code == "proved"),
+            "{name}: missing clash proof"
+        );
+        assert!(
+            report
+                .findings
+                .iter()
+                .any(|f| f.config == name && f.code == "certified-range"),
+            "{name}: missing certified range"
+        );
+    }
+}
+
+#[test]
+fn mnist_fc4_proves_clean_at_full_pipeline_depth() {
+    let manifest = Manifest::builtin();
+    let entry = &manifest.configs["mnist_fc4"];
+    let opts = AnalyzeOptions {
+        depth: Some(18),
+        ..AnalyzeOptions::default()
+    };
+    let report = analyze_config("mnist_fc4", entry, &opts);
+    assert!(!report.has_errors(), "{report}");
+    assert_code(&report.findings, "proved", Severity::Info);
+}
+
+#[test]
+fn injected_schedule_clash_is_rejected_with_counterexample() {
+    // a valid Type-1 draw, then one corrupted address-generator word:
+    // two lanes mapped to the same left-bank memory
+    let mut rng = Rng::new(0x1812);
+    let mut spec = schedule_spec(32, 4, 2, Flavor::Type1 { dither: false }, &mut rng);
+    spec.sweeps[0].sigma[0] = spec.sweeps[0].sigma[1];
+    let err = spec.prove_clash_free().expect_err("clash must be caught");
+    assert!(err.cycle().is_some() || err.memory().is_some(), "{err}");
+    // the brute-force replay agrees
+    assert!(spec.materialize().verify_clash_free().is_err());
+    // and an Explicit column that repeats an address is equally fatal
+    let mut spec = schedule_spec(32, 4, 2, Flavor::Type3 { dither: true }, &mut rng);
+    if let AddrGen::Explicit { cols } = &mut spec.sweeps[0].addr {
+        cols[0][0] = cols[0][1];
+    } else {
+        panic!("Type3 must draw explicit columns");
+    }
+    assert!(spec.prove_clash_free().is_err());
+    assert!(spec.materialize().verify_clash_free().is_err());
+}
+
+#[test]
+fn inadmissible_out_degrees_are_rejected() {
+    let manifest = Manifest::builtin();
+    let mut entry = manifest.configs["timit"].clone();
+    // timit junction 0 is 39 -> 390: admissible d_out are multiples of
+    // 390/gcd(39,390) = 10, so d_in = 39*5/390 is fractional and no
+    // clash-free junction exists
+    entry.gather_dout = Some(vec![5, 9]);
+    let report = analyze_config("timit", &entry, &AnalyzeOptions::default());
+    assert!(report.has_errors());
+    assert_code(&report.findings, "bad-dout", Severity::Error);
+}
+
+#[test]
+fn overflowing_quant_format_is_rejected_with_junction_and_fix() {
+    // Q1.10 has 2 units of integer headroom; the mnist_fc2 first
+    // junction accumulates 160 He-initialized edges, whose interval
+    // bound exceeds that by an order of magnitude at |x| <= 1
+    let manifest = Manifest::builtin();
+    let entry = &manifest.configs["mnist_fc2"];
+    let opts = AnalyzeOptions {
+        quant: Some(QFormat::new(1, 10)),
+        input_range: Some(1.0),
+        ..AnalyzeOptions::default()
+    };
+    let report = analyze_config("mnist_fc2", entry, &opts);
+    assert!(report.has_errors(), "{report}");
+    let sat = report
+        .findings
+        .iter()
+        .find(|f| f.code == "saturation")
+        .expect("must flag saturation");
+    assert_eq!(sat.severity, Severity::Error);
+    assert!(sat.junction.is_some(), "must name the breaking junction");
+    // the minimal fixing format is suggested alongside
+    assert_code(&report.findings, "suggest-format", Severity::Warning);
+}
+
+#[test]
+fn default_format_passes_where_the_narrow_one_fails() {
+    // same config, same asserted proof obligation, adequate format:
+    // differential evidence that the rejection above is the format's
+    // fault, not the harness's
+    let manifest = Manifest::builtin();
+    let entry = &manifest.configs["mnist_fc2"];
+    let opts = AnalyzeOptions::default();
+    let report = analyze_config("mnist_fc2", entry, &opts);
+    assert!(!report.has_errors(), "{report}");
+}
+
+#[test]
+fn malformed_manifest_documents_are_rejected() {
+    // not JSON at all
+    assert!(Manifest::parse("{nope").is_err());
+    // JSON but structurally not a manifest
+    assert!(Manifest::parse(r#"{"configs": {"t": {"batch": 4}}}"#).is_err());
+    // parseable but degenerate: the lint gate must refuse it
+    let text = r#"{"configs": {"bad": {"layers": [8], "batch": 0, "programs": {}}}}"#;
+    let m = Manifest::parse(text).expect("parses");
+    let report = pds::analysis::quick_lint(&m);
+    assert!(report.has_errors());
+    assert_code(&report.findings, "bad-layers", Severity::Error);
+    assert_code(&report.findings, "bad-batch", Severity::Error);
+    // entries the parser silently drops are document-level errors
+    let dropped = pds::analysis::lint::lint_text(
+        r#"{"configs": {"t": {"layers": [32, 16], "batch": 4,
+            "gather_dout": [4, -1], "programs": {}}}}"#,
+    );
+    assert!(dropped
+        .iter()
+        .any(|f| f.code == "bad-dout-entry" && f.severity == Severity::Error));
+}
+
+#[test]
+fn load_gate_refuses_a_lint_broken_manifest_file() {
+    let dir = std::env::temp_dir().join(format!("pds_analyzer_mut_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"configs": {"bad": {"layers": [8], "batch": 0, "programs": {}}}}"#,
+    )
+    .unwrap();
+    let err = Manifest::load_or_builtin(&dir).expect_err("gate must refuse");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("static lint"), "unexpected error: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}

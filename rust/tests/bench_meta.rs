@@ -7,6 +7,9 @@
 //! Contract: every timing/throughput field must be *present*; it may be
 //! `null` only while the file's `recorded` flag is `false`. Once a file
 //! claims `recorded: true`, nulls in required numeric fields fail.
+//!
+//! The same discipline applies to the `pds analyze --json` report: its
+//! schema is CI-consumed, so [`analyzer_report_schema`] pins it here.
 
 use pds::util::json::Json;
 
@@ -199,6 +202,77 @@ fn bench_serve_net_section_schema() {
             "recorded mean coalesced batch size must exceed 1 (got {mean})"
         );
     }
+}
+
+/// The `pds analyze --json` report is a machine-readable CI surface:
+/// pin its schema (top-level keys, per-finding keys, value types, count
+/// consistency) against the real builtin-manifest report, and check it
+/// round-trips through the in-tree JSON layer.
+#[test]
+fn analyzer_report_schema() {
+    use pds::analysis::{analyze_manifest, AnalyzeOptions};
+    use pds::runtime::Manifest;
+
+    let report = analyze_manifest(&Manifest::builtin(), &AnalyzeOptions::default());
+    let doc = report.to_json();
+
+    assert_eq!(doc.get("version").and_then(|v| v.as_usize()), Some(1));
+    let status = doc
+        .get("status")
+        .and_then(|v| v.as_str())
+        .expect("status string");
+    assert!(
+        status == "pass" || status == "fail",
+        "status must be pass|fail, got '{status}'"
+    );
+    let errors = doc.get("errors").and_then(|v| v.as_usize()).expect("errors");
+    let warnings = doc
+        .get("warnings")
+        .and_then(|v| v.as_usize())
+        .expect("warnings");
+    let infos = doc.get("infos").and_then(|v| v.as_usize()).expect("infos");
+    assert_eq!(status == "fail", errors > 0, "status must track errors");
+    let findings = doc
+        .get("findings")
+        .and_then(|v| v.as_arr())
+        .expect("findings array");
+    assert_eq!(
+        findings.len(),
+        errors + warnings + infos,
+        "severity counts must partition the findings"
+    );
+    assert!(!findings.is_empty(), "builtin analysis emits proof findings");
+    for (i, f) in findings.iter().enumerate() {
+        let what = format!("finding {i}");
+        for key in ["pass", "code", "severity", "config", "message"] {
+            assert!(
+                f.get(key).and_then(|v| v.as_str()).is_some(),
+                "{what}: '{key}' must be a string"
+            );
+        }
+        let sev = f.get("severity").and_then(|v| v.as_str()).unwrap();
+        assert!(
+            ["error", "warning", "info"].contains(&sev),
+            "{what}: bad severity '{sev}'"
+        );
+        let pass = f.get("pass").and_then(|v| v.as_str()).unwrap();
+        assert!(
+            ["clash", "range", "lint"].contains(&pass),
+            "{what}: unknown pass '{pass}'"
+        );
+        // counterexample coordinates are optional, but typed when present
+        for key in ["junction", "cycle", "bank"] {
+            if let Some(v) = f.get(key) {
+                assert!(
+                    v.as_usize().is_some(),
+                    "{what}: '{key}' must be a non-negative integer"
+                );
+            }
+        }
+    }
+    // stable round-trip through the hand-rolled JSON layer
+    let reparsed = Json::parse(&doc.to_string()).expect("report serializes to valid JSON");
+    assert_eq!(reparsed, doc, "report must round-trip");
 }
 
 #[test]

@@ -1,0 +1,210 @@
+//! Property tests for the static verifier (`analysis`): the clash
+//! prover's symbolic verdict must coincide with the brute-force
+//! `verify_clash_free` replay on randomized schedules — both on valid
+//! generator draws and under injected corruptions — and the range
+//! analysis' certified input bound must never be violated by concrete
+//! quantized forward passes.
+//!
+//! Seeds come from `PDS_PROP_SEED` when set (CI pins it for
+//! reproducibility); failures print the per-case seed via
+//! `util::prop::for_all`.
+
+use pds::analysis::range::{certified_raw_bound, propagate, value_bound};
+use pds::nn::fixed::{relu_raw, FixedSparseNet, QFormat};
+use pds::nn::sparse::SparseNet;
+use pds::prop_assert;
+use pds::sparsity::clash_free::{self, AddrGen, Flavor};
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::{generate, Method};
+use pds::util::prop::for_all;
+use pds::util::rng::Rng;
+
+/// Root seed: `PDS_PROP_SEED` when set (CI pins it), a fixed default
+/// otherwise — property runs are always reproducible from the log.
+fn prop_seed() -> u64 {
+    std::env::var("PDS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1812_0116)
+}
+
+fn flavor_of(ix: usize) -> Flavor {
+    match ix {
+        0 => Flavor::Type1 { dither: false },
+        1 => Flavor::Type1 { dither: true },
+        2 => Flavor::Type2 { dither: false },
+        3 => Flavor::Type2 { dither: true },
+        4 => Flavor::Type3 { dither: false },
+        _ => Flavor::Type3 { dither: true },
+    }
+}
+
+/// Random admissible schedule-spec parameters. `z >= 2` and `depth >= 2`
+/// so every corruption below has room to act.
+fn spec_case(r: &mut Rng) -> (usize, usize, usize, usize, u64) {
+    let z = 2 + r.below(8);
+    let depth = 2 + r.below(10);
+    let d_out = 1 + r.below(5);
+    let flavor_ix = r.below(6);
+    (z, depth, d_out, flavor_ix, r.next_u64())
+}
+
+#[test]
+fn prover_verdict_matches_replay_on_valid_schedules() {
+    for_all(
+        "prover == replay on generator output",
+        prop_seed(),
+        96,
+        spec_case,
+        |&(z, depth, d_out, flavor_ix, seed)| {
+            let spec = clash_free::schedule_spec(
+                z * depth,
+                z,
+                d_out,
+                flavor_of(flavor_ix),
+                &mut Rng::new(seed),
+            );
+            let proved = spec.prove_clash_free();
+            let replayed = spec.materialize().verify_clash_free();
+            prop_assert!(proved.is_ok(), "prover rejected a generator draw: {proved:?}");
+            prop_assert!(replayed.is_ok(), "replay rejected a generator draw: {replayed:?}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prover_verdict_matches_replay_under_corruption() {
+    for_all(
+        "prover == replay under injected corruption",
+        prop_seed() ^ 0x5eed,
+        96,
+        spec_case,
+        |&(z, depth, d_out, flavor_ix, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut spec = clash_free::schedule_spec(
+                z * depth,
+                z,
+                d_out,
+                flavor_of(flavor_ix),
+                &mut rng,
+            );
+            let s = rng.below(spec.sweeps.len());
+            let lane = rng.below(z);
+            // 0: duplicate a sigma entry (memory clash in every cycle)
+            // 1: out-of-range sigma entry
+            // 2: mutate the address generator — for Affine sweeps the
+            //    seed vector is *irrelevant* to clash-freedom (any phi is
+            //    a cyclic rotation), so both sides must still accept; for
+            //    Explicit sweeps a repeated column entry skips/repeats a
+            //    neuron, so both sides must reject
+            let kind = rng.below(3);
+            let must_reject = match kind {
+                0 => {
+                    spec.sweeps[s].sigma[lane] = spec.sweeps[s].sigma[(lane + 1) % z];
+                    true
+                }
+                1 => {
+                    spec.sweeps[s].sigma[lane] = z + rng.below(4);
+                    true
+                }
+                _ => match &mut spec.sweeps[s].addr {
+                    AddrGen::Affine { phi } => {
+                        // any seed, including >= depth, stays clash-free
+                        phi[lane] = rng.below(4 * depth);
+                        false
+                    }
+                    AddrGen::Explicit { cols } => {
+                        cols[lane][0] = cols[lane][1];
+                        true
+                    }
+                },
+            };
+            let proved = spec.prove_clash_free();
+            let replayed = spec.materialize().verify_clash_free();
+            prop_assert!(
+                proved.is_ok() == replayed.is_ok(),
+                "verdicts diverge: prover {proved:?}, replay {replayed:?}"
+            );
+            if must_reject {
+                prop_assert!(proved.is_err(), "corruption survived the prover");
+            } else {
+                prop_assert!(proved.is_ok(), "benign mutation rejected: {proved:?}");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random small net + format for range-soundness cases.
+fn range_case(r: &mut Rng) -> (Vec<usize>, QFormat, u64) {
+    let layers = vec![8 * (1 + r.below(4)), 4 * (1 + r.below(4)), 2 * (1 + r.below(3))];
+    let m = 2 + r.below(5) as u32;
+    let n = 4 + r.below(8) as u32;
+    (layers, QFormat::new(m, n), r.next_u64())
+}
+
+#[test]
+fn certified_range_is_never_violated_by_concrete_execution() {
+    for_all(
+        "range certificate soundness",
+        prop_seed() ^ 0xface,
+        48,
+        range_case,
+        |case| {
+            let (layers, fmt, seed) = case;
+            let netc = NetConfig::new(layers.clone());
+            let dout = DoutConfig(
+                (0..netc.n_junctions())
+                    .map(|i| netc.junction(i).min_dout())
+                    .collect(),
+            );
+            netc.validate_dout(&dout).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(*seed);
+            let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
+            let snet = SparseNet::init_he(&pattern, 0.1, &mut rng);
+            let qnet = FixedSparseNet::from_f32(&snet, *fmt);
+            if qnet.clipped_params() > 0 {
+                return Ok(()); // param-clip is the analyzer's verdict, not this property's
+            }
+            let Some(b) = certified_raw_bound(&qnet) else {
+                // no safe range: the parameters alone must already saturate
+                prop_assert!(!propagate(&qnet, 0, 0).sound(), "None but b=0 sound");
+                return Ok(());
+            };
+            // the certified value bound quantizes back inside the raw bound
+            let v = value_bound(*fmt, b);
+            prop_assert!(fmt.quantize(v) <= b, "value bound escapes raw bound");
+
+            // concrete quantized execution within the certified range:
+            // zero saturations, and every junction output inside the
+            // derived interval
+            let check = propagate(&qnet, -b, b);
+            prop_assert!(check.sound(), "certified bound not sound");
+            let batch = 4usize;
+            let mut a: Vec<i32> = (0..batch * layers[0])
+                .map(|_| rng.below(2 * b as usize + 1) as i32 - b)
+                .collect();
+            let last = qnet.junctions.len() - 1;
+            for (ji, j) in qnet.junctions.iter().enumerate() {
+                let mut h = vec![0i32; batch * j.n_right];
+                let sats = j.forward(&a, batch, &mut h);
+                prop_assert!(sats == 0, "junction {ji} saturated inside certified range");
+                let lb = &check.layers[ji];
+                for &vq in &h {
+                    prop_assert!(
+                        (vq as i128) >= lb.out_lo && (vq as i128) <= lb.out_hi,
+                        "junction {ji}: output {vq} outside derived [{}, {}]",
+                        lb.out_lo,
+                        lb.out_hi
+                    );
+                }
+                if ji != last {
+                    relu_raw(&mut h);
+                }
+                a = h;
+            }
+            Ok(())
+        },
+    );
+}

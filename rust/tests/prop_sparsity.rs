@@ -74,7 +74,7 @@ fn clash_free_schedules_never_clash_and_cover_each_sweep() {
         },
         |&(n_left, z, d_out, flavor, seed)| {
             let s = clash_free::schedule(n_left, z, d_out, flavor, &mut Rng::new(seed));
-            s.verify_clash_free()?;
+            s.verify_clash_free().map_err(|e| e.to_string())?;
             prop_assert!(
                 s.cycles.len() == d_out * n_left / z,
                 "cycle count {} != {}",
