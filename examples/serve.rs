@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
             requests: 50,
             think_time: Duration::ZERO,
             burst: 1,
+            contexts: 1,
         };
         let reports = loadgen::run_load(&svc, &models, &load, 11)?;
 

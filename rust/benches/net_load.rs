@@ -29,7 +29,10 @@ fn run_scenario(
 ) -> anyhow::Result<Vec<loadgen::SocketLoadReport>> {
     let specs = models
         .iter()
-        .map(|m| loadgen::model_spec(dir, m, 0.25, 7))
+        .map(|m| {
+            // host as many parameter banks as the load will spread over
+            loadgen::model_spec(dir, m, 0.25, 7).map(|s| s.with_contexts(spec.contexts.max(1)))
+        })
         .collect::<anyhow::Result<Vec<_>>>()?;
     let svc = Arc::new(InferenceService::start(
         dir,
@@ -60,17 +63,22 @@ fn main() {
     let models = vec!["tiny".to_string(), "mnist_fc2".to_string()];
     // sweep offered concurrency: 1 client x 1 pipeline is the
     // batch-1 degenerate baseline; the others give the micro-batcher
-    // something to coalesce
+    // something to coalesce. The tail of the sweep holds concurrency
+    // fixed and scales the tenant-context count (1/4/16 banks per
+    // model) to measure context-grouped batching through the socket
+    // path under the same offered load.
     let sweep = [
-        SocketLoadSpec { clients: 1, requests: 64, pipeline: 1 },
-        SocketLoadSpec { clients: 4, requests: 96, pipeline: 8 },
-        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8 },
+        SocketLoadSpec { clients: 1, requests: 64, pipeline: 1, contexts: 1 },
+        SocketLoadSpec { clients: 4, requests: 96, pipeline: 8, contexts: 1 },
+        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8, contexts: 1 },
+        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8, contexts: 4 },
+        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8, contexts: 16 },
     ];
     let mut scenarios = Vec::new();
     for spec in sweep {
         println!(
-            "== {} client(s) x pipeline {} per model ==",
-            spec.clients, spec.pipeline
+            "== {} client(s) x pipeline {} x {} context(s) per model ==",
+            spec.clients, spec.pipeline, spec.contexts
         );
         match run_scenario(dir, &models, spec) {
             Ok(reports) => {
@@ -81,8 +89,8 @@ fn main() {
             }
             Err(e) => {
                 eprintln!(
-                    "net_load: scenario {}x{} failed: {e:#}",
-                    spec.clients, spec.pipeline
+                    "net_load: scenario {}x{}x{} failed: {e:#}",
+                    spec.clients, spec.pipeline, spec.contexts
                 );
                 return;
             }

@@ -94,6 +94,7 @@ fn main() {
         requests: 150,
         think_time: Duration::ZERO,
         burst: 1,
+        contexts: 1,
     };
     let workers = 2usize;
     let mut rps = Vec::new();

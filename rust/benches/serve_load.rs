@@ -4,7 +4,10 @@
 //!
 //! Two models are served concurrently to exercise the per-model worker
 //! pools; each scenario starts a fresh service so its metrics cover
-//! exactly that run. Writes the baseline numbers to `BENCH_serve.json`
+//! exactly that run. A second sweep holds the worker count fixed and
+//! scales the tenant-context count (1/4/16 parameter banks per model)
+//! to measure the cost of context-grouped batching under the same
+//! offered load. Writes the baseline numbers to `BENCH_serve.json`
 //! at the repo root.
 //!
 //!     cargo bench --bench serve_load
@@ -21,10 +24,15 @@ fn main() {
         requests: 150,
         think_time: Duration::ZERO,
         burst: 1,
+        contexts: 1,
     };
     let mut scenarios = Vec::new();
-    for workers in [1usize, 2, 4] {
-        println!("== {workers} worker(s) per model ==");
+    // axis 1: worker count at a single tenant context (the speedup
+    // baseline); axis 2: tenant contexts at a fixed worker count
+    let sweep: Vec<(usize, usize)> = [(1usize, 1usize), (2, 1), (4, 1), (2, 4), (2, 16)].to_vec();
+    for (workers, contexts) in sweep {
+        println!("== {workers} worker(s) per model, {contexts} tenant context(s) ==");
+        let load = LoadSpec { contexts, ..load };
         match loadgen::bench_service(
             dir,
             &models,
@@ -42,13 +50,22 @@ fn main() {
                 scenarios.push((workers, reports));
             }
             Err(e) => {
-                eprintln!("serve_load: scenario with {workers} workers failed: {e:#}");
+                eprintln!(
+                    "serve_load: scenario with {workers} workers x {contexts} contexts \
+                     failed: {e:#}"
+                );
                 return;
             }
         }
     }
-    let t1: f64 = scenarios[0].1.iter().map(|r| r.throughput).sum();
-    let (wn, last) = scenarios.last().unwrap();
+    // headline compares worker counts at a single tenant context; the
+    // multi-context scenarios are recorded but not part of the speedup
+    let single_ctx: Vec<_> = scenarios
+        .iter()
+        .filter(|(_, reports)| reports.first().is_some_and(|r| r.contexts == 1))
+        .collect();
+    let t1: f64 = single_ctx[0].1.iter().map(|r| r.throughput).sum();
+    let (wn, last) = single_ctx.last().unwrap();
     let tn: f64 = last.iter().map(|r| r.throughput).sum();
     println!(
         "\nsustained throughput: {tn:.0} req/s at {wn} workers vs {t1:.0} req/s single-worker \

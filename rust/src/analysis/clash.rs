@@ -38,6 +38,7 @@
 //! first offending cycle, and the memory bank hit twice.
 
 use super::{Finding, Severity};
+use crate::hw::context::ContextError;
 use crate::hw::pipeline::Pipeline;
 use crate::hw::zconfig::{self, ZConfigError};
 use crate::runtime::manifest::ConfigEntry;
@@ -61,6 +62,12 @@ pub struct ClashProof {
     /// Junction cycles the bounded interleave audit covered (warmup plus
     /// steady state; shift invariance extends it to all cycles).
     pub audited_taus: usize,
+    /// Tenant contexts the multi-tenant obligation covered (`1` = the
+    /// single-tenant pipeline).
+    pub contexts: usize,
+    /// Proved per-context staleness `floor((2(L-i)+1)/C)` per junction
+    /// (equals the Sec. III-D closed form when `contexts == 1`).
+    pub context_staleness: Vec<usize>,
 }
 
 /// The out-degrees the analyzer assumes for `entry`: its `gather_dout`
@@ -91,18 +98,66 @@ fn clash_finding(config: &str, e: ClashError) -> Finding {
     f
 }
 
+/// Discharge the multi-tenant context obligation for an `l`-junction
+/// pipeline against an explicit context fetch function — the general
+/// form the mutation tests drive with deliberately faulted fetches
+/// (alias two contexts onto one bank, drop a context's fetches).
+/// Returns the typed error finding, naming the offending context via
+/// the `context` coordinate, or `None` when the interleave proves out.
+pub fn prove_contexts_with<F>(
+    config: &str,
+    l: usize,
+    taus: i64,
+    contexts: usize,
+    fetch: F,
+) -> Option<Finding>
+where
+    F: Fn(i64) -> Option<usize>,
+{
+    let pipe = Pipeline::new(l);
+    match pipe.audit_contexts_with(taus, contexts, fetch) {
+        Ok(()) => None,
+        Err(e) => {
+            let code = match e {
+                ContextError::Aliased { .. } => "context-alias",
+                ContextError::Skipped { .. } => "context-skip",
+                ContextError::OutOfRange { .. } => "context-out-of-range",
+                ContextError::StalenessLaw { .. } => "context-staleness",
+            };
+            let mut f = Finding::new(
+                "clash",
+                code,
+                Severity::Error,
+                config,
+                format!("multi-tenant interleave violates tenant isolation: {e}"),
+            );
+            if let Some(c) = e.context() {
+                f = f.with_context(c);
+            }
+            if let ContextError::StalenessLaw { junction, .. } = e {
+                f = f.with_junction(junction);
+            }
+            Some(f)
+        }
+    }
+}
+
 /// Prove clash-freedom for one config end to end. `depth` overrides the
 /// audited junction-cycle span (clamped up to `2L + 2` so the steady
 /// state is always covered); `seed` fixes the address-generator draw —
 /// the proof inspects only generator *structure* (sigma permutations,
 /// rotation offsets), so a pass here holds for the schedules
 /// [`crate::sparsity::generate`] materializes from any seed.
+/// `contexts` sets the tenant count the multi-tenant obligation covers
+/// (`1` reproves exactly the single-tenant pipeline; clamped up to 1).
 pub fn prove_config(
     config: &str,
     entry: &ConfigEntry,
     depth: Option<usize>,
     seed: u64,
+    contexts: usize,
 ) -> (Vec<Finding>, Option<ClashProof>) {
+    let contexts = contexts.max(1);
     let mut out = Vec::new();
     if entry.layers.len() < 2 || entry.layers.contains(&0) {
         out.push(Finding::new(
@@ -181,6 +236,17 @@ pub fn prove_config(
         ));
     }
 
+    // obligation 4: the multi-tenant context interleave — round-robin
+    // fetch discipline plus the per-context staleness closed form
+    // floor((2(L-i)+1)/C), audited past every tenant's warmup (the span
+    // scales with C so each tenant reaches steady state in the window)
+    let audited_ctx = (audited * contexts + 2 * l) as i64;
+    if let Some(f) = prove_contexts_with(config, l, audited_ctx, contexts, |n| {
+        Some(pipe.context_of(n, contexts))
+    }) {
+        out.push(f);
+    }
+
     if out.iter().any(|f| f.severity == Severity::Error) {
         return (out, None);
     }
@@ -190,6 +256,8 @@ pub fn prove_config(
         sweeps,
         steady_state_ops: pipe.steady_state_ops(),
         audited_taus: audited,
+        contexts,
+        context_staleness: (1..=l).map(|i| pipe.context_staleness(i, contexts)).collect(),
     };
     out.push(Finding::new(
         "clash",
@@ -203,6 +271,20 @@ pub fn prove_config(
             proof.steady_state_ops
         ),
     ));
+    if contexts > 1 {
+        out.push(Finding::new(
+            "clash",
+            "proved-contexts",
+            Severity::Info,
+            config,
+            format!(
+                "proved {contexts}-tenant interleave isolated: round-robin context \
+                 fetches audited over {audited_ctx} cycles, per-context staleness \
+                 {:?} matches floor((2(L-i)+1)/C)",
+                proof.context_staleness
+            ),
+        ));
+    }
     (out, Some(proof))
 }
 
@@ -215,7 +297,7 @@ mod tests {
     fn builtin_configs_all_prove() {
         let m = Manifest::builtin();
         for (name, entry) in &m.configs {
-            let (findings, proof) = prove_config(name, entry, None, 0x1812_0116);
+            let (findings, proof) = prove_config(name, entry, None, 0x1812_0116, 1);
             assert!(
                 proof.is_some(),
                 "{name} failed to prove: {:?}",
@@ -230,19 +312,65 @@ mod tests {
         let entry = &m.configs["mnist_fc4"];
         // L = 4: warmup ends at tau = 2L+1 = 9; audit the full first
         // steady-state window explicitly
-        let (findings, proof) = prove_config("mnist_fc4", entry, Some(18), 0x1812_0116);
+        let (findings, proof) = prove_config("mnist_fc4", entry, Some(18), 0x1812_0116, 1);
         let proof = proof.unwrap_or_else(|| panic!("no proof: {findings:?}"));
         assert_eq!(proof.junctions, 4);
         assert_eq!(proof.steady_state_ops, 11);
         assert_eq!(proof.audited_taus, 18);
         assert_eq!(proof.z, vec![200, 25, 25, 25]);
+        // single-tenant: the per-context law is the Sec. III-D closed form
+        assert_eq!(proof.contexts, 1);
+        assert_eq!(proof.context_staleness, vec![7, 5, 3, 1]);
+    }
+
+    #[test]
+    fn multi_context_proof_reports_dilated_staleness() {
+        let m = Manifest::builtin();
+        let entry = &m.configs["mnist_fc4"];
+        let (findings, proof) = prove_config("mnist_fc4", entry, None, 0x1812_0116, 4);
+        let proof = proof.unwrap_or_else(|| panic!("no proof: {findings:?}"));
+        assert_eq!(proof.contexts, 4);
+        // floor([7,5,3,1] / 4): each tenant sees only its own updates
+        assert_eq!(proof.context_staleness, vec![1, 1, 0, 0]);
+        assert!(
+            findings.iter().any(|f| f.code == "proved-contexts"),
+            "multi-tenant proof must surface its own finding: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn faulted_context_fetch_yields_typed_finding() {
+        let pipe = Pipeline::new(3);
+        // alias context 2 onto bank 0: the finding names context 2
+        let f = prove_contexts_with("tiny", 3, 60, 4, |n| {
+            let c = pipe.context_of(n, 4);
+            Some(if c == 2 { 0 } else { c })
+        })
+        .expect("aliased fetch must fail the proof");
+        assert_eq!(f.code, "context-alias");
+        assert_eq!(f.severity, Severity::Error);
+        assert_eq!(f.context, Some(2));
+        // drop context 1's fetches: the finding names context 1
+        let f = prove_contexts_with("tiny", 3, 60, 4, |n| {
+            let c = pipe.context_of(n, 4);
+            if c == 1 {
+                None
+            } else {
+                Some(c)
+            }
+        })
+        .expect("skipped fetch must fail the proof");
+        assert_eq!(f.code, "context-skip");
+        assert_eq!(f.context, Some(1));
+        // the clean round-robin fetch proves out
+        assert!(prove_contexts_with("tiny", 3, 60, 4, |n| Some(pipe.context_of(n, 4))).is_none());
     }
 
     #[test]
     fn degenerate_layers_are_rejected_with_typed_finding() {
         let mut entry = Manifest::builtin().configs["tiny"].clone();
         entry.layers = vec![32];
-        let (findings, proof) = prove_config("tiny", &entry, None, 0);
+        let (findings, proof) = prove_config("tiny", &entry, None, 0, 1);
         assert!(proof.is_none());
         assert_eq!(findings[0].code, "bad-layers");
         assert_eq!(findings[0].severity, Severity::Error);
@@ -254,7 +382,7 @@ mod tests {
         // of 390/gcd(39,390) = 10, so 5 gives a fractional d_in
         let mut entry = Manifest::builtin().configs["timit"].clone();
         entry.gather_dout = Some(vec![5, 9]);
-        let (findings, proof) = prove_config("timit", &entry, None, 0);
+        let (findings, proof) = prove_config("timit", &entry, None, 0, 1);
         assert!(proof.is_none());
         assert_eq!(findings[0].code, "bad-dout");
     }
@@ -264,7 +392,7 @@ mod tests {
         let m = Manifest::builtin();
         let entry = &m.configs["tiny"];
         // requesting a 1-cycle audit must not produce a vacuous proof
-        let (_, proof) = prove_config("tiny", entry, Some(1), 0);
+        let (_, proof) = prove_config("tiny", entry, Some(1), 0, 1);
         assert!(proof.unwrap().audited_taus >= 2 * 2 + 2);
     }
 }

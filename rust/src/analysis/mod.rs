@@ -62,9 +62,10 @@ impl Severity {
     }
 }
 
-/// One typed analyzer finding. `junction` / `cycle` / `bank` carry the
-/// counterexample coordinates when the pass has them (the clash prover
-/// always points at the offending access).
+/// One typed analyzer finding. `junction` / `cycle` / `bank` /
+/// `context` carry the counterexample coordinates when the pass has
+/// them (the clash prover always points at the offending access; the
+/// multi-tenant audit names the offending context).
 #[derive(Clone, Debug)]
 pub struct Finding {
     /// Emitting pass (`clash`, `range`, `lint`).
@@ -83,6 +84,8 @@ pub struct Finding {
     pub cycle: Option<usize>,
     /// Counterexample memory bank, when the finding has one.
     pub bank: Option<usize>,
+    /// Offending tenant context, when the finding has one.
+    pub context: Option<usize>,
 }
 
 impl Finding {
@@ -104,6 +107,7 @@ impl Finding {
             junction: None,
             cycle: None,
             bank: None,
+            context: None,
         }
     }
 
@@ -122,6 +126,12 @@ impl Finding {
     /// Attach the counterexample memory bank.
     pub fn with_bank(mut self, b: usize) -> Finding {
         self.bank = Some(b);
+        self
+    }
+
+    /// Attach the offending tenant context.
+    pub fn with_context(mut self, c: usize) -> Finding {
+        self.context = Some(c);
         self
     }
 
@@ -145,6 +155,9 @@ impl Finding {
         }
         if let Some(b) = self.bank {
             m.insert("bank".to_string(), Json::Num(b as f64));
+        }
+        if let Some(c) = self.context {
+            m.insert("context".to_string(), Json::Num(c as f64));
         }
         Json::Obj(m)
     }
@@ -247,6 +260,10 @@ pub struct AnalyzeOptions {
     /// Seed of the pattern/parameter draw the range analysis inspects
     /// (the clash proof is seed-independent: it holds for every draw).
     pub seed: u64,
+    /// Tenant contexts to prove the multi-tenant schedule for (per-context
+    /// clash-freedom and the per-context staleness closed form). `1` =
+    /// the single-tenant pipeline, exactly today's proof.
+    pub contexts: usize,
 }
 
 impl Default for AnalyzeOptions {
@@ -256,6 +273,7 @@ impl Default for AnalyzeOptions {
             depth: None,
             input_range: None,
             seed: 0x1812_0116,
+            contexts: 1,
         }
     }
 }
@@ -266,7 +284,8 @@ pub fn analyze_config(name: &str, entry: &ConfigEntry, opts: &AnalyzeOptions) ->
     // deeper passes build NetConfig / patterns from the entry, which is
     // only meaningful when the structural lint is clean
     if !findings.iter().any(|f| f.severity == Severity::Error) {
-        let (clash_findings, _proof) = clash::prove_config(name, entry, opts.depth, opts.seed);
+        let (clash_findings, _proof) =
+            clash::prove_config(name, entry, opts.depth, opts.seed, opts.contexts);
         findings.extend(clash_findings);
         findings.extend(range::analyze_entry(
             name,

@@ -55,6 +55,10 @@ pub struct LoadSpec {
     /// Responses between pauses; 1 with a nonzero `think_time` is a
     /// uniform paced arrival, larger values are bursty arrivals.
     pub burst: usize,
+    /// Tenant contexts to spread the load across, round-robin per
+    /// request (clamped to what each model actually hosts). 1 = the
+    /// single-tenant load of earlier revisions.
+    pub contexts: usize,
 }
 
 impl Default for LoadSpec {
@@ -64,6 +68,7 @@ impl Default for LoadSpec {
             requests: 100,
             think_time: Duration::ZERO,
             burst: 1,
+            contexts: 1,
         }
     }
 }
@@ -77,6 +82,8 @@ pub struct LoadReport {
     pub workers: usize,
     /// Closed-loop clients that drove this model.
     pub clients: usize,
+    /// Tenant contexts the offered load was spread across.
+    pub contexts: usize,
     /// Requests served.
     pub served: u64,
     /// Submit attempts rejected with [`ServeError::Busy`] (each was
@@ -126,6 +133,7 @@ impl LoadReport {
         m.insert("model".to_string(), Json::Str(self.model.clone()));
         m.insert("workers".to_string(), Json::Num(self.workers as f64));
         m.insert("clients".to_string(), Json::Num(self.clients as f64));
+        m.insert("contexts".to_string(), Json::Num(self.contexts as f64));
         m.insert("served".to_string(), Json::Num(self.served as f64));
         m.insert("rejected".to_string(), Json::Num(self.rejected as f64));
         m.insert("wall_s".to_string(), Json::Num(self.wall.as_secs_f64()));
@@ -180,16 +188,20 @@ pub fn run_load(
         let mut handles = Vec::new();
         for (mi, model) in models.iter().enumerate() {
             let client = svc.client(model)?;
+            // spread requests across tenant contexts, clamped to what
+            // the model actually hosts
+            let ctxs = spec.contexts.clamp(1, client.contexts());
             for c in 0..spec.clients {
                 let client = client.clone();
                 handles.push(s.spawn(move || -> Result<()> {
                     let mut rng = Rng::new(seed ^ ((mi as u64) << 32) ^ c as u64);
                     let mut since_pause = 0usize;
-                    for _ in 0..spec.requests {
+                    for i in 0..spec.requests {
+                        let ctx = (c + i) % ctxs;
                         let x: Vec<f32> =
                             (0..client.features()).map(|_| rng.normal()).collect();
                         loop {
-                            match client.classify(x.clone()) {
+                            match client.classify_ctx(x.clone(), ctx) {
                                 Ok(p) => {
                                     anyhow::ensure!(
                                         p.class < client.classes(),
@@ -226,7 +238,7 @@ pub fn run_load(
             let met = svc
                 .metrics(m)
                 .ok_or_else(|| anyhow::anyhow!("no metrics for '{m}'"))?;
-            Ok(snapshot(m, workers, spec.clients, met, wall))
+            Ok(snapshot(m, workers, spec, met, wall))
         })
         .collect()
 }
@@ -234,7 +246,7 @@ pub fn run_load(
 fn snapshot(
     model: &str,
     workers: usize,
-    clients: usize,
+    spec: &LoadSpec,
     met: &ModelMetrics,
     wall: Duration,
 ) -> LoadReport {
@@ -242,7 +254,8 @@ fn snapshot(
     LoadReport {
         model: model.to_string(),
         workers,
-        clients,
+        clients: spec.clients,
+        contexts: spec.contexts.max(1),
         served,
         rejected: met.rejected.load(Ordering::Relaxed),
         wall,
@@ -276,7 +289,12 @@ pub fn bench_service(
     let specs = models
         .iter()
         .map(|m| {
-            model_spec(dir, m, 0.25, seed).map(|s| ModelSpec { quant, ..s })
+            // host as many parameter banks as the load will spread over
+            model_spec(dir, m, 0.25, seed).map(|s| ModelSpec {
+                quant,
+                contexts: load.contexts.max(1),
+                ..s
+            })
         })
         .collect::<Result<Vec<_>>>()?;
     let svc = InferenceService::start(
@@ -322,6 +340,10 @@ pub fn bench_json(scenarios: &[(usize, Vec<LoadReport>)]) -> Json {
         }
         let mut obj = BTreeMap::new();
         obj.insert("workers".to_string(), Json::Num(*workers as f64));
+        obj.insert(
+            "contexts".to_string(),
+            Json::Num(reports.first().map_or(1, |r| r.contexts) as f64),
+        );
         obj.insert("total_throughput_rps".to_string(), Json::Num(total));
         obj.insert(
             "models".to_string(),
@@ -396,6 +418,10 @@ pub struct SocketLoadSpec {
     /// the client writes the whole group before reading any response,
     /// which is the concurrency the server-side micro-batcher coalesces.
     pub pipeline: usize,
+    /// Tenant contexts to spread the pipelined groups across,
+    /// round-robin per group (clamped to what the server advertises for
+    /// each model in its health frame). 1 = single-tenant load.
+    pub contexts: usize,
 }
 
 impl Default for SocketLoadSpec {
@@ -404,6 +430,7 @@ impl Default for SocketLoadSpec {
             clients: 4,
             requests: 96,
             pipeline: 8,
+            contexts: 1,
         }
     }
 }
@@ -420,6 +447,9 @@ pub struct SocketLoadReport {
     /// [`SocketLoadSpec::pipeline`] clamped to this model's engine
     /// batch size).
     pub pipeline: usize,
+    /// Tenant contexts the groups were spread across (the requested
+    /// [`SocketLoadSpec::contexts`] clamped to what the server hosts).
+    pub contexts: usize,
     /// Samples served (responses received by the clients).
     pub served: u64,
     /// Pipelined groups retried after a `Busy` shed.
@@ -470,6 +500,7 @@ impl SocketLoadReport {
         m.insert("model".to_string(), Json::Str(self.model.clone()));
         m.insert("clients".to_string(), Json::Num(self.clients as f64));
         m.insert("pipeline".to_string(), Json::Num(self.pipeline as f64));
+        m.insert("contexts".to_string(), Json::Num(self.contexts as f64));
         m.insert("served".to_string(), Json::Num(self.served as f64));
         m.insert(
             "busy_retries".to_string(),
@@ -504,12 +535,13 @@ impl SocketLoadReport {
 pub fn classify_group_with_retry(
     net: &mut NetClient,
     model: &str,
+    context: u32,
     group: &[Vec<f32>],
     deadline: Option<Instant>,
 ) -> Result<(Vec<crate::net::NetPrediction>, u64)> {
     let mut busy_retries = 0u64;
     loop {
-        match net.classify_pipelined(model, group) {
+        match net.classify_pipelined_ctx(model, context, group) {
             Ok(preds) => return Ok((preds, busy_retries)),
             Err(NetClientError::Busy) => {
                 busy_retries += 1;
@@ -559,7 +591,7 @@ pub fn run_socket_load(
     // shed retries the *whole* group, could livelock against the
     // server's batcher queue cap). Computed once here; the client
     // threads and the report both read this value.
-    let mut dims: BTreeMap<&str, (usize, usize, usize)> = BTreeMap::new();
+    let mut dims: BTreeMap<&str, (usize, usize, usize, usize)> = BTreeMap::new();
     for m in models {
         let info = health
             .models
@@ -572,6 +604,9 @@ pub fn run_socket_load(
                 info.features as usize,
                 info.classes as usize,
                 spec.pipeline.min(info.batch as usize).max(1),
+                // tenant contexts to round-robin the groups across,
+                // clamped to what the server actually hosts
+                spec.contexts.clamp(1, (info.contexts as usize).max(1)),
             ),
         );
     }
@@ -585,7 +620,7 @@ pub fn run_socket_load(
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::new();
         for (mi, model) in models.iter().enumerate() {
-            let (features, classes, pipeline) = dims[model.as_str()];
+            let (features, classes, pipeline, ctxs) = dims[model.as_str()];
             for c in 0..spec.clients {
                 let hist = &hists[model.as_str()];
                 let served = &served[model.as_str()];
@@ -594,14 +629,19 @@ pub fn run_socket_load(
                     let mut net = NetClient::connect(addr)?;
                     let mut rng = Rng::new(seed ^ ((mi as u64) << 32) ^ c as u64);
                     let mut remaining = spec.requests;
+                    let mut group_no = 0usize;
                     while remaining > 0 {
                         let k = pipeline.min(remaining);
+                        // each pipelined group targets one tenant bank;
+                        // successive groups rotate through the contexts
+                        let ctx = ((c + group_no) % ctxs) as u32;
+                        group_no += 1;
                         let group: Vec<Vec<f32>> = (0..k)
                             .map(|_| (0..features).map(|_| rng.normal()).collect())
                             .collect();
                         let t = Instant::now();
                         let (preds, retries) =
-                            classify_group_with_retry(&mut net, model, &group, None)?;
+                            classify_group_with_retry(&mut net, model, ctx, &group, None)?;
                         for p in &preds {
                             anyhow::ensure!(
                                 p.class < classes,
@@ -643,6 +683,7 @@ pub fn run_socket_load(
                 clients: spec.clients,
                 // the group size actually driven (clamped once, in dims)
                 pipeline: dims[m.as_str()].2,
+                contexts: dims[m.as_str()].3,
                 served,
                 busy_retries: busy[m.as_str()].load(Ordering::Relaxed),
                 wall,
@@ -690,6 +731,7 @@ pub fn net_bench_json(
         let mut obj = BTreeMap::new();
         obj.insert("clients".to_string(), Json::Num(spec.clients as f64));
         obj.insert("pipeline".to_string(), Json::Num(spec.pipeline as f64));
+        obj.insert("contexts".to_string(), Json::Num(spec.contexts.max(1) as f64));
         obj.insert("total_throughput_rps".to_string(), Json::Num(total));
         obj.insert(
             "mean_coalesced_batch".to_string(),

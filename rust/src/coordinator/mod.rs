@@ -27,7 +27,7 @@ pub mod server;
 pub mod trainer;
 
 pub use server::{
-    Client, InferenceServer, InferenceService, LatencyHistogram, ModelMetrics, ModelSpec,
-    PendingPrediction, Prediction, ServeError, ServerConfig,
+    context_params, Client, InferenceServer, InferenceService, LatencyHistogram, ModelMetrics,
+    ModelSpec, PendingPrediction, Prediction, ServeError, ServerConfig,
 };
 pub use trainer::{PipelinedTrainSession, TrainSession, TrainStepOut};

@@ -38,6 +38,17 @@
 //!   saturating integer kernels on raw words (argmax included — no
 //!   dequantization on the reply path), and saturation events surface in
 //!   [`ModelMetrics::quant_saturations`]. CLI: `serve --quant Qm.n`.
+//! - **Multi-tenant contexts.** A model may host `C` tenant contexts
+//!   over one shared pattern ([`ModelSpec::contexts`]): context 0
+//!   serves the base parameters (the spec's, or the default He draw)
+//!   and every further context an independently drawn per-tenant
+//!   variant — all resident at once, the software analogue of the
+//!   [`crate::hw::context`] bank RAM. Requests route by
+//!   `(model, context)` ([`Client::classify_ctx`]); at each flush a
+//!   worker groups the collected rows by owning context and executes
+//!   each group against that context's *fetched* parameter bank, so
+//!   tenants interleave through one worker pool with no model swapping
+//!   (CLI: `serve --contexts C`).
 //!
 //! Implemented on std threads + channels (tokio is unavailable in the
 //! offline build; the request path is compute-bound, not I/O-bound).
@@ -141,10 +152,13 @@ pub struct Prediction {
     pub batch_occupancy: usize,
     /// Index of the worker (within the model's pool) that ran the batch.
     pub worker: usize,
+    /// Tenant context whose parameter bank served this request.
+    pub context: usize,
 }
 
 struct Request {
     features: Vec<f32>,
+    context: usize,
     submitted: Instant,
     reply: Sender<Prediction>,
 }
@@ -370,8 +384,10 @@ struct PreparedModel {
     layers: Vec<usize>,
     batch: usize,
     masks: Arc<Vec<Value>>,
-    params: Arc<Vec<Value>>,
-    qnet: Option<Arc<FixedSparseNet>>,
+    /// Parameter bank: one entry per tenant context.
+    params: Vec<Arc<Vec<Value>>>,
+    /// Quantized-net bank (one per context) when serving Qm.n.
+    qnets: Option<Vec<Arc<FixedSparseNet>>>,
 }
 
 /// Shared state of one served model: its shards, shape info and metrics.
@@ -380,6 +396,7 @@ struct ModelCore {
     batch: usize,
     features: usize,
     classes: usize,
+    contexts: usize,
     shards: Vec<Shard>,
     metrics: ModelMetrics,
     stop: AtomicBool,
@@ -455,6 +472,11 @@ impl Client {
         self.core.batch
     }
 
+    /// Tenant contexts this model hosts (`1` = single-tenant).
+    pub fn contexts(&self) -> usize {
+        self.core.contexts
+    }
+
     /// Submit one feature vector without blocking for the result.
     ///
     /// Routing: the shallowest shard is tried first (load balances
@@ -470,10 +492,32 @@ impl Client {
     /// # Panics
     /// If `features.len()` does not match the model's input dimension.
     pub fn submit(&self, features: Vec<f32>) -> Result<PendingPrediction, ServeError> {
+        self.submit_ctx(features, 0)
+    }
+
+    /// Submit one feature vector for tenant context `context` without
+    /// blocking for the result; see [`Client::submit`] for the routing
+    /// and backpressure contract (contexts share the model's shards —
+    /// the worker groups each flush by context at execution time).
+    ///
+    /// # Panics
+    /// If `features.len()` does not match the model's input dimension,
+    /// or `context >= self.contexts()`.
+    pub fn submit_ctx(
+        &self,
+        features: Vec<f32>,
+        context: usize,
+    ) -> Result<PendingPrediction, ServeError> {
         assert_eq!(features.len(), self.core.features, "feature dim mismatch");
+        assert!(
+            context < self.core.contexts,
+            "context {context} out of range (model hosts {})",
+            self.core.contexts
+        );
         let (reply_tx, reply_rx) = mpsc::channel();
         let mut req = Request {
             features,
+            context,
             submitted: Instant::now(),
             reply: reply_tx,
         };
@@ -518,6 +562,20 @@ impl Client {
     pub fn classify(&self, features: Vec<f32>) -> Result<Prediction, ServeError> {
         self.submit(features)?.wait()
     }
+
+    /// Submit for tenant context `context` and block for the prediction
+    /// ([`Client::submit_ctx`] + [`PendingPrediction::wait`]).
+    ///
+    /// # Panics
+    /// If `features.len()` does not match the model's input dimension,
+    /// or `context >= self.contexts()`.
+    pub fn classify_ctx(
+        &self,
+        features: Vec<f32>,
+        context: usize,
+    ) -> Result<Prediction, ServeError> {
+        self.submit_ctx(features, context)?.wait()
+    }
 }
 
 /// One model (manifest config + connection pattern + optional trained
@@ -537,22 +595,34 @@ pub struct ModelSpec {
     /// the saturating integer kernels instead of a compiled f32
     /// `forward` program (CLI: `serve --quant Qm.n`). `None` serves f32.
     pub quant: Option<QFormat>,
+    /// Tenant contexts this model hosts (clamped up to 1). Context 0
+    /// serves [`ModelSpec::params`] (or the default He draw); contexts
+    /// `1..C` serve independent per-tenant draws over the shared
+    /// pattern — see [`context_params`] (CLI: `serve --contexts C`).
+    pub contexts: usize,
 }
 
 impl ModelSpec {
-    /// Spec with He-initialized parameters, f32 serving.
+    /// Spec with He-initialized parameters, f32 serving, one context.
     pub fn new(config: impl Into<String>, pattern: NetPattern) -> ModelSpec {
         ModelSpec {
             config: config.into(),
             pattern,
             params: None,
             quant: None,
+            contexts: 1,
         }
     }
 
     /// Serve this model quantized in `fmt` (see [`ModelSpec::quant`]).
     pub fn with_quant(mut self, fmt: QFormat) -> ModelSpec {
         self.quant = Some(fmt);
+        self
+    }
+
+    /// Host `contexts` tenant contexts (see [`ModelSpec::contexts`]).
+    pub fn with_contexts(mut self, contexts: usize) -> ModelSpec {
+        self.contexts = contexts;
         self
     }
 }
@@ -641,36 +711,49 @@ impl InferenceService {
                     .map(|p| Value::F32(p.mask(), vec![p.shape.n_right, p.shape.n_left]))
                     .collect(),
             );
-            let params = Arc::new(init_params(&layers, &spec.pattern, spec.params));
-            // quantized serving: compact + quantize the parameters ONCE
-            // here, so workers share one immutable fixed-point net
-            // instead of re-quantizing per batch
-            let qnet: Option<Arc<FixedSparseNet>> = match spec.quant {
+            // per-context parameter bank: context 0 is the base, each
+            // further context its own draw over the shared pattern
+            let contexts = spec.contexts.max(1);
+            let mut base = spec.params;
+            let params: Vec<Arc<Vec<Value>>> = (0..contexts)
+                .map(|ctx| Arc::new(context_params(&layers, &spec.pattern, base.take(), ctx)))
+                .collect();
+            // quantized serving: compact + quantize every context's
+            // parameters ONCE here, so workers share immutable
+            // fixed-point nets instead of re-quantizing per batch; the
+            // clip and range gates apply per context
+            let qnets: Option<Vec<Arc<FixedSparseNet>>> = match spec.quant {
                 Some(fmt) => {
-                    let net = quantized_net(&spec.pattern, &params, fmt)?;
-                    anyhow::ensure!(
-                        net.clipped_params() == 0,
-                        "'{}': {} parameters clip at the {fmt} range — the format lacks \
-                         integer headroom for this model's weights; pick a wider Qm.n",
-                        spec.config,
-                        net.clipped_params()
-                    );
-                    // static range certification on the exact net being
-                    // served (cheap: a few interval propagations): the
-                    // format must admit a nonempty saturation-free input
-                    // range, or every request would clip
-                    let (findings, _cert) =
-                        crate::analysis::range::analyze_qnet(&spec.config, &net, None);
-                    if let Some(f) = findings
-                        .iter()
-                        .find(|f| f.severity == crate::analysis::Severity::Error)
-                    {
-                        anyhow::bail!(
-                            "'{}': static range analysis rejects serving at {fmt}: {f}",
-                            spec.config
+                    let mut nets = Vec::with_capacity(contexts);
+                    for (ctx, p) in params.iter().enumerate() {
+                        let net = quantized_net(&spec.pattern, p, fmt)?;
+                        anyhow::ensure!(
+                            net.clipped_params() == 0,
+                            "'{}' context {ctx}: {} parameters clip at the {fmt} range — the \
+                             format lacks integer headroom for this tenant's weights; pick a \
+                             wider Qm.n",
+                            spec.config,
+                            net.clipped_params()
                         );
+                        // static range certification on the exact net being
+                        // served (cheap: a few interval propagations): the
+                        // format must admit a nonempty saturation-free input
+                        // range, or every request would clip
+                        let (findings, _cert) =
+                            crate::analysis::range::analyze_qnet(&spec.config, &net, None);
+                        if let Some(f) = findings
+                            .iter()
+                            .find(|f| f.severity == crate::analysis::Severity::Error)
+                        {
+                            anyhow::bail!(
+                                "'{}' context {ctx}: static range analysis rejects serving \
+                                 at {fmt}: {f}",
+                                spec.config
+                            );
+                        }
+                        nets.push(Arc::new(net));
                     }
-                    Some(Arc::new(net))
+                    Some(nets)
                 }
                 None => None,
             };
@@ -680,7 +763,7 @@ impl InferenceService {
                 batch: entry.batch,
                 masks,
                 params,
-                qnet,
+                qnets,
             });
         }
         let mut prev_threads = None;
@@ -699,7 +782,7 @@ impl InferenceService {
             batch,
             masks,
             params,
-            qnet,
+            qnets,
         } in prepared
         {
             let core = Arc::new(ModelCore {
@@ -707,6 +790,7 @@ impl InferenceService {
                 batch,
                 features: layers[0],
                 classes: *layers.last().unwrap(),
+                contexts: params.len(),
                 shards: (0..workers_per_model)
                     .map(|_| Shard::new(cfg.queue_depth.max(1)))
                     .collect(),
@@ -719,12 +803,12 @@ impl InferenceService {
                 let core = Arc::clone(&core);
                 let dir = artifacts_dir.clone();
                 let manifest = Arc::clone(&manifest);
-                let params = Arc::clone(&params);
+                let params = params.clone();
                 let masks = Arc::clone(&masks);
-                let qnet = qnet.clone();
+                let qnets = qnets.clone();
                 let max_wait = cfg.max_wait;
                 handles.push(std::thread::spawn(move || {
-                    worker_loop(core, w, dir, manifest, params, masks, qnet, max_wait, ready_tx)
+                    worker_loop(core, w, dir, manifest, params, masks, qnets, max_wait, ready_tx)
                 }));
             }
             models.insert(core.name.clone(), core);
@@ -852,13 +936,9 @@ impl Drop for ShardCloseGuard<'_> {
     }
 }
 
-/// He-initialize `w_i, b_i` per junction with excluded edges pre-zeroed,
-/// unless externally trained parameters are supplied.
-fn init_params(layers: &[usize], pattern: &NetPattern, params: Option<Vec<Value>>) -> Vec<Value> {
-    if let Some(p) = params {
-        return p;
-    }
-    let mut rng = Rng::new(0xD15EA5E);
+/// He-initialize `w_i, b_i` per junction with excluded edges pre-zeroed.
+fn he_params(layers: &[usize], pattern: &NetPattern, seed: u64) -> Vec<Value> {
+    let mut rng = Rng::new(seed);
     let mut p = Vec::new();
     for i in 1..layers.len() {
         let (nl, nr) = (layers[i - 1], layers[i]);
@@ -869,6 +949,30 @@ fn init_params(layers: &[usize], pattern: &NetPattern, params: Option<Vec<Value>
         p.push(Value::F32(vec![0.1; nr], vec![nr]));
     }
     p
+}
+
+/// The parameters tenant context `ctx` of a model serves: context 0 is
+/// the base (externally trained `base` parameters when supplied, else
+/// the default He draw), and every further context an independent He
+/// draw from a context-salted seed — a stand-in for per-tenant
+/// fine-tuned variants over the shared pattern. Public so isolation
+/// tests can start a single-tenant twin service from exactly the
+/// parameters a multi-context service gives tenant `ctx` and assert
+/// routing parity.
+pub fn context_params(
+    layers: &[usize],
+    pattern: &NetPattern,
+    base: Option<Vec<Value>>,
+    ctx: usize,
+) -> Vec<Value> {
+    match (base, ctx) {
+        (Some(p), 0) => p,
+        (_, c) => he_params(
+            layers,
+            pattern,
+            0xD15EA5E ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        ),
+    }
 }
 
 /// Compact + quantize a model's dense parameters (w/b interleaved, the
@@ -890,19 +994,24 @@ fn quantized_net(
 }
 
 /// How one worker executes a flushed batch: through a compiled backend
-/// `forward` program (f32), or through the model's shared quantized net
-/// (Qm.n fixed point — no engine, no compiled program).
+/// `forward` program (f32), or through the model's shared quantized
+/// nets (Qm.n fixed point — no engine, no compiled program). Both paths
+/// hold a *bank* of per-context state, indexed by the context that owns
+/// the rows being executed — fetched per flush group, never swapped.
 enum ExecPath {
-    /// Compiled f32 path; positional inputs are built once, only the
-    /// trailing x tensor is rewritten per flush.
+    /// Compiled f32 path: one compiled program shared by all contexts,
+    /// one positional input list per context (holding that tenant's
+    /// parameters); only the fetched context's trailing x tensor is
+    /// rewritten per flush.
     Prog {
         prog: Program,
-        inputs: Vec<Value>,
+        inputs: Vec<Vec<Value>>,
         x_idx: usize,
     },
-    /// Fixed-point path with its reusable quantized input buffer.
+    /// Fixed-point path: per-context quantized nets and one reusable
+    /// quantized input buffer.
     Quant {
-        net: Arc<FixedSparseNet>,
+        nets: Vec<Arc<FixedSparseNet>>,
         xq: Vec<i32>,
     },
 }
@@ -936,16 +1045,16 @@ fn worker_loop(
     w: usize,
     artifacts_dir: PathBuf,
     manifest: Arc<Manifest>,
-    params: Arc<Vec<Value>>,
+    params: Vec<Arc<Vec<Value>>>,
     masks: Arc<Vec<Value>>,
-    qnet: Option<Arc<FixedSparseNet>>,
+    qnets: Option<Vec<Arc<FixedSparseNet>>>,
     max_wait: Duration,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
     let (batch, features, classes) = (core.batch, core.features, core.classes);
-    let mut exec = match qnet {
-        Some(net) => ExecPath::Quant {
-            net,
+    let mut exec = match qnets {
+        Some(nets) => ExecPath::Quant {
+            nets,
             xq: vec![0i32; batch * features],
         },
         None => {
@@ -966,14 +1075,21 @@ fn worker_loop(
                 }
             };
             // weights and masks are immutable and `Program::run` only
-            // borrows them, so build the positional input list once and
-            // rewrite only the trailing x tensor per flush — no
-            // per-batch parameter clones
-            let mut inputs: Vec<Value> = Vec::with_capacity(params.len() + masks.len() + 1);
-            inputs.extend(params.iter().cloned());
-            inputs.extend(masks.iter().cloned());
-            inputs.push(Value::F32(vec![0f32; batch * features], vec![batch, features]));
-            let x_idx = inputs.len() - 1;
+            // borrows them, so build one positional input list per
+            // context once and rewrite only the fetched context's
+            // trailing x tensor per flush — no per-batch parameter
+            // clones, no bank swapping
+            let x_idx = params[0].len() + masks.len();
+            let inputs: Vec<Vec<Value>> = params
+                .iter()
+                .map(|p| {
+                    let mut v: Vec<Value> = Vec::with_capacity(p.len() + masks.len() + 1);
+                    v.extend(p.iter().cloned());
+                    v.extend(masks.iter().cloned());
+                    v.push(Value::F32(vec![0f32; batch * features], vec![batch, features]));
+                    v
+                })
+                .collect();
             ExecPath::Prog {
                 prog,
                 inputs,
@@ -1025,62 +1141,75 @@ fn worker_loop(
             // even while this worker's own shard stays quiet
             my.wait_nonempty((deadline - now).min(STEAL_POLL));
         }
-        // assemble the padded batch and execute once
-        let occupancy = pending.len();
+        // fan the flush out per tenant context: rows are grouped by the
+        // context that owns them and each group executes as one padded
+        // batch against that context's fetched state bank — requests
+        // never cross banks, and the groups run back to back with no
+        // idle time between tenants
         let m = &core.metrics;
-        let best_classes: Vec<usize> = match &mut exec {
-            ExecPath::Prog {
-                prog,
-                inputs,
-                x_idx,
-            } => {
-                if let Value::F32(x, _) = &mut inputs[*x_idx] {
-                    for (i, req) in pending.iter().enumerate() {
-                        x[i * features..(i + 1) * features].copy_from_slice(&req.features);
+        let mut groups: BTreeMap<usize, Vec<Request>> = BTreeMap::new();
+        for req in pending.drain(..) {
+            groups.entry(req.context).or_default().push(req);
+        }
+        for (ctx, group) in groups {
+            let occupancy = group.len();
+            let best_classes: Vec<usize> = match &mut exec {
+                ExecPath::Prog {
+                    prog,
+                    inputs,
+                    x_idx,
+                } => {
+                    let ctx_inputs = &mut inputs[ctx];
+                    if let Value::F32(x, _) = &mut ctx_inputs[*x_idx] {
+                        for (i, req) in group.iter().enumerate() {
+                            x[i * features..(i + 1) * features].copy_from_slice(&req.features);
+                        }
+                        // zero the tail so rows left over from a fuller flush
+                        // never leak into this batch's padding
+                        x[occupancy * features..].fill(0.0);
                     }
-                    // zero the tail so rows left over from a fuller flush
-                    // never leak into this batch's padding
-                    x[occupancy * features..].fill(0.0);
+                    let out = prog.run(ctx_inputs)?;
+                    argmax_rows(out[0].as_f32()?, occupancy, classes)
                 }
-                let out = prog.run(inputs)?;
-                argmax_rows(out[0].as_f32()?, occupancy, classes)
-            }
-            ExecPath::Quant { net, xq } => {
-                let fmt = net.fmt;
-                // input clips count as saturations: a clipped feature
-                // violates the error bound the same way a saturated
-                // MAC does
-                let mut clipped = 0usize;
-                for (i, req) in pending.iter().enumerate() {
-                    for (d, &v) in xq[i * features..(i + 1) * features]
-                        .iter_mut()
-                        .zip(&req.features)
-                    {
-                        *d = fmt.quantize_counted(v, &mut clipped);
+                ExecPath::Quant { nets, xq } => {
+                    let net = &nets[ctx];
+                    let fmt = net.fmt;
+                    // input clips count as saturations: a clipped feature
+                    // violates the error bound the same way a saturated
+                    // MAC does
+                    let mut clipped = 0usize;
+                    for (i, req) in group.iter().enumerate() {
+                        for (d, &v) in xq[i * features..(i + 1) * features]
+                            .iter_mut()
+                            .zip(&req.features)
+                        {
+                            *d = fmt.quantize_counted(v, &mut clipped);
+                        }
                     }
+                    xq[occupancy * features..].fill(0);
+                    let (logits, sats) = net.logits_q(xq, batch);
+                    if sats + clipped > 0 {
+                        m.quant_saturations
+                            .fetch_add((sats + clipped) as u64, Ordering::Relaxed);
+                    }
+                    argmax_rows(&logits, occupancy, classes)
                 }
-                xq[occupancy * features..].fill(0);
-                let (logits, sats) = net.logits_q(xq, batch);
-                if sats + clipped > 0 {
-                    m.quant_saturations
-                        .fetch_add((sats + clipped) as u64, Ordering::Relaxed);
-                }
-                argmax_rows(&logits, occupancy, classes)
+            };
+            m.requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+            m.batches.fetch_add(1, Ordering::Relaxed);
+            m.padded_rows.fetch_add((batch - occupancy) as u64, Ordering::Relaxed);
+            m.occupancy[occupancy - 1].fetch_add(1, Ordering::Relaxed);
+            for (req, best) in group.into_iter().zip(best_classes) {
+                let latency = req.submitted.elapsed();
+                m.latency.record(latency);
+                let _ = req.reply.send(Prediction {
+                    class: best,
+                    latency,
+                    batch_occupancy: occupancy,
+                    worker: w,
+                    context: ctx,
+                });
             }
-        };
-        m.requests.fetch_add(occupancy as u64, Ordering::Relaxed);
-        m.batches.fetch_add(1, Ordering::Relaxed);
-        m.padded_rows.fetch_add((batch - occupancy) as u64, Ordering::Relaxed);
-        m.occupancy[occupancy - 1].fetch_add(1, Ordering::Relaxed);
-        for (req, best) in pending.drain(..).zip(best_classes) {
-            let latency = req.submitted.elapsed();
-            m.latency.record(latency);
-            let _ = req.reply.send(Prediction {
-                class: best,
-                latency,
-                batch_occupancy: occupancy,
-                worker: w,
-            });
         }
     }
 }
@@ -1108,6 +1237,7 @@ impl InferenceServer {
                 pattern: pattern.clone(),
                 params,
                 quant: None,
+                contexts: 1,
             }],
             cfg,
         )?;
@@ -1142,6 +1272,7 @@ mod tests {
         (
             Request {
                 features: vec![0.0; 4],
+                context: 0,
                 submitted: Instant::now(),
                 reply: tx,
             },

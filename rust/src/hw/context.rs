@@ -1,0 +1,307 @@
+//! Per-context state banks: the multi-tenant context RAM.
+//!
+//! The paper's junction pipeline (Sec. III-A) time-multiplexes one set of
+//! arithmetic units across junction cycles; this module pushes the same
+//! idea one axis further, the way micro-blossom's `contextId` /
+//! `contextDepth` RAM does for its dual-stage pipeline: every piece of
+//! mutable pipeline state (weights, optimizer accumulators, version
+//! counters) is held in `C` banks indexed by a [`ContextId`], and each
+//! cycle *fetches* the bank of the context that owns the cycle's input
+//! instead of swapping state in and out. `C` independent tenants then
+//! interleave through one junction schedule with zero idle cycles
+//! between them.
+//!
+//! Correctness of everything built on top reduces to one invariant: a
+//! fetch for context `c` must hit bank `c`, every time. [`ContextBank`]
+//! therefore keeps a log of `(requested, effective)` bank pairs and
+//! [`ContextBank::audit`] replays it, returning a typed
+//! [`ContextError`] that names the offending context on the first
+//! violation. The `#[doc(hidden)]` fault hooks ([`ContextFault`]) exist
+//! so the isolation test battery can prove the audit is non-vacuous:
+//! aliasing two contexts onto one bank, or dropping a context's
+//! fetches, must be *caught*, not survived.
+
+use std::fmt;
+
+/// Identifier of a tenant context: dense, 0-based, `< contexts`.
+pub type ContextId = usize;
+
+/// A deliberately injected context-fetch defect (test-only hook; see the
+/// module docs). Installed via [`ContextBank::inject_fault`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContextFault {
+    /// Fetches for `from` silently land on `to`'s bank — two tenants
+    /// aliased onto one set of weights.
+    Alias {
+        /// The context whose fetches are misrouted.
+        from: ContextId,
+        /// The bank that absorbs them.
+        to: ContextId,
+    },
+    /// Fetches for `context` are dropped entirely — the tenant's cycles
+    /// never reach its bank.
+    Skip {
+        /// The context whose fetches are dropped.
+        context: ContextId,
+    },
+}
+
+/// Typed context-isolation violation. The fetch-discipline variants
+/// name the offending context, so audits can point at the tenant whose
+/// state was corrupted (or starved) rather than just failing globally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContextError {
+    /// A fetch for `requested` hit bank `effective` instead.
+    Aliased {
+        /// The context that issued the fetch.
+        requested: ContextId,
+        /// The bank the fetch actually landed on.
+        effective: ContextId,
+    },
+    /// A fetch for `context` was dropped (the bank was never reached).
+    Skipped {
+        /// The context whose fetch was dropped.
+        context: ContextId,
+    },
+    /// A context id outside the configured bank count was used.
+    OutOfRange {
+        /// The offending context id.
+        context: ContextId,
+        /// The configured number of banks.
+        contexts: usize,
+    },
+    /// The measured per-context staleness diverged from the
+    /// `floor((2(L-i)+1)/C)` closed form (a schedule defect, not a
+    /// single tenant's).
+    StalenessLaw {
+        /// Junction (1-based) where the divergence appeared.
+        junction: usize,
+        /// Measured per-context staleness.
+        measured: usize,
+        /// Closed-form expectation.
+        expected: usize,
+    },
+}
+
+impl ContextError {
+    /// The context this violation indicts (for `Aliased`, the
+    /// requester); `None` for schedule-wide defects.
+    pub fn context(&self) -> Option<ContextId> {
+        match *self {
+            ContextError::Aliased { requested, .. } => Some(requested),
+            ContextError::Skipped { context } => Some(context),
+            ContextError::OutOfRange { context, .. } => Some(context),
+            ContextError::StalenessLaw { .. } => None,
+        }
+    }
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ContextError::Aliased {
+                requested,
+                effective,
+            } => write!(
+                f,
+                "context {requested} aliased onto bank {effective}: tenant isolation violated"
+            ),
+            ContextError::Skipped { context } => {
+                write!(f, "context {context} fetch was skipped: tenant starved")
+            }
+            ContextError::OutOfRange { context, contexts } => {
+                write!(f, "context {context} out of range (contexts = {contexts})")
+            }
+            ContextError::StalenessLaw {
+                junction,
+                measured,
+                expected,
+            } => write!(
+                f,
+                "per-context staleness at junction {junction} measured {measured}, \
+                 closed form says {expected}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ContextError {}
+
+/// `C` banks of per-context pipeline state, fetched per cycle.
+///
+/// The bank is deliberately dumb: it owns the state, routes each fetch,
+/// and remembers where every fetch went. Whoever drives the pipeline
+/// (e.g. [`crate::nn::pipeline::MultiPipelinedTrainer`]) calls
+/// [`ContextBank::fetch_mut`] once per context cycle and
+/// [`ContextBank::audit`] at the end of a run.
+#[derive(Debug)]
+pub struct ContextBank<T> {
+    banks: Vec<T>,
+    faults: Vec<ContextFault>,
+    /// Every *distinct* route a fetch took: (requested, effective).
+    /// Bounded by contexts², so the log survives arbitrarily long runs.
+    routes: Vec<(ContextId, ContextId)>,
+    /// Distinct requested ids whose fetch was dropped.
+    skipped: Vec<ContextId>,
+    fetches: u64,
+}
+
+impl<T> ContextBank<T> {
+    /// Wrap per-context state, one entry per context (must be non-empty).
+    pub fn new(banks: Vec<T>) -> ContextBank<T> {
+        assert!(!banks.is_empty(), "context bank needs at least one bank");
+        ContextBank {
+            banks,
+            faults: Vec::new(),
+            routes: Vec::new(),
+            skipped: Vec::new(),
+            fetches: 0,
+        }
+    }
+
+    /// Number of contexts (= banks).
+    pub fn contexts(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Read-only view of bank `ctx` (no routing, no logging; for
+    /// inspection and end-of-run readout).
+    pub fn peek(&self, ctx: ContextId) -> Option<&T> {
+        self.banks.get(ctx)
+    }
+
+    /// Mutable view of bank `ctx` without the fetch path (setup only).
+    pub fn peek_mut(&mut self, ctx: ContextId) -> Option<&mut T> {
+        self.banks.get_mut(ctx)
+    }
+
+    /// Iterate all banks in context order (inspection).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.banks.iter()
+    }
+
+    /// The per-cycle fetch: route `ctx` through the (possibly faulted)
+    /// selector, log where it landed, and hand out that bank. Returns
+    /// `None` when the fetch is dropped (a [`ContextFault::Skip`]) or
+    /// `ctx` is out of range — both recorded for [`ContextBank::audit`].
+    pub fn fetch_mut(&mut self, ctx: ContextId) -> Option<&mut T> {
+        let mut effective = ctx;
+        for fault in &self.faults {
+            match *fault {
+                ContextFault::Alias { from, to } if from == effective => effective = to,
+                ContextFault::Skip { context } if context == ctx => {
+                    if !self.skipped.contains(&ctx) {
+                        self.skipped.push(ctx);
+                    }
+                    return None;
+                }
+                _ => {}
+            }
+        }
+        self.fetches += 1;
+        if !self.routes.contains(&(ctx, effective)) {
+            self.routes.push((ctx, effective));
+        }
+        self.banks.get_mut(effective)
+    }
+
+    /// Fetches routed so far (skipped fetches not included).
+    pub fn fetches(&self) -> u64 {
+        self.fetches
+    }
+
+    /// Replay the fetch log: every fetch must have hit its own bank and
+    /// none may have been dropped. Returns a violation, naming the
+    /// offending context.
+    pub fn audit(&self) -> Result<(), ContextError> {
+        if let Some(&context) = self.skipped.first() {
+            return Err(ContextError::Skipped { context });
+        }
+        for &(requested, effective) in &self.routes {
+            if requested >= self.banks.len() {
+                return Err(ContextError::OutOfRange {
+                    context: requested,
+                    contexts: self.banks.len(),
+                });
+            }
+            if requested != effective {
+                return Err(ContextError::Aliased {
+                    requested,
+                    effective,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Install a context-fetch defect (test-only hook, kept out of the
+    /// rendered docs; see the module docs on non-vacuity).
+    #[doc(hidden)]
+    pub fn inject_fault(&mut self, fault: ContextFault) {
+        self.faults.push(fault);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_fetches_audit_clean() {
+        let mut bank = ContextBank::new(vec![0u32, 0, 0]);
+        for cycle in 0..12 {
+            let ctx = cycle % 3;
+            *bank.fetch_mut(ctx).unwrap() += 1;
+        }
+        assert_eq!(bank.fetches(), 12);
+        bank.audit().unwrap();
+        for c in 0..3 {
+            assert_eq!(*bank.peek(c).unwrap(), 4, "each bank fetched equally");
+        }
+    }
+
+    #[test]
+    fn alias_fault_is_caught_and_names_the_context() {
+        let mut bank = ContextBank::new(vec![0u32, 0]);
+        bank.inject_fault(ContextFault::Alias { from: 1, to: 0 });
+        *bank.fetch_mut(0).unwrap() += 1;
+        *bank.fetch_mut(1).unwrap() += 1; // lands on bank 0
+        assert_eq!(*bank.peek(0).unwrap(), 2, "bank 0 absorbed both");
+        assert_eq!(*bank.peek(1).unwrap(), 0, "bank 1 starved");
+        let err = bank.audit().unwrap_err();
+        assert_eq!(
+            err,
+            ContextError::Aliased {
+                requested: 1,
+                effective: 0
+            }
+        );
+        assert_eq!(err.context(), Some(1));
+    }
+
+    #[test]
+    fn skip_fault_is_caught_and_names_the_context() {
+        let mut bank = ContextBank::new(vec![(), (), ()]);
+        bank.inject_fault(ContextFault::Skip { context: 2 });
+        assert!(bank.fetch_mut(0).is_some());
+        assert!(bank.fetch_mut(2).is_none());
+        let err = bank.audit().unwrap_err();
+        assert_eq!(err, ContextError::Skipped { context: 2 });
+        assert_eq!(err.context(), Some(2));
+    }
+
+    #[test]
+    fn out_of_range_fetch_is_reported() {
+        let mut bank = ContextBank::new(vec![0u8]);
+        assert!(bank.fetch_mut(3).is_none());
+        // the fetch was logged (requested 3, routed to nothing valid)
+        let err = bank.audit().unwrap_err();
+        assert_eq!(
+            err,
+            ContextError::OutOfRange {
+                context: 3,
+                contexts: 1
+            }
+        );
+    }
+}

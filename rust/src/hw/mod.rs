@@ -16,9 +16,14 @@
 //!   point (bit-identical to the `nn::fixed` batch kernels),
 //! - [`pipeline`]: L-stage junction pipelining + FF/BP/UP operational
 //!   parallelism (Fig. 2c), throughput/latency/staleness accounting,
+//!   including the per-context (multi-tenant) schedule audit,
+//! - [`context`]: per-context state banks (the multi-tenant context RAM:
+//!   C tenants interleave through one junction schedule, each cycle
+//!   fetching its tenant's bank), with an audited fetch log,
 //! - [`storage`]: the Table-I storage cost model.
 
 pub mod banked;
+pub mod context;
 pub mod junction;
 pub mod memory;
 pub mod pipeline;

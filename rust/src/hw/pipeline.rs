@@ -12,8 +12,19 @@
 //! The scheduler also derives the *weight staleness* of Sec. III-D: FF_i
 //! reads weights 2(L-i)+1 updates older than the ones BP_i reads for the
 //! same input — which is exactly the activation queue depth of Table I.
+//!
+//! The same timetable carries a *context* dimension (see
+//! [`crate::hw::context`]): under round-robin admission over `C` tenant
+//! contexts, input `n` belongs to context `n mod C`, every context's op
+//! pattern is the single-tenant schedule dilated by `C`, and the
+//! staleness law specializes per context to `floor((2(L-i)+1)/C)` —
+//! each tenant only counts its *own* weight updates between the FF and
+//! BP reads of one input. [`Pipeline::audit_contexts`] proves both the
+//! fetch discipline and that closed form against the schedule itself.
 
 use std::collections::BTreeMap;
+
+use crate::hw::context::ContextError;
 
 /// One operation slot in the pipeline timetable.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -147,6 +158,144 @@ impl Pipeline {
         result
     }
 
+    /// The tenant context that owns input `n` under round-robin
+    /// admission over `contexts` tenants (negative `n` wraps, matching
+    /// the warmup convention of [`Pipeline::slots_at`]).
+    pub fn context_of(&self, n: i64, contexts: usize) -> usize {
+        assert!(contexts >= 1, "need at least one context");
+        n.rem_euclid(contexts as i64) as usize
+    }
+
+    /// Per-context weight staleness at junction `i` under round-robin
+    /// admission over `contexts` tenants: of the `2(L-i)+1` global
+    /// updates between FF_i(n) and BP_i(n), only every `contexts`-th
+    /// belongs to `n`'s own tenant, so each tenant observes
+    /// `floor((2(L-i)+1)/C)` of *its* updates (the Sec. III-D closed
+    /// form, `C = 1`).
+    pub fn context_staleness(&self, i: usize, contexts: usize) -> usize {
+        assert!(contexts >= 1, "need at least one context");
+        self.staleness(i) / contexts
+    }
+
+    /// Simulate `taus` junction cycles tracking *per-context* weight
+    /// versions and measure the per-context staleness, validating the
+    /// [`Pipeline::context_staleness`] closed form (`None` if the
+    /// window never reaches steady state).
+    pub fn measured_context_staleness(
+        &self,
+        i: usize,
+        taus: i64,
+        contexts: usize,
+    ) -> Option<usize> {
+        assert!(contexts >= 1, "need at least one context");
+        let c64 = contexts as i64;
+        // context-c weight version at junction i just before tau:
+        // #[m >= 0, m ≡ c (mod C) : m + 2L - i + 1 < tau]
+        let version_before = |tau: i64, c: i64| -> i64 {
+            let bound = tau - (2 * self.l as i64 - i as i64 + 1);
+            if bound <= c {
+                0
+            } else {
+                (bound - 1 - c) / c64 + 1
+            }
+        };
+        let mut result = None;
+        // clamp-free region: past every context's warmup
+        let warmup = (self.staleness(i) + 1) as i64 * c64;
+        for n in warmup..taus {
+            if self.bp_time(i, n) >= taus {
+                break;
+            }
+            let c = n % c64;
+            let ff_v = version_before(self.ff_time(i, n), c);
+            let bp_v = version_before(self.bp_time(i, n), c);
+            let s = (bp_v - ff_v) as usize;
+            if let Some(prev) = result {
+                assert_eq!(prev, s, "per-context staleness not constant in steady state");
+            }
+            result = Some(s);
+        }
+        result
+    }
+
+    /// Prove the multi-tenant fetch discipline and the per-context
+    /// staleness law over `taus` cycles with the correct round-robin
+    /// context fetch (input `n` fetches bank `n mod contexts`). See
+    /// [`Pipeline::audit_contexts_with`] for the general form the
+    /// mutation tests drive with faulted fetches.
+    pub fn audit_contexts(&self, taus: i64, contexts: usize) -> Result<(), ContextError> {
+        self.audit_contexts_with(taus, contexts, |n| Some(self.context_of(n, contexts)))
+    }
+
+    /// Replay `taus` cycles of the timetable against an explicit context
+    /// fetch function (`fetch(n)` = the bank cycle ops for input `n`
+    /// actually read, `None` = fetch dropped) and prove, per context:
+    /// - every fetch lands on the owning tenant's bank (no aliasing),
+    /// - no tenant's fetch is dropped and every tenant is served at
+    ///   least once in the window (no skipped context),
+    /// - the measured per-context staleness matches the
+    ///   [`Pipeline::context_staleness`] closed form.
+    ///
+    /// The error names the offending context ([`ContextError`]), which
+    /// `analysis::clash` surfaces as a typed finding coordinate.
+    pub fn audit_contexts_with<F>(
+        &self,
+        taus: i64,
+        contexts: usize,
+        fetch: F,
+    ) -> Result<(), ContextError>
+    where
+        F: Fn(i64) -> Option<usize>,
+    {
+        assert!(contexts >= 1, "need at least one context");
+        let mut served = vec![false; contexts];
+        for tau in 0..taus {
+            for (_i, _op, n) in self.slots_at(tau) {
+                let requested = self.context_of(n, contexts);
+                let effective = match fetch(n) {
+                    Some(e) => e,
+                    None => return Err(ContextError::Skipped { context: requested }),
+                };
+                if effective >= contexts {
+                    return Err(ContextError::OutOfRange {
+                        context: effective,
+                        contexts,
+                    });
+                }
+                if effective != requested {
+                    return Err(ContextError::Aliased {
+                        requested,
+                        effective,
+                    });
+                }
+                served[requested] = true;
+            }
+        }
+        if taus >= (2 * self.l + contexts) as i64 {
+            // window long enough that every tenant must have been served
+            for (context, hit) in served.iter().enumerate() {
+                if !hit {
+                    return Err(ContextError::Skipped { context });
+                }
+            }
+            // the per-context staleness closed form must hold wherever
+            // the window reaches steady state
+            for i in 1..=self.l {
+                if let Some(measured) = self.measured_context_staleness(i, taus, contexts) {
+                    let expected = self.context_staleness(i, contexts);
+                    if measured != expected {
+                        return Err(ContextError::StalenessLaw {
+                            junction: i,
+                            measured,
+                            expected,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Validate the structural resource claims of Sec. III-A against the
     /// schedule itself (used by property tests):
     /// - every junction runs at most one FF, one BP and one UP per tau,
@@ -255,6 +404,77 @@ mod tests {
         assert_eq!(p.staleness(2), 1);
         // L=4 (Table I second config): a_0 needs 2L+1 = 9 banks
         assert_eq!(Pipeline::new(4).queue_banks(1), 9);
+    }
+
+    #[test]
+    fn per_context_staleness_matches_closed_form() {
+        for l in 1..5 {
+            let p = Pipeline::new(l);
+            for contexts in 1..=4 {
+                for i in 1..=l {
+                    assert_eq!(
+                        p.measured_context_staleness(i, 400, contexts),
+                        Some(p.context_staleness(i, contexts)),
+                        "l={l} i={i} contexts={contexts}"
+                    );
+                }
+                p.audit_contexts(200, contexts).unwrap();
+            }
+            // one context is exactly the single-tenant law
+            for i in 1..=l {
+                assert_eq!(p.context_staleness(i, 1), p.staleness(i));
+            }
+        }
+    }
+
+    #[test]
+    fn context_round_robin_ownership() {
+        let p = Pipeline::new(2);
+        assert_eq!(p.context_of(0, 3), 0);
+        assert_eq!(p.context_of(5, 3), 2);
+        // warmup inputs wrap instead of going negative
+        assert_eq!(p.context_of(-1, 3), 2);
+    }
+
+    #[test]
+    fn faulted_context_fetches_fail_the_audit() {
+        use crate::hw::context::ContextError;
+        let p = Pipeline::new(3);
+        // aliasing context 1 onto bank 0 names context 1
+        let err = p
+            .audit_contexts_with(60, 4, |n| {
+                let c = p.context_of(n, 4);
+                Some(if c == 1 { 0 } else { c })
+            })
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ContextError::Aliased {
+                requested: 1,
+                effective: 0
+            }
+        );
+        // dropping context 2's fetches names context 2
+        let err = p
+            .audit_contexts_with(60, 4, |n| {
+                let c = p.context_of(n, 4);
+                if c == 2 {
+                    None
+                } else {
+                    Some(c)
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, ContextError::Skipped { context: 2 });
+        // fetching a bank beyond the configured count is out of range
+        let err = p.audit_contexts_with(60, 2, |_| Some(7)).unwrap_err();
+        assert_eq!(
+            err,
+            ContextError::OutOfRange {
+                context: 7,
+                contexts: 2
+            }
+        );
     }
 
     #[test]

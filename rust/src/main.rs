@@ -136,6 +136,9 @@ fn print_help() {
            info                              list artifact configs\n\
            analyze   [--config NAME] [--manifest PATH] [--quant Qm.n]\n\
                      [--depth N] [--input-range R] [--seed N] [--json]\n\
+                     [--contexts C]  (prove the C-tenant interleave:\n\
+                      per-context clash-freedom and the per-context\n\
+                      staleness closed form)\n\
                      (static verifier: proves clash-freedom across the\n\
                       pipelined FF/BP/UP interleave, certifies the Qm.n\n\
                       saturation-free input range — or proves a given\n\
@@ -154,19 +157,22 @@ fn print_help() {
                       fixed point, default Q5.10)\n\
            serve     --models tiny,mnist_fc2 [--workers 2] [--queue-depth 256]\n\
                      [--clients 4] [--requests 200] [--wait-ms 2]\n\
+                     [--contexts 1]  (tenant parameter banks per model;\n\
+                      context 0 is the base model, higher contexts get\n\
+                      per-tenant weights; load spreads round-robin)\n\
                      [--quant [Qm.n]]  (serve in fixed point, default Q5.10)\n\
                      [--listen ADDR [--batch-window USEC] [--max-conns N]]\n\
                      (--listen 127.0.0.1:0 starts the TCP front-end and\n\
                       serves until a client sends a shutdown frame;\n\
                       --batch-window is the micro-batcher's coalescing\n\
                       deadline in microseconds, default 1000)\n\
-           client    --addr HOST:PORT [--model NAME] [--requests 16]\n\
-                     [--pipeline 4] [--seed 0] [--shutdown]\n\
+           client    --addr HOST:PORT [--model NAME] [--context 0]\n\
+                     [--requests 16] [--pipeline 4] [--seed 0] [--shutdown]\n\
                      (drives a `serve --listen` server over TCP;\n\
                       --shutdown asks the server to drain and exit)\n\
            serve-bench --models tiny,mnist_fc2 [--workers 4] [--clients 8]\n\
                      [--requests 200] [--wait-ms 2] [--queue-depth 256]\n\
-                     [--think-us 0] [--burst 1] [--quant [Qm.n]]\n\
+                     [--think-us 0] [--burst 1] [--contexts 1] [--quant [Qm.n]]\n\
                      [--out BENCH_serve.json]\n\
            exp <fig1|table1|table2|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table3|pipeline|all> [--quick]\n\
          \n\
@@ -216,6 +222,10 @@ fn cmd_analyze(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     }
     if let Some(s) = opts.get("seed") {
         aopts.seed = s.parse().map_err(|e| anyhow::anyhow!("--seed: {e}"))?;
+    }
+    if let Some(c) = opts.get("contexts") {
+        aopts.contexts = c.parse().map_err(|e| anyhow::anyhow!("--contexts: {e}"))?;
+        anyhow::ensure!(aopts.contexts >= 1, "--contexts must be at least 1");
     }
     let json = opts.contains_key("json");
 
@@ -618,14 +628,19 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let wait_ms: u64 = opts.get("wait-ms").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let workers: usize = opts.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let queue_depth: usize = opts.get("queue-depth").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let contexts: usize = opts.get("contexts").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    anyhow::ensure!(contexts >= 1, "--contexts must be at least 1");
     let quant = parse_quant(opts, "quant")?;
     let dir = artifacts_dir(opts);
     let specs = models
         .iter()
         .map(|m| {
-            loadgen::model_spec(&dir, m, 0.25, 3).map(|s| match quant {
-                Some(fmt) => s.with_quant(fmt),
-                None => s,
+            loadgen::model_spec(&dir, m, 0.25, 3).map(|s| {
+                let s = s.with_contexts(contexts);
+                match quant {
+                    Some(fmt) => s.with_quant(fmt),
+                    None => s,
+                }
             })
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
@@ -643,8 +658,9 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         return cmd_serve_listen(svc, listen, &models, opts);
     }
     println!(
-        "serving {models:?}: {workers} workers/model, queue depth {queue_depth}, \
-         max_wait {wait_ms}ms; {clients} clients x {requests} requests per model{}",
+        "serving {models:?}: {workers} workers/model, {contexts} tenant context(s)/model, \
+         queue depth {queue_depth}, max_wait {wait_ms}ms; \
+         {clients} clients x {requests} requests per model{}",
         match quant {
             Some(fmt) => format!("; fixed-point {fmt}"),
             None => String::new(),
@@ -655,6 +671,7 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         requests,
         think_time: Duration::ZERO,
         burst: 1,
+        contexts,
     };
     let reports = loadgen::run_load(&svc, &models, &load, 42)?;
     for r in &reports {
@@ -770,13 +787,20 @@ fn cmd_client(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         .unwrap_or(4)
         .clamp(1, info.batch as usize);
     let seed: u64 = opts.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let context: u32 = opts.get("context").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    anyhow::ensure!(
+        context < info.contexts.max(1),
+        "--context {context} out of range: '{model}' hosts {} context(s)",
+        info.contexts.max(1)
+    );
     println!(
-        "connected to {addr}: {} model(s), targeting '{model}' ({} features, {} classes, \
-         engine batch {})",
+        "connected to {addr}: {} model(s), targeting '{model}' context {context} \
+         ({} features, {} classes, engine batch {}, {} tenant context(s))",
         health.models.len(),
         info.features,
         info.classes,
-        info.batch
+        info.batch,
+        info.contexts.max(1)
     );
     let mut rng = Rng::new(seed);
     let mut served = 0usize;
@@ -797,6 +821,7 @@ fn cmd_client(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         let (preds, retries) = loadgen::classify_group_with_retry(
             &mut net,
             &model,
+            context,
             &group,
             Some(retry_deadline),
         )?;
@@ -846,12 +871,15 @@ fn cmd_serve_bench(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let queue_depth: usize = opts.get("queue-depth").map(|s| s.parse()).transpose()?.unwrap_or(256);
     let think_us: u64 = opts.get("think-us").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let burst: usize = opts.get("burst").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let contexts: usize = opts.get("contexts").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    anyhow::ensure!(contexts >= 1, "--contexts must be at least 1");
     let dir = artifacts_dir(opts);
     let load = LoadSpec {
         clients,
         requests,
         think_time: Duration::from_micros(think_us),
         burst,
+        contexts,
     };
     let quant = parse_quant(opts, "quant")?;
     let max_wait = Duration::from_millis(wait_ms);

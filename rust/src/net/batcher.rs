@@ -112,6 +112,11 @@ pub struct BatchItem {
     /// Input feature vector (already validated against the model's
     /// input dimension by the caller).
     pub features: Vec<f32>,
+    /// Tenant context this request belongs to (already validated
+    /// against the model's context count by the caller); the flush
+    /// keeps the context attached, the service groups by it at
+    /// execution time.
+    pub context: usize,
     /// Invoked exactly once with the request's outcome, from a batcher
     /// thread.
     pub respond: Responder,
@@ -197,6 +202,11 @@ impl BatcherHandle {
     /// Engine batch size of the model this batcher feeds.
     pub fn batch(&self) -> usize {
         self.shared.client.batch()
+    }
+
+    /// Tenant contexts of the model this batcher feeds.
+    pub fn contexts(&self) -> usize {
+        self.shared.client.contexts()
     }
 }
 
@@ -338,7 +348,7 @@ fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
         // full engine batches downstream
         let mut in_flight = Vec::with_capacity(group.len());
         for item in group {
-            match shared.client.submit(item.features) {
+            match shared.client.submit_ctx(item.features, item.context) {
                 Ok(pending) => in_flight.push((pending, item.respond)),
                 Err(e) => (item.respond)(Err(e)),
             }
@@ -421,6 +431,7 @@ mod tests {
             let tx = tx.clone();
             handle.enqueue(BatchItem {
                 features: vec![0.25; features],
+                context: 0,
                 respond: Box::new(move |res| tx.send(res.map(|p| p.class)).unwrap()),
             });
         }
@@ -468,6 +479,7 @@ mod tests {
             let tx = tx.clone();
             handle.enqueue(BatchItem {
                 features: vec![0.1; features],
+                context: 0,
                 respond: Box::new(move |res| tx.send(res.is_ok()).unwrap()),
             });
         }
@@ -481,6 +493,7 @@ mod tests {
         let (tx2, rx2) = channel();
         handle.enqueue(BatchItem {
             features: vec![0.1; features],
+            context: 0,
             respond: Box::new(move |res| {
                 tx2.send(matches!(res, Err(ServeError::Stopped))).unwrap()
             }),
@@ -512,6 +525,7 @@ mod tests {
             let tx = tx.clone();
             handle.enqueue(BatchItem {
                 features: vec![0.0; features],
+                context: 0,
                 respond: Box::new(move |res| {
                     tx.send(matches!(res, Err(ServeError::Busy))).unwrap()
                 }),

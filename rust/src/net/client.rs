@@ -133,13 +133,26 @@ impl NetClient {
         }
     }
 
-    /// Classify one feature vector (a pipelined group of one).
+    /// Classify one feature vector (a pipelined group of one) against
+    /// the model's base context 0.
     pub fn classify(
         &mut self,
         model: &str,
         features: Vec<f32>,
     ) -> Result<NetPrediction, NetClientError> {
-        let mut preds = self.classify_pipelined(model, std::slice::from_ref(&features))?;
+        self.classify_ctx(model, 0, features)
+    }
+
+    /// Classify one feature vector against tenant context `context` of
+    /// `model` (a pipelined group of one).
+    pub fn classify_ctx(
+        &mut self,
+        model: &str,
+        context: u32,
+        features: Vec<f32>,
+    ) -> Result<NetPrediction, NetClientError> {
+        let mut preds =
+            self.classify_pipelined_ctx(model, context, std::slice::from_ref(&features))?;
         Ok(preds.remove(0))
     }
 
@@ -158,13 +171,25 @@ impl NetClient {
         model: &str,
         samples: &[Vec<f32>],
     ) -> Result<Vec<NetPrediction>, NetClientError> {
+        self.classify_pipelined_ctx(model, 0, samples)
+    }
+
+    /// [`NetClient::classify_pipelined`] against a specific tenant
+    /// context: the whole group is routed to `context`'s parameter bank
+    /// on the server.
+    pub fn classify_pipelined_ctx(
+        &mut self,
+        model: &str,
+        context: u32,
+        samples: &[Vec<f32>],
+    ) -> Result<Vec<NetPrediction>, NetClientError> {
         if samples.is_empty() {
             return Ok(Vec::new());
         }
         let first_id = self.next_id;
         let mut burst = Vec::new();
         for features in samples {
-            burst.extend_from_slice(&encode_request(self.next_id, model, features));
+            burst.extend_from_slice(&encode_request(self.next_id, model, context, features));
             self.next_id += 1;
         }
         let n = (self.next_id - first_id) as usize;

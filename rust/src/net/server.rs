@@ -130,6 +130,7 @@ impl ServerShared {
                     features: b.features() as u32,
                     classes: b.classes() as u32,
                     batch: b.batch() as u32,
+                    contexts: b.contexts() as u32,
                 })
                 .collect(),
         }
@@ -298,6 +299,7 @@ pub fn model_metrics_snapshot(
     let bm = batcher.metrics();
     Some(MetricsSnapshot {
         model,
+        contexts: batcher.contexts() as u64,
         requests: m.requests.load(Ordering::Relaxed),
         rejected: m.rejected.load(Ordering::Relaxed),
         batches: m.batches.load(Ordering::Relaxed),
@@ -502,8 +504,13 @@ fn handle_connection(stream: TcpStream, shared: Arc<ServerShared>) {
             {
                 // idle poll tick; the shared drain check below decides
             }
-            Ok(Some(Frame::Request { id, model, features })) => {
-                handle_request(&shared, &writer, &in_flight, id, model, features);
+            Ok(Some(Frame::Request {
+                id,
+                model,
+                context,
+                features,
+            })) => {
+                handle_request(&shared, &writer, &in_flight, id, model, context, features);
             }
             Ok(Some(Frame::HealthRequest)) => {
                 send(&writer, &shared.metrics, &shared.health_frame());
@@ -586,6 +593,7 @@ fn handle_request(
     in_flight: &Arc<AtomicUsize>,
     id: u64,
     model: String,
+    context: u32,
     features: Vec<f32>,
 ) {
     let metrics = &shared.metrics;
@@ -613,6 +621,23 @@ fn handle_request(
         );
         return;
     };
+    if (context as usize) >= batcher.contexts() {
+        send(
+            writer,
+            metrics,
+            &Frame::Error {
+                id,
+                code: ErrorCode::BadRequest,
+                message: format!(
+                    "context {} out of range (model '{}' hosts {} contexts)",
+                    context,
+                    shorten(&model),
+                    batcher.contexts()
+                ),
+            },
+        );
+        return;
+    }
     if features.len() != batcher.features() {
         send(
             writer,
@@ -636,6 +661,7 @@ fn handle_request(
     let shared = Arc::clone(shared);
     batcher.enqueue(BatchItem {
         features,
+        context: context as usize,
         respond: Box::new(move |res| {
             let frame = match res {
                 Ok(p) => Frame::Response {

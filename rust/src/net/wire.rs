@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic  "PD" (0x50 0x44)
-//! 2       1     protocol version (currently 1)
+//! 2       1     protocol version (currently 2)
 //! 3       1     frame type tag (see the table on [`Frame`])
 //! 4       4     payload length, u32 little-endian
 //! 8       len   payload (per-type layout, all integers little-endian)
@@ -37,8 +37,10 @@ use std::io::{Read, Write};
 /// First two header bytes of every frame.
 pub const MAGIC: [u8; 2] = *b"PD";
 /// Protocol version this build speaks. Frames carrying any other
-/// version are rejected with [`WireError::UnknownVersion`].
-pub const VERSION: u8 = 1;
+/// version are rejected with [`WireError::UnknownVersion`]. Version 2
+/// added the tenant-context dimension: a `context` field on `Request`,
+/// `contexts` on [`ModelInfo`] and [`MetricsSnapshot`].
+pub const VERSION: u8 = 2;
 /// Fixed header size in bytes (magic + version + type + payload length).
 pub const HEADER_LEN: usize = 8;
 /// Hard cap on the declared payload length. A header announcing more is
@@ -130,6 +132,9 @@ pub struct ModelInfo {
     pub classes: u32,
     /// Compiled engine batch size (the micro-batcher's flush bound).
     pub batch: u32,
+    /// Tenant contexts the model hosts; request `context` fields must
+    /// be below this.
+    pub contexts: u32,
 }
 
 /// One model's serving counters, carried by [`Frame::MetricsReply`].
@@ -164,6 +169,8 @@ pub struct MetricsSnapshot {
     /// Requests coalesced across those flushes; `net_coalesced /
     /// net_flushes` is the achieved mean coalesced batch size.
     pub net_coalesced: u64,
+    /// Tenant contexts the model hosts (1 = single-tenant).
+    pub contexts: u64,
 }
 
 impl MetricsSnapshot {
@@ -182,7 +189,7 @@ impl MetricsSnapshot {
 ///
 /// | tag | variant | direction | payload |
 /// |-----|---------|-----------|---------|
-/// | 1 | `Request` | client → server | id u64, model string, features `[f32]` |
+/// | 1 | `Request` | client → server | id u64, model string, context u32, features `[f32]` |
 /// | 2 | `Response` | server → client | id u64, class u32, latency_us u64, batch_occupancy u32, worker u32 |
 /// | 3 | `Error` | server → client | id u64 (0 = connection-level), code u8, message string |
 /// | 4 | `HealthRequest` | client → server | empty |
@@ -200,6 +207,9 @@ pub enum Frame {
         id: u64,
         /// Target model (manifest config name).
         model: String,
+        /// Target tenant context; must be below the model's advertised
+        /// [`ModelInfo::contexts`] (0 = the base context).
+        context: u32,
         /// Input feature vector; must match the model's input dimension.
         features: Vec<f32>,
     },
@@ -440,8 +450,8 @@ impl Frame {
     #[allow(clippy::cast_possible_truncation)]
     fn encode_payload(&self, out: &mut Vec<u8>) {
         match self {
-            Frame::Request { id, model, features } => {
-                request_payload(out, *id, model, features);
+            Frame::Request { id, model, context, features } => {
+                request_payload(out, *id, model, *context, features);
             }
             Frame::Response { id, class, latency_us, batch_occupancy, worker } => {
                 put_u64(out, *id);
@@ -466,6 +476,7 @@ impl Frame {
                     put_u32(out, m.features);
                     put_u32(out, m.classes);
                     put_u32(out, m.batch);
+                    put_u32(out, m.contexts);
                 }
             }
             Frame::MetricsRequest { model } => {
@@ -485,6 +496,7 @@ impl Frame {
                 put_f64(out, s.mean_occupancy);
                 put_u64(out, s.net_flushes);
                 put_u64(out, s.net_coalesced);
+                put_u64(out, s.contexts);
             }
         }
     }
@@ -528,9 +540,10 @@ impl Frame {
 
 /// The `Request` payload layout, shared by [`Frame::encode`] and
 /// [`encode_request`] so the two can never diverge.
-fn request_payload(out: &mut Vec<u8>, id: u64, model: &str, features: &[f32]) {
+fn request_payload(out: &mut Vec<u8>, id: u64, model: &str, context: u32, features: &[f32]) {
     put_u64(out, id);
     put_str(out, model);
+    put_u32(out, context);
     put_f32s(out, features);
 }
 
@@ -540,13 +553,13 @@ fn request_payload(out: &mut Vec<u8>, id: u64, model: &str, features: &[f32]) {
 /// the hot path of [`crate::net::NetClient::classify_pipelined`].
 // length fits u32: asserted <= MAX_PAYLOAD on the line above the cast
 #[allow(clippy::cast_possible_truncation)]
-pub fn encode_request(id: u64, model: &str, features: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(HEADER_LEN + 14 + model.len() + 4 * features.len());
+pub fn encode_request(id: u64, model: &str, context: u32, features: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 18 + model.len() + 4 * features.len());
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
     out.push(T_REQUEST);
     out.extend_from_slice(&[0u8; 4]);
-    request_payload(&mut out, id, model, features);
+    request_payload(&mut out, id, model, context, features);
     let len = out.len() - HEADER_LEN;
     assert!(len <= MAX_PAYLOAD, "frame payload exceeds MAX_PAYLOAD");
     out[4..8].copy_from_slice(&(len as u32).to_le_bytes());
@@ -576,6 +589,7 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
         T_REQUEST => Frame::Request {
             id: c.u64()?,
             model: c.string()?,
+            context: c.u32()?,
             features: c.f32s()?,
         },
         T_RESPONSE => Frame::Response {
@@ -607,6 +621,7 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
                     features: c.u32()?,
                     classes: c.u32()?,
                     batch: c.u32()?,
+                    contexts: c.u32()?,
                 });
             }
             Frame::HealthReply { draining, active_connections, models }
@@ -626,6 +641,7 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             mean_occupancy: c.f64()?,
             net_flushes: c.u64()?,
             net_coalesced: c.u64()?,
+            contexts: c.u64()?,
         }),
         T_SHUTDOWN => Frame::Shutdown,
         other => return Err(WireError::UnknownType(other)),
@@ -732,6 +748,7 @@ mod tests {
             Frame::Request {
                 id: 7,
                 model: "tiny".into(),
+                context: 2,
                 features: vec![0.5, -1.25, 3.0],
             },
             Frame::Response {
@@ -755,6 +772,7 @@ mod tests {
                     features: 32,
                     classes: 8,
                     batch: 16,
+                    contexts: 4,
                 }],
             },
             Frame::MetricsRequest { model: "tiny".into() },
@@ -772,6 +790,7 @@ mod tests {
                 mean_occupancy: 5.0,
                 net_flushes: 12,
                 net_coalesced: 60,
+                contexts: 4,
             }),
             Frame::Shutdown,
         ]
@@ -813,6 +832,7 @@ mod tests {
         let bytes = Frame::Request {
             id: 1,
             model: "m".into(),
+            context: 0,
             features: vec![1.0, 2.0],
         }
         .encode();
@@ -839,6 +859,7 @@ mod tests {
         let mut bytes = Frame::Request {
             id: 1,
             model: "m".into(),
+            context: 0,
             features: vec![],
         }
         .encode();
@@ -849,12 +870,13 @@ mod tests {
 
     #[test]
     fn encode_request_matches_frame_encode() {
-        let (id, model, features) = (42u64, "tiny", vec![0.5f32, -2.0, 3.25]);
+        let (id, model, context, features) = (42u64, "tiny", 3u32, vec![0.5f32, -2.0, 3.25]);
         assert_eq!(
-            encode_request(id, model, &features),
+            encode_request(id, model, context, &features),
             Frame::Request {
                 id,
                 model: model.to_string(),
+                context,
                 features,
             }
             .encode()

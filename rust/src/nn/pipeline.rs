@@ -25,6 +25,17 @@
 //! [`crate::util::parallel::worker_thread_budget`] so stage count ×
 //! kernel threads stays within the machine budget.
 //!
+//! [`MultiPipelinedTrainer`] adds the *context* dimension on top: `C`
+//! independent tenants (models, or user sessions carrying per-user
+//! fine-tuned weights) share one junction schedule under round-robin
+//! admission, their per-tenant state held in a
+//! [`crate::hw::context::ContextBank`] and fetched per cycle rather
+//! than swapped. Tenant `c`'s cycles are exactly a solo run at stride
+//! `C·k` shifted by its admission slot, so interleaved training is
+//! bit-identical per context to `C` independent single-tenant runs —
+//! the isolation property `tests/prop_context.rs` pins, with fault
+//! hooks proving the audits would catch any aliasing or starvation.
+//!
 //! The hardware model does not just *inspire* this engine — it checks it:
 //! construction audits the timetable with
 //! [`crate::hw::pipeline::Pipeline::audit`], every junction's weight
@@ -38,6 +49,7 @@ use anyhow::{ensure, Result};
 
 use crate::data::Dataset;
 use crate::hw::banked::BankedWeights;
+use crate::hw::context::{ContextBank, ContextError, ContextFault, ContextId};
 use crate::hw::pipeline::{Op, Pipeline};
 use crate::hw::zconfig::{self, ZConfig};
 use crate::nn::adam::{AdamConfig, AdamState};
@@ -231,22 +243,23 @@ impl PipelinedTrainer {
         pattern: &NetPattern,
         cfg: &PipelineConfig,
     ) -> Result<PipelinedTrainer> {
-        ensure!(layers.len() >= 2, "need at least input + output layer");
-        ensure!(
-            pattern.junctions.len() == layers.len() - 1,
-            "pattern has {} junctions, net has {}",
-            pattern.junctions.len(),
-            layers.len() - 1
-        );
-        for (i, p) in pattern.junctions.iter().enumerate() {
-            ensure!(
-                p.shape.n_left == layers[i] && p.shape.n_right == layers[i + 1],
-                "pattern junction {i} shape mismatch"
-            );
-        }
-        let mut rng = Rng::new(cfg.seed);
-        let net = SparseNet::init_he(pattern, 0.1, &mut rng);
+        let net = init_for_pattern(layers, pattern, cfg)?;
         PipelinedTrainer::new(net, cfg.clone())
+    }
+
+    /// [`PipelinedTrainer::from_pattern`] with an explicit admission
+    /// stride instead of the depth→stride mapping — the constructor the
+    /// multi-tenant interleave uses (each of `C` tenants runs at stride
+    /// `C·k`, which `depth` cannot always express) and that parity tests
+    /// use to build the solo twin of one tenant.
+    pub fn from_pattern_with_stride(
+        layers: &[usize],
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+        stride: usize,
+    ) -> Result<PipelinedTrainer> {
+        let net = init_for_pattern(layers, pattern, cfg)?;
+        PipelinedTrainer::new_with_stride(net, cfg.clone(), stride)
     }
 
     /// Build the engine around an existing compacted net (weights are
@@ -255,6 +268,24 @@ impl PipelinedTrainer {
     pub fn new(net: SparseNet, cfg: PipelineConfig) -> Result<PipelinedTrainer> {
         let l = net.junctions.len();
         ensure!(l >= 1, "net has no junctions");
+        let depth = if cfg.depth == 0 { 2 * l } else { cfg.depth.min(2 * l) };
+        let stride = (2 * l).div_ceil(depth);
+        PipelinedTrainer::new_with_stride(net, cfg, stride)
+    }
+
+    /// [`PipelinedTrainer::new`] with an explicit admission stride:
+    /// minibatch `n` is admitted at junction cycle `n·stride + 1`. Any
+    /// `stride >= 2L` is sequential-equivalent (a batch retires before
+    /// the next is admitted), so staleness is 0 there; `stride = 1` is
+    /// the full Fig. 2c schedule.
+    pub fn new_with_stride(
+        net: SparseNet,
+        cfg: PipelineConfig,
+        stride: usize,
+    ) -> Result<PipelinedTrainer> {
+        let l = net.junctions.len();
+        ensure!(l >= 1, "net has no junctions");
+        ensure!(stride >= 1, "stride must be positive");
         ensure!(cfg.batch > 0, "batch must be positive");
         let edges: Vec<usize> = net.junctions.iter().map(|j| j.n_edges()).collect();
         ensure!(
@@ -265,8 +296,6 @@ impl PipelinedTrainer {
         // the timetable itself must satisfy the paper's structural claims
         pipe.audit((4 * l + 8) as i64)
             .map_err(|e| anyhow::anyhow!("pipeline schedule audit failed: {e}"))?;
-        let depth = if cfg.depth == 0 { 2 * l } else { cfg.depth.min(2 * l) };
-        let stride = (2 * l).div_ceil(depth);
         let warmup = (2 * l).div_ceil(stride);
         // banked weight views: balanced z_net over the actual edge counts
         let max_e = *edges.iter().max().unwrap();
@@ -434,125 +463,433 @@ impl PipelinedTrainer {
         let l = self.net.junctions.len();
         let k = self.stride;
         let nb = flights.len();
-        let mut loss_sum = 0f64;
-        let mut correct = 0usize;
-        let mut seen = 0usize;
+        let mut totals = (0f64, 0usize, 0usize);
         if nb == 0 {
-            return (loss_sum, correct, seen);
+            return totals;
         }
         let concurrent = self.pipe.steady_state_ops().div_ceil(k);
         let _budget = ThreadBudgetGuard::pin(concurrent, self.cfg.tune_kernel_threads);
         let last_tau = (nb - 1) * k + 2 * l;
-        let mut ops: Vec<(usize, Op, usize)> = Vec::with_capacity(3 * l);
         for tau in 1..=last_tau {
-            // assemble this junction cycle from the hw timetable:
-            // FF_i(n) at tau = n*k + i; BP_i/UP_i(n) at tau = n*k + 2L-i+1
-            ops.clear();
-            for i in 1..=l {
-                if tau >= i && (tau - i) % k == 0 {
-                    let n = (tau - i) / k;
-                    if n < nb {
-                        ops.push((i, Op::Ff, n));
-                    }
-                }
-                let off = 2 * l - i + 1;
-                if tau >= off && (tau - off) % k == 0 {
-                    let n = (tau - off) / k;
-                    if n < nb {
-                        if i >= 2 {
-                            ops.push((i, Op::Bp, n));
-                        }
-                        ops.push((i, Op::Up, n));
-                    }
-                }
-            }
-            if ops.is_empty() {
-                continue;
-            }
-            // staleness probe: note the weight version each FF reads
-            for &(i, op, n) in &ops {
-                if op == Op::Ff {
-                    flights[n].ff_version[i - 1] = self.versions[i - 1];
-                }
-            }
-            // all ops in one junction cycle are mutually independent:
-            // execute concurrently, reading the cycle-start weights
-            let net = &self.net;
-            let fl: &[Flight] = &flights;
-            let l2 = self.cfg.l2;
-            let results: Vec<OpOut> = if ops.len() == 1 {
-                vec![exec_op(net, fl, l2, l, ops[0])]
-            } else {
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = ops[1..]
-                        .iter()
-                        .map(|&op| s.spawn(move || exec_op(net, fl, l2, l, op)))
-                        .collect();
-                    let mut out = Vec::with_capacity(ops.len());
-                    out.push(exec_op(net, fl, l2, l, ops[0]));
-                    for h in handles {
-                        out.push(h.join().expect("pipeline stage panicked"));
-                    }
-                    out
-                })
-            };
-            // cycle barrier: install results, then the deferred UP
-            // write-backs (so FF/BP of this cycle saw pre-update weights,
-            // exactly like the hardware's dual-ported write-back)
-            for (res, &(i, _op, n)) in results.into_iter().zip(&ops) {
-                let j = i - 1;
-                match res {
-                    OpOut::Ff { pre, act, head } => {
-                        let f = &mut flights[n];
-                        f.pre[j] = Some(pre);
-                        f.acts[j] = Some(act);
-                        if let Some((loss, corr, dlogits)) = head {
-                            f.loss = loss;
-                            f.correct = corr;
-                            f.delta[l - 1] = Some(dlogits);
-                        }
-                    }
-                    OpOut::Bp { dprev } => {
-                        flights[n].delta[i - 2] = Some(dprev);
-                    }
-                    OpOut::Up { gwc, gb } => {
-                        if n >= self.warmup {
-                            // the version BP_i(n)/UP_i(n) read this cycle
-                            // minus the version FF_i(n) read = staleness
-                            let s = (self.versions[j] - flights[n].ff_version[j]) as usize;
-                            let probe = &mut self.probes[j];
-                            match probe.value {
-                                None => {
-                                    probe.value = Some(s);
-                                    probe.consistent = true;
-                                }
-                                Some(prev) if prev != s => probe.consistent = false,
-                                Some(_) => {}
-                            }
-                        }
-                        let t = (self.versions[j] + 1) as f32;
-                        let junction = &mut self.net.junctions[j];
-                        let (sw, sb) = &mut self.opt[j];
-                        sw.step(&mut junction.wc, &gwc, t, &self.cfg.adam);
-                        sb.step(&mut junction.bias, &gb, t, &self.cfg.adam);
-                        self.versions[j] += 1;
-                        if i == 1 {
-                            // UP_1 is the last op of input n: retire it
-                            let f = &mut flights[n];
-                            loss_sum += f.loss as f64 * f.batch as f64;
-                            correct += f.correct;
-                            seen += f.batch;
-                            f.retire();
-                            self.metrics.flights += 1;
-                        }
-                    }
-                }
-            }
-            self.metrics.taus += 1;
-            self.metrics.ops += ops.len() as u64;
-            self.metrics.max_ops_in_tau = self.metrics.max_ops_in_tau.max(ops.len());
+            self.step_tau(tau, &mut flights, &mut totals);
         }
-        (loss_sum, correct, seen)
+        totals
+    }
+
+    /// Assemble junction cycle `tau` from the hw timetable for a run of
+    /// `nb` admitted minibatches: FF_i(n) at `tau = n·k + i`,
+    /// BP_i/UP_i(n) at `tau = n·k + 2L - i + 1` (k = admission stride).
+    fn ops_at(&self, tau: usize, nb: usize) -> Vec<(usize, Op, usize)> {
+        let l = self.net.junctions.len();
+        let k = self.stride;
+        let mut ops: Vec<(usize, Op, usize)> = Vec::with_capacity(3 * l);
+        for i in 1..=l {
+            if tau >= i && (tau - i) % k == 0 {
+                let n = (tau - i) / k;
+                if n < nb {
+                    ops.push((i, Op::Ff, n));
+                }
+            }
+            let off = 2 * l - i + 1;
+            if tau >= off && (tau - off) % k == 0 {
+                let n = (tau - off) / k;
+                if n < nb {
+                    if i >= 2 {
+                        ops.push((i, Op::Bp, n));
+                    }
+                    ops.push((i, Op::Up, n));
+                }
+            }
+        }
+        ops
+    }
+
+    /// Execute one junction cycle against `flights`: probe the weight
+    /// versions FF reads, fan the cycle's operations out over stage
+    /// threads, then install results and the deferred UP write-backs at
+    /// the cycle barrier (the hardware's end-of-cycle write-back).
+    /// Retired-flight totals accumulate into `(loss sum, correct, seen)`.
+    ///
+    /// This is the unit the multi-tenant interleave replays per tenant:
+    /// a solo run is exactly `step_tau(1..=last_tau)` in order, so any
+    /// schedule that preserves a tenant's cycle order reproduces its
+    /// solo run bit for bit.
+    fn step_tau(
+        &mut self,
+        tau: usize,
+        flights: &mut [Flight],
+        totals: &mut (f64, usize, usize),
+    ) {
+        let l = self.net.junctions.len();
+        let ops = self.ops_at(tau, flights.len());
+        if ops.is_empty() {
+            return;
+        }
+        // staleness probe: note the weight version each FF reads
+        for &(i, op, n) in &ops {
+            if op == Op::Ff {
+                flights[n].ff_version[i - 1] = self.versions[i - 1];
+            }
+        }
+        // all ops in one junction cycle are mutually independent:
+        // execute concurrently, reading the cycle-start weights
+        let net = &self.net;
+        let fl: &[Flight] = flights;
+        let l2 = self.cfg.l2;
+        let results: Vec<OpOut> = if ops.len() == 1 {
+            vec![exec_op(net, fl, l2, l, ops[0])]
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = ops[1..]
+                    .iter()
+                    .map(|&op| s.spawn(move || exec_op(net, fl, l2, l, op)))
+                    .collect();
+                let mut out = Vec::with_capacity(ops.len());
+                out.push(exec_op(net, fl, l2, l, ops[0]));
+                for h in handles {
+                    out.push(h.join().expect("pipeline stage panicked"));
+                }
+                out
+            })
+        };
+        // cycle barrier: install results, then the deferred UP
+        // write-backs (so FF/BP of this cycle saw pre-update weights,
+        // exactly like the hardware's dual-ported write-back)
+        for (res, &(i, _op, n)) in results.into_iter().zip(&ops) {
+            let j = i - 1;
+            match res {
+                OpOut::Ff { pre, act, head } => {
+                    let f = &mut flights[n];
+                    f.pre[j] = Some(pre);
+                    f.acts[j] = Some(act);
+                    if let Some((loss, corr, dlogits)) = head {
+                        f.loss = loss;
+                        f.correct = corr;
+                        f.delta[l - 1] = Some(dlogits);
+                    }
+                }
+                OpOut::Bp { dprev } => {
+                    flights[n].delta[i - 2] = Some(dprev);
+                }
+                OpOut::Up { gwc, gb } => {
+                    if n >= self.warmup {
+                        // the version BP_i(n)/UP_i(n) read this cycle
+                        // minus the version FF_i(n) read = staleness
+                        let s = (self.versions[j] - flights[n].ff_version[j]) as usize;
+                        let probe = &mut self.probes[j];
+                        match probe.value {
+                            None => {
+                                probe.value = Some(s);
+                                probe.consistent = true;
+                            }
+                            Some(prev) if prev != s => probe.consistent = false,
+                            Some(_) => {}
+                        }
+                    }
+                    let t = (self.versions[j] + 1) as f32;
+                    let junction = &mut self.net.junctions[j];
+                    let (sw, sb) = &mut self.opt[j];
+                    sw.step(&mut junction.wc, &gwc, t, &self.cfg.adam);
+                    sb.step(&mut junction.bias, &gb, t, &self.cfg.adam);
+                    self.versions[j] += 1;
+                    if i == 1 {
+                        // UP_1 is the last op of input n: retire it
+                        let f = &mut flights[n];
+                        totals.0 += f.loss as f64 * f.batch as f64;
+                        totals.1 += f.correct;
+                        totals.2 += f.batch;
+                        f.retire();
+                        self.metrics.flights += 1;
+                    }
+                }
+            }
+        }
+        self.metrics.taus += 1;
+        self.metrics.ops += ops.len() as u64;
+        self.metrics.max_ops_in_tau = self.metrics.max_ops_in_tau.max(ops.len());
+    }
+}
+
+/// Validate `pattern` against the expected neuronal configuration and
+/// He-initialize a compacted net from `cfg.seed` (the same init the
+/// sequential trainer would perform).
+fn init_for_pattern(
+    layers: &[usize],
+    pattern: &NetPattern,
+    cfg: &PipelineConfig,
+) -> Result<SparseNet> {
+    ensure!(layers.len() >= 2, "need at least input + output layer");
+    ensure!(
+        pattern.junctions.len() == layers.len() - 1,
+        "pattern has {} junctions, net has {}",
+        pattern.junctions.len(),
+        layers.len() - 1
+    );
+    for (i, p) in pattern.junctions.iter().enumerate() {
+        ensure!(
+            p.shape.n_left == layers[i] && p.shape.n_right == layers[i + 1],
+            "pattern junction {i} shape mismatch"
+        );
+    }
+    let mut rng = Rng::new(cfg.seed);
+    Ok(SparseNet::init_he(pattern, 0.1, &mut rng))
+}
+
+/// Per-context parameter seed: context 0 keeps `seed` unchanged (a
+/// single-context run is bit-for-bit the single-tenant run), every
+/// further context mixes in a golden-ratio stride so tenants start from
+/// independent initializations (the "per-user delta" of the serving
+/// story).
+pub fn context_seed(seed: u64, context: usize) -> u64 {
+    seed ^ (context as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// The multi-tenant pipelined trainer: `C` independent tenant contexts
+/// interleaved through one junction schedule (see the module docs).
+///
+/// Admission is round-robin over the contexts: global minibatch `g`
+/// belongs to the context in admission slot `g mod C`, so each tenant's
+/// own batches are `C·k` junction cycles apart (`k` = the global
+/// admission stride from [`PipelineConfig::depth`]) and the per-context
+/// staleness law is `floor((2(L-i)+1) / (C·k))` — measured and exposed
+/// via [`MultiPipelinedTrainer::measured_staleness`]. Per-tenant state
+/// (weights, Adam accumulators, version counters) lives in a
+/// [`ContextBank`] fetched once per tenant per junction cycle;
+/// [`MultiPipelinedTrainer::audit_contexts`] proves every fetch hit its
+/// own tenant's bank.
+pub struct MultiPipelinedTrainer {
+    tenants: ContextBank<PipelinedTrainer>,
+    /// Junction cycles between *global* (tenant-interleaved) admissions.
+    k: usize,
+    /// Admission order: round-robin slot `s` admits `admission[s]`.
+    admission: Vec<ContextId>,
+}
+
+impl MultiPipelinedTrainer {
+    /// Build `contexts` tenants over one shared `pattern` (one parsed
+    /// manifest entry serves every tenant): tenant `c` He-initializes
+    /// from [`context_seed`]`(cfg.seed, c)` and runs at stride
+    /// `contexts · k`. A single context reproduces
+    /// [`PipelinedTrainer::from_pattern`] exactly.
+    pub fn from_pattern(
+        layers: &[usize],
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+        contexts: usize,
+    ) -> Result<MultiPipelinedTrainer> {
+        ensure!(contexts >= 1, "need at least one context");
+        ensure!(layers.len() >= 2, "need at least input + output layer");
+        let l = layers.len() - 1;
+        let depth = if cfg.depth == 0 { 2 * l } else { cfg.depth.min(2 * l) };
+        let k = (2 * l).div_ceil(depth);
+        let mut tenants = Vec::with_capacity(contexts);
+        for c in 0..contexts {
+            let mut tcfg = cfg.clone();
+            tcfg.seed = context_seed(cfg.seed, c);
+            tenants.push(PipelinedTrainer::from_pattern_with_stride(
+                layers,
+                pattern,
+                &tcfg,
+                contexts * k,
+            )?);
+        }
+        Ok(MultiPipelinedTrainer {
+            tenants: ContextBank::new(tenants),
+            k,
+            admission: (0..contexts).collect(),
+        })
+    }
+
+    /// Override the round-robin admission order (must be a permutation
+    /// of the contexts). Isolation is order-independent — the property
+    /// tests randomize this to prove it.
+    pub fn with_admission(mut self, order: Vec<ContextId>) -> Result<MultiPipelinedTrainer> {
+        let contexts = self.tenants.contexts();
+        ensure!(
+            order.len() == contexts,
+            "admission order must name every context once"
+        );
+        let mut seen = vec![false; contexts];
+        for &c in &order {
+            ensure!(
+                c < contexts && !seen[c],
+                "admission order must be a permutation of 0..{contexts}"
+            );
+            seen[c] = true;
+        }
+        self.admission = order;
+        Ok(self)
+    }
+
+    /// Number of tenant contexts sharing the schedule.
+    pub fn contexts(&self) -> usize {
+        self.tenants.contexts()
+    }
+
+    /// Junction cycles between each tenant's own admissions (`C·k`).
+    pub fn stride(&self) -> usize {
+        self.tenants.contexts() * self.k
+    }
+
+    /// Read access to tenant `c`'s underlying trainer (metrics, nets,
+    /// staleness probes).
+    ///
+    /// # Panics
+    /// If `c` is out of range.
+    pub fn tenant(&self, c: ContextId) -> &PipelinedTrainer {
+        self.tenants.peek(c).expect("context out of range")
+    }
+
+    /// Tenant `c`'s trained network.
+    pub fn net(&self, c: ContextId) -> &SparseNet {
+        self.tenant(c).net()
+    }
+
+    /// Per-context staleness the schedule implies at junction `i`
+    /// (1-based) for tenant `c`: `floor((2(L-i)+1) / (C·k))`.
+    pub fn expected_staleness(&self, c: ContextId, i: usize) -> usize {
+        self.tenant(c).expected_staleness(i)
+    }
+
+    /// Steady-state staleness *measured* for tenant `c` at junction `i`
+    /// during the runs so far (see
+    /// [`PipelinedTrainer::measured_staleness`]).
+    pub fn measured_staleness(&self, c: ContextId, i: usize) -> Option<usize> {
+        self.tenant(c).measured_staleness(i)
+    }
+
+    /// Replay the context-fetch log: every per-cycle state fetch must
+    /// have hit its own tenant's bank (no aliasing, no starved tenant).
+    /// The error names the offending context.
+    pub fn audit_contexts(&self) -> Result<(), ContextError> {
+        self.tenants.audit()
+    }
+
+    /// Replay every tenant's weight buffers through their clash-free
+    /// banked views (see [`PipelinedTrainer::audit_banked`]).
+    pub fn audit_banked(&self) -> Result<()> {
+        for t in self.tenants.iter() {
+            t.audit_banked()?;
+        }
+        Ok(())
+    }
+
+    /// Install a context-fetch defect on the tenant state bank
+    /// (test-only hook for the non-vacuity battery).
+    #[doc(hidden)]
+    pub fn inject_fault(&mut self, fault: ContextFault) {
+        self.tenants.inject_fault(fault);
+    }
+
+    /// Train every tenant for `cfg.epochs` over the shared datasets,
+    /// interleaved through one schedule. Each tenant shuffles with its
+    /// own seeded rng and accumulates its own history — bit-for-bit
+    /// what `C` solo [`PipelinedTrainer::train`] runs at stride `C·k`
+    /// would produce (the isolation property).
+    pub fn train(&mut self, train_ds: &Dataset, test_ds: &Dataset) -> Result<Vec<History>> {
+        let contexts = self.tenants.contexts();
+        let epochs = self.tenant(0).cfg.epochs;
+        let mut rngs: Vec<Rng> = (0..contexts)
+            .map(|c| Rng::new(self.tenant(c).cfg.seed ^ 0x7261696e))
+            .collect();
+        let mut orders: Vec<Vec<usize>> = vec![(0..train_ds.n).collect(); contexts];
+        let mut histories: Vec<History> = (0..contexts)
+            .map(|_| History { epochs: Vec::new() })
+            .collect();
+        for epoch in 0..epochs {
+            for (rng, order) in rngs.iter_mut().zip(&mut orders) {
+                rng.shuffle(order);
+            }
+            let stats = self.epoch_in_orders(train_ds, &orders)?;
+            for (c, history) in histories.iter_mut().enumerate() {
+                let test_acc = self.tenant(c).evaluate(test_ds);
+                history.epochs.push(EpochStat {
+                    epoch,
+                    train_loss: stats[c].0,
+                    train_acc: stats[c].1,
+                    test_acc,
+                });
+            }
+        }
+        Ok(histories)
+    }
+
+    /// One interleaved epoch with explicit per-tenant sample orders.
+    /// Returns per-tenant (mean train loss, train accuracy).
+    fn epoch_in_orders(
+        &mut self,
+        ds: &Dataset,
+        orders: &[Vec<usize>],
+    ) -> Result<Vec<(f32, f64)>> {
+        let contexts = self.tenants.contexts();
+        let mut flights: Vec<Vec<Flight>> = Vec::with_capacity(contexts);
+        for (c, order) in orders.iter().enumerate() {
+            let t = self.tenant(c);
+            let l = t.net.junctions.len();
+            let fl: Vec<Flight> = order
+                .chunks(t.cfg.batch)
+                .map(|chunk| {
+                    let (x, y) = ds.gather(chunk);
+                    Flight::new(x, y, l)
+                })
+                .collect();
+            ensure!(!fl.is_empty(), "dataset is empty");
+            flights.push(fl);
+        }
+        let totals = self.run_interleaved(flights);
+        Ok(totals
+            .iter()
+            .map(|&(loss, corr, seen)| {
+                ((loss / seen as f64) as f32, corr as f64 / seen as f64)
+            })
+            .collect())
+    }
+
+    /// The global tau loop: at global junction cycle `T`, the tenant in
+    /// admission slot `s` executes its local cycle `T - s·k` — every
+    /// tenant advances through exactly the cycle sequence of its solo
+    /// run, fetched from the context bank per cycle, with zero idle
+    /// cycles between tenants once the interleave is full.
+    fn run_interleaved(&mut self, mut flights: Vec<Vec<Flight>>) -> Vec<(f64, usize, usize)> {
+        let contexts = self.tenants.contexts();
+        let k = self.k;
+        let kk = contexts * k;
+        let admission = self.admission.clone();
+        let first = self.tenant(0);
+        let l = first.net.junctions.len();
+        // the interleave carries the aggregate op load of a stride-k
+        // single-tenant run, so pin the same kernel-thread budget
+        let concurrent = first.pipe.steady_state_ops().div_ceil(k);
+        let tune = first.cfg.tune_kernel_threads;
+        let _budget = ThreadBudgetGuard::pin(concurrent, tune);
+        let mut totals = vec![(0f64, 0usize, 0usize); contexts];
+        // tenant c's last local cycle; slot s shifts it by s·k globally
+        let last_local: Vec<usize> = flights
+            .iter()
+            .map(|fl| if fl.is_empty() { 0 } else { (fl.len() - 1) * kk + 2 * l })
+            .collect();
+        let global_last = admission
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| last_local[c] + s * k)
+            .max()
+            .unwrap_or(0);
+        for tau_g in 1..=global_last {
+            for (s, &c) in admission.iter().enumerate() {
+                let offset = s * k;
+                if tau_g <= offset {
+                    continue;
+                }
+                let lt = tau_g - offset;
+                if lt > last_local[c] {
+                    continue;
+                }
+                if let Some(tenant) = self.tenants.fetch_mut(c) {
+                    tenant.step_tau(lt, &mut flights[c], &mut totals[c]);
+                }
+            }
+        }
+        totals
     }
 }
 
@@ -695,6 +1032,117 @@ mod tests {
         // one update per junction happened
         assert_eq!(trainer.versions, vec![1, 1]);
         trainer.audit_banked().unwrap();
+    }
+
+    #[test]
+    fn interleaved_contexts_match_solo_runs_bit_for_bit() {
+        use crate::hw::context::{ContextError, ContextFault};
+        let layers = [12usize, 10, 6];
+        let pattern = toy_pattern(&layers, &[5, 3], 7);
+        let spec = Spec {
+            name: "ctx-toy",
+            features: 12,
+            classes: 6,
+            latent_dim: 5,
+            shaping: crate::data::Shaping::Continuous,
+            separation: 2.0,
+            noise: 0.5,
+        };
+        let mut drng = Rng::new(11);
+        let train_ds = spec.generate(40, &mut drng);
+        let test_ds = spec.generate(16, &mut drng);
+        let cfg = PipelineConfig {
+            epochs: 2,
+            batch: 8,
+            depth: 0,
+            seed: 9,
+            ..Default::default()
+        };
+        let contexts = 3;
+        let mut multi =
+            MultiPipelinedTrainer::from_pattern(&layers, &pattern, &cfg, contexts).unwrap();
+        let histories = multi.train(&train_ds, &test_ds).unwrap();
+        multi.audit_contexts().unwrap();
+        multi.audit_banked().unwrap();
+        for c in 0..contexts {
+            let mut tcfg = cfg.clone();
+            tcfg.seed = context_seed(cfg.seed, c);
+            let mut solo = PipelinedTrainer::from_pattern_with_stride(
+                &layers,
+                &pattern,
+                &tcfg,
+                multi.stride(),
+            )
+            .unwrap();
+            let solo_history = solo.train(&train_ds, &test_ds).unwrap();
+            for (a, b) in histories[c].epochs.iter().zip(&solo_history.epochs) {
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "ctx {c}");
+                assert_eq!(a.train_acc, b.train_acc, "ctx {c}");
+            }
+            for (ja, jb) in multi.net(c).junctions.iter().zip(&solo.net().junctions) {
+                for (wa, wb) in ja.wc.iter().zip(&jb.wc) {
+                    assert_eq!(wa.to_bits(), wb.to_bits(), "ctx {c} weight bleed");
+                }
+                for (ba, bb) in ja.bias.iter().zip(&jb.bias) {
+                    assert_eq!(ba.to_bits(), bb.to_bits(), "ctx {c} bias bleed");
+                }
+            }
+        }
+        // non-vacuity: aliasing two contexts onto one bank is caught,
+        // naming the aliased context
+        let mut bad =
+            MultiPipelinedTrainer::from_pattern(&layers, &pattern, &cfg, contexts).unwrap();
+        bad.inject_fault(ContextFault::Alias { from: 1, to: 0 });
+        bad.train(&train_ds, &test_ds).unwrap();
+        let err = bad.audit_contexts().unwrap_err();
+        assert_eq!(
+            err,
+            ContextError::Aliased {
+                requested: 1,
+                effective: 0
+            }
+        );
+        assert_eq!(err.context(), Some(1));
+    }
+
+    #[test]
+    fn single_context_interleave_is_the_single_tenant_trainer() {
+        let layers = [12usize, 10, 6];
+        let pattern = toy_pattern(&layers, &[5, 3], 3);
+        let spec = Spec {
+            name: "ctx-one",
+            features: 12,
+            classes: 6,
+            latent_dim: 5,
+            shaping: crate::data::Shaping::Continuous,
+            separation: 2.0,
+            noise: 0.5,
+        };
+        let mut drng = Rng::new(13);
+        let train_ds = spec.generate(32, &mut drng);
+        let test_ds = spec.generate(16, &mut drng);
+        let cfg = PipelineConfig {
+            epochs: 2,
+            batch: 8,
+            seed: 4,
+            ..Default::default()
+        };
+        let mut multi =
+            MultiPipelinedTrainer::from_pattern(&layers, &pattern, &cfg, 1).unwrap();
+        let mut solo = PipelinedTrainer::from_pattern(&layers, &pattern, &cfg).unwrap();
+        assert_eq!(multi.stride(), solo.stride());
+        let mh = multi.train(&train_ds, &test_ds).unwrap();
+        let sh = solo.train(&train_ds, &test_ds).unwrap();
+        multi.audit_contexts().unwrap();
+        for (a, b) in mh[0].epochs.iter().zip(&sh.epochs) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.test_acc, b.test_acc);
+        }
+        for (ja, jb) in multi.net(0).junctions.iter().zip(&solo.net().junctions) {
+            for (wa, wb) in ja.wc.iter().zip(&jb.wc) {
+                assert_eq!(wa.to_bits(), wb.to_bits());
+            }
+        }
     }
 
     #[test]

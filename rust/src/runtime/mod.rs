@@ -28,7 +28,7 @@ pub mod pjrt;
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
 
-use crate::nn::pipeline::{PipelineConfig, PipelinedTrainer};
+use crate::nn::pipeline::{MultiPipelinedTrainer, PipelineConfig, PipelinedTrainer};
 use crate::sparsity::pattern::NetPattern;
 
 pub use manifest::{ConfigEntry, Dtype, Manifest, ProgramSpec, QuantSpec, TensorSpec};
@@ -131,6 +131,23 @@ pub trait ExecBackend {
         cfg: &PipelineConfig,
     ) -> Option<Result<PipelinedTrainer>> {
         let _ = (entry, pattern, cfg);
+        None
+    }
+
+    /// Multi-tenant variant of [`ExecBackend::pipelined_trainer`]:
+    /// `contexts` tenant contexts interleaved through one junction
+    /// schedule over one manifest entry
+    /// ([`crate::nn::pipeline::MultiPipelinedTrainer`]). Default `None`
+    /// for the same reason — only the native backend can step junction
+    /// by junction.
+    fn pipelined_multi_trainer(
+        &self,
+        entry: &ConfigEntry,
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+        contexts: usize,
+    ) -> Option<Result<MultiPipelinedTrainer>> {
+        let _ = (entry, pattern, cfg, contexts);
         None
     }
 }
@@ -286,6 +303,57 @@ impl Engine {
             .get(config)
             .ok_or_else(|| anyhow!("config '{config}' not in manifest"))?;
         match self.backend.pipelined_trainer(entry, pattern, cfg) {
+            Some(trainer) => trainer,
+            None => bail!(
+                "backend '{}' has no pipelined training path (the native backend trains \
+                 junction by junction; fused AOT artifacts cannot)",
+                self.platform()
+            ),
+        }
+    }
+
+    /// One engine hosting `contexts` tenant contexts over one parsed
+    /// manifest entry: the multi-tenant twin of
+    /// [`Engine::train_pipelined`]. Every tenant shares `config`'s
+    /// layers and `pattern`; per-tenant weights start from
+    /// [`crate::nn::pipeline::context_seed`] so context 0 reproduces the
+    /// single-tenant path bit for bit.
+    ///
+    /// ```
+    /// use pds::nn::pipeline::PipelineConfig;
+    /// use pds::runtime::Engine;
+    /// use pds::sparsity::config::{DoutConfig, NetConfig};
+    /// use pds::sparsity::{generate, Method};
+    /// use pds::util::rng::Rng;
+    ///
+    /// let engine = Engine::native("/nonexistent/dir").unwrap();
+    /// let layers = engine.manifest.configs["tiny"].layers.clone();
+    /// let netc = NetConfig::new(layers);
+    /// let mut rng = Rng::new(0);
+    /// let pattern = generate(Method::ClashFree, &netc, &DoutConfig(vec![4, 2]), None, &mut rng);
+    /// let cfg = PipelineConfig { batch: 16, ..Default::default() };
+    /// let multi = engine.train_pipelined_contexts("tiny", &pattern, &cfg, 4).unwrap();
+    /// assert_eq!(multi.contexts(), 4);
+    /// // each tenant's own batches are C·k junction cycles apart
+    /// assert_eq!(multi.stride(), 4);
+    /// multi.audit_banked().unwrap();
+    /// ```
+    pub fn train_pipelined_contexts(
+        &self,
+        config: &str,
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+        contexts: usize,
+    ) -> Result<MultiPipelinedTrainer> {
+        let entry = self
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("config '{config}' not in manifest"))?;
+        match self
+            .backend
+            .pipelined_multi_trainer(entry, pattern, cfg, contexts)
+        {
             Some(trainer) => trainer,
             None => bail!(
                 "backend '{}' has no pipelined training path (the native backend trains \

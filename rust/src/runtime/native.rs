@@ -20,7 +20,7 @@ use super::{ConfigEntry, ExecBackend, ProgramExec, ProgramSpec, Value};
 use crate::nn::adam::{AdamConfig, AdamState};
 use crate::nn::dense::DenseNet;
 use crate::nn::fixed::{self, FixedSparseLayer, QFormat};
-use crate::nn::pipeline::{PipelineConfig, PipelinedTrainer};
+use crate::nn::pipeline::{MultiPipelinedTrainer, PipelineConfig, PipelinedTrainer};
 use crate::nn::relu;
 use crate::nn::sparse::SparseLayer;
 use crate::sparsity::pattern::NetPattern;
@@ -87,6 +87,24 @@ impl ExecBackend for NativeEngine {
         cfg: &PipelineConfig,
     ) -> Option<Result<PipelinedTrainer>> {
         Some(PipelinedTrainer::from_pattern(&entry.layers, pattern, cfg))
+    }
+
+    /// Likewise for the multi-tenant interleave: one native engine hosts
+    /// `contexts` tenant contexts over one manifest entry, each tenant's
+    /// state fetched per cycle from the context bank.
+    fn pipelined_multi_trainer(
+        &self,
+        entry: &ConfigEntry,
+        pattern: &NetPattern,
+        cfg: &PipelineConfig,
+        contexts: usize,
+    ) -> Option<Result<MultiPipelinedTrainer>> {
+        Some(MultiPipelinedTrainer::from_pattern(
+            &entry.layers,
+            pattern,
+            cfg,
+            contexts,
+        ))
     }
 }
 

@@ -135,6 +135,75 @@ fn default_format_passes_where_the_narrow_one_fails() {
 }
 
 #[test]
+fn multi_context_analysis_proves_clean_and_dilates_staleness() {
+    // the C-tenant interleave of every builtin config must prove clean,
+    // with the per-context staleness law emitted as a success finding
+    let manifest = Manifest::builtin();
+    let entry = &manifest.configs["mnist_fc4"];
+    let opts = AnalyzeOptions {
+        contexts: 4,
+        ..AnalyzeOptions::default()
+    };
+    let report = analyze_config("mnist_fc4", entry, &opts);
+    assert!(!report.has_errors(), "{report}");
+    assert_code(&report.findings, "proved", Severity::Info);
+    assert_code(&report.findings, "proved-contexts", Severity::Info);
+    // single-context analysis must NOT grow the extra finding — the
+    // default report surface is pinned by CI
+    let base = analyze_config("mnist_fc4", entry, &AnalyzeOptions::default());
+    assert!(
+        !base.findings.iter().any(|f| f.code == "proved-contexts"),
+        "contexts=1 must keep the single-tenant report shape"
+    );
+}
+
+#[test]
+fn mutated_context_routing_is_rejected_with_the_offending_context() {
+    use pds::analysis::clash::prove_contexts_with;
+    use pds::hw::pipeline::Pipeline;
+
+    let l = 3usize;
+    let contexts = 4usize;
+    let taus = 60i64;
+    let pipe = Pipeline::new(l);
+
+    // clean round-robin fetch: no finding
+    assert!(
+        prove_contexts_with("m", l, taus, contexts, |n| Some(
+            pipe.context_of(n, contexts)
+        ))
+        .is_none(),
+        "clean fetch must prove"
+    );
+
+    // mutation: context 2's fetches alias onto bank 0
+    let f = prove_contexts_with("m", l, taus, contexts, |n| {
+        let c = pipe.context_of(n, contexts);
+        Some(if c == 2 { 0 } else { c })
+    })
+    .expect("aliased fetch must be caught");
+    assert_eq!(f.code, "context-alias");
+    assert_eq!(f.severity, Severity::Error);
+    assert_eq!(f.context, Some(2), "finding must name the offending context");
+
+    // mutation: context 1's fetches are dropped entirely
+    let f = prove_contexts_with("m", l, taus, contexts, |n| {
+        let c = pipe.context_of(n, contexts);
+        (c != 1).then_some(c)
+    })
+    .expect("skipped fetch must be caught");
+    assert_eq!(f.code, "context-skip");
+    assert_eq!(f.severity, Severity::Error);
+    assert_eq!(f.context, Some(1), "finding must name the starved context");
+
+    // mutation: a fetch routed past the bank count
+    let f = prove_contexts_with("m", l, taus, contexts, |_| Some(contexts))
+        .expect("out-of-range fetch must be caught");
+    assert_eq!(f.code, "context-out-of-range");
+    assert_eq!(f.context, Some(contexts));
+}
+
+#[test]
 fn malformed_manifest_documents_are_rejected() {
     // not JSON at all
     assert!(Manifest::parse("{nope").is_err());

@@ -261,7 +261,7 @@ fn analyzer_report_schema() {
             "{what}: unknown pass '{pass}'"
         );
         // counterexample coordinates are optional, but typed when present
-        for key in ["junction", "cycle", "bank"] {
+        for key in ["junction", "cycle", "bank", "context"] {
             if let Some(v) = f.get(key) {
                 assert!(
                     v.as_usize().is_some(),

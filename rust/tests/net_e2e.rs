@@ -4,7 +4,11 @@
 //! micro-batcher must coalesce pipelined socket traffic into engine
 //! batches, shutdown must drain in-flight socket requests, the
 //! connection cap must shed with `Busy`, and garbage bytes must get a
-//! strict error + close.
+//! strict error + close. The multi-tenant half: per-context socket
+//! round-trips must match the in-process path bank for bank, invalid
+//! context indices are shed with `BadRequest`, health advertises the
+//! hosted context count, and drain covers in-flight groups spread
+//! across contexts.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -152,6 +156,7 @@ fn socket_load_generator_reports_coalescing() {
         clients: 4,
         requests: 24,
         pipeline: 6,
+        contexts: 1,
     };
     let reports = loadgen::run_socket_load(server.local_addr(), &models, &spec, 36).unwrap();
     assert_eq!(reports.len(), 1);
@@ -259,6 +264,142 @@ fn garbage_bytes_get_error_frame_and_close() {
         1
     );
     stop_pair(svc, server);
+}
+
+/// Service + TCP front-end over one `tiny` model hosting `contexts`
+/// tenant banks.
+fn start_multi_pair(
+    seed: u64,
+    contexts: usize,
+    cfg: NetServerConfig,
+) -> (Arc<InferenceService>, NetServer) {
+    let spec = loadgen::model_spec(dir(), "tiny", 0.25, seed)
+        .unwrap()
+        .with_contexts(contexts);
+    let svc = Arc::new(
+        InferenceService::start(
+            dir(),
+            vec![spec],
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_depth: 64,
+                tune_kernel_threads: false,
+            },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+    (svc, server)
+}
+
+/// Per-context socket round-trip: health advertises the hosted context
+/// count, `classify_ctx` over TCP answers exactly like the in-process
+/// client on the same bank, and a context index past the bank count is
+/// refused with `BadRequest` — after which the connection still serves.
+#[test]
+fn socket_routing_matches_in_process_per_context() {
+    let contexts = 3usize;
+    let (svc, server) = start_multi_pair(41, contexts, NetServerConfig::default());
+    let local = svc.client("tiny").unwrap();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    let health = net.health().unwrap();
+    assert_eq!(health.models.len(), 1);
+    assert_eq!(
+        health.models[0].contexts as usize, contexts,
+        "health must advertise the hosted context count"
+    );
+    let mut rng = Rng::new(0x41_E2E);
+    for i in 0..24 {
+        let ctx = i % contexts;
+        let x: Vec<f32> = (0..local.features())
+            .map(|_| rng.uniform() * 2.0 - 1.0)
+            .collect();
+        let p_local = local.classify_ctx(x.clone(), ctx).unwrap();
+        let p_net = net.classify_ctx("tiny", ctx as u32, x).unwrap();
+        assert_eq!(
+            p_net.class, p_local.class,
+            "sample {i} (context {ctx}): socket diverged from in-process"
+        );
+    }
+    // one past the last bank: typed rejection, not a silent remap
+    match net.classify_ctx("tiny", contexts as u32, vec![0.0; local.features()]) {
+        Err(NetClientError::Remote { code, message }) => {
+            assert_eq!(code, pds::net::ErrorCode::BadRequest);
+            assert!(
+                message.contains("context"),
+                "rejection must name the context: {message}"
+            );
+        }
+        other => panic!("expected a BadRequest context rejection, got {other:?}"),
+    }
+    // the connection survives the rejection
+    net.classify_ctx("tiny", 0, vec![0.0; local.features()]).unwrap();
+    stop_pair(svc, server);
+}
+
+/// The socket load generator's context axis: with requests spread
+/// round-robin over 4 tenants through one socket front-end, every
+/// request is served and the report records the context spread — the
+/// code path `benches/net_load.rs` records into `BENCH_serve.json`.
+#[test]
+fn socket_load_generator_spreads_across_contexts() {
+    let (svc, server) = start_multi_pair(42, 4, NetServerConfig::default());
+    let models = vec!["tiny".to_string()];
+    let spec = SocketLoadSpec {
+        clients: 4,
+        requests: 24,
+        pipeline: 6,
+        contexts: 4,
+    };
+    let reports = loadgen::run_socket_load(server.local_addr(), &models, &spec, 43).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(r.served, (spec.clients * spec.requests) as u64);
+    assert_eq!(r.contexts, 4, "report must record the context spread");
+    assert!(r.p50 <= r.p95 && r.p95 <= r.p99);
+    stop_pair(svc, server);
+}
+
+/// Drain with in-flight requests spread across contexts: two pipelined
+/// groups parked in a never-expiring batch window, each targeting a
+/// different tenant bank, must both be answered in full by the
+/// shutdown drain.
+#[test]
+fn server_shutdown_drains_in_flight_across_contexts() {
+    let (svc, server) = start_multi_pair(
+        44,
+        2,
+        NetServerConfig {
+            max_connections: 8,
+            batch_window: Duration::from_secs(120),
+        },
+    );
+    let addr = server.local_addr();
+    let features = svc.client("tiny").unwrap().features();
+    let workers: Vec<_> = (0..2u32)
+        .map(|ctx| {
+            std::thread::spawn(move || {
+                let mut net = NetClient::connect(addr).unwrap();
+                let group: Vec<Vec<f32>> = (0..4).map(|_| vec![0.25; features]).collect();
+                net.classify_pipelined_ctx("tiny", ctx, &group)
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(150));
+    let t0 = std::time::Instant::now();
+    stop_pair(svc, server);
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "drain must not wait out the batch window"
+    );
+    for (ctx, w) in workers.into_iter().enumerate() {
+        let preds = w
+            .join()
+            .unwrap()
+            .unwrap_or_else(|e| panic!("context {ctx}: in-flight group dropped: {e}"));
+        assert_eq!(preds.len(), 4);
+    }
 }
 
 /// A request for an unserved model errors by name; the connection

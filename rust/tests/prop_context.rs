@@ -1,0 +1,395 @@
+//! Tenant-isolation property battery for the context-switched
+//! multi-tenant pipeline (`nn::pipeline::MultiPipelinedTrainer` over
+//! `hw::context::ContextBank`):
+//!
+//! - **Isolation (f32).** Training `C` contexts interleaved through one
+//!   junction schedule is *bit-identical*, per context, to `C`
+//!   independent single-tenant runs at the same effective stride —
+//!   across randomized context counts, admission orders, and pipeline
+//!   depths.
+//! - **Isolation (Qm.n).** The quantized image of each tenant's trained
+//!   network (weights, biases, quantized logits) is likewise identical
+//!   between the interleaved and solo runs.
+//! - **Degenerate case.** One context at depth 1 *is* the sequential
+//!   trainer, bit for bit.
+//! - **Non-vacuity.** Injected context-bank defects (aliasing two
+//!   tenants onto one bank, skipping a tenant's fetches) are caught by
+//!   the per-context audit with a typed error naming the offending
+//!   context — and visibly break the isolation property, proving the
+//!   parity assertions above can actually fail.
+//!
+//! Seeds come from `PDS_PROP_SEED` when set (CI pins it); failures
+//! print the per-case seed via `util::prop::for_all`.
+
+use pds::data::Spec;
+use pds::hw::context::{ContextError, ContextFault};
+use pds::nn::fixed::{FixedSparseNet, QFormat};
+use pds::nn::pipeline::{
+    context_seed, MultiPipelinedTrainer, PipelineConfig, PipelinedTrainer,
+};
+use pds::nn::sparse::SparseNet;
+use pds::nn::trainer::{self, Network, TrainConfig};
+use pds::sparsity::config::{DoutConfig, NetConfig};
+use pds::sparsity::pattern::NetPattern;
+use pds::sparsity::{generate, Method};
+use pds::util::prop::for_all;
+use pds::util::rng::Rng;
+
+/// Root seed: `PDS_PROP_SEED` when set (CI pins it), a fixed default
+/// otherwise — property runs are always reproducible from the log.
+fn prop_seed() -> u64 {
+    std::env::var("PDS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1812_C0DE)
+}
+
+fn pattern_for(layers: &[usize], dout: &[usize], seed: u64) -> NetPattern {
+    let netc = NetConfig::new(layers.to_vec());
+    let mut rng = Rng::new(seed);
+    generate(
+        Method::Structured,
+        &netc,
+        &DoutConfig(dout.to_vec()),
+        None,
+        &mut rng,
+    )
+}
+
+fn toy_splits(
+    features: usize,
+    classes: usize,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (pds::data::Dataset, pds::data::Dataset) {
+    let spec = Spec {
+        name: "ctx-test",
+        features,
+        classes,
+        latent_dim: (features / 3).max(4),
+        shaping: pds::data::Shaping::Continuous,
+        separation: 3.0,
+        noise: 0.4,
+    };
+    let s = spec.splits(n_train, 0, n_test, seed);
+    (s.train, s.test)
+}
+
+/// One randomized multi-tenant scenario: how many tenants share the
+/// schedule, in which admission order, at which pipeline depth.
+#[derive(Debug)]
+struct Scenario {
+    contexts: usize,
+    admission: Vec<usize>,
+    depth: usize,
+    seed: u64,
+}
+
+fn arb_scenario(r: &mut Rng) -> Scenario {
+    let contexts = 2 + r.below(3); // 2..=4 tenants
+    let mut admission: Vec<usize> = (0..contexts).collect();
+    r.shuffle(&mut admission);
+    let depth = r.below(3); // 0 = full schedule, 1, 2
+    Scenario {
+        contexts,
+        admission,
+        depth,
+        seed: r.next_u64() >> 1,
+    }
+}
+
+const LAYERS: [usize; 3] = [12, 10, 6];
+
+fn cfg_for(sc: &Scenario) -> PipelineConfig {
+    PipelineConfig {
+        epochs: 2,
+        batch: 16,
+        depth: sc.depth,
+        l2: 1e-4,
+        seed: sc.seed,
+        ..Default::default()
+    }
+}
+
+/// Build the interleaved multi-tenant trainer for a scenario.
+fn multi_for(sc: &Scenario, pattern: &NetPattern) -> Result<MultiPipelinedTrainer, String> {
+    MultiPipelinedTrainer::from_pattern(&LAYERS, pattern, &cfg_for(sc), sc.contexts)
+        .map_err(|e| format!("multi build: {e}"))?
+        .with_admission(sc.admission.clone())
+        .map_err(|e| format!("admission: {e}"))
+}
+
+/// Build and train tenant `c`'s solo twin: the same per-context seed at
+/// the same effective stride, alone on the schedule.
+fn solo_twin(
+    sc: &Scenario,
+    pattern: &NetPattern,
+    stride: usize,
+    c: usize,
+    train_ds: &pds::data::Dataset,
+    test_ds: &pds::data::Dataset,
+) -> Result<(PipelinedTrainer, pds::nn::trainer::History), String> {
+    let mut tcfg = cfg_for(sc);
+    tcfg.seed = context_seed(tcfg.seed, c);
+    let mut solo = PipelinedTrainer::from_pattern_with_stride(&LAYERS, pattern, &tcfg, stride)
+        .map_err(|e| format!("solo build ctx {c}: {e}"))?;
+    let hist = solo
+        .train(train_ds, test_ds)
+        .map_err(|e| format!("solo train ctx {c}: {e}"))?;
+    Ok((solo, hist))
+}
+
+/// Bit-compare two nets junction by junction.
+fn nets_bit_identical(a: &SparseNet, b: &SparseNet) -> Result<(), String> {
+    for (j, (aj, bj)) in a.junctions.iter().zip(&b.junctions).enumerate() {
+        for (e, (x, y)) in aj.wc.iter().zip(&bj.wc).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("junction {j} weight {e}: {x} vs {y}"));
+            }
+        }
+        for (n, (x, y)) in aj.bias.iter().zip(&bj.bias).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("junction {j} bias {n}: {x} vs {y}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn interleaved_training_is_bit_identical_to_solo_runs() {
+    let pattern = pattern_for(&LAYERS, &[5, 3], 3);
+    let (train_ds, test_ds) = toy_splits(12, 6, 96, 36, 7);
+    for_all(
+        "C interleaved tenants == C solo runs, bit for bit, any admission order",
+        prop_seed(),
+        6,
+        arb_scenario,
+        |sc| {
+            let mut multi = multi_for(sc, &pattern)?;
+            let hists = multi
+                .train(&train_ds, &test_ds)
+                .map_err(|e| format!("multi train: {e}"))?;
+            multi
+                .audit_contexts()
+                .map_err(|e| format!("context audit: {e}"))?;
+            multi
+                .audit_banked()
+                .map_err(|e| format!("banked audit: {e}"))?;
+            for c in 0..sc.contexts {
+                let (solo, solo_hist) =
+                    solo_twin(sc, &pattern, multi.stride(), c, &train_ds, &test_ds)?;
+                // epoch histories agree to the bit
+                if solo_hist.epochs.len() != hists[c].epochs.len() {
+                    return Err(format!("ctx {c}: epoch count diverged"));
+                }
+                for (a, b) in solo_hist.epochs.iter().zip(&hists[c].epochs) {
+                    if a.train_loss.to_bits() != b.train_loss.to_bits() {
+                        return Err(format!(
+                            "ctx {c} epoch {}: loss {} vs {}",
+                            a.epoch, a.train_loss, b.train_loss
+                        ));
+                    }
+                    if a.train_acc != b.train_acc || a.test_acc != b.test_acc {
+                        return Err(format!("ctx {c} epoch {}: accuracy diverged", a.epoch));
+                    }
+                }
+                // ...and so do all trained parameters
+                nets_bit_identical(solo.net(), multi.net(c))
+                    .map_err(|e| format!("ctx {c}: {e}"))?;
+                // the per-context staleness closed form holds in the
+                // interleave exactly as it does solo
+                for i in 1..=LAYERS.len() - 1 {
+                    if multi.expected_staleness(c, i) != solo.expected_staleness(i) {
+                        return Err(format!("ctx {c} junction {i}: staleness law diverged"));
+                    }
+                    if multi.measured_staleness(c, i) != solo.measured_staleness(i) {
+                        return Err(format!(
+                            "ctx {c} junction {i}: measured staleness diverged"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantized_tenant_images_are_identical_to_solo_runs() {
+    let pattern = pattern_for(&LAYERS, &[5, 3], 3);
+    let (train_ds, test_ds) = toy_splits(12, 6, 96, 36, 7);
+    let fmt = QFormat::new(5, 10);
+    for_all(
+        "Qm.n image of each interleaved tenant == its solo run's image",
+        prop_seed() ^ 0x71,
+        3,
+        arb_scenario,
+        |sc| {
+            let mut multi = multi_for(sc, &pattern)?;
+            multi
+                .train(&train_ds, &test_ds)
+                .map_err(|e| format!("multi train: {e}"))?;
+            // one shared probe batch, quantized once
+            let idxs: Vec<usize> = (0..test_ds.n.min(16)).collect();
+            let (x, _) = test_ds.gather(&idxs);
+            for c in 0..sc.contexts {
+                let (solo, _) =
+                    solo_twin(sc, &pattern, multi.stride(), c, &train_ds, &test_ds)?;
+                let qm = FixedSparseNet::from_f32(multi.net(c), fmt);
+                let qs = FixedSparseNet::from_f32(solo.net(), fmt);
+                for (j, (aj, bj)) in qm.junctions.iter().zip(&qs.junctions).enumerate() {
+                    if aj.wq != bj.wq {
+                        return Err(format!("ctx {c} junction {j}: quantized weights"));
+                    }
+                    if aj.bq != bj.bq {
+                        return Err(format!("ctx {c} junction {j}: quantized biases"));
+                    }
+                }
+                // identical words must produce identical quantized logits
+                let (lm, sm) = qm.logits(&x, idxs.len());
+                let (ls, ss) = qs.logits(&x, idxs.len());
+                if sm != ss {
+                    return Err(format!("ctx {c}: saturation counts diverged"));
+                }
+                for (k, (a, b)) in lm.iter().zip(&ls).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("ctx {c} logit {k}: {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One context at depth 1 collapses the whole multi-tenant machinery to
+/// the sequential trainer — bit for bit, through the context bank.
+#[test]
+fn single_context_depth_1_is_the_sequential_trainer() {
+    let pattern = pattern_for(&LAYERS, &[5, 3], 5);
+    let (train_ds, test_ds) = toy_splits(12, 6, 96, 36, 11);
+    let seed = 5u64;
+
+    let mut init_rng = Rng::new(seed);
+    let snet = SparseNet::init_he(&pattern, 0.1, &mut init_rng);
+    let mut seq_net = Network::Sparse(snet);
+    let h_seq = trainer::train(
+        &mut seq_net,
+        &train_ds,
+        &test_ds,
+        &TrainConfig {
+            epochs: 3,
+            batch: 16,
+            l2: 1e-4,
+            seed,
+            ..Default::default()
+        },
+    );
+
+    let mut multi = MultiPipelinedTrainer::from_pattern(
+        &LAYERS,
+        &pattern,
+        &PipelineConfig {
+            epochs: 3,
+            batch: 16,
+            depth: 1,
+            l2: 1e-4,
+            seed,
+            ..Default::default()
+        },
+        1,
+    )
+    .unwrap();
+    assert_eq!(multi.contexts(), 1);
+    let hists = multi.train(&train_ds, &test_ds).unwrap();
+    multi.audit_contexts().unwrap();
+
+    assert_eq!(h_seq.epochs.len(), hists[0].epochs.len());
+    for (a, b) in h_seq.epochs.iter().zip(&hists[0].epochs) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "epoch {}: {} vs {}",
+            a.epoch,
+            a.train_loss,
+            b.train_loss
+        );
+        assert_eq!(a.train_acc, b.train_acc, "epoch {} train acc", a.epoch);
+        assert_eq!(a.test_acc, b.test_acc, "epoch {} test acc", a.epoch);
+    }
+    let seq_snet = match &seq_net {
+        Network::Sparse(n) => n,
+        _ => unreachable!(),
+    };
+    nets_bit_identical(seq_snet, multi.net(0)).unwrap();
+}
+
+/// Mutation: alias tenant 1's state fetches onto tenant 0's bank. The
+/// per-context audit must fail with a typed error naming context 1, and
+/// the isolation property must visibly break — proving the parity
+/// assertions above are not vacuous.
+#[test]
+fn aliased_context_bank_is_caught_and_breaks_isolation() {
+    let pattern = pattern_for(&LAYERS, &[5, 3], 3);
+    let (train_ds, test_ds) = toy_splits(12, 6, 96, 36, 7);
+    let sc = Scenario {
+        contexts: 3,
+        admission: vec![0, 1, 2],
+        depth: 0,
+        seed: 21,
+    };
+    let mut multi = multi_for(&sc, &pattern).unwrap();
+    multi.inject_fault(ContextFault::Alias { from: 1, to: 0 });
+    multi.train(&train_ds, &test_ds).unwrap();
+
+    // the audit names the offending tenant
+    match multi.audit_contexts() {
+        Err(e @ ContextError::Aliased {
+            requested: 1,
+            effective: 0,
+        }) => assert_eq!(e.context(), Some(1)),
+        other => panic!("expected Aliased{{1 -> 0}}, got {other:?}"),
+    }
+
+    // ...and the isolation property actually fails: tenant 1's bank was
+    // never trained, so its weights cannot match the solo run's
+    let (solo, _) = solo_twin(&sc, &pattern, multi.stride(), 1, &train_ds, &test_ds).unwrap();
+    assert!(
+        nets_bit_identical(solo.net(), multi.net(1)).is_err(),
+        "aliased tenant still matched its solo twin — the parity check is vacuous"
+    );
+    // the untouched tenant 2 keeps running on its own bank: a defect on
+    // one tenant must not silently spill into the audit of another
+    let (solo2, _) = solo_twin(&sc, &pattern, multi.stride(), 2, &train_ds, &test_ds).unwrap();
+    nets_bit_identical(solo2.net(), multi.net(2)).unwrap();
+}
+
+/// Mutation: drop tenant 1's state fetches entirely. The audit must
+/// report the starved context by name.
+#[test]
+fn skipped_context_fetch_is_caught() {
+    let pattern = pattern_for(&LAYERS, &[5, 3], 3);
+    let (train_ds, test_ds) = toy_splits(12, 6, 96, 36, 7);
+    let sc = Scenario {
+        contexts: 2,
+        admission: vec![1, 0],
+        depth: 1,
+        seed: 23,
+    };
+    let mut multi = multi_for(&sc, &pattern).unwrap();
+    multi.inject_fault(ContextFault::Skip { context: 1 });
+    multi.train(&train_ds, &test_ds).unwrap();
+    match multi.audit_contexts() {
+        Err(e @ ContextError::Skipped { context: 1 }) => assert_eq!(e.context(), Some(1)),
+        other => panic!("expected Skipped{{1}}, got {other:?}"),
+    }
+    // the starved tenant's weights never moved off their initialization
+    let mut tcfg = cfg_for(&sc);
+    tcfg.seed = context_seed(tcfg.seed, 1);
+    let fresh =
+        PipelinedTrainer::from_pattern_with_stride(&LAYERS, &pattern, &tcfg, multi.stride())
+            .unwrap();
+    nets_bit_identical(fresh.net(), multi.net(1)).unwrap();
+}

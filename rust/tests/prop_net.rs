@@ -53,6 +53,7 @@ fn arb_frame(r: &mut Rng) -> Frame {
         0 => Frame::Request {
             id: r.next_u64(),
             model: arb_string(r, 16),
+            context: r.below(16) as u32,
             features: arb_features(r, 64),
         },
         1 => Frame::Response {
@@ -77,6 +78,7 @@ fn arb_frame(r: &mut Rng) -> Frame {
                     features: r.below(4096) as u32,
                     classes: r.below(64) as u32,
                     batch: (1 + r.below(512)) as u32,
+                    contexts: (1 + r.below(16)) as u32,
                 })
                 .collect(),
         },
@@ -85,6 +87,7 @@ fn arb_frame(r: &mut Rng) -> Frame {
         },
         6 => Frame::MetricsReply(MetricsSnapshot {
             model: arb_string(r, 16),
+            contexts: 1 + (r.below(16) as u64),
             requests: r.next_u64() >> 16,
             rejected: r.next_u64() >> 16,
             batches: r.next_u64() >> 16,
@@ -205,7 +208,7 @@ fn decoder_rejects_oversized_headers_without_allocating() {
             let declared = MAX_PAYLOAD + 1 + r.below(1 << 20);
             let mut h = Vec::with_capacity(HEADER_LEN);
             h.extend_from_slice(b"PD");
-            h.push(1); // current version
+            h.push(2); // current version
             h.push((1 + r.below(8)) as u8);
             h.extend_from_slice(&(declared as u32).to_le_bytes());
             (h, declared)
@@ -226,7 +229,8 @@ fn decoder_rejects_unknown_versions_and_types() {
         |r| {
             let bytes = arb_frame(r).encode();
             let bad_version = r.below(2) == 0;
-            (bytes, bad_version, (2 + r.below(250)) as u8)
+            // 3.. can never collide with the current version (2)
+            (bytes, bad_version, (3 + r.below(250)) as u8)
         },
         |(bytes, bad_version, bad)| {
             let mut b = bytes.clone();
@@ -237,7 +241,7 @@ fn decoder_rejects_unknown_versions_and_types() {
                     other => Err(format!("expected UnknownVersion, got {other:?}")),
                 }
             } else {
-                // type tags 9..=255 are unassigned in protocol v1
+                // type tags 9..=255 are unassigned in protocol v2
                 let tag = (*bad).max(9);
                 b[3] = tag;
                 match Frame::decode(&b) {

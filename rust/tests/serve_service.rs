@@ -1,12 +1,17 @@
 //! Integration tests for the multi-worker sharded inference service:
-//! cross-model stress, bounded-queue backpressure totality, and metrics
-//! sanity (occupancy histogram vs request counters, latency quantiles).
+//! cross-model stress, bounded-queue backpressure totality, metrics
+//! sanity (occupancy histogram vs request counters, latency quantiles),
+//! and the multi-tenant context battery: many-contexts-per-worker
+//! routing parity against single-tenant twin services, `Busy` shed and
+//! drain with in-flight requests spread across contexts.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use pds::coordinator::loadgen::{self, LoadSpec};
-use pds::coordinator::{InferenceService, ServeError, ServerConfig};
+use pds::coordinator::{
+    context_params, InferenceService, ModelSpec, ServeError, ServerConfig,
+};
 use pds::util::rng::Rng;
 
 fn dir() -> &'static str {
@@ -158,6 +163,7 @@ fn metrics_occupancy_and_latency_are_consistent() {
         requests: 25,
         think_time: Duration::ZERO,
         burst: 1,
+        contexts: 1,
     };
     let reports = loadgen::run_load(&svc, &models, &load, 9).unwrap();
     assert_eq!(reports.len(), 1);
@@ -285,4 +291,198 @@ fn quantized_model_serves_and_matches_f32_twin() {
     assert_eq!(mq.requests.load(Ordering::Relaxed), n as u64);
     svc_f.shutdown().unwrap();
     svc_q.shutdown().unwrap();
+}
+
+/// Many-contexts-per-worker routing parity: a service hosting C tenant
+/// contexts of one model must answer `classify_ctx(x, c)` exactly like
+/// a dedicated single-tenant service built from context `c`'s parameter
+/// bank. Each twin is constructed out-of-band with
+/// `coordinator::context_params` — the same derivation the service uses
+/// internally — so agreement proves the worker fetched the right bank,
+/// and a cross-context disagreement proves the banks are distinct
+/// (routing is not collapsing tenants onto one set of weights).
+#[test]
+fn multi_context_routing_matches_single_tenant_twins() {
+    let contexts = 3usize;
+    let spec = loadgen::model_spec(dir(), "tiny", 0.25, 5)
+        .unwrap()
+        .with_contexts(contexts);
+    let pattern = spec.pattern.clone();
+    let layers = pds::runtime::Manifest::probe(dir(), "tiny").unwrap().layers;
+    let svc = InferenceService::start(dir(), vec![spec.clone()], ServerConfig::default()).unwrap();
+    let client = svc.client("tiny").unwrap();
+    assert_eq!(client.contexts(), contexts);
+
+    // one shared probe set for every context, so per-context class
+    // vectors are directly comparable
+    let mut rng = Rng::new(0xC0_07E7);
+    let probes: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..client.features()).map(|_| rng.normal()).collect())
+        .collect();
+
+    let mut classes_by_ctx: Vec<Vec<usize>> = Vec::new();
+    for ctx in 0..contexts {
+        let twin_spec = ModelSpec {
+            params: Some(context_params(&layers, &pattern, None, ctx)),
+            contexts: 1,
+            ..spec.clone()
+        };
+        let twin =
+            InferenceService::start(dir(), vec![twin_spec], ServerConfig::default()).unwrap();
+        let tc = twin.client("tiny").unwrap();
+        let mut classes = Vec::new();
+        for x in &probes {
+            let pm = client.classify_ctx(x.clone(), ctx).unwrap();
+            let pt = tc.classify(x.clone()).unwrap();
+            assert_eq!(
+                pm.class, pt.class,
+                "context {ctx}: multi-tenant answer diverged from its single-tenant twin"
+            );
+            assert_eq!(pm.context, ctx, "prediction must carry its own context");
+            classes.push(pm.class);
+        }
+        twin.shutdown().unwrap();
+        classes_by_ctx.push(classes);
+    }
+    assert!(
+        classes_by_ctx.windows(2).any(|w| w[0] != w[1]),
+        "independent per-context banks must not classify identically on every probe"
+    );
+    svc.shutdown().unwrap();
+}
+
+/// Bounded-queue shed with the load spread across tenant contexts:
+/// every `classify_ctx` call must resolve to served-or-rejected (no
+/// hang, no cross-context interference), every served prediction must
+/// come back tagged with the context it was submitted under, and the
+/// service counters must match the client-observed outcomes exactly.
+#[test]
+fn busy_shed_spreads_across_contexts() {
+    let contexts = 4usize;
+    let specs = vec![loadgen::model_spec(dir(), "tiny", 0.25, 2)
+        .unwrap()
+        .with_contexts(contexts)];
+    let svc = InferenceService::start(
+        dir(),
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            queue_depth: 1,
+            tune_kernel_threads: false,
+        },
+    )
+    .unwrap();
+    let served = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..16u64 {
+            let client = svc.client("tiny").unwrap();
+            let served = &served;
+            let rejected = &rejected;
+            let ctx = (c as usize) % contexts;
+            s.spawn(move || {
+                let mut rng = Rng::new(c);
+                for _ in 0..10 {
+                    let x: Vec<f32> = (0..client.features()).map(|_| rng.normal()).collect();
+                    match client.classify_ctx(x, ctx) {
+                        Ok(p) => {
+                            assert!(p.class < client.classes());
+                            assert_eq!(p.context, ctx, "prediction routed to the wrong tenant");
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ServeError::Busy) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let m = svc.metrics("tiny").unwrap();
+    assert_eq!(
+        served.load(Ordering::Relaxed) + rejected.load(Ordering::Relaxed),
+        160,
+        "every submission must resolve to served or rejected"
+    );
+    assert_eq!(m.requests.load(Ordering::Relaxed), served.load(Ordering::Relaxed));
+    assert_eq!(m.rejected.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed));
+    svc.shutdown().unwrap();
+}
+
+/// Shutdown drains in-flight requests that are spread across tenant
+/// contexts: same parked-batch setup as
+/// [`shutdown_drains_in_flight_requests`], but each request targets a
+/// different context, so the final flush must group one partial batch
+/// per context and still complete every prediction with its own
+/// context tag.
+#[test]
+fn shutdown_drains_in_flight_across_contexts() {
+    let contexts = 4usize;
+    let specs = vec![loadgen::model_spec(dir(), "tiny", 0.25, 8)
+        .unwrap()
+        .with_contexts(contexts)];
+    let svc = InferenceService::start(
+        dir(),
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(500),
+            workers: 1,
+            queue_depth: 64,
+            tune_kernel_threads: false,
+        },
+    )
+    .unwrap();
+    let n = 8usize;
+    let submitted = std::sync::Barrier::new(n + 1);
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|c| {
+                let client = svc.client("tiny").unwrap();
+                let submitted = &submitted;
+                let ctx = c % contexts;
+                s.spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    let x: Vec<f32> =
+                        (0..client.features()).map(|_| rng.normal()).collect();
+                    let pending =
+                        client.submit_ctx(x, ctx).expect("queue far below capacity");
+                    submitted.wait();
+                    (ctx, pending.wait())
+                })
+            })
+            .collect();
+        submitted.wait();
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = std::time::Instant::now();
+        svc.shutdown().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(450),
+            "shutdown must cut the batch wait short, not sit it out"
+        );
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, (ctx, r)) in results.iter().enumerate() {
+        let pred = r.as_ref().unwrap_or_else(|e| {
+            panic!("in-flight request {i} (context {ctx}) was dropped on shutdown: {e}")
+        });
+        assert!(pred.class < 8);
+        assert_eq!(pred.context, *ctx, "drained prediction lost its context");
+    }
+}
+
+/// A context index past the hosted bank count is a caller bug, refused
+/// loudly at the submission boundary rather than silently wrapped onto
+/// another tenant's bank.
+#[test]
+#[should_panic(expected = "out of range")]
+fn out_of_range_context_is_refused() {
+    let specs = vec![loadgen::model_spec(dir(), "tiny", 0.25, 3)
+        .unwrap()
+        .with_contexts(2)];
+    let svc = InferenceService::start(dir(), specs, ServerConfig::default()).unwrap();
+    let client = svc.client("tiny").unwrap();
+    let x = vec![0.0f32; client.features()];
+    let _ = client.classify_ctx(x, 2);
 }
