@@ -1,0 +1,342 @@
+//! Activation-sparsity bench: sparse-sparse execution (pre-defined
+//! weight sparsity + run-time top-k activation masking, `nn::actsparse`)
+//! against the weight-sparse-only kernels on the same nets, at three
+//! levels —
+//!
+//! 1. **kernel**: batched forward throughput of
+//!    `SparseNet::logits_act` vs `SparseNet::logits` (f32) and
+//!    `FixedSparseNet::logits_q_act` vs `logits_q` (Q5.10) on two
+//!    Table-II configs, swept over a density axis (top-k fractions
+//!    1, 1/2, 1/4, 1/8 of the hidden width) with the *achieved*
+//!    activation density and the argmax agreement against the unmasked
+//!    net recorded at every point,
+//! 2. **train**: fused native train-step wall time with and without an
+//!    `ActSpec` on the manifest entry (the sparse-sparse `step_act`
+//!    path vs the dense-activation reference),
+//! 3. **service**: sustained req/s of the multi-worker inference
+//!    service with and without `--act-topk`, f32 and quantized
+//!    ([`pds::coordinator::loadgen::bench_service`]).
+//!
+//! Merges an `actsparse` section into `BENCH_serve.json` (kernel +
+//! service) and `BENCH_train.json` (train) at the repo root, preserving
+//! the sibling benches' sections.
+//!
+//!     cargo bench --bench actsparse
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use pds::coordinator::loadgen::{self, LoadSpec};
+use pds::nn::actsparse::ActSpec;
+use pds::nn::fixed::{FixedSparseNet, QFormat};
+use pds::nn::sparse::SparseNet;
+use pds::runtime::Engine;
+use pds::util::json::Json;
+use pds::util::parallel;
+use pds::util::rng::Rng;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Median wall-time of `reps` runs of `f`, in milliseconds.
+fn time_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+/// Argmax agreement between two logit matrices, as a fraction.
+fn agreement(a: &[f32], b: &[f32], batch: usize, classes: usize) -> f64 {
+    let mut agree = 0usize;
+    for i in 0..batch {
+        let row = |l: &[f32]| {
+            let r = &l[i * classes..(i + 1) * classes];
+            (0..classes).max_by(|&x, &y| r[x].total_cmp(&r[y])).unwrap()
+        };
+        if row(a) == row(b) {
+            agree += 1;
+        }
+    }
+    agree as f64 / batch.max(1) as f64
+}
+
+/// Kernel-level sweep for one Table-II config: f32 and Q5.10 forward
+/// throughput, weight-sparse-only vs sparse-sparse, over the top-k
+/// density axis. Returns the config's JSON subsection.
+fn kernel_sweep(dir: &str, config: &str, fmt: QFormat, reps: usize) -> Json {
+    let layers = pds::runtime::Manifest::probe(dir, config).unwrap().layers;
+    let batch = 256usize;
+    let classes = *layers.last().unwrap();
+    let spec = loadgen::model_spec(dir, config, 0.25, 17).unwrap();
+    let mut rng = Rng::new(17);
+    let snet = SparseNet::init_he(&spec.pattern, 0.1, &mut rng);
+    let qnet = FixedSparseNet::from_f32(&snet, fmt);
+    let x: Vec<f32> = (0..batch * layers[0])
+        .map(|_| rng.uniform() * 2.0 - 1.0)
+        .collect();
+    let xq = fmt.quantize_slice(&x);
+
+    // weight-sparse-only baselines
+    let (base_logits, _) = (snet.logits(&x, batch), ());
+    let f32_base_ms = time_ms(reps, || {
+        snet.logits(&x, batch);
+    });
+    let q_base_ms = time_ms(reps, || {
+        qnet.logits_q(&xq, batch);
+    });
+
+    // density axis: top-k at 1, 1/2, 1/4, 1/8 of the hidden width
+    let hidden = &layers[1..layers.len() - 1];
+    let max_hidden = hidden.iter().copied().max().unwrap_or(1);
+    let min_hidden = hidden.iter().copied().min().unwrap_or(1);
+    let mut points = Vec::new();
+    for (label, k) in [
+        ("1", max_hidden),
+        ("1/2", (min_hidden / 2).max(1)),
+        ("1/4", (min_hidden / 4).max(1)),
+        ("1/8", (min_hidden / 8).max(1)),
+    ] {
+        let aspec = ActSpec::top_k(k);
+        let (act_logits, stats) = snet.logits_act(&x, batch, &aspec);
+        let f32_act_ms = time_ms(reps, || {
+            snet.logits_act(&x, batch, &aspec);
+        });
+        let (_, _, qstats) = qnet.logits_q_act(&xq, batch, &aspec);
+        let q_act_ms = time_ms(reps, || {
+            qnet.logits_q_act(&xq, batch, &aspec);
+        });
+        let agree = agreement(&base_logits, &act_logits, batch, classes);
+        println!(
+            "  {config} topk({k}) density {:.3}: f32 {f32_act_ms:.3} ms vs {f32_base_ms:.3} ms \
+             ({:.2}X), {fmt} {q_act_ms:.3} ms vs {q_base_ms:.3} ms ({:.2}X), \
+             argmax agreement {:.1}%",
+            stats.density(),
+            f32_base_ms / f32_act_ms.max(1e-9),
+            q_base_ms / q_act_ms.max(1e-9),
+            agree * 100.0,
+        );
+        points.push(obj(vec![
+            ("fraction", Json::Str(label.into())),
+            ("k", Json::Num(k as f64)),
+            ("density", Json::Num(stats.density())),
+            ("quant_density", Json::Num(qstats.density())),
+            ("f32_ms", Json::Num(f32_act_ms)),
+            ("f32_speedup", Json::Num(f32_base_ms / f32_act_ms.max(1e-9))),
+            ("quant_ms", Json::Num(q_act_ms)),
+            ("quant_speedup", Json::Num(q_base_ms / q_act_ms.max(1e-9))),
+            ("argmax_agreement", Json::Num(agree)),
+        ]));
+    }
+    obj(vec![
+        ("layers", Json::Arr(layers.iter().map(|&l| Json::Num(l as f64)).collect())),
+        ("batch", Json::Num(batch as f64)),
+        ("f32_base_ms", Json::Num(f32_base_ms)),
+        ("quant_base_ms", Json::Num(q_base_ms)),
+        ("densities", Json::Arr(points)),
+    ])
+}
+
+/// Fused native train-step wall time with and without an `ActSpec` on
+/// the manifest entry (same config, same seed, same minibatch).
+fn train_step_sweep(dir: &str, config: &str, k: usize, reps: usize) -> anyhow::Result<Json> {
+    let mut times = Vec::new();
+    let mut losses = Vec::new();
+    for act in [None, Some(ActSpec::top_k(k))] {
+        let mut engine = Engine::new(dir.to_string())?;
+        if let Some(spec) = act {
+            engine.manifest.configs.get_mut(config).unwrap().act = Some(spec);
+        }
+        let entry = engine.manifest.configs.get(config).unwrap();
+        let layers = entry.layers.clone();
+        let batch = entry.batch;
+        let netc = pds::sparsity::config::NetConfig::new(layers.clone());
+        let dout = pds::sparsity::config::DoutConfig(
+            entry
+                .gather_dout
+                .clone()
+                .unwrap_or_else(|| netc.fc_dout().0.clone()),
+        );
+        let mut rng = Rng::new(29);
+        let pattern = pds::sparsity::generate(pds::sparsity::Method::ClashFree, &netc, &dout, None, &mut rng);
+        let mut session =
+            pds::coordinator::TrainSession::new(&engine, config, &pattern, 1e-3, 1e-4, 29)?;
+        let x: Vec<f32> = (0..batch * layers[0]).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..batch)
+            .map(|_| (rng.uniform() * *layers.last().unwrap() as f32) as i32)
+            .collect();
+        session.step(&x, &y)?; // warmup
+        let mut last_loss = 0f32;
+        let ms = time_ms(reps, || {
+            last_loss = session.step(&x, &y).unwrap().loss;
+        });
+        times.push(ms);
+        losses.push(last_loss);
+        println!(
+            "  {config} train step ({}): {ms:.3} ms, loss {last_loss:.4}",
+            match act {
+                Some(a) => format!("{a}"),
+                None => "dense activations".into(),
+            }
+        );
+    }
+    Ok(obj(vec![
+        ("k", Json::Num(k as f64)),
+        ("dense_ms", Json::Num(times[0])),
+        ("act_ms", Json::Num(times[1])),
+        ("act_speedup", Json::Num(times[0] / times[1].max(1e-9))),
+        ("dense_loss", Json::Num(losses[0] as f64)),
+        ("act_loss", Json::Num(losses[1] as f64)),
+    ]))
+}
+
+fn main() {
+    let fmt = QFormat::default();
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let configs = ["mnist_fc2", "timit"];
+    println!("actsparse: sparse-sparse vs weight-sparse-only ({fmt} for the quantized lane)");
+
+    // -- kernel level: both Table-II configs, both formats --
+    let mut kernel = Vec::new();
+    for config in configs {
+        println!("== kernel sweep: {config} ==");
+        kernel.push((config, kernel_sweep(dir, config, fmt, 20)));
+    }
+
+    // -- train level: fused native step with/without the ActSpec --
+    let mut train = Vec::new();
+    for config in configs {
+        println!("== train step: {config} ==");
+        match train_step_sweep(dir, config, 16, 10) {
+            Ok(j) => train.push((config, j)),
+            Err(e) => {
+                eprintln!("actsparse: train sweep for {config} failed: {e:#}");
+                return;
+            }
+        }
+    }
+
+    // -- service level: serve with/without --act-topk, f32 and quant --
+    let models = vec!["mnist_fc2".to_string()];
+    let load = LoadSpec {
+        clients: 8,
+        requests: 100,
+        think_time: Duration::ZERO,
+        burst: 1,
+        contexts: 1,
+    };
+    let mut serve = Vec::new();
+    for (quant, act) in [
+        (None, None),
+        (None, Some(ActSpec::top_k(16))),
+        (Some(fmt), None),
+        (Some(fmt), Some(ActSpec::top_k(16))),
+    ] {
+        let label = format!(
+            "{}{}",
+            match quant {
+                Some(f) => format!("{f}"),
+                None => "f32".into(),
+            },
+            match act {
+                Some(a) => format!(" + {a}"),
+                None => String::new(),
+            }
+        );
+        println!("== service: {label} ==");
+        match loadgen::bench_service(
+            dir,
+            &models,
+            2,
+            256,
+            Duration::from_millis(2),
+            &load,
+            19,
+            quant,
+            act,
+        ) {
+            Ok(reports) => {
+                for r in &reports {
+                    r.print();
+                }
+                let rps: f64 = reports.iter().map(|r| r.throughput).sum();
+                let density = reports.first().map(|r| r.act_density).unwrap_or(1.0);
+                serve.push((label, quant.is_some(), act.is_some(), rps, density));
+            }
+            Err(e) => {
+                eprintln!("actsparse: service scenario '{label}' failed: {e:#}");
+                return;
+            }
+        }
+    }
+
+    // -- merge sections into the BENCH files --
+    let serve_section = obj(vec![
+        ("recorded", Json::Bool(true)),
+        ("format", Json::Str(format!("{fmt}"))),
+        (
+            "kernel_threads_total",
+            Json::Num(parallel::machine_threads() as f64),
+        ),
+        (
+            "kernel",
+            Json::Obj(
+                kernel
+                    .into_iter()
+                    .map(|(c, j)| (c.to_string(), j))
+                    .collect::<BTreeMap<_, _>>(),
+            ),
+        ),
+        (
+            "serve",
+            Json::Arr(
+                serve
+                    .iter()
+                    .map(|(label, quant, act, rps, density)| {
+                        obj(vec![
+                            ("scenario", Json::Str(label.clone())),
+                            ("quant", Json::Bool(*quant)),
+                            ("act", Json::Bool(*act)),
+                            ("rps", Json::Num(*rps)),
+                            ("density", Json::Num(*density)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out_serve = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match loadgen::write_bench_json(out_serve, obj(vec![("actsparse", serve_section)])) {
+        Ok(()) => println!("merged actsparse section into {out_serve}"),
+        Err(e) => eprintln!("actsparse: cannot write {out_serve}: {e}"),
+    }
+
+    let train_section = obj(vec![
+        ("recorded", Json::Bool(true)),
+        (
+            "train",
+            Json::Obj(
+                train
+                    .into_iter()
+                    .map(|(c, j)| (c.to_string(), j))
+                    .collect::<BTreeMap<_, _>>(),
+            ),
+        ),
+    ]);
+    let out_train = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
+    match loadgen::write_bench_json(out_train, obj(vec![("actsparse", train_section)])) {
+        Ok(()) => println!("merged actsparse section into {out_train}"),
+        Err(e) => eprintln!("actsparse: cannot write {out_train}: {e}"),
+    }
+}

@@ -113,6 +113,7 @@ fn main() {
             &load,
             13,
             quant,
+            None,
         ) {
             Ok(reports) => {
                 for r in &reports {

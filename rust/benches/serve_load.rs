@@ -42,6 +42,7 @@ fn main() {
             &load,
             7,
             None,
+            None,
         ) {
             Ok(reports) => {
                 for r in &reports {

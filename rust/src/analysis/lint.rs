@@ -92,9 +92,76 @@ pub fn lint_entry(config: &str, entry: &ConfigEntry) -> Vec<Finding> {
             ));
         }
     }
+    if let Some(act) = &entry.act {
+        out.extend(lint_act(config, entry, act, layers_ok));
+    }
     for (tag, program) in &entry.programs {
         out.extend(lint_program(config, entry, tag, program, layers_ok));
     }
+    out
+}
+
+/// Lint an activation-sparsity spec against the config's hidden-layer
+/// widths. A spec that selects nothing is an error (the network would
+/// emit constant logits); a spec that can never drop a neuron is a
+/// warning (pure overhead, weight-sparse-only in disguise).
+fn lint_act(
+    config: &str,
+    entry: &ConfigEntry,
+    act: &crate::nn::actsparse::ActSpec,
+    layers_ok: bool,
+) -> Vec<Finding> {
+    use crate::nn::actsparse::ActMode;
+    let mut out = Vec::new();
+    match act.mode {
+        ActMode::TopK(0) => {
+            out.push(Finding::new(
+                "lint",
+                "bad-act",
+                Severity::Error,
+                config,
+                "act_sparsity topk k=0 zeroes every hidden activation".to_string(),
+            ));
+        }
+        ActMode::TopK(k) => {
+            // hidden layers are layers[1..len-1]; the input layer and the
+            // logits are never masked
+            if layers_ok && entry.layers.len() > 2 {
+                let hidden = &entry.layers[1..entry.layers.len() - 1];
+                if hidden.iter().all(|&n| k >= n) {
+                    out.push(Finding::new(
+                        "lint",
+                        "act-degenerate",
+                        Severity::Warning,
+                        config,
+                        format!(
+                            "act_sparsity topk k={k} >= every hidden width {hidden:?}: \
+                             the mask is always all-ones (weight-sparse-only plus \
+                             selection overhead)"
+                        ),
+                    ));
+                }
+            }
+        }
+        ActMode::Threshold(t) => {
+            if !t.is_finite() || t < 0.0 {
+                out.push(Finding::new(
+                    "lint",
+                    "bad-act",
+                    Severity::Error,
+                    config,
+                    format!("act_sparsity threshold {t} must be finite and >= 0"),
+                ));
+            }
+        }
+    }
+    out.push(Finding::new(
+        "lint",
+        "act-spec",
+        Severity::Info,
+        config,
+        format!("activation sparsity enabled: {act} on hidden layers"),
+    ));
     out
 }
 
@@ -178,7 +245,14 @@ fn lint_program(
 }
 
 /// Keys [`Manifest::parse`] reads from a config object.
-const CONFIG_KEYS: &[&str] = &["layers", "batch", "gather_dout", "quant", "programs"];
+const CONFIG_KEYS: &[&str] = &[
+    "layers",
+    "batch",
+    "gather_dout",
+    "quant",
+    "act_sparsity",
+    "programs",
+];
 /// Keys the parser reads from a program object.
 const PROGRAM_KEYS: &[&str] = &["file", "inputs", "outputs"];
 /// Keys the parser reads from a tensor-spec object.
@@ -362,6 +436,59 @@ mod tests {
         assert!(lint_entry("tiny", &entry)
             .iter()
             .any(|f| f.code == "quant-tiny-range" && f.severity == Severity::Warning));
+    }
+
+    #[test]
+    fn act_spec_lint_findings() {
+        use crate::nn::actsparse::{ActMode, ActSpec};
+        // no spec -> no act findings at all (default report shape is pinned
+        // by tests/analyzer_mutations.rs)
+        let entry = Manifest::builtin().configs["tiny"].clone();
+        assert!(lint_entry("tiny", &entry)
+            .iter()
+            .all(|f| !f.code.starts_with("act") && f.code != "bad-act"));
+
+        // k=0 zeroes the network: error
+        let e = entry.clone().with_act(ActSpec::top_k(0));
+        assert!(lint_entry("tiny", &e)
+            .iter()
+            .any(|f| f.code == "bad-act" && f.severity == Severity::Error));
+
+        // k >= every hidden width: degenerate all-ones mask, warning
+        let e = entry.clone().with_act(ActSpec::top_k(10_000));
+        let fs = lint_entry("tiny", &e);
+        assert!(fs
+            .iter()
+            .any(|f| f.code == "act-degenerate" && f.severity == Severity::Warning));
+        assert!(fs
+            .iter()
+            .any(|f| f.code == "act-spec" && f.severity == Severity::Info));
+
+        // a sane spec lints clean apart from the info line
+        let e = entry.clone().with_act(ActSpec::top_k(4));
+        assert!(lint_entry("tiny", &e)
+            .iter()
+            .all(|f| f.severity != Severity::Error));
+
+        // non-finite threshold (unreachable via the parser, reachable via
+        // the builder) is an error
+        let e = entry.with_act(ActSpec {
+            mode: ActMode::Threshold(f32::NAN),
+        });
+        assert!(lint_entry("tiny", &e)
+            .iter()
+            .any(|f| f.code == "bad-act" && f.severity == Severity::Error));
+    }
+
+    #[test]
+    fn act_sparsity_is_a_known_manifest_key() {
+        let text = r#"{"configs": {"tiny": {
+            "layers": [32, 16, 8], "batch": 16,
+            "act_sparsity": {"mode": "topk", "k": 4},
+            "programs": {}}}}"#;
+        assert!(lint_text(text)
+            .iter()
+            .all(|f| f.code != "unknown-field"));
     }
 
     #[test]

@@ -105,6 +105,10 @@ pub struct LoadReport {
     pub mean_occupancy: f64,
     /// Requests served by a worker that stole them from a sibling shard.
     pub stolen: u64,
+    /// Achieved activation density over the run
+    /// ([`ModelMetrics::act_density`]): 1.0 when the model served
+    /// without an activation mask.
+    pub act_density: f64,
 }
 
 impl LoadReport {
@@ -147,6 +151,7 @@ impl LoadReport {
             Json::Num(self.mean_occupancy),
         );
         m.insert("stolen".to_string(), Json::Num(self.stolen as f64));
+        m.insert("act_density".to_string(), Json::Num(self.act_density));
         Json::Obj(m)
     }
 }
@@ -266,6 +271,7 @@ fn snapshot(
         batches: met.batches.load(Ordering::Relaxed),
         mean_occupancy: met.mean_occupancy(),
         stolen: met.stolen.load(Ordering::Relaxed),
+        act_density: met.act_density(),
     }
 }
 
@@ -274,7 +280,10 @@ fn snapshot(
 /// the per-model reports. The unit of comparison for the serve bench:
 /// same load, varying worker count — and, with `quant` set, f32 vs
 /// fixed-point execution of the same models under the same load
-/// (`quant_exec` bench, `serve-bench --quant`).
+/// (`quant_exec` bench, `serve-bench --quant`); with `act` set, the
+/// sparse-sparse execution of the same models (`actsparse` bench,
+/// `serve-bench --act-topk`).
+#[allow(clippy::too_many_arguments)]
 pub fn bench_service(
     artifacts_dir: impl AsRef<Path>,
     models: &[String],
@@ -284,6 +293,7 @@ pub fn bench_service(
     load: &LoadSpec,
     seed: u64,
     quant: Option<crate::nn::fixed::QFormat>,
+    act: Option<crate::nn::actsparse::ActSpec>,
 ) -> Result<Vec<LoadReport>> {
     let dir = artifacts_dir.as_ref();
     let specs = models
@@ -293,6 +303,7 @@ pub fn bench_service(
             model_spec(dir, m, 0.25, seed).map(|s| ModelSpec {
                 quant,
                 contexts: load.contexts.max(1),
+                act,
                 ..s
             })
         })

@@ -64,6 +64,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::nn::actsparse::{ActMode, ActSpec, ActStats};
 use crate::nn::fixed::{FixedSparseNet, QFormat};
 use crate::nn::sparse::SparseNet;
 use crate::runtime::{Engine, Manifest, Program, Value};
@@ -240,6 +241,12 @@ pub struct ModelMetrics {
     /// on f32-served models). A persistently nonzero count means the
     /// model's Qm.n format lacks integer headroom for its inputs.
     pub quant_saturations: AtomicU64,
+    /// Hidden-activation slots the activation mask kept live across all
+    /// served batches (zero on models served without an [`ActSpec`]).
+    pub act_active: AtomicU64,
+    /// Hidden-activation slots considered by the activation mask.
+    /// `act_active / act_total` is the achieved activation density.
+    pub act_total: AtomicU64,
     /// Submit-to-reply latency histogram (see [`LatencyHistogram`]).
     pub latency: LatencyHistogram,
     occupancy: Vec<AtomicU64>,
@@ -254,8 +261,28 @@ impl ModelMetrics {
             padded_rows: AtomicU64::new(0),
             stolen: AtomicU64::new(0),
             quant_saturations: AtomicU64::new(0),
+            act_active: AtomicU64::new(0),
+            act_total: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
             occupancy: (0..batch).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Achieved activation density across everything this model served:
+    /// live hidden-activation slots over slots considered. `1.0` when no
+    /// activation mask ran (nothing was dropped).
+    pub fn act_density(&self) -> f64 {
+        ActStats {
+            active: self.act_active.load(Ordering::Relaxed),
+            total: self.act_total.load(Ordering::Relaxed),
+        }
+        .density()
+    }
+
+    fn record_act(&self, stats: ActStats) {
+        if stats.total > 0 {
+            self.act_active.fetch_add(stats.active, Ordering::Relaxed);
+            self.act_total.fetch_add(stats.total, Ordering::Relaxed);
         }
     }
 
@@ -287,9 +314,14 @@ impl ModelMetrics {
             .filter(|(_, &c)| c > 0)
             .map(|(k, &c)| format!("{}:{c}", k + 1))
             .collect();
+        let act = if self.act_total.load(Ordering::Relaxed) > 0 {
+            format!(", act density {:.3}", self.act_density())
+        } else {
+            String::new()
+        };
         format!(
             "model {model}: {} served, {} rejected, {} batches (mean occupancy {:.1}/{batch}, \
-             {} stolen), {} padded rows, {} quant saturations\n  latency p50 {:?} p95 {:?} \
+             {} stolen), {} padded rows, {} quant saturations{act}\n  latency p50 {:?} p95 {:?} \
              p99 {:?}; occupancy histogram {{{}}}",
             self.requests.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -388,6 +420,11 @@ struct PreparedModel {
     params: Vec<Arc<Vec<Value>>>,
     /// Quantized-net bank (one per context) when serving Qm.n.
     qnets: Option<Vec<Arc<FixedSparseNet>>>,
+    /// Compacted f32 net bank (one per context) when serving with an
+    /// activation mask but no quantization — the sparse-sparse f32 path.
+    snets: Option<Vec<Arc<SparseNet>>>,
+    /// Activation-sparsity spec, if any (drives both act paths).
+    act: Option<ActSpec>,
 }
 
 /// Shared state of one served model: its shards, shape info and metrics.
@@ -600,6 +637,14 @@ pub struct ModelSpec {
     /// `1..C` serve independent per-tenant draws over the shared
     /// pattern — see [`context_params`] (CLI: `serve --contexts C`).
     pub contexts: usize,
+    /// Run-time activation sparsity ([`crate::nn::actsparse`]): when
+    /// set, every worker executes the sparse-sparse kernels — hidden
+    /// activations are masked per batch row and the CSR loops skip
+    /// inactive neurons — and the achieved density surfaces in
+    /// [`ModelMetrics::act_density`]. Composes with [`ModelSpec::quant`]
+    /// (selection then runs on raw Qm.n words). `None` serves
+    /// weight-sparse-only (CLI: `serve --act-topk K`).
+    pub act: Option<ActSpec>,
 }
 
 impl ModelSpec {
@@ -611,6 +656,7 @@ impl ModelSpec {
             params: None,
             quant: None,
             contexts: 1,
+            act: None,
         }
     }
 
@@ -623,6 +669,12 @@ impl ModelSpec {
     /// Host `contexts` tenant contexts (see [`ModelSpec::contexts`]).
     pub fn with_contexts(mut self, contexts: usize) -> ModelSpec {
         self.contexts = contexts;
+        self
+    }
+
+    /// Serve with run-time activation sparsity (see [`ModelSpec::act`]).
+    pub fn with_act(mut self, spec: ActSpec) -> ModelSpec {
+        self.act = Some(spec);
         self
     }
 }
@@ -757,6 +809,34 @@ impl InferenceService {
                 }
                 None => None,
             };
+            // activation sparsity: refuse degenerate specs at startup
+            // (k = 0 would zero every hidden layer; a bad threshold is
+            // unreachable via the manifest but reachable via the API),
+            // then compact each context's parameters once for the f32
+            // sparse-sparse path — the quantized path reuses `qnets`
+            let act = spec.act.or(entry.act);
+            if let Some(a) = &act {
+                match a.mode {
+                    ActMode::TopK(0) => anyhow::bail!(
+                        "'{}': act_sparsity topk k=0 zeroes every hidden activation",
+                        spec.config
+                    ),
+                    ActMode::Threshold(t) if !t.is_finite() || t < 0.0 => anyhow::bail!(
+                        "'{}': act_sparsity threshold {t} must be finite and >= 0",
+                        spec.config
+                    ),
+                    _ => {}
+                }
+            }
+            let snets: Option<Vec<Arc<SparseNet>>> = match (&act, &qnets) {
+                (Some(_), None) => Some(
+                    params
+                        .iter()
+                        .map(|p| Ok(Arc::new(sparse_net(&spec.pattern, p)?)))
+                        .collect::<Result<_>>()?,
+                ),
+                _ => None,
+            };
             prepared.push(PreparedModel {
                 config: spec.config,
                 layers,
@@ -764,6 +844,8 @@ impl InferenceService {
                 masks,
                 params,
                 qnets,
+                snets,
+                act,
             });
         }
         let mut prev_threads = None;
@@ -783,6 +865,8 @@ impl InferenceService {
             masks,
             params,
             qnets,
+            snets,
+            act,
         } in prepared
         {
             let core = Arc::new(ModelCore {
@@ -806,9 +890,13 @@ impl InferenceService {
                 let params = params.clone();
                 let masks = Arc::clone(&masks);
                 let qnets = qnets.clone();
+                let snets = snets.clone();
                 let max_wait = cfg.max_wait;
                 handles.push(std::thread::spawn(move || {
-                    worker_loop(core, w, dir, manifest, params, masks, qnets, max_wait, ready_tx)
+                    worker_loop(
+                        core, w, dir, manifest, params, masks, qnets, snets, act, max_wait,
+                        ready_tx,
+                    )
                 }));
             }
             models.insert(core.name.clone(), core);
@@ -975,6 +1063,17 @@ pub fn context_params(
     }
 }
 
+/// Compact a model's dense parameters (w/b interleaved, the `forward`
+/// signature order) into a CSR net — the startup step of f32
+/// sparse-sparse serving: compact once, mask per flush.
+fn sparse_net(pattern: &NetPattern, params: &[Value]) -> Result<SparseNet> {
+    let mut pairs = Vec::with_capacity(pattern.junctions.len());
+    for i in 0..pattern.junctions.len() {
+        pairs.push((params[2 * i].as_f32()?, params[2 * i + 1].as_f32()?));
+    }
+    Ok(SparseNet::from_pattern_dense(pattern, &pairs))
+}
+
 /// Compact + quantize a model's dense parameters (w/b interleaved, the
 /// `forward` signature order) into a fixed-point net — the startup step
 /// of quantized serving: quantize once, serve many.
@@ -1009,10 +1108,20 @@ enum ExecPath {
         x_idx: usize,
     },
     /// Fixed-point path: per-context quantized nets and one reusable
-    /// quantized input buffer.
+    /// quantized input buffer. With an [`ActSpec`] the workers run the
+    /// quantized sparse-sparse kernels (selection on raw Qm.n words).
     Quant {
         nets: Vec<Arc<FixedSparseNet>>,
         xq: Vec<i32>,
+        act: Option<ActSpec>,
+    },
+    /// f32 sparse-sparse path: per-context compacted CSR nets executed
+    /// with a fresh per-flush activation mask ([`SparseNet::logits_act`]),
+    /// bypassing the compiled program entirely.
+    Act {
+        nets: Vec<Arc<SparseNet>>,
+        spec: ActSpec,
+        x: Vec<f32>,
     },
 }
 
@@ -1048,16 +1157,24 @@ fn worker_loop(
     params: Vec<Arc<Vec<Value>>>,
     masks: Arc<Vec<Value>>,
     qnets: Option<Vec<Arc<FixedSparseNet>>>,
+    snets: Option<Vec<Arc<SparseNet>>>,
+    act: Option<ActSpec>,
     max_wait: Duration,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
     let (batch, features, classes) = (core.batch, core.features, core.classes);
-    let mut exec = match qnets {
-        Some(nets) => ExecPath::Quant {
+    let mut exec = match (qnets, snets) {
+        (Some(nets), _) => ExecPath::Quant {
             nets,
             xq: vec![0i32; batch * features],
+            act,
         },
-        None => {
+        (None, Some(nets)) => ExecPath::Act {
+            nets,
+            spec: act.expect("snets are only prepared alongside an ActSpec"),
+            x: vec![0f32; batch * features],
+        },
+        (None, None) => {
             let engine = match Engine::for_worker(&artifacts_dir, &manifest) {
                 Ok(e) => e,
                 Err(e) => {
@@ -1171,7 +1288,7 @@ fn worker_loop(
                     let out = prog.run(ctx_inputs)?;
                     argmax_rows(out[0].as_f32()?, occupancy, classes)
                 }
-                ExecPath::Quant { nets, xq } => {
+                ExecPath::Quant { nets, xq, act } => {
                     let net = &nets[ctx];
                     let fmt = net.fmt;
                     // input clips count as saturations: a clipped feature
@@ -1187,11 +1304,27 @@ fn worker_loop(
                         }
                     }
                     xq[occupancy * features..].fill(0);
-                    let (logits, sats) = net.logits_q(xq, batch);
+                    let (logits, sats) = match act {
+                        Some(aspec) => {
+                            let (logits, sats, stats) = net.logits_q_act(xq, batch, aspec);
+                            m.record_act(stats);
+                            (logits, sats)
+                        }
+                        None => net.logits_q(xq, batch),
+                    };
                     if sats + clipped > 0 {
                         m.quant_saturations
                             .fetch_add((sats + clipped) as u64, Ordering::Relaxed);
                     }
+                    argmax_rows(&logits, occupancy, classes)
+                }
+                ExecPath::Act { nets, spec, x } => {
+                    for (i, req) in group.iter().enumerate() {
+                        x[i * features..(i + 1) * features].copy_from_slice(&req.features);
+                    }
+                    x[occupancy * features..].fill(0.0);
+                    let (logits, stats) = nets[ctx].logits_act(x, batch, spec);
+                    m.record_act(stats);
                     argmax_rows(&logits, occupancy, classes)
                 }
             };
@@ -1238,6 +1371,7 @@ impl InferenceServer {
                 params,
                 quant: None,
                 contexts: 1,
+                act: None,
             }],
             cfg,
         )?;

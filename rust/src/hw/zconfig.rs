@@ -221,6 +221,28 @@ pub fn throughput(cfg: &ZConfig) -> f64 {
     1.0 / cfg.junction_cycle as f64
 }
 
+/// Left-bank of neuron `n` under the Appendix-B z-regular banking: the
+/// activation memory is `z` banks of depth `N_left / z`, neuron `n`
+/// living in bank `n mod z`. This is the structural fact the activation-
+/// sparsity packed layout ([`crate::nn::actsparse::PackedRow`]) rides
+/// on: within any aligned window of `z` consecutive neurons every bank
+/// appears exactly once, so a wave drawn from one window can never
+/// claim a bank twice.
+#[inline]
+pub fn bank_of(n: usize, z: usize) -> usize {
+    n % z
+}
+
+/// Number of z-regular activation waves for a layer of width `n_left`
+/// banked `z` ways — `Err` with the same Appendix-B diagnostic as
+/// [`validate`] when `z` does not divide the width.
+pub fn act_waves(n_left: usize, z: usize) -> Result<usize, ZConfigError> {
+    if z == 0 || n_left % z != 0 {
+        return Err(ZConfigError::DepthNotIntegral { junction: 0, n_left, z });
+    }
+    Ok(n_left / z)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +426,26 @@ mod tests {
             let wc: Vec<f32> = (0..e).map(|x| x as f32 * 0.5 - 1.0).collect();
             crate::hw::banked::BankedWeights::new(e, z).audit(&wc).unwrap();
         }
+    }
+
+    #[test]
+    fn bank_mapping_is_z_regular() {
+        // within any aligned window of z neurons each bank appears once
+        let z = 8;
+        for w in 0..4 {
+            let mut seen = vec![false; z];
+            for n in w * z..(w + 1) * z {
+                let b = bank_of(n, z);
+                assert!(!seen[b], "bank {b} repeated in window {w}");
+                seen[b] = true;
+            }
+        }
+        assert_eq!(act_waves(800, 200), Ok(4));
+        assert!(matches!(
+            act_waves(800, 64),
+            Err(ZConfigError::DepthNotIntegral { n_left: 800, z: 64, .. })
+        ));
+        assert!(act_waves(8, 0).is_err());
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::time::Duration;
 use pds::coordinator::loadgen::{self, LoadSpec};
 use pds::coordinator::{InferenceService, PipelinedTrainSession, ServerConfig};
 use pds::net::{NetClient, NetServer, NetServerConfig};
+use pds::nn::actsparse::ActSpec;
 use pds::nn::fixed::{FixedSparseNet, QFormat};
 use pds::nn::pipeline::PipelineConfig;
 use pds::nn::sparse::SparseNet;
@@ -95,6 +96,36 @@ fn parse_quant(opts: &BTreeMap<String, String>, key: &str) -> anyhow::Result<Opt
     }
 }
 
+/// Parse the activation-sparsity options: `--act-topk K` keeps the K
+/// largest-magnitude hidden activations per sample, `--act-threshold T`
+/// keeps magnitudes `>= T`. At most one may be given; the input layer
+/// is never masked.
+fn parse_act(opts: &BTreeMap<String, String>) -> anyhow::Result<Option<ActSpec>> {
+    let topk = opts.get("act-topk");
+    let thresh = opts.get("act-threshold");
+    anyhow::ensure!(
+        topk.is_none() || thresh.is_none(),
+        "--act-topk and --act-threshold are mutually exclusive"
+    );
+    if let Some(s) = topk {
+        let k: usize = s.parse().map_err(|e| anyhow::anyhow!("--act-topk: {e}"))?;
+        anyhow::ensure!(
+            k >= 1,
+            "--act-topk must be at least 1 (k = 0 zeroes every hidden activation)"
+        );
+        return Ok(Some(ActSpec::top_k(k)));
+    }
+    if let Some(s) = thresh {
+        let t: f32 = s.parse().map_err(|e| anyhow::anyhow!("--act-threshold: {e}"))?;
+        anyhow::ensure!(
+            t.is_finite() && t >= 0.0,
+            "--act-threshold must be finite and non-negative"
+        );
+        return Ok(Some(ActSpec::threshold(t)));
+    }
+    Ok(None)
+}
+
 fn run(args: Vec<String>) -> anyhow::Result<()> {
     let Some(cmd) = args.first().cloned() else {
         print_help();
@@ -136,6 +167,8 @@ fn print_help() {
            info                              list artifact configs\n\
            analyze   [--config NAME] [--manifest PATH] [--quant Qm.n]\n\
                      [--depth N] [--input-range R] [--seed N] [--json]\n\
+                     [--act-topk K | --act-threshold T]  (lint the entries\n\
+                      as if they declared that activation-sparsity spec)\n\
                      [--contexts C]  (prove the C-tenant interleave:\n\
                       per-context clash-freedom and the per-context\n\
                       staleness closed form)\n\
@@ -150,6 +183,9 @@ fn print_help() {
            train     --config tiny [--dout 8,4] [--epochs 5] [--lr 1e-3] [--fc]\n\
                      [--pipeline] [--depth N] [--batch N] [--z0 N]\n\
                      [--quant-eval [Qm.n]]\n\
+                     [--act-topk K | --act-threshold T]  (train sparse-sparse:\n\
+                      keep only the K largest / >= T hidden activations per\n\
+                      sample; the input layer is never masked)\n\
                      (--pipeline streams minibatches through the Sec. III-A\n\
                       FF/BP/UP junction pipeline; --depth 1 = sequential,\n\
                       default = full 2L-deep schedule; native backend only.\n\
@@ -161,6 +197,9 @@ fn print_help() {
                       context 0 is the base model, higher contexts get\n\
                       per-tenant weights; load spreads round-robin)\n\
                      [--quant [Qm.n]]  (serve in fixed point, default Q5.10)\n\
+                     [--act-topk K | --act-threshold T]  (sparse-sparse\n\
+                      inference; composes with --quant; per-model metrics\n\
+                      report the achieved activation density)\n\
                      [--listen ADDR [--batch-window USEC] [--max-conns N]]\n\
                      (--listen 127.0.0.1:0 starts the TCP front-end and\n\
                       serves until a client sends a shutdown frame;\n\
@@ -173,7 +212,7 @@ fn print_help() {
            serve-bench --models tiny,mnist_fc2 [--workers 4] [--clients 8]\n\
                      [--requests 200] [--wait-ms 2] [--queue-depth 256]\n\
                      [--think-us 0] [--burst 1] [--contexts 1] [--quant [Qm.n]]\n\
-                     [--out BENCH_serve.json]\n\
+                     [--act-topk K | --act-threshold T] [--out BENCH_serve.json]\n\
            exp <fig1|table1|table2|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table3|pipeline|all> [--quick]\n\
          \n\
          global: --artifacts <dir> (default: ./artifacts)"
@@ -236,7 +275,7 @@ fn cmd_analyze(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let path = explicit
         .clone()
         .unwrap_or_else(|| format!("{}/manifest.json", artifacts_dir(opts)));
-    let (manifest, raw_text) = match std::fs::read_to_string(&path) {
+    let (mut manifest, raw_text) = match std::fs::read_to_string(&path) {
         Ok(text) => match Manifest::parse(&text) {
             Ok(m) => (m, Some(text)),
             Err(e) => {
@@ -258,6 +297,26 @@ fn cmd_analyze(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         }
         Err(e) => anyhow::bail!("cannot read {path}: {e}"),
     };
+
+    // --act-topk/--act-threshold: analyze as if the manifest declared the
+    // spec (applied to --config's entry, or every entry), so the lint
+    // pass covers a planned deployment without editing the file
+    if let Some(spec) = parse_act(opts)? {
+        match opts.get("config") {
+            Some(name) => {
+                let e = manifest
+                    .configs
+                    .get_mut(name)
+                    .ok_or_else(|| anyhow::anyhow!("config '{name}' not in manifest"))?;
+                e.act = Some(spec);
+            }
+            None => {
+                for e in manifest.configs.values_mut() {
+                    e.act = Some(spec);
+                }
+            }
+        }
+    }
 
     let mut report = match opts.get("config") {
         Some(name) => {
@@ -397,26 +456,38 @@ fn cmd_train(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let epochs: usize = opts.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(5);
     let lr: f32 = opts.get("lr").map(|s| s.parse()).transpose()?.unwrap_or(1e-3);
     let seed: u64 = opts.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
-    let engine = Engine::new(artifacts_dir(opts))?;
+    let act = parse_act(opts)?;
+    let mut engine = Engine::new(artifacts_dir(opts))?;
     let entry = engine
         .manifest
         .configs
         .get(&config)
         .ok_or_else(|| anyhow::anyhow!("no config {config}"))?;
     let layers = entry.layers.clone();
+    let entry_batch = entry.batch;
+    let entry_dout = entry.gather_dout.clone();
     let netc = NetConfig::new(layers.clone());
     let dout = if opts.contains_key("fc") {
         netc.fc_dout()
     } else {
         DoutConfig(match opts.get("dout") {
             Some(s) => parse_list(s)?,
-            None => entry
-                .gather_dout
-                .clone()
-                .unwrap_or_else(|| netc.fc_dout().0.clone()),
+            None => entry_dout.unwrap_or_else(|| netc.fc_dout().0.clone()),
         })
     };
     netc.validate_dout(&dout).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(spec) = act {
+        anyhow::ensure!(
+            !opts.contains_key("pipeline"),
+            "--act-topk/--act-threshold: the pipelined trainer has no masked \
+             schedule yet; use the sequential path"
+        );
+        // the native train program reads the spec off its manifest entry
+        if let Some(e) = engine.manifest.configs.get_mut(&config) {
+            e.act = Some(spec);
+        }
+        println!("activation sparsity: {spec} on hidden layers");
+    }
     let mut rng = Rng::new(seed);
     let pattern = generate(Method::ClashFree, &netc, &dout, None, &mut rng);
     println!(
@@ -429,7 +500,7 @@ fn cmd_train(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     }
     let mut session = pds::coordinator::TrainSession::new(&engine, &config, &pattern, lr, 1e-4, seed)?;
     let spec = spec_for_features(layers[0], *layers.last().unwrap());
-    let splits = spec.splits(entry.batch * 8, 0, entry.batch * 3, seed ^ 99);
+    let splits = spec.splits(entry_batch * 8, 0, entry_batch * 3, seed ^ 99);
     for e in 0..epochs {
         let (loss, acc) = session.epoch(&splits.train, &mut rng)?;
         let test = session.evaluate(&splits.test)?;
@@ -631,14 +702,19 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let contexts: usize = opts.get("contexts").map(|s| s.parse()).transpose()?.unwrap_or(1);
     anyhow::ensure!(contexts >= 1, "--contexts must be at least 1");
     let quant = parse_quant(opts, "quant")?;
+    let act = parse_act(opts)?;
     let dir = artifacts_dir(opts);
     let specs = models
         .iter()
         .map(|m| {
             loadgen::model_spec(&dir, m, 0.25, 3).map(|s| {
                 let s = s.with_contexts(contexts);
-                match quant {
+                let s = match quant {
                     Some(fmt) => s.with_quant(fmt),
+                    None => s,
+                };
+                match act {
+                    Some(a) => s.with_act(a),
                     None => s,
                 }
             })
@@ -660,9 +736,13 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     println!(
         "serving {models:?}: {workers} workers/model, {contexts} tenant context(s)/model, \
          queue depth {queue_depth}, max_wait {wait_ms}ms; \
-         {clients} clients x {requests} requests per model{}",
+         {clients} clients x {requests} requests per model{}{}",
         match quant {
             Some(fmt) => format!("; fixed-point {fmt}"),
+            None => String::new(),
+        },
+        match act {
+            Some(a) => format!("; activation sparsity {a}"),
             None => String::new(),
         }
     );
@@ -882,11 +962,16 @@ fn cmd_serve_bench(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         contexts,
     };
     let quant = parse_quant(opts, "quant")?;
+    let act = parse_act(opts)?;
     let max_wait = Duration::from_millis(wait_ms);
     println!(
-        "serve-bench: models {models:?}, {clients} clients x {requests} requests per model{}",
+        "serve-bench: models {models:?}, {clients} clients x {requests} requests per model{}{}",
         match quant {
             Some(fmt) => format!(", fixed-point {fmt}"),
+            None => String::new(),
+        },
+        match act {
+            Some(a) => format!(", activation sparsity {a}"),
             None => String::new(),
         }
     );
@@ -895,7 +980,7 @@ fn cmd_serve_bench(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     for w in sweep {
         println!("-- {w} worker(s) per model --");
         let reports =
-            loadgen::bench_service(&dir, &models, w, queue_depth, max_wait, &load, 7, quant)?;
+            loadgen::bench_service(&dir, &models, w, queue_depth, max_wait, &load, 7, quant, act)?;
         for r in &reports {
             r.print();
         }

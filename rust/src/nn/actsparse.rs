@@ -1,0 +1,535 @@
+//! Activation sparsity for the pre-defined sparse execution stack.
+//!
+//! The source paper prunes *weights* ahead of time; "Two Sparsities Are
+//! Better Than One" (arXiv 2112.13896) shows the gains multiply when a
+//! run-time *activation* mask composes with the pre-defined pattern, and
+//! arXiv 1806.01087 shows the hardware payoff of skipping inactive
+//! operands in exactly the FF/BP/UP loops this crate models. This module
+//! provides the mask itself:
+//!
+//! - [`ActMode`] / [`ActSpec`]: top-k or thresholded selection, applied
+//!   per minibatch row to a layer's left activations;
+//! - [`ActivationMask`]: the row-major boolean mask plus a batch stamp
+//!   (so reuse across batches is a typed error, not silent wrongness);
+//! - [`PackedRow`]: a packed, complementary-sparsity-style index layout
+//!   whose wave-level non-overlap is *guaranteed* by the z-regular
+//!   banking of [`crate::hw::zconfig`] (Appendix B: `z | N_left`, bank
+//!   of neuron `n` is `n mod z`), verified by [`PackedRow::verify`].
+//!
+//! The masked FF/BP/UP kernels themselves live next to their dense-
+//! activation twins in [`crate::nn::sparse`] and [`crate::nn::fixed`];
+//! they *skip* inactive left neurons in place inside the existing CSR
+//! edge order, so an all-ones mask reproduces the unmasked kernels
+//! bit for bit (f32 summation order is preserved, and the Qm.n i64
+//! accumulation is exact either way).
+
+use std::fmt;
+
+use crate::hw::zconfig;
+
+/// Selection rule for an activation mask.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActMode {
+    /// Keep the `k` largest-magnitude activations per row. Ties break
+    /// toward the lower neuron index, so selection is deterministic.
+    TopK(usize),
+    /// Keep every activation with magnitude at least `t`.
+    Threshold(f32),
+}
+
+/// An activation-sparsity request: one selection rule applied to every
+/// hidden layer of a net. This is the type the manifest's
+/// `"act_sparsity"` key parses into and the serving stack plumbs
+/// through [`crate::coordinator::ModelSpec`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActSpec {
+    /// Selection rule applied to each hidden layer's activations.
+    pub mode: ActMode,
+}
+
+impl ActSpec {
+    /// Top-k selection: keep the `k` largest-magnitude activations.
+    pub fn top_k(k: usize) -> Self {
+        ActSpec { mode: ActMode::TopK(k) }
+    }
+
+    /// Threshold selection: keep magnitudes at least `t`.
+    pub fn threshold(t: f32) -> Self {
+        ActSpec { mode: ActMode::Threshold(t) }
+    }
+
+    /// Build the mask for one layer's activations under this spec.
+    pub fn mask(&self, acts: &[f32], n: usize, batch: usize, stamp: u64) -> ActivationMask {
+        match self.mode {
+            ActMode::TopK(k) => ActivationMask::top_k(acts, n, batch, k, stamp),
+            ActMode::Threshold(t) => ActivationMask::threshold(acts, n, batch, t, stamp),
+        }
+    }
+}
+
+impl fmt::Display for ActSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.mode {
+            ActMode::TopK(k) => write!(f, "topk({k})"),
+            ActMode::Threshold(t) => write!(f, "threshold({t})"),
+        }
+    }
+}
+
+/// Typed activation-sparsity failures. Every variant names the layer it
+/// was detected on — the analyzer's mutation harness pins that a
+/// corrupted mask is *caught*, not silently multiplied through.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ActError {
+    /// The bank count does not divide the layer width, so the z-regular
+    /// packing argument (Appendix B) does not apply.
+    NotDividing {
+        /// Layer the packing was requested for.
+        layer: usize,
+        /// Requested bank count.
+        z: usize,
+        /// Layer width it fails to divide.
+        n: usize,
+    },
+    /// Two packed indices in one wave map to the same bank.
+    Overlap {
+        /// Layer the packed row belongs to.
+        layer: usize,
+        /// Wave containing the collision.
+        wave: usize,
+        /// Bank claimed twice.
+        bank: usize,
+    },
+    /// A packed index is outside the layer.
+    OutOfRange {
+        /// Layer the packed row belongs to.
+        layer: usize,
+        /// The offending index.
+        index: u32,
+        /// Layer width.
+        n: usize,
+    },
+    /// An index appears in more than one wave of the same row.
+    Duplicate {
+        /// Layer the packed row belongs to.
+        layer: usize,
+        /// The repeated index.
+        index: u32,
+    },
+    /// The mask was built for a different batch than it is being used
+    /// on (reuse across batches silently freezes the selection).
+    Stale {
+        /// Layer the mask is applied to.
+        layer: usize,
+        /// Stamp the mask carries.
+        have: u64,
+        /// Stamp of the batch being executed.
+        want: u64,
+    },
+    /// The mask drops *every* in-edge of a right neuron the pattern
+    /// requires, so that neuron would silently compute bias-only.
+    Uncovered {
+        /// Layer whose junction loses the neuron.
+        layer: usize,
+        /// The right neuron with no surviving in-edges.
+        neuron: usize,
+    },
+    /// The mask's shape does not match the layer it is applied to.
+    BadShape {
+        /// Layer the mask is applied to.
+        layer: usize,
+        /// Slots the layer expects (`n * batch`).
+        want: usize,
+        /// Slots the mask carries.
+        have: usize,
+    },
+}
+
+impl fmt::Display for ActError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ActError::NotDividing { layer, z, n } => {
+                write!(f, "layer {layer}: z = {z} does not divide layer width {n}")
+            }
+            ActError::Overlap { layer, wave, bank } => write!(
+                f,
+                "layer {layer}: packed wave {wave} claims bank {bank} twice"
+            ),
+            ActError::OutOfRange { layer, index, n } => {
+                write!(f, "layer {layer}: packed index {index} outside width {n}")
+            }
+            ActError::Duplicate { layer, index } => {
+                write!(f, "layer {layer}: packed index {index} appears in two waves")
+            }
+            ActError::Stale { layer, have, want } => write!(
+                f,
+                "layer {layer}: stale activation mask (built for batch {have}, executing batch {want})"
+            ),
+            ActError::Uncovered { layer, neuron } => write!(
+                f,
+                "layer {layer}: mask drops every in-edge of right neuron {neuron}"
+            ),
+            ActError::BadShape { layer, want, have } => write!(
+                f,
+                "layer {layer}: mask has {have} slots, layer expects {want}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ActError {}
+
+/// Achieved activation-density tally across masked layers — the number
+/// the serving metrics surface as a gauge.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ActStats {
+    /// Left-neuron slots the mask kept active.
+    pub active: u64,
+    /// Left-neuron slots considered.
+    pub total: u64,
+}
+
+impl ActStats {
+    /// Fraction of slots kept (1.0 when nothing was masked).
+    pub fn density(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.active as f64 / self.total as f64
+        }
+    }
+
+    /// Fold another tally into this one.
+    pub fn merge(&mut self, other: ActStats) {
+        self.active += other.active;
+        self.total += other.total;
+    }
+}
+
+/// A per-row boolean activation mask over one layer's left neurons,
+/// stamped with the batch it was built for.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActivationMask {
+    /// Neurons per row.
+    pub n: usize,
+    /// Rows (minibatch size).
+    pub batch: usize,
+    /// Row-major `[batch * n]` activity flags.
+    pub active: Vec<bool>,
+    /// Batch stamp the mask was built for (staleness detection).
+    pub stamp: u64,
+}
+
+impl ActivationMask {
+    /// The identity mask: every neuron active. Masked kernels fed this
+    /// reproduce their dense-activation twins bit for bit.
+    pub fn all_ones(n: usize, batch: usize, stamp: u64) -> Self {
+        ActivationMask {
+            n,
+            batch,
+            active: vec![true; n * batch],
+            stamp,
+        }
+    }
+
+    /// Keep the `k` largest-magnitude activations of each row. Ties
+    /// break toward the lower index (deterministic; NaN magnitudes sort
+    /// via `total_cmp`, i.e. after every finite magnitude).
+    pub fn top_k(acts: &[f32], n: usize, batch: usize, k: usize, stamp: u64) -> Self {
+        assert_eq!(acts.len(), n * batch, "activation buffer shape");
+        let mut active = vec![false; n * batch];
+        if k >= n {
+            active.fill(true);
+            return ActivationMask { n, batch, active, stamp };
+        }
+        let mut order: Vec<u32> = Vec::with_capacity(n);
+        for r in 0..batch {
+            let row = &acts[r * n..(r + 1) * n];
+            order.clear();
+            order.extend(0..n as u32);
+            order.sort_unstable_by(|&a, &b| {
+                let (ma, mb) = (row[a as usize].abs(), row[b as usize].abs());
+                mb.total_cmp(&ma).then(a.cmp(&b))
+            });
+            for &i in &order[..k] {
+                active[r * n + i as usize] = true;
+            }
+        }
+        ActivationMask { n, batch, active, stamp }
+    }
+
+    /// Keep every activation with magnitude at least `t`. Monotone: a
+    /// larger threshold never activates a neuron a smaller one dropped.
+    pub fn threshold(acts: &[f32], n: usize, batch: usize, t: f32, stamp: u64) -> Self {
+        assert_eq!(acts.len(), n * batch, "activation buffer shape");
+        let active = acts.iter().map(|a| a.abs() >= t).collect();
+        ActivationMask { n, batch, active, stamp }
+    }
+
+    /// One row's flags.
+    pub fn row(&self, r: usize) -> &[bool] {
+        &self.active[r * self.n..(r + 1) * self.n]
+    }
+
+    /// Number of active slots across all rows.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Achieved density of this mask.
+    pub fn stats(&self) -> ActStats {
+        ActStats {
+            active: self.active_count() as u64,
+            total: self.active.len() as u64,
+        }
+    }
+
+    /// Refuse a mask built for a different batch stamp.
+    pub fn verify_fresh(&self, layer: usize, stamp: u64) -> Result<(), ActError> {
+        if self.stamp != stamp {
+            return Err(ActError::Stale {
+                layer,
+                have: self.stamp,
+                want: stamp,
+            });
+        }
+        Ok(())
+    }
+
+    /// Refuse a mask whose shape does not match the layer.
+    pub fn verify_shape(&self, layer: usize, n: usize, batch: usize) -> Result<(), ActError> {
+        if self.n != n || self.batch != batch || self.active.len() != n * batch {
+            return Err(ActError::BadShape {
+                layer,
+                want: n * batch,
+                have: self.active.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Refuse a mask that drops *every* in-edge of some right neuron of
+    /// the junction's CSR pattern (`offsets`/`idx` as stored by the
+    /// compacted layers): the pattern requires the neuron, the mask
+    /// would silently reduce it to its bias.
+    pub fn verify_coverage(
+        &self,
+        layer: usize,
+        offsets: &[u32],
+        idx: &[u32],
+        n_right: usize,
+    ) -> Result<(), ActError> {
+        for r in 0..self.batch {
+            let row = self.row(r);
+            for j in 0..n_right {
+                let (lo, hi) = (offsets[j] as usize, offsets[j + 1] as usize);
+                if lo != hi && !idx[lo..hi].iter().any(|&k| row[k as usize]) {
+                    return Err(ActError::Uncovered { layer, neuron: j });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pack each row into the z-banked wave layout. Requires the
+    /// Appendix-B regularity `z | n`; the result is non-overlapping by
+    /// construction (see [`PackedRow`]).
+    pub fn pack(&self, layer: usize, z: usize) -> Result<Vec<PackedRow>, ActError> {
+        if z == 0 || self.n % z != 0 {
+            return Err(ActError::NotDividing { layer, z, n: self.n });
+        }
+        let waves_per_row = self.n / z;
+        let mut rows = Vec::with_capacity(self.batch);
+        for r in 0..self.batch {
+            let row = self.row(r);
+            let mut waves = vec![Vec::new(); waves_per_row];
+            for (i, &a) in row.iter().enumerate() {
+                if a {
+                    waves[i / z].push(i as u32);
+                }
+            }
+            rows.push(PackedRow { z, waves });
+        }
+        Ok(rows)
+    }
+}
+
+/// One row's packed, complementary-sparsity-style index layout: the
+/// active indices grouped into *waves*, where wave `w` holds the active
+/// subset of neurons `w*z .. (w+1)*z`. Within that range each neuron
+/// maps to a distinct bank (`bank(n) = n mod z`, and `z | n_left` per
+/// Appendix B), so a wave can issue one fetch per bank with **no
+/// overlap by construction** — the complementary-sparsity trick riding
+/// on the z-regular structure instead of a learned permutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedRow {
+    /// Bank count (the junction's z; divides the layer width).
+    pub z: usize,
+    /// Waves of active indices, ascending within each wave.
+    pub waves: Vec<Vec<u32>>,
+}
+
+impl PackedRow {
+    /// Number of packed (active) indices.
+    pub fn active_count(&self) -> usize {
+        self.waves.iter().map(Vec::len).sum()
+    }
+
+    /// Cycles a banked fetch of this row needs: one per non-empty wave.
+    pub fn fetch_waves(&self) -> usize {
+        self.waves.iter().filter(|w| !w.is_empty()).count()
+    }
+
+    /// Check the layout invariants the z-regular construction
+    /// guarantees: every index in range, no bank claimed twice within a
+    /// wave, no index in two waves. A violation is exactly the
+    /// "overlapping packed index" corruption the mutation harness
+    /// injects, and comes back as a typed [`ActError`] naming the
+    /// layer, wave and bank.
+    pub fn verify(&self, layer: usize, n: usize) -> Result<(), ActError> {
+        let mut seen = vec![false; n];
+        let mut banks = vec![usize::MAX; self.z];
+        for (w, wave) in self.waves.iter().enumerate() {
+            for &i in wave {
+                if i as usize >= n {
+                    return Err(ActError::OutOfRange { layer, index: i, n });
+                }
+                if seen[i as usize] {
+                    return Err(ActError::Duplicate { layer, index: i });
+                }
+                seen[i as usize] = true;
+                let bank = zconfig::bank_of(i as usize, self.z);
+                if banks[bank] == w {
+                    return Err(ActError::Overlap { layer, wave: w, bank });
+                }
+                banks[bank] = w;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_keeps_exactly_k_with_deterministic_ties() {
+        let acts = [0.5, -0.5, 0.25, 0.0];
+        let m = ActivationMask::top_k(&acts, 4, 1, 2, 0);
+        // |0.5| ties with |-0.5|: both beat 0.25, lower indices win
+        assert_eq!(m.active, vec![true, true, false, false]);
+        assert_eq!(m.active_count(), 2);
+        // k >= n keeps everything
+        let m = ActivationMask::top_k(&acts, 4, 1, 9, 0);
+        assert_eq!(m.active_count(), 4);
+    }
+
+    #[test]
+    fn threshold_is_monotone() {
+        let acts = [0.1, -0.4, 0.9, 0.0];
+        let lo = ActivationMask::threshold(&acts, 4, 1, 0.2, 0);
+        let hi = ActivationMask::threshold(&acts, 4, 1, 0.5, 0);
+        for (a, b) in hi.active.iter().zip(&lo.active) {
+            assert!(!a | b, "raising the threshold must not activate");
+        }
+        assert_eq!(lo.active, vec![false, true, true, false]);
+        assert_eq!(hi.active, vec![false, false, true, false]);
+    }
+
+    #[test]
+    fn packing_respects_the_z_banks_and_verifies() {
+        let acts = [1.0, 0.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0];
+        let m = ActivationMask::threshold(&acts, 8, 1, 0.5, 0);
+        let rows = m.pack(0, 4).expect("4 divides 8");
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.waves, vec![vec![0, 2], vec![4, 5]]);
+        assert_eq!(row.active_count(), 4);
+        assert_eq!(row.fetch_waves(), 2);
+        row.verify(0, 8).expect("constructed layout is clash-free");
+        // z must divide n
+        assert_eq!(
+            m.pack(3, 3),
+            Err(ActError::NotDividing { layer: 3, z: 3, n: 8 })
+        );
+    }
+
+    #[test]
+    fn injected_overlap_is_caught_with_wave_and_bank() {
+        let mut row = PackedRow {
+            z: 4,
+            waves: vec![vec![0, 2], vec![4, 5]],
+        };
+        row.waves[0][1] = 4; // banks 0 and 0 in wave 0
+        assert_eq!(
+            row.verify(1, 8),
+            Err(ActError::Overlap { layer: 1, wave: 0, bank: 0 })
+        );
+    }
+
+    #[test]
+    fn duplicate_and_out_of_range_indices_are_caught() {
+        let dup = PackedRow {
+            z: 4,
+            waves: vec![vec![1], vec![1]],
+        };
+        assert_eq!(dup.verify(0, 8), Err(ActError::Duplicate { layer: 0, index: 1 }));
+        let oob = PackedRow {
+            z: 4,
+            waves: vec![vec![9]],
+        };
+        assert_eq!(
+            oob.verify(2, 8),
+            Err(ActError::OutOfRange { layer: 2, index: 9, n: 8 })
+        );
+    }
+
+    #[test]
+    fn stale_masks_and_bad_shapes_are_refused() {
+        let m = ActivationMask::all_ones(4, 2, 7);
+        m.verify_fresh(0, 7).expect("same stamp is fresh");
+        assert_eq!(
+            m.verify_fresh(2, 8),
+            Err(ActError::Stale { layer: 2, have: 7, want: 8 })
+        );
+        m.verify_shape(0, 4, 2).expect("shape matches");
+        assert_eq!(
+            m.verify_shape(1, 4, 3),
+            Err(ActError::BadShape { layer: 1, want: 12, have: 8 })
+        );
+    }
+
+    #[test]
+    fn dropped_required_neuron_is_caught_by_coverage() {
+        // CSR: right neuron 0 reads {0, 1}, right neuron 1 reads {2, 3}
+        let offsets = [0u32, 2, 4];
+        let idx = [0u32, 1, 2, 3];
+        let mut m = ActivationMask::all_ones(4, 1, 0);
+        m.verify_coverage(0, &offsets, &idx, 2).expect("all-ones covers");
+        m.active[2] = false;
+        m.verify_coverage(0, &offsets, &idx, 2).expect("one in-edge left");
+        m.active[3] = false;
+        assert_eq!(
+            m.verify_coverage(5, &offsets, &idx, 2),
+            Err(ActError::Uncovered { layer: 5, neuron: 1 })
+        );
+    }
+
+    #[test]
+    fn spec_dispatch_and_stats() {
+        let acts = [0.9, 0.1, -0.8, 0.2];
+        let spec = ActSpec::top_k(1);
+        let m = spec.mask(&acts, 4, 1, 3);
+        assert_eq!(m.active, vec![true, false, false, false]);
+        assert_eq!(m.stamp, 3);
+        let spec = ActSpec::threshold(0.5);
+        let m = spec.mask(&acts, 4, 1, 3);
+        assert_eq!(m.active, vec![true, false, true, false]);
+        let s = m.stats();
+        assert_eq!(s, ActStats { active: 2, total: 4 });
+        assert!((s.density() - 0.5).abs() < 1e-12);
+        assert_eq!(format!("{}", ActSpec::top_k(8)), "topk(8)");
+        assert_eq!(format!("{}", ActSpec::threshold(0.25)), "threshold(0.25)");
+    }
+}

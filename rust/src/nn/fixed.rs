@@ -49,6 +49,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::nn::actsparse::{ActMode, ActSpec, ActStats, ActivationMask};
 use crate::nn::sparse::{SparseLayer, SparseNet};
 use crate::util::parallel;
 
@@ -467,6 +468,44 @@ impl FixedSparseLayer {
         sat.load(Ordering::Relaxed)
     }
 
+    /// Fixed-point FF with a run-time activation mask: edges whose left
+    /// neuron is inactive are skipped inside the same CSR loop as
+    /// [`FixedSparseLayer::forward`]. The `i64` accumulation is exact,
+    /// so an all-ones mask is bit-identical regardless of order; a
+    /// sparse mask does `density * |W_i|` MACs. Returns saturated
+    /// outputs.
+    pub fn forward_masked(&self, a: &[i32], batch: usize, active: &[bool], out: &mut [i32]) -> usize {
+        assert_eq!(a.len(), batch * self.n_left);
+        assert_eq!(active.len(), batch * self.n_left);
+        assert_eq!(out.len(), batch * self.n_right);
+        let work = self.n_edges().max(1);
+        let sat = AtomicUsize::new(0);
+        parallel::par_rows(out, self.n_right, work, |row0, chunk| {
+            let mut local = 0usize;
+            for (li, or) in chunk.chunks_mut(self.n_right).enumerate() {
+                let bi = row0 + li;
+                let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+                let mr = &active[bi * self.n_left..(bi + 1) * self.n_left];
+                for j in 0..self.n_right {
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    let mut acc = 0i64;
+                    for e in lo..hi {
+                        let k = self.idx[e] as usize;
+                        if !mr[k] {
+                            continue;
+                        }
+                        acc += self.wq[e] as i64 * ar[k] as i64;
+                    }
+                    or[j] = self.fmt.fold_mac(acc, self.bq[j], &mut local);
+                }
+            }
+            if local > 0 {
+                sat.fetch_add(local, Ordering::Relaxed);
+            }
+        });
+        sat.load(Ordering::Relaxed)
+    }
+
     /// Fixed-point BP (eq. 3b inner sum): scatter `wq · delta` into wide
     /// per-left-neuron accumulators, one rounding shift per output.
     /// Caller applies the activation-derivative product (for ReLU that is
@@ -491,6 +530,57 @@ impl FixedSparseLayer {
                     let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
                     for e in lo..hi {
                         accs[self.idx[e] as usize] += self.wq[e] as i64 * dv;
+                    }
+                }
+                for (o, &acc) in or.iter_mut().zip(&accs) {
+                    *o = self
+                        .fmt
+                        .clamp_raw_counted(shift_round(acc, self.fmt.frac_bits), &mut local);
+                }
+            }
+            if local > 0 {
+                sat.fetch_add(local, Ordering::Relaxed);
+            }
+        });
+        sat.load(Ordering::Relaxed)
+    }
+
+    /// Fixed-point BP with a run-time activation mask: no gradient is
+    /// accumulated for inactive left neurons (their zeroed activations
+    /// contributed nothing forward). All-ones mask is bit-identical to
+    /// [`FixedSparseLayer::backprop`]. Returns saturated outputs.
+    pub fn backprop_masked(
+        &self,
+        delta: &[i32],
+        batch: usize,
+        active: &[bool],
+        out: &mut [i32],
+    ) -> usize {
+        assert_eq!(delta.len(), batch * self.n_right);
+        assert_eq!(active.len(), batch * self.n_left);
+        assert_eq!(out.len(), batch * self.n_left);
+        let work = self.n_edges().max(1);
+        let sat = AtomicUsize::new(0);
+        parallel::par_rows(out, self.n_left, work, |row0, chunk| {
+            let mut local = 0usize;
+            let mut accs = vec![0i64; self.n_left];
+            for (li, or) in chunk.chunks_mut(self.n_left).enumerate() {
+                let bi = row0 + li;
+                let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+                let mr = &active[bi * self.n_left..(bi + 1) * self.n_left];
+                accs.fill(0);
+                for j in 0..self.n_right {
+                    let dv = dr[j] as i64;
+                    if dv == 0 {
+                        continue;
+                    }
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    for e in lo..hi {
+                        let k = self.idx[e] as usize;
+                        if !mr[k] {
+                            continue;
+                        }
+                        accs[k] += self.wq[e] as i64 * dv;
                     }
                 }
                 for (o, &acc) in or.iter_mut().zip(&accs) {
@@ -549,6 +639,105 @@ impl FixedSparseLayer {
         }
         sat
     }
+
+    /// Fixed-point UP gradients with a run-time activation mask: edge
+    /// accumulations whose left activation the mask dropped are
+    /// skipped; bias gradients are unaffected (constant-1 input).
+    /// All-ones mask is bit-identical to [`FixedSparseLayer::grads`].
+    /// Returns saturated outputs.
+    pub fn grads_masked(
+        &self,
+        a: &[i32],
+        delta: &[i32],
+        batch: usize,
+        active: &[bool],
+        gwq: &mut [i32],
+        gbq: &mut [i32],
+    ) -> usize {
+        assert_eq!(a.len(), batch * self.n_left);
+        assert_eq!(delta.len(), batch * self.n_right);
+        assert_eq!(active.len(), batch * self.n_left);
+        assert_eq!(gwq.len(), self.wq.len());
+        assert_eq!(gbq.len(), self.n_right);
+        let mut acc_w = vec![0i64; self.wq.len()];
+        let mut acc_b = vec![0i64; self.n_right];
+        for bi in 0..batch {
+            let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+            let mr = &active[bi * self.n_left..(bi + 1) * self.n_left];
+            let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+            for j in 0..self.n_right {
+                let dv = dr[j] as i64;
+                if dv == 0 {
+                    continue;
+                }
+                acc_b[j] += dv;
+                let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                for e in lo..hi {
+                    let k = self.idx[e] as usize;
+                    if !mr[k] {
+                        continue;
+                    }
+                    acc_w[e] += dv * ar[k] as i64;
+                }
+            }
+        }
+        let mut sat = 0usize;
+        for (g, &acc) in gwq.iter_mut().zip(&acc_w) {
+            *g = self
+                .fmt
+                .clamp_raw_counted(shift_round(acc, self.fmt.frac_bits), &mut sat);
+        }
+        for (g, &acc) in gbq.iter_mut().zip(&acc_b) {
+            *g = self.fmt.clamp_raw_counted(acc, &mut sat);
+        }
+        sat
+    }
+}
+
+/// Build an [`ActivationMask`] from *raw* Qm.n activations. Selection
+/// on raw magnitudes matches selection on dequantized values exactly —
+/// the scale `2^n` is positive and uniform, so the magnitude order is
+/// identical — and stays pure integer arithmetic (what a hardware
+/// top-k selector would compare). Top-k ties break toward the lower
+/// index, as in [`ActivationMask::top_k`].
+pub fn mask_raw(
+    spec: &ActSpec,
+    acts: &[i32],
+    n: usize,
+    batch: usize,
+    fmt: QFormat,
+    stamp: u64,
+) -> ActivationMask {
+    assert_eq!(acts.len(), n * batch, "activation buffer shape");
+    let mut active = vec![false; n * batch];
+    match spec.mode {
+        ActMode::TopK(k) => {
+            if k >= n {
+                active.fill(true);
+            } else {
+                let mut order: Vec<usize> = Vec::with_capacity(n);
+                for r in 0..batch {
+                    let row = &acts[r * n..(r + 1) * n];
+                    order.clear();
+                    order.extend(0..n);
+                    order.sort_unstable_by(|&ia, &ib| {
+                        let (ma, mb) = ((row[ia] as i64).abs(), (row[ib] as i64).abs());
+                        mb.cmp(&ma).then(ia.cmp(&ib))
+                    });
+                    for &i in &order[..k] {
+                        active[r * n + i] = true;
+                    }
+                }
+            }
+        }
+        ActMode::Threshold(t) => {
+            let t_raw = (fmt.quantize(t) as i64).abs();
+            for (m, &v) in active.iter_mut().zip(acts) {
+                *m = (v as i64).abs() >= t_raw;
+            }
+        }
+    }
+    ActivationMask { n, batch, active, stamp }
 }
 
 /// Whole-network fixed-point MLP: the Qm.n twin of [`SparseNet`].
@@ -611,6 +800,73 @@ impl FixedSparseNet {
     pub fn logits(&self, x: &[f32], batch: usize) -> (Vec<f32>, usize) {
         let (raw, sats) = self.logits_q(&self.fmt.quantize_slice(x), batch);
         (self.fmt.dequantize_slice(&raw), sats)
+    }
+
+    /// Sparse-sparse fixed-point inference: every hidden layer's raw
+    /// activations go through `spec`'s selection (via [`mask_raw`],
+    /// identical ordering to the f32 selection) and the masked kernel
+    /// skips the dropped neurons. Returns raw logits, saturated
+    /// outputs, and the achieved activation-density tally. An
+    /// all-keeping spec reproduces [`FixedSparseNet::logits_q`] bit for
+    /// bit (`i64` accumulation is exact, order-independent).
+    pub fn logits_q_act(
+        &self,
+        xq: &[i32],
+        batch: usize,
+        spec: &ActSpec,
+    ) -> (Vec<i32>, usize, ActStats) {
+        let mut a = xq.to_vec();
+        let l = self.junctions.len();
+        let mut sats = 0usize;
+        let mut stats = ActStats::default();
+        for (i, junction) in self.junctions.iter().enumerate() {
+            let mut h = vec![0i32; batch * junction.n_right];
+            if i == 0 {
+                sats += junction.forward(&a, batch, &mut h);
+            } else {
+                let m = mask_raw(spec, &a, junction.n_left, batch, self.fmt, 0);
+                stats.merge(m.stats());
+                sats += junction.forward_masked(&a, batch, &m.active, &mut h);
+            }
+            if i != l - 1 {
+                relu_raw(&mut h);
+            }
+            a = h;
+        }
+        (a, sats, stats)
+    }
+
+    /// Real-valued convenience over [`FixedSparseNet::logits_q_act`].
+    pub fn logits_act(
+        &self,
+        x: &[f32],
+        batch: usize,
+        spec: &ActSpec,
+    ) -> (Vec<f32>, usize, ActStats) {
+        let (raw, sats, stats) = self.logits_q_act(&self.fmt.quantize_slice(x), batch, spec);
+        (self.fmt.dequantize_slice(&raw), sats, stats)
+    }
+
+    /// Classification accuracy under an activation-sparsity spec (the
+    /// equal-accuracy axis of the sparse-sparse benches).
+    pub fn accuracy_act(&self, x: &[f32], y: &[i32], spec: &ActSpec) -> f64 {
+        let batch = y.len();
+        let classes = *self.layers.last().unwrap();
+        let (logits, _, _) = self.logits_q_act(&self.fmt.quantize_slice(x), batch, spec);
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / batch.max(1) as f64
     }
 
     /// (correct argmax predictions, saturated outputs) over one batch —
@@ -896,6 +1152,67 @@ mod tests {
         for (g, w) in fmt.dequantize_slice(&gbq).iter().zip(&gb) {
             assert!((g - w).abs() < 16.0 * fmt.ulp(), "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn all_ones_mask_is_bit_exact_in_fixed_point() {
+        use crate::nn::actsparse::ActSpec;
+        let (_, qnet, x) = toy_nets(5);
+        let xq = qnet.fmt.quantize_slice(&x);
+        let (want, sats_w) = qnet.logits_q(&xq, 8);
+        let keep_all = ActSpec::top_k(usize::MAX);
+        let (got, sats_g, stats) = qnet.logits_q_act(&xq, 8, &keep_all);
+        assert_eq!(got, want, "all-keeping spec must be raw-word identical");
+        assert_eq!(sats_g, sats_w);
+        assert!((stats.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn raw_mask_selection_matches_dequantized_selection() {
+        use crate::nn::actsparse::{ActSpec, ActivationMask};
+        let fmt = QFormat::default();
+        let vals = [0.75f32, -0.5, 0.25, -1.5, 0.0, 0.5];
+        let raw = fmt.quantize_slice(&vals);
+        for k in 0..=6 {
+            let spec = ActSpec::top_k(k);
+            let mr = mask_raw(&spec, &raw, 6, 1, fmt, 0);
+            let mf = ActivationMask::top_k(&vals, 6, 1, k, 0);
+            assert_eq!(mr.active, mf.active, "k = {k}");
+        }
+        let spec = ActSpec::threshold(0.5);
+        let mr = mask_raw(&spec, &raw, 6, 1, fmt, 0);
+        let mf = ActivationMask::threshold(&vals, 6, 1, 0.5, 0);
+        assert_eq!(mr.active, mf.active);
+    }
+
+    #[test]
+    fn masked_fixed_kernels_skip_inactive_terms() {
+        let fmt = QFormat::default();
+        let layer = SparseLayer {
+            n_left: 4,
+            n_right: 2,
+            offsets: vec![0, 2, 4],
+            idx: vec![0, 1, 2, 3],
+            wc: vec![1.0, 1.0, 1.0, 1.0],
+            bias: vec![0.0, 0.0],
+        };
+        let q = FixedSparseLayer::from_f32(&layer, fmt);
+        let a = fmt.quantize_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let active = [true, false, true, false];
+        let mut out = vec![0i32; 2];
+        assert_eq!(q.forward_masked(&a, 1, &active, &mut out), 0);
+        assert_eq!(out, vec![fmt.quantize(1.0), fmt.quantize(3.0)]);
+        // BP: only active left neurons receive gradient
+        let d = fmt.quantize_slice(&[1.0, 1.0]);
+        let mut da = vec![0i32; 4];
+        assert_eq!(q.backprop_masked(&d, 1, &active, &mut da), 0);
+        assert_eq!(da, vec![fmt.quantize(1.0), 0, fmt.quantize(1.0), 0]);
+        // UP: inactive edges accumulate nothing, bias grads unaffected
+        let mut gw = vec![0i32; 4];
+        let mut gb = vec![0i32; 2];
+        assert_eq!(q.grads_masked(&a, &d, 1, &active, &mut gw, &mut gb), 0);
+        assert_eq!(gw, vec![fmt.quantize(1.0), 0, fmt.quantize(3.0), 0]);
+        assert_eq!(gb, fmt.quantize_slice(&[1.0, 1.0]));
     }
 
     #[test]

@@ -18,8 +18,12 @@
 //! - [`fixed`]: the Qm.n fixed-point execution path (saturating
 //!   arithmetic, LUT sigmoid, quantized twins of the [`sparse`] kernels)
 //!   — the arithmetic the paper's FPGA companion (arXiv:1806.01087)
-//!   actually computes in, differentially tested against f32.
+//!   actually computes in, differentially tested against f32,
+//! - [`actsparse`]: run-time activation sparsity (top-k / thresholded
+//!   masks with a z-banked packed index layout) composing with the
+//!   pre-defined weight sparsity — sparse-sparse execution.
 
+pub mod actsparse;
 pub mod adam;
 pub mod dense;
 pub mod fixed;

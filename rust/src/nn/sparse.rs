@@ -10,6 +10,7 @@
 //! trainers and the native runtime backend's `gather_forward` program
 //! (the inference service's compacted path).
 
+use crate::nn::actsparse::{ActError, ActSpec, ActStats, ActivationMask};
 use crate::sparsity::pattern::{NetPattern, Pattern};
 use crate::util::parallel;
 use crate::util::rng::Rng;
@@ -108,6 +109,39 @@ impl SparseLayer {
         });
     }
 
+    /// FF (eq. 2a) with a run-time activation mask: edges whose left
+    /// neuron is inactive are *skipped* in place, inside the same CSR
+    /// edge order as [`SparseLayer::forward`] — an all-ones mask
+    /// therefore reproduces the unmasked kernel bit for bit (f32
+    /// summation order is preserved), and a sparse mask does
+    /// `density * |W_i|` MACs instead of `|W_i|`. `active` is row-major
+    /// `[batch * n_left]`.
+    pub fn forward_masked(&self, a: &[f32], batch: usize, active: &[bool], out: &mut [f32]) {
+        assert_eq!(a.len(), batch * self.n_left);
+        assert_eq!(active.len(), batch * self.n_left);
+        assert_eq!(out.len(), batch * self.n_right);
+        let work = self.n_edges().max(1);
+        parallel::par_rows(out, self.n_right, work, |row0, chunk| {
+            for (li, or) in chunk.chunks_mut(self.n_right).enumerate() {
+                let bi = row0 + li;
+                let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+                let mr = &active[bi * self.n_left..(bi + 1) * self.n_left];
+                for j in 0..self.n_right {
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    let mut acc = self.bias[j];
+                    for e in lo..hi {
+                        let k = self.idx[e] as usize;
+                        if !mr[k] {
+                            continue;
+                        }
+                        acc += self.wc[e] * ar[k];
+                    }
+                    or[j] = acc;
+                }
+            }
+        });
+    }
+
     /// BP (eq. 3b inner sum): `da[b, k] = sum_j wc[j,.] delta[b, j]`
     /// scattered over idx. Caller applies the activation-derivative
     /// product. The scatter stays within one batch row, so rows
@@ -129,6 +163,40 @@ impl SparseLayer {
                     let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
                     for e in lo..hi {
                         or[self.idx[e] as usize] += self.wc[e] * dv;
+                    }
+                }
+            }
+        });
+    }
+
+    /// BP (eq. 3b inner sum) with a run-time activation mask: the
+    /// scatter skips inactive left neurons — their (zeroed) activations
+    /// contributed nothing forward, so no gradient flows back through
+    /// them. Same edge order as [`SparseLayer::backprop`]; an all-ones
+    /// mask is bit-for-bit identical.
+    pub fn backprop_masked(&self, delta: &[f32], batch: usize, active: &[bool], out: &mut [f32]) {
+        assert_eq!(delta.len(), batch * self.n_right);
+        assert_eq!(active.len(), batch * self.n_left);
+        assert_eq!(out.len(), batch * self.n_left);
+        let work = self.n_edges().max(1);
+        parallel::par_rows(out, self.n_left, work, |row0, chunk| {
+            chunk.fill(0.0);
+            for (li, or) in chunk.chunks_mut(self.n_left).enumerate() {
+                let bi = row0 + li;
+                let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+                let mr = &active[bi * self.n_left..(bi + 1) * self.n_left];
+                for j in 0..self.n_right {
+                    let dv = dr[j];
+                    if dv == 0.0 {
+                        continue;
+                    }
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    for e in lo..hi {
+                        let k = self.idx[e] as usize;
+                        if !mr[k] {
+                            continue;
+                        }
+                        or[k] += self.wc[e] * dv;
                     }
                 }
             }
@@ -177,6 +245,68 @@ impl SparseLayer {
         } else {
             // one contiguous accumulator [gwc | gb] so a single reduction
             // covers both gradient tensors
+            let mut both = vec![0f32; nw + self.n_right];
+            parallel::par_batch_reduce(batch, work, &mut both, |range, acc| {
+                let (gw, gbp) = acc.split_at_mut(nw);
+                body(range, gw, gbp);
+            });
+            gwc.copy_from_slice(&both[..nw]);
+            gb.copy_from_slice(&both[nw..]);
+        }
+        for (g, &w) in gwc.iter_mut().zip(&self.wc) {
+            *g += 2.0 * l2 * w;
+        }
+    }
+
+    /// UP gradients (eq. 4b) with a run-time activation mask: the
+    /// per-edge accumulation skips edges whose left activation the mask
+    /// dropped (their `a` term is zero by construction). Bias gradients
+    /// and the L2 term are unaffected — the bias input is the constant
+    /// 1 and weight decay applies to every stored edge. Same reduction
+    /// structure as [`SparseLayer::grads`]; an all-ones mask is
+    /// bit-for-bit identical.
+    pub fn grads_masked(
+        &self,
+        a: &[f32],
+        delta: &[f32],
+        batch: usize,
+        active: &[bool],
+        l2: f32,
+        gwc: &mut [f32],
+        gb: &mut [f32],
+    ) {
+        assert_eq!(gwc.len(), self.wc.len());
+        assert_eq!(gb.len(), self.n_right);
+        assert_eq!(active.len(), batch * self.n_left);
+        let nw = gwc.len();
+        let work = self.n_edges().max(1);
+        let body = |range: std::ops::Range<usize>, gw: &mut [f32], gbp: &mut [f32]| {
+            for bi in range {
+                let ar = &a[bi * self.n_left..(bi + 1) * self.n_left];
+                let mr = &active[bi * self.n_left..(bi + 1) * self.n_left];
+                let dr = &delta[bi * self.n_right..(bi + 1) * self.n_right];
+                for j in 0..self.n_right {
+                    let dv = dr[j];
+                    if dv == 0.0 {
+                        continue;
+                    }
+                    gbp[j] += dv;
+                    let (lo, hi) = (self.offsets[j] as usize, self.offsets[j + 1] as usize);
+                    for e in lo..hi {
+                        let k = self.idx[e] as usize;
+                        if !mr[k] {
+                            continue;
+                        }
+                        gw[e] += dv * ar[k];
+                    }
+                }
+            }
+        };
+        if parallel::threads_for(batch, work) <= 1 {
+            gwc.fill(0.0);
+            gb.fill(0.0);
+            body(0..batch, gwc, gb);
+        } else {
             let mut both = vec![0f32; nw + self.n_right];
             parallel::par_batch_reduce(batch, work, &mut both, |range, acc| {
                 let (gw, gbp) = acc.split_at_mut(nw);
@@ -333,6 +463,169 @@ impl SparseNet {
         }
     }
 
+    /// Sparse-sparse inference: every hidden layer's activations go
+    /// through `spec`'s top-k / threshold selection and the masked CSR
+    /// kernels skip the dropped neurons entirely. The input layer is
+    /// never masked (it is data, not an activation the net produced).
+    /// Returns the logits plus the achieved activation-density tally —
+    /// the gauge the serving metrics surface. A spec that keeps
+    /// everything (`topk(k >= width)`, `threshold(0)`) reproduces
+    /// [`SparseNet::logits`] bit for bit.
+    pub fn logits_act(&self, x: &[f32], batch: usize, spec: &ActSpec) -> (Vec<f32>, ActStats) {
+        let l = self.junctions.len();
+        let mut stats = ActStats::default();
+        let mut a = x.to_vec();
+        for (i, junction) in self.junctions.iter().enumerate() {
+            let mut h = vec![0f32; batch * junction.n_right];
+            if i == 0 {
+                junction.forward(&a, batch, &mut h);
+            } else {
+                let m = spec.mask(&a, junction.n_left, batch, 0);
+                stats.merge(m.stats());
+                junction.forward_masked(&a, batch, &m.active, &mut h);
+            }
+            if i != l - 1 {
+                super::relu(&mut h);
+            }
+            a = h;
+        }
+        (a, stats)
+    }
+
+    /// Sparse-sparse inference with *caller-supplied* masks (one per
+    /// hidden layer), each checked before use: shape, freshness against
+    /// `stamp`, and coverage of every right neuron the pattern
+    /// requires. A stale or corrupted mask comes back as a typed
+    /// [`ActError`] naming the layer instead of silently wrong logits —
+    /// the surface the analyzer's mutation harness drives.
+    pub fn logits_masked(
+        &self,
+        x: &[f32],
+        batch: usize,
+        masks: &[ActivationMask],
+        stamp: u64,
+    ) -> Result<Vec<f32>, ActError> {
+        let l = self.junctions.len();
+        assert_eq!(masks.len(), l.saturating_sub(1), "one mask per hidden layer");
+        let mut a = x.to_vec();
+        for (i, junction) in self.junctions.iter().enumerate() {
+            let mut h = vec![0f32; batch * junction.n_right];
+            if i == 0 {
+                junction.forward(&a, batch, &mut h);
+            } else {
+                let m = &masks[i - 1];
+                m.verify_shape(i, junction.n_left, batch)?;
+                m.verify_fresh(i, stamp)?;
+                m.verify_coverage(i, &junction.offsets, &junction.idx, junction.n_right)?;
+                junction.forward_masked(&a, batch, &m.active, &mut h);
+            }
+            if i != l - 1 {
+                super::relu(&mut h);
+            }
+            a = h;
+        }
+        Ok(a)
+    }
+
+    /// Forward + backward with run-time activation sparsity: the masks
+    /// built on the forward pass gate the same layers' BP scatter and
+    /// UP accumulation, so all three loops do `density * |W_i|` work.
+    /// An all-keeping spec reproduces [`SparseNet::step`] bit for bit.
+    pub fn step_act(
+        &self,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        l2: f32,
+        spec: &ActSpec,
+    ) -> (SparseStepOut, ActStats) {
+        let l = self.junctions.len();
+        let classes = *self.layers.last().unwrap();
+        let mut stats = ActStats::default();
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(l);
+        let mut masks: Vec<ActivationMask> = Vec::with_capacity(l.saturating_sub(1));
+        for (i, junction) in self.junctions.iter().enumerate() {
+            let mut h = vec![0f32; batch * junction.n_right];
+            if i == 0 {
+                junction.forward(&acts[i], batch, &mut h);
+            } else {
+                let m = spec.mask(&acts[i], junction.n_left, batch, 0);
+                stats.merge(m.stats());
+                junction.forward_masked(&acts[i], batch, &m.active, &mut h);
+                masks.push(m);
+            }
+            pre.push(h.clone());
+            if i != l - 1 {
+                super::relu(&mut h);
+            }
+            acts.push(h);
+        }
+        let (loss, correct, dlogits) = super::softmax_ce(acts.last().unwrap(), y, classes);
+
+        let mut gwc = Vec::with_capacity(l);
+        let mut gb = Vec::with_capacity(l);
+        for junction in &self.junctions {
+            gwc.push(vec![0f32; junction.wc.len()]);
+            gb.push(vec![0f32; junction.n_right]);
+        }
+        let mut dh = dlogits;
+        for i in (0..l).rev() {
+            let junction = &self.junctions[i];
+            if i == 0 {
+                junction.grads(&acts[i], &dh, batch, l2, &mut gwc[i], &mut gb[i]);
+            } else {
+                junction.grads_masked(
+                    &acts[i],
+                    &dh,
+                    batch,
+                    &masks[i - 1].active,
+                    l2,
+                    &mut gwc[i],
+                    &mut gb[i],
+                );
+                let mut da = vec![0f32; batch * junction.n_left];
+                junction.backprop_masked(&dh, batch, &masks[i - 1].active, &mut da);
+                for (dv, &hv) in da.iter_mut().zip(&pre[i - 1]) {
+                    if hv <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+                dh = da;
+            }
+        }
+        (
+            SparseStepOut {
+                loss,
+                correct,
+                grads: SparseGrads { gwc, gb },
+            },
+            stats,
+        )
+    }
+
+    /// Classification accuracy under an activation-sparsity spec (the
+    /// equal-accuracy axis of the sparse-sparse benches).
+    pub fn accuracy_act(&self, x: &[f32], y: &[i32], spec: &ActSpec) -> f64 {
+        let batch = y.len();
+        let classes = *self.layers.last().unwrap();
+        let (logits, _) = self.logits_act(x, batch, spec);
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / batch as f64
+    }
+
     /// Classification accuracy over one batch.
     pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
         let batch = y.len();
@@ -416,6 +709,55 @@ mod tests {
             }
             for (a, b) in so.grads.gb[i].iter().zip(&dor.grads.gb[i]) {
                 assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn all_ones_mask_is_bit_for_bit() {
+        use crate::nn::actsparse::ActSpec;
+        let (snet, _, x, y) = setup(4);
+        let keep_all = ActSpec::top_k(usize::MAX);
+        let (la, stats) = snet.logits_act(&x, 8, &keep_all);
+        let ld = snet.logits(&x, 8);
+        assert_eq!(la, ld, "all-keeping spec must be bit-identical");
+        assert!((stats.density() - 1.0).abs() < 1e-12);
+        let (sa, _) = snet.step_act(&x, &y, 8, 0.01, &keep_all);
+        let sd = snet.step(&x, &y, 8, 0.01);
+        assert_eq!(sa.loss.to_bits(), sd.loss.to_bits());
+        assert_eq!(sa.correct, sd.correct);
+        for (ga, gd) in sa.grads.gwc.iter().zip(&sd.grads.gwc) {
+            assert_eq!(ga, gd);
+        }
+    }
+
+    #[test]
+    fn masked_forward_equals_zeroed_activations() {
+        // the masked kernel must compute exactly the CSR sum with the
+        // inactive terms absent, in the original edge order
+        let (snet, _, x, _) = setup(5);
+        let j = &snet.junctions[0];
+        let mut active = vec![true; 8 * j.n_left];
+        for (i, a) in active.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *a = false;
+            }
+        }
+        let mut out = vec![0f32; 8 * j.n_right];
+        j.forward_masked(&x, 8, &active, &mut out);
+        // reference: same CSR order, inactive contributions skipped
+        for bi in 0..8 {
+            let ar = &x[bi * j.n_left..(bi + 1) * j.n_left];
+            let mr = &active[bi * j.n_left..(bi + 1) * j.n_left];
+            for jr in 0..j.n_right {
+                let mut acc = j.bias[jr];
+                for e in j.offsets[jr] as usize..j.offsets[jr + 1] as usize {
+                    let k = j.idx[e] as usize;
+                    if mr[k] {
+                        acc += j.wc[e] * ar[k];
+                    }
+                }
+                assert_eq!(acc.to_bits(), out[bi * j.n_right + jr].to_bits());
             }
         }
     }

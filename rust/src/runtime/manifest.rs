@@ -18,6 +18,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::nn::actsparse::{ActMode, ActSpec};
 use crate::nn::fixed::QFormat;
 use crate::util::json::Json;
 
@@ -75,6 +76,13 @@ pub struct ConfigEntry {
     /// Fixed-point execution parameters; `None` disables the quantized
     /// programs for this config.
     pub quant: Option<QuantSpec>,
+    /// Run-time activation sparsity; `None` (the default, and every
+    /// built-in config) keeps the weight-sparse-only kernels. Manifest
+    /// syntax: `"act_sparsity": {"mode": "topk", "k": 32}` or
+    /// `{"mode": "threshold", "threshold": 0.5}`. Does not change any
+    /// program signature — it selects the sparse-sparse kernel variants
+    /// inside the native engine's `forward`/`train` execution.
+    pub act: Option<ActSpec>,
     /// Programs by tag (`forward`, `train`, `gather_forward`,
     /// `forward_quantized`).
     pub programs: BTreeMap<String, ProgramSpec>,
@@ -239,7 +247,44 @@ impl ConfigEntry {
             }
         }
 
-        ConfigEntry { layers, batch, gather_dout, quant, programs }
+        ConfigEntry { layers, batch, gather_dout, quant, act: None, programs }
+    }
+
+    /// Attach an activation-sparsity spec (builder style — program
+    /// signatures are unaffected, so this composes with
+    /// [`ConfigEntry::synthesize`] output and parsed entries alike).
+    pub fn with_act(mut self, spec: ActSpec) -> ConfigEntry {
+        self.act = Some(spec);
+        self
+    }
+}
+
+/// Parse the manifest's `"act_sparsity"` object into an [`ActSpec`].
+/// A malformed spec is an error, never a silent weight-sparse fallback.
+fn parse_act(v: &Json) -> Result<ActSpec, String> {
+    let mode = v
+        .get("mode")
+        .and_then(|m| m.as_str())
+        .ok_or("act_sparsity missing mode (\"topk\" or \"threshold\")")?;
+    match mode {
+        "topk" => {
+            let k = v
+                .get("k")
+                .and_then(|k| k.as_usize())
+                .ok_or("act_sparsity topk mode needs an integer \"k\"")?;
+            Ok(ActSpec { mode: ActMode::TopK(k) })
+        }
+        "threshold" => {
+            let t = v
+                .get("threshold")
+                .and_then(|t| t.as_f64())
+                .ok_or("act_sparsity threshold mode needs a numeric \"threshold\"")?;
+            if !t.is_finite() || t < 0.0 {
+                return Err(format!("act_sparsity threshold must be finite and >= 0, got {t}"));
+            }
+            Ok(ActSpec { mode: ActMode::Threshold(t as f32) })
+        }
+        other => Err(format!("act_sparsity mode '{other}' (want topk|threshold)")),
     }
 }
 
@@ -364,6 +409,9 @@ impl Manifest {
                     Some(QuantSpec { format })
                 }
             };
+            // optional activation sparsity: "act_sparsity": {"mode": ...}
+            // (a malformed spec is an error, not a silent dense fallback)
+            let act = entry.get("act_sparsity").map(parse_act).transpose()?;
             let mut programs = BTreeMap::new();
             let progs = entry
                 .get("programs")
@@ -398,6 +446,7 @@ impl Manifest {
                     batch,
                     gather_dout,
                     quant,
+                    act,
                     programs,
                 },
             );
@@ -483,6 +532,51 @@ mod tests {
         // malformed => parse error, not a silent fallback
         let bad = SAMPLE.replace("\"batch\": 16,", "\"batch\": 16, \"quant\": \"4.12\",");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_and_rejects_act_sparsity_field() {
+        use crate::nn::actsparse::{ActMode, ActSpec};
+        let topk = SAMPLE.replace(
+            "\"batch\": 16,",
+            "\"batch\": 16, \"act_sparsity\": {\"mode\": \"topk\", \"k\": 8},",
+        );
+        let m = Manifest::parse(&topk).unwrap();
+        assert_eq!(m.configs["tiny"].act, Some(ActSpec::top_k(8)));
+        let thr = SAMPLE.replace(
+            "\"batch\": 16,",
+            "\"batch\": 16, \"act_sparsity\": {\"mode\": \"threshold\", \"threshold\": 0.5},",
+        );
+        let m = Manifest::parse(&thr).unwrap();
+        assert_eq!(
+            m.configs["tiny"].act,
+            Some(ActSpec { mode: ActMode::Threshold(0.5) })
+        );
+        // absent => None (and every builtin stays weight-sparse-only)
+        assert_eq!(Manifest::parse(SAMPLE).unwrap().configs["tiny"].act, None);
+        for c in Manifest::builtin().configs.values() {
+            assert_eq!(c.act, None);
+        }
+        // malformed specs are errors, not silent fallbacks
+        for bad in [
+            "{\"mode\": \"topk\"}",
+            "{\"mode\": \"threshold\"}",
+            "{\"mode\": \"softmax\"}",
+            "{\"k\": 8}",
+            "{\"mode\": \"threshold\", \"threshold\": -1.0}",
+        ] {
+            let doc = SAMPLE.replace(
+                "\"batch\": 16,",
+                &format!("\"batch\": 16, \"act_sparsity\": {bad},"),
+            );
+            assert!(Manifest::parse(&doc).is_err(), "must reject {bad}");
+        }
+        // the builder attaches a spec without touching program arity
+        let entry = ConfigEntry::synthesize(vec![8, 4, 2], 4, None, None);
+        let fwd_inputs = entry.programs["forward"].inputs.len();
+        let entry = entry.with_act(ActSpec::top_k(2));
+        assert_eq!(entry.act, Some(ActSpec::top_k(2)));
+        assert_eq!(entry.programs["forward"].inputs.len(), fwd_inputs);
     }
 
     #[test]

@@ -17,12 +17,13 @@
 use anyhow::{bail, Result};
 
 use super::{ConfigEntry, ExecBackend, ProgramExec, ProgramSpec, Value};
+use crate::nn::actsparse::ActSpec;
 use crate::nn::adam::{AdamConfig, AdamState};
 use crate::nn::dense::DenseNet;
 use crate::nn::fixed::{self, FixedSparseLayer, QFormat};
 use crate::nn::pipeline::{MultiPipelinedTrainer, PipelineConfig, PipelinedTrainer};
 use crate::nn::relu;
-use crate::nn::sparse::SparseLayer;
+use crate::nn::sparse::{SparseLayer, SparseNet};
 use crate::sparsity::pattern::NetPattern;
 use crate::util::parallel;
 
@@ -42,6 +43,11 @@ struct NativeProgram {
     kind: Kind,
     layers: Vec<usize>,
     batch: usize,
+    /// The config's activation-sparsity spec: when present, `forward`,
+    /// `train` and `forward_quantized` run the sparse-sparse CSR kernels
+    /// (`nn::actsparse`) instead of the dense-activation reference path.
+    /// Program signatures are unchanged either way.
+    act: Option<ActSpec>,
     name: String,
 }
 
@@ -73,6 +79,7 @@ impl ExecBackend for NativeEngine {
             kind,
             layers: entry.layers.clone(),
             batch: entry.batch,
+            act: entry.act,
             name: format!("{config}/{program}"),
         }))
     }
@@ -136,11 +143,62 @@ fn dense_net_from_inputs(
     })
 }
 
+/// Compact the program's positional `params` + `masks` inputs into the
+/// CSR net the sparse-sparse (activation-masked) paths execute. The
+/// extraction walks edges in row-major order — the same order
+/// [`SparseLayer::from_pattern_dense`] produces — so the masked kernels'
+/// all-ones bit-for-bit guarantee applies to this net too.
+fn sparse_net_from_inputs(
+    layers: &[usize],
+    params: &[Value],
+    masks: &[Value],
+) -> Result<SparseNet> {
+    let l = layers.len() - 1;
+    let mut junctions = Vec::with_capacity(l);
+    for i in 0..l {
+        let (nl, nr) = (layers[i], layers[i + 1]);
+        let w = params[2 * i].as_f32()?;
+        let b = params[2 * i + 1].as_f32()?;
+        let m = masks[i].as_f32()?;
+        let mut offsets = Vec::with_capacity(nr + 1);
+        let mut idx = Vec::new();
+        let mut wc = Vec::new();
+        offsets.push(0u32);
+        for j in 0..nr {
+            for k in 0..nl {
+                if m[j * nl + k] != 0.0 {
+                    idx.push(k as u32);
+                    wc.push(w[j * nl + k]);
+                }
+            }
+            offsets.push(idx.len() as u32);
+        }
+        junctions.push(SparseLayer {
+            n_left: nl,
+            n_right: nr,
+            offsets,
+            idx,
+            wc,
+            bias: b.to_vec(),
+        });
+    }
+    Ok(SparseNet {
+        layers: layers.to_vec(),
+        junctions,
+    })
+}
+
 impl NativeProgram {
     fn run_forward(&self, inputs: &[Value], spec: &ProgramSpec) -> Result<Vec<Value>> {
         let l = self.layers.len() - 1;
-        let net = dense_net_from_inputs(&self.layers, &inputs[..2 * l], &inputs[2 * l..3 * l])?;
         let x = inputs[3 * l].as_f32()?;
+        if let Some(aspec) = &self.act {
+            let net =
+                sparse_net_from_inputs(&self.layers, &inputs[..2 * l], &inputs[2 * l..3 * l])?;
+            let (logits, _stats) = net.logits_act(x, self.batch, aspec);
+            return Ok(vec![Value::F32(logits, spec.outputs[0].shape.clone())]);
+        }
+        let net = dense_net_from_inputs(&self.layers, &inputs[..2 * l], &inputs[2 * l..3 * l])?;
         let logits = net.logits(x, self.batch);
         Ok(vec![Value::F32(logits, spec.outputs[0].shape.clone())])
     }
@@ -164,8 +222,35 @@ impl NativeProgram {
         let lr = rest[3].scalar()?;
         let l2 = rest[4].scalar()?;
 
-        let net = dense_net_from_inputs(&self.layers, params, masks)?;
-        let step = net.step(x, y, self.batch, l2, None);
+        // (w, b, gw, gb, loss, correct) in the dense layout either way:
+        // with an ActSpec the step runs the sparse-sparse CSR kernels and
+        // the compacted gradients are scattered back for the fused Adam
+        // update below (excluded edges stay exactly zero in both layouts,
+        // keeping their Adam moments zero).
+        let (wd, bd, gw, gb, loss, correct) = if let Some(aspec) = &self.act {
+            let snet = sparse_net_from_inputs(&self.layers, params, masks)?;
+            let (step, _stats) = snet.step_act(x, y, self.batch, l2, aspec);
+            let mut wd = Vec::with_capacity(l);
+            let mut bd = Vec::with_capacity(l);
+            let mut gw = Vec::with_capacity(l);
+            for (i, junction) in snet.junctions.iter().enumerate() {
+                let (w, _mask) = junction.to_dense();
+                wd.push(w);
+                bd.push(junction.bias.clone());
+                let mut g = vec![0f32; junction.n_right * junction.n_left];
+                for j in 0..junction.n_right {
+                    for e in junction.offsets[j] as usize..junction.offsets[j + 1] as usize {
+                        g[j * junction.n_left + junction.idx[e] as usize] = step.grads.gwc[i][e];
+                    }
+                }
+                gw.push(g);
+            }
+            (wd, bd, gw, step.grads.gb, step.loss, step.correct)
+        } else {
+            let net = dense_net_from_inputs(&self.layers, params, masks)?;
+            let step = net.step(x, y, self.batch, l2, None);
+            (net.w, net.b, step.grads.gw, step.grads.gb, step.loss, step.correct)
+        };
 
         // fused Adam update (the paper's configuration; lr comes in as a
         // runtime scalar like in the AOT artifact)
@@ -180,14 +265,14 @@ impl NativeProgram {
             let junction = ti / 2;
             let is_bias = ti % 2 == 1;
             let mut p = if is_bias {
-                net.b[junction].clone()
+                bd[junction].clone()
             } else {
-                net.w[junction].clone()
+                wd[junction].clone()
             };
             let g = if is_bias {
-                &step.grads.gb[junction]
+                &gb[junction]
             } else {
-                &step.grads.gw[junction]
+                &gw[junction]
             };
             let mut st = AdamState {
                 m: opt_m[ti].as_f32()?.to_vec(),
@@ -202,8 +287,8 @@ impl NativeProgram {
         out.extend(new_m);
         out.extend(new_v);
         out.push(Value::scalar_f32(t + 1.0));
-        out.push(Value::scalar_f32(step.loss));
-        out.push(Value::scalar_f32(step.correct as f32));
+        out.push(Value::scalar_f32(loss));
+        out.push(Value::scalar_f32(correct as f32));
         Ok(out)
     }
 
@@ -224,42 +309,25 @@ impl NativeProgram {
     ) -> Result<Vec<Value>> {
         let l = self.layers.len() - 1;
         let x = inputs[3 * l].as_f32()?;
+        // CSR extraction (row-major edge order, weights pre-masked like
+        // the f32 path) via the shared compaction helper
+        let net = sparse_net_from_inputs(&self.layers, &inputs[..2 * l], &inputs[2 * l..3 * l])?;
         let mut saturations = 0usize;
         let mut aq = fmt.quantize_slice_counted(x, &mut saturations);
-        for i in 0..l {
-            let (nl, nr) = (self.layers[i], self.layers[i + 1]);
-            let w = inputs[2 * i].as_f32()?;
-            let b = inputs[2 * i + 1].as_f32()?;
-            let m = inputs[2 * l + i].as_f32()?;
-            // CSR extraction in the row-major edge order, weights
-            // pre-masked like the f32 path
-            let mut offsets = Vec::with_capacity(nr + 1);
-            let mut idx = Vec::new();
-            let mut wc = Vec::new();
-            offsets.push(0u32);
-            for j in 0..nr {
-                for k in 0..nl {
-                    if m[j * nl + k] != 0.0 {
-                        idx.push(k as u32);
-                        wc.push(w[j * nl + k]);
-                    }
-                }
-                offsets.push(idx.len() as u32);
-            }
-            let layer = FixedSparseLayer::from_f32(
-                &SparseLayer {
-                    n_left: nl,
-                    n_right: nr,
-                    offsets,
-                    idx,
-                    wc,
-                    bias: b.to_vec(),
-                },
-                fmt,
-            );
+        for (i, junction) in net.junctions.iter().enumerate() {
+            let layer = FixedSparseLayer::from_f32(junction, fmt);
             saturations += layer.clipped;
-            let mut h = vec![0i32; self.batch * nr];
-            saturations += layer.forward(&aq, self.batch, &mut h);
+            let mut h = vec![0i32; self.batch * junction.n_right];
+            match &self.act {
+                // hidden-layer activations only: the input layer (i == 0)
+                // is never masked. Selection runs on the raw Qm.n words —
+                // |raw| ordering equals |dequantized| ordering.
+                Some(aspec) if i > 0 => {
+                    let m = fixed::mask_raw(aspec, &aq, junction.n_left, self.batch, fmt, 0);
+                    saturations += layer.forward_masked(&aq, self.batch, &m.active, &mut h);
+                }
+                _ => saturations += layer.forward(&aq, self.batch, &mut h),
+            }
             if i != l - 1 {
                 fixed::relu_raw(&mut h);
             }
@@ -300,7 +368,14 @@ impl NativeProgram {
                 bias: bias.to_vec(),
             };
             let mut h = vec![0f32; batch * nr];
-            layer.forward(&a, batch, &mut h);
+            match &self.act {
+                // same hidden-layers-only rule as the other act paths
+                Some(aspec) if i > 0 => {
+                    let m = aspec.mask(&a, nl, batch, 0);
+                    layer.forward_masked(&a, batch, &m.active, &mut h);
+                }
+                _ => layer.forward(&a, batch, &mut h),
+            }
             if i != l - 1 {
                 relu(&mut h);
             }
@@ -343,6 +418,64 @@ mod tests {
             .err()
             .expect("must reject");
         assert!(format!("{err:#}").contains("quant spec"));
+    }
+
+    /// Random params + half-dense random masks + input for a synthesized
+    /// entry, in the forward program's positional order.
+    fn forward_inputs(layers: &[usize], batch: usize, seed: u64) -> Vec<Value> {
+        let l = layers.len() - 1;
+        let mut rng = Rng::new(seed);
+        let mut inputs: Vec<Value> = Vec::new();
+        for i in 0..l {
+            let (nl, nr) = (layers[i], layers[i + 1]);
+            inputs.push(Value::F32(
+                (0..nr * nl).map(|_| rng.normal() * 0.3).collect(),
+                vec![nr, nl],
+            ));
+            inputs.push(Value::F32(
+                (0..nr).map(|_| rng.normal() * 0.1).collect(),
+                vec![nr],
+            ));
+        }
+        for i in 0..l {
+            let (nl, nr) = (layers[i], layers[i + 1]);
+            inputs.push(Value::F32(
+                (0..nr * nl)
+                    .map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 })
+                    .collect(),
+                vec![nr, nl],
+            ));
+        }
+        inputs.push(Value::F32(
+            (0..batch * layers[0]).map(|_| rng.normal()).collect(),
+            vec![batch, layers[0]],
+        ));
+        inputs
+    }
+
+    #[test]
+    fn act_forward_with_saturating_k_matches_the_dense_path() {
+        use crate::nn::actsparse::ActSpec;
+        let (layers, batch) = (vec![12, 8, 6, 4], 3usize);
+        let inputs = forward_inputs(&layers, batch, 11);
+        let plain = crate::runtime::ConfigEntry::synthesize(layers.clone(), batch, None, None);
+        let spec = plain.programs["forward"].clone();
+        let acted = plain.clone().with_act(ActSpec::top_k(usize::MAX));
+        let p0 = NativeEngine.load_program("c", "forward", &plain, &spec).unwrap();
+        let p1 = NativeEngine.load_program("c", "forward", &acted, &spec).unwrap();
+        let a = p0.run(&inputs, &spec).unwrap();
+        let b = p1.run(&inputs, &spec).unwrap();
+        // all-ones mask: the sparse-sparse path computes the same network
+        // as the dense reference (different summation order, so tolerance
+        // rather than bit equality across the two implementations)
+        for (g, w) in a[0].as_f32().unwrap().iter().zip(b[0].as_f32().unwrap()) {
+            assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        // a tight k actually changes the computation (non-vacuity)
+        let tight = plain.with_act(ActSpec::top_k(1));
+        let p2 = NativeEngine.load_program("c", "forward", &tight, &spec).unwrap();
+        let c = p2.run(&inputs, &spec).unwrap();
+        assert_ne!(a[0].as_f32().unwrap(), c[0].as_f32().unwrap());
     }
 
     #[test]

@@ -227,6 +227,136 @@ fn malformed_manifest_documents_are_rejected() {
 }
 
 #[test]
+fn injected_overlapping_packed_index_is_rejected_naming_the_layer() {
+    use pds::nn::actsparse::{ActError, ActivationMask};
+
+    // n = 8, z = 4: wave 0 packs actives of neurons 0..4, wave 1 of
+    // 4..8, and bank(i) = i % 4 — a clean top-k mask packs without
+    // overlap by construction
+    let acts = [0.9f32, 0.1, 0.8, 0.2, 0.7, 0.3, 0.6, 0.4];
+    let mask = ActivationMask::top_k(&acts, 8, 1, 4, 5);
+    let mut rows = mask.pack(2, 4).expect("z | n packs");
+    rows[0].verify(2, 8).expect("clean packing verifies");
+
+    // mutation: smuggle neuron 4 into wave 0, colliding with neuron 0
+    // on bank 0 — the exact corruption a broken packer would emit
+    let smuggled = rows[0].waves[1][0];
+    assert_eq!(smuggled, 4, "fixture: neuron 4 is wave 1's first active");
+    rows[0].waves[0].push(smuggled);
+    rows[0].waves[1].remove(0);
+    match rows[0].verify(2, 8) {
+        Err(ActError::Overlap { layer: 2, wave: 0, bank: 0 }) => {}
+        other => panic!("expected Overlap naming layer 2 / wave 0 / bank 0, got {other:?}"),
+    }
+
+    // mutation: the same index in two waves is a Duplicate
+    let mut rows = mask.pack(2, 4).expect("z | n packs");
+    let dup = rows[0].waves[0][0];
+    rows[0].waves[1].push(dup);
+    match rows[0].verify(2, 8) {
+        Err(ActError::Duplicate { layer: 2, index }) => assert_eq!(index, dup),
+        other => panic!("expected Duplicate naming layer 2, got {other:?}"),
+    }
+
+    // mutation: an index past the layer width is OutOfRange
+    let mut rows = mask.pack(2, 4).expect("z | n packs");
+    rows[0].waves[0][0] = 8;
+    match rows[0].verify(2, 8) {
+        Err(ActError::OutOfRange { layer: 2, index: 8, n: 8 }) => {}
+        other => panic!("expected OutOfRange naming layer 2, got {other:?}"),
+    }
+
+    // and a z that does not divide the width is refused up front
+    match mask.pack(2, 3) {
+        Err(ActError::NotDividing { layer: 2, z: 3, n: 8 }) => {}
+        other => panic!("expected NotDividing naming layer 2, got {other:?}"),
+    }
+}
+
+fn masked_net_fixture() -> (pds::nn::sparse::SparseNet, Vec<f32>, usize) {
+    use pds::sparsity::config::{DoutConfig, NetConfig};
+    use pds::sparsity::{generate, Method};
+
+    let mut rng = Rng::new(0xAC7);
+    let pattern = generate(
+        Method::ClashFree,
+        &NetConfig::new(vec![8, 8, 4]),
+        &DoutConfig(vec![4, 2]),
+        None,
+        &mut rng,
+    );
+    let net = pds::nn::sparse::SparseNet::init_he(&pattern, 0.1, &mut rng);
+    let batch = 2usize;
+    let x: Vec<f32> = (0..batch * 8).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+    (net, x, batch)
+}
+
+#[test]
+fn mask_dropping_a_pattern_required_neuron_is_rejected() {
+    use pds::nn::actsparse::{ActError, ActivationMask};
+
+    let (net, x, batch) = masked_net_fixture();
+    // drop every in-edge of right neuron 0 of junction 1 (the mask
+    // covers the hidden layer, i.e. junction 1's left side) — the
+    // pattern requires that neuron, so the net would silently compute
+    // its bias alone
+    let hidden = net.junctions[1].n_left;
+    let mut mask = ActivationMask::all_ones(hidden, batch, 9);
+    let (lo, hi) = (
+        net.junctions[1].offsets[0] as usize,
+        net.junctions[1].offsets[1] as usize,
+    );
+    for r in 0..batch {
+        for &k in &net.junctions[1].idx[lo..hi] {
+            mask.active[r * hidden + k as usize] = false;
+        }
+    }
+    match net.logits_masked(&x, batch, &[mask], 9) {
+        Err(ActError::Uncovered { layer: 1, neuron: 0 }) => {}
+        other => panic!("expected Uncovered naming layer 1 / neuron 0, got {other:?}"),
+    }
+}
+
+#[test]
+fn stale_mask_reused_across_batches_is_rejected() {
+    use pds::nn::actsparse::{ActError, ActivationMask};
+
+    let (net, x, batch) = masked_net_fixture();
+    let hidden = net.junctions[1].n_left;
+    // mask built for batch stamp 1, reused while executing stamp 2 —
+    // silent reuse would freeze the selection on old activations
+    let mask = ActivationMask::all_ones(hidden, batch, 1);
+    match net.logits_masked(&x, batch, &[mask], 2) {
+        Err(ActError::Stale { layer: 1, have: 1, want: 2 }) => {}
+        other => panic!("expected Stale naming layer 1, got {other:?}"),
+    }
+    // the same mask at its own stamp passes: differential evidence the
+    // rejection is the staleness, not the harness
+    let mask = ActivationMask::all_ones(hidden, batch, 1);
+    net.logits_masked(&x, batch, &[mask], 1)
+        .expect("fresh all-ones mask must pass");
+}
+
+#[test]
+fn degenerate_act_specs_are_rejected_by_the_analyzer() {
+    use pds::nn::actsparse::ActSpec;
+
+    // topk k=0 zeroes every hidden activation: a config-level error
+    let manifest = Manifest::builtin();
+    let entry = manifest.configs["tiny"].clone().with_act(ActSpec::top_k(0));
+    let report = analyze_config("tiny", &entry, &AnalyzeOptions::default());
+    assert!(report.has_errors(), "{report}");
+    assert_code(&report.findings, "bad-act", Severity::Error);
+
+    // a sane spec adds only the info finding — and the no-ActSpec
+    // builtin report (pinned clean above) must not grow act findings
+    let entry = manifest.configs["tiny"].clone().with_act(ActSpec::top_k(4));
+    let report = analyze_config("tiny", &entry, &AnalyzeOptions::default());
+    assert!(!report.has_errors(), "{report}");
+    assert_code(&report.findings, "act-spec", Severity::Info);
+}
+
+#[test]
 fn load_gate_refuses_a_lint_broken_manifest_file() {
     let dir = std::env::temp_dir().join(format!("pds_analyzer_mut_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

@@ -275,6 +275,134 @@ fn analyzer_report_schema() {
     assert_eq!(reparsed, doc, "report must round-trip");
 }
 
+/// The `actsparse` sections (written by `cargo bench --bench actsparse`
+/// into both BENCH files): the kernel sweep must carry a non-empty
+/// density axis per config, every speedup/timing field must exist (and
+/// be numeric once `recorded: true`), and the train section must pair
+/// each config's dense and masked step times.
+#[test]
+fn bench_actsparse_sections_schema() {
+    // serving/kernel half, merged into BENCH_serve.json
+    let doc = load("BENCH_serve.json");
+    let a = doc
+        .get("actsparse")
+        .expect("actsparse section (written by `cargo bench --bench actsparse`)");
+    let recorded = recorded_flag(a, "actsparse");
+    let fmt = a
+        .get("format")
+        .and_then(|v| v.as_str())
+        .expect("actsparse.format");
+    assert!(
+        pds::nn::fixed::QFormat::parse(fmt).is_some(),
+        "actsparse.format '{fmt}' is not a Qm.n format"
+    );
+    check_field(a, "kernel_threads_total", recorded, "actsparse");
+    let kernel = match a.get("kernel") {
+        Some(Json::Obj(m)) => m,
+        other => panic!("actsparse.kernel must be a per-config object, got {other:?}"),
+    };
+    assert!(kernel.len() >= 2, "kernel sweep must cover >= 2 Table-II configs");
+    for (config, section) in kernel {
+        let what = format!("actsparse.kernel.{config}");
+        let layers = section
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .unwrap_or_else(|| panic!("{what}: layers"));
+        assert!(layers.len() >= 2, "{what}: layers too short");
+        assert!(
+            section.get("batch").and_then(|v| v.as_usize()).is_some(),
+            "{what}: batch"
+        );
+        for key in ["f32_base_ms", "quant_base_ms"] {
+            check_field(section, key, recorded, &what);
+        }
+        let densities = section
+            .get("densities")
+            .and_then(|v| v.as_arr())
+            .unwrap_or_else(|| panic!("{what}: densities axis"));
+        assert!(
+            densities.len() >= 2,
+            "{what}: the density axis needs at least two points"
+        );
+        for (i, point) in densities.iter().enumerate() {
+            let what = format!("{what} density point {i}");
+            assert!(
+                point.get("fraction").and_then(|v| v.as_str()).is_some(),
+                "{what}: fraction label"
+            );
+            assert!(
+                point.get("k").and_then(|v| v.as_usize()).is_some(),
+                "{what}: k"
+            );
+            for key in [
+                "density",
+                "quant_density",
+                "f32_ms",
+                "f32_speedup",
+                "quant_ms",
+                "quant_speedup",
+                "argmax_agreement",
+            ] {
+                check_field(point, key, recorded, &what);
+            }
+        }
+    }
+    let serve = a
+        .get("serve")
+        .and_then(|v| v.as_arr())
+        .expect("actsparse.serve array");
+    assert!(!serve.is_empty(), "actsparse.serve must not be empty");
+    let mut with_act = false;
+    let mut without_act = false;
+    for (i, sc) in serve.iter().enumerate() {
+        let what = format!("actsparse.serve scenario {i}");
+        assert!(
+            sc.get("scenario").and_then(|v| v.as_str()).is_some(),
+            "{what}: scenario label"
+        );
+        for key in ["quant", "act"] {
+            match sc.get(key) {
+                Some(Json::Bool(b)) => {
+                    if key == "act" {
+                        with_act |= *b;
+                        without_act |= !*b;
+                    }
+                }
+                other => panic!("{what}: '{key}' must be a bool, got {other:?}"),
+            }
+        }
+        for key in ["rps", "density"] {
+            check_field(sc, key, recorded, &what);
+        }
+    }
+    assert!(
+        with_act && without_act,
+        "actsparse.serve must pair masked and unmasked scenarios"
+    );
+
+    // train half, merged into BENCH_train.json
+    let doc = load("BENCH_train.json");
+    let a = doc
+        .get("actsparse")
+        .expect("actsparse section (written by `cargo bench --bench actsparse`)");
+    let recorded = recorded_flag(a, "BENCH_train.json actsparse");
+    let train = match a.get("train") {
+        Some(Json::Obj(m)) => m,
+        other => panic!("actsparse.train must be a per-config object, got {other:?}"),
+    };
+    assert!(train.len() >= 2, "train sweep must cover >= 2 configs");
+    for (config, section) in train {
+        let what = format!("actsparse.train.{config}");
+        assert!(
+            section.get("k").and_then(|v| v.as_usize()).is_some(),
+            "{what}: k"
+        );
+        for key in ["dense_ms", "act_ms", "act_speedup", "dense_loss", "act_loss"] {
+            check_field(section, key, recorded, &what);
+        }
+    }
+}
+
 #[test]
 fn bench_serve_quant_section_schema() {
     let doc = load("BENCH_serve.json");

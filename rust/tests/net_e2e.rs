@@ -402,6 +402,82 @@ fn server_shutdown_drains_in_flight_across_contexts() {
     }
 }
 
+/// Gap-coverage over a real socket: quantized + multi-context +
+/// pipelined (non-blocking on the wire) traffic, with and without
+/// activation sparsity, must answer exactly like the in-process client
+/// on the same bank — the transport must stay execution-neutral when
+/// the worker runs the sparse-sparse kernels.
+#[test]
+fn socket_quant_multi_context_act_matches_in_process() {
+    let contexts = 3usize;
+    let fmt = pds::nn::fixed::QFormat::default();
+    let act = pds::nn::actsparse::ActSpec::top_k(4);
+    for (quant, aspec) in [
+        (None, Some(act)),
+        (Some(fmt), None),
+        (Some(fmt), Some(act)),
+    ] {
+        let spec = loadgen::model_spec(dir(), "tiny", 0.25, 45)
+            .unwrap()
+            .with_contexts(contexts);
+        let spec = match quant {
+            Some(f) => spec.with_quant(f),
+            None => spec,
+        };
+        let spec = match aspec {
+            Some(a) => spec.with_act(a),
+            None => spec,
+        };
+        let svc = Arc::new(
+            InferenceService::start(
+                dir(),
+                vec![spec],
+                ServerConfig {
+                    max_wait: Duration::from_millis(1),
+                    workers: 1,
+                    queue_depth: 64,
+                    tune_kernel_threads: false,
+                },
+            )
+            .unwrap(),
+        );
+        let server =
+            NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
+                .unwrap();
+        let local = svc.client("tiny").unwrap();
+        let mut net = NetClient::connect(server.local_addr()).unwrap();
+        let mut rng = Rng::new(0xAC7_E2E);
+        for ctx in 0..contexts {
+            let group: Vec<Vec<f32>> = (0..6)
+                .map(|_| {
+                    (0..local.features())
+                        .map(|_| rng.uniform() * 2.0 - 1.0)
+                        .collect()
+                })
+                .collect();
+            let preds = net
+                .classify_pipelined_ctx("tiny", ctx as u32, &group)
+                .unwrap();
+            for (x, p) in group.iter().zip(&preds) {
+                let p_local = local.classify_ctx(x.clone(), ctx).unwrap();
+                assert_eq!(
+                    p.class, p_local.class,
+                    "context {ctx} (quant {quant:?}, act {aspec:?}): socket diverged \
+                     from in-process"
+                );
+            }
+        }
+        if aspec.is_some() {
+            let density = svc.metrics("tiny").unwrap().act_density();
+            assert!(
+                density > 0.0 && density < 1.0,
+                "socket-served requests must feed the density gauge (got {density})"
+            );
+        }
+        stop_pair(svc, server);
+    }
+}
+
 /// A request for an unserved model errors by name; the connection
 /// stays usable.
 #[test]

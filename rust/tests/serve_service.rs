@@ -472,6 +472,94 @@ fn shutdown_drains_in_flight_across_contexts() {
     }
 }
 
+/// Gap-coverage battery: quantized execution + multi-tenant contexts +
+/// non-blocking `Client::submit_ctx` routing, with and without
+/// activation sparsity, against dedicated single-tenant twins.
+///
+/// Every prediction pipelined through the shared multi-context service
+/// must match the twin built from that context's own parameter bank
+/// (both sides run the identical kernel on the identical bank, so the
+/// classes must agree on every probe — not just statistically). With an
+/// ActSpec the achieved-density gauge must drop below 1.0; without one
+/// it must stay at its all-dense default.
+fn submit_parity_battery(
+    quant: Option<pds::nn::fixed::QFormat>,
+    act: Option<pds::nn::actsparse::ActSpec>,
+) {
+    let contexts = 3usize;
+    let spec = loadgen::model_spec(dir(), "tiny", 0.25, 5)
+        .unwrap()
+        .with_contexts(contexts);
+    let spec = match quant {
+        Some(fmt) => spec.with_quant(fmt),
+        None => spec,
+    };
+    let spec = match act {
+        Some(a) => spec.with_act(a),
+        None => spec,
+    };
+    let pattern = spec.pattern.clone();
+    let layers = pds::runtime::Manifest::probe(dir(), "tiny").unwrap().layers;
+    let svc = InferenceService::start(dir(), vec![spec.clone()], ServerConfig::default()).unwrap();
+    let client = svc.client("tiny").unwrap();
+
+    let mut rng = Rng::new(0xAC7);
+    let probes: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..client.features()).map(|_| rng.uniform() * 2.0 - 1.0).collect())
+        .collect();
+
+    for ctx in 0..contexts {
+        let twin_spec = ModelSpec {
+            params: Some(context_params(&layers, &pattern, None, ctx)),
+            contexts: 1,
+            ..spec.clone()
+        };
+        let twin =
+            InferenceService::start(dir(), vec![twin_spec], ServerConfig::default()).unwrap();
+        let tc = twin.client("tiny").unwrap();
+        // non-blocking: pipeline every probe into the shared service
+        // before collecting a single result
+        let pending: Vec<_> = probes
+            .iter()
+            .map(|x| client.submit_ctx(x.clone(), ctx).expect("queue below capacity"))
+            .collect();
+        for (x, p) in probes.iter().zip(pending) {
+            let pm = p.wait().unwrap();
+            let pt = tc.classify(x.clone()).unwrap();
+            assert_eq!(
+                pm.class, pt.class,
+                "context {ctx} (quant {quant:?}, act {act:?}): shared-service answer \
+                 diverged from its single-tenant twin"
+            );
+            assert_eq!(pm.context, ctx, "prediction must carry its own context");
+        }
+        twin.shutdown().unwrap();
+    }
+    let m = svc.metrics("tiny").unwrap();
+    let density = m.act_density();
+    match act {
+        Some(_) => assert!(
+            density > 0.0 && density < 1.0,
+            "activation sparsity must surface in the density gauge (got {density})"
+        ),
+        None => assert_eq!(density, 1.0, "no mask, no recorded sparsity"),
+    }
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn f32_multi_context_submit_matches_twins_with_and_without_act() {
+    submit_parity_battery(None, None);
+    submit_parity_battery(None, Some(pds::nn::actsparse::ActSpec::top_k(4)));
+}
+
+#[test]
+fn quantized_multi_context_submit_matches_twins_with_and_without_act() {
+    let fmt = pds::nn::fixed::QFormat::default();
+    submit_parity_battery(Some(fmt), None);
+    submit_parity_battery(Some(fmt), Some(pds::nn::actsparse::ActSpec::top_k(4)));
+}
+
 /// A context index past the hosted bank count is a caller bug, refused
 /// loudly at the submission boundary rather than silently wrapped onto
 /// another tenant's bank.
