@@ -1,0 +1,70 @@
+//! Networked serving bench, one scenario module per concern:
+//!
+//! - [`sweep`] — sustained throughput and achieved micro-batch
+//!   coalescing under concurrent pipelined socket clients, against the
+//!   single-client baseline (the `net.scenarios` section of
+//!   `BENCH_serve.json`).
+//! - [`soak`] — the reactor scale-out claim: ~1k mostly-idle
+//!   connections multiplexed by one reactor thread under a
+//!   heavy-tailed request mix, reporting p99/p999 tail latency and the
+//!   server's shed rate (the `net.soak` subsection).
+//!
+//! Each scenario starts a fresh service + `NetServer` on an ephemeral
+//! loopback port, drives the socket load generators in
+//! `coordinator::loadgen`, and reads the counters back over the wire.
+//! The merged `net` section lands in `BENCH_serve.json` at the repo
+//! root, preserving the `serve_load` and `quant_exec` sections.
+//!
+//!     cargo bench --bench net_load
+//!
+//! `PDS_SOAK_CONNS` overrides the soak's connection count (default
+//! 1000; the reactor is sized for thousands, CI machines sometimes are
+//! not).
+
+mod soak;
+mod sweep;
+
+use std::time::Duration;
+
+use pds::coordinator::loadgen;
+
+const BATCH_WINDOW: Duration = Duration::from_micros(1000);
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let scenarios = match sweep::run(dir, BATCH_WINDOW) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("net_load: sweep failed: {e:#}");
+            return;
+        }
+    };
+    let soak_report = match soak::run(dir, BATCH_WINDOW) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            // the sweep's numbers are still worth recording; the soak
+            // subsection stays at its placeholder
+            eprintln!("net_load: soak failed: {e:#}");
+            None
+        }
+    };
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    let doc = loadgen::net_bench_json(&scenarios, BATCH_WINDOW, soak_report.as_ref());
+    // print the same flush-weighted aggregate the document records, so
+    // the console headline cannot diverge from BENCH_serve.json
+    if let Some(mean) = doc
+        .get("net")
+        .and_then(|n| n.get("mean_coalesced_batch"))
+        .and_then(|v| v.as_f64())
+    {
+        println!(
+            "\nachieved mean coalesced batch size {mean:.2} \
+             (pipelined socket traffic reaches the engine as batches)"
+        );
+    }
+    // merge-write so the serve_load and quant_exec sections survive
+    match loadgen::write_bench_json(out, doc) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("net_load: cannot write {out}: {e}"),
+    }
+}

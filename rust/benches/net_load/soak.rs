@@ -1,0 +1,61 @@
+//! Mostly-idle connection soak: the reactor scale-out number. One
+//! reactor thread multiplexes ~1k open connections (override with
+//! `PDS_SOAK_CONNS`) while a small sweeper pool drives a heavy-tailed
+//! request mix — per connection per round ~90% idle, ~9% one sample,
+//! ~1% a pipelined burst — and the report records p99/p999 tail
+//! latency plus the server's shed rate. The connection cap is set
+//! above the population (4096) so a healthy run sheds nothing; a
+//! nonzero shed rate in `BENCH_serve.json` is a finding, not noise.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pds::coordinator::loadgen::{self, SoakReport, SoakSpec};
+use pds::coordinator::{InferenceService, ServerConfig};
+use pds::net::{NetServer, NetServerConfig};
+
+/// Run the soak against the `tiny` model (small enough that request
+/// cost does not drown the multiplexing cost being measured).
+pub fn run(dir: &str, batch_window: Duration) -> anyhow::Result<SoakReport> {
+    let connections: usize = std::env::var("PDS_SOAK_CONNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let spec = SoakSpec {
+        connections,
+        ..SoakSpec::default()
+    };
+    println!(
+        "== soak: {} mostly-idle connections, {} rounds, one reactor thread ==",
+        spec.connections, spec.rounds
+    );
+    let model_spec = loadgen::model_spec(dir, "tiny", 0.25, 7)?;
+    let svc = Arc::new(InferenceService::start(
+        dir,
+        vec![model_spec],
+        ServerConfig {
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_depth: 256,
+            tune_kernel_threads: true,
+        },
+    )?);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            max_connections: 4096,
+            batch_window,
+        },
+    )?;
+    let report = loadgen::run_soak_load(server.local_addr(), "tiny", &spec, 0x50AC)?;
+    report.print();
+    let peak = server
+        .metrics()
+        .peak_active
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!("   reactor peak {peak} concurrent connections");
+    let svc = server.shutdown()?;
+    drop(svc);
+    Ok(report)
+}

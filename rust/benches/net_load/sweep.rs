@@ -1,0 +1,89 @@
+//! Concurrency sweep: sustained throughput and achieved micro-batch
+//! coalescing of the TCP front-end under concurrent pipelined socket
+//! clients, against the 1-client x 1-pipeline batch-1 baseline. The
+//! tail of the sweep holds concurrency fixed and scales the
+//! tenant-context count (1/4/16 banks per model) to measure
+//! context-grouped batching through the socket path.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pds::coordinator::loadgen::{self, SocketLoadSpec};
+use pds::coordinator::{InferenceService, ServerConfig};
+use pds::net::{NetServer, NetServerConfig};
+
+fn run_scenario(
+    dir: &str,
+    models: &[String],
+    spec: SocketLoadSpec,
+    batch_window: Duration,
+) -> anyhow::Result<Vec<loadgen::SocketLoadReport>> {
+    let specs = models
+        .iter()
+        .map(|m| {
+            // host as many parameter banks as the load will spread over
+            loadgen::model_spec(dir, m, 0.25, 7).map(|s| s.with_contexts(spec.contexts.max(1)))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let svc = Arc::new(InferenceService::start(
+        dir,
+        specs,
+        ServerConfig {
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_depth: 256,
+            tune_kernel_threads: true,
+        },
+    )?);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            max_connections: 64,
+            batch_window,
+        },
+    )?;
+    let reports = loadgen::run_socket_load(server.local_addr(), models, &spec, 0x5EED)?;
+    let svc = server.shutdown()?;
+    drop(svc);
+    Ok(reports)
+}
+
+/// Run the whole sweep; a failing scenario aborts the sweep (partial
+/// sweeps would record a misleading aggregate).
+pub fn run(
+    dir: &str,
+    batch_window: Duration,
+) -> anyhow::Result<Vec<(SocketLoadSpec, Vec<loadgen::SocketLoadReport>)>> {
+    let models = vec!["tiny".to_string(), "mnist_fc2".to_string()];
+    // sweep offered concurrency: 1 client x 1 pipeline is the
+    // batch-1 degenerate baseline; the others give the micro-batcher
+    // something to coalesce
+    let sweep = [
+        SocketLoadSpec { clients: 1, requests: 64, pipeline: 1, contexts: 1 },
+        SocketLoadSpec { clients: 4, requests: 96, pipeline: 8, contexts: 1 },
+        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8, contexts: 1 },
+        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8, contexts: 4 },
+        SocketLoadSpec { clients: 8, requests: 96, pipeline: 8, contexts: 16 },
+    ];
+    let mut scenarios = Vec::new();
+    for spec in sweep {
+        println!(
+            "== {} client(s) x pipeline {} x {} context(s) per model ==",
+            spec.clients, spec.pipeline, spec.contexts
+        );
+        let reports = run_scenario(dir, &models, spec, batch_window).map_err(|e| {
+            anyhow::anyhow!(
+                "scenario {}x{}x{}: {e:#}",
+                spec.clients,
+                spec.pipeline,
+                spec.contexts
+            )
+        })?;
+        for r in &reports {
+            r.print();
+        }
+        scenarios.push((spec, reports));
+    }
+    Ok(scenarios)
+}

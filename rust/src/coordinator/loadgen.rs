@@ -16,9 +16,15 @@
 //! through a real TCP connection per client against a
 //! [`crate::net::NetServer`], with pipelined multi-sample groups — the
 //! traffic shape the network micro-batcher coalesces. It backs
-//! `benches/net_load.rs` (the `net` section of `BENCH_serve.json`,
+//! `benches/net_load/` (the `net` section of `BENCH_serve.json`,
 //! including the achieved mean coalesced batch size) and the `pds
 //! serve --listen` end-to-end tests.
+//!
+//! The *soak* mode ([`run_soak_load`]) holds a large mostly-idle
+//! connection population open against the server's single reactor
+//! thread with a heavy-tailed request mix, reporting tail latency
+//! (p99/p999) and the server's shed rate — the reactor scale-out
+//! numbers in `BENCH_serve.json`'s `net.soak` subsection.
 
 use std::collections::BTreeMap;
 use std::net::SocketAddr;
@@ -719,6 +725,7 @@ pub fn run_socket_load(
 pub fn net_bench_json(
     scenarios: &[(SocketLoadSpec, Vec<SocketLoadReport>)],
     batch_window: Duration,
+    soak: Option<&SoakReport>,
 ) -> Json {
     let mut net = BTreeMap::new();
     net.insert("recorded".to_string(), Json::Bool(true));
@@ -767,7 +774,261 @@ pub fn net_bench_json(
             Json::Num(coalesced as f64 / flushes as f64)
         },
     );
+    if let Some(s) = soak {
+        net.insert("soak".to_string(), s.to_json());
+    }
     let mut root = BTreeMap::new();
     root.insert("net".to_string(), Json::Obj(net));
     Json::Obj(root)
+}
+
+/// Shape of the mostly-idle connection soak: `connections` open TCP
+/// connections multiplexed by the server's single reactor thread, a
+/// small sweeper pool driving a heavy-tailed request mix over them —
+/// per connection per round: ~90% idle, ~9% one sample, ~0.9% a
+/// pipelined group, ~0.1% a long pipelined group (both clamped to the
+/// model's engine batch). The point is the reactor's scale-out claim:
+/// idle connections must cost nothing, tail latency must stay bounded,
+/// and anything the server sheds at its cap must be visible in the
+/// report rather than hanging the run.
+#[derive(Clone, Copy, Debug)]
+pub struct SoakSpec {
+    /// Open TCP connections held for the whole run.
+    pub connections: usize,
+    /// Sweeps over the connection pool; each sweep rolls the request
+    /// mix once per live connection.
+    pub rounds: usize,
+    /// Sweeper threads the pool is partitioned across (the *server*
+    /// side stays one reactor thread regardless).
+    pub threads: usize,
+    /// Samples in the rare long-tail group, pre-clamp.
+    pub tail_pipeline: usize,
+}
+
+impl Default for SoakSpec {
+    fn default() -> Self {
+        SoakSpec {
+            connections: 1000,
+            rounds: 8,
+            threads: 8,
+            tail_pipeline: 16,
+        }
+    }
+}
+
+/// What one model sustained under a [`SoakSpec`], including the
+/// server-side shed/accept-error counters read back over the wire
+/// (protocol v3 carries them in every metrics frame).
+#[derive(Clone, Debug)]
+pub struct SoakReport {
+    /// Model (manifest config) name.
+    pub model: String,
+    /// Connections the soak attempted to hold open.
+    pub connections: usize,
+    /// Samples served (responses received by the sweepers).
+    pub served: u64,
+    /// Pipelined groups retried after a per-request `Busy` shed.
+    pub busy_retries: u64,
+    /// Connections dropped mid-run by the sweepers (connection-level
+    /// errors, e.g. a cap shed's `Busy` frame or a dead socket).
+    pub dropped_connections: u64,
+    /// Server-side count of connections shed at the cap
+    /// (`net_shed_connections` over the wire).
+    pub shed_connections: u64,
+    /// Server-side transient `accept()` failures (`net_accept_errors`
+    /// over the wire).
+    pub accept_errors: u64,
+    /// Wall-clock time of the whole soak.
+    pub wall: Duration,
+    /// Sustained samples per second (served / wall).
+    pub throughput: f64,
+    /// Median client-observed group round-trip.
+    pub p50: Duration,
+    /// 99th-percentile group round-trip — the tail the reactor's
+    /// fairness budget is judged by.
+    pub p99: Duration,
+    /// 99.9th-percentile group round-trip.
+    pub p999: Duration,
+    /// `shed_connections / connections` — fraction of the offered
+    /// population the server refused at its cap.
+    pub shed_rate: f64,
+}
+
+impl SoakReport {
+    /// One-line human-readable summary.
+    pub fn print(&self) {
+        println!(
+            "{:<12} soak {:>5} conns: {:>8.0} samp/s | group p50 {:>9.2?} p99 {:>9.2?} \
+             p999 {:>9.2?} | shed rate {:.4} ({} shed, {} dropped, {} accept errors), \
+             {} busy retries",
+            self.model,
+            self.connections,
+            self.throughput,
+            self.p50,
+            self.p99,
+            self.p999,
+            self.shed_rate,
+            self.shed_connections,
+            self.dropped_connections,
+            self.accept_errors,
+            self.busy_retries,
+        );
+    }
+
+    /// JSON object for the `net.soak` subsection of `BENCH_serve.json`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("connections".to_string(), Json::Num(self.connections as f64));
+        m.insert("served".to_string(), Json::Num(self.served as f64));
+        m.insert(
+            "busy_retries".to_string(),
+            Json::Num(self.busy_retries as f64),
+        );
+        m.insert(
+            "dropped_connections".to_string(),
+            Json::Num(self.dropped_connections as f64),
+        );
+        m.insert(
+            "shed_connections".to_string(),
+            Json::Num(self.shed_connections as f64),
+        );
+        m.insert(
+            "accept_errors".to_string(),
+            Json::Num(self.accept_errors as f64),
+        );
+        m.insert("wall_s".to_string(), Json::Num(self.wall.as_secs_f64()));
+        m.insert("throughput_rps".to_string(), Json::Num(self.throughput));
+        m.insert("p50_us".to_string(), Json::Num(self.p50.as_secs_f64() * 1e6));
+        m.insert("p99_us".to_string(), Json::Num(self.p99.as_secs_f64() * 1e6));
+        m.insert(
+            "p999_us".to_string(),
+            Json::Num(self.p999.as_secs_f64() * 1e6),
+        );
+        m.insert("shed_rate".to_string(), Json::Num(self.shed_rate));
+        Json::Obj(m)
+    }
+}
+
+/// Drive a [`SoakSpec`] against `model` through the TCP front-end at
+/// `addr`. Opens every connection up front (a server at its cap sheds
+/// the excess with a `Busy` frame on first use — those connections are
+/// dropped from the pool and counted, never retried), then runs the
+/// heavy-tailed mix for `rounds` sweeps. Latencies are recorded per
+/// sample from group round-trip time, like [`run_socket_load`].
+/// Expects a freshly started server (the shed/accept counters read
+/// back at the end are cumulative).
+pub fn run_soak_load(
+    addr: SocketAddr,
+    model: &str,
+    spec: &SoakSpec,
+    seed: u64,
+) -> Result<SoakReport> {
+    anyhow::ensure!(
+        spec.connections > 0 && spec.rounds > 0 && spec.threads > 0,
+        "empty soak spec"
+    );
+    let mut probe = NetClient::connect(addr)?;
+    let health = probe.health().map_err(|e| anyhow::anyhow!("health: {e}"))?;
+    let info = health
+        .models
+        .iter()
+        .find(|i| i.name == model)
+        .ok_or_else(|| anyhow::anyhow!("model '{model}' not served at {addr}"))?;
+    let features = info.features as usize;
+    let classes = info.classes as usize;
+    let batch = (info.batch as usize).max(1);
+    let mid_group = 4.min(batch);
+    let tail_group = spec.tail_pipeline.clamp(1, batch);
+    // open the whole population up front; the pool is partitioned into
+    // contiguous per-thread chunks so no connection is ever shared
+    let mut pool: Vec<Option<NetClient>> = Vec::with_capacity(spec.connections);
+    for _ in 0..spec.connections {
+        pool.push(Some(NetClient::connect(addr)?));
+    }
+    let hist = LatencyHistogram::new();
+    let served = AtomicU64::new(0);
+    let busy = AtomicU64::new(0);
+    let dropped = AtomicU64::new(0);
+    let threads = spec.threads.min(spec.connections).max(1);
+    let chunk = spec.connections.div_ceil(threads);
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for (ti, slice) in pool.chunks_mut(chunk).enumerate() {
+            let (hist, served, busy, dropped) = (&hist, &served, &busy, &dropped);
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut rng = Rng::new(seed ^ ((ti as u64) << 24));
+                for _ in 0..spec.rounds {
+                    for slot in slice.iter_mut() {
+                        let Some(net) = slot.as_mut() else { continue };
+                        // heavy-tailed mix: mostly idle, rarely a burst
+                        let k = match rng.below(1000) {
+                            0..=899 => continue,
+                            900..=989 => 1,
+                            990..=998 => mid_group,
+                            _ => tail_group,
+                        };
+                        let group: Vec<Vec<f32>> = (0..k)
+                            .map(|_| (0..features).map(|_| rng.normal()).collect())
+                            .collect();
+                        let deadline = Instant::now() + Duration::from_secs(30);
+                        let t = Instant::now();
+                        match classify_group_with_retry(net, model, 0, &group, Some(deadline))
+                        {
+                            Ok((preds, retries)) => {
+                                for p in &preds {
+                                    anyhow::ensure!(
+                                        p.class < classes,
+                                        "class {} out of range for {model}",
+                                        p.class
+                                    );
+                                }
+                                let rt = t.elapsed();
+                                for _ in 0..k {
+                                    hist.record(rt);
+                                }
+                                served.fetch_add(k as u64, Ordering::Relaxed);
+                                busy.fetch_add(retries, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                // connection-level failure (cap shed's
+                                // Busy frame, dead socket): drop this
+                                // connection from the pool, keep soaking
+                                *slot = None;
+                                dropped.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("soak sweeper panicked"))??;
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed();
+    drop(pool);
+    let snap = probe
+        .metrics(model)
+        .map_err(|e| anyhow::anyhow!("metrics for '{model}': {e}"))?;
+    let served = served.load(Ordering::Relaxed);
+    Ok(SoakReport {
+        model: model.to_string(),
+        connections: spec.connections,
+        served,
+        busy_retries: busy.load(Ordering::Relaxed),
+        dropped_connections: dropped.load(Ordering::Relaxed),
+        shed_connections: snap.net_shed_connections,
+        accept_errors: snap.net_accept_errors,
+        wall,
+        throughput: served as f64 / wall.as_secs_f64().max(1e-9),
+        p50: hist.quantile(0.50),
+        p99: hist.quantile(0.99),
+        p999: hist.quantile(0.999),
+        shed_rate: snap.net_shed_connections as f64 / spec.connections as f64,
+    })
 }

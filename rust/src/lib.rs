@@ -19,7 +19,7 @@
 //! | [`runtime`] | — | backend-agnostic [`runtime::Engine`] facade: native or PJRT execution of the manifest programs, plus the native-only streaming `train_pipelined` path |
 //! | [`analysis`] | Sec. III-B/C, arXiv:1806.01087 | static verifier (`pds analyze`): clash-freedom prover over the pipelined interleave, Qm.n interval range analysis, manifest lint — typed findings, no execution |
 //! | [`coordinator`] | Sec. III (scale-out analogue) | training sessions (fused + pipelined); the multi-worker sharded inference service + load generator |
-//! | [`net`] | Sec. III (network-edge analogue) | binary wire protocol, threaded TCP front-end ([`net::NetServer`]), adaptive micro-batching into engine batches, blocking pipelined [`net::NetClient`] |
+//! | [`net`] | Sec. III (network-edge analogue) | binary wire protocol, event-loop TCP front-end ([`net::NetServer`]: one reactor thread, thousands of connections), adaptive micro-batching into engine batches, blocking pipelined [`net::NetClient`] |
 //! | [`data`] | Sec. IV | synthetic class-conditional surrogates for MNIST / Reuters / TIMIT / CIFAR |
 //! | [`exp`] | Sec. IV figures/tables | the paper's experiment harnesses (`pds exp <id>`) |
 //! | [`util`] | — | in-tree rng / json / bench / property-test / fork-join replacements |

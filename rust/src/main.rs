@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use pds::coordinator::loadgen::{self, LoadSpec};
 use pds::coordinator::{InferenceService, PipelinedTrainSession, ServerConfig};
-use pds::net::{NetClient, NetServer, NetServerConfig};
+use pds::net::{NetClient, NetServer, NetServerConfig, ReactorTuning};
 use pds::nn::actsparse::ActSpec;
 use pds::nn::fixed::{FixedSparseNet, QFormat};
 use pds::nn::pipeline::PipelineConfig;
@@ -200,14 +200,21 @@ fn print_help() {
                      [--act-topk K | --act-threshold T]  (sparse-sparse\n\
                       inference; composes with --quant; per-model metrics\n\
                       report the achieved activation density)\n\
-                     [--listen ADDR [--batch-window USEC] [--max-conns N]]\n\
+                     [--listen ADDR [--batch-window USEC] [--max-conns N]\n\
+                      [--frame-timeout-ms MS]]\n\
                      (--listen 127.0.0.1:0 starts the TCP front-end and\n\
                       serves until a client sends a shutdown frame;\n\
                       --batch-window is the micro-batcher's coalescing\n\
-                      deadline in microseconds, default 1000)\n\
+                      deadline in microseconds, default 1000; --max-conns\n\
+                      bounds concurrent connections on the single reactor\n\
+                      thread, default 1024; --frame-timeout-ms bounds how\n\
+                      long a partial frame may dribble, default 5000)\n\
            client    --addr HOST:PORT [--model NAME] [--context 0]\n\
-                     [--requests 16] [--pipeline 4] [--seed 0] [--shutdown]\n\
+                     [--requests 16] [--pipeline 4] [--idle-conns 0]\n\
+                     [--seed 0] [--shutdown]\n\
                      (drives a `serve --listen` server over TCP;\n\
+                      --idle-conns holds N extra idle connections open\n\
+                      for the duration of the request loop;\n\
                       --shutdown asks the server to drain and exit)\n\
            serve-bench --models tiny,mnist_fc2 [--workers 4] [--clients 8]\n\
                      [--requests 200] [--wait-ms 2] [--queue-depth 256]\n\
@@ -782,14 +789,23 @@ fn cmd_serve_listen(
         .get("max-conns")
         .map(|s| s.parse())
         .transpose()?
-        .unwrap_or(64);
+        .unwrap_or(1024);
+    let frame_timeout_ms: u64 = opts
+        .get("frame-timeout-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(5000);
     let svc = std::sync::Arc::new(svc);
-    let server = NetServer::start(
+    let server = NetServer::start_tuned(
         std::sync::Arc::clone(&svc),
         listen,
         NetServerConfig {
             max_connections: max_conns,
             batch_window: Duration::from_micros(window_us),
+        },
+        ReactorTuning {
+            frame_timeout: Duration::from_millis(frame_timeout_ms),
+            ..ReactorTuning::default()
         },
     )?;
     println!(
@@ -804,7 +820,12 @@ fn cmd_serve_listen(
     // batcher handles survive the server teardown, so the summary below
     // includes requests answered *during* the drain
     let handles: Vec<_> = models.iter().filter_map(|m| server.batcher(m)).collect();
+    let peak = server
+        .metrics()
+        .peak_active
+        .load(std::sync::atomic::Ordering::Relaxed);
     let net = server.shutdown()?;
+    println!("reactor peak {peak} concurrent connections");
     for h in &handles {
         if let Some(snap) = pds::net::model_metrics_snapshot(&net, h) {
             println!(
@@ -868,6 +889,21 @@ fn cmd_client(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         .clamp(1, info.batch as usize);
     let seed: u64 = opts.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let context: u32 = opts.get("context").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let idle_conns: usize = opts
+        .get("idle-conns")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    // mostly-idle scale-out check: hold extra connections open for the
+    // whole request loop so the reactor multiplexes them alongside the
+    // active one (they are dropped — closed — only after the loop)
+    let mut idle_pool = Vec::with_capacity(idle_conns);
+    for _ in 0..idle_conns {
+        idle_pool.push(NetClient::connect(addr)?);
+    }
+    if idle_conns > 0 {
+        println!("holding {idle_conns} idle connections open");
+    }
     anyhow::ensure!(
         context < info.contexts.max(1),
         "--context {context} out of range: '{model}' hosts {} context(s)",
@@ -918,6 +954,7 @@ fn cmd_client(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         remaining -= k;
     }
     let wall = t0.elapsed();
+    drop(idle_pool);
     println!(
         "client: {served} predictions round-tripped in {wall:?} \
          ({:.0} samp/s, mean engine occupancy {:.1}, {busy_retries} busy retries)",

@@ -31,6 +31,14 @@
 //! vector of [`PendingPrediction`]s) to a completion thread and
 //! immediately resumes collecting, so waiting on one group's engine
 //! execution never blocks coalescing of the next.
+//!
+//! Failure isolation: every responder runs under `catch_unwind`, so a
+//! panicking delivery callback (one broken connection's closure) loses
+//! only its own response — counted in
+//! [`BatcherMetrics::responder_panics`] — instead of killing the
+//! completion thread and, through a poisoned lock, every other
+//! connection. All internal locks use the poison-recovering guards
+//! from [`crate::util::sync`] for the same reason.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -40,6 +48,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Client, PendingPrediction, Prediction, ServeError};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 /// Tuning knobs for one model's [`MicroBatcher`].
 #[derive(Clone, Copy, Debug)]
@@ -87,6 +96,9 @@ pub struct BatcherMetrics {
     /// Enqueues rejected because the collector queue was at
     /// [`BatcherConfig::queue_cap`].
     pub rejected: AtomicU64,
+    /// Responders that panicked during delivery (each loses only its
+    /// own response; the batcher threads survive).
+    pub responder_panics: AtomicU64,
 }
 
 impl BatcherMetrics {
@@ -104,6 +116,16 @@ impl BatcherMetrics {
 /// The delivery callback of a [`BatchItem`]: invoked exactly once with
 /// the request's outcome, from a batcher thread.
 pub type Responder = Box<dyn FnOnce(Result<Prediction, ServeError>) + Send>;
+
+/// Invoke one responder with panic isolation: a panicking callback is
+/// counted and absorbed so it cannot take down the batcher thread (and
+/// with it every other connection's replies).
+fn deliver(metrics: &BatcherMetrics, respond: Responder, res: Result<Prediction, ServeError>) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || respond(res)));
+    if outcome.is_err() {
+        metrics.responder_panics.fetch_add(1, Ordering::Relaxed);
+    }
+}
 
 /// One queued request: the feature vector plus the callback that
 /// delivers its outcome (the socket layer writes a `Response` or
@@ -158,7 +180,7 @@ impl BatcherHandle {
     /// call resolves exactly once, on some thread.
     pub fn enqueue(&self, item: BatchItem) {
         let err = {
-            let mut s = self.shared.state.lock().unwrap();
+            let mut s = lock_unpoisoned(&self.shared.state);
             if s.stopped {
                 Some((ServeError::Stopped, item))
             } else if s.queue.len() >= self.shared.cfg.queue_cap {
@@ -174,7 +196,7 @@ impl BatcherHandle {
         };
         match err {
             // respond outside the lock: the callback does socket I/O
-            Some((e, item)) => (item.respond)(Err(e)),
+            Some((e, item)) => deliver(&self.shared.metrics, item.respond, Err(e)),
             None => self.shared.nonempty.notify_one(),
         }
     }
@@ -244,7 +266,10 @@ impl MicroBatcher {
             let shared = Arc::clone(&shared);
             std::thread::spawn(move || collector_loop(shared, group_tx))
         };
-        let completer = std::thread::spawn(move || completer_loop(group_rx));
+        let completer = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || completer_loop(shared, group_rx))
+        };
         MicroBatcher {
             shared,
             collector: Some(collector),
@@ -290,7 +315,7 @@ impl MicroBatcher {
     }
 
     fn signal_stop(&self) {
-        self.shared.state.lock().unwrap().stopped = true;
+        lock_unpoisoned(&self.shared.state).stopped = true;
         self.shared.nonempty.notify_all();
     }
 }
@@ -309,14 +334,14 @@ impl Drop for MicroBatcher {
 fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
     loop {
         let (group, full) = {
-            let mut s = shared.state.lock().unwrap();
+            let mut s = lock_unpoisoned(&shared.state);
             // wait for the first request of a group (or stop + empty)
             loop {
                 if !s.queue.is_empty() || s.stopped {
                     break;
                 }
                 // spurious wakeups just re-check the predicate
-                s = shared.nonempty.wait(s).unwrap();
+                s = wait_unpoisoned(&shared.nonempty, s);
             }
             if s.queue.is_empty() {
                 // stopped and drained: done
@@ -336,7 +361,7 @@ fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
                     break;
                 }
                 let (guard, _timeout) =
-                    shared.nonempty.wait_timeout(s, deadline - now).unwrap();
+                    wait_timeout_unpoisoned(&shared.nonempty, s, deadline - now);
                 s = guard;
             }
             let take = s.queue.len().min(shared.cfg.max_batch);
@@ -350,7 +375,7 @@ fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
         for item in group {
             match shared.client.submit_ctx(item.features, item.context) {
                 Ok(pending) => in_flight.push((pending, item.respond)),
-                Err(e) => (item.respond)(Err(e)),
+                Err(e) => deliver(&shared.metrics, item.respond, Err(e)),
             }
         }
         if !in_flight.is_empty() {
@@ -367,16 +392,17 @@ fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
                 m.deadline_flushes.fetch_add(1, Ordering::Relaxed);
             }
             if let Err(failed) = groups.send(InFlightGroup { items: in_flight }) {
-                // completion thread is gone (it only exits early if a
-                // responder panicked): the exactly-once contract still
-                // holds — resolve every stranded responder with Stopped
-                // instead of silently dropping it, so connection
-                // handlers and tests never wait on a reply that cannot
-                // come. The workers tolerate the abandoned predictions
-                // (their reply send fails harmlessly).
+                // completion thread is gone (responders run under
+                // catch_unwind, so only a killed process side exits it
+                // early): the exactly-once contract still holds —
+                // resolve every stranded responder with Stopped instead
+                // of silently dropping it, so connection handlers and
+                // tests never wait on a reply that cannot come. The
+                // workers tolerate the abandoned predictions (their
+                // reply send fails harmlessly).
                 for (pending, respond) in failed.0.items {
                     drop(pending);
-                    respond(Err(ServeError::Stopped));
+                    deliver(&shared.metrics, respond, Err(ServeError::Stopped));
                 }
                 return;
             }
@@ -387,10 +413,13 @@ fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
 /// Deliver engine results group by group. Within a group the waits are
 /// sequential, which is fine: the group executed together, so by the
 /// time the first reply arrives the rest are computed or imminent.
-fn completer_loop(groups: Receiver<InFlightGroup>) {
+/// Every delivery is panic-isolated (see [`deliver`]): one broken
+/// responder loses only its own response, never the loop.
+fn completer_loop(shared: Arc<BatcherShared>, groups: Receiver<InFlightGroup>) {
     while let Ok(group) = groups.recv() {
         for (pending, respond) in group.items {
-            respond(pending.wait());
+            let res = pending.wait();
+            deliver(&shared.metrics, respond, res);
         }
     }
 }
@@ -545,6 +574,52 @@ mod tests {
         assert_eq!(
             batcher.metrics().rejected.load(Ordering::Relaxed),
             busy as u64
+        );
+        batcher.shutdown();
+        svc.shutdown().unwrap();
+    }
+
+    /// One panicking responder must lose only its own response: later
+    /// requests through the same batcher still resolve, and the panic
+    /// is counted — the "one failing connection cannot take down the
+    /// server" guarantee at the batcher layer.
+    #[test]
+    fn panicking_responder_does_not_kill_the_batcher() {
+        let spec = model_spec(dir(), "tiny", 0.25, 24).unwrap();
+        let svc =
+            InferenceService::start(dir(), vec![spec], ServerConfig::default()).unwrap();
+        let client = svc.client("tiny").unwrap();
+        let features = client.features();
+        let batcher = MicroBatcher::start(
+            client,
+            BatcherConfig {
+                window: Duration::from_millis(1),
+                max_batch: 16,
+                queue_cap: 64,
+            },
+        );
+        let handle = batcher.handle();
+        handle.enqueue(BatchItem {
+            features: vec![0.5; features],
+            context: 0,
+            respond: Box::new(|_res| panic!("deliberately broken responder")),
+        });
+        // the poisoned delivery must not stop this one from resolving
+        let (tx, rx) = channel();
+        handle.enqueue(BatchItem {
+            features: vec![0.5; features],
+            context: 0,
+            respond: Box::new(move |res| tx.send(res.map(|p| p.class)).unwrap()),
+        });
+        let class = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("batcher must survive a panicking responder")
+            .expect("prediction ok");
+        assert!(class < 8);
+        assert_eq!(
+            batcher.metrics().responder_panics.load(Ordering::Relaxed),
+            1,
+            "the panic must be counted"
         );
         batcher.shutdown();
         svc.shutdown().unwrap();

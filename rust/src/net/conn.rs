@@ -1,0 +1,412 @@
+//! Per-connection state machine for the reactor front-end.
+//!
+//! Each accepted socket becomes one [`Conn`]: a nonblocking
+//! `TcpStream`, an incremental read buffer parsed with the strict
+//! [`Frame::decode`](super::wire::Frame::decode) slice decoder (which
+//! reports `Truncated` for an incomplete frame — exactly the signal an
+//! incremental parser needs), and a write side fed from a shared
+//! [`Outbox`].
+//!
+//! The outbox is the only cross-thread surface: batcher completion
+//! threads append encoded response frames to it (then wake the
+//! reactor), while the reactor alone reads the socket, parses frames,
+//! and drains the outbox into the kernel when the socket is writable.
+//! A bounded outbox ([`OUTBOX_CAP`]) protects the server from a peer
+//! that pipelines requests but never reads responses: once the cap is
+//! hit the outbox goes dead and the reactor closes the connection.
+//!
+//! Fairness: one readiness event lets a connection read at most
+//! [`READ_BUDGET`] bytes before the reactor moves on, so a single
+//! fire-hose peer cannot starve thousands of idle neighbours on a
+//! level-triggered poller (the remaining bytes re-report readable on
+//! the next poll).
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicUsize;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::poll::Interest;
+use super::wire::{Frame, WireError};
+use crate::util::sync::lock_unpoisoned;
+
+/// Most bytes one connection may read per readiness event before the
+/// reactor moves to the next connection (fairness bound).
+pub const READ_BUDGET: usize = 64 * 1024;
+
+/// Upper bound on queued-but-unflushed response bytes per connection;
+/// beyond this the peer is evidently not reading and the outbox goes
+/// dead (the reactor then closes the connection).
+pub const OUTBOX_CAP: usize = 4 << 20;
+
+/// Cross-thread response queue: batcher completion threads push encoded
+/// frames, the reactor drains them into the socket.
+pub struct Outbox {
+    inner: Mutex<OutboxInner>,
+}
+
+struct OutboxInner {
+    buf: Vec<u8>,
+    dead: bool,
+}
+
+impl Outbox {
+    /// Empty, live outbox.
+    pub fn new() -> Outbox {
+        Outbox { inner: Mutex::new(OutboxInner { buf: Vec::new(), dead: false }) }
+    }
+
+    /// Append one encoded frame. Returns `false` (and marks the outbox
+    /// dead) if the connection is already dead or the cap would be
+    /// exceeded — the caller should drop the response and not count it.
+    pub fn push(&self, bytes: &[u8]) -> bool {
+        let mut g = lock_unpoisoned(&self.inner);
+        if g.dead {
+            return false;
+        }
+        if g.buf.len() + bytes.len() > OUTBOX_CAP {
+            g.dead = true;
+            return false;
+        }
+        g.buf.extend_from_slice(bytes);
+        true
+    }
+
+    /// Move all queued bytes into `into` (appending), leaving the
+    /// outbox empty. Reactor-side only.
+    pub fn take(&self, into: &mut Vec<u8>) {
+        let mut g = lock_unpoisoned(&self.inner);
+        if !g.buf.is_empty() {
+            into.extend_from_slice(&g.buf);
+            g.buf.clear();
+        }
+    }
+
+    /// True when no bytes are queued.
+    pub fn is_empty(&self) -> bool {
+        lock_unpoisoned(&self.inner).buf.is_empty()
+    }
+
+    /// Mark the connection dead: every later [`push`](Outbox::push)
+    /// returns `false` without queueing.
+    pub fn mark_dead(&self) {
+        lock_unpoisoned(&self.inner).dead = true;
+    }
+
+    /// True once [`mark_dead`](Outbox::mark_dead) ran or the cap blew.
+    pub fn is_dead(&self) -> bool {
+        lock_unpoisoned(&self.inner).dead
+    }
+}
+
+impl Default for Outbox {
+    fn default() -> Self {
+        Outbox::new()
+    }
+}
+
+/// Lifecycle of a connection inside the reactor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnState {
+    /// Parsing request frames and serving them.
+    Open,
+    /// No longer parsing: flush pending output, absorb (and discard)
+    /// any bytes the peer is still sending so the final close is an
+    /// orderly FIN rather than a RST that could destroy an unread
+    /// error frame, then close on flushed-EOF or linger expiry.
+    Closing,
+}
+
+/// What a read pass observed.
+#[derive(Clone, Copy, Debug)]
+pub struct FillOutcome {
+    /// Bytes appended to the parse buffer this pass.
+    pub bytes: usize,
+    /// Peer closed its write side (observed EOF).
+    pub eof: bool,
+    /// Hard socket error — the connection is unusable.
+    pub gone: bool,
+    /// Stopped because [`READ_BUDGET`] was spent; more data may be
+    /// pending and the poller will re-report readable.
+    pub budget_spent: bool,
+}
+
+/// What a flush pass achieved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushOutcome {
+    /// Everything queued (write buffer and outbox) hit the kernel.
+    Flushed,
+    /// The kernel buffer filled; register write interest and retry on
+    /// writability.
+    Blocked,
+    /// Hard socket error — the connection is unusable.
+    Gone,
+}
+
+/// One reactor-owned connection: socket, incremental parse buffer,
+/// write-side staging, and the deadlines that bound misbehaving peers.
+pub struct Conn {
+    /// The nonblocking socket (reactor-owned; never cloned).
+    pub stream: TcpStream,
+    /// Shared response queue (cloned into batcher responders).
+    pub outbox: Arc<Outbox>,
+    /// Responses enqueued to the batcher but not yet resolved; the
+    /// drain path waits for this to reach zero before closing.
+    pub in_flight: Arc<AtomicUsize>,
+    /// Lifecycle state.
+    pub state: ConnState,
+    /// Armed while a partial frame sits in the parse buffer: the
+    /// instant by which the frame must complete (slow-loris guard).
+    pub frame_deadline: Option<Instant>,
+    /// Armed in [`ConnState::Closing`]: force-close at this instant
+    /// even if output is unflushed or the peer never EOFs.
+    pub linger_deadline: Option<Instant>,
+    /// Peer EOF observed (write side of the peer closed).
+    pub peer_eof: bool,
+    /// Whether this connection occupies an admitted slot (false for
+    /// over-cap courtesy-Busy sheds, which are bounded separately).
+    pub counted: bool,
+    /// Interest currently registered with the poller (the reactor
+    /// reregisters when the desired set diverges).
+    pub interest: Interest,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+}
+
+impl Conn {
+    /// Wrap an accepted, already-nonblocking socket.
+    pub fn new(stream: TcpStream, counted: bool) -> Conn {
+        Conn {
+            stream,
+            outbox: Arc::new(Outbox::new()),
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            state: ConnState::Open,
+            frame_deadline: None,
+            linger_deadline: None,
+            peer_eof: false,
+            counted,
+            interest: Interest::READ,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+        }
+    }
+
+    /// Read up to [`READ_BUDGET`] bytes into the parse buffer. Sets
+    /// [`peer_eof`](Conn::peer_eof) when EOF is observed.
+    pub fn fill(&mut self) -> FillOutcome {
+        let mut out = FillOutcome { bytes: 0, eof: false, gone: false, budget_spent: false };
+        let mut chunk = [0u8; 4096];
+        while out.bytes < READ_BUDGET {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    out.eof = true;
+                    return out;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    out.bytes += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return out,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    out.gone = true;
+                    return out;
+                }
+            }
+        }
+        out.budget_spent = true;
+        out
+    }
+
+    /// Try to parse the next complete frame from the buffer. `None`
+    /// means "need more bytes" (the consumed prefix is compacted away);
+    /// a decode error is terminal for the connection.
+    pub fn next_frame(&mut self) -> Option<Result<Frame, WireError>> {
+        if self.rpos == self.rbuf.len() {
+            self.rbuf.clear();
+            self.rpos = 0;
+        }
+        match Frame::decode(&self.rbuf[self.rpos..]) {
+            Ok((frame, used)) => {
+                self.rpos += used;
+                Some(Ok(frame))
+            }
+            Err(WireError::Truncated) => {
+                if self.rpos > 0 {
+                    self.rbuf.drain(..self.rpos);
+                    self.rpos = 0;
+                }
+                None
+            }
+            Err(e) => Some(Err(e)),
+        }
+    }
+
+    /// True while an incomplete frame sits in the parse buffer — the
+    /// condition that arms the slow-loris frame deadline.
+    pub fn has_partial(&self) -> bool {
+        self.rbuf.len() > self.rpos
+    }
+
+    /// Drop all buffered input (entering [`ConnState::Closing`]).
+    pub fn discard_input(&mut self) {
+        self.rbuf.clear();
+        self.rpos = 0;
+    }
+
+    /// Flush staged bytes then the outbox into the socket until done or
+    /// the kernel buffer blocks.
+    pub fn flush(&mut self) -> FlushOutcome {
+        loop {
+            if self.wpos == self.wbuf.len() {
+                self.wbuf.clear();
+                self.wpos = 0;
+                self.outbox.take(&mut self.wbuf);
+                if self.wbuf.is_empty() {
+                    return FlushOutcome::Flushed;
+                }
+            }
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return FlushOutcome::Gone,
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return FlushOutcome::Blocked,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.outbox.mark_dead();
+                    return FlushOutcome::Gone;
+                }
+            }
+        }
+    }
+
+    /// True while bytes wait in the staging buffer or the outbox.
+    pub fn has_pending_output(&self) -> bool {
+        self.wpos < self.wbuf.len() || !self.outbox.is_empty()
+    }
+
+    /// The interest set this connection wants right now: always read
+    /// (Open parses, Closing absorbs-and-discards so the final close is
+    /// orderly), plus write only while output is queued.
+    pub fn desired_interest(&self) -> Interest {
+        Interest { read: !self.peer_eof, write: self.has_pending_output() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn conn_pair() -> (Conn, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = TcpStream::connect(addr).unwrap();
+        let (srv, _) = listener.accept().unwrap();
+        srv.set_nonblocking(true).unwrap();
+        (Conn::new(srv, true), peer)
+    }
+
+    #[test]
+    fn parses_a_frame_dribbled_byte_by_byte() {
+        let (mut conn, mut peer) = conn_pair();
+        let frame = Frame::Request { id: 42, model: "tiny".into(), context: 1, features: vec![0.5, -0.25] };
+        let bytes = frame.encode();
+        for (i, b) in bytes.iter().enumerate() {
+            peer.write_all(std::slice::from_ref(b)).unwrap();
+            peer.flush().unwrap();
+            // wait for the byte to land, then parse
+            let deadline = Instant::now() + std::time::Duration::from_secs(5);
+            loop {
+                let f = conn.fill();
+                assert!(!f.gone && !f.eof);
+                if f.bytes > 0 {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "byte never arrived");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            if i + 1 < bytes.len() {
+                assert!(conn.next_frame().is_none(), "frame complete too early");
+                assert!(conn.has_partial());
+            }
+        }
+        match conn.next_frame() {
+            Some(Ok(Frame::Request { id, model, context, features })) => {
+                assert_eq!(id, 42);
+                assert_eq!(model, "tiny");
+                assert_eq!(context, 1);
+                assert_eq!(features, vec![0.5, -0.25]);
+            }
+            other => panic!("expected parsed request, got {other:?}"),
+        }
+        assert!(!conn.has_partial());
+    }
+
+    #[test]
+    fn parses_back_to_back_frames_from_one_fill() {
+        let (mut conn, mut peer) = conn_pair();
+        let mut bytes = Frame::HealthRequest.encode();
+        bytes.extend_from_slice(&Frame::Shutdown.encode());
+        peer.write_all(&bytes).unwrap();
+        peer.flush().unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        let mut got = 0usize;
+        while got < bytes.len() {
+            let f = conn.fill();
+            got += f.bytes;
+            assert!(Instant::now() < deadline, "bytes never arrived");
+        }
+        assert!(matches!(conn.next_frame(), Some(Ok(Frame::HealthRequest))));
+        assert!(matches!(conn.next_frame(), Some(Ok(Frame::Shutdown))));
+        assert!(conn.next_frame().is_none());
+    }
+
+    #[test]
+    fn outbox_cap_marks_dead_instead_of_growing() {
+        let outbox = Outbox::new();
+        let chunk = vec![0u8; OUTBOX_CAP / 2];
+        assert!(outbox.push(&chunk));
+        assert!(outbox.push(&chunk)); // exactly at the cap is still fine
+        // one more byte would exceed the cap
+        assert!(!outbox.push(&[0u8; 1]));
+        assert!(outbox.is_dead());
+        assert!(!outbox.push(b"x"), "dead outbox refuses everything");
+    }
+
+    #[test]
+    fn flush_delivers_outbox_bytes_to_the_peer() {
+        let (mut conn, mut peer) = conn_pair();
+        let payload = Frame::HealthRequest.encode();
+        assert!(conn.outbox.push(&payload));
+        assert!(conn.has_pending_output());
+        assert_eq!(conn.flush(), FlushOutcome::Flushed);
+        assert!(!conn.has_pending_output());
+        let mut got = vec![0u8; payload.len()];
+        peer.read_exact(&mut got).unwrap();
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn eof_is_reported_once_peer_closes() {
+        let (mut conn, peer) = conn_pair();
+        drop(peer);
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let f = conn.fill();
+            if f.eof {
+                break;
+            }
+            assert!(!f.gone);
+            assert!(Instant::now() < deadline, "EOF never observed");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(conn.peer_eof);
+        assert!(!conn.desired_interest().read, "no read interest after EOF");
+    }
+}

@@ -5,17 +5,24 @@
 //! pipeline full (one input per junction cycle, Sec. III); at a network
 //! edge the same economics demand coalescing many small independent
 //! requests into engine-sized batches. This module is that edge,
-//! built on `std::net` + threads (no tokio — the offline-build design
-//! note in [`crate::coordinator::server`] applies):
+//! built on `std::net` + a readiness-driven event loop (no tokio — the
+//! offline-build design note in [`crate::coordinator::server`] applies):
 //!
 //! - [`wire`] — length-prefixed binary protocol with a versioned frame
 //!   header and strict decoding (oversized / truncated / unknown-version
 //!   frames are rejected, never guessed at).
-//! - [`server`] — [`NetServer`]: threaded TCP accept loop fronting an
-//!   [`crate::coordinator::InferenceService`], with per-connection
-//!   handlers, a connection cap with explicit `Busy` shed, graceful
-//!   drain-then-shutdown, and health/metrics frames wired to
-//!   [`crate::coordinator::ModelMetrics`].
+//! - [`poll`] — the minimal readiness abstraction under the reactor: a
+//!   [`poll::Poller`] trait over `poll(2)` with a portable tick-based
+//!   fallback, plus a loopback [`poll::Waker`] so engine completions can
+//!   interrupt a blocked poll.
+//! - [`conn`] — per-connection state machine: nonblocking incremental
+//!   frame reads against the strict [`wire`] decoder, a shared outbox
+//!   for responses, and bounded-buffer / linger bookkeeping.
+//! - [`server`] — [`NetServer`]: a single reactor thread multiplexing
+//!   the listener and thousands of connections, fronting an
+//!   [`crate::coordinator::InferenceService`], with a connection cap
+//!   with explicit `Busy` shed, graceful drain-then-shutdown, and
+//!   health/metrics frames wired to [`crate::coordinator::ModelMetrics`].
 //! - [`batcher`] — [`MicroBatcher`]: adaptive micro-batching (flush on
 //!   engine-batch-full or batch-window deadline, whichever first) that
 //!   turns concurrent socket traffic into coalesced engine batches
@@ -29,6 +36,8 @@
 
 pub mod batcher;
 pub mod client;
+pub mod conn;
+pub mod poll;
 pub mod server;
 pub mod wire;
 
@@ -36,5 +45,5 @@ pub use batcher::{
     BatchItem, BatcherConfig, BatcherHandle, BatcherMetrics, MicroBatcher, Responder,
 };
 pub use client::{Health, NetClient, NetClientError, NetPrediction};
-pub use server::{model_metrics_snapshot, NetMetrics, NetServer, NetServerConfig};
+pub use server::{model_metrics_snapshot, NetMetrics, NetServer, NetServerConfig, ReactorTuning};
 pub use wire::{ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError};

@@ -1,0 +1,560 @@
+//! Minimal readiness-polling abstraction for the reactor front-end.
+//!
+//! The crate builds offline with no async runtime and no `libc` crate,
+//! so this module wraps the one OS primitive the event loop needs —
+//! "which of these sockets are readable/writable?" — behind the
+//! [`Poller`] trait:
+//!
+//! - On Unix, [`new_poller`] returns a thin FFI wrapper over `poll(2)`
+//!   (declared directly; the symbol comes from the libc the standard
+//!   library already links). Level-triggered, O(n) per call — the right
+//!   trade for thousands of mostly-idle connections without pulling in
+//!   an epoll/kqueue abstraction layer.
+//! - Elsewhere it falls back to [`TickPoller`], a portable
+//!   sleep-and-report poller that claims readiness for every registered
+//!   source at a small tick. Degenerate but *correct*: all sockets in
+//!   the reactor are nonblocking, so a spurious readiness report costs
+//!   one `WouldBlock` syscall, never a stall.
+//!
+//! Registration is keyed by caller-chosen [`Token`]s (the reactor's
+//! slab indices), not file descriptors, so the portable fallback needs
+//! no OS identity for a socket.
+//!
+//! [`wake_pair`] builds the reactor's waker: a connected loopback UDP
+//! socket pair whose receive side sits in the poll set. Batcher
+//! completion threads call [`Waker::wake`] after queueing response
+//! frames; an `AtomicBool` coalesces storms of wakes into (at most) one
+//! in-flight datagram, and a lost datagram under send-buffer pressure
+//! is harmless — a full buffer implies queued datagrams that already
+//! make the receive side readable.
+
+use std::io;
+use std::net::UdpSocket;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Caller-chosen identity of a registered source (the reactor uses its
+/// connection-slab index). Unique per [`Poller`] at any instant.
+pub type Token = usize;
+
+/// OS-level identity of a pollable socket.
+#[cfg(unix)]
+pub type SourceId = std::os::unix::io::RawFd;
+/// OS-level identity of a pollable socket.
+#[cfg(all(not(unix), windows))]
+pub type SourceId = u64;
+/// OS-level identity of a pollable socket (unused by the portable
+/// fallback poller, which keys purely on tokens).
+#[cfg(all(not(unix), not(windows)))]
+pub type SourceId = usize;
+
+/// Extract the [`SourceId`] of a socket for [`Poller::register`].
+#[cfg(unix)]
+pub fn source<T: std::os::unix::io::AsRawFd>(s: &T) -> SourceId {
+    s.as_raw_fd()
+}
+
+/// Extract the [`SourceId`] of a socket for [`Poller::register`].
+#[cfg(all(not(unix), windows))]
+pub fn source<T: std::os::windows::io::AsRawSocket>(s: &T) -> SourceId {
+    s.as_raw_socket()
+}
+
+/// Extract the [`SourceId`] of a socket for [`Poller::register`]. The
+/// portable fallback poller never consults it.
+#[cfg(all(not(unix), not(windows)))]
+pub fn source<T>(_s: &T) -> SourceId {
+    0
+}
+
+/// Which readiness directions a registration asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    /// Report when a read would make progress (data, EOF, or error).
+    pub read: bool,
+    /// Report when a write would make progress.
+    pub write: bool,
+}
+
+impl Interest {
+    /// Read readiness only.
+    pub const READ: Interest = Interest { read: true, write: false };
+    /// Write readiness only.
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    /// Both directions.
+    pub const BOTH: Interest = Interest { read: true, write: true };
+    /// Neither direction — the source stays registered but silent
+    /// (used to mask the listener during accept-error backoff).
+    pub const NONE: Interest = Interest { read: false, write: false };
+}
+
+/// One readiness report from [`Poller::poll`].
+#[derive(Clone, Copy, Debug)]
+pub struct PollEvent {
+    /// The registration this event belongs to.
+    pub token: Token,
+    /// A read would make progress (includes hangup: the read returns
+    /// EOF or the pending error, which is progress).
+    pub readable: bool,
+    /// A write would make progress.
+    pub writable: bool,
+    /// The source is in an error state (`POLLERR`/`POLLNVAL`); the
+    /// owner should read out the error and close.
+    pub error: bool,
+}
+
+/// A readiness poller over a set of registered sockets. One instance
+/// per reactor thread; not shared.
+pub trait Poller: Send {
+    /// Start watching `src` under `token`. The token must not already
+    /// be registered.
+    fn register(&mut self, src: SourceId, token: Token, interest: Interest) -> io::Result<()>;
+    /// Change the interest set of an existing registration. Unknown
+    /// tokens are ignored.
+    fn reregister(&mut self, token: Token, interest: Interest) -> io::Result<()>;
+    /// Stop watching a registration. Unknown tokens are ignored.
+    fn deregister(&mut self, token: Token) -> io::Result<()>;
+    /// Block until at least one registered source is ready or `timeout`
+    /// elapses (`None` = wait indefinitely), then append the ready set
+    /// to `events` (cleared first). A timeout yields an empty set.
+    fn poll(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()>;
+}
+
+/// Construct the best poller for this platform: `poll(2)` on Unix, the
+/// tick-based fallback elsewhere.
+pub fn new_poller() -> Box<dyn Poller> {
+    #[cfg(unix)]
+    {
+        Box::new(PollFdPoller::new())
+    }
+    #[cfg(not(unix))]
+    {
+        Box::new(TickPoller::new())
+    }
+}
+
+/// Round a timeout up to whole milliseconds for `poll(2)` (rounding
+/// *down* could turn a sub-millisecond deadline into a hot spin).
+#[cfg(unix)]
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            let ms = if Duration::from_millis(u64::try_from(ms).unwrap_or(u64::MAX)) < d {
+                ms + 1
+            } else {
+                ms
+            };
+            i32::try_from(ms).unwrap_or(i32::MAX)
+        }
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    //! Direct declaration of `poll(2)`. The crate deliberately has no
+    //! `libc` dependency (offline build); the standard library already
+    //! links the platform libc, so declaring the symbol is enough.
+
+    /// `struct pollfd` as declared by POSIX; identical layout on every
+    /// supported Unix.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: super::SourceId,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    /// `nfds_t`: `unsigned long` on Linux (pointer-width), `unsigned
+    /// int` on the BSD family. Either way the value is a small count.
+    #[cfg(target_os = "linux")]
+    pub type Nfds = usize;
+    /// `nfds_t` on non-Linux Unix.
+    #[cfg(not(target_os = "linux"))]
+    pub type Nfds = u32;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+    }
+}
+
+/// `poll(2)`-backed [`Poller`]: a dense `pollfd` array plus a parallel
+/// token array, O(1) register/deregister by swap-remove.
+#[cfg(unix)]
+pub struct PollFdPoller {
+    fds: Vec<sys::PollFd>,
+    tokens: Vec<Token>,
+}
+
+#[cfg(unix)]
+impl PollFdPoller {
+    /// Empty poll set.
+    pub fn new() -> PollFdPoller {
+        PollFdPoller { fds: Vec::new(), tokens: Vec::new() }
+    }
+
+    fn events_for(interest: Interest) -> i16 {
+        let mut e = 0i16;
+        if interest.read {
+            e |= sys::POLLIN;
+        }
+        if interest.write {
+            e |= sys::POLLOUT;
+        }
+        e
+    }
+
+    fn position(&self, token: Token) -> Option<usize> {
+        self.tokens.iter().position(|&t| t == token)
+    }
+}
+
+#[cfg(unix)]
+impl Default for PollFdPoller {
+    fn default() -> Self {
+        PollFdPoller::new()
+    }
+}
+
+#[cfg(unix)]
+impl Poller for PollFdPoller {
+    fn register(&mut self, src: SourceId, token: Token, interest: Interest) -> io::Result<()> {
+        debug_assert!(self.position(token).is_none(), "token registered twice");
+        self.fds.push(sys::PollFd {
+            fd: src,
+            events: Self::events_for(interest),
+            revents: 0,
+        });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn reregister(&mut self, token: Token, interest: Interest) -> io::Result<()> {
+        if let Some(i) = self.position(token) {
+            self.fds[i].events = Self::events_for(interest);
+        }
+        Ok(())
+    }
+
+    fn deregister(&mut self, token: Token) -> io::Result<()> {
+        if let Some(i) = self.position(token) {
+            self.fds.swap_remove(i);
+            self.tokens.swap_remove(i);
+        }
+        Ok(())
+    }
+
+    fn poll(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        for f in &mut self.fds {
+            f.revents = 0;
+        }
+        let rc = unsafe {
+            sys::poll(
+                self.fds.as_mut_ptr(),
+                self.fds.len() as sys::Nfds,
+                timeout_ms(timeout),
+            )
+        };
+        if rc < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(()); // signal: report no events, caller re-loops
+            }
+            return Err(e);
+        }
+        for (f, &token) in self.fds.iter().zip(&self.tokens) {
+            if f.revents == 0 {
+                continue;
+            }
+            let error = f.revents & (sys::POLLERR | sys::POLLNVAL) != 0;
+            events.push(PollEvent {
+                token,
+                // hangup and error states count as readable: the next
+                // read returns EOF / the pending error, which is how
+                // the connection layer learns the peer is gone
+                readable: f.revents & (sys::POLLIN | sys::POLLHUP) != 0 || error,
+                writable: f.revents & sys::POLLOUT != 0,
+                error,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Portable fallback [`Poller`]: sleeps up to one tick, then reports
+/// every registered source ready per its interest. Degenerate (every
+/// tick costs one syscall per connection) but correct against
+/// nonblocking sockets, which simply return `WouldBlock` when a
+/// readiness claim was premature. Compiled on every platform so the
+/// fallback cannot bit-rot; selected by [`new_poller`] only off-Unix.
+pub struct TickPoller {
+    entries: Vec<(Token, Interest)>,
+    tick: Duration,
+}
+
+impl TickPoller {
+    /// Fallback poller with a 1 ms tick.
+    pub fn new() -> TickPoller {
+        TickPoller { entries: Vec::new(), tick: Duration::from_millis(1) }
+    }
+}
+
+impl Default for TickPoller {
+    fn default() -> Self {
+        TickPoller::new()
+    }
+}
+
+impl Poller for TickPoller {
+    fn register(&mut self, _src: SourceId, token: Token, interest: Interest) -> io::Result<()> {
+        debug_assert!(
+            !self.entries.iter().any(|&(t, _)| t == token),
+            "token registered twice"
+        );
+        self.entries.push((token, interest));
+        Ok(())
+    }
+
+    fn reregister(&mut self, token: Token, interest: Interest) -> io::Result<()> {
+        if let Some(e) = self.entries.iter_mut().find(|(t, _)| *t == token) {
+            e.1 = interest;
+        }
+        Ok(())
+    }
+
+    fn deregister(&mut self, token: Token) -> io::Result<()> {
+        self.entries.retain(|&(t, _)| t != token);
+        Ok(())
+    }
+
+    fn poll(&mut self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        let nap = match timeout {
+            None => self.tick,
+            Some(t) => t.min(self.tick),
+        };
+        if !nap.is_zero() {
+            std::thread::sleep(nap);
+        }
+        for &(token, interest) in &self.entries {
+            if interest.read || interest.write {
+                events.push(PollEvent {
+                    token,
+                    readable: interest.read,
+                    writable: interest.write,
+                    error: false,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Wake handle held by threads outside the reactor (batcher completion
+/// threads, [`crate::net::NetServer`] shutdown). Cheap to call from any
+/// thread; redundant wakes coalesce.
+pub struct Waker {
+    tx: UdpSocket,
+    pending: Arc<AtomicBool>,
+}
+
+impl Waker {
+    /// Make the reactor's next (or current) poll return. At most one
+    /// datagram is in flight per quiet period: wakes between the send
+    /// and the reactor's drain fold into the pending flag.
+    pub fn wake(&self) {
+        if !self.pending.swap(true, Ordering::AcqRel) {
+            // a failed send (full buffer) is safe: a full buffer means
+            // queued datagrams already make the receive side readable
+            let _ = self.tx.send(&[1u8]);
+        }
+    }
+}
+
+/// Reactor-side end of the waker: registered in the poll set; drained
+/// once per readiness report.
+pub struct WakeReceiver {
+    rx: UdpSocket,
+    pending: Arc<AtomicBool>,
+}
+
+impl WakeReceiver {
+    /// OS identity for [`Poller::register`].
+    pub fn source(&self) -> SourceId {
+        source(&self.rx)
+    }
+
+    /// Absorb queued wake datagrams and rearm the coalescing flag.
+    /// Clearing the flag *before* reading means a wake racing this
+    /// drain at worst leaves one extra queued datagram (a spurious
+    /// poll wake-up), never an unobserved wake.
+    pub fn drain(&self) {
+        self.pending.store(false, Ordering::Release);
+        let mut scratch = [0u8; 16];
+        while self.rx.recv(&mut scratch).is_ok() {}
+    }
+}
+
+/// Build a connected loopback UDP waker pair (see the module docs for
+/// why UDP: portable, std-only, datagram loss under pressure is safe).
+pub fn wake_pair() -> io::Result<(Waker, WakeReceiver)> {
+    let rx = UdpSocket::bind("127.0.0.1:0")?;
+    let tx = UdpSocket::bind("127.0.0.1:0")?;
+    tx.connect(rx.local_addr()?)?;
+    // the receive side must never block the reactor; the send side must
+    // never block a batcher thread on a full buffer
+    rx.set_nonblocking(true)?;
+    tx.set_nonblocking(true)?;
+    let pending = Arc::new(AtomicBool::new(false));
+    Ok((
+        Waker { tx, pending: Arc::clone(&pending) },
+        WakeReceiver { rx, pending },
+    ))
+}
+
+/// Upper bound on how long the reactor may sleep given the next armed
+/// deadline: `None` when `deadline` is unset (sleep until an event).
+pub fn timeout_until(deadline: Option<Instant>, now: Instant) -> Option<Duration> {
+    deadline.map(|d| d.saturating_duration_since(now))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn reports_writable_then_readable() {
+        let (a, mut b) = tcp_pair();
+        a.set_nonblocking(true).unwrap();
+        let mut p = new_poller();
+        p.register(source(&a), 7, Interest::BOTH).unwrap();
+        let mut events = Vec::new();
+        // a fresh socket with an empty send buffer is writable
+        p.poll(&mut events, Some(Duration::from_secs(5))).unwrap();
+        let ev = events.iter().find(|e| e.token == 7).expect("event for token 7");
+        assert!(ev.writable, "fresh socket must be writable");
+        // nothing to read yet -> after the peer writes, readable
+        b.write_all(b"ping").unwrap();
+        b.flush().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            p.poll(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if events.iter().any(|e| e.token == 7 && e.readable) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "readable never reported");
+        }
+        let mut buf = [0u8; 8];
+        let n = (&a).read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping");
+    }
+
+    #[test]
+    fn deregistered_token_goes_silent() {
+        let (a, mut b) = tcp_pair();
+        a.set_nonblocking(true).unwrap();
+        let mut p = new_poller();
+        p.register(source(&a), 3, Interest::READ).unwrap();
+        b.write_all(b"x").unwrap();
+        let mut events = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            p.poll(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if events.iter().any(|e| e.token == 3 && e.readable) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "readable never reported");
+        }
+        p.deregister(3).unwrap();
+        p.poll(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(
+            !events.iter().any(|e| e.token == 3),
+            "deregistered token must not report"
+        );
+    }
+
+    #[test]
+    fn waker_interrupts_a_long_poll() {
+        let (waker, rx) = wake_pair().unwrap();
+        let mut p = new_poller();
+        p.register(rx.source(), 1, Interest::READ).unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            waker.wake();
+            waker.wake(); // the second wake coalesces into the first
+            waker
+        });
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        // the unix poller sleeps the full timeout unless woken; the
+        // tick poller wakes every tick regardless, so loop on readable
+        let deadline = t0 + Duration::from_secs(10);
+        loop {
+            p.poll(&mut events, Some(Duration::from_secs(10))).unwrap();
+            if events.iter().any(|e| e.token == 1 && e.readable) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "wake never observed");
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(9),
+            "poll must return early on wake"
+        );
+        rx.drain();
+        let _ = t.join().unwrap();
+    }
+
+    #[test]
+    fn tick_poller_claims_readiness_for_registered_interest() {
+        // exercised on every platform so the off-unix fallback cannot rot
+        let mut p = TickPoller::new();
+        p.register(0, 11, Interest::READ).unwrap();
+        p.register(0, 12, Interest::WRITE).unwrap();
+        p.register(0, 13, Interest::NONE).unwrap();
+        let mut events = Vec::new();
+        p.poll(&mut events, Some(Duration::from_millis(5))).unwrap();
+        let r = events.iter().find(|e| e.token == 11).unwrap();
+        assert!(r.readable && !r.writable);
+        let w = events.iter().find(|e| e.token == 12).unwrap();
+        assert!(w.writable && !w.readable);
+        assert!(!events.iter().any(|e| e.token == 13), "masked source is silent");
+        p.reregister(12, Interest::NONE).unwrap();
+        p.deregister(11).unwrap();
+        p.poll(&mut events, Some(Duration::from_millis(5))).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn timeout_rounding_never_spins() {
+        #[cfg(unix)]
+        {
+            assert_eq!(timeout_ms(None), -1);
+            assert_eq!(timeout_ms(Some(Duration::ZERO)), 0);
+            assert_eq!(timeout_ms(Some(Duration::from_micros(10))), 1);
+            assert_eq!(timeout_ms(Some(Duration::from_millis(7))), 7);
+        }
+        let now = Instant::now();
+        assert_eq!(timeout_until(None, now), None);
+        assert_eq!(timeout_until(Some(now), now + Duration::from_secs(1)), Some(Duration::ZERO));
+    }
+}

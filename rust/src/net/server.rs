@@ -1,62 +1,96 @@
-//! Threaded TCP front-end over the in-process [`InferenceService`].
+//! Reactor TCP front-end over the in-process [`InferenceService`].
 //!
 //! [`NetServer`] is the network boundary the rest of the crate never
-//! had: a `std::net` accept loop (no tokio — the design note in
-//! [`crate::coordinator::server`] applies: offline build, compute-bound
-//! request path) that speaks the [`crate::net::wire`] protocol and feeds
-//! every `Request` frame through a per-model
+//! had: a single readiness-driven event loop (no tokio — the design
+//! note in [`crate::coordinator::server`] applies: offline build,
+//! compute-bound request path) that speaks the [`crate::net::wire`]
+//! protocol and feeds every `Request` frame through a per-model
 //! [`MicroBatcher`](crate::net::MicroBatcher) so concurrent socket
 //! traffic reaches the engine as coalesced batches.
 //!
-//! - **Per-connection handler threads.** Each accepted connection gets
-//!   one reader thread. Responses are written by batcher completion
-//!   threads through a mutex-shared writer, so a connection can pipeline
-//!   many requests before reading any response (frames carry ids).
+//! - **One reactor thread, thousands of connections.** Every accepted
+//!   socket is nonblocking and registered with a [`crate::net::poll`]
+//!   poller; a [`Conn`](crate::net::conn::Conn) state machine parses
+//!   frames incrementally with the strict slice decoder and stages
+//!   responses in a shared outbox. An idle connection costs one poll
+//!   slot — no thread, no stack, no 100 ms sleep-poll tick.
+//! - **Waker path.** Batcher completion threads never touch sockets:
+//!   a responder encodes the `Response`/`Error` frame into the
+//!   connection's outbox, marks the connection dirty, and wakes the
+//!   reactor through a coalescing self-pipe
+//!   ([`crate::net::poll::Waker`]). The reactor flushes the outbox
+//!   when the socket is writable, preserving pipelining-by-frame-id.
+//! - **Fairness.** A readiness event lets one connection read at most
+//!   [`crate::net::conn::READ_BUDGET`] bytes before the loop moves on;
+//!   a fire-hose peer re-reports readable on the next poll instead of
+//!   starving its neighbours.
 //! - **Connection cap.** Beyond [`NetServerConfig::max_connections`]
 //!   live connections, a new peer receives one `Error{Busy}` frame and
-//!   is closed — explicit shed, mirroring the engine's bounded shards.
+//!   a lingering close — explicit shed, mirroring the engine's bounded
+//!   shards. Courtesy sheds are themselves bounded; past that bound a
+//!   flood is dropped without the frame.
+//! - **Misbehaving peers are bounded, not trusted.** A partial frame
+//!   must complete within [`ReactorTuning::frame_timeout`] (slow-loris
+//!   guard); a peer that never reads its responses trips the outbox
+//!   cap; both end in an error frame and a lingering close.
 //! - **Graceful drain-then-shutdown.** [`NetServer::shutdown`] stops
-//!   accepting, lets every accepted request finish (handlers exit once
-//!   their in-flight count drains; batchers flush partial groups
-//!   immediately), then joins every thread. A client can request the
-//!   same drain remotely with a `Shutdown` frame —
-//!   [`NetServer::run_until_shutdown`] blocks until one arrives.
+//!   accepting, answers every admitted request (batchers flush partial
+//!   groups immediately), flushes every outbox, then joins the reactor
+//!   and batcher threads. A client can request the same drain remotely
+//!   with a `Shutdown` frame — [`NetServer::run_until_shutdown`]
+//!   blocks until one arrives.
 //! - **Strict decode.** An undecodable frame gets one best-effort
-//!   `Error{BadRequest}` frame and the connection is closed; the server
-//!   never guesses at resynchronization.
+//!   `Error{BadRequest}` frame and the connection is closed; the
+//!   server never guesses at resynchronization.
 
-use std::collections::BTreeMap;
-use std::io::Write;
+use std::collections::{BTreeMap, BTreeSet};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{BatchItem, BatcherConfig, BatcherHandle, MicroBatcher};
-use super::wire::{
-    read_frame, write_frame, ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError,
+use super::conn::{Conn, ConnState, FlushOutcome, Outbox};
+use super::poll::{
+    self, new_poller, source, Interest, PollEvent, Poller, Token, WakeReceiver, Waker,
 };
+use super::wire::{ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError};
 use crate::coordinator::{InferenceService, ServeError};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 
-/// How long a handler's blocking read waits before re-checking the
-/// server's stop flag (bounds shutdown latency per connection).
-const READ_POLL: Duration = Duration::from_millis(100);
-/// Accept-loop poll interval while the listener has no pending peer.
-const ACCEPT_POLL: Duration = Duration::from_millis(1);
-/// Cap on concurrent shed threads (the polite Busy-frame goodbye takes
-/// up to ~1.4 s against a non-reading peer). Beyond it, over-cap
-/// connections are dropped outright — under a connect flood the
-/// resource bound matters more than the courtesy frame.
-const MAX_SHED_THREADS: usize = 32;
+/// Poll-set token of the listening socket.
+const TOKEN_LISTENER: Token = 0;
+/// Poll-set token of the waker's receive side.
+const TOKEN_WAKER: Token = 1;
+/// First connection token; connection slab index `i` maps to token
+/// `i + TOKEN_CONN0`.
+const TOKEN_CONN0: Token = 2;
+/// How long the listener stays masked after a transient `accept()`
+/// error (EMFILE and friends): distinct from the idle path, which
+/// costs nothing — an idle listener simply reports no readiness.
+const ACCEPT_ERROR_BACKOFF: Duration = Duration::from_millis(50);
+/// Reactor sweep cadence while draining, so shutdown progresses even
+/// if a wake is lost.
+const DRAIN_POLL: Duration = Duration::from_millis(50);
+/// Grace period for flushing queued output to a slow peer during
+/// drain, or to a peer that half-closed with replies still in flight
+/// (the analogue of the old per-write 5 s timeout).
+const EOF_WRITE_GRACE: Duration = Duration::from_secs(5);
+/// Cap on concurrent courtesy-Busy sheds held in the poll set. Beyond
+/// it, over-cap connections are dropped outright — under a connect
+/// flood the resource bound matters more than the courtesy frame.
+const MAX_SHED_CONNS: usize = 64;
 
 /// Tuning knobs for the TCP front-end.
 #[derive(Clone, Copy, Debug)]
 pub struct NetServerConfig {
     /// Live-connection cap; peers beyond it are shed with one
-    /// `Error{Busy}` frame (CLI: `--max-conns`).
+    /// `Error{Busy}` frame (CLI: `--max-conns`). Under the reactor
+    /// this is a memory/fairness bound, not a thread count — thousands
+    /// per reactor thread are practical.
     pub max_connections: usize,
     /// Micro-batcher flush deadline — *the* latency/throughput knob of
     /// the socket path, armed when a group's first request arrives
@@ -68,8 +102,32 @@ pub struct NetServerConfig {
 impl Default for NetServerConfig {
     fn default() -> Self {
         NetServerConfig {
-            max_connections: 64,
+            max_connections: 1024,
             batch_window: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Reactor timing knobs, separate from [`NetServerConfig`] so existing
+/// callers keep compiling; [`NetServer::start`] uses the defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorTuning {
+    /// A partially received frame must complete within this span or
+    /// the connection is closed with `Error{BadRequest}` — the
+    /// slow-loris bound (CLI: `serve --frame-timeout-ms`).
+    pub frame_timeout: Duration,
+    /// How long a closing connection lingers to flush its final frame
+    /// and absorb peer bytes so the close is an orderly FIN (an RST
+    /// could wipe an unread error frame out of the peer's receive
+    /// buffer).
+    pub linger: Duration,
+}
+
+impl Default for ReactorTuning {
+    fn default() -> Self {
+        ReactorTuning {
+            frame_timeout: Duration::from_secs(5),
+            linger: Duration::from_millis(250),
         }
     }
 }
@@ -79,28 +137,37 @@ impl Default for NetServerConfig {
 /// time with `Ordering::Relaxed`.
 #[derive(Debug, Default)]
 pub struct NetMetrics {
-    /// Connections accepted and handled.
+    /// Connections accepted and admitted.
     pub accepted: AtomicU64,
     /// Connections shed at the cap with `Error{Busy}`.
     pub rejected_connections: AtomicU64,
+    /// Transient `accept()` failures (e.g. EMFILE); each one also
+    /// masks the listener for a short distinct backoff.
+    pub accept_errors: AtomicU64,
     /// Valid request frames received (including ones the micro-batcher
     /// then shed synchronously with `Busy`/`Stopped`; reconcile against
     /// [`crate::net::BatcherMetrics::rejected`] for admitted-only
     /// counts).
     pub requests: AtomicU64,
-    /// Response frames written (successful predictions).
+    /// Response frames queued for delivery (successful predictions).
     pub responses: AtomicU64,
-    /// Error frames written (per-request and connection-level).
+    /// Error frames queued for delivery (per-request and
+    /// connection-level).
     pub errors: AtomicU64,
-    /// Connections dropped on an undecodable frame.
+    /// Connections dropped on an undecodable frame (including partial
+    /// frames that blew the slow-loris deadline).
     pub wire_errors: AtomicU64,
-    /// Currently open connections (gauge).
+    /// Currently open admitted connections (gauge).
     pub active: AtomicUsize,
+    /// High-water mark of the `active` gauge over the server's life —
+    /// the number the scale-out claim is judged by.
+    pub peak_active: AtomicUsize,
 }
 
-/// Shared state between the accept loop, the handlers, and the owner.
+/// Shared state between the reactor, the batcher responders, and the
+/// owner.
 struct ServerShared {
-    /// The engine service (handlers read its metrics for
+    /// The engine service (the reactor reads its metrics for
     /// `MetricsRequest` frames; submissions go through the batchers'
     /// own clients).
     svc: Arc<InferenceService>,
@@ -113,8 +180,12 @@ struct ServerShared {
     metrics: NetMetrics,
     /// Per-model enqueue handles (immutable after startup).
     batchers: BTreeMap<String, BatcherHandle>,
-    /// Live handler threads; the accept loop pushes, shutdown joins.
-    conns: Mutex<Vec<JoinHandle<()>>>,
+    /// Wakes the reactor's poll when a responder queues output.
+    waker: Waker,
+    /// Connection slab indices whose outbox gained frames since the
+    /// reactor last flushed (stale entries are harmless: flushing a
+    /// reused slot flushes that slot's own outbox).
+    dirty: Mutex<Vec<usize>>,
 }
 
 impl ServerShared {
@@ -137,6 +208,26 @@ impl ServerShared {
     }
 }
 
+/// Queue one frame into a connection's outbox, counting it in the
+/// network metrics iff the outbox accepted it (a dead or over-cap
+/// outbox drops the frame). Called from the reactor *and* from batcher
+/// responder threads.
+fn push_counted(metrics: &NetMetrics, outbox: &Outbox, frame: &Frame) -> bool {
+    if !outbox.push(&frame.encode()) {
+        return false;
+    }
+    match frame {
+        Frame::Response { .. } => {
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+        }
+        Frame::Error { .. } => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {}
+    }
+    true
+}
+
 /// The TCP front-end. See the module docs for the architecture.
 ///
 /// Startup takes the service as an `Arc` so the owner can keep an
@@ -148,19 +239,30 @@ impl ServerShared {
 pub struct NetServer {
     svc: Arc<InferenceService>,
     shared: Arc<ServerShared>,
-    accept: Option<JoinHandle<()>>,
+    reactor: Option<JoinHandle<()>>,
     batchers: Vec<MicroBatcher>,
     addr: SocketAddr,
 }
 
 impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), spawn
-    /// one micro-batcher per served model and the accept loop, and
+    /// one micro-batcher per served model and the reactor thread, and
     /// return immediately. The bound address is [`NetServer::local_addr`].
     pub fn start(
         svc: Arc<InferenceService>,
         addr: impl ToSocketAddrs,
         cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        Self::start_tuned(svc, addr, cfg, ReactorTuning::default())
+    }
+
+    /// [`NetServer::start`] with explicit [`ReactorTuning`] (the e2e
+    /// tests shrink the slow-loris deadline this way).
+    pub fn start_tuned(
+        svc: Arc<InferenceService>,
+        addr: impl ToSocketAddrs,
+        cfg: NetServerConfig,
+        tuning: ReactorTuning,
     ) -> Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
@@ -174,6 +276,7 @@ impl NetServer {
             handles.insert(model, b.handle());
             batchers.push(b);
         }
+        let (waker, wake_rx) = poll::wake_pair()?;
         let shared = Arc::new(ServerShared {
             svc: Arc::clone(&svc),
             stop: AtomicBool::new(false),
@@ -181,17 +284,39 @@ impl NetServer {
             shutdown_cv: Condvar::new(),
             metrics: NetMetrics::default(),
             batchers: handles,
-            conns: Mutex::new(Vec::new()),
+            waker,
+            dirty: Mutex::new(Vec::new()),
         });
-        let accept = {
+        let reactor = {
             let shared = Arc::clone(&shared);
             let max_conns = cfg.max_connections.max(1);
-            std::thread::spawn(move || accept_loop(listener, shared, max_conns))
+            std::thread::Builder::new()
+                .name("pds-reactor".to_string())
+                .spawn(move || {
+                    let mut poller = new_poller();
+                    let _ = poller.register(source(&listener), TOKEN_LISTENER, Interest::READ);
+                    let _ = poller.register(wake_rx.source(), TOKEN_WAKER, Interest::READ);
+                    Reactor {
+                        shared,
+                        listener,
+                        wake_rx,
+                        poller,
+                        conns: Vec::new(),
+                        free: Vec::new(),
+                        max_conns,
+                        tuning,
+                        accept_backoff_until: None,
+                        shed_live: 0,
+                        deadlined: BTreeSet::new(),
+                        draining: false,
+                    }
+                    .run();
+                })?
         };
         Ok(NetServer {
             svc,
             shared,
-            accept: Some(accept),
+            reactor: Some(reactor),
             batchers,
             addr,
         })
@@ -208,9 +333,17 @@ impl NetServer {
     }
 
     /// The served models' metrics snapshot as sent to clients
-    /// (engine counters + this server's micro-batcher coalescing).
+    /// (engine counters + this server's micro-batcher coalescing +
+    /// the server-level accept/shed counters).
     pub fn model_snapshot(&self, model: &str) -> Option<MetricsSnapshot> {
-        model_metrics_snapshot(&self.svc, self.shared.batchers.get(model)?)
+        let mut snap = model_metrics_snapshot(&self.svc, self.shared.batchers.get(model)?)?;
+        snap.net_accept_errors = self.shared.metrics.accept_errors.load(Ordering::Relaxed);
+        snap.net_shed_connections = self
+            .shared
+            .metrics
+            .rejected_connections
+            .load(Ordering::Relaxed);
+        Some(snap)
     }
 
     /// Enqueue handle of `model`'s micro-batcher. The handle stays
@@ -224,44 +357,39 @@ impl NetServer {
     /// [`NetServer::shutdown`] is invoked from another thread). The CLI
     /// parks here between "listening" and the drain.
     pub fn run_until_shutdown(&self) {
-        let mut requested = self.shared.shutdown_requested.lock().unwrap();
+        let mut requested = lock_unpoisoned(&self.shared.shutdown_requested);
         while !*requested && !self.shared.stop.load(Ordering::Acquire) {
-            let (guard, _) = self
-                .shared
-                .shutdown_cv
-                .wait_timeout(requested, Duration::from_millis(200))
-                .unwrap();
+            let (guard, _) = wait_timeout_unpoisoned(
+                &self.shared.shutdown_cv,
+                requested,
+                Duration::from_millis(200),
+            );
             requested = guard;
         }
     }
 
     /// Drain-then-shutdown of the *network* layer: stop accepting, let
-    /// every admitted request finish, join the accept loop, every
-    /// connection handler and every batcher thread — then hand the
-    /// inference service back to the owner (who calls
+    /// every admitted request finish and its response flush, join the
+    /// reactor and every batcher thread — then hand the inference
+    /// service back to the owner (who calls
     /// [`InferenceService::shutdown`] once no other `Arc`s remain).
     pub fn shutdown(mut self) -> Result<Arc<InferenceService>> {
         self.shared.stop.store(true, Ordering::Release);
         self.shared.shutdown_cv.notify_all();
-        // flush queued partial groups now, so the handler drain below is
+        // flush queued partial groups now, so the reactor drain below is
         // bounded by engine execution time, not by the batch window
         for b in &self.batchers {
             b.request_stop();
         }
+        // the reactor may be parked in an indefinite poll
+        self.shared.waker.wake();
         // a panicked thread is reported, but never short-circuits the
-        // teardown: every remaining thread is still joined and every
-        // batcher still drained before the error surfaces
+        // teardown: every batcher is still drained before the error
+        // surfaces
         let mut first_err: Option<anyhow::Error> = None;
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.reactor.take() {
             if h.join().is_err() {
-                first_err = Some(anyhow::anyhow!("accept loop panicked"));
-            }
-        }
-        // handlers exit once stopped + their in-flight replies drained
-        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
-        for h in conns {
-            if h.join().is_err() && first_err.is_none() {
-                first_err = Some(anyhow::anyhow!("connection handler panicked"));
+                first_err = Some(anyhow::anyhow!("reactor thread panicked"));
             }
         }
         // batchers flush partial groups immediately on stop and join
@@ -278,11 +406,13 @@ impl NetServer {
 }
 
 impl Drop for NetServer {
-    /// Dropping without [`NetServer::shutdown`] still signals every
-    /// thread to stop; they drain detached rather than joined.
+    /// Dropping without [`NetServer::shutdown`] still signals the
+    /// reactor and batchers to stop; they drain detached rather than
+    /// joined.
     fn drop(&mut self) {
         self.shared.stop.store(true, Ordering::Release);
         self.shared.shutdown_cv.notify_all();
+        self.shared.waker.wake();
     }
 }
 
@@ -290,6 +420,11 @@ impl Drop for NetServer {
 /// model — what a `MetricsReply` frame carries, also usable after
 /// [`NetServer::shutdown`] with the returned service and a
 /// [`BatcherHandle`] to report final post-drain numbers.
+///
+/// The server-level counters (`net_accept_errors`,
+/// `net_shed_connections`) are not derivable from the service and
+/// batcher alone and are left zero here; [`NetServer::model_snapshot`]
+/// and the live `MetricsRequest` path fill them in.
 pub fn model_metrics_snapshot(
     svc: &InferenceService,
     batcher: &BatcherHandle,
@@ -312,100 +447,15 @@ pub fn model_metrics_snapshot(
         mean_occupancy: m.mean_occupancy(),
         net_flushes: bm.flushes.load(Ordering::Relaxed),
         net_coalesced: bm.coalesced.load(Ordering::Relaxed),
+        net_accept_errors: 0,
+        net_shed_connections: 0,
     })
-}
-
-fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>, max_conns: usize) {
-    // live shed threads (detached, bounded by MAX_SHED_THREADS)
-    let shedding = Arc::new(AtomicUsize::new(0));
-    loop {
-        if shared.stop.load(Ordering::Acquire) {
-            return;
-        }
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let m = &shared.metrics;
-                if m.active.load(Ordering::Relaxed) >= max_conns {
-                    m.rejected_connections.fetch_add(1, Ordering::Relaxed);
-                    // shed on a short-lived detached thread: the write
-                    // timeout + lingering close can take over a second
-                    // against a non-reading peer, and the accept loop
-                    // must keep accepting meanwhile. Under a connect
-                    // flood the shed threads themselves are capped —
-                    // past the cap the connection is dropped without
-                    // the courtesy frame.
-                    if shedding.load(Ordering::Relaxed) < MAX_SHED_THREADS {
-                        shedding.fetch_add(1, Ordering::Relaxed);
-                        let shedding = Arc::clone(&shedding);
-                        std::thread::spawn(move || {
-                            shed_connection(stream);
-                            shedding.fetch_sub(1, Ordering::Relaxed);
-                        });
-                    }
-                    continue;
-                }
-                m.active.fetch_add(1, Ordering::Relaxed);
-                m.accepted.fetch_add(1, Ordering::Relaxed);
-                let shared2 = Arc::clone(&shared);
-                let handle =
-                    std::thread::spawn(move || handle_connection(stream, shared2));
-                let mut conns = shared.conns.lock().unwrap();
-                // reap finished handlers so a long-lived server does not
-                // accumulate dead JoinHandles
-                conns.retain(|h| !h.is_finished());
-                conns.push(handle);
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(ACCEPT_POLL);
-            }
-            Err(_) => {
-                if shared.stop.load(Ordering::Acquire) {
-                    return;
-                }
-                std::thread::sleep(ACCEPT_POLL);
-            }
-        }
-    }
-}
-
-/// Over-cap peer: one best-effort Busy frame, then close.
-fn shed_connection(mut stream: TcpStream) {
-    // see handle_connection: accepted sockets can inherit non-blocking
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-    let _ = write_frame(
-        &mut stream,
-        &Frame::Error {
-            id: 0,
-            code: ErrorCode::Busy,
-            message: "connection cap reached".to_string(),
-        },
-    );
-    let _ = stream.flush();
-    drain_before_close(&mut stream);
-}
-
-/// Absorb whatever the peer already sent before dropping a connection.
-/// Closing a socket with unread received bytes makes the kernel answer
-/// with RST, which can discard the error frame we just wrote out of the
-/// peer's receive buffer — draining first turns the close into a clean
-/// FIN so the peer reliably reads its `Error` frame.
-fn drain_before_close(stream: &mut TcpStream) {
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
-    let mut scratch = [0u8; 4096];
-    for _ in 0..8 {
-        match std::io::Read::read(stream, &mut scratch) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
-        }
-    }
 }
 
 /// Truncate a client-supplied string before echoing it into an error
 /// message: wire strings are capped at u16::MAX bytes and the encoder
 /// asserts on longer ones, so echoing a hostile 64 KiB model name
-/// verbatim could panic the handler. 64 bytes is plenty for diagnosis.
+/// verbatim could panic the server. 64 bytes is plenty for diagnosis.
 fn shorten(s: &str) -> String {
     const MAX: usize = 64;
     if s.len() <= MAX {
@@ -426,259 +476,603 @@ fn code_for(e: ServeError) -> ErrorCode {
     }
 }
 
-/// Shared per-connection writer with a dead-man flag: the first failed
-/// write (a non-reading peer's timeout, or a vanished peer) marks the
-/// connection dead and every later frame to it is dropped. This bounds
-/// the damage a stalled peer can do to the single completion thread to
-/// one write-timeout total — not one per queued response — so it
-/// cannot head-of-line-block other connections' replies for long.
-struct ConnWriter {
-    stream: Mutex<TcpStream>,
-    dead: AtomicBool,
+/// The event loop: one thread owning the listener, the waker's receive
+/// side, and every connection. All socket I/O happens here; the only
+/// cross-thread traffic is outbox pushes + dirty-token + wake from
+/// batcher responders.
+struct Reactor {
+    shared: Arc<ServerShared>,
+    listener: TcpListener,
+    wake_rx: WakeReceiver,
+    poller: Box<dyn Poller>,
+    /// Connection slab; index `i` is poll token `i + TOKEN_CONN0`.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    max_conns: usize,
+    tuning: ReactorTuning,
+    /// Listener masked until this instant after an accept error.
+    accept_backoff_until: Option<Instant>,
+    /// Courtesy-Busy sheds currently occupying slab slots.
+    shed_live: usize,
+    /// Slab indices with an armed frame or linger deadline — the only
+    /// connections the timeout scan has to visit, so a slow-loris peer
+    /// costs O(deadlined), not O(connections), per tick.
+    deadlined: BTreeSet<usize>,
+    draining: bool,
 }
 
-impl ConnWriter {
-    fn new(stream: TcpStream) -> ConnWriter {
-        ConnWriter {
-            stream: Mutex::new(stream),
-            dead: AtomicBool::new(false),
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        loop {
+            if !self.draining && self.shared.stop.load(Ordering::Acquire) {
+                self.begin_drain();
+            }
+            if self.draining && self.conns.iter().flatten().count() == 0 {
+                return;
+            }
+            let now = Instant::now();
+            let timeout = self.poll_timeout(now);
+            if self.poller.poll(&mut events, timeout).is_err() {
+                // a broken poller cannot drive any connection; bail
+                return;
+            }
+            let now = Instant::now();
+            for &ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.on_accept(now),
+                    TOKEN_WAKER => self.wake_rx.drain(),
+                    t => self.on_conn_event(t - TOKEN_CONN0, ev, now),
+                }
+            }
+            self.flush_dirty(now);
+            self.check_deadlines(now);
+            if self.draining {
+                self.drain_sweep(now);
+            }
         }
     }
-}
 
-/// Serialize one frame onto the shared writer (best-effort: a vanished
-/// or stalled peer is not an error worth propagating — see
-/// [`ConnWriter`]).
-fn send(writer: &ConnWriter, metrics: &NetMetrics, frame: &Frame) {
-    if writer.dead.load(Ordering::Relaxed) {
-        return;
-    }
-    match frame {
-        Frame::Response { .. } => {
-            metrics.responses.fetch_add(1, Ordering::Relaxed);
+    /// How long the next poll may block: until the nearest armed
+    /// deadline (accept backoff, frame timeouts, lingers), 50 ms while
+    /// draining, otherwise indefinitely — an idle server makes zero
+    /// syscalls until a peer or responder acts.
+    fn poll_timeout(&self, now: Instant) -> Option<Duration> {
+        let mut next: Option<Instant> = self.accept_backoff_until;
+        for &idx in &self.deadlined {
+            if let Some(c) = self.conns.get(idx).and_then(|s| s.as_ref()) {
+                for t in [c.frame_deadline, c.linger_deadline].into_iter().flatten() {
+                    next = Some(next.map_or(t, |n| n.min(t)));
+                }
+            }
         }
-        Frame::Error { .. } => {
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
+        if self.draining {
+            let cap = now + DRAIN_POLL;
+            next = Some(next.map_or(cap, |n| n.min(cap)));
         }
-        _ => {}
+        poll::timeout_until(next, now)
     }
-    let mut w = writer.stream.lock().unwrap();
-    if write_frame(&mut *w, frame).is_err() {
-        writer.dead.store(true, Ordering::Relaxed);
-    }
-}
 
-/// One connection's reader loop. Decrements the active gauge on every
-/// exit path via a guard.
-fn handle_connection(stream: TcpStream, shared: Arc<ServerShared>) {
-    struct ActiveGuard<'a>(&'a NetMetrics);
-    impl Drop for ActiveGuard<'_> {
-        fn drop(&mut self) {
-            self.0.active.fetch_sub(1, Ordering::Relaxed);
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        // no new peers; the backlog is abandoned to the process exit
+        let _ = self.poller.deregister(TOKEN_LISTENER);
+    }
+
+    /// Accept everything pending. On a transient error, count it and
+    /// mask the listener for a distinct backoff — unlike the old
+    /// thread-per-conn loop, the idle path shares nothing with this
+    /// (idle costs no syscall at all), so the two cannot be conflated.
+    fn on_accept(&mut self, now: Instant) {
+        if self.draining || self.accept_backoff_until.is_some() {
+            return;
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => self.admit(stream, now),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.shared.metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                    self.accept_backoff_until = Some(now + ACCEPT_ERROR_BACKOFF);
+                    let _ = self.poller.reregister(TOKEN_LISTENER, Interest::NONE);
+                    break;
+                }
+            }
         }
     }
-    let _guard = ActiveGuard(&shared.metrics);
-    // BSD-derived systems let accepted sockets inherit the listener's
-    // non-blocking flag (Linux does not); clear it explicitly or the
-    // read timeout below would be ineffective (instant EAGAIN spins)
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(READ_POLL));
-    // a peer that stops reading must not park responders (and through
-    // them the shutdown drain) forever on a full send buffer
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
-    let writer = match stream.try_clone() {
-        Ok(w) => Arc::new(ConnWriter::new(w)),
-        Err(_) => return,
-    };
-    let mut reader = stream;
-    // replies this connection still owes (responders not yet invoked);
-    // the drain condition on shutdown
-    let in_flight = Arc::new(AtomicUsize::new(0));
-    loop {
-        match read_frame(&mut reader) {
-            Ok(None) => break, // clean close by the peer
-            Err(WireError::Io(e))
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // idle poll tick; the shared drain check below decides
+
+    fn admit(&mut self, stream: TcpStream, now: Instant) {
+        let _ = stream.set_nonblocking(true);
+        let _ = stream.set_nodelay(true);
+        let m = &self.shared.metrics;
+        if m.active.load(Ordering::Relaxed) >= self.max_conns {
+            m.rejected_connections.fetch_add(1, Ordering::Relaxed);
+            if self.shed_live >= MAX_SHED_CONNS {
+                return; // flood: drop without the courtesy frame
             }
-            Ok(Some(Frame::Request {
-                id,
-                model,
-                context,
-                features,
-            })) => {
-                handle_request(&shared, &writer, &in_flight, id, model, context, features);
+            let mut conn = Conn::new(stream, false);
+            conn.state = ConnState::Closing;
+            conn.linger_deadline = Some(now + self.tuning.linger);
+            conn.outbox.push(
+                &Frame::Error {
+                    id: 0,
+                    code: ErrorCode::Busy,
+                    message: "connection cap reached".to_string(),
+                }
+                .encode(),
+            );
+            let idx = self.install(conn);
+            self.shed_live += 1;
+            self.deadlined.insert(idx);
+            self.after_io(idx, now);
+            return;
+        }
+        let active = m.active.fetch_add(1, Ordering::Relaxed) + 1;
+        m.peak_active.fetch_max(active, Ordering::Relaxed);
+        m.accepted.fetch_add(1, Ordering::Relaxed);
+        let idx = self.install(Conn::new(stream, true));
+        // the peer may already have pipelined requests into the kernel
+        self.on_conn_event(
+            idx,
+            PollEvent { token: idx + TOKEN_CONN0, readable: true, writable: false, error: false },
+            now,
+        );
+    }
+
+    fn install(&mut self, conn: Conn) -> usize {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.conns.push(None);
+                self.conns.len() - 1
             }
-            Ok(Some(Frame::HealthRequest)) => {
-                send(&writer, &shared.metrics, &shared.health_frame());
+        };
+        let src = source(&conn.stream);
+        let interest = conn.desired_interest();
+        let _ = self.poller.register(src, idx + TOKEN_CONN0, interest);
+        let mut conn = conn;
+        conn.interest = interest;
+        self.conns[idx] = Some(conn);
+        idx
+    }
+
+    fn close(&mut self, idx: usize) {
+        let Some(c) = self.conns.get_mut(idx).and_then(Option::take) else {
+            return;
+        };
+        let _ = self.poller.deregister(idx + TOKEN_CONN0);
+        // pending responders now drop their frames instead of queueing
+        // into a socket nobody will flush
+        c.outbox.mark_dead();
+        if c.counted {
+            self.shared.metrics.active.fetch_sub(1, Ordering::Relaxed);
+        } else {
+            self.shed_live = self.shed_live.saturating_sub(1);
+        }
+        self.deadlined.remove(&idx);
+        self.free.push(idx);
+    }
+
+    fn on_conn_event(&mut self, idx: usize, ev: PollEvent, now: Instant) {
+        if self.conns.get(idx).is_none_or(|s| s.is_none()) {
+            return;
+        }
+        if ev.error {
+            self.close(idx);
+            return;
+        }
+        if ev.readable && !self.on_readable(idx, now) {
+            return; // closed
+        }
+        self.after_io(idx, now);
+    }
+
+    /// Read + parse pass for one connection. Returns false when the
+    /// connection was closed.
+    fn on_readable(&mut self, idx: usize, now: Instant) -> bool {
+        let (fill, state) = {
+            let c = self.conns[idx].as_mut().unwrap();
+            (c.fill(), c.state)
+        };
+        if fill.gone {
+            self.close(idx);
+            return false;
+        }
+        match state {
+            ConnState::Closing => {
+                // absorb-and-discard so the eventual close is a FIN
+                self.conns[idx].as_mut().unwrap().discard_input();
             }
-            Ok(Some(Frame::MetricsRequest { model })) => {
-                let frame = shared
-                    .batchers
-                    .get(&model)
-                    .and_then(|b| model_metrics_snapshot(&shared.svc, b))
-                    .map(Frame::MetricsReply)
-                    .unwrap_or_else(|| Frame::Error {
-                        id: 0,
-                        code: ErrorCode::UnknownModel,
-                        message: format!("model '{}' not served", shorten(&model)),
-                    });
-                send(&writer, &shared.metrics, &frame);
+            ConnState::Open => {
+                loop {
+                    let next = self.conns[idx].as_mut().unwrap().next_frame();
+                    match next {
+                        None => break,
+                        Some(Ok(frame)) => {
+                            if !self.dispatch(idx, frame, now) {
+                                break; // strict close: stop parsing
+                            }
+                        }
+                        Some(Err(e)) => {
+                            self.protocol_error(idx, &e, now);
+                            break;
+                        }
+                    }
+                }
+                let frame_timeout = self.tuning.frame_timeout;
+                let (partial, eof, owes) = {
+                    let Some(c) = self.conns.get_mut(idx).and_then(|s| s.as_mut()) else {
+                        return false;
+                    };
+                    if c.state != ConnState::Open {
+                        // a dispatch flipped it to Closing
+                        c.discard_input();
+                        return true;
+                    }
+                    // slow-loris guard: a partial frame arms a hard
+                    // completion deadline; a completed buffer disarms it
+                    let arm = if c.has_partial() {
+                        if c.frame_deadline.is_none() {
+                            c.frame_deadline = Some(now + frame_timeout);
+                            true
+                        } else {
+                            false
+                        }
+                    } else {
+                        c.frame_deadline = None;
+                        false
+                    };
+                    if arm {
+                        self.deadlined.insert(idx);
+                    }
+                    let c = self.conns[idx].as_ref().unwrap();
+                    (
+                        c.has_partial(),
+                        c.peer_eof,
+                        c.in_flight.load(Ordering::Acquire) > 0 || c.has_pending_output(),
+                    )
+                };
+                if eof {
+                    if partial {
+                        // EOF mid-frame: same strict close the stream
+                        // decoder used to produce
+                        self.protocol_error(idx, &WireError::Truncated, now);
+                    } else if owes {
+                        // half-close with replies owed: flush them,
+                        // bounded by a grace deadline
+                        if let Some(c) = self.conns.get_mut(idx).and_then(|s| s.as_mut()) {
+                            if c.linger_deadline.is_none() {
+                                c.linger_deadline = Some(now + EOF_WRITE_GRACE);
+                                self.deadlined.insert(idx);
+                            }
+                        }
+                    }
+                    // a clean, fully-quiet EOF closes in after_io
+                }
             }
-            Ok(Some(Frame::Shutdown)) => {
-                send(&writer, &shared.metrics, &Frame::Shutdown);
-                let mut req = shared.shutdown_requested.lock().unwrap();
+        }
+        true
+    }
+
+    /// Handle one parsed frame. Returns false once the connection has
+    /// flipped to [`ConnState::Closing`] (stop parsing its buffer).
+    fn dispatch(&mut self, idx: usize, frame: Frame, now: Instant) -> bool {
+        match frame {
+            Frame::Request { id, model, context, features } => {
+                self.handle_request(idx, id, model, context, features);
+                true
+            }
+            Frame::HealthRequest => {
+                let f = self.shared.health_frame();
+                self.queue_frame(idx, &f);
+                true
+            }
+            Frame::MetricsRequest { model } => {
+                let f = self.metrics_frame(&model);
+                self.queue_frame(idx, &f);
+                true
+            }
+            Frame::Shutdown => {
+                self.queue_frame(idx, &Frame::Shutdown);
+                let mut req = lock_unpoisoned(&self.shared.shutdown_requested);
                 *req = true;
-                shared.shutdown_cv.notify_all();
+                self.shared.shutdown_cv.notify_all();
+                true
             }
-            Ok(Some(_)) => {
+            _ => {
                 // server-to-client frame types arriving here mean a
                 // confused peer: strict close
-                send(
-                    &writer,
-                    &shared.metrics,
+                self.queue_frame(
+                    idx,
                     &Frame::Error {
                         id: 0,
                         code: ErrorCode::BadRequest,
                         message: "unexpected frame type".to_string(),
                     },
                 );
-                break;
+                self.begin_close(idx, now);
+                false
             }
-            Err(e) => {
-                // undecodable or transport-broken: one best-effort
-                // error frame, then strict close
-                shared.metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
-                send(
-                    &writer,
-                    &shared.metrics,
-                    &Frame::Error {
-                        id: 0,
-                        code: ErrorCode::BadRequest,
-                        message: format!("protocol error: {e}"),
-                    },
-                );
-                break;
-            }
-        }
-        // drain exit — checked after EVERY frame, not only on idle
-        // ticks, so a peer that keeps sending (and being answered with
-        // Stopped errors) cannot keep this handler — and through the
-        // join, NetServer::shutdown — alive forever
-        if shared.stop.load(Ordering::Acquire) && in_flight.load(Ordering::Acquire) == 0 {
-            break;
         }
     }
-    // No wait on `in_flight` here: reaching this point means either the
-    // peer is gone (EOF / protocol close — nobody left to write to) or
-    // the drain-path break already required in_flight == 0. Responders
-    // still pending in a batcher own the writer via Arc and either
-    // write harmlessly to the dead socket or are resolved by the
-    // batcher's own drain — parking this thread (and its connection-cap
-    // slot) for up to a batch window would serve no one.
-    //
-    // Absorb unread peer bytes so the close is a FIN, not an RST that
-    // could wipe our final error frame out of the peer's receive buffer.
-    drain_before_close(&mut reader);
-}
 
-/// Validate and enqueue one request; the responder writes the Response
-/// or Error frame from a batcher thread.
-fn handle_request(
-    shared: &Arc<ServerShared>,
-    writer: &Arc<ConnWriter>,
-    in_flight: &Arc<AtomicUsize>,
-    id: u64,
-    model: String,
-    context: u32,
-    features: Vec<f32>,
-) {
-    let metrics = &shared.metrics;
-    if shared.stop.load(Ordering::Acquire) {
-        send(
-            writer,
-            metrics,
-            &Frame::Error {
-                id,
-                code: ErrorCode::Stopped,
-                message: "server draining".to_string(),
-            },
-        );
-        return;
-    }
-    let Some(batcher) = shared.batchers.get(&model) else {
-        send(
-            writer,
-            metrics,
-            &Frame::Error {
-                id,
+    fn metrics_frame(&self, model: &str) -> Frame {
+        let shared = &self.shared;
+        shared
+            .batchers
+            .get(model)
+            .and_then(|b| model_metrics_snapshot(&shared.svc, b))
+            .map(|mut snap| {
+                snap.net_accept_errors = shared.metrics.accept_errors.load(Ordering::Relaxed);
+                snap.net_shed_connections =
+                    shared.metrics.rejected_connections.load(Ordering::Relaxed);
+                Frame::MetricsReply(snap)
+            })
+            .unwrap_or_else(|| Frame::Error {
+                id: 0,
                 code: ErrorCode::UnknownModel,
-                message: format!("model '{}' not served", shorten(&model)),
-            },
-        );
-        return;
-    };
-    if (context as usize) >= batcher.contexts() {
-        send(
-            writer,
-            metrics,
-            &Frame::Error {
-                id,
-                code: ErrorCode::BadRequest,
-                message: format!(
-                    "context {} out of range (model '{}' hosts {} contexts)",
-                    context,
-                    shorten(&model),
-                    batcher.contexts()
-                ),
-            },
-        );
-        return;
+                message: format!("model '{}' not served", shorten(model)),
+            })
     }
-    if features.len() != batcher.features() {
-        send(
-            writer,
-            metrics,
+
+    /// Validate and enqueue one request; the responder queues the
+    /// Response or Error frame from a batcher thread and wakes the
+    /// reactor to flush it.
+    fn handle_request(
+        &mut self,
+        idx: usize,
+        id: u64,
+        model: String,
+        context: u32,
+        features: Vec<f32>,
+    ) {
+        if self.shared.stop.load(Ordering::Acquire) {
+            self.queue_frame(
+                idx,
+                &Frame::Error {
+                    id,
+                    code: ErrorCode::Stopped,
+                    message: "server draining".to_string(),
+                },
+            );
+            return;
+        }
+        let Some(batcher) = self.shared.batchers.get(&model).cloned() else {
+            self.queue_frame(
+                idx,
+                &Frame::Error {
+                    id,
+                    code: ErrorCode::UnknownModel,
+                    message: format!("model '{}' not served", shorten(&model)),
+                },
+            );
+            return;
+        };
+        if (context as usize) >= batcher.contexts() {
+            self.queue_frame(
+                idx,
+                &Frame::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!(
+                        "context {} out of range (model '{}' hosts {} contexts)",
+                        context,
+                        shorten(&model),
+                        batcher.contexts()
+                    ),
+                },
+            );
+            return;
+        }
+        if features.len() != batcher.features() {
+            self.queue_frame(
+                idx,
+                &Frame::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!(
+                        "feature dim {} != model dim {}",
+                        features.len(),
+                        batcher.features()
+                    ),
+                },
+            );
+            return;
+        }
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let Some((outbox, in_flight)) = self
+            .conns
+            .get(idx)
+            .and_then(|s| s.as_ref())
+            .map(|c| (Arc::clone(&c.outbox), Arc::clone(&c.in_flight)))
+        else {
+            return;
+        };
+        in_flight.fetch_add(1, Ordering::AcqRel);
+        let shared = Arc::clone(&self.shared);
+        batcher.enqueue(BatchItem {
+            features,
+            context: context as usize,
+            respond: Box::new(move |res| {
+                let frame = match res {
+                    Ok(p) => Frame::Response {
+                        id,
+                        class: p.class as u32,
+                        latency_us: p.latency.as_micros() as u64,
+                        batch_occupancy: p.batch_occupancy as u32,
+                        worker: p.worker as u32,
+                    },
+                    Err(e) => Frame::Error {
+                        id,
+                        code: code_for(e),
+                        message: e.to_string(),
+                    },
+                };
+                // order matters for the drain path: the frame must be
+                // queued before in_flight drops, so the reactor never
+                // observes "drained" with a response still unqueued
+                push_counted(&shared.metrics, &outbox, &frame);
+                in_flight.fetch_sub(1, Ordering::AcqRel);
+                lock_unpoisoned(&shared.dirty).push(idx);
+                shared.waker.wake();
+            }),
+        });
+    }
+
+    fn queue_frame(&mut self, idx: usize, frame: &Frame) {
+        if let Some(c) = self.conns.get(idx).and_then(|s| s.as_ref()) {
+            push_counted(&self.shared.metrics, &c.outbox, frame);
+        }
+    }
+
+    /// Undecodable input: count it, queue one best-effort error frame,
+    /// strict close.
+    fn protocol_error(&mut self, idx: usize, e: &WireError, now: Instant) {
+        self.shared.metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+        self.queue_frame(
+            idx,
             &Frame::Error {
-                id,
+                id: 0,
                 code: ErrorCode::BadRequest,
-                message: format!(
-                    "feature dim {} != model dim {}",
-                    features.len(),
-                    batcher.features()
-                ),
+                message: format!("protocol error: {e}"),
             },
         );
-        return;
+        self.begin_close(idx, now);
     }
-    metrics.requests.fetch_add(1, Ordering::Relaxed);
-    in_flight.fetch_add(1, Ordering::AcqRel);
-    let writer = Arc::clone(writer);
-    let in_flight = Arc::clone(in_flight);
-    let shared = Arc::clone(shared);
-    batcher.enqueue(BatchItem {
-        features,
-        context: context as usize,
-        respond: Box::new(move |res| {
-            let frame = match res {
-                Ok(p) => Frame::Response {
-                    id,
-                    class: p.class as u32,
-                    latency_us: p.latency.as_micros() as u64,
-                    batch_occupancy: p.batch_occupancy as u32,
-                    worker: p.worker as u32,
-                },
-                Err(e) => Frame::Error {
-                    id,
-                    code: code_for(e),
-                    message: e.to_string(),
-                },
+
+    /// Flip a connection to the lingering-close state: stop parsing,
+    /// flush what is queued, absorb peer bytes, close on flushed-EOF or
+    /// linger expiry.
+    fn begin_close(&mut self, idx: usize, now: Instant) {
+        let linger = self.tuning.linger;
+        if let Some(c) = self.conns.get_mut(idx).and_then(|s| s.as_mut()) {
+            c.state = ConnState::Closing;
+            c.discard_input();
+            c.frame_deadline = None;
+            if c.linger_deadline.is_none() {
+                c.linger_deadline = Some(now + linger);
+            }
+            self.deadlined.insert(idx);
+        }
+    }
+
+    /// Post-I/O bookkeeping for one connection: flush staged output,
+    /// apply the close rules, converge poller interest.
+    fn after_io(&mut self, idx: usize, _now: Instant) {
+        let Some(c) = self.conns.get_mut(idx).and_then(|s| s.as_mut()) else {
+            return;
+        };
+        match c.flush() {
+            FlushOutcome::Gone => {
+                self.close(idx);
+                return;
+            }
+            FlushOutcome::Flushed | FlushOutcome::Blocked => {}
+        }
+        let c = self.conns[idx].as_ref().unwrap();
+        let quiet = !c.has_pending_output() && c.in_flight.load(Ordering::Acquire) == 0;
+        let done = match c.state {
+            // a closing connection ends once its final frames are out
+            // and the peer has hung up (the linger deadline bounds a
+            // peer that never does)
+            ConnState::Closing => quiet && c.peer_eof,
+            // an open connection ends on a fully-quiet clean EOF
+            ConnState::Open => quiet && c.peer_eof && !c.has_partial(),
+        };
+        if done {
+            self.close(idx);
+            return;
+        }
+        self.update_interest(idx);
+    }
+
+    fn update_interest(&mut self, idx: usize) {
+        let Some(c) = self.conns.get_mut(idx).and_then(|s| s.as_mut()) else {
+            return;
+        };
+        let want = c.desired_interest();
+        if want != c.interest {
+            c.interest = want;
+            let _ = self.poller.reregister(idx + TOKEN_CONN0, want);
+        }
+    }
+
+    /// Flush every connection a responder marked dirty since the last
+    /// pass. Duplicate and stale tokens are harmless (a reused slot
+    /// flushes its own outbox; a freed slot is skipped).
+    fn flush_dirty(&mut self, now: Instant) {
+        let mut dirty = std::mem::take(&mut *lock_unpoisoned(&self.shared.dirty));
+        if dirty.is_empty() {
+            return;
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+        for idx in dirty {
+            self.after_io(idx, now);
+        }
+    }
+
+    /// Fire due deadlines: unmask the listener after accept backoff,
+    /// close expired lingers, strict-close slow-loris partial frames.
+    fn check_deadlines(&mut self, now: Instant) {
+        if let Some(t) = self.accept_backoff_until {
+            if now >= t {
+                self.accept_backoff_until = None;
+                if !self.draining {
+                    let _ = self.poller.reregister(TOKEN_LISTENER, Interest::READ);
+                    // peers may have queued in the backlog meanwhile
+                    self.on_accept(now);
+                }
+            }
+        }
+        if self.deadlined.is_empty() {
+            return;
+        }
+        let due: Vec<usize> = self.deadlined.iter().copied().collect();
+        for idx in due {
+            let Some(c) = self.conns.get(idx).and_then(|s| s.as_ref()) else {
+                self.deadlined.remove(&idx);
+                continue;
             };
-            send(&writer, &shared.metrics, &frame);
-            in_flight.fetch_sub(1, Ordering::AcqRel);
-        }),
-    });
+            let linger_due = c.linger_deadline.is_some_and(|t| now >= t);
+            let frame_due = c.frame_deadline.is_some_and(|t| now >= t);
+            let any_armed = c.linger_deadline.is_some() || c.frame_deadline.is_some();
+            if linger_due {
+                self.close(idx);
+            } else if frame_due {
+                // slow-loris: the partial frame did not complete in time
+                self.protocol_error(idx, &WireError::Truncated, now);
+                self.after_io(idx, now);
+            } else if !any_armed {
+                self.deadlined.remove(&idx);
+            }
+        }
+    }
+
+    /// While draining: answer nothing new, flush everything owed, and
+    /// close each connection the moment it owes nothing — bounded per
+    /// connection by a write-grace linger against stalled peers.
+    fn drain_sweep(&mut self, now: Instant) {
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_none() {
+                continue;
+            }
+            self.after_io(idx, now);
+            let Some(c) = self.conns.get_mut(idx).and_then(|s| s.as_mut()) else {
+                continue;
+            };
+            if c.in_flight.load(Ordering::Acquire) > 0 {
+                continue; // responders still owe frames; the wake loop returns here
+            }
+            if !c.has_pending_output() {
+                self.close(idx);
+                continue;
+            }
+            if c.linger_deadline.is_none() {
+                c.linger_deadline = Some(now + EOF_WRITE_GRACE);
+                self.deadlined.insert(idx);
+            }
+        }
+    }
 }

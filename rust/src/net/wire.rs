@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic  "PD" (0x50 0x44)
-//! 2       1     protocol version (currently 2)
+//! 2       1     protocol version (currently 3)
 //! 3       1     frame type tag (see the table on [`Frame`])
 //! 4       4     payload length, u32 little-endian
 //! 8       len   payload (per-type layout, all integers little-endian)
@@ -39,8 +39,12 @@ pub const MAGIC: [u8; 2] = *b"PD";
 /// Protocol version this build speaks. Frames carrying any other
 /// version are rejected with [`WireError::UnknownVersion`]. Version 2
 /// added the tenant-context dimension: a `context` field on `Request`,
-/// `contexts` on [`ModelInfo`] and [`MetricsSnapshot`].
-pub const VERSION: u8 = 2;
+/// `contexts` on [`ModelInfo`] and [`MetricsSnapshot`]. Version 3
+/// added the reactor's server-level counters to [`MetricsSnapshot`]:
+/// `net_accept_errors` and `net_shed_connections` (the strict decoder
+/// rejects trailing bytes, so any snapshot layout change is a lockstep
+/// version bump).
+pub const VERSION: u8 = 3;
 /// Fixed header size in bytes (magic + version + type + payload length).
 pub const HEADER_LEN: usize = 8;
 /// Hard cap on the declared payload length. A header announcing more is
@@ -169,6 +173,12 @@ pub struct MetricsSnapshot {
     /// Requests coalesced across those flushes; `net_coalesced /
     /// net_flushes` is the achieved mean coalesced batch size.
     pub net_coalesced: u64,
+    /// Transient `accept()` failures at the server's reactor (a
+    /// server-level counter, identical in every model's snapshot).
+    pub net_accept_errors: u64,
+    /// Connections shed at the connection cap with `Error{Busy}` (a
+    /// server-level counter, identical in every model's snapshot).
+    pub net_shed_connections: u64,
     /// Tenant contexts the model hosts (1 = single-tenant).
     pub contexts: u64,
 }
@@ -496,6 +506,8 @@ impl Frame {
                 put_f64(out, s.mean_occupancy);
                 put_u64(out, s.net_flushes);
                 put_u64(out, s.net_coalesced);
+                put_u64(out, s.net_accept_errors);
+                put_u64(out, s.net_shed_connections);
                 put_u64(out, s.contexts);
             }
         }
@@ -641,6 +653,8 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             mean_occupancy: c.f64()?,
             net_flushes: c.u64()?,
             net_coalesced: c.u64()?,
+            net_accept_errors: c.u64()?,
+            net_shed_connections: c.u64()?,
             contexts: c.u64()?,
         }),
         T_SHUTDOWN => Frame::Shutdown,
@@ -790,6 +804,8 @@ mod tests {
                 mean_occupancy: 5.0,
                 net_flushes: 12,
                 net_coalesced: 60,
+                net_accept_errors: 1,
+                net_shed_connections: 3,
                 contexts: 4,
             }),
             Frame::Shutdown,

@@ -1,13 +1,14 @@
 //! In-tree replacements for crates unavailable in the offline build
 //! (see DESIGN.md §Dependencies): deterministic PRNG, minimal JSON,
-//! micro-bench harness, scoped fork-join parallelism, and a
-//! property-test driver.
+//! micro-bench harness, scoped fork-join parallelism, a property-test
+//! driver, and poison-tolerant lock helpers.
 
 pub mod bench;
 pub mod json;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 
 /// Greatest common divisor (Appendix A density-set math).
 pub fn gcd(a: usize, b: usize) -> usize {

@@ -190,8 +190,35 @@ fn bench_serve_net_section_schema() {
             }
         }
     }
+    // the reactor scale-out soak: present always (placeholder nulls
+    // until `cargo bench --bench net_load` records it); once the net
+    // section claims recorded, every soak measurement must be concrete
+    let soak = net
+        .get("soak")
+        .expect("net.soak subsection (written by `cargo bench --bench net_load`)");
+    assert!(
+        soak.get("model").and_then(|v| v.as_str()).is_some(),
+        "net.soak: 'model' must be a string"
+    );
+    for key in [
+        "connections",
+        "served",
+        "busy_retries",
+        "dropped_connections",
+        "shed_connections",
+        "accept_errors",
+        "wall_s",
+        "throughput_rps",
+        "p50_us",
+        "p99_us",
+        "p999_us",
+        "shed_rate",
+    ] {
+        check_field(soak, key, recorded, "net.soak");
+    }
     // acceptance discipline: once the net section claims recorded, the
     // achieved mean coalesced batch size must demonstrate coalescing
+    // and the soak population must be at reactor scale
     if recorded {
         let mean = net
             .get("mean_coalesced_batch")
@@ -200,6 +227,14 @@ fn bench_serve_net_section_schema() {
         assert!(
             mean > 1.0,
             "recorded mean coalesced batch size must exceed 1 (got {mean})"
+        );
+        let conns = soak
+            .get("connections")
+            .and_then(|v| v.as_f64())
+            .expect("recorded soak has a numeric connection count");
+        assert!(
+            conns >= 256.0,
+            "recorded soak must hold a reactor-scale population (got {conns})"
         );
     }
 }

@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use pds::coordinator::loadgen::{self, SocketLoadSpec};
 use pds::coordinator::{InferenceService, ServerConfig};
-use pds::net::{NetClient, NetClientError, NetServer, NetServerConfig};
+use pds::net::{NetClient, NetClientError, NetServer, NetServerConfig, ReactorTuning};
 use pds::util::rng::Rng;
 
 fn dir() -> &'static str {
@@ -476,6 +476,156 @@ fn socket_quant_multi_context_act_matches_in_process() {
         }
         stop_pair(svc, server);
     }
+}
+
+/// Slow-loris: a peer that starts a frame and then stalls must be cut
+/// off at the configured frame timeout with a `BadRequest` error frame
+/// and a close — while an unrelated connection on the same reactor
+/// keeps serving before, during, and after the cutoff.
+#[test]
+fn partial_frame_times_out_without_stalling_other_connections() {
+    use std::io::Write;
+    let mut spec = loadgen::model_spec(dir(), "tiny", 0.25, 46).unwrap();
+    spec = spec.with_contexts(1);
+    let svc = Arc::new(
+        InferenceService::start(
+            dir(),
+            vec![spec],
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_depth: 64,
+                tune_kernel_threads: false,
+            },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start_tuned(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig::default(),
+        ReactorTuning {
+            frame_timeout: Duration::from_millis(200),
+            ..ReactorTuning::default()
+        },
+    )
+    .unwrap();
+    let features = svc.client("tiny").unwrap().features();
+    let mut healthy = NetClient::connect(server.local_addr()).unwrap();
+    healthy.classify("tiny", vec![0.1; features]).unwrap();
+    // dribble the first bytes of a valid Request frame, then stall
+    let full = pds::net::Frame::Request {
+        id: 7,
+        model: "tiny".into(),
+        context: 0,
+        features: vec![0.5; features],
+    }
+    .encode();
+    let mut loris = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    loris.write_all(&full[..6]).unwrap();
+    loris.flush().unwrap();
+    // the healthy connection must keep serving while the stalled frame
+    // ages toward its deadline
+    healthy.classify("tiny", vec![-0.1; features]).unwrap();
+    // the stalled peer gets a typed connection-level error, then EOF
+    // (read_frame blocks, so this also bounds the cutoff to ~200ms)
+    let t0 = std::time::Instant::now();
+    match pds::net::wire::read_frame(&mut loris).unwrap() {
+        Some(pds::net::Frame::Error { id, code, message }) => {
+            assert_eq!(id, 0, "connection-level error");
+            assert_eq!(code, pds::net::ErrorCode::BadRequest);
+            assert!(
+                message.contains("truncated"),
+                "error must name the truncation: {message}"
+            );
+        }
+        other => panic!("expected a BadRequest timeout frame, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "frame timeout must fire near its 200ms deadline"
+    );
+    assert!(matches!(pds::net::wire::read_frame(&mut loris), Ok(None)));
+    assert_eq!(
+        server
+            .metrics()
+            .wire_errors
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    // the reactor is unharmed: the healthy connection still serves
+    healthy.classify("tiny", vec![0.3; features]).unwrap();
+    stop_pair(svc, server);
+}
+
+/// Scale-out smoke at test size: one reactor thread multiplexes
+/// hundreds of mostly-idle connections; a sampled subset classifies
+/// correctly, the peak gauge records the population, and the drain is
+/// clean with every connection still open.
+#[test]
+fn one_reactor_thread_serves_hundreds_of_idle_connections() {
+    const IDLE: usize = 256;
+    let (svc, server) = start_pair(47, false, NetServerConfig::default());
+    let features = svc.client("tiny").unwrap().features();
+    let mut conns: Vec<NetClient> = (0..IDLE)
+        .map(|_| NetClient::connect(server.local_addr()).unwrap())
+        .collect();
+    // every 16th connection does real work; the rest just sit there
+    for (i, c) in conns.iter_mut().enumerate().step_by(16) {
+        let p = c.classify("tiny", vec![0.01 * i as f32; features]).unwrap();
+        assert!(p.class < 8);
+    }
+    let m = server.metrics();
+    assert!(
+        m.peak_active.load(std::sync::atomic::Ordering::Relaxed) >= IDLE,
+        "peak gauge must record the idle population"
+    );
+    assert_eq!(
+        m.rejected_connections.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "default cap must admit all {IDLE} connections"
+    );
+    drop(conns);
+    stop_pair(svc, server);
+}
+
+/// One connection's failure must not take down the server: a responder
+/// that panics (injected straight into the model's batcher, as a
+/// broken connection's delivery callback would) is absorbed and
+/// counted, and socket clients keep being served.
+#[test]
+fn panicking_responder_does_not_take_down_the_server() {
+    let (svc, server) = start_pair(48, false, NetServerConfig::default());
+    let features = svc.client("tiny").unwrap().features();
+    let handle = server.batcher("tiny").unwrap();
+    handle.enqueue(pds::net::BatchItem {
+        features: vec![0.2; features],
+        context: 0,
+        respond: Box::new(|_| panic!("injected responder failure")),
+    });
+    // wait for the panic to be absorbed and counted
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let n = handle
+            .metrics()
+            .responder_panics
+            .load(std::sync::atomic::Ordering::Relaxed);
+        if n == 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "responder panic never surfaced in the metrics"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the batcher and reactor both survived: fresh socket traffic serves
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    for _ in 0..4 {
+        let p = net.classify("tiny", vec![0.4; features]).unwrap();
+        assert!(p.class < 8);
+    }
+    stop_pair(svc, server);
 }
 
 /// A request for an unserved model errors by name; the connection

@@ -7,7 +7,7 @@
 //! reproducibility); failures print the per-case seed via
 //! `util::prop::for_all`.
 
-use pds::net::wire::{Frame, MetricsSnapshot, ModelInfo, WireError, HEADER_LEN, MAX_PAYLOAD};
+use pds::net::wire::{Frame, MetricsSnapshot, ModelInfo, WireError, HEADER_LEN, MAX_PAYLOAD, VERSION};
 use pds::net::ErrorCode;
 use pds::util::prop::for_all;
 use pds::util::rng::Rng;
@@ -100,6 +100,8 @@ fn arb_frame(r: &mut Rng) -> Frame {
             mean_occupancy: r.uniform64() * 256.0,
             net_flushes: r.next_u64() >> 16,
             net_coalesced: r.next_u64() >> 16,
+            net_accept_errors: r.next_u64() >> 16,
+            net_shed_connections: r.next_u64() >> 16,
         }),
         _ => Frame::Shutdown,
     }
@@ -208,7 +210,7 @@ fn decoder_rejects_oversized_headers_without_allocating() {
             let declared = MAX_PAYLOAD + 1 + r.below(1 << 20);
             let mut h = Vec::with_capacity(HEADER_LEN);
             h.extend_from_slice(b"PD");
-            h.push(2); // current version
+            h.push(VERSION); // current version
             h.push((1 + r.below(8)) as u8);
             h.extend_from_slice(&(declared as u32).to_le_bytes());
             (h, declared)
@@ -229,8 +231,8 @@ fn decoder_rejects_unknown_versions_and_types() {
         |r| {
             let bytes = arb_frame(r).encode();
             let bad_version = r.below(2) == 0;
-            // 3.. can never collide with the current version (2)
-            (bytes, bad_version, (3 + r.below(250)) as u8)
+            // VERSION+1 .. can never collide with the current version
+            (bytes, bad_version, VERSION + 1 + r.below(250) as u8)
         },
         |(bytes, bad_version, bad)| {
             let mut b = bytes.clone();
@@ -241,7 +243,7 @@ fn decoder_rejects_unknown_versions_and_types() {
                     other => Err(format!("expected UnknownVersion, got {other:?}")),
                 }
             } else {
-                // type tags 9..=255 are unassigned in protocol v2
+                // type tags 9..=255 are unassigned in the current protocol
                 let tag = (*bad).max(9);
                 b[3] = tag;
                 match Frame::decode(&b) {
