@@ -46,6 +46,7 @@ pub fn run(dir: &str, batch_window: Duration) -> anyhow::Result<SoakReport> {
         NetServerConfig {
             max_connections: 4096,
             batch_window,
+            ..Default::default()
         },
     )?;
     let report = loadgen::run_soak_load(server.local_addr(), "tiny", &spec, 0x50AC)?;

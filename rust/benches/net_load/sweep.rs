@@ -41,6 +41,7 @@ fn run_scenario(
         NetServerConfig {
             max_connections: 64,
             batch_window,
+            ..Default::default()
         },
     )?;
     let reports = loadgen::run_socket_load(server.local_addr(), models, &spec, 0x5EED)?;

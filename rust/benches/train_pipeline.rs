@@ -15,6 +15,7 @@
 
 use std::collections::BTreeMap;
 
+use pds::coordinator::loadgen;
 use pds::data::Spec;
 use pds::nn::pipeline::{PipelineConfig, PipelinedTrainer};
 use pds::nn::sparse::SparseNet;
@@ -140,6 +141,55 @@ fn run_case(case: &Case) -> Json {
     Json::Obj(obj)
 }
 
+/// One *profiled* epoch of a case on a fresh trainer (the timing runs
+/// above stay unprofiled so the speedup numbers are not contaminated by
+/// the per-op timestamps): the per-stage wall + modelled-clock section
+/// merged into `BENCH_train.json` as `profile`.
+fn profile_case(case: &Case) -> Json {
+    let netc = NetConfig::new(case.layers.clone());
+    let mut prng = Rng::new(7);
+    let pattern = generate(
+        Method::ClashFree,
+        &netc,
+        &DoutConfig(case.dout.clone()),
+        None,
+        &mut prng,
+    );
+    let spec = Spec {
+        name: "train-bench",
+        features: case.layers[0],
+        classes: *case.layers.last().unwrap(),
+        latent_dim: (case.layers[0] / 4).clamp(4, 64),
+        shaping: pds::data::Shaping::Continuous,
+        separation: 2.5,
+        noise: 0.5,
+    };
+    let splits = spec.splits(case.n_train, 0, 64, 21);
+    let mut pipe = PipelinedTrainer::from_pattern(
+        &case.layers,
+        &pattern,
+        &PipelineConfig {
+            epochs: 1,
+            batch: case.batch,
+            depth: 0,
+            seed: 9,
+            tune_kernel_threads: true,
+            profile: true,
+            ..Default::default()
+        },
+    )
+    .expect("profiled pipelined trainer");
+    pipe.train(&splits.train, &splits.test)
+        .expect("profiled epoch");
+    print!("{}", pipe.prof.report());
+    let Json::Obj(mut obj) = pipe.prof.to_json() else {
+        unreachable!("StageProf::to_json returns an object")
+    };
+    obj.insert("recorded".to_string(), Json::Bool(true));
+    obj.insert("case".to_string(), Json::Str(case.name.to_string()));
+    Json::Obj(obj)
+}
+
 fn main() {
     let cores = parallel::machine_threads();
     println!("train_pipeline bench: {cores} kernel threads available\n");
@@ -184,9 +234,12 @@ fn main() {
     root.insert("cases".to_string(), Json::Arr(results));
     root.insert("max_speedup".to_string(), Json::Num(max_speedup));
     root.insert("target_speedup".to_string(), Json::Num(1.5));
+    println!("\n-- per-stage profile ({}) --", cases[1].name);
+    root.insert("profile".to_string(), profile_case(&cases[1]));
     let doc = Json::Obj(root);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
-    match std::fs::write(out, format!("{doc}\n")) {
+    // merge-write so sibling sections (actsparse) survive the refresh
+    match loadgen::write_bench_json(out, doc) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => eprintln!("train_pipeline: cannot write {out}: {e}"),
     }

@@ -34,9 +34,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::server::{
-    InferenceService, LatencyHistogram, ModelMetrics, ModelSpec, ServeError, ServerConfig,
-};
+use super::server::{InferenceService, LatencyHistogram, ModelSpec, ServeError, ServerConfig};
 use crate::net::{NetClient, NetClientError};
 use crate::runtime::Manifest;
 use crate::sparsity::config::{DoutConfig, NetConfig};
@@ -243,14 +241,12 @@ pub fn run_load(
     })?;
     let wall = t0.elapsed();
     let workers = svc.config().workers.max(1);
+    // one registry snapshot covers every model's counters coherently —
+    // the same view the CLI dump and the wire Metrics frame report
+    let reg = svc.registry().snapshot();
     models
         .iter()
-        .map(|m| {
-            let met = svc
-                .metrics(m)
-                .ok_or_else(|| anyhow::anyhow!("no metrics for '{m}'"))?;
-            Ok(snapshot(m, workers, spec, met, wall))
-        })
+        .map(|m| Ok(snapshot(m, workers, spec, &reg, wall)))
         .collect()
 }
 
@@ -258,26 +254,28 @@ fn snapshot(
     model: &str,
     workers: usize,
     spec: &LoadSpec,
-    met: &ModelMetrics,
+    reg: &crate::obs::Snapshot,
     wall: Duration,
 ) -> LoadReport {
-    let served = met.requests.load(Ordering::Relaxed);
+    let labels: &[(&str, &str)] = &[("model", model)];
+    let served = reg.counter("serve.requests", labels).unwrap_or(0);
+    let hist = reg.histogram("serve.latency", labels).unwrap_or_default();
     LoadReport {
         model: model.to_string(),
         workers,
         clients: spec.clients,
         contexts: spec.contexts.max(1),
         served,
-        rejected: met.rejected.load(Ordering::Relaxed),
+        rejected: reg.counter("serve.rejected", labels).unwrap_or(0),
         wall,
         throughput: served as f64 / wall.as_secs_f64().max(1e-9),
-        p50: met.latency.quantile(0.50),
-        p95: met.latency.quantile(0.95),
-        p99: met.latency.quantile(0.99),
-        batches: met.batches.load(Ordering::Relaxed),
-        mean_occupancy: met.mean_occupancy(),
-        stolen: met.stolen.load(Ordering::Relaxed),
-        act_density: met.act_density(),
+        p50: Duration::from_micros(hist.p50_us),
+        p95: Duration::from_micros(hist.p95_us),
+        p99: Duration::from_micros(hist.p99_us),
+        batches: reg.counter("serve.batches", labels).unwrap_or(0),
+        mean_occupancy: reg.gauge("serve.occupancy_mean", labels).unwrap_or(0.0),
+        stolen: reg.counter("serve.stolen", labels).unwrap_or(0),
+        act_density: reg.gauge("serve.act_density", labels).unwrap_or(0.0),
     }
 }
 

@@ -28,10 +28,22 @@
 //!   tail with zero rows, executes once, and fans the argmax results
 //!   back out — one fixed junction-cycle cost per flush, exactly like
 //!   the hardware pipeline's rhythm.
-//! - **Metrics.** Each model owns a lock-free [`ModelMetrics`] registry:
+//! - **Metrics.** Each model owns a lock-free [`ModelMetrics`] struct:
 //!   request/reject/batch counters, a batch-occupancy histogram, and a
-//!   log₂-bucketed latency histogram with p50/p95/p99 quantiles. The CLI
-//!   (`pds serve`, `pds serve-bench`) dumps it after a run.
+//!   log₂-bucketed latency histogram with p50/p95/p99 quantiles. The
+//!   service exports every model through its
+//!   [`crate::obs::registry::Registry`] (one collector per model,
+//!   registered at startup holding a `Weak` core handle);
+//!   [`InferenceService::registry`]`.snapshot()` is the one coherent
+//!   view the CLI dump, the wire Metrics frame and the load generators
+//!   all read.
+//! - **Tracing.** A sampled request carries a boxed
+//!   [`crate::obs::trace::ReqTrace`] through the shard queue
+//!   ([`Client::submit_ctx_traced`]); the worker stamps the batch's
+//!   execution window, closes the trace and attaches the
+//!   [`TraceEcho`] to the [`Prediction`]. Unsampled requests carry
+//!   `None` — no allocation, no timestamps beyond the ones serving
+//!   already takes.
 //! - **Quantized serving.** A model with [`ModelSpec::quant`] set is
 //!   served in Qm.n fixed point ([`crate::nn::fixed`]): parameters are
 //!   compacted and quantized once at startup, every worker runs the
@@ -67,10 +79,17 @@ use anyhow::Result;
 use crate::nn::actsparse::{ActMode, ActSpec, ActStats};
 use crate::nn::fixed::{FixedSparseNet, QFormat};
 use crate::nn::sparse::SparseNet;
+use crate::obs::registry::{Registry, Sample};
+use crate::obs::trace::{ReqTrace, TraceEcho};
 use crate::runtime::{Engine, Manifest, Program, Value};
 use crate::sparsity::pattern::NetPattern;
 use crate::util::parallel;
 use crate::util::rng::Rng;
+
+// the histogram moved to the observability layer (obs::registry) so the
+// net load generators and the registry share one bucketing; re-exported
+// here because it grew up as part of this module's public API
+pub use crate::obs::registry::LatencyHistogram;
 
 /// How long an idle worker parks on its shard's condvar before re-polling
 /// sibling shards (steals are not signalled on the thief's condvar).
@@ -155,6 +174,10 @@ pub struct Prediction {
     pub worker: usize,
     /// Tenant context whose parameter bank served this request.
     pub context: usize,
+    /// Per-stage timing echo when the request was traced (sampled at the
+    /// net front door or submitted via [`Client::submit_ctx_traced`]);
+    /// `None` on the unsampled path.
+    pub trace: Option<TraceEcho>,
 }
 
 struct Request {
@@ -162,64 +185,9 @@ struct Request {
     context: usize,
     submitted: Instant,
     reply: Sender<Prediction>,
-}
-
-/// Lock-free log₂-bucketed latency histogram (microsecond resolution,
-/// power-of-two bucket widths). Quantiles report the upper bound of the
-/// bucket containing the target rank, so they are conservative by at
-/// most one bucket width.
-#[derive(Debug)]
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram::new()
-    }
-}
-
-impl LatencyHistogram {
-    const BUCKETS: usize = 40;
-
-    /// Empty histogram. Public so out-of-service measurement points
-    /// (e.g. the socket load generator's client-observed latencies) can
-    /// reuse the same bucketing and quantile math.
-    pub fn new() -> Self {
-        LatencyHistogram {
-            buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-        }
-    }
-
-    /// Record one sample.
-    pub fn record(&self, d: Duration) {
-        let us = (d.as_micros() as u64).max(1);
-        let idx = (us.ilog2() as usize).min(Self::BUCKETS - 1);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Total samples recorded.
-    pub fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
-    }
-
-    /// Latency at quantile `q` in (0, 1], e.g. `0.5` / `0.95` / `0.99`.
-    /// Zero when no samples have been recorded.
-    pub fn quantile(&self, q: f64) -> Duration {
-        let total = self.count();
-        if total == 0 {
-            return Duration::ZERO;
-        }
-        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return Duration::from_micros(1u64 << ((i as u32 + 1).min(63)));
-            }
-        }
-        Duration::from_micros(1u64 << (Self::BUCKETS as u32))
-    }
+    /// Sampled-tracing baton; `None` on the (overwhelmingly common)
+    /// unsampled path, so the request stays allocation-free.
+    trace: Option<Box<ReqTrace>>,
 }
 
 /// Per-model serving counters. All fields are lock-free atomics updated
@@ -545,6 +513,23 @@ impl Client {
         features: Vec<f32>,
         context: usize,
     ) -> Result<PendingPrediction, ServeError> {
+        self.submit_ctx_traced(features, context, None)
+    }
+
+    /// [`Client::submit_ctx`] carrying an open [`ReqTrace`] baton: the
+    /// serving worker closes the trace when the batch executes and the
+    /// echo surfaces on [`Prediction::trace`]. Pass `None` for the plain
+    /// untraced submit (what [`Client::submit_ctx`] does).
+    ///
+    /// # Panics
+    /// If `features.len()` does not match the model's input dimension,
+    /// or `context >= self.contexts()`.
+    pub fn submit_ctx_traced(
+        &self,
+        features: Vec<f32>,
+        context: usize,
+        trace: Option<Box<ReqTrace>>,
+    ) -> Result<PendingPrediction, ServeError> {
         assert_eq!(features.len(), self.core.features, "feature dim mismatch");
         assert!(
             context < self.core.contexts,
@@ -557,6 +542,7 @@ impl Client {
             context,
             submitted: Instant::now(),
             reply: reply_tx,
+            trace,
         };
         let shards = &self.core.shards;
         let n = shards.len();
@@ -705,6 +691,35 @@ pub struct InferenceService {
     /// (`Some` only when `tune_kernel_threads` applied); restored on
     /// drop so even error paths hand the budget back.
     prev_threads: Option<usize>,
+    /// The observability registry: one collector per model (registered
+    /// at startup, holding `Weak` core handles), plus whatever the net
+    /// layer registers on top. Shared so the net server can hang its
+    /// own collectors off the same snapshot.
+    registry: Arc<Registry>,
+}
+
+/// The samples one model contributes to a registry snapshot. All reads
+/// are relaxed loads of the same atomics [`ModelMetrics`] exposes.
+fn collect_model_samples(core: &ModelCore, out: &mut Vec<Sample>) {
+    let m = &core.metrics;
+    let l = || vec![("model", core.name.clone())];
+    out.push(Sample::counter("serve.requests", l(), m.requests.load(Ordering::Relaxed)));
+    out.push(Sample::counter("serve.rejected", l(), m.rejected.load(Ordering::Relaxed)));
+    out.push(Sample::counter("serve.batches", l(), m.batches.load(Ordering::Relaxed)));
+    out.push(Sample::counter("serve.padded_rows", l(), m.padded_rows.load(Ordering::Relaxed)));
+    out.push(Sample::counter("serve.stolen", l(), m.stolen.load(Ordering::Relaxed)));
+    out.push(Sample::counter(
+        "serve.quant_saturations",
+        l(),
+        m.quant_saturations.load(Ordering::Relaxed),
+    ));
+    out.push(Sample::counter("serve.act_active", l(), m.act_active.load(Ordering::Relaxed)));
+    out.push(Sample::counter("serve.act_total", l(), m.act_total.load(Ordering::Relaxed)));
+    out.push(Sample::gauge("serve.contexts", l(), core.contexts as f64));
+    out.push(Sample::gauge("serve.workers", l(), core.shards.len() as f64));
+    out.push(Sample::gauge("serve.occupancy_mean", l(), m.mean_occupancy()));
+    out.push(Sample::gauge("serve.act_density", l(), m.act_density()));
+    out.push(Sample::histogram("serve.latency", l(), &m.latency));
 }
 
 impl InferenceService {
@@ -855,6 +870,7 @@ impl InferenceService {
                 workers_per_model * n_models,
             ));
         }
+        let registry = Arc::new(Registry::new());
         let mut models: BTreeMap<String, Arc<ModelCore>> = BTreeMap::new();
         let mut handles = Vec::new();
         let mut ready = Vec::new();
@@ -899,6 +915,15 @@ impl InferenceService {
                     )
                 }));
             }
+            // Weak: the collector must never extend the core's lifetime
+            // (callers tear the service down and assert nothing still
+            // references it); after teardown it just contributes nothing
+            let weak = Arc::downgrade(&core);
+            registry.register(move |out| {
+                if let Some(core) = weak.upgrade() {
+                    collect_model_samples(&core, out);
+                }
+            });
             models.insert(core.name.clone(), core);
         }
         let svc = InferenceService {
@@ -906,6 +931,7 @@ impl InferenceService {
             workers: handles,
             cfg,
             prev_threads,
+            registry,
         };
         for (model, rx) in ready {
             let up = rx
@@ -933,9 +959,18 @@ impl InferenceService {
         })
     }
 
-    /// This model's metrics registry, if served.
+    /// This model's raw metrics struct, if served. Prefer
+    /// [`InferenceService::registry`] for a coherent cross-subsystem
+    /// snapshot; this accessor remains for targeted counter asserts.
     pub fn metrics(&self, model: &str) -> Option<&ModelMetrics> {
         self.models.get(model).map(|c| &c.metrics)
+    }
+
+    /// The observability registry every model reports into. The net
+    /// layer registers its own collectors here too, so one
+    /// `registry().snapshot()` covers serve + batcher + net counters.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Names of the models being served.
@@ -1270,6 +1305,10 @@ fn worker_loop(
         }
         for (ctx, group) in groups {
             let occupancy = group.len();
+            // stamp the execute window only when some request in this
+            // group is traced — the untraced path takes zero timestamps
+            let traced = group.iter().any(|r| r.trace.is_some());
+            let exec_start = traced.then(Instant::now);
             let best_classes: Vec<usize> = match &mut exec {
                 ExecPath::Prog {
                     prog,
@@ -1328,6 +1367,7 @@ fn worker_loop(
                     argmax_rows(&logits, occupancy, classes)
                 }
             };
+            let exec_end = traced.then(Instant::now);
             m.requests.fetch_add(occupancy as u64, Ordering::Relaxed);
             m.batches.fetch_add(1, Ordering::Relaxed);
             m.padded_rows.fetch_add((batch - occupancy) as u64, Ordering::Relaxed);
@@ -1335,12 +1375,20 @@ fn worker_loop(
             for (req, best) in group.into_iter().zip(best_classes) {
                 let latency = req.submitted.elapsed();
                 m.latency.record(latency);
+                let trace = req.trace.map(|tr| {
+                    tr.finish(
+                        exec_start.expect("exec window stamped when any request is traced"),
+                        exec_end.expect("exec window stamped when any request is traced"),
+                        w,
+                    )
+                });
                 let _ = req.reply.send(Prediction {
                     class: best,
                     latency,
                     batch_occupancy: occupancy,
                     worker: w,
                     context: ctx,
+                    trace,
                 });
             }
         }
@@ -1409,6 +1457,7 @@ mod tests {
                 context: 0,
                 submitted: Instant::now(),
                 reply: tx,
+                trace: None,
             },
             rx,
         )
@@ -1440,29 +1489,5 @@ mod tests {
             Err((ServeError::Stopped, _)) => {}
             _ => panic!("expected Stopped"),
         }
-    }
-
-    #[test]
-    fn latency_histogram_quantiles_are_monotonic() {
-        let h = LatencyHistogram::new();
-        for us in [1u64, 10, 100, 1000, 10_000] {
-            for _ in 0..20 {
-                h.record(Duration::from_micros(us));
-            }
-        }
-        assert_eq!(h.count(), 100);
-        let (p50, p95, p99) = (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99));
-        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
-        // 100us samples sit in the [64, 128)us bucket; its upper bound
-        // is the reported median
-        assert_eq!(p50, Duration::from_micros(128));
-        assert_eq!(h.quantile(1.0), Duration::from_micros(16_384));
-    }
-
-    #[test]
-    fn empty_histogram_reports_zero() {
-        let h = LatencyHistogram::new();
-        assert_eq!(h.count(), 0);
-        assert_eq!(h.quantile(0.99), Duration::ZERO);
     }
 }

@@ -22,6 +22,7 @@
 //! | [`net`] | Sec. III (network-edge analogue) | binary wire protocol, event-loop TCP front-end ([`net::NetServer`]: one reactor thread, thousands of connections), adaptive micro-batching into engine batches, blocking pipelined [`net::NetClient`] |
 //! | [`data`] | Sec. IV | synthetic class-conditional surrogates for MNIST / Reuters / TIMIT / CIFAR |
 //! | [`exp`] | Sec. IV figures/tables | the paper's experiment harnesses (`pds exp <id>`) |
+//! | [`obs`] | Sec. IV (measurement), arXiv:1806.01087 | unified observability: metrics registry + snapshot exposition, sampled request tracing (Chrome `trace_event` export), per-junction FF/BP/UP stage profiling |
 //! | [`util`] | — | in-tree rng / json / bench / property-test / fork-join replacements |
 //!
 //! See `ARCHITECTURE.md` (next to this crate) for the paper-figure →
@@ -47,4 +48,5 @@ pub mod runtime;
 pub mod coordinator;
 pub mod net;
 pub mod exp;
+pub mod obs;
 pub mod util;

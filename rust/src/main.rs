@@ -182,6 +182,9 @@ fn print_help() {
            simulate  --left 800 --right 100 --dout 20 --z 200\n\
            train     --config tiny [--dout 8,4] [--epochs 5] [--lr 1e-3] [--fc]\n\
                      [--pipeline] [--depth N] [--batch N] [--z0 N]\n\
+                     [--profile]  (with --pipeline: per-stage FF/BP/UP\n\
+                      profile — wall time + paper clock-cycle model per\n\
+                      junction — printed after training)\n\
                      [--quant-eval [Qm.n]]\n\
                      [--act-topk K | --act-threshold T]  (train sparse-sparse:\n\
                       keep only the K largest / >= T hidden activations per\n\
@@ -201,7 +204,12 @@ fn print_help() {
                       inference; composes with --quant; per-model metrics\n\
                       report the achieved activation density)\n\
                      [--listen ADDR [--batch-window USEC] [--max-conns N]\n\
-                      [--frame-timeout-ms MS]]\n\
+                      [--frame-timeout-ms MS] [--trace-sample N]\n\
+                      [--trace-out PATH]]\n\
+                     (--trace-sample N traces 1 in N requests through\n\
+                      net -> batcher -> engine; --trace-out writes the\n\
+                      span log as Chrome trace_event JSON at shutdown —\n\
+                      load it at chrome://tracing or ui.perfetto.dev)\n\
                      (--listen 127.0.0.1:0 starts the TCP front-end and\n\
                       serves until a client sends a shutdown frame;\n\
                       --batch-window is the micro-batcher's coalescing\n\
@@ -211,8 +219,12 @@ fn print_help() {
                       long a partial frame may dribble, default 5000)\n\
            client    --addr HOST:PORT [--model NAME] [--context 0]\n\
                      [--requests 16] [--pipeline 4] [--idle-conns 0]\n\
-                     [--seed 0] [--shutdown]\n\
+                     [--seed 0] [--trace] [--metrics-json] [--shutdown]\n\
                      (drives a `serve --listen` server over TCP;\n\
+                      --trace sends one traced request first and prints\n\
+                      the server's queue/batch/execute waterfall;\n\
+                      --metrics-json dumps the post-run metrics scrape\n\
+                      as one JSON line instead of prose;\n\
                       --idle-conns holds N extra idle connections open\n\
                       for the duration of the request loop;\n\
                       --shutdown asks the server to drain and exit)\n\
@@ -610,6 +622,7 @@ fn cmd_train_pipelined(
         seed,
         z0,
         tune_kernel_threads: true,
+        profile: opts.contains_key("profile"),
     };
     let mut session = PipelinedTrainSession::new(engine, config, pattern, &cfg)?;
     let t = session.trainer();
@@ -657,6 +670,10 @@ fn cmd_train_pipelined(
     );
     t.audit_banked()?;
     println!("banked weight audit clean: clash-free under the Fig. 4 port discipline");
+    if cfg.profile {
+        println!("-- per-stage profile --");
+        print!("{}", t.prof.report());
+    }
     if let Some(fmt) = parse_quant(opts, "quant-eval")? {
         t.audit_banked_quantized(fmt)?;
         println!("banked quantized weight audit clean ({fmt})");
@@ -764,10 +781,8 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
     for r in &reports {
         r.print();
     }
-    println!("-- metrics --");
-    for m in &models {
-        println!("{}", svc.metrics(m).unwrap().report(m));
-    }
+    println!("-- metrics (registry snapshot) --");
+    print!("{}", svc.registry().snapshot().report());
     svc.shutdown()?;
     Ok(())
 }
@@ -795,6 +810,12 @@ fn cmd_serve_listen(
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(5000);
+    let trace_sample: u64 = opts
+        .get("trace-sample")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let trace_out = opts.get("trace-out").cloned();
     let svc = std::sync::Arc::new(svc);
     let server = NetServer::start_tuned(
         std::sync::Arc::clone(&svc),
@@ -802,12 +823,16 @@ fn cmd_serve_listen(
         NetServerConfig {
             max_connections: max_conns,
             batch_window: Duration::from_micros(window_us),
+            trace_sample,
         },
         ReactorTuning {
             frame_timeout: Duration::from_millis(frame_timeout_ms),
             ..ReactorTuning::default()
         },
     )?;
+    // keep the sink alive past server teardown so --trace-out can
+    // export after the drain
+    let trace_sink = std::sync::Arc::clone(server.trace_sink());
     println!(
         "serving {models:?} — listening on {} (batch window {window_us}us, \
          max {max_conns} connections); send a shutdown frame to drain \
@@ -815,6 +840,9 @@ fn cmd_serve_listen(
         server.local_addr(),
         server.local_addr(),
     );
+    if trace_sample > 0 {
+        println!("request tracing: sampling 1 in {trace_sample} requests");
+    }
     server.run_until_shutdown();
     println!("shutdown requested: draining in-flight requests");
     // batcher handles survive the server teardown, so the summary below
@@ -840,6 +868,15 @@ fn cmd_serve_listen(
             );
         }
     }
+    if let Some(path) = &trace_out {
+        std::fs::write(path, trace_sink.to_chrome_json().to_string())
+            .map_err(|e| anyhow::anyhow!("--trace-out {path}: {e}"))?;
+        println!(
+            "wrote {} trace events to {path} ({} dropped at capacity)",
+            trace_sink.len(),
+            trace_sink.dropped(),
+        );
+    }
     // both Arcs must go before the unwrap: ours and the one the server
     // handed back
     drop(svc);
@@ -849,6 +886,20 @@ fn cmd_serve_listen(
     }
     println!("clean shutdown: network drained, engine workers joined");
     Ok(())
+}
+
+/// One row of the `client --trace` waterfall: stage name, microseconds,
+/// and a bar proportional to the stage's share of the server-side total.
+fn print_trace_bar(name: &str, us: u32, total: u32) {
+    const WIDTH: usize = 40;
+    let filled = if total == 0 {
+        0
+    } else {
+        ((us as usize * WIDTH).div_ceil(total as usize)).min(WIDTH)
+    };
+    let bar = "#".repeat(filled);
+    let pad = " ".repeat(WIDTH - filled);
+    println!("  {name:<8} {us:>9}us |{bar}{pad}|");
 }
 
 /// `client`: drive a `serve --listen` server over TCP.
@@ -919,6 +970,33 @@ fn cmd_client(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         info.contexts.max(1)
     );
     let mut rng = Rng::new(seed);
+    if opts.get("trace").map(String::as_str) == Some("true") {
+        // client-minted trace ID: the server honors it regardless of
+        // its own --trace-sample setting, so one-off waterfalls work
+        // against an otherwise-unsampled server
+        let trace_id = (seed << 8) | 0xA5;
+        let features: Vec<f32> =
+            (0..info.features as usize).map(|_| rng.normal()).collect();
+        let p = net
+            .classify_traced(&model, context, features, trace_id)
+            .map_err(|e| anyhow::anyhow!("traced request: {e}"))?;
+        match p.trace {
+            Some(echo) => {
+                println!(
+                    "trace {:#018x}: class {} (server latency {:?}, worker {})",
+                    echo.trace_id, p.class, p.latency, p.worker
+                );
+                let total = echo
+                    .queue_us
+                    .saturating_add(echo.batch_us)
+                    .saturating_add(echo.execute_us);
+                print_trace_bar("queue", echo.queue_us, total);
+                print_trace_bar("batch", echo.batch_us, total);
+                print_trace_bar("execute", echo.execute_us, total);
+            }
+            None => println!("server answered without a trace echo"),
+        }
+    }
     let mut served = 0usize;
     let mut occupancy_sum = 0u64;
     let mut busy_retries = 0usize;
@@ -962,14 +1040,18 @@ fn cmd_client(opts: &BTreeMap<String, String>) -> anyhow::Result<()> {
         occupancy_sum as f64 / served.max(1) as f64,
     );
     if let Ok(snap) = net.metrics(&model) {
-        println!(
-            "server metrics for {model}: {} served, {} engine batches, \
-             {} micro-batch flushes (mean coalesced {:.1})",
-            snap.requests,
-            snap.batches,
-            snap.net_flushes,
-            snap.mean_coalesced(),
-        );
+        if opts.get("metrics-json").map(String::as_str) == Some("true") {
+            println!("{}", snap.to_json());
+        } else {
+            println!(
+                "server metrics for {model}: {} served, {} engine batches, \
+                 {} micro-batch flushes (mean coalesced {:.1})",
+                snap.requests,
+                snap.batches,
+                snap.net_flushes,
+                snap.mean_coalesced(),
+            );
+        }
     }
     if opts.get("shutdown").map(String::as_str) == Some("true") {
         net.shutdown_server()

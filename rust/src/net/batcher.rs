@@ -48,6 +48,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Client, PendingPrediction, Prediction, ServeError};
+use crate::obs::registry::{Registry, Sample};
+use crate::obs::trace::ReqTrace;
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 /// Tuning knobs for one model's [`MicroBatcher`].
@@ -142,6 +144,11 @@ pub struct BatchItem {
     /// Invoked exactly once with the request's outcome, from a batcher
     /// thread.
     pub respond: Responder,
+    /// Live trace for a sampled request: the batcher stamps the queue
+    /// and dispatch marks on it and forwards it into the engine, which
+    /// finishes it into the [`crate::obs::trace::TraceEcho`] carried on
+    /// the prediction. `None` (the common case) costs nothing.
+    pub trace: Option<Box<ReqTrace>>,
 }
 
 /// A queued request stamped with its arrival time, so the flush
@@ -165,6 +172,29 @@ struct BatcherShared {
     metrics: BatcherMetrics,
 }
 
+/// Emit one batcher's counters as registry samples (`batcher.*`,
+/// labelled by model).
+fn collect_batcher_samples(shared: &BatcherShared, out: &mut Vec<Sample>) {
+    let m = &shared.metrics;
+    let l = || vec![("model", shared.client.model().to_string())];
+    let c = Ordering::Relaxed;
+    out.push(Sample::counter("batcher.flushes", l(), m.flushes.load(c)));
+    out.push(Sample::counter("batcher.coalesced", l(), m.coalesced.load(c)));
+    out.push(Sample::counter("batcher.full_flushes", l(), m.full_flushes.load(c)));
+    out.push(Sample::counter(
+        "batcher.deadline_flushes",
+        l(),
+        m.deadline_flushes.load(c),
+    ));
+    out.push(Sample::counter("batcher.rejected", l(), m.rejected.load(c)));
+    out.push(Sample::counter(
+        "batcher.responder_panics",
+        l(),
+        m.responder_panics.load(c),
+    ));
+    out.push(Sample::gauge("batcher.mean_coalesced", l(), m.mean_coalesced()));
+}
+
 /// Cloneable enqueue handle onto a [`MicroBatcher`] (what connection
 /// handlers hold; the batcher itself stays owned by the server for
 /// shutdown).
@@ -179,6 +209,10 @@ impl BatcherHandle {
     /// callback is invoked immediately with the error — every accepted
     /// call resolves exactly once, on some thread.
     pub fn enqueue(&self, item: BatchItem) {
+        let mut item = item;
+        if let Some(tr) = item.trace.as_mut() {
+            tr.mark_enqueued();
+        }
         let err = {
             let mut s = lock_unpoisoned(&self.shared.state);
             if s.stopped {
@@ -289,6 +323,19 @@ impl MicroBatcher {
         &self.shared.metrics
     }
 
+    /// Register this batcher's counters with `registry` under the
+    /// `batcher.*` names, labelled with the model it feeds. The
+    /// collector holds a weak reference, so registration never extends
+    /// the batcher's lifetime — after shutdown it contributes nothing.
+    pub fn register_collector(&self, registry: &Registry) {
+        let weak = Arc::downgrade(&self.shared);
+        registry.register(move |out| {
+            if let Some(shared) = weak.upgrade() {
+                collect_batcher_samples(&shared, out);
+            }
+        });
+    }
+
     /// Begin the drain without blocking: stop accepting new enqueues
     /// (they resolve with [`ServeError::Stopped`]) and make the
     /// collector flush already-queued requests immediately instead of
@@ -373,9 +420,18 @@ fn collector_loop(shared: Arc<BatcherShared>, groups: Sender<InFlightGroup>) {
         // full engine batches downstream
         let mut in_flight = Vec::with_capacity(group.len());
         for item in group {
-            match shared.client.submit_ctx(item.features, item.context) {
-                Ok(pending) => in_flight.push((pending, item.respond)),
-                Err(e) => deliver(&shared.metrics, item.respond, Err(e)),
+            let BatchItem {
+                features,
+                context,
+                respond,
+                mut trace,
+            } = item;
+            if let Some(tr) = trace.as_mut() {
+                tr.mark_dispatched();
+            }
+            match shared.client.submit_ctx_traced(features, context, trace) {
+                Ok(pending) => in_flight.push((pending, respond)),
+                Err(e) => deliver(&shared.metrics, respond, Err(e)),
             }
         }
         if !in_flight.is_empty() {
@@ -461,6 +517,7 @@ mod tests {
             handle.enqueue(BatchItem {
                 features: vec![0.25; features],
                 context: 0,
+                trace: None,
                 respond: Box::new(move |res| tx.send(res.map(|p| p.class)).unwrap()),
             });
         }
@@ -509,6 +566,7 @@ mod tests {
             handle.enqueue(BatchItem {
                 features: vec![0.1; features],
                 context: 0,
+                trace: None,
                 respond: Box::new(move |res| tx.send(res.is_ok()).unwrap()),
             });
         }
@@ -523,6 +581,7 @@ mod tests {
         handle.enqueue(BatchItem {
             features: vec![0.1; features],
             context: 0,
+            trace: None,
             respond: Box::new(move |res| {
                 tx2.send(matches!(res, Err(ServeError::Stopped))).unwrap()
             }),
@@ -555,6 +614,7 @@ mod tests {
             handle.enqueue(BatchItem {
                 features: vec![0.0; features],
                 context: 0,
+                trace: None,
                 respond: Box::new(move |res| {
                     tx.send(matches!(res, Err(ServeError::Busy))).unwrap()
                 }),
@@ -602,6 +662,7 @@ mod tests {
         handle.enqueue(BatchItem {
             features: vec![0.5; features],
             context: 0,
+            trace: None,
             respond: Box::new(|_res| panic!("deliberately broken responder")),
         });
         // the poisoned delivery must not stop this one from resolving
@@ -609,6 +670,7 @@ mod tests {
         handle.enqueue(BatchItem {
             features: vec![0.5; features],
             context: 0,
+            trace: None,
             respond: Box::new(move |res| tx.send(res.map(|p| p.class)).unwrap()),
         });
         let class = rx

@@ -14,8 +14,10 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::wire::{
-    encode_request, read_frame, ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError,
+    encode_request, encode_request_traced, read_frame, ErrorCode, Frame, MetricsSnapshot,
+    ModelInfo, WireError,
 };
+use crate::obs::trace::TraceEcho;
 
 /// Why a client call failed.
 #[derive(Debug)]
@@ -98,6 +100,10 @@ pub struct NetPrediction {
     pub batch_occupancy: usize,
     /// Index of the engine worker that ran the batch.
     pub worker: usize,
+    /// Per-stage timing echo for a traced request (`None` for the
+    /// untraced common case): queue wait, batch wait, and execute time
+    /// as measured server-side, keyed by the trace ID.
+    pub trace: Option<TraceEcho>,
 }
 
 /// Server health as reported by a `HealthReply` frame.
@@ -201,7 +207,7 @@ impl NetClient {
         let mut seen = 0usize;
         while seen < n {
             match self.read()? {
-                Frame::Response { id, class, latency_us, batch_occupancy, worker }
+                Frame::Response { id, class, latency_us, batch_occupancy, worker, trace }
                     if id >= first_id && id < first_id + n as u64 =>
                 {
                     let slot = (id - first_id) as usize;
@@ -213,6 +219,7 @@ impl NetClient {
                         latency: Duration::from_micros(latency_us),
                         batch_occupancy: batch_occupancy as usize,
                         worker: worker as usize,
+                        trace,
                     }));
                 }
                 Frame::Error { id, code, message }
@@ -241,6 +248,41 @@ impl NetClient {
             .into_iter()
             .map(|r| r.expect("all slots filled"))
             .collect()
+    }
+
+    /// Classify one feature vector with an explicit client-minted trace
+    /// ID. The server honors the ID regardless of its own sampling
+    /// setting, records the request's span tree in its trace sink, and
+    /// echoes the queue/batch/execute breakdown on the prediction —
+    /// what `pds client --trace` prints as a waterfall.
+    pub fn classify_traced(
+        &mut self,
+        model: &str,
+        context: u32,
+        features: Vec<f32>,
+        trace_id: u64,
+    ) -> Result<NetPrediction, NetClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream
+            .write_all(&encode_request_traced(id, model, context, &features, trace_id))?;
+        match self.read()? {
+            Frame::Response { id: rid, class, latency_us, batch_occupancy, worker, trace }
+                if rid == id =>
+            {
+                Ok(NetPrediction {
+                    class: class as usize,
+                    latency: Duration::from_micros(latency_us),
+                    batch_occupancy: batch_occupancy as usize,
+                    worker: worker as usize,
+                    trace,
+                })
+            }
+            Frame::Error { code, message, .. } => {
+                Err(NetClientError::from_error_frame(code, message))
+            }
+            _ => Err(NetClientError::Unexpected),
+        }
     }
 
     /// Fetch the server's health summary (drain state, connection

@@ -315,7 +315,13 @@ mod tests {
     #[test]
     fn parses_a_frame_dribbled_byte_by_byte() {
         let (mut conn, mut peer) = conn_pair();
-        let frame = Frame::Request { id: 42, model: "tiny".into(), context: 1, features: vec![0.5, -0.25] };
+        let frame = Frame::Request {
+            id: 42,
+            model: "tiny".into(),
+            context: 1,
+            features: vec![0.5, -0.25],
+            trace: Some(7),
+        };
         let bytes = frame.encode();
         for (i, b) in bytes.iter().enumerate() {
             peer.write_all(std::slice::from_ref(b)).unwrap();
@@ -337,11 +343,12 @@ mod tests {
             }
         }
         match conn.next_frame() {
-            Some(Ok(Frame::Request { id, model, context, features })) => {
+            Some(Ok(Frame::Request { id, model, context, features, trace })) => {
                 assert_eq!(id, 42);
                 assert_eq!(model, "tiny");
                 assert_eq!(context, 1);
                 assert_eq!(features, vec![0.5, -0.25]);
+                assert_eq!(trace, Some(7));
             }
             other => panic!("expected parsed request, got {other:?}"),
         }

@@ -22,7 +22,10 @@
 //!   the listener and thousands of connections, fronting an
 //!   [`crate::coordinator::InferenceService`], with a connection cap
 //!   with explicit `Busy` shed, graceful drain-then-shutdown, and
-//!   health/metrics frames wired to [`crate::coordinator::ModelMetrics`].
+//!   health/metrics frames answered from the service's
+//!   [`crate::obs::Registry`] snapshot, and a trace front door minting
+//!   sampled request traces (`--trace-sample`, Chrome `trace_event`
+//!   export via `--trace-out`).
 //! - [`batcher`] — [`MicroBatcher`]: adaptive micro-batching (flush on
 //!   engine-batch-full or batch-window deadline, whichever first) that
 //!   turns concurrent socket traffic into coalesced engine batches

@@ -59,6 +59,8 @@ use super::poll::{
 };
 use super::wire::{ErrorCode, Frame, MetricsSnapshot, ModelInfo, WireError};
 use crate::coordinator::{InferenceService, ServeError};
+use crate::obs::registry::Sample;
+use crate::obs::trace::{ReqTrace, Sampler, TraceSink};
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 
 /// Poll-set token of the listening socket.
@@ -97,6 +99,12 @@ pub struct NetServerConfig {
     /// (CLI: `serve --listen ... --batch-window USEC`; 0 = flush every
     /// request immediately).
     pub batch_window: Duration,
+    /// Trace one request in every `trace_sample` (CLI:
+    /// `serve --listen ... --trace-sample N`; 0 disables sampling —
+    /// the default — leaving only the single-branch sampler check on
+    /// the request path). Client-requested traces (a v4 `Request`
+    /// carrying a trace ID) are honored regardless of this setting.
+    pub trace_sample: u64,
 }
 
 impl Default for NetServerConfig {
@@ -104,6 +112,7 @@ impl Default for NetServerConfig {
         NetServerConfig {
             max_connections: 1024,
             batch_window: Duration::from_millis(1),
+            trace_sample: 0,
         }
     }
 }
@@ -178,6 +187,11 @@ struct ServerShared {
     shutdown_requested: Mutex<bool>,
     shutdown_cv: Condvar,
     metrics: NetMetrics,
+    /// Mints trace IDs for sampled requests (disabled at `--trace-sample 0`:
+    /// one branch per request, nothing else).
+    sampler: Sampler,
+    /// Collects span events from every sampled request's trace.
+    trace_sink: Arc<TraceSink>,
     /// Per-model enqueue handles (immutable after startup).
     batchers: BTreeMap<String, BatcherHandle>,
     /// Wakes the reactor's poll when a responder queues output.
@@ -206,6 +220,29 @@ impl ServerShared {
                 .collect(),
         }
     }
+}
+
+/// Emit the server-level counters as registry samples (`net.*`, no
+/// labels — there is one front door per service).
+fn collect_net_samples(shared: &ServerShared, out: &mut Vec<Sample>) {
+    let m = &shared.metrics;
+    let c = Ordering::Relaxed;
+    let no = Vec::new;
+    out.push(Sample::counter("net.accepted_connections", no(), m.accepted.load(c)));
+    out.push(Sample::counter(
+        "net.rejected_connections",
+        no(),
+        m.rejected_connections.load(c),
+    ));
+    out.push(Sample::counter("net.accept_errors", no(), m.accept_errors.load(c)));
+    out.push(Sample::counter("net.requests", no(), m.requests.load(c)));
+    out.push(Sample::counter("net.responses", no(), m.responses.load(c)));
+    out.push(Sample::counter("net.errors", no(), m.errors.load(c)));
+    out.push(Sample::counter("net.wire_errors", no(), m.wire_errors.load(c)));
+    out.push(Sample::gauge("net.active", no(), m.active.load(c) as f64));
+    out.push(Sample::gauge("net.peak_active", no(), m.peak_active.load(c) as f64));
+    out.push(Sample::counter("net.trace_events", no(), shared.trace_sink.len() as u64));
+    out.push(Sample::counter("net.trace_dropped", no(), shared.trace_sink.dropped()));
 }
 
 /// Queue one frame into a connection's outbox, counting it in the
@@ -273,6 +310,9 @@ impl NetServer {
             let client = svc.client(&model)?;
             let bcfg = BatcherConfig::for_client(&client, cfg.batch_window);
             let b = MicroBatcher::start(client, bcfg);
+            // batcher counters join the service's registry, so one
+            // snapshot covers engine + coalescing + (below) net counters
+            b.register_collector(svc.registry());
             handles.insert(model, b.handle());
             batchers.push(b);
         }
@@ -283,9 +323,20 @@ impl NetServer {
             shutdown_requested: Mutex::new(false),
             shutdown_cv: Condvar::new(),
             metrics: NetMetrics::default(),
+            sampler: Sampler::new(cfg.trace_sample),
+            trace_sink: Arc::new(TraceSink::new(TraceSink::DEFAULT_CAP)),
             batchers: handles,
             waker,
             dirty: Mutex::new(Vec::new()),
+        });
+        // Weak: the registry (owned by the service, which outlives this
+        // server) must not keep the drained server's state alive — the
+        // shutdown path hands the service Arc back to the owner
+        let weak = Arc::downgrade(&shared);
+        svc.registry().register(move |out| {
+            if let Some(shared) = weak.upgrade() {
+                collect_net_samples(&shared, out);
+            }
         });
         let reactor = {
             let shared = Arc::clone(&shared);
@@ -330,6 +381,14 @@ impl NetServer {
     /// Network-layer counters.
     pub fn metrics(&self) -> &NetMetrics {
         &self.shared.metrics
+    }
+
+    /// The span sink sampled request traces record into. Clone the
+    /// `Arc` before [`NetServer::shutdown`] to export
+    /// [`TraceSink::to_chrome_json`] after the drain (the CLI's
+    /// `serve --trace-out PATH` does exactly that).
+    pub fn trace_sink(&self) -> &Arc<TraceSink> {
+        &self.shared.trace_sink
     }
 
     /// The served models' metrics snapshot as sent to clients
@@ -430,25 +489,37 @@ pub fn model_metrics_snapshot(
     batcher: &BatcherHandle,
 ) -> Option<MetricsSnapshot> {
     let model = batcher.model().to_string();
-    let m = svc.metrics(&model)?;
+    // one coherent registry snapshot feeds the whole frame: engine
+    // counters (registered at service start) and, when this batcher ran
+    // under a NetServer, its coalescing counters too. A standalone
+    // batcher (tests, post-shutdown reporting without a server) was
+    // never registered — fall back to its own atomics for those two.
+    let snap = svc.registry().snapshot();
+    let labels: &[(&str, &str)] = &[("model", &model)];
+    let requests = snap.counter("serve.requests", labels)?;
+    let hist = snap.histogram("serve.latency", labels).unwrap_or_default();
     let bm = batcher.metrics();
     Some(MetricsSnapshot {
-        model,
         contexts: batcher.contexts() as u64,
-        requests: m.requests.load(Ordering::Relaxed),
-        rejected: m.rejected.load(Ordering::Relaxed),
-        batches: m.batches.load(Ordering::Relaxed),
-        padded_rows: m.padded_rows.load(Ordering::Relaxed),
-        stolen: m.stolen.load(Ordering::Relaxed),
-        quant_saturations: m.quant_saturations.load(Ordering::Relaxed),
-        p50_us: m.latency.quantile(0.50).as_micros() as u64,
-        p95_us: m.latency.quantile(0.95).as_micros() as u64,
-        p99_us: m.latency.quantile(0.99).as_micros() as u64,
-        mean_occupancy: m.mean_occupancy(),
-        net_flushes: bm.flushes.load(Ordering::Relaxed),
-        net_coalesced: bm.coalesced.load(Ordering::Relaxed),
+        requests,
+        rejected: snap.counter("serve.rejected", labels).unwrap_or(0),
+        batches: snap.counter("serve.batches", labels).unwrap_or(0),
+        padded_rows: snap.counter("serve.padded_rows", labels).unwrap_or(0),
+        stolen: snap.counter("serve.stolen", labels).unwrap_or(0),
+        quant_saturations: snap.counter("serve.quant_saturations", labels).unwrap_or(0),
+        p50_us: hist.p50_us,
+        p95_us: hist.p95_us,
+        p99_us: hist.p99_us,
+        mean_occupancy: snap.gauge("serve.occupancy_mean", labels).unwrap_or(0.0),
+        net_flushes: snap
+            .counter("batcher.flushes", labels)
+            .unwrap_or_else(|| bm.flushes.load(Ordering::Relaxed)),
+        net_coalesced: snap
+            .counter("batcher.coalesced", labels)
+            .unwrap_or_else(|| bm.coalesced.load(Ordering::Relaxed)),
         net_accept_errors: 0,
         net_shed_connections: 0,
+        model,
     })
 }
 
@@ -759,8 +830,8 @@ impl Reactor {
     /// flipped to [`ConnState::Closing`] (stop parsing its buffer).
     fn dispatch(&mut self, idx: usize, frame: Frame, now: Instant) -> bool {
         match frame {
-            Frame::Request { id, model, context, features } => {
-                self.handle_request(idx, id, model, context, features);
+            Frame::Request { id, model, context, features, trace } => {
+                self.handle_request(idx, id, model, context, features, trace);
                 true
             }
             Frame::HealthRequest => {
@@ -826,6 +897,7 @@ impl Reactor {
         model: String,
         context: u32,
         features: Vec<f32>,
+        trace: Option<u64>,
     ) {
         if self.shared.stop.load(Ordering::Acquire) {
             self.queue_frame(
@@ -889,20 +961,43 @@ impl Reactor {
         else {
             return;
         };
+        // the trace is minted here, at the front door: a client-supplied
+        // trace ID wins, otherwise the sampler decides (one branch when
+        // sampling is off). The ReqTrace rides the request through the
+        // batcher and engine; the enclosing "net" span is recorded by
+        // the responder below, from the trace's birth to reply-queueing.
+        let req_trace = trace
+            .or_else(|| self.shared.sampler.sample())
+            .map(|tid| ReqTrace::new(tid, Arc::clone(&self.shared.trace_sink)));
+        let net_t0 = req_trace.as_ref().map(|tr| tr.t0());
         in_flight.fetch_add(1, Ordering::AcqRel);
         let shared = Arc::clone(&self.shared);
         batcher.enqueue(BatchItem {
             features,
             context: context as usize,
+            trace: req_trace,
             respond: Box::new(move |res| {
                 let frame = match res {
-                    Ok(p) => Frame::Response {
-                        id,
-                        class: p.class as u32,
-                        latency_us: p.latency.as_micros() as u64,
-                        batch_occupancy: p.batch_occupancy as u32,
-                        worker: p.worker as u32,
-                    },
+                    Ok(p) => {
+                        if let (Some(echo), Some(t0)) = (p.trace, net_t0) {
+                            shared.trace_sink.record(
+                                echo.trace_id,
+                                "net",
+                                "net",
+                                t0,
+                                Instant::now(),
+                                0,
+                            );
+                        }
+                        Frame::Response {
+                            id,
+                            class: p.class as u32,
+                            latency_us: p.latency.as_micros() as u64,
+                            batch_occupancy: p.batch_occupancy as u32,
+                            worker: p.worker as u32,
+                            trace: p.trace,
+                        }
+                    }
                     Err(e) => Frame::Error {
                         id,
                         code: code_for(e),

@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic  "PD" (0x50 0x44)
-//! 2       1     protocol version (currently 3)
+//! 2       1     protocol version (currently 4)
 //! 3       1     frame type tag (see the table on [`Frame`])
 //! 4       4     payload length, u32 little-endian
 //! 8       len   payload (per-type layout, all integers little-endian)
@@ -32,7 +32,11 @@
 #![deny(clippy::cast_possible_truncation)]
 #![deny(clippy::lossy_float_literal)]
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
+
+use crate::obs::trace::TraceEcho;
+use crate::util::json::Json;
 
 /// First two header bytes of every frame.
 pub const MAGIC: [u8; 2] = *b"PD";
@@ -43,8 +47,11 @@ pub const MAGIC: [u8; 2] = *b"PD";
 /// added the reactor's server-level counters to [`MetricsSnapshot`]:
 /// `net_accept_errors` and `net_shed_connections` (the strict decoder
 /// rejects trailing bytes, so any snapshot layout change is a lockstep
-/// version bump).
-pub const VERSION: u8 = 3;
+/// version bump). Version 4 added the optional trace fields for sampled
+/// request tracing: a trailing flag + trace_id on `Request` and a
+/// trailing flag + [`TraceEcho`] (trace_id, queue/batch/execute µs) on
+/// `Response`.
+pub const VERSION: u8 = 4;
 /// Fixed header size in bytes (magic + version + type + payload length).
 pub const HEADER_LEN: usize = 8;
 /// Hard cap on the declared payload length. A header announcing more is
@@ -193,14 +200,39 @@ impl MetricsSnapshot {
             self.net_coalesced as f64 / self.net_flushes as f64
         }
     }
+
+    /// Stable JSON form of the snapshot (one key per wire field, plus
+    /// the derived `mean_coalesced`). Used by `pds client
+    /// --metrics-json` and validated against a pinned schema in CI.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("requests".into(), Json::Num(self.requests as f64));
+        o.insert("rejected".into(), Json::Num(self.rejected as f64));
+        o.insert("batches".into(), Json::Num(self.batches as f64));
+        o.insert("padded_rows".into(), Json::Num(self.padded_rows as f64));
+        o.insert("stolen".into(), Json::Num(self.stolen as f64));
+        o.insert("quant_saturations".into(), Json::Num(self.quant_saturations as f64));
+        o.insert("p50_us".into(), Json::Num(self.p50_us as f64));
+        o.insert("p95_us".into(), Json::Num(self.p95_us as f64));
+        o.insert("p99_us".into(), Json::Num(self.p99_us as f64));
+        o.insert("mean_occupancy".into(), Json::Num(self.mean_occupancy));
+        o.insert("net_flushes".into(), Json::Num(self.net_flushes as f64));
+        o.insert("net_coalesced".into(), Json::Num(self.net_coalesced as f64));
+        o.insert("mean_coalesced".into(), Json::Num(self.mean_coalesced()));
+        o.insert("net_accept_errors".into(), Json::Num(self.net_accept_errors as f64));
+        o.insert("net_shed_connections".into(), Json::Num(self.net_shed_connections as f64));
+        o.insert("contexts".into(), Json::Num(self.contexts as f64));
+        Json::Obj(o)
+    }
 }
 
 /// One protocol frame.
 ///
 /// | tag | variant | direction | payload |
 /// |-----|---------|-----------|---------|
-/// | 1 | `Request` | client → server | id u64, model string, context u32, features `[f32]` |
-/// | 2 | `Response` | server → client | id u64, class u32, latency_us u64, batch_occupancy u32, worker u32 |
+/// | 1 | `Request` | client → server | id u64, model string, context u32, features `[f32]`, trace flag u8 (1 ⇒ + trace_id u64) |
+/// | 2 | `Response` | server → client | id u64, class u32, latency_us u64, batch_occupancy u32, worker u32, trace flag u8 (1 ⇒ + trace_id u64, queue_us u32, batch_us u32, execute_us u32) |
 /// | 3 | `Error` | server → client | id u64 (0 = connection-level), code u8, message string |
 /// | 4 | `HealthRequest` | client → server | empty |
 /// | 5 | `HealthReply` | server → client | draining u8, active_connections u32, models `[ModelInfo]` |
@@ -222,6 +254,10 @@ pub enum Frame {
         context: u32,
         /// Input feature vector; must match the model's input dimension.
         features: Vec<f32>,
+        /// Client-requested trace ID: `Some` asks the server to trace
+        /// this request end to end and echo the stage timings in the
+        /// response, regardless of the server's sampling rate.
+        trace: Option<u64>,
     },
     /// A completed classification.
     Response {
@@ -235,6 +271,9 @@ pub enum Frame {
         batch_occupancy: u32,
         /// Index of the engine worker that ran the batch.
         worker: u32,
+        /// Per-stage timing echo, present when the request was traced
+        /// (client-requested or server-sampled).
+        trace: Option<TraceEcho>,
     },
     /// A failed request (`id` != 0) or a connection-level fault
     /// (`id` == 0, e.g. an undecodable frame or a connection-cap
@@ -460,15 +499,25 @@ impl Frame {
     #[allow(clippy::cast_possible_truncation)]
     fn encode_payload(&self, out: &mut Vec<u8>) {
         match self {
-            Frame::Request { id, model, context, features } => {
-                request_payload(out, *id, model, *context, features);
+            Frame::Request { id, model, context, features, trace } => {
+                request_payload(out, *id, model, *context, features, *trace);
             }
-            Frame::Response { id, class, latency_us, batch_occupancy, worker } => {
+            Frame::Response { id, class, latency_us, batch_occupancy, worker, trace } => {
                 put_u64(out, *id);
                 put_u32(out, *class);
                 put_u64(out, *latency_us);
                 put_u32(out, *batch_occupancy);
                 put_u32(out, *worker);
+                match trace {
+                    None => out.push(0),
+                    Some(t) => {
+                        out.push(1);
+                        put_u64(out, t.trace_id);
+                        put_u32(out, t.queue_us);
+                        put_u32(out, t.batch_us);
+                        put_u32(out, t.execute_us);
+                    }
+                }
             }
             Frame::Error { id, code, message } => {
                 put_u64(out, *id);
@@ -552,30 +601,68 @@ impl Frame {
 
 /// The `Request` payload layout, shared by [`Frame::encode`] and
 /// [`encode_request`] so the two can never diverge.
-fn request_payload(out: &mut Vec<u8>, id: u64, model: &str, context: u32, features: &[f32]) {
+fn request_payload(
+    out: &mut Vec<u8>,
+    id: u64,
+    model: &str,
+    context: u32,
+    features: &[f32],
+    trace: Option<u64>,
+) {
     put_u64(out, id);
     put_str(out, model);
     put_u32(out, context);
     put_f32s(out, features);
+    match trace {
+        None => out.push(0),
+        Some(t) => {
+            out.push(1);
+            put_u64(out, t);
+        }
+    }
 }
 
-/// Encode a complete `Request` frame from borrowed data — bit-identical
-/// to `Frame::Request { .. }.encode()` (a unit test pins it) but
-/// without cloning the feature vector into a `Frame` first. This is
-/// the hot path of [`crate::net::NetClient::classify_pipelined`].
 // length fits u32: asserted <= MAX_PAYLOAD on the line above the cast
 #[allow(clippy::cast_possible_truncation)]
-pub fn encode_request(id: u64, model: &str, context: u32, features: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(HEADER_LEN + 18 + model.len() + 4 * features.len());
+fn encode_request_with(
+    id: u64,
+    model: &str,
+    context: u32,
+    features: &[f32],
+    trace: Option<u64>,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 27 + model.len() + 4 * features.len());
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
     out.push(T_REQUEST);
     out.extend_from_slice(&[0u8; 4]);
-    request_payload(&mut out, id, model, context, features);
+    request_payload(&mut out, id, model, context, features, trace);
     let len = out.len() - HEADER_LEN;
     assert!(len <= MAX_PAYLOAD, "frame payload exceeds MAX_PAYLOAD");
     out[4..8].copy_from_slice(&(len as u32).to_le_bytes());
     out
+}
+
+/// Encode a complete untraced `Request` frame from borrowed data —
+/// bit-identical to `Frame::Request { trace: None, .. }.encode()` (a
+/// unit test pins it) but without cloning the feature vector into a
+/// `Frame` first. This is the hot path of
+/// [`crate::net::NetClient::classify_pipelined`].
+pub fn encode_request(id: u64, model: &str, context: u32, features: &[f32]) -> Vec<u8> {
+    encode_request_with(id, model, context, features, None)
+}
+
+/// Encode a `Request` frame carrying a client-chosen trace ID — the
+/// traced twin of [`encode_request`], bit-identical to
+/// `Frame::Request { trace: Some(trace_id), .. }.encode()`.
+pub fn encode_request_traced(
+    id: u64,
+    model: &str,
+    context: u32,
+    features: &[f32],
+    trace_id: u64,
+) -> Vec<u8> {
+    encode_request_with(id, model, context, features, Some(trace_id))
 }
 
 /// Validate a raw header; returns the frame type tag and payload length.
@@ -598,19 +685,36 @@ fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
 fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
     let mut c = Cursor::new(payload);
     let frame = match ftype {
-        T_REQUEST => Frame::Request {
-            id: c.u64()?,
-            model: c.string()?,
-            context: c.u32()?,
-            features: c.f32s()?,
-        },
-        T_RESPONSE => Frame::Response {
-            id: c.u64()?,
-            class: c.u32()?,
-            latency_us: c.u64()?,
-            batch_occupancy: c.u32()?,
-            worker: c.u32()?,
-        },
+        T_REQUEST => {
+            let id = c.u64()?;
+            let model = c.string()?;
+            let context = c.u32()?;
+            let features = c.f32s()?;
+            let trace = match c.u8()? {
+                0 => None,
+                1 => Some(c.u64()?),
+                _ => return Err(WireError::Malformed("request trace flag not 0/1")),
+            };
+            Frame::Request { id, model, context, features, trace }
+        }
+        T_RESPONSE => {
+            let id = c.u64()?;
+            let class = c.u32()?;
+            let latency_us = c.u64()?;
+            let batch_occupancy = c.u32()?;
+            let worker = c.u32()?;
+            let trace = match c.u8()? {
+                0 => None,
+                1 => Some(TraceEcho {
+                    trace_id: c.u64()?,
+                    queue_us: c.u32()?,
+                    batch_us: c.u32()?,
+                    execute_us: c.u32()?,
+                }),
+                _ => return Err(WireError::Malformed("response trace flag not 0/1")),
+            };
+            Frame::Response { id, class, latency_us, batch_occupancy, worker, trace }
+        }
         T_ERROR => Frame::Error {
             id: c.u64()?,
             code: ErrorCode::from_u8(c.u8()?)
@@ -764,6 +868,14 @@ mod tests {
                 model: "tiny".into(),
                 context: 2,
                 features: vec![0.5, -1.25, 3.0],
+                trace: None,
+            },
+            Frame::Request {
+                id: 8,
+                model: "tiny".into(),
+                context: 0,
+                features: vec![1.0],
+                trace: Some(0xABCD_EF01),
             },
             Frame::Response {
                 id: 7,
@@ -771,6 +883,20 @@ mod tests {
                 latency_us: 1234,
                 batch_occupancy: 5,
                 worker: 1,
+                trace: None,
+            },
+            Frame::Response {
+                id: 8,
+                class: 0,
+                latency_us: 900,
+                batch_occupancy: 2,
+                worker: 0,
+                trace: Some(TraceEcho {
+                    trace_id: 0xABCD_EF01,
+                    queue_us: 120,
+                    batch_us: 340,
+                    execute_us: 560,
+                }),
             },
             Frame::Error {
                 id: 9,
@@ -850,6 +976,7 @@ mod tests {
             model: "m".into(),
             context: 0,
             features: vec![1.0, 2.0],
+            trace: Some(9),
         }
         .encode();
         for cut in 0..bytes.len() {
@@ -877,10 +1004,27 @@ mod tests {
             model: "m".into(),
             context: 0,
             features: vec![],
+            trace: None,
+        }
+        .encode();
+        // the f32 count sits just before the trailing trace flag byte
+        let n = bytes.len();
+        bytes[n - 5..n - 1].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn trace_flag_must_be_0_or_1() {
+        let mut bytes = Frame::Request {
+            id: 1,
+            model: "m".into(),
+            context: 0,
+            features: vec![],
+            trace: None,
         }
         .encode();
         let n = bytes.len();
-        bytes[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        bytes[n - 1] = 2;
         assert!(matches!(Frame::decode(&bytes), Err(WireError::Malformed(_))));
     }
 
@@ -893,10 +1037,31 @@ mod tests {
                 id,
                 model: model.to_string(),
                 context,
-                features,
+                features: features.clone(),
+                trace: None,
             }
             .encode()
         );
+        assert_eq!(
+            encode_request_traced(id, model, context, &features, 77),
+            Frame::Request {
+                id,
+                model: model.to_string(),
+                context,
+                features,
+                trace: Some(77),
+            }
+            .encode()
+        );
+    }
+
+    #[test]
+    fn v3_frames_are_version_rejected() {
+        // a v3 build writes version byte 3; this build must reject it
+        // with UnknownVersion(3), never attempt a cross-version decode
+        let mut bytes = Frame::HealthRequest.encode();
+        bytes[2] = 3;
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::UnknownVersion(3))));
     }
 
     #[test]
@@ -910,6 +1075,28 @@ mod tests {
             assert_eq!(read_frame(&mut r).unwrap(), Some(f));
         }
         assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF between frames");
+    }
+
+    #[test]
+    fn metrics_snapshot_to_json_has_every_field() {
+        let Some(Frame::MetricsReply(s)) = sample_frames()
+            .into_iter()
+            .find(|f| matches!(f, Frame::MetricsReply(_)))
+        else {
+            unreachable!("sample_frames always contains a MetricsReply")
+        };
+        let doc = Json::parse(&s.to_json().to_string()).unwrap();
+        for key in [
+            "requests", "rejected", "batches", "padded_rows", "stolen",
+            "quant_saturations", "p50_us", "p95_us", "p99_us", "mean_occupancy",
+            "net_flushes", "net_coalesced", "mean_coalesced", "net_accept_errors",
+            "net_shed_connections", "contexts",
+        ] {
+            assert!(doc.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(doc.get("model").unwrap().as_str(), Some("tiny"));
+        assert_eq!(doc.get("requests").unwrap().as_usize(), Some(100));
+        assert_eq!(doc.get("mean_coalesced").unwrap().as_f64(), Some(5.0));
     }
 
     #[test]

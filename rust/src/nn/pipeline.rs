@@ -45,6 +45,8 @@
 //! its own weight staleness, which tests compare against the closed form
 //! `Pipeline::staleness` / `Pipeline::measured_staleness`.
 
+use std::time::{Duration, Instant};
+
 use anyhow::{ensure, Result};
 
 use crate::data::Dataset;
@@ -56,6 +58,7 @@ use crate::nn::adam::{AdamConfig, AdamState};
 use crate::nn::sparse::SparseNet;
 use crate::nn::trainer::{EpochStat, History};
 use crate::nn::{relu, softmax_ce};
+use crate::obs::prof::{Stage, StageProf};
 use crate::sparsity::pattern::NetPattern;
 use crate::util::parallel;
 use crate::util::rng::Rng;
@@ -87,6 +90,10 @@ pub struct PipelineConfig {
     /// even on panic). Off by default so tests don't touch the global
     /// override.
     pub tune_kernel_threads: bool,
+    /// Record per-junction FF/BP/UP wall time and modelled clocks into
+    /// [`PipelinedTrainer::prof`] (CLI: `train --profile`). Off by
+    /// default: the disabled path takes zero timestamps.
+    pub profile: bool,
 }
 
 impl Default for PipelineConfig {
@@ -100,6 +107,7 @@ impl Default for PipelineConfig {
             seed: 0,
             z0: 0,
             tune_kernel_threads: false,
+            profile: false,
         }
     }
 }
@@ -231,6 +239,11 @@ pub struct PipelinedTrainer {
     probes: Vec<StalenessProbe>,
     /// Execution counters, cumulative over this trainer's runs.
     pub metrics: PipelineMetrics,
+    /// Per-junction FF/BP/UP stage profile, cumulative over this
+    /// trainer's runs; recording only when [`PipelineConfig::profile`]
+    /// was set. The modelled clock cost per op at junction `j` is the
+    /// paper's `ceil(E_j / z_j)` over the audited banked geometry.
+    pub prof: StageProf,
 }
 
 impl PipelinedTrainer {
@@ -316,6 +329,14 @@ impl PipelinedTrainer {
             .iter()
             .map(|j| (AdamState::zeros(j.wc.len()), AdamState::zeros(j.bias.len())))
             .collect();
+        // modelled clock cost per op: ceil(E_j / z_j) over the audited
+        // banked geometry — the same quantity the hw simulator charges
+        let cycles_per_op: Vec<u64> = edges
+            .iter()
+            .zip(&zcfg.z)
+            .map(|(&e, &z)| e.div_ceil(z.max(1)) as u64)
+            .collect();
+        let prof = StageProf::new(cycles_per_op, cfg.profile);
         Ok(PipelinedTrainer {
             probes: vec![StalenessProbe::default(); l],
             versions: vec![0; l],
@@ -328,6 +349,7 @@ impl PipelinedTrainer {
             net,
             cfg,
             metrics: PipelineMetrics::default(),
+            prof,
         })
     }
 
@@ -536,16 +558,24 @@ impl PipelinedTrainer {
         let net = &self.net;
         let fl: &[Flight] = flights;
         let l2 = self.cfg.l2;
-        let results: Vec<OpOut> = if ops.len() == 1 {
-            vec![exec_op(net, fl, l2, l, ops[0])]
+        // profiling stamps wall time around each op inside its stage
+        // thread; disabled, no timestamp is ever taken
+        let profiling = self.prof.enabled();
+        let timed = move |op: (usize, Op, usize)| {
+            let t0 = profiling.then(Instant::now);
+            let out = exec_op(net, fl, l2, l, op);
+            (out, t0.map(|t| t.elapsed()))
+        };
+        let results: Vec<(OpOut, Option<Duration>)> = if ops.len() == 1 {
+            vec![timed(ops[0])]
         } else {
             std::thread::scope(|s| {
                 let handles: Vec<_> = ops[1..]
                     .iter()
-                    .map(|&op| s.spawn(move || exec_op(net, fl, l2, l, op)))
+                    .map(|&op| s.spawn(move || timed(op)))
                     .collect();
                 let mut out = Vec::with_capacity(ops.len());
-                out.push(exec_op(net, fl, l2, l, ops[0]));
+                out.push(timed(ops[0]));
                 for h in handles {
                     out.push(h.join().expect("pipeline stage panicked"));
                 }
@@ -555,7 +585,10 @@ impl PipelinedTrainer {
         // cycle barrier: install results, then the deferred UP
         // write-backs (so FF/BP of this cycle saw pre-update weights,
         // exactly like the hardware's dual-ported write-back)
-        for (res, &(i, _op, n)) in results.into_iter().zip(&ops) {
+        for ((res, wall), &(i, op, n)) in results.into_iter().zip(&ops) {
+            if let Some(d) = wall {
+                self.prof.record(i, stage_of(op), d);
+            }
             let j = i - 1;
             match res {
                 OpOut::Ff { pre, act, head } => {
@@ -765,6 +798,17 @@ impl MultiPipelinedTrainer {
         self.tenants.audit()
     }
 
+    /// Merged FF/BP/UP stage profile over every tenant (stage-wise
+    /// sums; per-tenant profiles stay readable via
+    /// [`MultiPipelinedTrainer::tenant`]`(c).prof`).
+    pub fn profile_merged(&self) -> StageProf {
+        let mut total = StageProf::disabled();
+        for t in self.tenants.iter() {
+            total.merge(&t.prof);
+        }
+        total
+    }
+
     /// Replay every tenant's weight buffers through their clash-free
     /// banked views (see [`PipelinedTrainer::audit_banked`]).
     pub fn audit_banked(&self) -> Result<()> {
@@ -890,6 +934,15 @@ impl MultiPipelinedTrainer {
             }
         }
         totals
+    }
+}
+
+/// Map a scheduled hw op onto its profiling stage.
+fn stage_of(op: Op) -> Stage {
+    match op {
+        Op::Ff => Stage::Ff,
+        Op::Bp => Stage::Bp,
+        Op::Up => Stage::Up,
     }
 }
 
@@ -1177,5 +1230,60 @@ mod tests {
         assert_eq!(trainer.metrics.flights, 12);
         // every junction saw one update per batch
         assert_eq!(trainer.versions, vec![12, 12, 12]);
+        // profiling was off: zero junction geometry is still reported,
+        // but nothing was recorded and no timestamps were taken
+        assert!(!trainer.prof.enabled());
+        assert_eq!(trainer.prof.total_cycles(), 0);
+    }
+
+    #[test]
+    fn profile_accounts_for_every_scheduled_op() {
+        let layers = [12usize, 10, 6];
+        let pattern = toy_pattern(&layers, &[5, 3], 8);
+        let mut trainer = PipelinedTrainer::from_pattern(
+            &layers,
+            &pattern,
+            &PipelineConfig {
+                batch: 8,
+                depth: 0,
+                profile: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let spec = Spec {
+            name: "prof-toy",
+            features: 12,
+            classes: 6,
+            latent_dim: 5,
+            shaping: crate::data::Shaping::Continuous,
+            separation: 2.0,
+            noise: 0.5,
+        };
+        let mut rng = Rng::new(17);
+        let ds = spec.generate(32, &mut rng);
+        let mut erng = Rng::new(18);
+        trainer.epoch(&ds, &mut erng).unwrap();
+        // every op the scheduler executed is in the profile, per stage
+        let profiled_ops: u64 = (1..=trainer.prof.junctions())
+            .flat_map(|j| Stage::ALL.iter().map(move |&s| (j, s)))
+            .map(|(j, s)| trainer.prof.stage(j, s).ops)
+            .sum();
+        assert_eq!(profiled_ops, trainer.metrics.ops);
+        // the modelled clock charge matches ceil(E/z) per junction
+        for (j, (junction, &z)) in trainer
+            .net
+            .junctions
+            .iter()
+            .zip(&trainer.zcfg.z)
+            .enumerate()
+        {
+            assert_eq!(
+                trainer.prof.cycles_per_op(j + 1),
+                junction.n_edges().div_ceil(z.max(1)) as u64
+            );
+        }
+        assert!(trainer.prof.total_cycles() > 0);
+        assert!(trainer.prof.total_wall() > Duration::ZERO);
     }
 }

@@ -1,0 +1,24 @@
+//! Unified observability layer: metrics registry, request tracing, and
+//! per-stage pipeline profiling.
+//!
+//! Three pieces, one principle — instrumentation is compiled in but gated,
+//! so the disabled path costs (at most) one branch:
+//!
+//! * [`registry`] — typed counters/gauges/histograms collected from every
+//!   subsystem into one coherent [`registry::Snapshot`], with JSON and
+//!   Prometheus-style exposition. Hot paths keep their lock-free atomics;
+//!   the registry only walks collector closures at snapshot time.
+//! * [`trace`] — sampled per-request spans (net → batcher → engine) with
+//!   trace IDs minted at the net front door, echoed in v4 `Response`
+//!   frames, and exportable as Chrome `trace_event` JSON.
+//! * [`prof`] — per-junction FF/BP/UP stage profiles for the training
+//!   pipeline, reporting both measured wall time and the paper's
+//!   `ceil(E/z)` clock model.
+
+pub mod prof;
+pub mod registry;
+pub mod trace;
+
+pub use prof::{Stage, StageAcc, StageProf};
+pub use registry::{HistSummary, LatencyHistogram, Registry, Sample, SampleValue, Snapshot};
+pub use trace::{ReqTrace, Sampler, SpanEvent, TraceEcho, TraceSink};

@@ -1,0 +1,285 @@
+//! Per-stage pipeline profiling: wall time and model cycles per FF/BP/UP
+//! stage, per junction, per context.
+//!
+//! `nn::pipeline::PipelinedTrainer` owns a [`StageProf`] and, when
+//! profiling is enabled (`train --profile`), stamps every op it executes.
+//! Wall time comes from `Instant` pairs taken around the op closures;
+//! model cycles use the paper's hardware cost model — a junction with `E`
+//! edges and parallelism `z` spends `ceil(E / z)` clocks per op — so the
+//! report shows both what the software pipeline measured and what the
+//! accelerator schedule would charge. The disabled path takes zero
+//! timestamps and is a no-op on [`record`](StageProf::record).
+//!
+//! Profiles are merged into the bench JSON writers (`BENCH_train.json`
+//! gains a `profile` section) and printed as a table by the CLI.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Pipeline stage kind, matching the paper's FF / BP / UP decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Feed-forward.
+    Ff,
+    /// Backpropagation.
+    Bp,
+    /// Weight update.
+    Up,
+}
+
+impl Stage {
+    /// All stages in display order.
+    pub const ALL: [Stage; 3] = [Stage::Ff, Stage::Bp, Stage::Up];
+
+    /// Short display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Ff => "ff",
+            Stage::Bp => "bp",
+            Stage::Up => "up",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Stage::Ff => 0,
+            Stage::Bp => 1,
+            Stage::Up => 2,
+        }
+    }
+}
+
+/// Accumulated cost of one stage at one junction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageAcc {
+    /// Ops executed.
+    pub ops: u64,
+    /// Wall time summed over those ops, nanoseconds.
+    pub wall_ns: u64,
+}
+
+/// Per-junction, per-stage profile for one pipelined trainer.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageProf {
+    enabled: bool,
+    cycles_per_op: Vec<u64>,
+    acc: Vec<[StageAcc; 3]>,
+}
+
+impl StageProf {
+    /// A profile for `cycles_per_op.len()` junctions; `cycles_per_op[j]`
+    /// is the modelled clock cost `ceil(E_j / z_j)` of one op at junction
+    /// `j+1`. When `enabled` is false every [`record`](StageProf::record)
+    /// is a no-op.
+    pub fn new(cycles_per_op: Vec<u64>, enabled: bool) -> Self {
+        let n = cycles_per_op.len();
+        StageProf { enabled, cycles_per_op, acc: vec![[StageAcc::default(); 3]; n] }
+    }
+
+    /// A permanently-disabled profile (no junctions).
+    pub fn disabled() -> Self {
+        StageProf::new(Vec::new(), false)
+    }
+
+    /// Whether recording is active — callers use this to skip taking
+    /// timestamps entirely on the disabled path.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Number of junctions covered.
+    pub fn junctions(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// Record one executed op. `junction` is 1-based (junction `i`
+    /// connects layers `i-1` and `i`, matching the pipeline's numbering).
+    pub fn record(&mut self, junction: usize, stage: Stage, wall: Duration) {
+        if !self.enabled || junction == 0 || junction > self.acc.len() {
+            return;
+        }
+        let a = &mut self.acc[junction - 1][stage.idx()];
+        a.ops += 1;
+        a.wall_ns += wall.as_nanos() as u64;
+    }
+
+    /// The accumulated cost of `stage` at 1-based `junction`.
+    pub fn stage(&self, junction: usize, stage: Stage) -> StageAcc {
+        if junction == 0 || junction > self.acc.len() {
+            return StageAcc::default();
+        }
+        self.acc[junction - 1][stage.idx()]
+    }
+
+    /// Modelled clocks per op at 1-based `junction` (`ceil(E / z)`).
+    pub fn cycles_per_op(&self, junction: usize) -> u64 {
+        if junction == 0 || junction > self.cycles_per_op.len() {
+            return 0;
+        }
+        self.cycles_per_op[junction - 1]
+    }
+
+    /// Total wall time across all junctions and stages.
+    pub fn total_wall(&self) -> Duration {
+        let ns: u64 = self.acc.iter().flatten().map(|a| a.wall_ns).sum();
+        Duration::from_nanos(ns)
+    }
+
+    /// Total modelled clocks: `sum_j ops_j * ceil(E_j / z_j)`.
+    pub fn total_cycles(&self) -> u64 {
+        self.acc
+            .iter()
+            .zip(&self.cycles_per_op)
+            .map(|(stages, cpo)| stages.iter().map(|a| a.ops).sum::<u64>() * cpo)
+            .sum()
+    }
+
+    /// Fold another profile into this one (stage-wise sums). The junction
+    /// geometry must match; extra junctions in `other` are appended. Used
+    /// to aggregate per-context tenant profiles into a run total.
+    pub fn merge(&mut self, other: &StageProf) {
+        while self.acc.len() < other.acc.len() {
+            self.acc.push([StageAcc::default(); 3]);
+        }
+        while self.cycles_per_op.len() < other.cycles_per_op.len() {
+            let j = self.cycles_per_op.len();
+            self.cycles_per_op.push(other.cycles_per_op[j]);
+        }
+        for (j, stages) in other.acc.iter().enumerate() {
+            for (s, a) in stages.iter().enumerate() {
+                self.acc[j][s].ops += a.ops;
+                self.acc[j][s].wall_ns += a.wall_ns;
+            }
+        }
+        self.enabled = self.enabled || other.enabled;
+    }
+
+    /// Human-readable per-junction table for `train --profile`.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>8} {:>10} {:>8} {:>10} {:>8} {:>10}\n",
+            "junction", "clk/op", "ff ops", "ff wall", "bp ops", "bp wall", "up ops", "up wall"
+        ));
+        for j in 1..=self.junctions() {
+            let [ff, bp, up] = self.acc[j - 1];
+            out.push_str(&format!(
+                "{:>8} {:>10} {:>8} {:>8.2}ms {:>8} {:>8.2}ms {:>8} {:>8.2}ms\n",
+                j,
+                self.cycles_per_op(j),
+                ff.ops,
+                ff.wall_ns as f64 / 1e6,
+                bp.ops,
+                bp.wall_ns as f64 / 1e6,
+                up.ops,
+                up.wall_ns as f64 / 1e6,
+            ));
+        }
+        out.push_str(&format!(
+            "total: {} ops, {:.2}ms wall, {} modelled clocks\n",
+            self.acc.iter().flatten().map(|a| a.ops).sum::<u64>(),
+            self.total_wall().as_secs_f64() * 1e3,
+            self.total_cycles()
+        ));
+        out
+    }
+
+    /// JSON section for the bench writers:
+    /// `{"junctions": [...], "total_wall_ms": .., "total_model_cycles": ..}`.
+    pub fn to_json(&self) -> Json {
+        let junctions = (1..=self.junctions())
+            .map(|j| {
+                let mut o = BTreeMap::new();
+                o.insert("junction".into(), Json::Num(j as f64));
+                o.insert("cycles_per_op".into(), Json::Num(self.cycles_per_op(j) as f64));
+                for stage in Stage::ALL {
+                    let a = self.stage(j, stage);
+                    let mut so = BTreeMap::new();
+                    so.insert("ops".into(), Json::Num(a.ops as f64));
+                    so.insert("wall_ms".into(), Json::Num(a.wall_ns as f64 / 1e6));
+                    so.insert(
+                        "model_cycles".into(),
+                        Json::Num((a.ops * self.cycles_per_op(j)) as f64),
+                    );
+                    o.insert(stage.label().into(), Json::Obj(so));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("junctions".into(), Json::Arr(junctions));
+        root.insert(
+            "total_wall_ms".into(),
+            Json::Num(self.total_wall().as_secs_f64() * 1e3),
+        );
+        root.insert("total_model_cycles".into(), Json::Num(self.total_cycles() as f64));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_record_is_noop() {
+        let mut p = StageProf::disabled();
+        p.record(1, Stage::Ff, Duration::from_millis(5));
+        assert!(!p.enabled());
+        assert_eq!(p.total_wall(), Duration::ZERO);
+        assert_eq!(p.total_cycles(), 0);
+    }
+
+    #[test]
+    fn record_accumulates_per_junction_and_stage() {
+        let mut p = StageProf::new(vec![100, 10], true);
+        p.record(1, Stage::Ff, Duration::from_micros(300));
+        p.record(1, Stage::Ff, Duration::from_micros(200));
+        p.record(1, Stage::Bp, Duration::from_micros(400));
+        p.record(2, Stage::Up, Duration::from_micros(50));
+        p.record(9, Stage::Up, Duration::from_micros(1)); // out of range: ignored
+        p.record(0, Stage::Up, Duration::from_micros(1)); // junctions are 1-based
+
+        assert_eq!(p.stage(1, Stage::Ff), StageAcc { ops: 2, wall_ns: 500_000 });
+        assert_eq!(p.stage(1, Stage::Bp).ops, 1);
+        assert_eq!(p.stage(2, Stage::Up).ops, 1);
+        // 3 ops at 100 clk + 1 op at 10 clk.
+        assert_eq!(p.total_cycles(), 310);
+        assert_eq!(p.total_wall(), Duration::from_micros(950));
+        let rep = p.report();
+        assert!(rep.contains("junction"));
+        assert!(rep.contains("310 modelled clocks"));
+    }
+
+    #[test]
+    fn merge_sums_stagewise() {
+        let mut a = StageProf::new(vec![100], true);
+        a.record(1, Stage::Ff, Duration::from_micros(10));
+        let mut b = StageProf::new(vec![100], true);
+        b.record(1, Stage::Ff, Duration::from_micros(30));
+        b.record(1, Stage::Up, Duration::from_micros(5));
+        a.merge(&b);
+        assert_eq!(a.stage(1, Stage::Ff), StageAcc { ops: 2, wall_ns: 40_000 });
+        assert_eq!(a.stage(1, Stage::Up).ops, 1);
+        assert_eq!(a.total_cycles(), 300);
+    }
+
+    #[test]
+    fn json_section_shape() {
+        let mut p = StageProf::new(vec![64], true);
+        p.record(1, Stage::Ff, Duration::from_micros(100));
+        let doc = Json::parse(&p.to_json().to_string()).unwrap();
+        let js = doc.get("junctions").unwrap().as_arr().unwrap();
+        assert_eq!(js.len(), 1);
+        let j0 = &js[0];
+        assert_eq!(j0.get("junction").unwrap().as_usize(), Some(1));
+        assert_eq!(j0.get("cycles_per_op").unwrap().as_usize(), Some(64));
+        let ff = j0.get("ff").unwrap();
+        assert_eq!(ff.get("ops").unwrap().as_usize(), Some(1));
+        assert_eq!(ff.get("model_cycles").unwrap().as_usize(), Some(64));
+        assert!(doc.get("total_wall_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(doc.get("total_model_cycles").unwrap().as_usize(), Some(64));
+    }
+}

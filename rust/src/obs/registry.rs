@@ -1,0 +1,570 @@
+//! Central metrics registry: one coherent snapshot over every subsystem.
+//!
+//! The hot paths keep their existing lock-free shape — plain `AtomicU64`
+//! counters and the log-bucketed [`LatencyHistogram`] bumped with relaxed
+//! ordering, sharded per worker/model where the subsystems already shard
+//! them. The registry never sits on those paths. Instead each subsystem
+//! registers a *collector* closure once at startup; [`Registry::snapshot`]
+//! walks the collectors and merges whatever the shards hold right now into
+//! a single typed [`Snapshot`]. Every consumer — the CLI metrics dump, the
+//! wire `Metrics` frame, the load generators and bench JSON writers, and
+//! the Prometheus-style text exposition — reads that one snapshot instead
+//! of poking three ad-hoc structs.
+//!
+//! Collectors hold [`std::sync::Weak`] references to the subsystems they
+//! observe (upgraded per snapshot), so registering a collector never
+//! extends a subsystem's lifetime or blocks teardown.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+
+/// Lock-free latency histogram with power-of-two microsecond buckets.
+///
+/// Bucket `i` counts samples in `[2^i, 2^(i+1))` microseconds; sub-µs
+/// samples clamp up to 1µs. 40 buckets cover ~12.7 days; samples beyond
+/// the top bucket are still counted there *and* tallied in an explicit
+/// [`overflow`](LatencyHistogram::overflow) counter so the tail is never
+/// silently clamped. All operations are relaxed atomics — safe to share
+/// across worker threads without locking.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    overflow: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    const BUCKETS: usize = 40;
+
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            overflow: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let raw = us.ilog2() as usize;
+        if raw >= Self::BUCKETS {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+        let idx = raw.min(Self::BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded (overflowed samples are included — they
+    /// land in the top bucket as well as the overflow counter).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Samples that exceeded the top bucket (`>= 2^40` µs).
+    pub fn overflow(&self) -> u64 {
+        self.overflow.load(Ordering::Relaxed)
+    }
+
+    /// Fold another histogram into this one (bucket-wise + overflow sum).
+    /// Used to aggregate per-worker / per-shard histograms at snapshot
+    /// time; the operation is associative and commutative.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.overflow
+            .fetch_add(other.overflow.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Approximate quantile (upper bucket edge), `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1u64 << ((i as u32 + 1).min(63)));
+            }
+        }
+        Duration::from_micros(1u64 << (Self::BUCKETS as u32))
+    }
+
+    /// The count/p50/p95/p99/overflow summary exported in snapshots.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            p50_us: self.quantile(0.50).as_micros() as u64,
+            p95_us: self.quantile(0.95).as_micros() as u64,
+            p99_us: self.quantile(0.99).as_micros() as u64,
+            overflow: self.overflow(),
+        }
+    }
+}
+
+/// Point-in-time summary of a [`LatencyHistogram`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    /// Total samples.
+    pub count: u64,
+    /// Median, microseconds (upper bucket edge).
+    pub p50_us: u64,
+    /// 95th percentile, microseconds.
+    pub p95_us: u64,
+    /// 99th percentile, microseconds.
+    pub p99_us: u64,
+    /// Samples beyond the top bucket.
+    pub overflow: u64,
+}
+
+/// The value carried by one [`Sample`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SampleValue {
+    /// Monotonically increasing count.
+    Counter(u64),
+    /// Instantaneous value.
+    Gauge(f64),
+    /// Latency distribution summary.
+    Histogram(HistSummary),
+}
+
+/// One named, labelled measurement in a [`Snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// Dotted metric name, e.g. `serve.requests`.
+    pub name: &'static str,
+    /// Label pairs, e.g. `[("model", "tiny")]`. Keys come from the fixed
+    /// vocabulary `model` / `context` / `worker` / `junction`.
+    pub labels: Vec<(&'static str, String)>,
+    /// The measurement.
+    pub value: SampleValue,
+}
+
+impl Sample {
+    /// A counter sample.
+    pub fn counter(name: &'static str, labels: Vec<(&'static str, String)>, v: u64) -> Sample {
+        Sample { name, labels, value: SampleValue::Counter(v) }
+    }
+
+    /// A gauge sample.
+    pub fn gauge(name: &'static str, labels: Vec<(&'static str, String)>, v: f64) -> Sample {
+        Sample { name, labels, value: SampleValue::Gauge(v) }
+    }
+
+    /// A histogram-summary sample.
+    pub fn histogram(
+        name: &'static str,
+        labels: Vec<(&'static str, String)>,
+        h: &LatencyHistogram,
+    ) -> Sample {
+        Sample { name, labels, value: SampleValue::Histogram(h.summary()) }
+    }
+
+    fn matches(&self, name: &str, labels: &[(&str, &str)]) -> bool {
+        self.name == name
+            && labels.iter().all(|(k, v)| {
+                self.labels.iter().any(|(sk, sv)| sk == k && sv == v)
+            })
+    }
+}
+
+/// A collector contributes its subsystem's current samples to a snapshot.
+pub type Collector = Box<dyn Fn(&mut Vec<Sample>) + Send + Sync>;
+
+/// The registry: a list of collectors walked at snapshot time.
+///
+/// Registration happens once per subsystem at startup; the hot path never
+/// touches the registry (see module docs).
+#[derive(Default)]
+pub struct Registry {
+    collectors: Mutex<Vec<Collector>>,
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let n = lock_unpoisoned(&self.collectors).len();
+        write!(f, "Registry({n} collectors)")
+    }
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Register a collector. Collectors observing reference-counted
+    /// subsystems should capture [`std::sync::Weak`] handles and upgrade
+    /// per snapshot, so the registry never extends a subsystem's lifetime.
+    pub fn register<F>(&self, f: F)
+    where
+        F: Fn(&mut Vec<Sample>) + Send + Sync + 'static,
+    {
+        lock_unpoisoned(&self.collectors).push(Box::new(f));
+    }
+
+    /// Number of registered collectors.
+    pub fn collectors(&self) -> usize {
+        lock_unpoisoned(&self.collectors).len()
+    }
+
+    /// Walk every collector and materialise one coherent snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut samples = Vec::new();
+        for c in lock_unpoisoned(&self.collectors).iter() {
+            c(&mut samples);
+        }
+        samples.sort_by(|a, b| (a.name, &a.labels).cmp(&(b.name, &b.labels)));
+        Snapshot { samples }
+    }
+}
+
+/// A point-in-time view over every registered subsystem.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    /// All samples, sorted by `(name, labels)` for deterministic output.
+    pub samples: Vec<Sample>,
+}
+
+impl Snapshot {
+    fn find(&self, name: &str, labels: &[(&str, &str)]) -> Option<&Sample> {
+        self.samples.iter().find(|s| s.matches(name, labels))
+    }
+
+    /// Counter lookup by name + label subset (`None` if absent).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        match self.find(name, labels)?.value {
+            SampleValue::Counter(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Gauge lookup by name + label subset (`None` if absent).
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        match self.find(name, labels)?.value {
+            SampleValue::Gauge(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Histogram-summary lookup by name + label subset (`None` if absent).
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<HistSummary> {
+        match self.find(name, labels)?.value {
+            SampleValue::Histogram(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Stable JSON exposition: `{"samples": [{name, labels, type, ...}]}`.
+    pub fn to_json(&self) -> Json {
+        let samples = self
+            .samples
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(s.name.into()));
+                let labels = s
+                    .labels
+                    .iter()
+                    .map(|(k, v)| ((*k).to_string(), Json::Str(v.clone())))
+                    .collect();
+                o.insert("labels".into(), Json::Obj(labels));
+                match &s.value {
+                    SampleValue::Counter(v) => {
+                        o.insert("type".into(), Json::Str("counter".into()));
+                        o.insert("value".into(), Json::Num(*v as f64));
+                    }
+                    SampleValue::Gauge(v) => {
+                        o.insert("type".into(), Json::Str("gauge".into()));
+                        o.insert("value".into(), Json::Num(*v));
+                    }
+                    SampleValue::Histogram(h) => {
+                        o.insert("type".into(), Json::Str("histogram".into()));
+                        o.insert("count".into(), Json::Num(h.count as f64));
+                        o.insert("p50_us".into(), Json::Num(h.p50_us as f64));
+                        o.insert("p95_us".into(), Json::Num(h.p95_us as f64));
+                        o.insert("p99_us".into(), Json::Num(h.p99_us as f64));
+                        o.insert("overflow".into(), Json::Num(h.overflow as f64));
+                    }
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("samples".into(), Json::Arr(samples));
+        Json::Obj(root)
+    }
+
+    /// Prometheus-style text exposition. Dots become underscores, one
+    /// `# TYPE` line per metric name, histograms as `summary` quantile
+    /// series plus `_count` and `_overflow` lines.
+    pub fn to_prometheus(&self) -> String {
+        fn mangled(name: &str) -> String {
+            name.replace('.', "_")
+        }
+        fn label_str(labels: &[(&'static str, String)], extra: Option<(&str, &str)>) -> String {
+            let mut parts: Vec<String> =
+                labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            if let Some((k, v)) = extra {
+                parts.push(format!("{k}=\"{v}\""));
+            }
+            if parts.is_empty() {
+                String::new()
+            } else {
+                format!("{{{}}}", parts.join(","))
+            }
+        }
+        let mut out = String::new();
+        let mut typed: Vec<&'static str> = Vec::new();
+        for s in &self.samples {
+            let base = mangled(s.name);
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    if !typed.contains(&s.name) {
+                        typed.push(s.name);
+                        out.push_str(&format!("# TYPE {base} counter\n"));
+                    }
+                    out.push_str(&format!("{base}{} {v}\n", label_str(&s.labels, None)));
+                }
+                SampleValue::Gauge(v) => {
+                    if !typed.contains(&s.name) {
+                        typed.push(s.name);
+                        out.push_str(&format!("# TYPE {base} gauge\n"));
+                    }
+                    out.push_str(&format!("{base}{} {v}\n", label_str(&s.labels, None)));
+                }
+                SampleValue::Histogram(h) => {
+                    if !typed.contains(&s.name) {
+                        typed.push(s.name);
+                        out.push_str(&format!("# TYPE {base}_us summary\n"));
+                    }
+                    for (q, v) in [("0.5", h.p50_us), ("0.95", h.p95_us), ("0.99", h.p99_us)] {
+                        out.push_str(&format!(
+                            "{base}_us{} {v}\n",
+                            label_str(&s.labels, Some(("quantile", q)))
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{base}_us_count{} {}\n",
+                        label_str(&s.labels, None),
+                        h.count
+                    ));
+                    out.push_str(&format!(
+                        "{base}_us_overflow{} {}\n",
+                        label_str(&s.labels, None),
+                        h.overflow
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-readable report for the CLI metrics dump: one line per
+    /// sample, `name{label=value} value`.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for s in &self.samples {
+            let mut head = s.name.to_string();
+            if !s.labels.is_empty() {
+                let parts: Vec<String> =
+                    s.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                head.push('{');
+                head.push_str(&parts.join(","));
+                head.push('}');
+            }
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    out.push_str(&format!("{head:<40} {v}\n"));
+                }
+                SampleValue::Gauge(v) => {
+                    out.push_str(&format!("{head:<40} {v:.3}\n"));
+                }
+                SampleValue::Histogram(h) => {
+                    out.push_str(&format!(
+                        "{head:<40} n={} p50={}us p95={}us p99={}us overflow={}\n",
+                        h.count, h.p50_us, h.p95_us, h.p99_us, h.overflow
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_histogram_quantiles_are_monotonic() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 10, 100, 1_000, 10_000] {
+            for _ in 0..20 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 falls in the bucket holding the 100us samples: [64, 128) -> 128.
+        assert_eq!(p50, Duration::from_micros(128));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(16_384));
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.summary(), HistSummary::default());
+    }
+
+    fn replay(samples: &[u64]) -> LatencyHistogram {
+        let h = LatencyHistogram::new();
+        for &us in samples {
+            h.record(Duration::from_micros(us));
+        }
+        h
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let a: Vec<u64> = vec![1, 5, 900, 1 << 41];
+        let b: Vec<u64> = vec![30, 30, 30, 1 << 45];
+        let c: Vec<u64> = vec![2, 1 << 20];
+
+        // (a ⊕ b) ⊕ c
+        let left = replay(&a);
+        left.merge(&replay(&b));
+        left.merge(&replay(&c));
+        // a ⊕ (b ⊕ c)
+        let bc = replay(&b);
+        bc.merge(&replay(&c));
+        let right = replay(&a);
+        right.merge(&bc);
+
+        for i in 0..LatencyHistogram::BUCKETS {
+            assert_eq!(
+                left.buckets[i].load(Ordering::Relaxed),
+                right.buckets[i].load(Ordering::Relaxed),
+                "bucket {i} differs"
+            );
+        }
+        assert_eq!(left.overflow(), right.overflow());
+        assert_eq!(left.overflow(), 2); // the 2^41 and 2^45 µs samples
+        assert_eq!(left.summary(), right.summary());
+        // Merging matches recording everything in one histogram.
+        let all: Vec<u64> = a.iter().chain(&b).chain(&c).copied().collect();
+        assert_eq!(left.summary(), replay(&all).summary());
+    }
+
+    #[test]
+    fn overflow_counts_tail_without_losing_samples() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_secs(20 * 24 * 3600)); // ~20 days > 2^40 µs
+        assert_eq!(h.count(), 2, "overflowed sample still counted");
+        assert_eq!(h.overflow(), 1);
+        // The in-range sample keeps quantiles sane at the low end.
+        assert_eq!(h.quantile(0.5), Duration::from_micros(128));
+    }
+
+    #[test]
+    fn registry_snapshot_merges_collectors_and_looks_up_by_label() {
+        let r = Registry::new();
+        r.register(|out| {
+            out.push(Sample::counter("serve.requests", vec![("model", "tiny".into())], 7));
+            out.push(Sample::gauge("serve.occupancy_mean", vec![("model", "tiny".into())], 1.5));
+        });
+        r.register(|out| {
+            out.push(Sample::counter("serve.requests", vec![("model", "big".into())], 9));
+        });
+        assert_eq!(r.collectors(), 2);
+        let snap = r.snapshot();
+        assert_eq!(snap.samples.len(), 3);
+        assert_eq!(snap.counter("serve.requests", &[("model", "tiny")]), Some(7));
+        assert_eq!(snap.counter("serve.requests", &[("model", "big")]), Some(9));
+        assert_eq!(snap.gauge("serve.occupancy_mean", &[("model", "tiny")]), Some(1.5));
+        assert_eq!(snap.counter("serve.requests", &[("model", "absent")]), None);
+        assert_eq!(snap.counter("no.such.metric", &[]), None);
+        // Empty label filter matches the first sample with that name.
+        assert!(snap.counter("serve.requests", &[]).is_some());
+    }
+
+    #[test]
+    fn snapshot_histogram_roundtrips_through_json() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(50));
+        h.record(Duration::from_micros(500));
+        let r = Registry::new();
+        let summary = h.summary();
+        r.register(move |out| {
+            out.push(Sample { name: "serve.latency", labels: vec![("model", "tiny".into())], value: SampleValue::Histogram(summary) });
+        });
+        let snap = r.snapshot();
+        assert_eq!(snap.histogram("serve.latency", &[("model", "tiny")]), Some(summary));
+        let j = snap.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let samples = parsed.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 1);
+        let s = &samples[0];
+        assert_eq!(s.get("name").unwrap().as_str(), Some("serve.latency"));
+        assert_eq!(s.get("type").unwrap().as_str(), Some("histogram"));
+        assert_eq!(s.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            s.get("labels").unwrap().get("model").unwrap().as_str(),
+            Some("tiny")
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_has_type_lines_and_mangled_names() {
+        let r = Registry::new();
+        r.register(|out| {
+            out.push(Sample::counter("net.requests", vec![], 3));
+            out.push(Sample::counter("serve.requests", vec![("model", "tiny".into())], 7));
+            let h = LatencyHistogram::new();
+            h.record(Duration::from_micros(10));
+            out.push(Sample::histogram("serve.latency", vec![("model", "tiny".into())], &h));
+        });
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE net_requests counter\n"));
+        assert!(text.contains("net_requests 3\n"));
+        assert!(text.contains("serve_requests{model=\"tiny\"} 7\n"));
+        assert!(text.contains("# TYPE serve_latency_us summary\n"));
+        assert!(text.contains("serve_latency_us{model=\"tiny\",quantile=\"0.5\"} 16\n"));
+        assert!(text.contains("serve_latency_us_count{model=\"tiny\"} 1\n"));
+        assert!(text.contains("serve_latency_us_overflow{model=\"tiny\"} 0\n"));
+        assert!(!text.contains('.'), "metric names must be mangled");
+    }
+
+    #[test]
+    fn report_lists_every_sample() {
+        let r = Registry::new();
+        r.register(|out| {
+            out.push(Sample::counter("serve.requests", vec![("model", "tiny".into())], 7));
+            out.push(Sample::gauge("net.active_connections", vec![], 2.0));
+        });
+        let text = r.snapshot().report();
+        assert!(text.contains("serve.requests{model=tiny}"));
+        assert!(text.contains("net.active_connections"));
+    }
+}

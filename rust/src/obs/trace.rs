@@ -1,0 +1,367 @@
+//! Sampled request tracing: span lifecycle from the net front door to the
+//! engine worker, with Chrome `trace_event` export.
+//!
+//! Trace IDs are minted by a [`Sampler`] when a request enters the net
+//! reactor (or supplied by the client in the v4 `Request` frame). A sampled
+//! request carries a boxed [`ReqTrace`] through `MicroBatcher` coalescing
+//! and the `InferenceService` shard queue to the engine worker, which
+//! closes the trace and produces a [`TraceEcho`] — three durations (queue
+//! wait, batch wait, execute) echoed back in the v4 `Response` frame so
+//! clients can print a waterfall. The completed spans land in a bounded
+//! [`TraceSink`] exportable as Chrome `trace_event` JSON
+//! (`serve --trace-out PATH`, load it in `chrome://tracing` or Perfetto).
+//!
+//! Unsampled requests pay exactly one branch in [`Sampler::sample`] and
+//! allocate nothing — [`TraceSink::handles_created`] counts every
+//! [`ReqTrace`] ever built so tests can assert the zero-allocation path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+
+/// Per-request timing echoed in the v4 `Response` frame.
+///
+/// All durations are saturating microsecond casts (caps at ~71 minutes
+/// per stage, far beyond any serving deadline).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceEcho {
+    /// The trace ID minted at the front door (or supplied by the client).
+    pub trace_id: u64,
+    /// Time spent queued in the `MicroBatcher` before dispatch.
+    pub queue_us: u32,
+    /// Time spent in the engine shard waiting for a batch to fill.
+    pub batch_us: u32,
+    /// Forward-pass execution time (shared across the batch).
+    pub execute_us: u32,
+}
+
+/// Deterministic 1-in-N request sampler; also mints trace IDs.
+///
+/// `every == 0` disables sampling entirely: the hot path is then a single
+/// branch on a plain field — no atomics touched, nothing allocated. This
+/// is the disabled-path cost bounded by the `serve_load` bench.
+#[derive(Debug)]
+pub struct Sampler {
+    every: u64,
+    counter: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl Sampler {
+    /// Sample every `every`-th request (0 = off).
+    pub fn new(every: u64) -> Self {
+        Sampler { every, counter: AtomicU64::new(0), next_id: AtomicU64::new(1) }
+    }
+
+    /// Sampling period (0 = off).
+    pub fn every(&self) -> u64 {
+        self.every
+    }
+
+    /// Decide whether to sample this request; returns a fresh trace ID
+    /// when it is sampled.
+    pub fn sample(&self) -> Option<u64> {
+        if self.every == 0 {
+            return None;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        if n % self.every == 0 {
+            Some(self.next_id.fetch_add(1, Ordering::Relaxed))
+        } else {
+            None
+        }
+    }
+}
+
+/// One completed span, timestamped in microseconds relative to the sink's
+/// epoch (Chrome `trace_event` "X" form).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// The owning request's trace ID.
+    pub trace_id: u64,
+    /// Stage name (`net`, `batcher`, `engine.wait`, `engine.exec`).
+    pub name: &'static str,
+    /// Category (`net`, `batcher`, `engine`).
+    pub cat: &'static str,
+    /// Start, µs since the sink epoch.
+    pub start_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+    /// Thread lane for the Chrome view (0 = reactor, 1+w = engine worker).
+    pub tid: u32,
+}
+
+/// Bounded collector for completed spans.
+///
+/// Spans beyond `cap` are dropped (counted in [`dropped`](TraceSink::dropped))
+/// so a long-running server with aggressive sampling cannot grow without
+/// bound. [`handles_created`](TraceSink::handles_created) counts every
+/// [`ReqTrace`] allocation for the zero-allocation regression test.
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    events: Mutex<Vec<SpanEvent>>,
+    cap: usize,
+    dropped: AtomicU64,
+    handles: AtomicU64,
+}
+
+impl TraceSink {
+    /// Default span capacity (4 spans per traced request ≈ 16k requests).
+    pub const DEFAULT_CAP: usize = 65_536;
+
+    /// A sink holding at most `cap` spans.
+    pub fn new(cap: usize) -> Self {
+        TraceSink {
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            cap,
+            dropped: AtomicU64::new(0),
+            handles: AtomicU64::new(0),
+        }
+    }
+
+    /// The instant all span timestamps are relative to.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Record a completed span from absolute instants.
+    pub fn record(
+        &self,
+        trace_id: u64,
+        name: &'static str,
+        cat: &'static str,
+        start: Instant,
+        end: Instant,
+        tid: u32,
+    ) {
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        let ev = SpanEvent { trace_id, name, cat, start_us, dur_us, tid };
+        let mut events = lock_unpoisoned(&self.events);
+        if events.len() < self.cap {
+            events.push(ev);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spans recorded so far.
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.events).len()
+    }
+
+    /// True when no spans have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped at the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total [`ReqTrace`] handles ever built against this sink — the
+    /// tracing-allocation counter asserted by the unsampled-path test.
+    pub fn handles_created(&self) -> u64 {
+        self.handles.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the recorded spans (test/report helper).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        lock_unpoisoned(&self.events).clone()
+    }
+
+    /// Export as Chrome `trace_event` JSON:
+    /// `{"traceEvents": [{name, cat, ph: "X", ts, dur, pid, tid, args}]}`.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self
+            .events()
+            .iter()
+            .map(|ev| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(ev.name.into()));
+                o.insert("cat".into(), Json::Str(ev.cat.into()));
+                o.insert("ph".into(), Json::Str("X".into()));
+                o.insert("ts".into(), Json::Num(ev.start_us as f64));
+                o.insert("dur".into(), Json::Num(ev.dur_us as f64));
+                o.insert("pid".into(), Json::Num(1.0));
+                o.insert("tid".into(), Json::Num(f64::from(ev.tid)));
+                let mut args = BTreeMap::new();
+                args.insert("trace_id".into(), Json::Num(ev.trace_id as f64));
+                o.insert("args".into(), Json::Obj(args));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("traceEvents".into(), Json::Arr(events));
+        root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+        Json::Obj(root)
+    }
+}
+
+/// The per-request trace baton carried (boxed, only when sampled) from the
+/// net reactor through the batcher queue to the engine worker.
+///
+/// Lifecycle: [`ReqTrace::new`] at the front door → [`mark_enqueued`]
+/// when the batcher queues it → [`mark_dispatched`] when the collector
+/// submits it to the engine → [`finish`] on the worker with the batch's
+/// execution window. `finish` records the `batcher` / `engine.wait` /
+/// `engine.exec` spans and returns the [`TraceEcho`]; the reactor records
+/// the enclosing `net` span itself when the response leaves.
+///
+/// [`mark_enqueued`]: ReqTrace::mark_enqueued
+/// [`mark_dispatched`]: ReqTrace::mark_dispatched
+/// [`finish`]: ReqTrace::finish
+#[derive(Debug)]
+pub struct ReqTrace {
+    id: u64,
+    sink: Arc<TraceSink>,
+    t0: Instant,
+    enqueued: Option<Instant>,
+    dispatched: Option<Instant>,
+}
+
+fn span_us(a: Instant, b: Instant) -> u32 {
+    let us = b.saturating_duration_since(a).as_micros();
+    us.min(u128::from(u32::MAX)) as u32
+}
+
+impl ReqTrace {
+    /// Open a trace minted at the front door (bumps the sink's handle
+    /// counter; boxed because the baton rides inside request structs that
+    /// stay small on the unsampled path).
+    pub fn new(id: u64, sink: Arc<TraceSink>) -> Box<ReqTrace> {
+        sink.handles.fetch_add(1, Ordering::Relaxed);
+        Box::new(ReqTrace { id, sink, t0: Instant::now(), enqueued: None, dispatched: None })
+    }
+
+    /// The trace ID.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The instant the trace was opened (net receipt).
+    pub fn t0(&self) -> Instant {
+        self.t0
+    }
+
+    /// Stamp entry into the batcher queue.
+    pub fn mark_enqueued(&mut self) {
+        self.enqueued = Some(Instant::now());
+    }
+
+    /// Stamp dispatch out of the batcher into the engine shard.
+    pub fn mark_dispatched(&mut self) {
+        self.dispatched = Some(Instant::now());
+    }
+
+    /// Close the trace on the engine worker: record the batcher/engine
+    /// spans and return the per-request echo. `exec_start`/`exec_end`
+    /// bound the batch's forward pass; `worker` is the engine worker
+    /// index (its Chrome lane is `1 + worker`).
+    pub fn finish(self, exec_start: Instant, exec_end: Instant, worker: usize) -> TraceEcho {
+        let enqueued = self.enqueued.unwrap_or(self.t0);
+        let dispatched = self.dispatched.unwrap_or(enqueued);
+        self.sink.record(self.id, "batcher", "batcher", enqueued, dispatched, 0);
+        self.sink.record(self.id, "engine.wait", "engine", dispatched, exec_start, 0);
+        let lane = 1 + worker.min(u32::MAX as usize - 1) as u32;
+        self.sink.record(self.id, "engine.exec", "engine", exec_start, exec_end, lane);
+        TraceEcho {
+            trace_id: self.id,
+            queue_us: span_us(enqueued, dispatched),
+            batch_us: span_us(dispatched, exec_start),
+            execute_us: span_us(exec_start, exec_end),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_sampler_never_samples() {
+        let s = Sampler::new(0);
+        for _ in 0..1000 {
+            assert_eq!(s.sample(), None);
+        }
+    }
+
+    #[test]
+    fn every_1_samples_all_with_unique_ids() {
+        let s = Sampler::new(1);
+        let ids: Vec<u64> = (0..10).map(|_| s.sample().expect("every=1 samples all")).collect();
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids, dedup);
+        assert_eq!(ids[0], 1);
+    }
+
+    #[test]
+    fn every_n_samples_one_in_n() {
+        let s = Sampler::new(4);
+        let hits = (0..100).filter(|_| s.sample().is_some()).count();
+        assert_eq!(hits, 25);
+    }
+
+    #[test]
+    fn finish_produces_nonnegative_echo_and_three_spans() {
+        let sink = Arc::new(TraceSink::new(16));
+        let mut tr = ReqTrace::new(42, Arc::clone(&sink));
+        assert_eq!(sink.handles_created(), 1);
+        tr.mark_enqueued();
+        tr.mark_dispatched();
+        let exec_start = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let exec_end = Instant::now();
+        let echo = tr.finish(exec_start, exec_end, 3);
+        assert_eq!(echo.trace_id, 42);
+        assert!(echo.execute_us >= 1_000, "slept 2ms, got {}us", echo.execute_us);
+        let evs = sink.events();
+        assert_eq!(evs.len(), 3);
+        let names: Vec<&str> = evs.iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["batcher", "engine.wait", "engine.exec"]);
+        assert!(evs.iter().all(|e| e.trace_id == 42));
+        assert_eq!(evs[2].tid, 4);
+        // Spans nest in order with non-negative extents.
+        assert!(evs[0].start_us + evs[0].dur_us <= evs[1].start_us + evs[1].dur_us + 1);
+        assert!(evs[1].start_us <= evs[2].start_us);
+    }
+
+    #[test]
+    fn sink_cap_drops_beyond_capacity() {
+        let sink = TraceSink::new(2);
+        let t = Instant::now();
+        for i in 0..5 {
+            sink.record(i, "net", "net", t, t, 0);
+        }
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.dropped(), 3);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let sink = TraceSink::new(8);
+        let t0 = sink.epoch();
+        sink.record(7, "net", "net", t0, t0 + Duration::from_micros(250), 0);
+        let doc = Json::parse(&sink.to_chrome_json().to_string()).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        let ev = &evs[0];
+        assert_eq!(ev.get("name").unwrap().as_str(), Some("net"));
+        assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(ev.get("dur").unwrap().as_usize(), Some(250));
+        assert_eq!(ev.get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            ev.get("args").unwrap().get("trace_id").unwrap().as_usize(),
+            Some(7)
+        );
+    }
+}

@@ -438,6 +438,86 @@ fn bench_actsparse_sections_schema() {
     }
 }
 
+/// The `obs_overhead` section (written by `cargo bench --bench
+/// serve_load`): the observability layer's disabled-path cost per
+/// request, bounded against the measured request latency. The bound is
+/// a constant of the acceptance criteria (< 2% on the serve hot path),
+/// so it must always be concrete — and once the section is recorded,
+/// the measured overhead must actually sit under it.
+#[test]
+fn bench_serve_obs_overhead_schema() {
+    let doc = load("BENCH_serve.json");
+    let o = doc
+        .get("obs_overhead")
+        .expect("obs_overhead section (written by `cargo bench --bench serve_load`)");
+    let recorded = recorded_flag(o, "obs_overhead");
+    for key in ["disabled_path_ns_per_request", "request_us", "overhead_pct"] {
+        check_field(o, key, recorded, "obs_overhead");
+    }
+    let bound = o
+        .get("bound_pct")
+        .and_then(|v| v.as_f64())
+        .expect("obs_overhead.bound_pct must always be a concrete number");
+    assert_eq!(bound, 2.0, "the acceptance bound is 2% of the serve hot path");
+    if recorded {
+        let pct = o
+            .get("overhead_pct")
+            .and_then(|v| v.as_f64())
+            .expect("recorded obs_overhead has a numeric overhead_pct");
+        assert!(
+            pct < bound,
+            "recorded disabled-path overhead {pct}% breaches the {bound}% bound"
+        );
+    }
+}
+
+/// The `profile` section of BENCH_train.json (written by `cargo bench
+/// --bench train_pipeline`): per-junction, per-stage wall time plus the
+/// paper's modelled clock cost for one profiled epoch. The junction
+/// axis may be empty only while the section is a placeholder.
+#[test]
+fn bench_train_profile_schema() {
+    let doc = load("BENCH_train.json");
+    let p = doc
+        .get("profile")
+        .expect("profile section (written by `cargo bench --bench train_pipeline`)");
+    let recorded = recorded_flag(p, "profile");
+    assert!(
+        p.get("case").and_then(|v| v.as_str()).is_some(),
+        "profile.case must name the profiled bench case"
+    );
+    for key in ["total_wall_ms", "total_model_cycles"] {
+        check_field(p, key, recorded, "profile");
+    }
+    let junctions = p
+        .get("junctions")
+        .and_then(|v| v.as_arr())
+        .expect("profile.junctions array");
+    if recorded {
+        assert!(
+            !junctions.is_empty(),
+            "a recorded profile must cover at least one junction"
+        );
+    }
+    for (i, j) in junctions.iter().enumerate() {
+        let what = format!("profile junction {i}");
+        for key in ["junction", "cycles_per_op"] {
+            assert!(
+                j.get(key).and_then(|v| v.as_usize()).is_some(),
+                "{what}: '{key}' must be a non-negative integer"
+            );
+        }
+        for stage in ["ff", "bp", "up"] {
+            let s = j
+                .get(stage)
+                .unwrap_or_else(|| panic!("{what}: missing stage '{stage}'"));
+            for key in ["ops", "wall_ms", "model_cycles"] {
+                check_field(s, key, recorded, &format!("{what}.{stage}"));
+            }
+        }
+    }
+}
+
 #[test]
 fn bench_serve_quant_section_schema() {
     let doc = load("BENCH_serve.json");

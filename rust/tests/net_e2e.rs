@@ -110,6 +110,7 @@ fn micro_batcher_coalesces_pipelined_socket_traffic() {
             max_connections: 8,
             // wide window: the whole pipelined group lands inside it
             batch_window: Duration::from_millis(100),
+            ..Default::default()
         },
     );
     let mut net = NetClient::connect(server.local_addr()).unwrap();
@@ -184,6 +185,7 @@ fn server_shutdown_drains_in_flight_socket_requests() {
             max_connections: 8,
             // minutes-long window: only the shutdown drain can flush
             batch_window: Duration::from_secs(120),
+            ..Default::default()
         },
     );
     let addr = server.local_addr();
@@ -218,6 +220,7 @@ fn connection_cap_sheds_with_busy() {
         NetServerConfig {
             max_connections: 1,
             batch_window: Duration::ZERO,
+            ..Default::default()
         },
     );
     let features = svc.client("tiny").unwrap().features();
@@ -373,6 +376,7 @@ fn server_shutdown_drains_in_flight_across_contexts() {
         NetServerConfig {
             max_connections: 8,
             batch_window: Duration::from_secs(120),
+            ..Default::default()
         },
     );
     let addr = server.local_addr();
@@ -519,6 +523,7 @@ fn partial_frame_times_out_without_stalling_other_connections() {
         model: "tiny".into(),
         context: 0,
         features: vec![0.5; features],
+        trace: None,
     }
     .encode();
     let mut loris = std::net::TcpStream::connect(server.local_addr()).unwrap();
@@ -602,6 +607,7 @@ fn panicking_responder_does_not_take_down_the_server() {
         features: vec![0.2; features],
         context: 0,
         respond: Box::new(|_| panic!("injected responder failure")),
+        trace: None,
     });
     // wait for the panic to be absorbed and counted
     let deadline = std::time::Instant::now() + Duration::from_secs(10);
@@ -625,6 +631,108 @@ fn panicking_responder_does_not_take_down_the_server() {
         let p = net.classify("tiny", vec![0.4; features]).unwrap();
         assert!(p.class < 8);
     }
+    stop_pair(svc, server);
+}
+
+/// Trace propagation end to end: with `--trace-sample 1` every request
+/// is traced at the net front door, carried through the micro-batcher
+/// and the engine shard, and closed on the worker — the client gets the
+/// queue/batch/execute echo and the sink holds the full span tree
+/// (net -> batcher -> engine.wait -> engine.exec) under one trace ID.
+#[test]
+fn sampled_request_produces_span_tree_and_echo() {
+    let (svc, server) = start_pair(
+        49,
+        false,
+        NetServerConfig {
+            trace_sample: 1,
+            ..Default::default()
+        },
+    );
+    let features = svc.client("tiny").unwrap().features();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    let p = net.classify("tiny", vec![0.5; features]).unwrap();
+    let echo = p
+        .trace
+        .expect("every request is sampled at --trace-sample 1");
+    // the reactor records the enclosing net span when the response
+    // leaves, so it is in the sink before the client sees the reply
+    let events = server.trace_sink().events();
+    let ours: Vec<_> = events
+        .iter()
+        .filter(|e| e.trace_id == echo.trace_id)
+        .collect();
+    let mut names: Vec<&str> = ours.iter().map(|e| e.name).collect();
+    names.sort_unstable();
+    assert_eq!(
+        names,
+        vec!["batcher", "engine.exec", "engine.wait", "net"],
+        "one span per stage under trace {}",
+        echo.trace_id
+    );
+    let span = |n: &str| *ours.iter().find(|e| e.name == n).unwrap();
+    let (netspan, batcher) = (span("net"), span("batcher"));
+    let (wait, exec) = (span("engine.wait"), span("engine.exec"));
+    // the tree nests: net opens first and closes last; the inner spans
+    // run in pipeline order on their expected lanes
+    assert!(netspan.start_us <= batcher.start_us);
+    assert!(batcher.start_us <= wait.start_us && wait.start_us <= exec.start_us);
+    assert!(
+        exec.start_us + exec.dur_us <= netspan.start_us + netspan.dur_us,
+        "engine.exec must close before the net span does"
+    );
+    assert_eq!(netspan.tid, 0, "net span rides the reactor lane");
+    assert_eq!(exec.tid as usize, 1 + p.worker, "exec span rides the worker lane");
+    // the echo agrees with the recorded spans
+    assert_eq!(u64::from(echo.queue_us), batcher.dur_us);
+    assert_eq!(u64::from(echo.execute_us), exec.dur_us);
+    assert!(server.trace_sink().handles_created() >= 1);
+    // the export is loadable Chrome trace_event JSON
+    let doc = server.trace_sink().to_chrome_json();
+    let parsed = pds::util::json::Json::parse(&doc.to_string()).unwrap();
+    assert!(
+        parsed.get("traceEvents").unwrap().as_arr().unwrap().len() >= 4,
+        "chrome export must carry the span tree"
+    );
+    stop_pair(svc, server);
+}
+
+/// The unsampled path allocates nothing: with sampling off (the
+/// default), a batch of requests leaves the trace sink empty and the
+/// handle counter at zero — while a client-minted trace ID on the same
+/// server still wins and produces a full trace.
+#[test]
+fn unsampled_requests_allocate_no_trace_handles() {
+    let (svc, server) = start_pair(50, false, NetServerConfig::default());
+    let features = svc.client("tiny").unwrap().features();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    for i in 0..16 {
+        let p = net.classify("tiny", vec![0.1 * i as f32; features]).unwrap();
+        assert!(p.trace.is_none(), "unsampled requests must not echo a trace");
+    }
+    assert_eq!(
+        server.trace_sink().handles_created(),
+        0,
+        "unsampled requests must never allocate a trace handle"
+    );
+    assert!(server.trace_sink().is_empty());
+    // a client-supplied trace ID overrides the disabled sampler
+    let p = net
+        .classify_traced("tiny", 0, vec![0.5; features], 0xBEEF)
+        .unwrap();
+    let echo = p.trace.expect("client-minted trace must be honored");
+    assert_eq!(echo.trace_id, 0xBEEF);
+    assert_eq!(server.trace_sink().handles_created(), 1);
+    assert_eq!(
+        server
+            .trace_sink()
+            .events()
+            .iter()
+            .filter(|e| e.trace_id == 0xBEEF)
+            .count(),
+        4,
+        "client-minted trace must record the full span tree"
+    );
     stop_pair(svc, server);
 }
 

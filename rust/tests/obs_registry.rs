@@ -1,0 +1,175 @@
+//! Observability-layer integration tests: the metrics registry over a
+//! *real* `InferenceService` (one snapshot supersedes the ad-hoc metric
+//! structs), plus the monotonic-clock audit — no runtime path may use
+//! `SystemTime`, whose jumps (NTP steps, suspend/resume) would corrupt
+//! latency histograms, trace spans, and profile timings. `Instant` is
+//! the only clock allowed outside of explicitly wall-clock contexts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pds::coordinator::loadgen;
+use pds::coordinator::{InferenceService, ServerConfig};
+use pds::util::json::Json;
+use pds::util::rng::Rng;
+
+fn dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+/// Recursively collect every `.rs` file under `root`.
+fn rust_sources(root: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
+    for entry in std::fs::read_dir(root).expect("readable source dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Monotonic-clock regression: every timestamp on the serving, tracing,
+/// profiling, and benching paths must come from `Instant`. A
+/// `SystemTime` creeping in would go unnoticed until a clock step
+/// produced a negative or absurd latency in production, so the source
+/// tree itself is the test surface.
+#[test]
+fn runtime_paths_use_monotonic_clocks_only() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    rust_sources(&src, &mut files);
+    assert!(
+        files.len() > 20,
+        "source scan found suspiciously few files ({})",
+        files.len()
+    );
+    let mut offenders = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+        for (i, line) in text.lines().enumerate() {
+            if line.contains("SystemTime") {
+                offenders.push(format!("{}:{}: {}", path.display(), i + 1, line.trim()));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "SystemTime found on runtime paths (use Instant — wall clocks \
+         jump):\n{}",
+        offenders.join("\n")
+    );
+}
+
+/// The tentpole acceptance: one registry snapshot over a live service
+/// carries the engine counters, gauges, and the latency histogram —
+/// exactly what the CLI dump, the wire Metrics frame, and the load
+/// generators consume — and both expositions (JSON, Prometheus text)
+/// render it faithfully.
+#[test]
+fn registry_snapshot_covers_a_live_service() {
+    const REQUESTS: usize = 12;
+    let spec = loadgen::model_spec(dir(), "tiny", 0.25, 51).unwrap();
+    let svc = InferenceService::start(
+        dir(),
+        vec![spec],
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_depth: 64,
+            tune_kernel_threads: false,
+        },
+    )
+    .unwrap();
+    let client = svc.client("tiny").unwrap();
+    let mut rng = Rng::new(0x0B5);
+    for _ in 0..REQUESTS {
+        let x: Vec<f32> = (0..client.features()).map(|_| rng.normal()).collect();
+        client.classify(x).unwrap();
+    }
+    let labels: &[(&str, &str)] = &[("model", "tiny")];
+    let snap = svc.registry().snapshot();
+    assert_eq!(
+        snap.counter("serve.requests", labels),
+        Some(REQUESTS as u64),
+        "the registry counter must equal the requests served"
+    );
+    assert_eq!(snap.counter("serve.rejected", labels), Some(0));
+    let batches = snap
+        .counter("serve.batches", labels)
+        .expect("serve.batches counter");
+    assert!(batches >= 1 && batches <= REQUESTS as u64);
+    let hist = snap
+        .histogram("serve.latency", labels)
+        .expect("serve.latency histogram");
+    assert_eq!(hist.count, REQUESTS as u64);
+    assert!(hist.p50_us >= 1 && hist.p50_us <= hist.p99_us);
+    assert_eq!(hist.overflow, 0);
+    assert_eq!(snap.gauge("serve.workers", labels), Some(2.0));
+    assert!(snap.gauge("serve.occupancy_mean", labels).is_some());
+
+    // JSON exposition parses and carries the same counter
+    let parsed = Json::parse(&snap.to_json().to_string()).unwrap();
+    let samples = parsed.get("samples").unwrap().as_arr().unwrap();
+    assert!(
+        samples.iter().any(|s| {
+            s.get("name").and_then(|v| v.as_str()) == Some("serve.requests")
+                && s.get("value").and_then(|v| v.as_usize()) == Some(REQUESTS)
+        }),
+        "JSON exposition must carry serve.requests = {REQUESTS}"
+    );
+    // Prometheus text exposition renders labelled series
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("# TYPE serve_requests counter"));
+    assert!(prom.contains(&format!("serve_requests{{model=\"tiny\"}} {REQUESTS}")));
+    assert!(prom.contains("serve_latency_us_count{model=\"tiny\"}"));
+    // human report lists the same series
+    assert!(snap.report().contains("serve.requests{model=tiny}"));
+
+    // a second snapshot after more traffic moves monotonically
+    let x: Vec<f32> = (0..client.features()).map(|_| rng.normal()).collect();
+    client.classify(x).unwrap();
+    let snap2 = svc.registry().snapshot();
+    assert_eq!(
+        snap2.counter("serve.requests", labels),
+        Some(REQUESTS as u64 + 1)
+    );
+    drop(client);
+    svc.shutdown().unwrap();
+}
+
+/// Collectors hold `Weak` subsystem handles: registering them must not
+/// extend the service's lifetime — the `Arc::try_unwrap` teardown the
+/// TCP front-end relies on still succeeds after snapshots were taken.
+#[test]
+fn registry_collectors_do_not_block_service_teardown() {
+    let spec = loadgen::model_spec(dir(), "tiny", 0.25, 52).unwrap();
+    let svc = Arc::new(
+        InferenceService::start(
+            dir(),
+            vec![spec],
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_depth: 16,
+                tune_kernel_threads: false,
+            },
+        )
+        .unwrap(),
+    );
+    let registry = Arc::clone(svc.registry());
+    let _snap = registry.snapshot();
+    match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown().unwrap(),
+        Err(_) => panic!("registry collectors must not hold strong service refs"),
+    }
+    // after teardown the collectors' Weak upgrades fail: the snapshot
+    // simply loses those samples instead of erroring
+    let after = registry.snapshot();
+    assert_eq!(
+        after.counter("serve.requests", &[("model", "tiny")]),
+        None,
+        "dead subsystems must vanish from snapshots, not dangle"
+    );
+}

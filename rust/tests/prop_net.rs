@@ -9,6 +9,7 @@
 
 use pds::net::wire::{Frame, MetricsSnapshot, ModelInfo, WireError, HEADER_LEN, MAX_PAYLOAD, VERSION};
 use pds::net::ErrorCode;
+use pds::obs::TraceEcho;
 use pds::util::prop::for_all;
 use pds::util::rng::Rng;
 
@@ -47,6 +48,22 @@ fn arb_code(r: &mut Rng) -> ErrorCode {
     }
 }
 
+/// Optional trace ID for a v4 `Request` (absent half the time, like
+/// real traffic with sampling on).
+fn arb_req_trace(r: &mut Rng) -> Option<u64> {
+    (r.below(2) == 1).then(|| r.next_u64())
+}
+
+/// Optional per-stage timing echo for a v4 `Response`.
+fn arb_echo(r: &mut Rng) -> Option<TraceEcho> {
+    (r.below(2) == 1).then(|| TraceEcho {
+        trace_id: r.next_u64(),
+        queue_us: r.next_u64() as u32,
+        batch_us: r.next_u64() as u32,
+        execute_us: r.next_u64() as u32,
+    })
+}
+
 /// One random frame, covering every variant.
 fn arb_frame(r: &mut Rng) -> Frame {
     match r.below(8) {
@@ -55,6 +72,7 @@ fn arb_frame(r: &mut Rng) -> Frame {
             model: arb_string(r, 16),
             context: r.below(16) as u32,
             features: arb_features(r, 64),
+            trace: arb_req_trace(r),
         },
         1 => Frame::Response {
             id: r.next_u64(),
@@ -62,6 +80,7 @@ fn arb_frame(r: &mut Rng) -> Frame {
             latency_us: r.next_u64() >> 20,
             batch_occupancy: r.below(512) as u32,
             worker: r.below(64) as u32,
+            trace: arb_echo(r),
         },
         2 => Frame::Error {
             id: r.next_u64(),
@@ -251,6 +270,78 @@ fn decoder_rejects_unknown_versions_and_types() {
                     other => Err(format!("expected UnknownType({tag}), got {other:?}")),
                 }
             }
+        },
+    );
+}
+
+/// The v3 protocol (no trace fields) must be rejected by version, never
+/// mis-decoded: a v4 `Request`/`Response` body under a v3 header could
+/// silently misparse the trailing trace bytes if the decoder guessed.
+#[test]
+fn v3_stamped_frames_are_rejected_by_version_not_misdecoded() {
+    for_all(
+        "any frame re-stamped with version 3 decodes to UnknownVersion(3)",
+        prop_seed() ^ 6,
+        256,
+        arb_frame,
+        |frame| {
+            let mut bytes = frame.encode();
+            bytes[2] = 3; // the pre-trace protocol version
+            match Frame::decode(&bytes) {
+                Err(WireError::UnknownVersion(3)) => Ok(()),
+                other => Err(format!("expected UnknownVersion(3), got {other:?}")),
+            }
+        },
+    );
+}
+
+/// The v4 trace fields specifically: a traced `Request` and its traced
+/// `Response` round-trip bit for bit, including every `TraceEcho`
+/// duration at the u32 extremes.
+#[test]
+fn v4_trace_fields_roundtrip_exactly() {
+    for_all(
+        "traced Request/Response pairs round-trip, consuming every byte",
+        prop_seed() ^ 7,
+        256,
+        |r| {
+            let edge = |r: &mut Rng| match r.below(4) {
+                0 => 0u32,
+                1 => u32::MAX,
+                _ => r.next_u64() as u32,
+            };
+            let req = Frame::Request {
+                id: r.next_u64(),
+                model: arb_string(r, 16),
+                context: r.below(16) as u32,
+                features: arb_features(r, 32),
+                trace: Some(r.next_u64()),
+            };
+            let resp = Frame::Response {
+                id: r.next_u64(),
+                class: r.below(64) as u32,
+                latency_us: r.next_u64() >> 20,
+                batch_occupancy: r.below(512) as u32,
+                worker: r.below(64) as u32,
+                trace: Some(TraceEcho {
+                    trace_id: r.next_u64(),
+                    queue_us: edge(r),
+                    batch_us: edge(r),
+                    execute_us: edge(r),
+                }),
+            };
+            vec![req, resp]
+        },
+        |frames| {
+            for f in frames {
+                let bytes = f.encode();
+                match Frame::decode(&bytes) {
+                    Ok((back, used)) if &back == f && used == bytes.len() => {}
+                    Ok((back, _)) => return Err(format!("decoded {back:?} != original")),
+                    Err(e) => return Err(format!("decode failed: {e}")),
+                }
+            }
+            Ok(())
         },
     );
 }
